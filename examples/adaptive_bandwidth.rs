@@ -1,0 +1,117 @@
+//! Adaptive re-decoupling under a varying uplink (live Fig. 8 demo).
+//!
+//! Drives the real TCP deployment with a bandwidth trace: a background
+//! thread retunes the token-bucket rate following the trace while the
+//! edge serves requests; the adaptation controller's EWMA estimate
+//! drifts and re-solves the ILP, and the log shows the decoupling point
+//! migrating with the link — §III-E's "adaptively use different
+//! decoupling schemes" in action.
+//!
+//! Run: `cargo run --release --example adaptive_bandwidth --
+//!       [--model vgg16] [--trace step] [--requests 48]`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use jalad::coordinator::{AdaptationController, DecisionEngine, Scale};
+use jalad::network::throttle::RateHandle;
+use jalad::network::BandwidthTrace;
+use jalad::predictor::Tables;
+use jalad::profiler::LatencyTables;
+use jalad::runtime::{Executor, Manifest, SharedExecutor};
+use jalad::server::{CloudServer, EdgeClient};
+use jalad::util::cli::Args;
+
+fn main() -> Result<()> {
+    jalad::util::logging::init();
+    let args = Args::new("adaptive_bandwidth", "trace-driven adaptive re-decoupling demo")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("model", "tinyconv", "model to serve")
+        .opt("trace", "step", "bandwidth trace: step | sine | walk")
+        .opt("requests", "48", "total requests")
+        .opt("delta-alpha", "0.10", "accuracy-loss bound Δα")
+        .parse_env();
+
+    let dir = args.get("artifacts").to_string();
+    let model = args.get("model").to_string();
+    let n = args.get_usize("requests");
+
+    let trace = match args.get("trace") {
+        "sine" => BandwidthTrace::sine(30_000.0, 1_000_000.0, 8.0, 60.0, 0.25),
+        "walk" => BandwidthTrace::random_walk(42, 20_000.0, 2_000_000.0, 60.0, 0.5),
+        _ => BandwidthTrace::step(40_000.0, 1_500_000.0, 6.0, 60.0),
+    };
+
+    let cloud_exe = Arc::new(SharedExecutor::new(Manifest::load(&dir)?)?);
+    let server = Arc::new(CloudServer::new(cloud_exe));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0")?;
+
+    let edge_exe = Executor::new(Manifest::load(&dir)?)?;
+    let tables = Tables::load_or_build(&edge_exe, &model, &dir)?;
+    let latency = LatencyTables::measured(&edge_exe, &model, 3, 4.0)?;
+    let engine = DecisionEngine::new(
+        &model,
+        tables,
+        latency,
+        Scale::Measured,
+        args.get_f64("delta-alpha"),
+    )?;
+
+    let initial_bw = trace.at(0.0);
+    let rate = RateHandle::new(initial_bw as u64);
+
+    // Trace driver: retune the live socket's token bucket.
+    {
+        let rate = rate.clone();
+        let trace = trace.clone();
+        std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            loop {
+                let t = t0.elapsed().as_secs_f64();
+                if t > trace.duration() + 5.0 {
+                    return;
+                }
+                rate.set(trace.at(t) as u64);
+                std::thread::sleep(std::time::Duration::from_millis(100));
+            }
+        });
+    }
+
+    let controller = AdaptationController::new(engine, initial_bw);
+    let mut edge = EdgeClient::connect(&edge_exe, &model, addr, rate.clone(), controller)?;
+
+    println!(
+        "serving {n} requests for {model} under a '{}' trace ({:.0}..{:.0} B/s)\n",
+        args.get("trace"),
+        trace.points().iter().map(|p| p.1).fold(f64::INFINITY, f64::min),
+        trace.points().iter().map(|p| p.1).fold(0.0, f64::max),
+    );
+    println!("{:>4} {:>10} {:>12} {:>22} {:>10} {:>8}", "req", "rate B/s", "est B/s", "decision", "ms", "replan");
+    let t0 = std::time::Instant::now();
+    for id in 0..n {
+        let s = jalad::data::gen::sample_image(12_000 + id, 32);
+        let r = edge.infer(&s)?;
+        // Pace requests so the trace actually progresses, and actively
+        // probe every few requests: logits-sized frames carry no
+        // bandwidth signal (see server::edge::MIN_ESTIMATE_BYTES).
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        let probed = if id % 3 == 2 { edge.probe_bandwidth(24 * 1024)? } else { false };
+        println!(
+            "{id:>4} {:>10} {:>12.0} {:>22} {:>10.1} {:>8}",
+            rate.get(),
+            edge.controller.bandwidth_estimate().unwrap_or(0.0),
+            format!("{:?}", r.decision),
+            r.breakdown.total() * 1e3,
+            if r.replanned || probed { "YES" } else { "" }
+        );
+    }
+    println!(
+        "\n{} re-decouplings over {} requests in {:.1} s",
+        edge.controller.resolves(),
+        n,
+        t0.elapsed().as_secs_f64()
+    );
+    CloudServer::request_shutdown(addr);
+    Ok(())
+}

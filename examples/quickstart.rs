@@ -1,0 +1,96 @@
+//! Quickstart: the whole JALAD loop on TinyConv in under a minute.
+//!
+//! TinyConv's conv stages are the Pallas im2col-matmul kernel and the
+//! quantizer is the Pallas quantize artifact, so this example exercises
+//! the complete L1 → L2 → AOT → L3 chain on the request path:
+//!
+//! 1. load the AOT artifacts;
+//! 2. calibrate (or load) the A_i(c)/S_i(c) predictor tables;
+//! 3. profile per-stage latency on this host;
+//! 4. solve the §III-E ILP at a few bandwidths and show how the
+//!    decoupling point moves;
+//! 5. run live requests through the decoupled pipeline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use jalad::coordinator::{DecisionEngine, LocalPipeline, Scale};
+use jalad::network::SimChannel;
+use jalad::predictor::Tables;
+use jalad::profiler::LatencyTables;
+use jalad::runtime::{Executor, Manifest};
+
+fn main() -> Result<()> {
+    jalad::util::logging::init();
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let model = "tinyconv";
+
+    println!("== 1. loading artifacts from {dir}/ ==");
+    let manifest = Manifest::load(&dir)?;
+    let exe = Executor::new(manifest)?;
+    let m = exe.manifest().model(model)?;
+    println!("   {} stages, input {:?}", m.num_stages(), m.input_shape);
+
+    println!("== 2. predictor tables (A_i(c), S_i(c)) ==");
+    let tables = Tables::load_or_build(&exe, model, &dir)?;
+    println!(
+        "   base accuracy {:.3} on {} calibration samples",
+        tables.base_accuracy, tables.samples
+    );
+    for i in 1..=tables.num_stages() {
+        let row: Vec<String> = tables
+            .c_grid
+            .iter()
+            .map(|&c| {
+                format!(
+                    "c{}:{:>5.0}B/{:.2}",
+                    c,
+                    tables.wire_bytes(i, c).unwrap(),
+                    tables.acc_drop(i, c).unwrap()
+                )
+            })
+            .collect();
+        println!("   stage {i}: {}", row.join("  "));
+    }
+
+    println!("== 3. per-stage latency profile ==");
+    let latency = LatencyTables::measured(&exe, model, 3, 4.0)?;
+    for (i, (te, tc)) in latency.t_edge.iter().zip(&latency.t_cloud).enumerate() {
+        println!("   cut@{}  T_E={:.2} ms  T_C={:.2} ms", i + 1, te * 1e3, tc * 1e3);
+    }
+
+    println!("== 4. ILP decisions across bandwidths (Δα = 0.10) ==");
+    let engine = DecisionEngine::new(model, tables, latency, Scale::Measured, 0.10)?;
+    for bw in [10_000.0, 50_000.0, 200_000.0, 1_000_000.0, 10_000_000.0] {
+        let plan = engine.decide(bw);
+        println!(
+            "   BW {:>9.0} B/s → {:?}  predicted {:.2} ms, {:.0} B on wire",
+            bw,
+            plan.decision,
+            plan.latency * 1e3,
+            plan.tx_bytes
+        );
+    }
+
+    println!("== 5. live requests over a simulated 100 KB/s uplink ==");
+    let pipe = LocalPipeline::new(&exe, model);
+    let mut channel = SimChannel::constant(100_000.0);
+    let plan = engine.decide(100_000.0);
+    let mut correct = 0;
+    let n = 12;
+    for id in 0..n {
+        let s = jalad::data::gen::sample_image(9500 + id, 32);
+        let r = pipe.run(&s, plan.decision, &mut channel)?;
+        correct += r.correct as usize;
+        println!(
+            "   req {id:2}  pred={} label={}  {}",
+            r.prediction,
+            s.label,
+            r.breakdown.summary()
+        );
+    }
+    println!("   accuracy {correct}/{n}");
+    println!("done — see examples/serve_edge_cloud.rs for the real TCP deployment.");
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! Regenerate the paper's tables (II and III) plus the §III-E ILP
+//! solve-time claim, in the paper's own simulation methodology
+//! (`T = w·Q/F`, §IV-A) with *measured* compression ratios projected to
+//! full scale. Also prints the Neurosurgeon-style no-compression
+//! reference that motivates the paper (§V).
+//!
+//! Shape targets (not absolute numbers — our accuracy tables come from
+//! the synthetic task): JALAD wins at 300 KB/s by large factors, wins
+//! less at 1 MB/s, Origin2Cloud speedups ≈ PNG2Cloud × (PNG ratio),
+//! ResNets gain more than VGGs, Tegra X2 gains exceed Tegra K1's.
+//!
+//! Run: `cargo run --release --example reproduce_tables`
+//! (first run calibrates all four models; tables are cached)
+
+use anyhow::Result;
+
+use jalad::coordinator::{DecisionEngine, Scale};
+use jalad::models::fullscale_stages;
+use jalad::predictor::Tables;
+use jalad::profiler::{DeviceModel, LatencyTables};
+use jalad::runtime::{Executor, Manifest};
+use jalad::util::bench::print_table;
+
+const MODELS: [&str; 4] = ["vgg16", "vgg19", "resnet50", "resnet101"];
+const DELTA_ALPHA: f64 = 0.10; // paper: "accuracy loss threshold Δα is set to 10%"
+
+fn engines(
+    exe: &Executor,
+    dir: &str,
+    edge: DeviceModel,
+    cloud: DeviceModel,
+) -> Result<Vec<DecisionEngine>> {
+    MODELS
+        .iter()
+        .map(|m| {
+            let tables = Tables::load_or_build(exe, m, dir)?;
+            let latency = LatencyTables::analytic(m, edge, cloud).unwrap();
+            DecisionEngine::new(m, tables, latency, Scale::Paper, DELTA_ALPHA)
+        })
+        .collect()
+}
+
+fn speedup_row(e: &DecisionEngine, bw: f64) -> (String, String, f64) {
+    let plan = e.decide(bw);
+    let jalad = plan.latency;
+    let png = e.cloud_only_latency(e.image_png_bytes(), bw);
+    let origin = e.cloud_only_latency(e.image_raw_bytes(), bw);
+    (
+        format!("{:.1}x/{:.1}x", png / jalad, origin / jalad),
+        format!("{:?}", plan.decision),
+        jalad,
+    )
+}
+
+fn main() -> Result<()> {
+    jalad::util::logging::init();
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let exe = Executor::new(Manifest::load(&dir)?)?;
+
+    // ---------------- Table II: speedup vs bandwidth ----------------
+    // Paper testbed: 1080ti cloud, K620 edge.
+    let engines_t2 =
+        engines(&exe, &dir, DeviceModel::QUADRO_K620, DeviceModel::GTX_1080TI)?;
+    let mut rows = Vec::new();
+    for (m, e) in MODELS.iter().zip(&engines_t2) {
+        let (s1m, d1m, _) = speedup_row(e, 1_000_000.0);
+        let (s300k, d300k, _) = speedup_row(e, 300_000.0);
+        rows.push(vec![m.to_string(), s1m, d1m, s300k, d300k]);
+    }
+    print_table(
+        "Table II — execution speedup (PNG2Cloud/Origin2Cloud), Δα=10%",
+        &["model", "1MBps", "decision@1M", "300KBps", "decision@300K"],
+        &rows,
+    );
+    println!(
+        "paper:  VGG16 1.4x/2.2x | 3.6x/6.0x   VGG19 1.1x/1.7x | 3.0x/4.9x\n\
+         paper:  Res50 2.3x/3.7x | 7.2x/11.7x  Res101 1.5x/2.3x | 4.3x/6.9x"
+    );
+
+    // ---------------- Table III: edge compute power ----------------
+    let mut rows = Vec::new();
+    for edge in [DeviceModel::TEGRA_K1, DeviceModel::TEGRA_X2] {
+        let engs = engines(&exe, &dir, edge, DeviceModel::CLOUD_12T)?;
+        for (m, e) in MODELS.iter().zip(&engs) {
+            let (s, d, lat) = speedup_row(e, 1_000_000.0);
+            rows.push(vec![
+                edge.name.to_string(),
+                m.to_string(),
+                s,
+                d,
+                format!("{:.1} ms", lat * 1e3),
+            ]);
+        }
+    }
+    print_table(
+        "Table III — speedup by edge device (PNG2Cloud/Origin2Cloud), 1 MBps",
+        &["edge", "model", "speedup", "decision", "jalad latency"],
+        &rows,
+    );
+    println!(
+        "paper:  K1: VGG16 1.0x/1.5x VGG19 1.0x/1.5x Res50 2.2x/3.7x Res101 1.4x/2.3x\n\
+         paper:  X2: VGG16 3.4x/5.5x VGG19 2.9x/4.7x Res50 15.1x/25.1x Res101 9.0x/14.9x"
+    );
+
+    // ---------------- Neurosurgeon reference (§V) ----------------
+    let mut rows = Vec::new();
+    for (m, e) in MODELS.iter().zip(&engines_t2) {
+        let fm = fullscale_stages(m).unwrap();
+        let bw = 1_000_000.0;
+        // Best no-compression cut: min over i of T_E + raw/bw + T_C.
+        let (best_i, best) = (1..=fm.stages.len())
+            .map(|i| {
+                let t = e.latency.t_edge[i - 1]
+                    + fm.stages[i - 1].out_elems as f64 * 4.0 / bw
+                    + e.latency.t_cloud[i - 1];
+                (i, t)
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let jalad = e.decide(bw).latency;
+        rows.push(vec![
+            m.to_string(),
+            format!("cut@{best_i}/{}", fm.stages.len()),
+            format!("{:.1} ms", best * 1e3),
+            format!("{:.1} ms", jalad * 1e3),
+            format!("{:.1}x", best / jalad),
+        ]);
+    }
+    print_table(
+        "§V reference — Neurosurgeon-style partition without in-layer compression, 1 MBps",
+        &["model", "best raw cut", "raw-cut latency", "jalad", "jalad gain"],
+        &rows,
+    );
+
+    // ---------------- §III-E ILP solve time ----------------
+    let e = &engines_t2[3]; // resnet101: largest instance (35×6 vars)
+    let inst = e.instance(300_000.0);
+    let t0 = std::time::Instant::now();
+    let reps = 200;
+    for _ in 0..reps {
+        std::hint::black_box(inst.solve());
+    }
+    let per = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "\nILP solve (resnet101, {} vars): {:.3} ms/solve — paper reports 1.77 ms on an i7-6800K",
+        1 + inst.n * inst.c_max as usize,
+        per * 1e3
+    );
+    Ok(())
+}

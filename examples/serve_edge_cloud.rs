@@ -1,0 +1,159 @@
+//! End-to-end serving driver (the repo's headline validation run).
+//!
+//! Spawns a real cloud server (TCP, its own PJRT client), connects a
+//! real edge client through a token-bucket-throttled uplink, serves a
+//! batch of requests for each of the paper's four models + TinyConv,
+//! and reports per-model latency percentiles, throughput, accuracy and
+//! the decoupling decisions taken — against the PNG2Cloud baseline over
+//! the same socket. Results are recorded in EXPERIMENTS.md §E11.
+//!
+//! Run: `cargo run --release --example serve_edge_cloud -- [--bw 125000]
+//!       [--requests 32] [--models tinyconv,vgg16] [--delta-alpha 0.1]`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use jalad::coordinator::{AdaptationController, DecisionEngine, Scale};
+use jalad::ilp::Decision;
+use jalad::metrics::Histogram;
+use jalad::network::throttle::RateHandle;
+use jalad::predictor::Tables;
+use jalad::profiler::LatencyTables;
+use jalad::runtime::{Executor, Manifest, SharedExecutor};
+use jalad::server::{CloudServer, EdgeClient};
+use jalad::util::bench::print_table;
+use jalad::util::cli::Args;
+
+fn main() -> Result<()> {
+    jalad::util::logging::init();
+    let args = Args::new("serve_edge_cloud", "end-to-end TCP edge/cloud serving driver")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("bw", "125000", "throttled uplink, bytes/second (125000 = 1 Mbps)")
+        .opt("requests", "32", "requests per model")
+        .opt("models", "tinyconv,vgg16,resnet50", "comma-separated models")
+        .opt("delta-alpha", "0.10", "accuracy-loss bound Δα")
+        .parse_env();
+
+    let dir = args.get("artifacts").to_string();
+    let bw = args.get_f64("bw");
+    let n = args.get_usize("requests");
+    let da = args.get_f64("delta-alpha");
+
+    // Cloud process (thread): own PJRT client behind the TCP server.
+    let cloud_exe = Arc::new(SharedExecutor::new(Manifest::load(&dir)?)?);
+    let server = Arc::new(CloudServer::new(Arc::clone(&cloud_exe)));
+    let (addr, _handle) = Arc::clone(&server).spawn("127.0.0.1:0")?;
+    println!("cloud server on {addr}; uplink throttled to {bw:.0} B/s\n");
+
+    // Edge process (this thread): its own PJRT client.
+    let edge_exe = Executor::new(Manifest::load(&dir)?)?;
+
+    let mut rows = Vec::new();
+    for model in args.get("models").split(',').map(str::trim) {
+        let tables = Tables::load_or_build(&edge_exe, model, &dir)?;
+        let latency = LatencyTables::measured(&edge_exe, model, 3, 4.0)?;
+        let engine = DecisionEngine::new(model, tables, latency, Scale::Measured, da)?;
+
+        // --- JALAD over the socket ---
+        let controller = AdaptationController::new(engine, bw);
+        let rate = RateHandle::new(bw as u64);
+        let mut edge =
+            EdgeClient::connect(&edge_exe, model, addr, rate.clone(), controller)?;
+        // Warm both PJRT compile caches (first-touch compilation would
+        // otherwise dominate the percentiles of a short run).
+        for id in 0..2 {
+            let s = jalad::data::gen::sample_image(10_900 + id, 32);
+            let _ = edge.infer(&s)?;
+        }
+        let mut hist = Histogram::new();
+        let mut correct = 0usize;
+        let mut tx_total = 0usize;
+        let mut decision = Decision::CloudOnly;
+        let t0 = std::time::Instant::now();
+        for id in 0..n {
+            let s = jalad::data::gen::sample_image(11_000 + id, 32);
+            let r = edge.infer(&s)?;
+            hist.record(r.breakdown.total());
+            correct += r.correct as usize;
+            tx_total += r.breakdown.tx_bytes;
+            decision = r.decision;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        // --- PNG2Cloud baseline over the same socket ---
+        let engine2 = DecisionEngine::new(
+            model,
+            Tables::load_or_build(&edge_exe, model, &dir)?,
+            LatencyTables::measured(&edge_exe, model, 3, 4.0)?,
+            Scale::Measured,
+            da,
+        )?;
+        let mut ctrl2 = AdaptationController::new(engine2, bw);
+        ctrl2.resolve_at(f64::MAX); // force CloudOnly = PNG2Cloud
+        let mut edge2 = EdgeClient::connect(&edge_exe, model, addr, rate, ctrl2)?;
+        for id in 0..2 {
+            let s = jalad::data::gen::sample_image(10_900 + id, 32);
+            let _ = edge2.infer(&s)?;
+        }
+        let mut hist2 = Histogram::new();
+        for id in 0..n {
+            let s = jalad::data::gen::sample_image(11_000 + id, 32);
+            let r = edge2.infer(&s)?;
+            hist2.record(r.breakdown.total());
+        }
+
+        println!("[{model}] JALAD    {}", hist.summary(1e3, " ms"));
+        println!("[{model}] PNG2Cloud {}", hist2.summary(1e3, " ms"));
+        rows.push(vec![
+            model.to_string(),
+            format!("{:?}", decision),
+            format!("{:.1}", hist.mean() * 1e3),
+            format!("{:.1}", hist2.mean() * 1e3),
+            format!("{:.2}x", hist2.mean() / hist.mean()),
+            format!("{:.3}", correct as f64 / n as f64),
+            format!("{:.0}", tx_total as f64 / n as f64),
+            format!("{:.2}", n as f64 / wall),
+        ]);
+    }
+
+    print_table(
+        &format!("end-to-end serving @ {:.0} B/s, Δα = {da}", bw),
+        &[
+            "model",
+            "decision",
+            "jalad ms",
+            "png2cloud ms",
+            "speedup",
+            "accuracy",
+            "avg tx B",
+            "req/s",
+        ],
+        &rows,
+    );
+
+    let stats_json = {
+        let mut ctrl = AdaptationController::new(
+            DecisionEngine::new(
+                "tinyconv",
+                Tables::load_or_build(&edge_exe, "tinyconv", &dir)?,
+                LatencyTables::measured(&edge_exe, "tinyconv", 2, 4.0)?,
+                Scale::Measured,
+                da,
+            )?,
+            bw,
+        );
+        ctrl.resolve_at(bw);
+        let mut e = EdgeClient::connect(
+            &edge_exe,
+            "tinyconv",
+            addr,
+            RateHandle::new(u64::MAX >> 1),
+            ctrl,
+        )?;
+        e.stats()?
+    };
+    println!("\ncloud stats: {stats_json}");
+    CloudServer::request_shutdown(addr);
+    Ok(())
+}

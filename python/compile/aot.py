@@ -1,0 +1,201 @@
+"""AOT exporter: lower every stage / full model / Pallas codec kernel to
+HLO **text** and write ``artifacts/manifest.json`` for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``); python never runs on the
+request path. Usage:
+
+    cd python && python -m compile.aot --out ../artifacts [--models vgg16,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .models import MODEL_NAMES, NUM_CLASSES, build_model
+from .train import ensure_params
+
+C_MAX = 8  # quantization bit-widths supported at runtime: c ∈ [1, C_MAX]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default elides big literals as
+    # `constant({...})`, which the rust-side text parser cannot ingest —
+    # the baked-in trained weights must round-trip through the text.
+    return comp.as_hlo_text(True)
+
+
+def export(fn, example_args, path: str) -> int:
+    """Lower ``fn`` at the example args and write HLO text; returns bytes."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def shape_key(shape) -> str:
+    return "x".join(str(d) for d in shape)
+
+
+def export_model(name: str, out_dir: str, verbose: bool = True):
+    """Export one model's stage/full artifacts; returns its manifest entry.
+
+    Parameters are the build-time-trained ones (compile/train.py), cached
+    under ``<out>/params/``; HLO export closes over them as constants.
+    """
+    params = ensure_params(name, os.path.join(out_dir, "params"), verbose=verbose)
+    mdef = build_model(name, params=params)
+    t0 = time.time()
+    stages_manifest = []
+    for k, stage in enumerate(mdef.stages):
+        fname = f"{name}_stage_{k:02d}.hlo.txt"
+        nbytes = export(M.stage_fn(stage), [spec(stage.in_shape)], os.path.join(out_dir, fname))
+        out_elems = 1
+        for d in stage.out_shape:
+            out_elems *= d
+        stages_manifest.append(
+            {
+                "index": k,
+                "name": stage.name,
+                "artifact": fname,
+                "in_shape": list(stage.in_shape),
+                "out_shape": list(stage.out_shape),
+                "out_elems": out_elems,
+                "fmacs_scaled": int(stage.fmacs),
+                "hlo_bytes": nbytes,
+            }
+        )
+        if verbose:
+            print(f"  [{name}] stage {k:2d} {stage.name:<14} -> {fname} ({nbytes/1024:.0f} KiB)")
+
+    full_name = f"{name}_full.hlo.txt"
+    export(M.full_fn(mdef), [spec(mdef.input_shape)], os.path.join(out_dir, full_name))
+    if verbose:
+        print(f"  [{name}] full forward -> {full_name}  ({time.time()-t0:.1f}s total)")
+
+    return {
+        "name": name,
+        "input_shape": list(mdef.input_shape),
+        "num_classes": mdef.num_classes,
+        "full_artifact": full_name,
+        "stages": stages_manifest,
+    }
+
+
+def export_codecs(model_entries, out_dir: str, verbose: bool = True):
+    """Export shared quant/dequant kernels for every stage tensor geometry.
+
+    quant is keyed by flat length (the kernel sees a 1-D vector); dequant
+    is keyed by the full output shape (it reshapes for the next stage).
+    """
+    quant_lens = {}
+    dequant_shapes = {}
+    for entry in model_entries:
+        for st in entry["stages"]:
+            # The last stage's output (logits) may also be transmitted when
+            # the cut is i = N (edge-only), so include every stage.
+            quant_lens[st["out_elems"]] = True
+            dequant_shapes[tuple(st["out_shape"])] = True
+
+    quant_manifest = []
+    for n in sorted(quant_lens):
+        fname = f"quant_{n}.hlo.txt"
+        export(M.quant_fn(n), [spec((n,)), spec(())], os.path.join(out_dir, fname))
+        quant_manifest.append({"elems": n, "artifact": fname})
+        if verbose:
+            print(f"  [codec] quant n={n} -> {fname}")
+
+    dequant_manifest = []
+    for shape in sorted(dequant_shapes, key=lambda s: (len(s), s)):
+        n = 1
+        for d in shape:
+            n *= d
+        fname = f"dequant_{shape_key(shape)}.hlo.txt"
+        export(
+            M.dequant_fn(shape),
+            [spec((n,)), spec(()), spec(()), spec(())],
+            os.path.join(out_dir, fname),
+        )
+        dequant_manifest.append({"shape": list(shape), "elems": n, "artifact": fname})
+        if verbose:
+            print(f"  [codec] dequant shape={shape} -> {fname}")
+
+    return {"quant": quant_manifest, "dequant": dequant_manifest}
+
+
+def source_digest() -> str:
+    """Hash of the compile-path sources, recorded in the manifest so
+    ``make artifacts`` can skip re-export when nothing changed."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--models",
+        default=",".join(MODEL_NAMES),
+        help="comma-separated subset of models to export",
+    )
+    args = ap.parse_args(argv)
+
+    names = [n.strip() for n in args.models.split(",") if n.strip()]
+    unknown = [n for n in names if n not in MODEL_NAMES]
+    if unknown:
+        print(f"unknown models: {unknown}; known: {MODEL_NAMES}", file=sys.stderr)
+        return 2
+
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+    entries = [export_model(n, args.out) for n in names]
+    codecs = export_codecs(entries, args.out)
+
+    manifest = {
+        "version": 1,
+        "c_max": C_MAX,
+        "num_classes": NUM_CLASSES,
+        "source_digest": source_digest(),
+        "models": entries,
+        "codecs": codecs,
+    }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}; total export time {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

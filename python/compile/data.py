@@ -1,0 +1,145 @@
+"""Synthetic ILSVRC substitute (DESIGN.md substitution table).
+
+We cannot ship ImageNet, so both sides generate the same procedural
+dataset: ``K`` classes, each defined by a smooth random *prototype* field
+(an 8×8×3 Gaussian grid bilinearly upsampled to 32×32), and samples are
+``prototype + σ·noise``. The noise level σ puts samples near class
+boundaries so feature quantization produces the paper's accuracy/bit
+trade-off instead of a flat curve.
+
+The generator is a from-scratch xorshift64* + Box-Muller pipeline (NOT
+jax.random) so `rust/src/data/` implements the identical algorithm: the
+rust runtime must mint calibration and test sets without python. The two
+implementations agree to float rounding; tables built on either side are
+exchangeable (distributional parity is what matters — both sides feed the
+same exported network).
+
+Pixel convention: images are f32 in model space; the "8-bit RGB upload"
+that Origin2Cloud ships is the same image mapped to [0,255] u8 (see
+``to_rgb8``), matching the paper's raw-image baseline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 16
+HW = 32
+PROTO_RES = 8
+# σ chosen so the trained nets sit at ~90% accuracy with samples near the
+# class boundaries: that is where feature quantization produces the
+# paper's accuracy/bit trade-off (large loss at c=1, mild at c=2, none by
+# c≥4 — Fig. 4's shape). σ=0.6 gives 100% accuracy and a flat curve.
+SIGMA = 1.2
+# Noise is drawn on a NOISE_RES grid and bilinearly upsampled, like the
+# prototypes: white per-pixel noise would make the 8-bit images
+# incompressible, erasing the paper's PNG2Cloud-vs-Origin2Cloud gap.
+# Smooth noise keeps the images "natural-statistics-like" (PNG-style
+# filters + DEFLATE reach ≈1.5×; the paper's photos reach ≈2.4× — shape
+# preserved, documented in DESIGN.md).
+NOISE_RES = 8
+# Seed layout (shared with rust/src/data/gen.rs):
+PROTO_SEED = 0x9E3779B97F4A7C15
+SAMPLE_SEED = 0xD1B54A32D192ED03
+
+
+class XorShift64Star:
+    """xorshift64* PRNG — 8 lines, identical in rust (`data::rng`)."""
+
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.s = (seed or 0x2545F4914F6CDD1D) & self.MASK
+
+    def next_u64(self) -> int:
+        s = self.s
+        s ^= (s >> 12)
+        s ^= (s << 25) & self.MASK
+        s ^= (s >> 27)
+        self.s = s
+        return (s * 0x2545F4914F6CDD1D) & self.MASK
+
+    def next_f64(self) -> float:
+        """Uniform in (0, 1]: top 53 bits / 2^53, never exactly 0."""
+        return ((self.next_u64() >> 11) + 1) / float(1 << 53)
+
+    def next_gaussian_pair(self) -> tuple[float, float]:
+        """Box-Muller; returns two standard normals."""
+        u1 = self.next_f64()
+        u2 = self.next_f64()
+        r = np.sqrt(-2.0 * np.log(u1))
+        th = 2.0 * np.pi * u2
+        return r * np.cos(th), r * np.sin(th)
+
+    def fill_gaussian(self, n: int) -> np.ndarray:
+        out = np.empty(n, dtype=np.float64)
+        for i in range(0, n - 1, 2):
+            out[i], out[i + 1] = self.next_gaussian_pair()
+        if n % 2:
+            out[n - 1] = self.next_gaussian_pair()[0]
+        return out.astype(np.float32)
+
+
+def _bilinear_upsample(grid: np.ndarray, hw: int) -> np.ndarray:
+    """(r, r, c) → (hw, hw, c), align_corners=False convention."""
+    r = grid.shape[0]
+    scale = r / hw
+    coords = (np.arange(hw, dtype=np.float64) + 0.5) * scale - 0.5
+    lo = np.floor(coords).astype(np.int64)
+    frac = (coords - lo).astype(np.float32)
+    lo0 = np.clip(lo, 0, r - 1)
+    lo1 = np.clip(lo + 1, 0, r - 1)
+    g = grid.astype(np.float32)
+    rows = g[lo0] * (1.0 - frac)[:, None, None] + g[lo1] * frac[:, None, None]
+    out = (
+        rows[:, lo0] * (1.0 - frac)[None, :, None]
+        + rows[:, lo1] * frac[None, :, None]
+    )
+    return out
+
+
+def prototype(class_id: int, hw: int = HW) -> np.ndarray:
+    """Class prototype: smooth random field, unit-ish variance."""
+    rng = XorShift64Star(PROTO_SEED ^ (class_id * 0xA0761D6478BD642F))
+    grid = rng.fill_gaussian(PROTO_RES * PROTO_RES * 3).reshape(PROTO_RES, PROTO_RES, 3)
+    return _bilinear_upsample(grid, hw)
+
+
+def sample(class_id: int, sample_id: int, sigma: float = SIGMA, hw: int = HW):
+    """One labelled sample: (image f32 (hw, hw, 3), label).
+
+    noise = unit-std smooth field (NOISE_RES grid, upsampled, normalized
+    by its own std — deterministic and mirrored bit-for-bit in rust).
+    """
+    rng = XorShift64Star(
+        SAMPLE_SEED ^ (class_id * 0xE7037ED1A0B428DB) ^ (sample_id * 0x8EBC6AF09C88C6E3)
+    )
+    grid = rng.fill_gaussian(NOISE_RES * NOISE_RES * 3).reshape(NOISE_RES, NOISE_RES, 3)
+    noise = _bilinear_upsample(grid, hw)
+    std = float(np.sqrt(np.mean(noise.astype(np.float64) ** 2)))
+    noise = noise / max(std, 1e-6)
+    return prototype(class_id, hw) + sigma * noise, class_id
+
+
+def batch(sample_ids, sigma: float = SIGMA, hw: int = HW, classes: int = NUM_CLASSES):
+    """Deterministic batch: sample_id s → class s % classes, sample s // classes."""
+    xs, ys = [], []
+    for s in sample_ids:
+        x, y = sample(s % classes, s // classes, sigma, hw)
+        xs.append(x)
+        ys.append(y)
+    return np.stack(xs), np.array(ys, dtype=np.int32)
+
+
+def to_rgb8(img: np.ndarray) -> np.ndarray:
+    """Model-space f32 → the 8-bit RGB file the cloud baselines upload.
+
+    Fixed affine map covering ±4σ of the pixel distribution; identical
+    constant on the rust side (`data::to_rgb8`).
+    """
+    return np.clip(img * 32.0 + 128.0, 0.0, 255.0).astype(np.uint8)
+
+
+def from_rgb8(img8: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`to_rgb8` (what the cloud feeds the network)."""
+    return (img8.astype(np.float32) - 128.0) / 32.0

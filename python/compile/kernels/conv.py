@@ -1,0 +1,107 @@
+"""L1 Pallas tiled matmul + im2col conv2d.
+
+The MXU-facing half of the hardware adaptation (DESIGN.md): the paper's
+models spend >90% of their FMACs in convolutions, which on TPU map onto
+the 128×128 systolic MXU rather than CUDA warps. We express conv as
+im2col → tiled matmul with an (m, n, k) grid:
+
+* A-tiles (TM×TK) and B-tiles (TK×TN) stream HBM→VMEM per grid step;
+* the K axis is the innermost ("arbitrary") grid dimension so the output
+  tile stays resident in VMEM and accumulates across K steps
+  (``@pl.when(k == 0)`` zero-init — the canonical Pallas accumulation
+  pattern);
+* tiles default to 128 to match MXU geometry; inputs are zero-padded to
+  tile multiples and the result is sliced back.
+
+interpret=True as everywhere (CPU PJRT cannot run Mosaic custom-calls).
+The quickstart "tinyconv" model exported by aot.py runs its conv stages
+through this kernel end-to-end, proving the L1→L2→L3 path; the large
+VGG/ResNet stage artifacts use lax.conv for export speed (DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TM = 128
+TN = 128
+TK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (m, n, k) grid step: o[m,n] += a[m,k] @ b[k,n]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad2(x: jnp.ndarray, tm: int, tn: int) -> jnp.ndarray:
+    m, n = x.shape
+    return jnp.pad(x, ((0, (-m) % tm), (0, (-n) % tn)))
+
+
+def matmul_pallas(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Tiled Pallas matmul, f32 accumulation; any (M, K) x (K, N)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    ap = _pad2(a.astype(jnp.float32), TM, TK)
+    bp = _pad2(b.astype(jnp.float32), TK, TN)
+    gm, gk = ap.shape[0] // TM, ap.shape[1] // TK
+    gn = bp.shape[1] // TN
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((TM, TK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TK, TN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _same_pad(size: int, k: int, stride: int) -> tuple[int, int, int]:
+    """XLA SAME convention: out = ceil(size/stride), asymmetric low/high pad."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    lo = total // 2
+    return out, lo, total - lo
+
+
+def _im2col(x: jnp.ndarray, kh: int, kw: int, stride: int) -> jnp.ndarray:
+    """NHWC → (N*OH*OW, KH*KW*C) patch matrix with XLA-SAME padding."""
+    n, h, w, cin = x.shape
+    oh, ph_lo, ph_hi = _same_pad(h, kh, stride)
+    ow, pw_lo, pw_hi = _same_pad(w, kw, stride)
+    xp = jnp.pad(x, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            patch = xp[:, di : di + oh * stride : stride, dj : dj + ow * stride : stride, :]
+            cols.append(patch)
+    # (N, OH, OW, KH*KW*C) — patch-major to match HWIO weight reshape.
+    mat = jnp.concatenate(cols, axis=-1)
+    return mat.reshape(n * oh * ow, kh * kw * cin), (n, oh, ow)
+
+
+def conv2d_pallas(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """SAME-padded NHWC conv via im2col + the tiled Pallas matmul.
+
+    ``w`` is HWIO. Matches :func:`ref.conv2d_ref` (padding="SAME").
+    """
+    kh, kw, cin, cout = w.shape
+    mat, (n, oh, ow) = _im2col(x.astype(jnp.float32), kh, kw, stride)
+    wmat = w.astype(jnp.float32).reshape(kh * kw * cin, cout)
+    out = matmul_pallas(mat, wmat)
+    return out.reshape(n, oh, ow, cout)

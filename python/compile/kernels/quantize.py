@@ -1,0 +1,152 @@
+"""L1 Pallas kernels for JALAD's in-layer feature compression (paper §III-B).
+
+The hot-spot JALAD adds to the inference path is the per-tensor affine
+quantizer that runs on the edge device right before transmission, and its
+inverse that runs on the cloud right after reception. Both are written as
+Pallas kernels so that on a real TPU the HBM↔VMEM traffic is explicit:
+
+* the tensor is flattened and processed in 1-D ``(BLOCK,)`` tiles
+  (``BLOCK = 8192`` f32 → 32 KiB per input tile, comfortably inside VMEM);
+* a grid-reduction kernel produces per-tile min/max partials, reduced to
+  the global range on the host side of the kernel boundary;
+* a map kernel applies the affine step conversion tile by tile.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see DESIGN.md §Hardware-Adaptation); interpret mode lowers
+to plain HLO, which is exactly what ``aot.py`` exports for the rust
+runtime.
+
+The quantization bit-width ``c`` is a *runtime scalar input* (f32), so a
+single exported artifact per tensor length serves every c ∈ [1, 8] — the
+ILP decision engine on the rust side changes c without recompiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One f32 tile = 32 KiB; with input + output + scratch live this stays well
+# under the ~16 MiB VMEM of a TPU core and leaves room for double-buffering.
+BLOCK = 8192
+
+
+def _pad_to_block(x_flat: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    """Pad a flat f32 vector to a BLOCK multiple with its first element.
+
+    Padding with ``x[0]`` (an existing value) keeps the min/max reduction
+    exact without sentinel handling inside the kernel.
+    """
+    n = x_flat.shape[0]
+    rem = (-n) % BLOCK
+    if rem:
+        x_flat = jnp.concatenate([x_flat, jnp.broadcast_to(x_flat[0], (rem,))])
+    return x_flat, n
+
+
+def _minmax_kernel(x_ref, mn_ref, mx_ref):
+    """Per-tile min/max partials: grid step i reduces tile i."""
+    tile = x_ref[...]
+    mn_ref[0] = jnp.min(tile)
+    mx_ref[0] = jnp.max(tile)
+
+
+def _quantize_map_kernel(x_ref, lo_ref, scale_ref, o_ref, *, levels: float):
+    """y = clip(round((x - lo) * scale), 0, levels) applied tile-wise."""
+    x = x_ref[...]
+    y = jnp.round((x - lo_ref[0]) * scale_ref[0])
+    o_ref[...] = jnp.clip(y, 0.0, levels)
+
+
+def _dequantize_map_kernel(y_ref, lo_ref, step_ref, o_ref):
+    """x̂ = y * step + lo applied tile-wise."""
+    o_ref[...] = y_ref[...] * step_ref[0] + lo_ref[0]
+
+
+def minmax_pallas(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Global (min, max) of ``x`` via a tiled Pallas grid reduction."""
+    x_flat, _ = _pad_to_block(x.reshape(-1).astype(jnp.float32))
+    tiles = x_flat.shape[0] // BLOCK
+    mn, mx = pl.pallas_call(
+        _minmax_kernel,
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((tiles,), jnp.float32),
+            jax.ShapeDtypeStruct((tiles,), jnp.float32),
+        ],
+        interpret=True,
+    )(x_flat)
+    return jnp.min(mn), jnp.max(mx)
+
+
+def quantize_pallas(x: jnp.ndarray, c) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pallas twin of :func:`ref.quantize_ref`; same (y, min, max) contract.
+
+    ``c`` may be a traced f32 scalar. Output keeps the input's shape with
+    integer-valued f32 entries in [0, 2^c - 1].
+    """
+    shape = x.shape
+    x_flat, n = _pad_to_block(x.reshape(-1).astype(jnp.float32))
+    tiles = x_flat.shape[0] // BLOCK
+
+    lo, hi = minmax_pallas(x)
+    levels_dyn = jnp.exp2(jnp.asarray(c, jnp.float32)) - 1.0
+    span = hi - lo
+    scale = jnp.where(span > 0.0, levels_dyn / span, 0.0)
+
+    # `levels` is dynamic (depends on c) so the clip upper bound is fed to
+    # the kernel through `scale`-style scalar operands; we clip against the
+    # static maximum (255 for C<=8) inside and re-clip dynamically outside.
+    y = pl.pallas_call(
+        functools.partial(_quantize_map_kernel, levels=float(2**30)),
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x_flat.shape, jnp.float32),
+        interpret=True,
+    )(x_flat, lo.reshape(1), scale.reshape(1))
+    y = jnp.minimum(y, levels_dyn)
+    return y[:n].reshape(shape), lo, hi
+
+
+def dequantize_pallas(y: jnp.ndarray, lo, hi, c) -> jnp.ndarray:
+    """Pallas twin of :func:`ref.dequantize_ref`."""
+    shape = y.shape
+    y_flat, n = _pad_to_block(y.reshape(-1).astype(jnp.float32))
+    tiles = y_flat.shape[0] // BLOCK
+
+    levels = jnp.exp2(jnp.asarray(c, jnp.float32)) - 1.0
+    span = jnp.asarray(hi, jnp.float32) - jnp.asarray(lo, jnp.float32)
+    step = jnp.where(levels > 0.0, span / levels, 0.0)
+
+    x = pl.pallas_call(
+        _dequantize_map_kernel,
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(y_flat.shape, jnp.float32),
+        interpret=True,
+    )(y_flat, jnp.asarray(lo, jnp.float32).reshape(1), step.reshape(1))
+    return x[:n].reshape(shape)
+
+
+def fake_quant_pallas(x: jnp.ndarray, c) -> jnp.ndarray:
+    """quantize → dequantize round trip, all through the Pallas kernels."""
+    y, lo, hi = quantize_pallas(x, c)
+    return dequantize_pallas(y, lo, hi, c)

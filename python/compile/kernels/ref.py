@@ -1,0 +1,90 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. ``python/tests`` sweeps shapes
+and dtypes (hypothesis) and asserts the Pallas output matches these
+oracles; the rust side never calls this module.
+
+The quantizer is JALAD's in-layer feature compression (paper §III-B):
+
+    y_i = round((2^c - 1) * (x_i - min(x)) / (max(x) - min(x)))
+
+mapping a float feature map onto the integer lattice [0, 2^c). The paper
+leaves the inverse unspecified; we use the standard affine dequantizer and
+ship ``(min, max)`` alongside the payload (DESIGN.md, deviation 1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def qmax(c):
+    """Number of quantization steps minus one: 2^c - 1 for c bits."""
+    return jnp.exp2(c) - 1.0
+
+
+def quantize_ref(x: jnp.ndarray, c) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Affine-quantize ``x`` to ``c`` bits. Returns (y, min, max).
+
+    ``y`` holds integer values in [0, 2^c - 1] stored as f32 (the wire
+    bit-packing happens on the rust side). Degenerate ranges (max == min)
+    quantize to all-zeros; the dequantizer restores the constant from
+    ``min``.
+    """
+    x = x.astype(jnp.float32)
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    span = hi - lo
+    scale = jnp.where(span > 0.0, qmax(c) / span, 0.0)
+    y = jnp.round((x - lo) * scale)
+    y = jnp.clip(y, 0.0, qmax(c))
+    return y, lo, hi
+
+
+def dequantize_ref(y: jnp.ndarray, lo, hi, c) -> jnp.ndarray:
+    """Inverse of :func:`quantize_ref`: x̂ = y / (2^c - 1) * (hi - lo) + lo."""
+    span = hi - lo
+    step = jnp.where(qmax(c) > 0.0, span / qmax(c), 0.0)
+    return y.astype(jnp.float32) * step + lo
+
+
+def fake_quant_ref(x: jnp.ndarray, c) -> jnp.ndarray:
+    """quantize → dequantize round trip (what the cloud-side model sees)."""
+    y, lo, hi = quantize_ref(x, c)
+    return dequantize_ref(y, lo, hi, c)
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """f32 accumulation matmul oracle for the tiled Pallas matmul."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def conv2d_ref(
+    x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, padding: str = "SAME"
+) -> jnp.ndarray:
+    """NHWC/HWIO conv oracle for the im2col Pallas conv."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def relu_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 stride-2 max pool, NHWC."""
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )

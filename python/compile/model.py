@@ -1,0 +1,74 @@
+"""L2 façade: the jax computations that ``aot.py`` lowers to HLO.
+
+Three artifact families are exported per model (all weights baked in):
+
+* ``<model>_stage_<k>.hlo.txt`` — stage k's forward, activation→activation;
+* ``<model>_full.hlo.txt`` — the whole forward in one executable (used by
+  the cloud-only baselines, and by the runtime when `i* = 0`);
+* shared ``quant_<n>.hlo.txt`` / ``dequant_<shape>.hlo.txt`` — the L1
+  Pallas quantizer/dequantizer specialized per flattened tensor length
+  ``n`` (one artifact serves every bit-width: ``c`` is a runtime scalar
+  input).
+
+Everything here is build-time only; the rust runtime never imports python.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax.numpy as jnp
+
+from .kernels.quantize import dequantize_pallas, quantize_pallas
+from .models import ModelDef, Stage, build_model  # noqa: F401
+
+
+def stage_fn(stage: Stage) -> Callable:
+    """Activation→activation function for one decoupling stage.
+
+    Returned as a 1-tuple (the AOT bridge lowers with return_tuple=True
+    and the rust side unwraps with ``to_tuple1``; see the aot recipe in
+    /opt/xla-example/gen_hlo.py).
+    """
+
+    def fn(x: jnp.ndarray):
+        return (stage.fn(x),)
+
+    return fn
+
+
+def full_fn(model: ModelDef) -> Callable:
+    """Whole-model forward: image → logits."""
+
+    def fn(x: jnp.ndarray):
+        return (model.forward(x),)
+
+    return fn
+
+
+def quant_fn(n: int) -> Callable:
+    """Quantizer over a flat length-``n`` f32 vector.
+
+    Signature: (x[n], c) → (y[n], min, max); c is a runtime f32 scalar so
+    the ILP engine can change bit-width without recompiling.
+    """
+
+    def fn(x: jnp.ndarray, c: jnp.ndarray):
+        y, lo, hi = quantize_pallas(x, c)
+        return (y, lo, hi)
+
+    return fn
+
+
+def dequant_fn(shape: Tuple[int, ...]) -> Callable:
+    """Dequantizer: (y_flat, min, max, c) → x̂ reshaped to ``shape``.
+
+    The reshape happens here so the cloud pipeline can feed the result
+    straight into stage ``i*+1``.
+    """
+
+    def fn(y: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, c: jnp.ndarray):
+        x = dequantize_pallas(y, lo, hi, c)
+        return (x.reshape(shape),)
+
+    return fn

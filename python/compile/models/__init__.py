@@ -1,0 +1,18 @@
+"""L2 model zoo: stage-sliced CNNs matching JALAD's four test models.
+
+Each model is expressed as an ordered list of *stages* — the paper's
+decoupling points (§III-A): layer-wise for sequential nets (VGG),
+unit-wise for branchy nets (ResNet). ``aot.py`` exports every stage as an
+independent HLO artifact so the rust coordinator can cut the network at
+any point at runtime.
+"""
+
+from .registry import (  # noqa: F401
+    INPUT_HW,
+    MODEL_NAMES,
+    NUM_CLASSES,
+    ModelDef,
+    Stage,
+    build_model,
+    init_params,
+)

@@ -1,0 +1,79 @@
+"""Layer primitives + deterministic init for the stage-sliced model zoo.
+
+Weights are generated from a fixed PRNG seed (He-normal), *not* trained:
+accuracy in this reproduction is top-1 fidelity against the un-quantized
+forward pass of the same network (DESIGN.md substitution table), which
+only requires that the network is a fixed deterministic function with
+ReLU-CNN feature statistics.
+
+All parameters are closed over by the stage functions, so the exported
+HLO artifacts embed the weights as constants — the rust runtime feeds
+activations only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _key(seed: int, *path: int) -> jax.Array:
+    k = jax.random.PRNGKey(seed)
+    for p in path:
+        k = jax.random.fold_in(k, p)
+    return k
+
+
+def he_conv(seed: int, idx: int, kh: int, kw: int, cin: int, cout: int) -> jnp.ndarray:
+    """He-normal HWIO conv weight; deterministic in (seed, idx)."""
+    std = (2.0 / (kh * kw * cin)) ** 0.5
+    return std * jax.random.normal(_key(seed, 0, idx), (kh, kw, cin, cout), jnp.float32)
+
+
+def he_dense(seed: int, idx: int, nin: int, nout: int) -> jnp.ndarray:
+    std = (2.0 / nin) ** 0.5
+    return std * jax.random.normal(_key(seed, 1, idx), (nin, nout), jnp.float32)
+
+
+def bias(seed: int, idx: int, n: int) -> jnp.ndarray:
+    """Small random bias — breaks argmax ties between untrained logits."""
+    return 0.05 * jax.random.normal(_key(seed, 2, idx), (n,), jnp.float32)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def relu(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def global_avgpool(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(x, axis=(1, 2))
+
+
+def conv_fmacs(oh: int, ow: int, kh: int, kw: int, cin: int, cout: int) -> int:
+    """Multiply-accumulate count of one conv layer (paper §IV-A, Q(x))."""
+    return oh * ow * kh * kw * cin * cout
+
+
+def dense_fmacs(nin: int, nout: int) -> int:
+    return nin * nout

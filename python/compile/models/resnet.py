@@ -1,0 +1,154 @@
+"""ResNet-50 / ResNet-101 at 1/8 width, stage-sliced unit-wise.
+
+Branchy nets decouple at res-unit granularity (paper §III-A): "one
+res-unit in ResNet is regarded as one decoupling layer". Stages are:
+
+    stem | unit_1 .. unit_M | head
+
+ResNet50 uses bottleneck blocks [3, 4, 6, 3] (16 units + stem + head =
+18 decoupling points); ResNet101 uses [3, 4, 23, 3] (33 units → 35
+points). The stem is CIFAR-style (3×3 stride 1) because inputs are
+32×32; the full-scale 224×224 analytic FMAC tables live on the rust side
+(`rust/src/models/resnet.rs`).
+
+No batch-norm: the affine part of a trained BN folds into the conv, and
+omitting it keeps every stage a single fused conv chain for XLA. The
+residual branch is damped by :data:`RESIDUAL_SCALE` instead (untrained
+He-init residuals would otherwise double activation variance per unit —
+≈2^33 over ResNet-101 — which BN would normally prevent).
+
+``init_params`` / ``build_stages`` are split so ``train.py`` can
+differentiate through the forward pass.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from . import layers as L
+
+WIDTH_DIV = 8
+EXPANSION = 4
+
+# (units, full_scale_base_width, stride_of_first_unit) per stage group.
+RESNET50_BLOCKS = [(3, 64, 1), (4, 128, 2), (6, 256, 2), (3, 512, 2)]
+RESNET101_BLOCKS = [(3, 64, 1), (4, 128, 2), (23, 256, 2), (3, 512, 2)]
+
+STEM_FULL = 64
+RESIDUAL_SCALE = 0.3
+
+
+def _unit_plan(blocks):
+    """Flat list of (cin, width, cout, stride, project) per res-unit."""
+    cin = max(STEM_FULL // WIDTH_DIV, 8)
+    plan = []
+    for units, full_width, first_stride in blocks:
+        width = max(full_width // WIDTH_DIV, 4)
+        cout = width * EXPANSION
+        for ui in range(units):
+            stride = first_stride if ui == 0 else 1
+            plan.append((cin, width, cout, stride, stride != 1 or cin != cout))
+            cin = cout
+    return plan
+
+
+def init_params(blocks, input_shape, classes: int, seed: int) -> Dict:
+    n, h, w, cin = input_shape
+    stem_ch = max(STEM_FULL // WIDTH_DIV, 8)
+    params = {
+        "stem": {"w": L.he_conv(seed, 0, 3, 3, cin, stem_ch), "b": L.bias(seed, 0, stem_ch)},
+        "units": [],
+    }
+    for idx, (ucin, width, cout, _stride, project) in enumerate(_unit_plan(blocks)):
+        i = idx + 1
+        u = {
+            "w1": L.he_conv(seed, i * 10 + 0, 1, 1, ucin, width),
+            "b1": L.bias(seed, i * 10 + 0, width),
+            "w2": L.he_conv(seed, i * 10 + 1, 3, 3, width, width),
+            "b2": L.bias(seed, i * 10 + 1, width),
+            "w3": L.he_conv(seed, i * 10 + 2, 1, 1, width, cout),
+            "b3": L.bias(seed, i * 10 + 2, cout),
+        }
+        if project:
+            u["wp"] = L.he_conv(seed, i * 10 + 3, 1, 1, ucin, cout)
+        params["units"].append(u)
+    final_c = _unit_plan(blocks)[-1][2]
+    params["fc"] = {"w": L.he_dense(seed, 999, final_c, classes), "b": L.bias(seed, 999, classes)}
+    return params
+
+
+def _unit_fn(u, stride: int, project: bool):
+    def fn(x):
+        y = L.relu(L.conv2d(x, u["w1"]) + u["b1"])
+        y = L.relu(L.conv2d(y, u["w2"], stride=stride) + u["b2"])
+        y = L.conv2d(y, u["w3"]) + u["b3"]
+        sc = L.conv2d(x, u["wp"], stride=stride) if project else x
+        return L.relu(RESIDUAL_SCALE * y + sc)
+
+    return fn
+
+
+def _unit_fmacs(h, w, cin, width, cout, stride, project):
+    oh, ow = -(-h // stride), -(-w // stride)
+    f = L.conv_fmacs(h, w, 1, 1, cin, width)
+    f += L.conv_fmacs(oh, ow, 3, 3, width, width)
+    f += L.conv_fmacs(oh, ow, 1, 1, width, cout)
+    if project:
+        f += L.conv_fmacs(oh, ow, 1, 1, cin, cout)
+    return f
+
+
+def build_stages(blocks, input_shape: Tuple[int, ...], classes: int, seed: int, params=None):
+    from .registry import Stage
+
+    if params is None:
+        params = init_params(blocks, input_shape, classes, seed)
+
+    stages: List[Stage] = []
+    n, h, w, cin = input_shape
+    stem_ch = max(STEM_FULL // WIDTH_DIV, 8)
+    stem = params["stem"]
+    stages.append(
+        Stage(
+            name="stem",
+            fn=lambda x, p=stem: L.relu(L.conv2d(x, p["w"]) + p["b"]),
+            in_shape=(n, h, w, cin),
+            out_shape=(n, h, w, stem_ch),
+            fmacs=L.conv_fmacs(h, w, 3, 3, cin, stem_ch),
+        )
+    )
+    cin = stem_ch
+
+    group_of, unit_in_group = 1, 1
+    prev_units = 0
+    plan = _unit_plan(blocks)
+    group_sizes = [u for u, _, _ in blocks]
+    for idx, (ucin, width, cout, stride, project) in enumerate(plan):
+        if idx - prev_units == group_sizes[group_of - 1]:
+            prev_units += group_sizes[group_of - 1]
+            group_of += 1
+            unit_in_group = 1
+        oh, ow = -(-h // stride), -(-w // stride)
+        stages.append(
+            Stage(
+                name=f"unit{group_of}_{unit_in_group}",
+                fn=_unit_fn(params["units"][idx], stride, project),
+                in_shape=(n, h, w, ucin),
+                out_shape=(n, oh, ow, cout),
+                fmacs=_unit_fmacs(h, w, ucin, width, cout, stride, project),
+            )
+        )
+        h, w, cin = oh, ow, cout
+        unit_in_group += 1
+
+    fc = params["fc"]
+    stages.append(
+        Stage(
+            name="head",
+            fn=lambda x, p=fc: L.global_avgpool(x) @ p["w"] + p["b"],
+            in_shape=(n, h, w, cin),
+            out_shape=(n, classes),
+            fmacs=L.dense_fmacs(cin, classes),
+        )
+    )
+    return stages

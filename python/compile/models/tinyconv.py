@@ -1,0 +1,84 @@
+"""TinyConv: the quickstart model whose conv stages run through the L1
+Pallas kernels end-to-end.
+
+The big VGG/ResNet exports use ``lax.conv`` per stage for lowering speed
+(DESIGN.md); TinyConv instead routes every convolution through
+``kernels.conv.conv2d_pallas`` (tiled im2col matmul, interpret mode), so
+the exported HLO of its stages *is* the Pallas lowering. This proves the
+full L1 (Pallas) → L2 (jax stage) → AOT → L3 (rust PJRT) chain on the
+request path, and is the model `examples/quickstart.rs` serves.
+
+Training differentiates through the ``lax.conv`` twin (``use_pallas=False``)
+for speed — the two are numerically identical (asserted in
+``tests/test_kernels.py``), and export closes the Pallas stages over the
+trained parameters.
+
+Architecture: 3 conv stages (8, 16, 32 ch; pools after 1 and 2) + fc.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from ..kernels.conv import conv2d_pallas
+from . import layers as L
+
+CHANNELS = [8, 16, 32]
+
+
+def init_params(input_shape, classes: int, seed: int) -> Dict:
+    n, h, w, cin = input_shape
+    params = {"conv": []}
+    for i, ch in enumerate(CHANNELS):
+        params["conv"].append(
+            {"w": L.he_conv(seed, i, 3, 3, cin, ch), "b": L.bias(seed, i, ch)}
+        )
+        cin = ch
+    flat = (h // 4) * (w // 4) * CHANNELS[-1]
+    params["fc"] = {"w": L.he_dense(seed, 99, flat, classes), "b": L.bias(seed, 99, classes)}
+    return params
+
+
+def build_stages(
+    input_shape: Tuple[int, ...], classes: int, seed: int, params=None, use_pallas: bool = True
+):
+    from .registry import Stage
+
+    if params is None:
+        params = init_params(input_shape, classes, seed)
+    conv = conv2d_pallas if use_pallas else L.conv2d
+
+    stages: List[Stage] = []
+    n, h, w, cin = input_shape
+    for i, ch in enumerate(CHANNELS):
+        p = params["conv"][i]
+        pool = i < 2
+
+        def fn(x, p=p, pool=pool):
+            y = L.relu(conv(x, p["w"]) + p["b"])
+            return L.maxpool2(y) if pool else y
+
+        oh, ow = (h // 2, w // 2) if pool else (h, w)
+        stages.append(
+            Stage(
+                name=f"pconv{i + 1}" + ("_pool" if pool else ""),
+                fn=fn,
+                in_shape=(n, h, w, cin),
+                out_shape=(n, oh, ow, ch),
+                fmacs=L.conv_fmacs(h, w, 3, 3, cin, ch),
+            )
+        )
+        cin, h, w = ch, oh, ow
+
+    flat = h * w * cin
+    fc = params["fc"]
+    stages.append(
+        Stage(
+            name="logits",
+            fn=lambda x, p=fc: x.reshape(x.shape[0], -1) @ p["w"] + p["b"],
+            in_shape=(n, h, w, cin),
+            out_shape=(n, classes),
+            fmacs=L.dense_fmacs(flat, classes),
+        )
+    )
+    return stages

@@ -1,0 +1,119 @@
+"""VGG-16 / VGG-19 at 1/8 width, stage-sliced layer-wise (paper §III-A).
+
+Sequential nets decouple at layer granularity: every conv (+ReLU, and the
+trailing 2×2 max-pool when it closes a block) is one stage, every fully
+connected layer is one stage. VGG16 → 13 conv + 3 fc = 16 decoupling
+points; VGG19 → 16 + 3 = 19, matching the paper's layer counts.
+
+Full-scale channel widths (64..512, fc 4096) live in the rust analytic
+model (`rust/src/models/vgg.rs`); here they are divided by
+:data:`WIDTH_DIV` for CPU-tractable export, training and calibration.
+
+``init_params`` / ``build_stages`` are split so ``train.py`` can
+differentiate through the forward pass: stages close over whatever arrays
+(concrete or traced) live in the params pytree.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from . import layers as L
+
+WIDTH_DIV = 8
+
+# (convs_in_block, full_scale_channels) per VGG block; pool after each block.
+VGG16_BLOCKS = [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)]
+VGG19_BLOCKS = [(2, 64), (2, 128), (4, 256), (4, 512), (4, 512)]
+
+FC_FULL = [4096, 4096]  # hidden fc widths at full scale
+
+
+def _plan(blocks, input_shape, classes):
+    """Static layer plan: conv (cin, ch, pool?) list and fc dims."""
+    n, h, w, cin = input_shape
+    convs = []
+    for convs_in_block, full_ch in blocks:
+        ch = max(full_ch // WIDTH_DIV, 4)
+        for ci in range(convs_in_block):
+            convs.append((cin, ch, ci == convs_in_block - 1))
+            cin = ch
+        h, w = h // 2, w // 2
+    flat = h * w * cin
+    fc_dims = [flat] + [max(d // (WIDTH_DIV * 2), 16) for d in FC_FULL] + [classes]
+    return convs, fc_dims
+
+
+def init_params(blocks, input_shape, classes: int, seed: int) -> Dict:
+    convs, fc_dims = _plan(blocks, input_shape, classes)
+    params = {"conv": [], "fc": []}
+    for idx, (cin, ch, _pool) in enumerate(convs):
+        params["conv"].append(
+            {"w": L.he_conv(seed, idx, 3, 3, cin, ch), "b": L.bias(seed, idx, ch)}
+        )
+    for fi in range(len(fc_dims) - 1):
+        params["fc"].append(
+            {
+                "w": L.he_dense(seed, 100 + fi, fc_dims[fi], fc_dims[fi + 1]),
+                "b": L.bias(seed, 100 + fi, fc_dims[fi + 1]),
+            }
+        )
+    return params
+
+
+def build_stages(blocks, input_shape: Tuple[int, ...], classes: int, seed: int, params=None):
+    """Build the layer-wise stage list for a VGG variant."""
+    from .registry import Stage  # local import to avoid a cycle
+
+    if params is None:
+        params = init_params(blocks, input_shape, classes, seed)
+    convs, fc_dims = _plan(blocks, input_shape, classes)
+
+    stages: List[Stage] = []
+    n, h, w, _ = input_shape
+    block_idx, conv_in_block = 1, 1
+    for idx, (cin, ch, pool) in enumerate(convs):
+        p = params["conv"][idx]
+        oh, ow = (h // 2, w // 2) if pool else (h, w)
+
+        def fn(x, p=p, pool=pool):
+            y = L.relu(L.conv2d(x, p["w"]) + p["b"])
+            return L.maxpool2(y) if pool else y
+
+        stages.append(
+            Stage(
+                name=f"conv{block_idx}_{conv_in_block}" + ("_pool" if pool else ""),
+                fn=fn,
+                in_shape=(n, h, w, cin),
+                out_shape=(n, oh, ow, ch),
+                fmacs=L.conv_fmacs(h, w, 3, 3, cin, ch),
+            )
+        )
+        h, w = oh, ow
+        if pool:
+            block_idx, conv_in_block = block_idx + 1, 1
+        else:
+            conv_in_block += 1
+
+    cin = convs[-1][1]
+    for fi in range(len(fc_dims) - 1):
+        p = params["fc"][fi]
+        last = fi == len(fc_dims) - 2
+        in_shape = (n, h, w, cin) if fi == 0 else (n, fc_dims[fi])
+
+        def fn(x, p=p, last=last, flatten=(fi == 0)):
+            if flatten:
+                x = x.reshape(x.shape[0], -1)
+            y = x @ p["w"] + p["b"]
+            return y if last else L.relu(y)
+
+        stages.append(
+            Stage(
+                name="logits" if last else f"fc{fi + 1}",
+                fn=fn,
+                in_shape=in_shape,
+                out_shape=(n, fc_dims[fi + 1]),
+                fmacs=L.dense_fmacs(fc_dims[fi], fc_dims[fi + 1]),
+            )
+        )
+    return stages

@@ -1,0 +1,173 @@
+"""Build-time training on the synthetic task (compile/data.py).
+
+Untrained He-init networks are pathologically robust to feature
+quantization (argmax margins ≫ quantization noise), which would flatten
+the paper's accuracy/bit-width trade-off (Fig. 4/6) into a constant. A
+short SGD run on the synthetic 16-class task gives the networks real
+decision boundaries, after which A_i(c) behaves like the paper's:
+negligible loss for c ≥ 4, growing loss below.
+
+Trained parameters are cached as ``artifacts/params/<model>.npz``;
+``aot.py`` trains on demand and re-uses the cache, so ``make artifacts``
+only pays the cost once. Hand-rolled SGD+momentum (no optax offline).
+
+Run directly for one model:  python -m compile.train --model vgg16
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .models import MODEL_NAMES, NUM_CLASSES, build_model, init_params
+
+STEPS = 180
+BATCH = 32
+LR = 1e-3
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+TRAIN_SAMPLES = 1024  # sample ids 0..1023; eval/calibration use ids >= 2048
+EVAL_OFFSET = 2048
+EVAL_SAMPLES = 256
+
+
+def _flatten(tree, prefix=""):
+    """Pytree → {dotted-path: array} (for npz round-trip)."""
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}."))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict):
+    """Inverse of :func:`_flatten`; lists are detected by integer keys."""
+    root: dict = {}
+    for path, arr in flat.items():
+        keys = path.split(".")
+        node = root
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = jnp.asarray(arr)
+
+    def listify(node):
+        if not isinstance(node, dict):
+            return node
+        if node and all(k.isdigit() for k in node):
+            return [listify(node[str(i)]) for i in range(len(node))]
+        return {k: listify(v) for k, v in node.items()}
+
+    return listify(root)
+
+
+def save_params(params, path: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez(path, **_flatten(params))
+
+
+def load_params(path: str):
+    with np.load(path) as z:
+        return _unflatten({k: z[k] for k in z.files})
+
+
+def _batches(classes: int):
+    """Deterministic infinite batch stream over the training ids."""
+    step = 0
+    while True:
+        ids = [(step * BATCH + j) % TRAIN_SAMPLES for j in range(BATCH)]
+        xs, ys = data.batch(ids, classes=classes)
+        yield jnp.asarray(xs), jnp.asarray(ys)
+        step += 1
+
+
+def train_model(
+    name: str, steps: int = STEPS, classes: int = NUM_CLASSES, verbose: bool = True
+):
+    """SGD+momentum training; returns (params, final_eval_accuracy)."""
+    params = init_params(name, classes=classes)
+
+    def loss_fn(p, xs, ys):
+        logits = build_model(
+            name, classes=classes, params=p, batch=xs.shape[0], use_pallas=False
+        ).forward(xs)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(xs.shape[0]), ys])
+
+    @jax.jit
+    def step_fn(p, m, v, t, xs, ys):
+        """One hand-rolled Adam step (no optax in the offline image)."""
+        loss, grads = jax.value_and_grad(loss_fn)(p, xs, ys)
+        m = jax.tree.map(lambda a, g: ADAM_B1 * a + (1 - ADAM_B1) * g, m, grads)
+        v = jax.tree.map(lambda a, g: ADAM_B2 * a + (1 - ADAM_B2) * g * g, v, grads)
+        bc1 = 1 - ADAM_B1**t
+        bc2 = 1 - ADAM_B2**t
+        p = jax.tree.map(
+            lambda w, a, b: w - LR * (a / bc1) / (jnp.sqrt(b / bc2) + ADAM_EPS), p, m, v
+        )
+        return p, m, v, loss
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    stream = _batches(classes)
+    t0 = time.time()
+    for i in range(steps):
+        xs, ys = next(stream)
+        params, m, v, loss = step_fn(params, m, v, jnp.float32(i + 1), xs, ys)
+        if verbose and (i % 60 == 0 or i == steps - 1):
+            print(f"  [{name}] step {i:4d} loss {float(loss):.4f} ({time.time()-t0:.0f}s)")
+
+    acc = eval_accuracy(name, params, classes)
+    if verbose:
+        print(f"  [{name}] eval accuracy {acc:.3f} on {EVAL_SAMPLES} held-out samples")
+    return params, acc
+
+
+def eval_accuracy(name: str, params, classes: int = NUM_CLASSES) -> float:
+    ids = [EVAL_OFFSET + i for i in range(EVAL_SAMPLES)]
+    xs, ys = data.batch(ids, classes=classes)
+    model = build_model(
+        name, classes=classes, params=params, batch=len(ids), use_pallas=False
+    )
+    logits = jax.jit(model.forward)(jnp.asarray(xs))
+    return float(jnp.mean(jnp.argmax(logits, axis=-1) == jnp.asarray(ys)))
+
+
+def ensure_params(name: str, params_dir: str, verbose: bool = True):
+    """Load cached trained params or train and cache them."""
+    path = os.path.join(params_dir, f"{name}.npz")
+    if os.path.exists(path):
+        return load_params(path)
+    if verbose:
+        print(f"  [{name}] no cached params, training {STEPS} steps…")
+    params, _ = train_model(name, verbose=verbose)
+    save_params(params, path)
+    return params
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="all", help="model name or 'all'")
+    ap.add_argument("--params-dir", default="../artifacts/params")
+    ap.add_argument("--steps", type=int, default=STEPS)
+    args = ap.parse_args(argv)
+
+    names = MODEL_NAMES if args.model == "all" else [args.model]
+    for n in names:
+        params, acc = train_model(n, steps=args.steps)
+        save_params(params, os.path.join(args.params_dir, f"{n}.npz"))
+        print(f"{n}: saved, eval acc {acc:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

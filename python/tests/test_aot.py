@@ -1,0 +1,96 @@
+"""AOT exporter: HLO text validity and manifest consistency.
+
+Fast checks export a throwaway tinyconv to a temp dir; the heavier
+checks validate the real `artifacts/` tree when present (skip otherwise,
+so `pytest` works before `make artifacts`).
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.models import build_model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_export_single_stage_hlo_text(tmp_path):
+    from compile import model as M
+
+    m = build_model("tinyconv")
+    path = tmp_path / "stage.hlo.txt"
+    nbytes = aot.export(M.stage_fn(m.stages[3]), [aot.spec(m.stages[3].in_shape)], str(path))
+    text = path.read_text()
+    assert nbytes == len(text)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # Large constants must be printed, not elided — the rust parser
+    # cannot ingest `constant({...})` (this was a real bug).
+    assert "{...}" not in text
+
+
+def test_quant_artifact_signature(tmp_path):
+    from compile import model as M
+
+    path = tmp_path / "quant.hlo.txt"
+    aot.export(M.quant_fn(64), [aot.spec((64,)), aot.spec(())], str(path))
+    text = path.read_text()
+    assert "f32[64]" in text
+    assert "{...}" not in text
+
+
+def test_source_digest_is_stable():
+    assert aot.source_digest() == aot.source_digest()
+    assert len(aot.source_digest()) == 16
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+class TestRealManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_models_present(self, manifest):
+        names = {m["name"] for m in manifest["models"]}
+        assert names == {"vgg16", "vgg19", "resnet50", "resnet101", "tinyconv"}
+
+    def test_all_artifacts_exist_and_are_text(self, manifest):
+        files = []
+        for m in manifest["models"]:
+            files.append(m["full_artifact"])
+            files += [s["artifact"] for s in m["stages"]]
+        files += [q["artifact"] for q in manifest["codecs"]["quant"]]
+        files += [d["artifact"] for d in manifest["codecs"]["dequant"]]
+        for f in files:
+            p = os.path.join(ARTIFACTS, f)
+            assert os.path.exists(p), f
+            with open(p) as fh:
+                head = fh.read(64)
+            assert head.startswith("HloModule"), f
+
+    def test_stage_shapes_chain(self, manifest):
+        for m in manifest["models"]:
+            stages = m["stages"]
+            assert stages[0]["in_shape"] == m["input_shape"]
+            for a, b in zip(stages, stages[1:]):
+                assert a["out_shape"] == b["in_shape"], (m["name"], b["name"])
+            assert stages[-1]["out_shape"] == [1, manifest["num_classes"]]
+
+    def test_codec_coverage(self, manifest):
+        quant_ns = {q["elems"] for q in manifest["codecs"]["quant"]}
+        dequant_shapes = {tuple(d["shape"]) for d in manifest["codecs"]["dequant"]}
+        for m in manifest["models"]:
+            for s in m["stages"]:
+                assert s["out_elems"] in quant_ns, (m["name"], s["name"])
+                assert tuple(s["out_shape"]) in dequant_shapes, (m["name"], s["name"])
+
+    def test_digest_matches_current_sources(self, manifest):
+        """Artifacts must correspond to the checked-in compile sources;
+        a mismatch means `make artifacts` needs a re-run."""
+        assert manifest["source_digest"] == aot.source_digest()

@@ -1,0 +1,88 @@
+"""Synthetic dataset: determinism, statistics, and the cross-language
+golden values the rust twin (`rust/src/data/gen.rs`,
+`rust/src/util/rng.rs`) locks against."""
+
+import numpy as np
+import pytest
+
+from compile import data
+
+
+def test_rng_golden():
+    """Golden values mirrored in rust/src/util/rng.rs::golden_cross_language."""
+    r = data.XorShift64Star(1)
+    assert [r.next_u64() for _ in range(4)] == [
+        0x47E4CE4B896CDD1D,
+        0xABCFA6A8E079651D,
+        0xB9D10D8FEB731F57,
+        0x4DB418A0BB1B019D,
+    ]
+    r2 = data.XorShift64Star(1)
+    assert abs(r2.next_f64() - 0.2808350500503596) < 1e-15
+    assert abs(r2.next_f64() - 0.6711372530266765) < 1e-15
+
+
+def test_prototype_golden():
+    """Mirrored in rust/src/data/gen.rs::golden_prototype_values."""
+    p = data.prototype(0)
+    got = [float(x) for x in p.ravel()[:4]]
+    want = [-1.1834038496017456, 2.1171653270721436, -0.9142438769340515, -1.1834038496017456]
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_sample_determinism_and_distinctness():
+    a, la = data.sample(3, 5)
+    b, lb = data.sample(3, 5)
+    c, _ = data.sample(3, 6)
+    np.testing.assert_array_equal(a, b)
+    assert la == lb == 3
+    assert np.abs(a - c).max() > 0.1
+
+
+def test_batch_label_layout():
+    xs, ys = data.batch(range(40))
+    assert xs.shape == (40, 32, 32, 3)
+    np.testing.assert_array_equal(ys, [i % data.NUM_CLASSES for i in range(40)])
+
+
+def test_noise_is_unit_rms():
+    img, _ = data.sample(0, 0, sigma=1.0)
+    proto = data.prototype(0)
+    noise = img - proto
+    rms = float(np.sqrt(np.mean(noise.astype(np.float64) ** 2)))
+    assert abs(rms - 1.0) < 1e-5
+
+
+def test_rgb8_roundtrip():
+    img, _ = data.sample(1, 1)
+    rgb = data.to_rgb8(img)
+    assert rgb.dtype == np.uint8
+    back = data.from_rgb8(rgb)
+    # Non-clipped pixels quantize within half a gray level (1/64).
+    mask = (img * 32 + 128 > 0) & (img * 32 + 128 < 255)
+    assert np.abs((back - img)[mask]).max() <= 1.0 / 32
+
+
+def test_smooth_noise_compressibility():
+    """The motivating property: 8-bit images must be losslessly
+    compressible (PNG2Cloud vs Origin2Cloud needs a real gap)."""
+    import zlib
+
+    ratios = []
+    for s in range(8):
+        img, _ = data.sample(s % 4, s // 4)
+        rgb = data.to_rgb8(img)
+        rows = rgb.reshape(32, -1)
+        filt = np.concatenate(
+            [rows[:1], (rows[1:].astype(np.int16) - rows[:-1]).astype(np.uint8)]
+        )
+        ratios.append(rgb.size / len(zlib.compress(filt.tobytes(), 6)))
+    assert np.mean(ratios) > 1.2, f"images too noisy to compress: {np.mean(ratios):.2f}"
+
+
+def test_prototypes_pairwise_distinct():
+    protos = [data.prototype(k).ravel() for k in range(data.NUM_CLASSES)]
+    for i in range(len(protos)):
+        for j in range(i + 1, len(protos)):
+            d = float(np.mean((protos[i] - protos[j]) ** 2))
+            assert d > 0.05, (i, j, d)

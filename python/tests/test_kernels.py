@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py).
+
+This is the CORE correctness signal of the L1 layer: hypothesis sweeps
+shapes, dtypes and bit-widths and asserts allclose against the reference.
+Everything runs in interpret mode (CPU PJRT cannot execute Mosaic
+custom-calls — see DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv import conv2d_pallas, matmul_pallas
+from compile.kernels.quantize import (
+    BLOCK,
+    dequantize_pallas,
+    fake_quant_pallas,
+    minmax_pallas,
+    quantize_pallas,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=5.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- quantize
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(min_value=1, max_value=3 * BLOCK + 17),
+    c=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_quantize_matches_ref(n, c, seed):
+    x = rand(seed, (n,))
+    y, lo, hi = quantize_pallas(x, float(c))
+    yr, lor, hir = ref.quantize_ref(x, float(c))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    np.testing.assert_allclose(lo, lor, rtol=1e-6)
+    np.testing.assert_allclose(hi, hir, rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    shape=st.sampled_from([(8,), (3, 5), (2, 7, 11), (1, 16, 16, 8)]),
+    c=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_fake_quant_roundtrip_shapes(shape, c, seed):
+    x = rand(seed, shape)
+    got = fake_quant_pallas(x, float(c))
+    want = ref.fake_quant_ref(x, float(c))
+    assert got.shape == x.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_minmax_matches_jnp():
+    for n in [1, BLOCK - 1, BLOCK, BLOCK + 1, 5 * BLOCK + 3]:
+        x = rand(n, (n,))
+        lo, hi = minmax_pallas(x)
+        np.testing.assert_allclose(lo, jnp.min(x), rtol=1e-7)
+        np.testing.assert_allclose(hi, jnp.max(x), rtol=1e-7)
+
+
+def test_quantize_constant_input():
+    x = jnp.full((100,), 3.75)
+    y, lo, hi = quantize_pallas(x, 4.0)
+    assert float(lo) == float(hi) == 3.75
+    np.testing.assert_array_equal(np.asarray(y), np.zeros(100))
+    back = dequantize_pallas(y, lo, hi, 4.0)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x))
+
+
+def test_quantize_error_bound():
+    x = rand(0, (4096,))
+    for c in [1, 2, 4, 8]:
+        got = fake_quant_pallas(x, float(c))
+        step = (float(jnp.max(x)) - float(jnp.min(x))) / (2**c - 1)
+        err = float(jnp.max(jnp.abs(got - x)))
+        assert err <= step / 2 + 1e-5, f"c={c}: {err} > {step / 2}"
+
+
+def test_quantize_monotone_in_c():
+    x = rand(1, (2048,))
+    errs = []
+    for c in range(1, 9):
+        got = fake_quant_pallas(x, float(c))
+        errs.append(float(jnp.max(jnp.abs(got - x))))
+    assert all(a >= b - 1e-6 for a, b in zip(errs, errs[1:])), errs
+
+
+def test_quantize_c_is_traceable():
+    """c must be usable as a traced scalar (runtime input of the AOT
+    artifact) — jit over c and compare against the eager path."""
+    x = rand(2, (1000,))
+    f = jax.jit(lambda xx, cc: fake_quant_pallas(xx, cc))
+    for c in [1.0, 3.0, 8.0]:
+        np.testing.assert_allclose(
+            np.asarray(f(x, c)), np.asarray(fake_quant_pallas(x, c)), atol=1e-6
+        )
+
+
+# ---------------------------------------------------------------- matmul/conv
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(min_value=1, max_value=200),
+    k=st.integers(min_value=1, max_value=150),
+    n=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rand(seed, (m, k), scale=1.0)
+    b = rand(seed + 1, (k, n), scale=1.0)
+    np.testing.assert_allclose(
+        np.asarray(matmul_pallas(a, b)),
+        np.asarray(ref.matmul_ref(a, b)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    hw=st.integers(min_value=4, max_value=20),
+    cin=st.integers(min_value=1, max_value=8),
+    cout=st.integers(min_value=1, max_value=8),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_conv2d_matches_ref(hw, cin, cout, k, stride, seed):
+    x = rand(seed, (1, hw, hw, cin), scale=1.0)
+    w = rand(seed + 7, (k, k, cin, cout), scale=1.0)
+    np.testing.assert_allclose(
+        np.asarray(conv2d_pallas(x, w, stride=stride)),
+        np.asarray(ref.conv2d_ref(x, w, stride=stride)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_conv2d_batch_dim():
+    x = rand(3, (4, 8, 8, 3), scale=1.0)
+    w = rand(4, (3, 3, 3, 5), scale=1.0)
+    np.testing.assert_allclose(
+        np.asarray(conv2d_pallas(x, w)),
+        np.asarray(ref.conv2d_ref(x, w)),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_bf16_inputs_accumulate_in_f32():
+    a = rand(5, (64, 64), jnp.bfloat16, scale=1.0)
+    b = rand(6, (64, 64), jnp.bfloat16, scale=1.0)
+    got = matmul_pallas(a, b)
+    assert got.dtype == jnp.float32
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-2)

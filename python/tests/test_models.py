@@ -1,0 +1,102 @@
+"""L2 correctness: stage slicing, shape plumbing, pallas/lax twin parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import MODEL_NAMES, NUM_CLASSES, build_model, init_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jax.random.normal(jax.random.PRNGKey(7), (1, 32, 32, 3))
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_stage_chain_equals_full_forward(name, x):
+    m = build_model(name)
+    y_full = m.forward(x)
+    y = x
+    for s in m.stages:
+        assert y.shape == s.in_shape, (name, s.name)
+        y = s.fn(y)
+        assert y.shape == s.out_shape, (name, s.name)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_full), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "name,expected",
+    [("vgg16", 16), ("vgg19", 19), ("resnet50", 18), ("resnet101", 35), ("tinyconv", 4)],
+)
+def test_decoupling_point_counts(name, expected):
+    """§III-A granularity: layer-wise VGG, unit-wise ResNet."""
+    assert len(build_model(name).stages) == expected
+
+
+@pytest.mark.parametrize("name", MODEL_NAMES)
+def test_logits_shape_and_finite(name, x):
+    y = np.asarray(build_model(name).forward(x))
+    assert y.shape == (1, NUM_CLASSES)
+    assert np.all(np.isfinite(y))
+
+
+@pytest.mark.parametrize("name", ["vgg16", "resnet50"])
+def test_forward_is_deterministic(name, x):
+    a = np.asarray(build_model(name).forward(x))
+    b = np.asarray(build_model(name).forward(x))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_data_amplification_exists(x):
+    """Paper Fig. 2: early in-layer features dwarf the 8-bit input."""
+    for name in ("vgg16", "resnet50"):
+        m = build_model(name)
+        input_rgb_bytes = 32 * 32 * 3  # 8-bit upload
+        first_feature_bytes = int(np.prod(m.stages[0].out_shape)) * 4
+        assert first_feature_bytes > 5 * input_rgb_bytes, name
+
+
+def test_tinyconv_pallas_lax_twins_agree(x):
+    params = init_params("tinyconv")
+    yp = build_model("tinyconv", params=params, use_pallas=True).forward(x)
+    yl = build_model("tinyconv", params=params, use_pallas=False).forward(x)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yl), rtol=1e-4, atol=1e-4)
+
+
+def test_forward_from_matches_suffix(x):
+    m = build_model("vgg16")
+    acts = [x]
+    for s in m.stages:
+        acts.append(s.fn(acts[-1]))
+    for start in [0, 5, len(m.stages) - 1]:
+        got = m.forward_from(acts[start], start)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(acts[-1]), rtol=1e-5)
+
+
+def test_params_control_the_function(x):
+    p1 = init_params("tinyconv")
+    m1 = build_model("tinyconv", params=p1, use_pallas=False)
+    m2 = build_model("tinyconv", params=None, use_pallas=False)  # same seed → same init
+    np.testing.assert_allclose(
+        np.asarray(m1.forward(x)), np.asarray(m2.forward(x)), rtol=1e-6
+    )
+    p1["fc"]["b"] = p1["fc"]["b"] + 1.0
+    m3 = build_model("tinyconv", params=p1, use_pallas=False)
+    assert not np.allclose(np.asarray(m3.forward(x)), np.asarray(m2.forward(x)))
+
+
+def test_fmacs_are_positive_and_plausible():
+    for name in MODEL_NAMES:
+        m = build_model(name)
+        total = sum(s.fmacs for s in m.stages)
+        assert all(s.fmacs > 0 for s in m.stages), name
+        # Scaled models: between 0.5M (tinyconv) and 1G MACs.
+        assert 5e5 < total < 1e9, (name, total)
+
+
+def test_unknown_model_rejected():
+    with pytest.raises(ValueError):
+        build_model("alexnet")

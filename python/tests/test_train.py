@@ -1,0 +1,54 @@
+"""Build-time training: param round-trip and (slow) learnability."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import train
+from compile.models import build_model, init_params
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_flatten_unflatten_roundtrip():
+    params = init_params("tinyconv")
+    flat = train._flatten(params)
+    assert all(isinstance(k, str) for k in flat)
+    back = train._unflatten(flat)
+    a = train._flatten(back)
+    assert set(a) == set(flat)
+    for k in flat:
+        np.testing.assert_array_equal(np.asarray(flat[k]), np.asarray(a[k]))
+
+
+def test_save_load_roundtrip(tmp_path):
+    params = init_params("tinyconv")
+    p = tmp_path / "t.npz"
+    train.save_params(params, str(p))
+    loaded = train.load_params(str(p))
+    x = jnp.ones((1, 32, 32, 3))
+    ya = build_model("tinyconv", params=params, use_pallas=False).forward(x)
+    yb = build_model("tinyconv", params=loaded, use_pallas=False).forward(x)
+    np.testing.assert_allclose(np.asarray(ya), np.asarray(yb), rtol=1e-6)
+
+
+def test_tinyconv_learns_quickly():
+    """A short run must clearly beat chance (1/16) — the signal that the
+    synthetic task is learnable at all."""
+    _, acc = train.train_model("tinyconv", steps=60, verbose=False)
+    assert acc > 0.5, f"accuracy {acc}"
+
+
+@pytest.mark.skipif(
+    not os.path.isdir(os.path.join(ARTIFACTS, "params")),
+    reason="run `make artifacts` first",
+)
+def test_cached_params_give_good_accuracy():
+    """The shipped artifacts must come from successfully trained models
+    (the fidelity experiments are meaningless on a chance-level net)."""
+    for name in ["vgg16", "vgg19", "resnet50", "resnet101", "tinyconv"]:
+        params = train.load_params(os.path.join(ARTIFACTS, "params", f"{name}.npz"))
+        acc = train.eval_accuracy(name, params)
+        assert acc > 0.5, f"{name}: eval accuracy {acc}"

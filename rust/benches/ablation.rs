@@ -1,0 +1,138 @@
+//! Ablations over JALAD's design choices (DESIGN.md §Perf):
+//!
+//! 1. **Wire format** — raw f32 vs quantize-only (bitpack) vs
+//!    quantize+Huffman (the paper's §III-B pipeline): how much each
+//!    stage of the codec buys on real mid-network features.
+//! 2. **Decision policy** — exact ILP vs greedy-by-layer vs fixed
+//!    late cut: predicted latency across a bandwidth sweep (does the
+//!    optimization matter, or would a heuristic do?).
+//! 3. **Adaptivity** — re-deciding per bandwidth vs freezing the
+//!    1 MBps plan while the link degrades (the Fig. 8 argument).
+//!
+//! Run: `cargo bench --bench ablation`
+
+use jalad::compression::{feature, quant};
+use jalad::coordinator::{DecisionEngine, Scale};
+use jalad::ilp::Decision;
+use jalad::predictor::Tables;
+use jalad::profiler::{DeviceModel, LatencyTables};
+use jalad::runtime::{Executor, Manifest};
+use jalad::util::bench::{print_table, Bencher};
+
+fn main() {
+    let dir = "artifacts";
+    let Ok(manifest) = Manifest::load(dir) else {
+        eprintln!("ablation: run `make artifacts` first — skipping");
+        return;
+    };
+    let exe = Executor::new(manifest).expect("PJRT client");
+    let mut b = Bencher::from_env();
+
+    // ---------- 1. wire format ablation on a real vgg16 feature ----------
+    let m = exe.manifest().model("vgg16").unwrap();
+    let x = jalad::data::gen::sample_image_shaped(4, 123, &m.input_shape.clone());
+    let mid = exe.run_stages("vgg16", 1, 3, &x).unwrap().tensor; // 16x16x16
+    let raw = mid.byte_size();
+    let mut rows = Vec::new();
+    for c in [2u8, 4, 8] {
+        let q = quant::quantize(mid.data(), c);
+        let packed = feature::bitpack(&q.values, c).len();
+        let wire = feature::encode(&q, 3, 0).len();
+        rows.push(vec![
+            format!("c={c}"),
+            format!("{raw}"),
+            format!("{packed} ({:.1}x)", raw as f64 / packed as f64),
+            format!("{wire} ({:.1}x)", raw as f64 / wire as f64),
+            format!("{:.2}x", packed as f64 / wire as f64),
+        ]);
+    }
+    print_table(
+        "Ablation 1 — wire bytes for vgg16 stage-3 features (raw → +quant → +huffman)",
+        &["bits", "raw f32", "quant+bitpack", "quant+huffman", "huffman gain"],
+        &rows,
+    );
+
+    // ---------- 2. decision policy ----------
+    let tables = Tables::load_or_build(&exe, "resnet50", dir).unwrap();
+    let latency =
+        LatencyTables::analytic("resnet50", DeviceModel::TEGRA_X2, DeviceModel::CLOUD_12T)
+            .unwrap();
+    let engine =
+        DecisionEngine::new("resnet50", tables, latency, Scale::Paper, 0.10).unwrap();
+    let greedy = |bw: f64| -> f64 {
+        // Greedy: deepest cut whose wire fits in one "slot" (common
+        // heuristic: minimize tx first, ignore compute balance), c = 4.
+        let inst = engine.instance(bw);
+        let mut best = f64::INFINITY;
+        for i in 1..=inst.n {
+            let t = inst.t_edge[i - 1] + inst.size[i - 1][3] / bw + inst.t_cloud[i - 1];
+            if inst.acc[i - 1][3] <= inst.delta_alpha {
+                best = best.min(t);
+            }
+        }
+        best
+    };
+    let fixed_late = |bw: f64| -> f64 {
+        let inst = engine.instance(bw);
+        let i = inst.n;
+        inst.t_edge[i - 1] + inst.size[i - 1][5] / bw + inst.t_cloud[i - 1]
+    };
+    let mut rows = Vec::new();
+    for bw_kb in [50.0, 300.0, 1000.0, 5000.0] {
+        let bw = bw_kb * 1000.0;
+        let ilp = engine.decide(bw).latency;
+        rows.push(vec![
+            format!("{bw_kb:.0}"),
+            format!("{:.2} ms", ilp * 1e3),
+            format!("{:.2} ms ({:+.0}%)", greedy(bw) * 1e3, (greedy(bw) / ilp - 1.0) * 100.0),
+            format!(
+                "{:.2} ms ({:+.0}%)",
+                fixed_late(bw) * 1e3,
+                (fixed_late(bw) / ilp - 1.0) * 100.0
+            ),
+        ]);
+    }
+    print_table(
+        "Ablation 2 — decision policy, resnet50 (predicted latency)",
+        &["BW KB/s", "ILP (ours)", "greedy c=4", "fixed last cut c=8"],
+        &rows,
+    );
+
+    // ---------- 3. adaptivity ----------
+    // Plan frozen on a fast link (≫ the cloud-only break-even, so it
+    // picks CloudOnly), then the link degrades under it — the situation
+    // Fig. 8's adaptivity argument targets.
+    let frozen = engine.decide(50_000_000.0);
+    let mut rows = Vec::new();
+    for bw_kb in [50.0, 100.0, 300.0, 1000.0] {
+        let bw = bw_kb * 1000.0;
+        let adaptive = engine.decide(bw).latency;
+        let frozen_lat = match frozen.decision {
+            Decision::CloudOnly => engine.cloud_only_latency(engine.image_png_bytes(), bw),
+            Decision::Cut { i, c } => {
+                engine.latency.t_edge[i - 1]
+                    + engine.wire_bytes(i, c).unwrap() / bw
+                    + engine.latency.t_cloud[i - 1]
+            }
+        };
+        rows.push(vec![
+            format!("{bw_kb:.0}"),
+            format!("{:.2} ms", adaptive * 1e3),
+            format!("{:.2} ms ({:+.0}%)", frozen_lat * 1e3, (frozen_lat / adaptive - 1.0) * 100.0),
+        ]);
+    }
+    print_table(
+        "Ablation 3 — adaptive re-decoupling vs plan frozen on a 50 MB/s link (resnet50)",
+        &["BW KB/s", "adaptive", "frozen"],
+        &rows,
+    );
+
+    // Timed variants of the two policies.
+    b.bench("ablation/decide_ilp", || {
+        std::hint::black_box(engine.decide(300_000.0));
+    });
+    b.bench("ablation/decide_greedy", || {
+        std::hint::black_box(greedy(300_000.0));
+    });
+    b.finish();
+}

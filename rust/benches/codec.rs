@@ -1,0 +1,82 @@
+//! Hot-path codec micro-benchmarks: the edge-side quantize → Huffman
+//! pipeline (JALAD's per-request added work) and the baseline image
+//! codecs. These are the numbers the §Perf pass optimizes.
+//!
+//! Run: `cargo bench --bench codec`
+
+use jalad::compression::{deflate, feature, huffman, jpeg, png, quant};
+use jalad::util::bench::Bencher;
+use jalad::util::rng::XorShift64Star;
+
+/// Post-ReLU-like sparse feature map.
+fn features(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = XorShift64Star::new(seed);
+    (0..n)
+        .map(|_| {
+            if rng.next_f64() < 0.55 {
+                0.0
+            } else {
+                (rng.next_gaussian_pair().0.abs() * 3.0) as f32
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    for n in [8_192usize, 65_536, 524_288] {
+        let xs = features(n, n as u64);
+        let bytes = n * 4;
+        b.bench_bytes(&format!("quantize/c4/{n}"), bytes, || {
+            std::hint::black_box(quant::quantize(&xs, 4));
+        });
+        let q = quant::quantize(&xs, 4);
+        b.bench_bytes(&format!("feature_encode/c4/{n}"), bytes, || {
+            std::hint::black_box(feature::encode(&q, 3, 0));
+        });
+        let wire = feature::encode(&q, 3, 0);
+        b.bench_bytes(&format!("feature_decode/c4/{n}"), wire.len(), || {
+            std::hint::black_box(feature::decode(&wire).unwrap());
+        });
+        b.bench_bytes(&format!("size_predict/c4/{n}"), bytes, || {
+            std::hint::black_box(feature::encoded_size(&q));
+        });
+    }
+
+    // Huffman core on an 8-bit alphabet.
+    let syms: Vec<u16> =
+        features(262_144, 9).iter().map(|&x| (x.min(255.0)) as u16).collect();
+    b.bench_bytes("huffman/encode_256k_syms", syms.len(), || {
+        std::hint::black_box(huffman::encode_block(&syms, 256));
+    });
+    let blk = huffman::encode_block(&syms, 256);
+    b.bench_bytes("huffman/decode_256k_syms", syms.len(), || {
+        std::hint::black_box(huffman::decode_block(&blk).unwrap());
+    });
+
+    // Image codecs on a synthetic 32x32 sample (what the baselines ship).
+    let img = {
+        let s = jalad::data::gen::sample_image(7, 32);
+        let rgb = jalad::data::gen::to_rgb8(&s.image);
+        png::Image8::new(32, 32, 3, rgb)
+    };
+    b.bench_bytes("png_like/encode_32x32", img.data.len(), || {
+        std::hint::black_box(png::encode(&img));
+    });
+    let p = png::encode(&img);
+    b.bench_bytes("png_like/decode_32x32", img.data.len(), || {
+        std::hint::black_box(png::decode(&p).unwrap());
+    });
+    b.bench_bytes("jpeg_like/encode_q50_32x32", img.data.len(), || {
+        std::hint::black_box(jpeg::encode(&img, 50));
+    });
+
+    // Deflate on structured bytes.
+    let text: Vec<u8> = b"in-layer feature maps demonstrate strong sparsity ".repeat(400);
+    b.bench_bytes("deflate/compress_20k_text", text.len(), || {
+        std::hint::black_box(deflate::compress(&text));
+    });
+
+    b.finish();
+}

@@ -1,0 +1,79 @@
+//! E8 — Fig. 8: execution latency under varying edge-cloud bandwidth,
+//! including a trace-driven adaptive run through the simulated channel
+//! (the paper's claim: JALAD stays flat by re-decoupling while the
+//! cloud-only baselines blow up at low bandwidth).
+//!
+//! Run: `cargo bench --bench fig8_bandwidth`
+
+use jalad::coordinator::{AdaptationController, DecisionEngine, Scale};
+use jalad::network::{BandwidthTrace, SimChannel};
+use jalad::predictor::Tables;
+use jalad::profiler::{DeviceModel, LatencyTables};
+use jalad::runtime::{Executor, Manifest};
+use jalad::util::bench::{print_table, Bencher};
+
+fn main() {
+    let dir = "artifacts";
+    let Ok(manifest) = Manifest::load(dir) else {
+        eprintln!("fig8_bandwidth: run `make artifacts` first — skipping");
+        return;
+    };
+    let exe = Executor::new(manifest).expect("PJRT client");
+    let model = "resnet50";
+    let tables = Tables::load_or_build(&exe, model, dir).expect("calibration");
+    let latency =
+        LatencyTables::analytic(model, DeviceModel::QUADRO_K620, DeviceModel::GTX_1080TI)
+            .unwrap();
+    let engine =
+        DecisionEngine::new(model, tables, latency, Scale::Paper, 0.10).unwrap();
+
+    // --- static sweep (the figure's x-axis) ---
+    let mut rows = Vec::new();
+    for bw_kb in [50.0, 100.0, 200.0, 300.0, 500.0, 1000.0, 1500.0, 2000.0] {
+        let bw = bw_kb * 1000.0;
+        let plan = engine.decide(bw);
+        let png = engine.cloud_only_latency(engine.image_png_bytes(), bw);
+        let origin = engine.cloud_only_latency(engine.image_raw_bytes(), bw);
+        rows.push(vec![
+            format!("{bw_kb:.0}"),
+            format!("{:.1}", plan.latency * 1e3),
+            format!("{:.1}", png * 1e3),
+            format!("{:.1}", origin * 1e3),
+            format!("{:?}", plan.decision),
+        ]);
+    }
+    print_table(
+        "Fig. 8 — resnet50 latency (ms) vs bandwidth (KB/s)",
+        &["BW", "JALAD", "PNG2Cloud", "Origin2Cloud", "decision"],
+        &rows,
+    );
+
+    // --- trace-driven adaptive run over the simulated channel ---
+    let trace = BandwidthTrace::step(100_000.0, 1_500_000.0, 5.0, 60.0);
+    let mut controller = AdaptationController::new(engine, trace.at(0.0));
+    let mut channel = SimChannel::new(trace, 0.0);
+    let mut total_latency = 0.0;
+    let mut replans = 0u32;
+    let requests = 200;
+    for _ in 0..requests {
+        let plan = controller.plan().clone();
+        // Simulated request: compute advances the clock, transfer pays BW.
+        channel.advance(plan.latency - plan.tx_bytes / channel.bandwidth_now());
+        let t = channel.transmit(plan.tx_bytes as usize);
+        total_latency += plan.latency.min(10.0);
+        if controller.observe_transfer(plan.tx_bytes as usize, t.max(1e-9)).is_some() {
+            replans += 1;
+        }
+    }
+    println!(
+        "adaptive trace run: {requests} requests, {replans} re-decouplings, mean predicted latency {:.1} ms\n",
+        total_latency / requests as f64 * 1e3
+    );
+
+    // Timed: the re-decision cost paid on every bandwidth change.
+    let mut b = Bencher::from_env();
+    b.bench("fig8/resolve_at_new_bandwidth", || {
+        std::hint::black_box(controller.resolve_at(777_000.0));
+    });
+    b.finish();
+}

@@ -1,0 +1,86 @@
+//! E11 support — the live request hot path, end to end and by component:
+//! stage execution (PJRT), Pallas quantize artifact vs rust twin,
+//! wire encode/decode, and the full in-process pipeline on TinyConv.
+//! This is the primary target of the §Perf optimization pass.
+//!
+//! Run: `cargo bench --bench pipeline_hotpath`
+
+use jalad::compression::{feature, quant};
+use jalad::coordinator::LocalPipeline;
+use jalad::ilp::Decision;
+use jalad::network::SimChannel;
+use jalad::runtime::{Executor, Manifest};
+use jalad::util::bench::Bencher;
+
+fn main() {
+    let dir = "artifacts";
+    let Ok(manifest) = Manifest::load(dir) else {
+        eprintln!("pipeline_hotpath: run `make artifacts` first — skipping");
+        return;
+    };
+    let exe = Executor::new(manifest).expect("PJRT client");
+    let mut b = Bencher::from_env();
+
+    let model = "tinyconv";
+    let s = jalad::data::gen::sample_image(1, 32);
+
+    // Per-stage PJRT execution.
+    let mut acts = vec![s.image.clone()];
+    let n = exe.manifest().model(model).unwrap().num_stages();
+    for i in 1..=n {
+        let out = exe.run_stage(model, i, &acts[i - 1]).unwrap();
+        acts.push(out.tensor);
+    }
+    for i in 1..=n {
+        let x = acts[i - 1].clone();
+        b.bench(&format!("stage_exec/{model}/{i}"), || {
+            std::hint::black_box(exe.run_stage(model, i, &x).unwrap());
+        });
+    }
+    b.bench(&format!("full_forward/{model}"), || {
+        std::hint::black_box(exe.run_full(model, &s.image).unwrap());
+    });
+
+    // L1 quantizer: PJRT Pallas artifact vs rust twin, same tensor.
+    let mid = acts[1].clone();
+    b.bench_bytes("quant/pjrt_pallas_artifact", mid.byte_size(), || {
+        std::hint::black_box(exe.run_quant(&mid, 4).unwrap());
+    });
+    b.bench_bytes("quant/rust_twin", mid.byte_size(), || {
+        std::hint::black_box(quant::quantize(mid.data(), 4));
+    });
+    let q = exe.run_quant(&mid, 4).unwrap();
+    b.bench_bytes("dequant/pjrt_pallas_artifact", mid.byte_size(), || {
+        std::hint::black_box(exe.run_dequant(&q, mid.shape()).unwrap());
+    });
+
+    // Wire frame.
+    b.bench_bytes("wire/encode", mid.byte_size(), || {
+        std::hint::black_box(feature::encode(&q, 2, 0));
+    });
+    let wire = feature::encode(&q, 2, 0);
+    b.bench_bytes("wire/decode", wire.len(), || {
+        std::hint::black_box(feature::decode(&wire).unwrap());
+    });
+
+    // Whole request through the in-process pipeline (1 MB/s channel).
+    let pipe = LocalPipeline::new(&exe, model);
+    let mut ch = SimChannel::constant(1_000_000.0);
+    b.bench("pipeline/e2e_cut2_c4", || {
+        std::hint::black_box(pipe.run(&s, Decision::Cut { i: 2, c: 4 }, &mut ch).unwrap());
+    });
+    b.bench("pipeline/e2e_cloud_only", || {
+        std::hint::black_box(pipe.run(&s, Decision::CloudOnly, &mut ch).unwrap());
+    });
+    {
+        let mut pipe2 = LocalPipeline::new(&exe, model);
+        pipe2.use_pjrt_codec = false;
+        b.bench("pipeline/e2e_cut2_c4_rust_codec", || {
+            std::hint::black_box(
+                pipe2.run(&s, Decision::Cut { i: 2, c: 4 }, &mut ch).unwrap(),
+            );
+        });
+    }
+
+    b.finish();
+}

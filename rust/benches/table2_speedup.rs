@@ -1,0 +1,61 @@
+//! E6 — Table II end-to-end: JALAD speedup vs PNG2Cloud / Origin2Cloud
+//! at 1 MBps and 300 KBps for the four paper models, in the paper's
+//! analytic methodology, plus the decide+plan hot path as a timed bench.
+//!
+//! Run: `cargo bench --bench table2_speedup`
+//! (requires `make artifacts`; calibration tables are cached on first use)
+
+use jalad::coordinator::{DecisionEngine, Scale};
+use jalad::predictor::Tables;
+use jalad::profiler::{DeviceModel, LatencyTables};
+use jalad::runtime::{Executor, Manifest};
+use jalad::util::bench::{print_table, Bencher};
+
+const MODELS: [&str; 4] = ["vgg16", "vgg19", "resnet50", "resnet101"];
+
+fn main() {
+    let dir = "artifacts";
+    let Ok(manifest) = Manifest::load(dir) else {
+        eprintln!("table2_speedup: run `make artifacts` first — skipping");
+        return;
+    };
+    let exe = Executor::new(manifest).expect("PJRT client");
+    let mut b = Bencher::from_env();
+
+    let mut rows = Vec::new();
+    let mut engines = Vec::new();
+    for model in MODELS {
+        let tables = Tables::load_or_build(&exe, model, dir).expect("calibration");
+        let latency =
+            LatencyTables::analytic(model, DeviceModel::QUADRO_K620, DeviceModel::GTX_1080TI)
+                .unwrap();
+        let engine =
+            DecisionEngine::new(model, tables, latency, Scale::Paper, 0.10).unwrap();
+        let mut row = vec![model.to_string()];
+        for bw in [1_000_000.0, 300_000.0] {
+            let plan = engine.decide(bw);
+            let png = engine.cloud_only_latency(engine.image_png_bytes(), bw);
+            let origin = engine.cloud_only_latency(engine.image_raw_bytes(), bw);
+            row.push(format!("{:.1}x/{:.1}x", png / plan.latency, origin / plan.latency));
+        }
+        rows.push(row);
+        engines.push(engine);
+    }
+    print_table(
+        "Table II — execution speedup (PNG2Cloud/Origin2Cloud), Δα = 10%",
+        &["model", "1MBps", "300KBps"],
+        &rows,
+    );
+    println!(
+        "paper: VGG16 1.4/2.2 | 3.6/6.0   VGG19 1.1/1.7 | 3.0/4.9\n\
+         paper: Res50 2.3/3.7 | 7.2/11.7  Res101 1.5/2.3 | 4.3/6.9\n"
+    );
+
+    // The decision hot path itself (table construction + ILP).
+    for (model, engine) in MODELS.iter().zip(&engines) {
+        b.bench(&format!("table2/decide/{model}"), || {
+            std::hint::black_box(engine.decide(300_000.0));
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,75 @@
+//! E9 — Table III: impact of edge compute power (Tegra K1 vs Tegra X2,
+//! 12 TFLOPs cloud, 1 MBps), the paper's simulation experiment with its
+//! own constants (§IV-A: F_C=12T, F_E∈{300G, 2T}, w_e=1.1176,
+//! w_c=2.1761).
+//!
+//! Run: `cargo bench --bench table3_edge_power`
+
+use jalad::coordinator::{DecisionEngine, Scale};
+use jalad::ilp::Decision;
+use jalad::predictor::Tables;
+use jalad::profiler::{DeviceModel, LatencyTables};
+use jalad::runtime::{Executor, Manifest};
+use jalad::util::bench::{print_table, Bencher};
+
+const MODELS: [&str; 4] = ["vgg16", "vgg19", "resnet50", "resnet101"];
+const BW: f64 = 1_000_000.0;
+
+fn main() {
+    let dir = "artifacts";
+    let Ok(manifest) = Manifest::load(dir) else {
+        eprintln!("table3_edge_power: run `make artifacts` first — skipping");
+        return;
+    };
+    let exe = Executor::new(manifest).expect("PJRT client");
+    let mut b = Bencher::from_env();
+
+    let mut rows = Vec::new();
+    for edge in [DeviceModel::TEGRA_K1, DeviceModel::TEGRA_X2] {
+        for model in MODELS {
+            let tables = Tables::load_or_build(&exe, model, dir).expect("calibration");
+            let latency =
+                LatencyTables::analytic(model, edge, DeviceModel::CLOUD_12T).unwrap();
+            let engine =
+                DecisionEngine::new(model, tables, latency, Scale::Paper, 0.10).unwrap();
+            let plan = engine.decide(BW);
+            let png = engine.cloud_only_latency(engine.image_png_bytes(), BW);
+            let origin = engine.cloud_only_latency(engine.image_raw_bytes(), BW);
+            let cut = match plan.decision {
+                Decision::CloudOnly => "cloud-only".to_string(),
+                Decision::Cut { i, c } => format!("cut@{i},c={c}"),
+            };
+            rows.push(vec![
+                edge.name.to_string(),
+                model.to_string(),
+                format!("{:.1}x/{:.1}x", png / plan.latency, origin / plan.latency),
+                cut,
+                format!("{:.1} ms", plan.latency * 1e3),
+            ]);
+        }
+    }
+    print_table(
+        "Table III — speedup by edge device (PNG2Cloud/Origin2Cloud), 1 MBps, Δα = 10%",
+        &["edge", "model", "speedup", "decision", "latency"],
+        &rows,
+    );
+    println!(
+        "paper: K1: 1.0/1.5  1.0/1.5  2.2/3.7   1.4/2.3\n\
+         paper: X2: 3.4/5.5  2.9/4.7  15.1/25.1 9.0/14.9\n\
+         shape: X2 ≫ K1; ResNets gain most; weak edges pin VGG to ~1x.\n"
+    );
+
+    // Timed: full engine construction (tables cached) per device swap —
+    // what a fleet controller pays to re-target a device class.
+    let tables = Tables::load_or_build(&exe, "resnet50", dir).unwrap();
+    b.bench("table3/engine_build/resnet50", || {
+        let latency =
+            LatencyTables::analytic("resnet50", DeviceModel::TEGRA_K1, DeviceModel::CLOUD_12T)
+                .unwrap();
+        std::hint::black_box(
+            DecisionEngine::new("resnet50", tables.clone(), latency, Scale::Paper, 0.10)
+                .unwrap(),
+        );
+    });
+    b.finish();
+}

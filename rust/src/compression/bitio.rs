@@ -1,0 +1,192 @@
+//! LSB-first bit-level reader/writer over byte buffers.
+//!
+//! Shared by the Huffman coder, the c-bit packer in the feature codec and
+//! the deflate-like container. LSB-first (like DEFLATE): the first bit
+//! written lands in bit 0 of byte 0.
+
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `value` (n ≤ 57).
+    #[inline]
+    pub fn write(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 57);
+        debug_assert!(n == 64 || value < (1u64 << n.max(1)) || n == 0);
+        self.acc |= value << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.buf.push((self.acc & 0xff) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Number of complete bytes plus any partial byte once finished.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush the partial byte (zero-padded) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push((self.acc & 0xff) as u8);
+        }
+        self.buf
+    }
+}
+
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    byte: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub struct OutOfBits;
+
+impl std::fmt::Display for OutOfBits {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "bit stream exhausted")
+    }
+}
+impl std::error::Error for OutOfBits {}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, byte: 0, acc: 0, nbits: 0 }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.nbits <= 56 && self.byte < self.buf.len() {
+            self.acc |= (self.buf[self.byte] as u64) << self.nbits;
+            self.byte += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Read `n` bits (n ≤ 57). Bits beyond the buffer are an error.
+    #[inline]
+    pub fn read(&mut self, n: u32) -> Result<u64, OutOfBits> {
+        debug_assert!(n <= 57);
+        if n == 0 {
+            return Ok(0);
+        }
+        self.refill();
+        if self.nbits < n {
+            return Err(OutOfBits);
+        }
+        let v = self.acc & ((1u64 << n) - 1);
+        self.acc >>= n;
+        self.nbits -= n;
+        Ok(v)
+    }
+
+    /// Peek up to `n` bits without consuming (short reads near the end
+    /// return the available bits zero-padded).
+    #[inline]
+    pub fn peek(&mut self, n: u32) -> u64 {
+        self.refill();
+        if n == 0 {
+            return 0;
+        }
+        self.acc & ((1u64 << n) - 1)
+    }
+
+    /// Consume `n` bits previously peeked.
+    #[inline]
+    pub fn consume(&mut self, n: u32) -> Result<(), OutOfBits> {
+        if self.nbits < n {
+            return Err(OutOfBits);
+        }
+        self.acc >>= n;
+        self.nbits -= n;
+        Ok(())
+    }
+
+    /// Bits still available.
+    pub fn remaining_bits(&self) -> usize {
+        (self.buf.len() - self.byte) * 8 + self.nbits as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.write(0b101, 3);
+        w.write(0xff, 8);
+        w.write(0, 1);
+        w.write(0x1234, 16);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3).unwrap(), 0b101);
+        assert_eq!(r.read(8).unwrap(), 0xff);
+        assert_eq!(r.read(1).unwrap(), 0);
+        assert_eq!(r.read(16).unwrap(), 0x1234);
+    }
+
+    #[test]
+    fn lsb_first_layout() {
+        let mut w = BitWriter::new();
+        w.write(1, 1); // bit 0 of byte 0
+        w.write(0, 6);
+        w.write(1, 1); // bit 7 of byte 0
+        assert_eq!(w.finish(), vec![0b1000_0001]);
+    }
+
+    #[test]
+    fn out_of_bits() {
+        let bytes = [0u8; 1];
+        let mut r = BitReader::new(&bytes);
+        assert!(r.read(8).is_ok());
+        assert_eq!(r.read(1), Err(OutOfBits));
+    }
+
+    #[test]
+    fn peek_consume() {
+        let mut w = BitWriter::new();
+        w.write(0b1101, 4);
+        let b = w.finish();
+        let mut r = BitReader::new(&b);
+        assert_eq!(r.peek(4) & 0xf, 0b1101);
+        r.consume(2).unwrap();
+        assert_eq!(r.read(2).unwrap(), 0b11);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_widths() {
+        prop::check(
+            "bitio roundtrip",
+            prop::vec_of(
+                prop::pair(prop::u64_in(0, u32::MAX as u64), prop::u64_in(1, 32)),
+                1,
+                200,
+            ),
+            |items| {
+                let mut w = BitWriter::new();
+                for (v, n) in items {
+                    w.write(v & ((1u64 << n) - 1), *n as u32);
+                }
+                let bytes = w.finish();
+                let mut r = BitReader::new(&bytes);
+                items.iter().all(|(v, n)| r.read(*n as u32).unwrap() == v & ((1u64 << n) - 1))
+            },
+        );
+    }
+}

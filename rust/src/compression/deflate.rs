@@ -1,0 +1,236 @@
+//! Deflate-like container: LZ77 tokens entropy-coded with two canonical
+//! Huffman alphabets (literal/length + distance).
+//!
+//! Not bit-compatible with RFC 1951 — both ends are ours — but it uses
+//! the same alphabet construction (length/distance bucketed into
+//! base+extra-bits symbols), so compression ratios land in the same band
+//! as real DEFLATE. Backs the PNG-like baseline codec and is available
+//! as an optional second stage of the feature codec.
+
+use super::bitio::{BitReader, BitWriter};
+use super::huffman::{Decoder, Encoder, HuffError};
+use super::lz77::{self, Token};
+
+/// Literal/length alphabet: 0..=255 literals, 256 = end, 257..=285 length buckets.
+const SYM_END: usize = 256;
+const LEN_SYMS: usize = 286;
+const DIST_SYMS: usize = 30;
+
+// RFC 1951 length buckets: (base, extra_bits) for symbols 257..285.
+const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+const LEN_EXTRA: [u8; 29] =
+    [0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0];
+
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+
+fn len_symbol(len: u16) -> (usize, u16, u8) {
+    debug_assert!((3..=258).contains(&len));
+    let mut s = 28;
+    for i in 0..29 {
+        if len < LEN_BASE[i] {
+            s = i - 1;
+            break;
+        }
+        if len == LEN_BASE[i] {
+            s = i;
+            break;
+        }
+        s = i;
+    }
+    (257 + s, len - LEN_BASE[s], LEN_EXTRA[s])
+}
+
+fn dist_symbol(dist: u16) -> (usize, u16, u8) {
+    debug_assert!(dist >= 1);
+    let mut s = DIST_SYMS - 1;
+    for i in 0..DIST_SYMS {
+        if (dist as u32) < DIST_BASE[i] as u32 {
+            s = i - 1;
+            break;
+        }
+        s = i;
+    }
+    (s, dist - DIST_BASE[s], DIST_EXTRA[s])
+}
+
+/// Compress bytes; output layout:
+/// [orig_len u32][litlen lengths 286×u4][dist lengths 30×u4][payload bits].
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let tokens = lz77::compress(data);
+
+    let mut lit_freq = vec![0u64; LEN_SYMS];
+    let mut dist_freq = vec![0u64; DIST_SYMS];
+    lit_freq[SYM_END] = 1;
+    for t in &tokens {
+        match *t {
+            Token::Literal(b) => lit_freq[b as usize] += 1,
+            Token::Match { len, dist } => {
+                lit_freq[len_symbol(len).0] += 1;
+                dist_freq[dist_symbol(dist).0] += 1;
+            }
+        }
+    }
+    // Guarantee at least one distance code so the decoder table is valid.
+    if dist_freq.iter().all(|&f| f == 0) {
+        dist_freq[0] = 1;
+    }
+
+    let lit_enc = Encoder::from_freqs(&lit_freq);
+    let dist_enc = Encoder::from_freqs(&dist_freq);
+
+    let mut w = BitWriter::new();
+    w.write(data.len() as u64, 32);
+    for &l in lit_enc.lengths() {
+        w.write(l as u64, 4);
+    }
+    for &l in dist_enc.lengths() {
+        w.write(l as u64, 4);
+    }
+    for t in &tokens {
+        match *t {
+            Token::Literal(b) => lit_enc.encode(&mut w, b as usize),
+            Token::Match { len, dist } => {
+                let (ls, lex, leb) = len_symbol(len);
+                lit_enc.encode(&mut w, ls);
+                w.write(lex as u64, leb as u32);
+                let (ds, dex, deb) = dist_symbol(dist);
+                dist_enc.encode(&mut w, ds);
+                w.write(dex as u64, deb as u32);
+            }
+        }
+    }
+    lit_enc.encode(&mut w, SYM_END);
+    w.finish()
+}
+
+pub fn decompress(bytes: &[u8]) -> Result<Vec<u8>, HuffError> {
+    let mut r = BitReader::new(bytes);
+    let orig_len = r.read(32)? as usize;
+    let mut lit_lengths = vec![0u8; LEN_SYMS];
+    for l in lit_lengths.iter_mut() {
+        *l = r.read(4)? as u8;
+    }
+    let mut dist_lengths = vec![0u8; DIST_SYMS];
+    for l in dist_lengths.iter_mut() {
+        *l = r.read(4)? as u8;
+    }
+    let lit_dec = Decoder::from_lengths(&lit_lengths)?;
+    let dist_dec = Decoder::from_lengths(&dist_lengths)?;
+
+    let mut out: Vec<u8> = Vec::with_capacity(orig_len);
+    loop {
+        let sym = lit_dec.decode(&mut r)? as usize;
+        if sym < 256 {
+            out.push(sym as u8);
+        } else if sym == SYM_END {
+            break;
+        } else {
+            let li = sym - 257;
+            if li >= 29 {
+                return Err(HuffError::BadCode);
+            }
+            let len = LEN_BASE[li] as usize + r.read(LEN_EXTRA[li] as u32)? as usize;
+            let ds = dist_dec.decode(&mut r)? as usize;
+            if ds >= DIST_SYMS {
+                return Err(HuffError::BadCode);
+            }
+            let dist = DIST_BASE[ds] as usize + r.read(DIST_EXTRA[ds] as u32)? as usize;
+            if dist == 0 || dist > out.len() {
+                return Err(HuffError::BadCode);
+            }
+            let start = out.len() - dist;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+        if out.len() > orig_len {
+            return Err(HuffError::BadCode);
+        }
+    }
+    if out.len() != orig_len {
+        return Err(HuffError::Truncated);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn roundtrip(data: &[u8]) -> bool {
+        decompress(&compress(data)).as_deref() == Ok(data)
+    }
+
+    #[test]
+    fn empty() {
+        assert!(roundtrip(b""));
+    }
+
+    #[test]
+    fn text_compresses() {
+        // The fixed header (286+30 length nibbles ≈ 162 B) means only
+        // inputs comfortably above ~200 B can shrink; use a long text.
+        let data: Vec<u8> =
+            b"the quick brown fox jumps over the lazy dog. ".repeat(30).to_vec();
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 3, "{} vs {}", c.len(), data.len());
+        assert!(roundtrip(&data));
+    }
+
+    #[test]
+    fn len_symbol_buckets() {
+        assert_eq!(len_symbol(3), (257, 0, 0));
+        assert_eq!(len_symbol(10), (264, 0, 0));
+        assert_eq!(len_symbol(11), (265, 0, 1));
+        assert_eq!(len_symbol(12), (265, 1, 1));
+        assert_eq!(len_symbol(258), (285, 0, 0));
+    }
+
+    #[test]
+    fn dist_symbol_buckets() {
+        assert_eq!(dist_symbol(1), (0, 0, 0));
+        assert_eq!(dist_symbol(4), (3, 0, 0));
+        assert_eq!(dist_symbol(5), (4, 0, 1));
+        assert_eq!(dist_symbol(24577), (29, 0, 13));
+        assert_eq!(dist_symbol(32768), (29, 8191, 13));
+    }
+
+    #[test]
+    fn corrupt_stream_never_panics() {
+        // Bit-flip every byte position in turn: decompress must return
+        // (Ok or Err) without panicking or looping.
+        let data: Vec<u8> = (0..400u32).map(|i| (i * 7 % 256) as u8).collect();
+        let c = compress(&data);
+        for pos in 0..c.len() {
+            let mut bad = c.clone();
+            bad[pos] ^= 0x55;
+            let _ = decompress(&bad);
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        prop::check("deflate roundtrip random", prop::bytes(0, 4000), |d| roundtrip(d));
+    }
+
+    #[test]
+    fn prop_roundtrip_structured() {
+        prop::check(
+            "deflate roundtrip structured",
+            prop::vec_of(prop::u64_in(0, 7).map(|x| (x * 31) as u8), 0, 6000),
+            |d| roundtrip(d),
+        );
+    }
+}

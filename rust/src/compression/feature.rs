@@ -1,0 +1,276 @@
+//! Feature-map wire codec — what the edge actually transmits (§III-B).
+//!
+//! Payload pipeline: c-bit quantized integers → canonical Huffman
+//! (sparsity makes this win big) with a bit-packed fallback when Huffman
+//! would expand (dense high-entropy maps at large c). A 24-byte header
+//! carries everything the cloud needs to reconstruct:
+//!
+//! ```text
+//! magic  u16  = 0x4A4C ("JL")
+//! mode   u8   (0 = huffman, 1 = bitpack)
+//! c      u8
+//! n      u32  element count
+//! lo     f32  affine range min
+//! hi     f32  affine range max
+//! stage  u16  decoupling stage index (for the cloud dispatcher)
+//! model  u16  model id
+//! len    u32  payload byte length
+//! ```
+
+use super::bitio::{BitReader, BitWriter};
+use super::huffman;
+use super::quant::Quantized;
+
+pub const MAGIC: u16 = 0x4A4C;
+pub const HEADER_BYTES: usize = 24;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Huffman = 0,
+    BitPack = 1,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub mode: Mode,
+    pub c: u8,
+    pub lo: f32,
+    pub hi: f32,
+    pub stage: u16,
+    pub model: u16,
+    pub values: Vec<u16>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    BadMagic,
+    BadHeader,
+    Truncated,
+    Corrupt(&'static str),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}", self)
+    }
+}
+impl std::error::Error for CodecError {}
+
+/// Pack quantized values with plain c-bit fields (no entropy coding).
+pub fn bitpack(values: &[u16], c: u8) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    for &v in values {
+        w.write(v as u64, c as u32);
+    }
+    w.finish()
+}
+
+pub fn bitunpack(bytes: &[u8], c: u8, n: usize) -> Result<Vec<u16>, CodecError> {
+    let mut r = BitReader::new(bytes);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.read(c as u32).map_err(|_| CodecError::Truncated)? as u16);
+    }
+    Ok(out)
+}
+
+/// Encode a quantized feature map into a self-describing wire frame.
+///
+/// Mode selection uses the exact size predictor (one histogram pass) so
+/// only the winning representation is materialized — building both and
+/// discarding one cost ~2× on the edge's encode path (§Perf log). Dense
+/// high-entropy maps at large c fall back to plain bit-packing.
+pub fn encode(q: &Quantized, stage: u16, model: u16) -> Vec<u8> {
+    let alphabet = (1usize << q.c).max(2);
+    let mut freqs = vec![0u64; alphabet];
+    for &v in &q.values {
+        freqs[v as usize] += 1;
+    }
+    let enc = huffman::Encoder::from_freqs(&freqs);
+    let payload_bits: u64 =
+        freqs.iter().enumerate().map(|(s, &f)| f * enc.cost_bits(s) as u64).sum();
+    let header_bits = 16 + alphabet as u64 * 4 + 32;
+    let huff_bytes = ((payload_bits + header_bits) as usize).div_ceil(8);
+    let packed_bytes = (q.values.len() * q.c as usize).div_ceil(8);
+
+    let (mode, payload) = if huff_bytes <= packed_bytes {
+        (Mode::Huffman, huffman::encode_block_with(&enc, &q.values, alphabet))
+    } else {
+        (Mode::BitPack, bitpack(&q.values, q.c))
+    };
+
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.push(mode as u8);
+    out.push(q.c);
+    out.extend_from_slice(&(q.values.len() as u32).to_le_bytes());
+    out.extend_from_slice(&q.lo.to_le_bytes());
+    out.extend_from_slice(&q.hi.to_le_bytes());
+    out.extend_from_slice(&stage.to_le_bytes());
+    out.extend_from_slice(&model.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Size in bytes [`encode`] would produce, without producing it.
+/// Used by the `S_i(c)` predictor builder (§III-C) on the calibration path.
+pub fn encoded_size(q: &Quantized) -> usize {
+    let alphabet = (1usize << q.c).max(2);
+    let mut freqs = vec![0u64; alphabet];
+    for &v in &q.values {
+        freqs[v as usize] += 1;
+    }
+    let enc = huffman::Encoder::from_freqs(&freqs);
+    let payload_bits: u64 =
+        freqs.iter().enumerate().map(|(s, &f)| f * enc.cost_bits(s) as u64).sum();
+    let header_bits = 16 + alphabet as u64 * 4 + 32;
+    let huff_bytes = ((payload_bits + header_bits) as usize).div_ceil(8);
+    let packed_bytes = (q.values.len() * q.c as usize).div_ceil(8);
+    HEADER_BYTES + huff_bytes.min(packed_bytes)
+}
+
+/// Decode a wire frame. The caller dequantizes via `quant::dequantize`
+/// or the PJRT dequant artifact.
+pub fn decode(bytes: &[u8]) -> Result<Frame, CodecError> {
+    if bytes.len() < HEADER_BYTES {
+        return Err(CodecError::Truncated);
+    }
+    let magic = u16::from_le_bytes([bytes[0], bytes[1]]);
+    if magic != MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    let mode = match bytes[2] {
+        0 => Mode::Huffman,
+        1 => Mode::BitPack,
+        _ => return Err(CodecError::BadHeader),
+    };
+    let c = bytes[3];
+    if !(1..=16).contains(&c) {
+        return Err(CodecError::BadHeader);
+    }
+    let n = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let lo = f32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    let hi = f32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    let stage = u16::from_le_bytes(bytes[16..18].try_into().unwrap());
+    let model = u16::from_le_bytes(bytes[18..20].try_into().unwrap());
+    let plen = u32::from_le_bytes(bytes[20..24].try_into().unwrap()) as usize;
+    let payload = bytes.get(HEADER_BYTES..HEADER_BYTES + plen).ok_or(CodecError::Truncated)?;
+
+    let values = match mode {
+        Mode::Huffman => {
+            let v = huffman::decode_block(payload).map_err(|_| CodecError::Corrupt("huffman"))?;
+            if v.len() != n {
+                return Err(CodecError::Corrupt("length mismatch"));
+            }
+            v
+        }
+        Mode::BitPack => bitunpack(payload, c, n)?,
+    };
+    let maxv = super::quant::qmax(c) as u16;
+    if values.iter().any(|&v| v > maxv) {
+        return Err(CodecError::Corrupt("value exceeds 2^c-1"));
+    }
+    Ok(Frame { mode, c, lo, hi, stage, model, values })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::quant;
+    use crate::util::prop;
+
+    fn sample_features(n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| if i % 3 == 0 { 0.0 } else { ((i * 2654435761) % 1000) as f32 / 100.0 })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_all_c() {
+        let xs = sample_features(4096);
+        for c in 1..=8u8 {
+            let q = quant::quantize(&xs, c);
+            let wire = encode(&q, 7, 2);
+            let frame = decode(&wire).unwrap();
+            assert_eq!(frame.values, q.values, "c={c}");
+            assert_eq!(frame.c, c);
+            assert_eq!(frame.stage, 7);
+            assert_eq!(frame.model, 2);
+            assert_eq!(frame.lo, q.lo);
+            assert_eq!(frame.hi, q.hi);
+        }
+    }
+
+    #[test]
+    fn encoded_size_is_exact() {
+        let xs = sample_features(10_000);
+        for c in [1u8, 2, 4, 8] {
+            let q = quant::quantize(&xs, c);
+            assert_eq!(encoded_size(&q), encode(&q, 0, 0).len(), "c={c}");
+        }
+    }
+
+    #[test]
+    fn sparse_maps_beat_bitpack() {
+        // 95% zeros at c=8: Huffman ≈ n·0.3 bits ≪ bitpack n·8 bits.
+        let xs: Vec<f32> =
+            (0..20_000).map(|i| if i % 20 == 0 { (i % 97) as f32 } else { 0.0 }).collect();
+        let q = quant::quantize(&xs, 8);
+        let wire = encode(&q, 0, 0);
+        assert!(wire.len() < 20_000 / 2, "wire {} bytes", wire.len());
+        assert_eq!(decode(&wire).unwrap().values, q.values);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let xs = sample_features(64);
+        let mut wire = encode(&quant::quantize(&xs, 4), 0, 0);
+        wire[0] = 0;
+        assert_eq!(decode(&wire), Err(CodecError::BadMagic));
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let xs = sample_features(64);
+        let wire = encode(&quant::quantize(&xs, 4), 0, 0);
+        for cut in [0, 5, HEADER_BYTES, wire.len() - 1] {
+            assert!(decode(&wire[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        prop::check(
+            "feature frame roundtrip",
+            prop::pair(prop::sparse_features(1, 4096), prop::u64_in(1, 8)),
+            |(xs, c)| {
+                let q = quant::quantize(xs, *c as u8);
+                let frame = decode(&encode(&q, 3, 1)).unwrap();
+                frame.values == q.values && frame.lo == q.lo && frame.hi == q.hi
+            },
+        );
+    }
+
+    #[test]
+    fn prop_end_to_end_reconstruction_error() {
+        prop::check(
+            "wire roundtrip preserves quantizer error bound",
+            prop::pair(prop::sparse_features(2, 2048), prop::u64_in(2, 8)),
+            |(xs, c)| {
+                let c = *c as u8;
+                let q = quant::quantize(xs, c);
+                let frame = decode(&encode(&q, 0, 0)).unwrap();
+                let rq = quant::Quantized {
+                    values: frame.values.clone(),
+                    lo: frame.lo,
+                    hi: frame.hi,
+                    c: frame.c,
+                };
+                let rec = quant::dequantize(&rq);
+                let bound = quant::error_bound(q.lo, q.hi, c) * 1.0001 + 1e-6;
+                xs.iter().zip(&rec).all(|(a, b)| (a - b).abs() <= bound)
+            },
+        );
+    }
+}

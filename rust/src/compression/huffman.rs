@@ -1,0 +1,391 @@
+//! Canonical Huffman coding — JALAD's entropy coder (paper §III-B:
+//! "We introduce Huffman Coding to further compress the quantized
+//! integer feature maps").
+//!
+//! * Code lengths come from a binary heap merge; if the longest code
+//!   exceeds [`MAX_BITS`] the frequencies are damped (`f/2+1`) and the
+//!   tree rebuilt (zlib's classic trick — terminates quickly).
+//! * Codes are *canonical*: only the length table is stored in the
+//!   stream header, codes are reconstructed on both sides.
+//! * Decoding is table-driven: one [`LOOKUP_BITS`]-wide table resolves
+//!   most symbols in a single probe; longer codes fall back to the
+//!   per-length canonical walk.
+
+use super::bitio::{BitReader, BitWriter, OutOfBits};
+
+pub const MAX_BITS: u32 = 15;
+const LOOKUP_BITS: u32 = 10;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HuffError {
+    Truncated,
+    BadHeader,
+    BadCode,
+}
+
+impl std::fmt::Display for HuffError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}", self)
+    }
+}
+
+impl std::error::Error for HuffError {}
+
+impl From<OutOfBits> for HuffError {
+    fn from(_: OutOfBits) -> Self {
+        HuffError::Truncated
+    }
+}
+
+/// Compute canonical code lengths for `freqs` (0 freq → no code).
+pub fn code_lengths(freqs: &[u64]) -> Vec<u8> {
+    let mut freqs: Vec<u64> = freqs.to_vec();
+    loop {
+        let lengths = tree_lengths(&freqs);
+        let max = lengths.iter().copied().max().unwrap_or(0);
+        if (max as u32) <= MAX_BITS {
+            return lengths;
+        }
+        // Damp and retry: flattens the distribution, shortening the tree.
+        for f in freqs.iter_mut() {
+            if *f > 0 {
+                *f = *f / 2 + 1;
+            }
+        }
+    }
+}
+
+fn tree_lengths(freqs: &[u64]) -> Vec<u8> {
+    let n = freqs.len();
+    let mut lengths = vec![0u8; n];
+    let active: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+    match active.len() {
+        0 => return lengths,
+        1 => {
+            lengths[active[0]] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+    // Nodes: leaves 0..n, internal nodes appended. parent[] tracks the merge tree.
+    let mut heap = std::collections::BinaryHeap::new();
+    let mut parent: Vec<usize> = vec![usize::MAX; n];
+    for &i in &active {
+        heap.push(std::cmp::Reverse((freqs[i], i)));
+    }
+    let mut node_freq: Vec<u64> = freqs.to_vec();
+    while heap.len() > 1 {
+        let std::cmp::Reverse((fa, a)) = heap.pop().unwrap();
+        let std::cmp::Reverse((fb, b)) = heap.pop().unwrap();
+        let id = node_freq.len();
+        node_freq.push(fa + fb);
+        parent.push(usize::MAX);
+        parent[a] = id;
+        parent[b] = id;
+        heap.push(std::cmp::Reverse((fa + fb, id)));
+    }
+    for &i in &active {
+        let mut d = 0u8;
+        let mut cur = i;
+        while parent[cur] != usize::MAX {
+            cur = parent[cur];
+            d += 1;
+        }
+        lengths[i] = d;
+    }
+    lengths
+}
+
+/// Canonical code assignment: shorter codes first, ties by symbol index.
+pub fn canonical_codes(lengths: &[u8]) -> Vec<u32> {
+    let mut bl_count = [0u32; (MAX_BITS + 1) as usize];
+    for &l in lengths {
+        if l > 0 {
+            bl_count[l as usize] += 1;
+        }
+    }
+    let mut next_code = [0u32; (MAX_BITS + 2) as usize];
+    let mut code = 0u32;
+    for bits in 1..=MAX_BITS as usize {
+        code = (code + bl_count[bits - 1]) << 1;
+        next_code[bits] = code;
+    }
+    lengths
+        .iter()
+        .map(|&l| {
+            if l == 0 {
+                0
+            } else {
+                let c = next_code[l as usize];
+                next_code[l as usize] += 1;
+                c
+            }
+        })
+        .collect()
+}
+
+/// Encoder: symbol → (code, length), written MSB-first within the code so
+/// canonical ordering is preserved on the LSB-first bit stream.
+///
+/// Perf note (§Perf log): codes are bit-reversed once at construction —
+/// doing `reverse_bits` per encoded symbol cost ~25% of encode time.
+#[derive(Debug, Clone)]
+pub struct Encoder {
+    /// Pre-reversed codes, ready for the LSB-first writer.
+    rev_codes: Vec<u32>,
+    lengths: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn from_freqs(freqs: &[u64]) -> Self {
+        let lengths = code_lengths(freqs);
+        Self::from_lengths(lengths)
+    }
+
+    pub fn from_lengths(lengths: Vec<u8>) -> Self {
+        let codes = canonical_codes(&lengths);
+        let rev_codes = codes
+            .iter()
+            .zip(&lengths)
+            .map(|(&c, &l)| if l == 0 { 0 } else { c.reverse_bits() >> (32 - l as u32) })
+            .collect();
+        Self { rev_codes, lengths }
+    }
+
+    pub fn lengths(&self) -> &[u8] {
+        &self.lengths
+    }
+
+    #[inline]
+    pub fn encode(&self, w: &mut BitWriter, sym: usize) {
+        let len = self.lengths[sym] as u32;
+        debug_assert!(len > 0, "encoding symbol {sym} with no code");
+        w.write(self.rev_codes[sym] as u64, len);
+    }
+
+    /// Encoded size in bits of `sym` (for size prediction without coding).
+    #[inline]
+    pub fn cost_bits(&self, sym: usize) -> u32 {
+        self.lengths[sym] as u32
+    }
+}
+
+/// Table-driven decoder built from canonical lengths.
+#[derive(Debug, Clone)]
+pub struct Decoder {
+    /// Fast path: LOOKUP_BITS-indexed (symbol, length); length 0 = miss.
+    lookup: Vec<(u16, u8)>,
+    /// Slow path: canonical per-length first-code/offset walk.
+    count: [u32; (MAX_BITS + 1) as usize],
+    first_code: [u32; (MAX_BITS + 1) as usize],
+    first_index: [u32; (MAX_BITS + 1) as usize],
+    symbols: Vec<u16>, // ordered by (length, symbol)
+}
+
+impl Decoder {
+    pub fn from_lengths(lengths: &[u8]) -> Result<Self, HuffError> {
+        if lengths.len() > u16::MAX as usize {
+            return Err(HuffError::BadHeader);
+        }
+        let mut count = [0u32; (MAX_BITS + 1) as usize];
+        for &l in lengths {
+            if l as u32 > MAX_BITS {
+                return Err(HuffError::BadHeader);
+            }
+            if l > 0 {
+                count[l as usize] += 1;
+            }
+        }
+        let mut symbols: Vec<u16> = Vec::new();
+        for bits in 1..=MAX_BITS as usize {
+            for (s, &l) in lengths.iter().enumerate() {
+                if l as usize == bits {
+                    symbols.push(s as u16);
+                }
+            }
+        }
+        let mut first_code = [0u32; (MAX_BITS + 1) as usize];
+        let mut first_index = [0u32; (MAX_BITS + 1) as usize];
+        let mut code = 0u32;
+        let mut index = 0u32;
+        for bits in 1..=MAX_BITS as usize {
+            code = (code + count[bits - 1]) << 1;
+            first_code[bits] = code;
+            first_index[bits] = index;
+            index += count[bits];
+        }
+
+        // Build the fast lookup table.
+        let codes = canonical_codes(lengths);
+        let mut lookup = vec![(0u16, 0u8); 1 << LOOKUP_BITS];
+        for (s, &l) in lengths.iter().enumerate() {
+            let l32 = l as u32;
+            if l == 0 || l32 > LOOKUP_BITS {
+                continue;
+            }
+            let rev = codes[s].reverse_bits() >> (32 - l32);
+            let step = 1u32 << l32;
+            let mut idx = rev;
+            while idx < (1 << LOOKUP_BITS) {
+                lookup[idx as usize] = (s as u16, l);
+                idx += step;
+            }
+        }
+        Ok(Self { lookup, count, first_code, first_index, symbols })
+    }
+
+    #[inline]
+    pub fn decode(&self, r: &mut BitReader<'_>) -> Result<u16, HuffError> {
+        let peeked = r.peek(LOOKUP_BITS) as usize;
+        let (sym, len) = self.lookup[peeked];
+        if len > 0 {
+            r.consume(len as u32)?;
+            return Ok(sym);
+        }
+        // Slow path: read bit by bit, walking the canonical ranges MSB-first.
+        let mut code = 0u32;
+        for bits in 1..=MAX_BITS as usize {
+            code = (code << 1) | r.read(1)? as u32;
+            if self.count[bits] > 0 {
+                let offset = code.wrapping_sub(self.first_code[bits]);
+                if offset < self.count[bits] {
+                    return Ok(self.symbols[(self.first_index[bits] + offset) as usize]);
+                }
+            }
+        }
+        Err(HuffError::BadCode)
+    }
+}
+
+/// One-shot convenience: encode `symbols` over alphabet size `alphabet`.
+/// Stream layout: [alphabet: u16][lengths: alphabet × u4 packed][count: u32][payload].
+pub fn encode_block(symbols: &[u16], alphabet: usize) -> Vec<u8> {
+    let mut freqs = vec![0u64; alphabet];
+    for &s in symbols {
+        freqs[s as usize] += 1;
+    }
+    let enc = Encoder::from_freqs(&freqs);
+    encode_block_with(&enc, symbols, alphabet)
+}
+
+/// [`encode_block`] with a prebuilt encoder (lets the caller reuse the
+/// histogram it already computed for mode selection — see
+/// `compression::feature::encode`).
+pub fn encode_block_with(enc: &Encoder, symbols: &[u16], alphabet: usize) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    w.write(alphabet as u64, 16);
+    for &l in enc.lengths() {
+        w.write(l as u64, 4); // MAX_BITS=15 fits in 4 bits
+    }
+    w.write(symbols.len() as u64, 32);
+    for &s in symbols {
+        enc.encode(&mut w, s as usize);
+    }
+    w.finish()
+}
+
+/// Inverse of [`encode_block`].
+pub fn decode_block(bytes: &[u8]) -> Result<Vec<u16>, HuffError> {
+    let mut r = BitReader::new(bytes);
+    let alphabet = r.read(16)? as usize;
+    if alphabet == 0 {
+        return Err(HuffError::BadHeader);
+    }
+    let mut lengths = vec![0u8; alphabet];
+    for l in lengths.iter_mut() {
+        *l = r.read(4)? as u8;
+    }
+    let n = r.read(32)? as usize;
+    let dec = Decoder::from_lengths(&lengths)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(dec.decode(&mut r)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn kraft_inequality_holds() {
+        let freqs: Vec<u64> = (0..256).map(|i| (i * i + 1) as u64).collect();
+        let lengths = code_lengths(&freqs);
+        let kraft: f64 =
+            lengths.iter().filter(|&&l| l > 0).map(|&l| 2f64.powi(-(l as i32))).sum();
+        assert!(kraft <= 1.0 + 1e-9, "kraft {kraft}");
+        assert!(lengths.iter().all(|&l| (l as u32) <= MAX_BITS));
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let symbols = vec![3u16; 100];
+        let out = encode_block(&symbols, 8);
+        assert_eq!(decode_block(&out).unwrap(), symbols);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out = encode_block(&[], 4);
+        assert_eq!(decode_block(&out).unwrap(), Vec::<u16>::new());
+    }
+
+    #[test]
+    fn skewed_distribution_compresses() {
+        // 90% zeros (post-ReLU-like): entropy ≈ 0.47 bits + header.
+        let mut symbols = vec![0u16; 9000];
+        symbols.extend(std::iter::repeat(5u16).take(1000));
+        let out = encode_block(&symbols, 16);
+        assert!(out.len() < 10_000 / 8 * 6, "len {}", out.len());
+        assert_eq!(decode_block(&out).unwrap(), symbols);
+    }
+
+    #[test]
+    fn decoder_rejects_bad_lengths() {
+        assert!(Decoder::from_lengths(&[16, 1]).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let symbols: Vec<u16> = (0..100).map(|i| (i % 7) as u16).collect();
+        let out = encode_block(&symbols, 8);
+        let cut = &out[..out.len() - 2];
+        assert!(decode_block(cut).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        prop::check(
+            "huffman block roundtrip",
+            prop::vec_of(prop::u64_in(0, 255).map(|x| x as u16), 0, 3000),
+            |symbols| {
+                let out = encode_block(symbols, 256);
+                decode_block(&out).as_deref() == Ok(symbols.as_slice())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_long_codes_roundtrip() {
+        // Exponential frequencies force maximum code lengths.
+        let mut freqs = vec![0u64; 32];
+        let mut f = 1u64;
+        for i in 0..32 {
+            freqs[i] = f;
+            f = f.saturating_mul(3);
+        }
+        let enc = Encoder::from_freqs(&freqs);
+        let dec = Decoder::from_lengths(enc.lengths()).unwrap();
+        let mut w = BitWriter::new();
+        for s in 0..32 {
+            enc.encode(&mut w, s);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for s in 0..32u16 {
+            assert_eq!(dec.decode(&mut r).unwrap(), s);
+        }
+    }
+}

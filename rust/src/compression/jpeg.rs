@@ -1,0 +1,309 @@
+//! JPEG-like lossy image codec for the JPEG2Cloud baseline (§IV-A).
+//!
+//! Classic pipeline: RGB → YCbCr, per-channel 8×8 DCT-II, quantization by
+//! the Annex-K luma table scaled by a quality factor, zig-zag scan,
+//! zero-run-length coding, canonical Huffman. No chroma subsampling and
+//! no .jfif container — it only has to produce realistic lossy sizes and
+//! distortions for the baseline comparison (DESIGN.md deviation 3).
+
+use super::huffman;
+use super::png::Image8;
+use super::rle;
+
+/// JPEG Annex K luminance quantization table (quality 50 reference).
+const QTABLE: [i32; 64] = [
+    16, 11, 10, 16, 24, 40, 51, 61, //
+    12, 12, 14, 19, 26, 58, 60, 55, //
+    14, 13, 16, 24, 40, 57, 69, 56, //
+    14, 17, 22, 29, 51, 87, 80, 62, //
+    18, 22, 37, 56, 68, 109, 103, 77, //
+    24, 35, 55, 64, 81, 104, 113, 92, //
+    49, 64, 78, 87, 103, 121, 120, 101, //
+    72, 92, 95, 98, 112, 100, 103, 99,
+];
+
+fn scaled_qtable(quality: u8) -> [i32; 64] {
+    let q = quality.clamp(1, 100) as i32;
+    let scale = if q < 50 { 5000 / q } else { 200 - 2 * q };
+    let mut t = [0i32; 64];
+    for i in 0..64 {
+        t[i] = ((QTABLE[i] * scale + 50) / 100).max(1);
+    }
+    t
+}
+
+/// Zig-zag order of an 8×8 block.
+const ZIGZAG: [usize; 64] = [
+    0, 1, 8, 16, 9, 2, 3, 10, 17, 24, 32, 25, 18, 11, 4, 5, 12, 19, 26, 33, 40, 48, 41, 34,
+    27, 20, 13, 6, 7, 14, 21, 28, 35, 42, 49, 56, 57, 50, 43, 36, 29, 22, 15, 23, 30, 37, 44,
+    51, 58, 59, 52, 45, 38, 31, 39, 46, 53, 60, 61, 54, 47, 55, 62, 63,
+];
+
+fn dct8(input: &[f32; 64]) -> [f32; 64] {
+    let mut out = [0f32; 64];
+    for u in 0..8 {
+        for v in 0..8 {
+            let cu = if u == 0 { std::f32::consts::FRAC_1_SQRT_2 } else { 1.0 };
+            let cv = if v == 0 { std::f32::consts::FRAC_1_SQRT_2 } else { 1.0 };
+            let mut sum = 0f32;
+            for x in 0..8 {
+                for y in 0..8 {
+                    sum += input[x * 8 + y]
+                        * ((2 * x + 1) as f32 * u as f32 * std::f32::consts::PI / 16.0).cos()
+                        * ((2 * y + 1) as f32 * v as f32 * std::f32::consts::PI / 16.0).cos();
+                }
+            }
+            out[u * 8 + v] = 0.25 * cu * cv * sum;
+        }
+    }
+    out
+}
+
+fn idct8(input: &[f32; 64]) -> [f32; 64] {
+    let mut out = [0f32; 64];
+    for x in 0..8 {
+        for y in 0..8 {
+            let mut sum = 0f32;
+            for u in 0..8 {
+                for v in 0..8 {
+                    let cu = if u == 0 { std::f32::consts::FRAC_1_SQRT_2 } else { 1.0 };
+                    let cv = if v == 0 { std::f32::consts::FRAC_1_SQRT_2 } else { 1.0 };
+                    sum += cu
+                        * cv
+                        * input[u * 8 + v]
+                        * ((2 * x + 1) as f32 * u as f32 * std::f32::consts::PI / 16.0).cos()
+                        * ((2 * y + 1) as f32 * v as f32 * std::f32::consts::PI / 16.0).cos();
+                }
+            }
+            out[x * 8 + y] = 0.25 * sum;
+        }
+    }
+    out
+}
+
+fn rgb_to_ycbcr(r: f32, g: f32, b: f32) -> (f32, f32, f32) {
+    (
+        0.299 * r + 0.587 * g + 0.114 * b,
+        -0.168736 * r - 0.331264 * g + 0.5 * b + 128.0,
+        0.5 * r - 0.418688 * g - 0.081312 * b + 128.0,
+    )
+}
+
+fn ycbcr_to_rgb(y: f32, cb: f32, cr: f32) -> (f32, f32, f32) {
+    let cb = cb - 128.0;
+    let cr = cr - 128.0;
+    (y + 1.402 * cr, y - 0.344136 * cb - 0.714136 * cr, y + 1.772 * cb)
+}
+
+/// Signed coefficient → zig-zag-mapped unsigned symbol (value folding).
+#[inline]
+fn fold(v: i32) -> u16 {
+    if v >= 0 {
+        (v as u16) << 1
+    } else {
+        (((-v) as u16) << 1) | 1
+    }
+}
+
+#[inline]
+fn unfold(s: u16) -> i32 {
+    if s & 1 == 0 {
+        (s >> 1) as i32
+    } else {
+        -((s >> 1) as i32)
+    }
+}
+
+/// Encode. Layout: [w u16][h u16][quality u8][3 channel sections:
+/// runs-block, values-block (huffman blocks from `huffman::encode_block`)].
+pub fn encode(img: &Image8, quality: u8) -> Vec<u8> {
+    assert_eq!(img.channels, 3, "jpeg-like codec expects RGB");
+    let qt = scaled_qtable(quality);
+    let bw = img.w.div_ceil(8);
+    let bh = img.h.div_ceil(8);
+
+    // Channel-planar YCbCr, edge-replicated to 8x8 multiples.
+    let mut planes = vec![vec![0f32; bw * 8 * bh * 8]; 3];
+    for y in 0..bh * 8 {
+        for x in 0..bw * 8 {
+            let sy = y.min(img.h - 1);
+            let sx = x.min(img.w - 1);
+            let p = (sy * img.w + sx) * 3;
+            let (yy, cb, cr) = rgb_to_ycbcr(
+                img.data[p] as f32,
+                img.data[p + 1] as f32,
+                img.data[p + 2] as f32,
+            );
+            let idx = y * bw * 8 + x;
+            planes[0][idx] = yy;
+            planes[1][idx] = cb;
+            planes[2][idx] = cr;
+        }
+    }
+
+    let mut out = Vec::new();
+    out.extend_from_slice(&(img.w as u16).to_le_bytes());
+    out.extend_from_slice(&(img.h as u16).to_le_bytes());
+    out.push(quality);
+
+    for plane in &planes {
+        let mut symbols: Vec<u16> = Vec::new();
+        for by in 0..bh {
+            for bx in 0..bw {
+                let mut block = [0f32; 64];
+                for i in 0..8 {
+                    for j in 0..8 {
+                        block[i * 8 + j] = plane[(by * 8 + i) * bw * 8 + bx * 8 + j] - 128.0;
+                    }
+                }
+                let coeffs = dct8(&block);
+                for (k, &zz) in ZIGZAG.iter().enumerate() {
+                    let q = (coeffs[zz] / qt[zz] as f32).round() as i32;
+                    symbols.push(fold(q));
+                    let _ = k;
+                }
+            }
+        }
+        let (runs, values) = rle::encode(&symbols);
+        for section in [&runs, &values] {
+            let alphabet = section.iter().copied().max().unwrap_or(0) as usize + 1;
+            let block = huffman::encode_block(section, alphabet.max(2));
+            out.extend_from_slice(&(block.len() as u32).to_le_bytes());
+            out.extend_from_slice(&block);
+        }
+    }
+    out
+}
+
+pub fn decode(bytes: &[u8]) -> Result<Image8, &'static str> {
+    if bytes.len() < 5 {
+        return Err("truncated header");
+    }
+    let w = u16::from_le_bytes([bytes[0], bytes[1]]) as usize;
+    let h = u16::from_le_bytes([bytes[2], bytes[3]]) as usize;
+    let quality = bytes[4];
+    let qt = scaled_qtable(quality);
+    let bw = w.div_ceil(8);
+    let bh = h.div_ceil(8);
+    let ncoef = bw * bh * 64;
+
+    let mut pos = 5usize;
+    let mut read_block = |pos: &mut usize| -> Result<Vec<u16>, &'static str> {
+        let len = u32::from_le_bytes(
+            bytes.get(*pos..*pos + 4).ok_or("truncated")?.try_into().unwrap(),
+        ) as usize;
+        *pos += 4;
+        let blk = bytes.get(*pos..*pos + len).ok_or("truncated")?;
+        *pos += len;
+        huffman::decode_block(blk).map_err(|_| "bad huffman block")
+    };
+
+    let mut planes = Vec::with_capacity(3);
+    for _ in 0..3 {
+        let runs = read_block(&mut pos)?;
+        let values = read_block(&mut pos)?;
+        let symbols = rle::decode(&runs, &values, ncoef)?;
+        let mut plane = vec![0f32; bw * 8 * bh * 8];
+        for by in 0..bh {
+            for bx in 0..bw {
+                let base = (by * bw + bx) * 64;
+                let mut coeffs = [0f32; 64];
+                for (k, &zz) in ZIGZAG.iter().enumerate() {
+                    coeffs[zz] = unfold(symbols[base + k]) as f32 * qt[zz] as f32;
+                }
+                let block = idct8(&coeffs);
+                for i in 0..8 {
+                    for j in 0..8 {
+                        plane[(by * 8 + i) * bw * 8 + bx * 8 + j] = block[i * 8 + j] + 128.0;
+                    }
+                }
+            }
+        }
+        planes.push(plane);
+    }
+
+    let mut data = Vec::with_capacity(w * h * 3);
+    for y in 0..h {
+        for x in 0..w {
+            let idx = y * bw * 8 + x;
+            let (r, g, b) = ycbcr_to_rgb(planes[0][idx], planes[1][idx], planes[2][idx]);
+            data.push(r.clamp(0.0, 255.0) as u8);
+            data.push(g.clamp(0.0, 255.0) as u8);
+            data.push(b.clamp(0.0, 255.0) as u8);
+        }
+    }
+    Ok(Image8 { w, h, channels: 3, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift64Star;
+
+    fn gradient_image(w: usize, h: usize) -> Image8 {
+        let mut data = Vec::with_capacity(w * h * 3);
+        for y in 0..h {
+            for x in 0..w {
+                data.push(((x * 255) / w.max(1)) as u8);
+                data.push(((y * 255) / h.max(1)) as u8);
+                data.push((((x + y) * 127) / (w + h).max(1)) as u8);
+            }
+        }
+        Image8::new(w, h, 3, data)
+    }
+
+    #[test]
+    fn dct_idct_identity() {
+        let mut rng = XorShift64Star::new(3);
+        let mut block = [0f32; 64];
+        for v in block.iter_mut() {
+            *v = rng.below(256) as f32 - 128.0;
+        }
+        let rec = idct8(&dct8(&block));
+        for (a, b) in block.iter().zip(&rec) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fold_unfold() {
+        for v in [-300, -1, 0, 1, 2, 500] {
+            assert_eq!(unfold(fold(v)), v);
+        }
+    }
+
+    #[test]
+    fn smooth_image_compresses_lossily() {
+        let img = gradient_image(32, 32);
+        let enc = encode(&img, 50);
+        assert!(enc.len() < img.data.len() / 2, "{} bytes", enc.len());
+        let dec = decode(&enc).unwrap();
+        assert_eq!((dec.w, dec.h), (32, 32));
+        // Lossy but close: mean abs error under ~8 gray levels.
+        let mae: f64 = img
+            .data
+            .iter()
+            .zip(&dec.data)
+            .map(|(a, b)| (*a as f64 - *b as f64).abs())
+            .sum::<f64>()
+            / img.data.len() as f64;
+        assert!(mae < 8.0, "mae {mae}");
+    }
+
+    #[test]
+    fn quality_controls_size() {
+        let img = gradient_image(32, 32);
+        let hi = encode(&img, 90).len();
+        let lo = encode(&img, 10).len();
+        assert!(lo < hi, "q10 {lo} vs q90 {hi}");
+    }
+
+    #[test]
+    fn non_multiple_of_8_sizes() {
+        for (w, h) in [(9, 13), (17, 8), (7, 7)] {
+            let img = gradient_image(w, h);
+            let dec = decode(&encode(&img, 50)).unwrap();
+            assert_eq!((dec.w, dec.h, dec.data.len()), (w, h, w * h * 3));
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Greedy LZ77 with hash-chain match search (window 32 KiB, match 3..258)
+//! — the dictionary half of the deflate-like container in [`super::deflate`].
+
+pub const WINDOW: usize = 32 * 1024;
+pub const MIN_MATCH: usize = 3;
+pub const MAX_MATCH: usize = 258;
+const HASH_BITS: u32 = 15;
+const MAX_CHAIN: usize = 64;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Token {
+    Literal(u8),
+    /// (length in 3..=258, distance in 1..=32768)
+    Match { len: u16, dist: u16 },
+}
+
+#[inline]
+fn hash3(b: &[u8]) -> usize {
+    let v = (b[0] as u32) | ((b[1] as u32) << 8) | ((b[2] as u32) << 16);
+    (v.wrapping_mul(0x9E3779B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Tokenize `data` greedily. Deterministic; no lazy matching (good-enough
+/// ratios for the PNG-like baseline at much lower complexity).
+pub fn compress(data: &[u8]) -> Vec<Token> {
+    let n = data.len();
+    let mut tokens = Vec::with_capacity(n / 2 + 8);
+    let mut head = vec![usize::MAX; 1 << HASH_BITS];
+    let mut prev = vec![usize::MAX; n];
+    let mut i = 0;
+    while i < n {
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if i + MIN_MATCH <= n {
+            let h = hash3(&data[i..]);
+            let mut cand = head[h];
+            let mut chain = 0;
+            while cand != usize::MAX && i - cand <= WINDOW && chain < MAX_CHAIN {
+                let max_len = (n - i).min(MAX_MATCH);
+                let mut l = 0;
+                while l < max_len && data[cand + l] == data[i + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_dist = i - cand;
+                    if l >= MAX_MATCH {
+                        break;
+                    }
+                }
+                cand = prev[cand];
+                chain += 1;
+            }
+            // Insert current position into the chain.
+            prev[i] = head[h];
+            head[h] = i;
+        }
+        if best_len >= MIN_MATCH {
+            tokens.push(Token::Match { len: best_len as u16, dist: best_dist as u16 });
+            // Insert the skipped positions so later matches can reference them.
+            let end = (i + best_len).min(n.saturating_sub(MIN_MATCH - 1));
+            let mut j = i + 1;
+            while j < end {
+                let h = hash3(&data[j..]);
+                prev[j] = head[h];
+                head[h] = j;
+                j += 1;
+            }
+            i += best_len;
+        } else {
+            tokens.push(Token::Literal(data[i]));
+            i += 1;
+        }
+    }
+    tokens
+}
+
+/// Expand tokens back to bytes.
+pub fn decompress(tokens: &[Token]) -> Result<Vec<u8>, &'static str> {
+    let mut out: Vec<u8> = Vec::new();
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => out.push(b),
+            Token::Match { len, dist } => {
+                let dist = dist as usize;
+                let len = len as usize;
+                if dist == 0 || dist > out.len() {
+                    return Err("bad match distance");
+                }
+                let start = out.len() - dist;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn roundtrip(data: &[u8]) -> bool {
+        decompress(&compress(data)).as_deref() == Ok(data)
+    }
+
+    #[test]
+    fn empty_and_small() {
+        assert!(roundtrip(b""));
+        assert!(roundtrip(b"a"));
+        assert!(roundtrip(b"ab"));
+        assert!(roundtrip(b"abc"));
+    }
+
+    #[test]
+    fn repeated_data_produces_matches() {
+        let data: Vec<u8> = b"abcabcabcabcabcabcabcabc".to_vec();
+        let tokens = compress(&data);
+        assert!(tokens.iter().any(|t| matches!(t, Token::Match { .. })));
+        assert!(roundtrip(&data));
+    }
+
+    #[test]
+    fn overlapping_match() {
+        // "aaaa..." forces dist=1 overlapping copies.
+        let data = vec![b'a'; 500];
+        let tokens = compress(&data);
+        assert!(tokens.len() < 10, "tokens {}", tokens.len());
+        assert!(roundtrip(&data));
+    }
+
+    #[test]
+    fn bad_distance_rejected() {
+        assert!(decompress(&[Token::Match { len: 3, dist: 1 }]).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        prop::check("lz77 roundtrip random", prop::bytes(0, 2000), |d| roundtrip(d));
+    }
+
+    #[test]
+    fn prop_roundtrip_lowentropy() {
+        prop::check(
+            "lz77 roundtrip low-entropy",
+            prop::vec_of(prop::u64_in(0, 3).map(|x| x as u8), 0, 4000),
+            |d| roundtrip(d),
+        );
+    }
+}

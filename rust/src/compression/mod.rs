@@ -1,0 +1,26 @@
+//! Compression substrates (all from scratch — no codec crates offline).
+//!
+//! JALAD's in-layer feature compression (paper §III-B) is
+//! quantize → entropy-code. This module provides:
+//!
+//! * [`quant`] — the rust twin of the L1 Pallas affine quantizer (used on
+//!   fast paths and to cross-check the PJRT kernel);
+//! * [`bitio`] — LSB-first bit streams;
+//! * [`huffman`] — canonical Huffman coding (the paper's entropy coder);
+//! * [`lz77`] + [`deflate`] — a deflate-like LZ77+Huffman container,
+//!   backing the PNG-like baseline codec;
+//! * [`feature`] — the wire codec for quantized feature maps (what the
+//!   edge actually transmits);
+//! * [`png`] — PNG-like lossless image codec (PNG2Cloud baseline);
+//! * [`jpeg`] — JPEG-like lossy image codec (JPEG2Cloud baseline);
+//! * [`rle`] — zero-run-length coding used by the JPEG-like codec.
+
+pub mod bitio;
+pub mod deflate;
+pub mod feature;
+pub mod huffman;
+pub mod jpeg;
+pub mod lz77;
+pub mod png;
+pub mod quant;
+pub mod rle;

@@ -1,0 +1,223 @@
+//! PNG-like lossless image codec for the PNG2Cloud baseline (§IV-A).
+//!
+//! Same structure as real PNG: per-row filter selection (None / Sub / Up
+//! / Average / Paeth, minimum-sum-of-absolute-values heuristic) followed
+//! by the deflate-like entropy stage. Not a .png container — both ends
+//! are ours — but the compression ratio lands in PNG's usual band, which
+//! is all the baseline needs (DESIGN.md substitution table).
+
+use super::deflate;
+use super::huffman::HuffError;
+
+/// Interleaved 8-bit image, row-major, `channels` ∈ {1, 3}.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Image8 {
+    pub w: usize,
+    pub h: usize,
+    pub channels: usize,
+    pub data: Vec<u8>,
+}
+
+impl Image8 {
+    pub fn new(w: usize, h: usize, channels: usize, data: Vec<u8>) -> Self {
+        assert_eq!(data.len(), w * h * channels);
+        Self { w, h, channels, data }
+    }
+    pub fn row(&self, y: usize) -> &[u8] {
+        let stride = self.w * self.channels;
+        &self.data[y * stride..(y + 1) * stride]
+    }
+}
+
+#[inline]
+fn paeth(a: i32, b: i32, c: i32) -> i32 {
+    let p = a + b - c;
+    let (pa, pb, pc) = ((p - a).abs(), (p - b).abs(), (p - c).abs());
+    if pa <= pb && pa <= pc {
+        a
+    } else if pb <= pc {
+        b
+    } else {
+        c
+    }
+}
+
+fn filter_row(filter: u8, row: &[u8], prev: &[u8], bpp: usize, out: &mut Vec<u8>) {
+    for i in 0..row.len() {
+        let a = if i >= bpp { row[i - bpp] as i32 } else { 0 };
+        let b = prev[i] as i32;
+        let c = if i >= bpp { prev[i - bpp] as i32 } else { 0 };
+        let pred = match filter {
+            0 => 0,
+            1 => a,
+            2 => b,
+            3 => (a + b) / 2,
+            4 => paeth(a, b, c),
+            _ => unreachable!(),
+        };
+        out.push((row[i] as i32).wrapping_sub(pred) as u8);
+    }
+}
+
+fn unfilter_row(filter: u8, coded: &[u8], prev: &[u8], bpp: usize) -> Vec<u8> {
+    let mut row = Vec::with_capacity(coded.len());
+    for i in 0..coded.len() {
+        let a = if i >= bpp { row[i - bpp] as i32 } else { 0 };
+        let b = prev[i] as i32;
+        let c = if i >= bpp { prev[i - bpp] as i32 } else { 0 };
+        let pred = match filter {
+            0 => 0,
+            1 => a,
+            2 => b,
+            3 => (a + b) / 2,
+            4 => paeth(a, b, c),
+            _ => 0,
+        };
+        row.push((coded[i] as i32).wrapping_add(pred) as u8);
+    }
+    row
+}
+
+/// Encode. Layout: [w u16][h u16][channels u8][filters h×u8][deflate payload].
+pub fn encode(img: &Image8) -> Vec<u8> {
+    let stride = img.w * img.channels;
+    let bpp = img.channels;
+    let mut filters = Vec::with_capacity(img.h);
+    let mut filtered = Vec::with_capacity(img.data.len());
+    let zero_row = vec![0u8; stride];
+    let mut scratch: Vec<u8> = Vec::with_capacity(stride);
+
+    for y in 0..img.h {
+        let row = img.row(y);
+        let prev = if y == 0 { &zero_row[..] } else { img.row(y - 1) };
+        // Pick the filter minimizing sum of |signed residual| (PNG heuristic).
+        let mut best = (u64::MAX, 0u8, Vec::new());
+        for f in 0..=4u8 {
+            scratch.clear();
+            filter_row(f, row, prev, bpp, &mut scratch);
+            let cost: u64 = scratch.iter().map(|&b| (b as i8).unsigned_abs() as u64).sum();
+            if cost < best.0 {
+                best = (cost, f, scratch.clone());
+            }
+        }
+        filters.push(best.1);
+        filtered.extend_from_slice(&best.2);
+    }
+
+    let payload = deflate::compress(&filtered);
+    let mut out = Vec::with_capacity(9 + img.h + payload.len());
+    out.extend_from_slice(&(img.w as u16).to_le_bytes());
+    out.extend_from_slice(&(img.h as u16).to_le_bytes());
+    out.push(img.channels as u8);
+    out.extend_from_slice(&filters);
+    out.extend_from_slice(&payload);
+    out
+}
+
+pub fn decode(bytes: &[u8]) -> Result<Image8, HuffError> {
+    if bytes.len() < 5 {
+        return Err(HuffError::Truncated);
+    }
+    let w = u16::from_le_bytes([bytes[0], bytes[1]]) as usize;
+    let h = u16::from_le_bytes([bytes[2], bytes[3]]) as usize;
+    let channels = bytes[4] as usize;
+    if channels == 0 || channels > 4 {
+        return Err(HuffError::BadHeader);
+    }
+    let filters = bytes.get(5..5 + h).ok_or(HuffError::Truncated)?.to_vec();
+    let filtered = deflate::decompress(&bytes[5 + h..])?;
+    let stride = w * channels;
+    if filtered.len() != stride * h {
+        return Err(HuffError::Truncated);
+    }
+
+    let mut data = Vec::with_capacity(filtered.len());
+    let zero_row = vec![0u8; stride];
+    for y in 0..h {
+        let coded = &filtered[y * stride..(y + 1) * stride];
+        let prev: Vec<u8> =
+            if y == 0 { zero_row.clone() } else { data[(y - 1) * stride..y * stride].to_vec() };
+        let row = unfilter_row(filters[y], coded, &prev, channels);
+        data.extend_from_slice(&row);
+    }
+    Ok(Image8 { w, h, channels, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::XorShift64Star;
+
+    fn smooth_image(seed: u64, w: usize, h: usize) -> Image8 {
+        // Smooth gradients: the regime where filters + deflate win.
+        let mut rng = XorShift64Star::new(seed);
+        let (ox, oy) = (rng.below(64) as f32, rng.below(64) as f32);
+        let mut data = Vec::with_capacity(w * h * 3);
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..3 {
+                    let v = 128.0
+                        + 60.0 * (((x as f32 + ox) / 9.0 + ch as f32).sin())
+                        + 50.0 * (((y as f32 + oy) / 7.0).cos());
+                    data.push(v.clamp(0.0, 255.0) as u8);
+                }
+            }
+        }
+        Image8::new(w, h, 3, data)
+    }
+
+    #[test]
+    fn roundtrip_smooth() {
+        let img = smooth_image(1, 32, 32);
+        let enc = encode(&img);
+        assert_eq!(decode(&enc).unwrap(), img);
+        // Smooth content must compress well below raw size.
+        assert!(enc.len() < img.data.len() / 2, "{} vs {}", enc.len(), img.data.len());
+    }
+
+    #[test]
+    fn roundtrip_noise() {
+        let mut rng = XorShift64Star::new(9);
+        let data: Vec<u8> = (0..32 * 32 * 3).map(|_| rng.below(256) as u8).collect();
+        let img = Image8::new(32, 32, 3, data);
+        assert_eq!(decode(&encode(&img)).unwrap(), img);
+    }
+
+    #[test]
+    fn paeth_matches_spec() {
+        assert_eq!(paeth(0, 0, 0), 0);
+        assert_eq!(paeth(10, 20, 30), 10); // p = 0; pa=10 smallest → a
+        assert_eq!(paeth(100, 3, 1), 100); // p = 102; pa=2 smallest → a
+        assert_eq!(paeth(3, 100, 1), 100); // p = 102; pb=2 smallest → b
+        assert_eq!(paeth(50, 60, 2), 60); // p = 108; pb=48 < pa=58 → b
+    }
+
+    #[test]
+    fn grayscale_roundtrip() {
+        let data: Vec<u8> = (0..16 * 16).map(|i| (i % 251) as u8).collect();
+        let img = Image8::new(16, 16, 1, data);
+        assert_eq!(decode(&encode(&img)).unwrap(), img);
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let img = smooth_image(2, 16, 16);
+        let enc = encode(&img);
+        assert!(decode(&enc[..10]).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_sizes() {
+        prop::check(
+            "png-like roundtrip",
+            prop::pair(prop::usize_in(1, 24), prop::usize_in(1, 24)),
+            |(w, h)| {
+                let mut rng = XorShift64Star::new((w * 31 + h) as u64);
+                let data: Vec<u8> = (0..w * h * 3).map(|_| rng.below(256) as u8).collect();
+                let img = Image8::new(*w, *h, 3, data);
+                decode(&encode(&img)).as_ref() == Ok(&img)
+            },
+        );
+    }
+}

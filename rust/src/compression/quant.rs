@@ -1,0 +1,153 @@
+//! Rust twin of the L1 Pallas affine quantizer (paper §III-B).
+//!
+//! The edge pipeline normally quantizes through the exported Pallas
+//! artifact (so L1 genuinely sits on the request path); this module is
+//! the same arithmetic on host buffers, used by the calibration sweeps
+//! (thousands of invocations), by tests cross-checking the PJRT kernel,
+//! and as a fallback when an artifact is absent.
+//!
+//! ```text
+//! y_i = clip(round((2^c - 1) · (x_i − min) / (max − min)), 0, 2^c−1)
+//! ```
+
+/// Quantization result: integer values (stored u16; c ≤ 16) + range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Quantized {
+    pub values: Vec<u16>,
+    pub lo: f32,
+    pub hi: f32,
+    pub c: u8,
+}
+
+/// Number of levels minus one for `c` bits.
+#[inline]
+pub fn qmax(c: u8) -> u32 {
+    (1u32 << c) - 1
+}
+
+/// Single-pass min/max.
+pub fn min_max(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if xs.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+/// Affine-quantize `xs` to `c` bits (1 ≤ c ≤ 16).
+pub fn quantize(xs: &[f32], c: u8) -> Quantized {
+    assert!((1..=16).contains(&c));
+    let (lo, hi) = min_max(xs);
+    let span = hi - lo;
+    let levels = qmax(c) as f32;
+    let scale = if span > 0.0 { levels / span } else { 0.0 };
+    let values = xs
+        .iter()
+        .map(|&x| {
+            let y = ((x - lo) * scale).round();
+            y.clamp(0.0, levels) as u16
+        })
+        .collect();
+    Quantized { values, lo, hi, c }
+}
+
+/// Inverse: x̂ = y / (2^c − 1) · (hi − lo) + lo.
+pub fn dequantize(q: &Quantized) -> Vec<f32> {
+    let levels = qmax(q.c) as f32;
+    let step = if levels > 0.0 { (q.hi - q.lo) / levels } else { 0.0 };
+    q.values.iter().map(|&y| y as f32 * step + q.lo).collect()
+}
+
+/// quantize→dequantize round trip (the distortion the cloud model sees).
+pub fn fake_quant(xs: &[f32], c: u8) -> Vec<f32> {
+    dequantize(&quantize(xs, c))
+}
+
+/// Max absolute reconstruction error bound: half a quantization step.
+pub fn error_bound(lo: f32, hi: f32, c: u8) -> f32 {
+    (hi - lo) / qmax(c) as f32 * 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn constant_input_roundtrips_exactly() {
+        let xs = vec![3.25f32; 64];
+        let q = quantize(&xs, 4);
+        assert!(q.values.iter().all(|&v| v == 0));
+        assert_eq!(dequantize(&q), xs);
+    }
+
+    #[test]
+    fn endpoints_are_exact() {
+        let xs = vec![-1.0, 0.5, 2.0];
+        for c in 1..=8 {
+            let q = quantize(&xs, c);
+            let d = dequantize(&q);
+            assert_eq!(d[0], -1.0);
+            assert_eq!(d[2], 2.0);
+        }
+    }
+
+    #[test]
+    fn error_within_half_step() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.37).sin() * 5.0).collect();
+        for c in 1..=12u8 {
+            let (lo, hi) = min_max(&xs);
+            let bound = error_bound(lo, hi, c) * 1.0001;
+            let d = fake_quant(&xs, c);
+            for (a, b) in xs.iter().zip(&d) {
+                assert!((a - b).abs() <= bound, "c={c} err {}", (a - b).abs());
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_in_c() {
+        let xs: Vec<f32> = (0..512).map(|i| ((i * 7919) % 101) as f32 / 10.0).collect();
+        let mut prev = f32::INFINITY;
+        for c in 1..=10u8 {
+            let d = fake_quant(&xs, c);
+            let err: f32 =
+                xs.iter().zip(&d).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+            assert!(err <= prev + 1e-6, "c={c}: {err} > {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn values_fit_c_bits() {
+        prop::check(
+            "quantized values < 2^c",
+            prop::pair(prop::sparse_features(1, 2048), prop::u64_in(1, 12)),
+            |(xs, c)| {
+                let q = quantize(xs, *c as u8);
+                q.values.iter().all(|&v| (v as u32) <= qmax(*c as u8))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_reconstruction_bound() {
+        prop::check(
+            "dequantize within half step",
+            prop::pair(prop::sparse_features(1, 1024), prop::u64_in(1, 10)),
+            |(xs, c)| {
+                let c = *c as u8;
+                let (lo, hi) = min_max(xs);
+                let bound = error_bound(lo, hi, c) * 1.0001 + 1e-6;
+                let d = fake_quant(xs, c);
+                xs.iter().zip(&d).all(|(a, b)| (a - b).abs() <= bound)
+            },
+        );
+    }
+}

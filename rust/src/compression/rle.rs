@@ -1,0 +1,123 @@
+//! Zero-run-length coding for sparse integer streams.
+//!
+//! Post-ReLU quantized feature maps are mostly zeros (paper Fig. 1's
+//! sparsity observation); the JPEG-like codec's zig-zagged coefficients
+//! likewise. Encoding: each nonzero value `v` is emitted as the symbol
+//! pair (run_of_zeros_before_it, v); trailing zeros are one EOB marker.
+//!
+//! The output is a `u16` symbol stream meant to be fed into the Huffman
+//! coder: symbol = run (0..=MAX_RUN) interleaved with the value stream.
+
+pub const MAX_RUN: u16 = 255;
+pub const EOB: u16 = MAX_RUN + 1; // end-of-block marker in the run alphabet
+
+/// Encode to (runs, values): `runs` holds zero-run lengths / EOB,
+/// `values` holds the nonzero magnitudes aligned with non-EOB runs.
+pub fn encode(xs: &[u16]) -> (Vec<u16>, Vec<u16>) {
+    let mut runs = Vec::new();
+    let mut values = Vec::new();
+    let mut run = 0u16;
+    for &x in xs {
+        if x == 0 {
+            run += 1;
+            if run == MAX_RUN {
+                // Emit a maximal run with a literal zero to reset.
+                runs.push(MAX_RUN);
+                values.push(0);
+                run = 0;
+            }
+        } else {
+            runs.push(run);
+            values.push(x);
+            run = 0;
+        }
+    }
+    runs.push(EOB);
+    (runs, values)
+}
+
+/// Decode; `n` is the expected output length (trailing zeros restored).
+pub fn decode(runs: &[u16], values: &[u16], n: usize) -> Result<Vec<u16>, &'static str> {
+    let mut out = Vec::with_capacity(n);
+    let mut vi = 0;
+    for &r in runs {
+        if r == EOB {
+            if out.len() > n {
+                return Err("rle overflow");
+            }
+            out.resize(n, 0);
+            return Ok(out);
+        }
+        if r > MAX_RUN {
+            return Err("bad run symbol");
+        }
+        for _ in 0..r {
+            out.push(0);
+        }
+        let v = *values.get(vi).ok_or("missing value")?;
+        vi += 1;
+        out.push(v);
+        if out.len() > n {
+            return Err("rle overflow");
+        }
+    }
+    Err("missing EOB")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn roundtrip(xs: &[u16]) -> bool {
+        let (runs, values) = encode(xs);
+        decode(&runs, &values, xs.len()).as_deref() == Ok(xs)
+    }
+
+    #[test]
+    fn all_zeros_is_one_symbol() {
+        let xs = vec![0u16; 10_000];
+        let (runs, values) = encode(&xs);
+        // 10000/255 max-run resets + EOB.
+        assert!(runs.len() <= 10_000 / MAX_RUN as usize + 2);
+        assert!(values.len() <= runs.len());
+        assert!(roundtrip(&xs));
+    }
+
+    #[test]
+    fn empty() {
+        assert!(roundtrip(&[]));
+    }
+
+    #[test]
+    fn dense_data() {
+        let xs: Vec<u16> = (1..=300).collect();
+        assert!(roundtrip(&xs));
+    }
+
+    #[test]
+    fn truncated_values_rejected() {
+        let (runs, mut values) = encode(&[0, 5, 0, 7]);
+        values.pop();
+        assert!(decode(&runs, &values, 4).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_sparse() {
+        prop::check(
+            "rle roundtrip sparse",
+            prop::vec_of(
+                prop::pair(prop::u64_in(0, 9), prop::u64_in(1, 255)).map(|(z, v)| {
+                    if z < 7 {
+                        0u16
+                    } else {
+                        v as u16
+                    }
+                }),
+                0,
+                5000,
+            ),
+            |xs| roundtrip(xs),
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Adaptive re-decoupling (§III-E): "our design re-decouples the deep
+//! neural network upon the edge-cloud network change".
+//!
+//! The controller owns a [`DecisionEngine`] and a [`BandwidthEstimator`];
+//! every completed transfer feeds the estimator, and when the EWMA
+//! estimate drifts beyond a relative threshold the ILP is re-solved and
+//! the plan swapped (edge and cloud "synchronize" — in our deployment the
+//! wire frame is self-describing, so the cloud follows automatically).
+
+use crate::coordinator::decision::DecisionEngine;
+use crate::ilp::jalad::Plan;
+use crate::network::BandwidthEstimator;
+
+pub struct AdaptationController {
+    pub engine: DecisionEngine,
+    pub estimator: BandwidthEstimator,
+    /// Relative bandwidth drift that triggers a re-solve (default 0.15).
+    pub rel_threshold: f64,
+    current: Plan,
+    resolves: u64,
+}
+
+impl AdaptationController {
+    pub fn new(engine: DecisionEngine, initial_bandwidth: f64) -> Self {
+        let current = engine.decide(initial_bandwidth);
+        let mut estimator = BandwidthEstimator::default();
+        estimator.observe(initial_bandwidth as usize, 1.0);
+        let _ = estimator.take_change(0.0);
+        Self { engine, estimator, rel_threshold: 0.15, current, resolves: 0 }
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.current
+    }
+
+    pub fn resolves(&self) -> u64 {
+        self.resolves
+    }
+
+    pub fn bandwidth_estimate(&self) -> Option<f64> {
+        self.estimator.bytes_per_sec()
+    }
+
+    /// Feed one completed transfer; returns the new plan if the
+    /// controller re-decoupled.
+    pub fn observe_transfer(&mut self, bytes: usize, seconds: f64) -> Option<&Plan> {
+        self.estimator.observe(bytes, seconds);
+        if let Some(bw) = self.estimator.take_change(self.rel_threshold) {
+            let plan = self.engine.decide(bw);
+            let changed = plan.decision != self.current.decision;
+            self.current = plan;
+            self.resolves += 1;
+            if changed {
+                return Some(&self.current);
+            }
+        }
+        None
+    }
+
+    /// Force a re-solve at an externally known bandwidth (tests, traces).
+    pub fn resolve_at(&mut self, bandwidth: f64) -> &Plan {
+        self.current = self.engine.decide(bandwidth);
+        self.resolves += 1;
+        &self.current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::decision::{tests::fake_tables, Scale};
+    use crate::ilp::Decision;
+    use crate::models::fullscale_stages;
+    use crate::profiler::{DeviceModel, LatencyTables};
+
+    fn controller() -> AdaptationController {
+        let model = "vgg16";
+        let n = fullscale_stages(model).unwrap().stages.len();
+        let engine = DecisionEngine::new(
+            model,
+            fake_tables(model, n),
+            LatencyTables::analytic(model, DeviceModel::TEGRA_X2, DeviceModel::CLOUD_12T)
+                .unwrap(),
+            Scale::Paper,
+            0.10,
+        )
+        .unwrap();
+        AdaptationController::new(engine, 125_000.0)
+    }
+
+    #[test]
+    fn stable_bandwidth_never_replans() {
+        let mut c = controller();
+        let before = c.resolves();
+        for _ in 0..50 {
+            // 125 KB/s steady — inside the threshold band.
+            assert!(c.observe_transfer(12_500, 0.1).is_none());
+        }
+        assert_eq!(c.resolves(), before);
+    }
+
+    #[test]
+    fn bandwidth_collapse_triggers_replan() {
+        // Start fast enough that cloud-only wins (paper-scale 224² PNG is
+        // ~73 KB, so "fast" means ≳13 MB/s), then collapse the link.
+        let mut c = controller();
+        c.resolve_at(1e8);
+        let initial = c.plan().decision;
+        assert_eq!(initial, Decision::CloudOnly, "100 MB/s should upload");
+        // Collapse to 5 KB/s: EWMA needs a few observations to drift 15%.
+        let mut changed = false;
+        for _ in 0..40 {
+            if c.observe_transfer(500, 0.1).is_some() {
+                changed = true;
+                break;
+            }
+        }
+        assert!(changed, "controller never re-decoupled");
+        assert_ne!(c.plan().decision, initial);
+        // At 5 KB/s the plan must be a deep cut with small wire size.
+        match c.plan().decision {
+            Decision::Cut { i, .. } => assert!(i >= 1),
+            Decision::CloudOnly => panic!("cloud-only at 5 KB/s is wrong"),
+        }
+    }
+
+    #[test]
+    fn bandwidth_recovery_returns_to_cloud() {
+        let mut c = controller();
+        c.resolve_at(5_000.0);
+        let deep = c.plan().latency;
+        let p = c.resolve_at(1e12).clone();
+        assert_eq!(p.decision, Decision::CloudOnly);
+        assert!(p.latency < deep);
+    }
+}

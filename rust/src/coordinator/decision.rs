@@ -1,0 +1,275 @@
+//! Decision engine: predictor tables + latency tables + bandwidth → ILP
+//! → `(i*, c)` plan (paper §III-E).
+//!
+//! Two scales, matching the paper's two experiment modes:
+//!
+//! * [`Scale::Measured`] — everything from this host: measured stage wall
+//!   clocks, measured wire sizes of the scaled models. Drives the live
+//!   TCP deployment and the in-process pipeline.
+//! * [`Scale::Paper`] — the §IV-A simulation: full-scale FMACs through
+//!   the `T = w·Q/F` device model, and wire sizes projected from the
+//!   measured compression ratios onto full-scale activation counts
+//!   (ratios are scale-invariant; DESIGN.md). Drives Tables II/III and
+//!   Figs. 7/8.
+
+use anyhow::{anyhow, Result};
+
+use crate::ilp::{Decision, JaladInstance};
+use crate::ilp::jalad::Plan;
+use crate::models::fullscale_stages;
+use crate::predictor::Tables;
+use crate::profiler::LatencyTables;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Measured,
+    Paper,
+}
+
+#[derive(Debug, Clone)]
+pub struct DecisionEngine {
+    pub model: String,
+    pub tables: Tables,
+    pub latency: LatencyTables,
+    pub scale: Scale,
+    /// Accuracy-loss bound Δα.
+    pub delta_alpha: f64,
+    /// Per-stage wire sizes by grid c, pre-projected for `scale`.
+    size: Vec<Vec<f64>>,
+    image_bytes: f64,
+}
+
+impl DecisionEngine {
+    pub fn new(
+        model: &str,
+        tables: Tables,
+        latency: LatencyTables,
+        scale: Scale,
+        delta_alpha: f64,
+    ) -> Result<Self> {
+        let n = tables.num_stages();
+        if latency.num_stages() != n {
+            return Err(anyhow!(
+                "latency tables have {} stages, predictor {}",
+                latency.num_stages(),
+                n
+            ));
+        }
+        let (size, image_bytes) = match scale {
+            Scale::Measured => (tables.size.clone(), tables.image_png_bytes),
+            Scale::Paper => {
+                let fm = fullscale_stages(model)
+                    .ok_or_else(|| anyhow!("no full-scale table for {model}"))?;
+                if fm.stages.len() != n {
+                    return Err(anyhow!(
+                        "full-scale stage count {} != manifest {}",
+                        fm.stages.len(),
+                        n
+                    ));
+                }
+                // Project: S_full(i,c) = raw_full(i) / ratio_measured(i,c).
+                let mut size = Vec::with_capacity(n);
+                for i in 1..=n {
+                    let raw_full = fm.stages[i - 1].out_elems as f64 * 4.0;
+                    let mut row = Vec::with_capacity(tables.c_grid.len());
+                    for &c in &tables.c_grid {
+                        let ratio = tables.compression_ratio(i, c)?;
+                        row.push(raw_full / ratio);
+                    }
+                    size.push(row);
+                }
+                // Input image: PNG ratio measured on our 32×32 synthetic
+                // images projected onto the 224×224 raw size.
+                let png_ratio = tables.image_raw_bytes / tables.image_png_bytes;
+                (size, fm.input_rgb_bytes as f64 / png_ratio)
+            }
+        };
+        Ok(Self {
+            model: model.to_string(),
+            tables,
+            latency,
+            scale,
+            delta_alpha,
+            size,
+            image_bytes,
+        })
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.tables.num_stages()
+    }
+
+    /// Compressed input-image bytes for the cloud-only path at `scale`.
+    pub fn image_png_bytes(&self) -> f64 {
+        self.image_bytes
+    }
+
+    /// Raw (uncompressed 8-bit) input bytes at `scale`.
+    pub fn image_raw_bytes(&self) -> f64 {
+        match self.scale {
+            Scale::Measured => self.tables.image_raw_bytes,
+            Scale::Paper => {
+                fullscale_stages(&self.model).map(|m| m.input_rgb_bytes as f64).unwrap_or(0.0)
+            }
+        }
+    }
+
+    /// Wire bytes the chosen plan ships for stage `i`, bit-width `c`.
+    pub fn wire_bytes(&self, i: usize, c: u8) -> Result<f64> {
+        let k = self
+            .tables
+            .c_grid
+            .iter()
+            .position(|&g| g == c)
+            .ok_or_else(|| anyhow!("c={c} off-grid"))?;
+        Ok(self.size[i - 1][k])
+    }
+
+    /// Materialize the ILP instance at `bandwidth` (bytes/s).
+    ///
+    /// The ILP's c-axis is the calibration grid: variable `(i, k)` maps
+    /// to bit-width `c_grid[k]`.
+    pub fn instance(&self, bandwidth: f64) -> JaladInstance {
+        let n = self.num_stages();
+        JaladInstance {
+            n,
+            c_max: self.tables.c_grid.len() as u8,
+            t_edge: self.latency.t_edge.clone(),
+            t_cloud: self.latency.t_cloud.clone(),
+            size: self.size.clone(),
+            acc: self.tables.acc.clone(),
+            image_bytes: self.image_bytes,
+            t_cloud_full: self.latency.t_cloud_full,
+            bandwidth,
+            delta_alpha: self.delta_alpha,
+        }
+    }
+
+    /// Solve at `bandwidth`; the plan's `c` is translated back from grid
+    /// index to an actual bit-width.
+    pub fn decide(&self, bandwidth: f64) -> Plan {
+        let mut plan = self.instance(bandwidth).solve();
+        if let Decision::Cut { i, c } = plan.decision {
+            plan.decision = Decision::Cut { i, c: self.tables.c_grid[c as usize - 1] };
+        }
+        plan
+    }
+
+    /// Latency this engine predicts for a baseline that ships `bytes`
+    /// and runs everything on the cloud.
+    pub fn cloud_only_latency(&self, bytes: f64, bandwidth: f64) -> f64 {
+        bytes / bandwidth + self.latency.t_cloud_full
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::profiler::DeviceModel;
+
+    /// Synthetic tables resembling a trained VGG16: sparse features,
+    /// early layers quantize badly at c=1, fine at c≥4.
+    pub(crate) fn fake_tables(model: &str, n: usize) -> Tables {
+        let c_grid = vec![1u8, 2, 4, 8];
+        let raw: Vec<f64> = (0..n)
+            .map(|i| {
+                // shrinking feature maps with stage depth
+                (65536.0 / (1.0 + i as f64)).max(64.0)
+            })
+            .collect();
+        let size = raw
+            .iter()
+            .map(|&r| {
+                c_grid
+                    .iter()
+                    .map(|&c| r / 4.0 * c as f64 / 8.0 * 0.4) // ~2.5-20x ratio
+                    .collect()
+            })
+            .collect();
+        let acc = (0..n)
+            .map(|i| {
+                c_grid
+                    .iter()
+                    .map(|&c| match c {
+                        1 => 0.4 / (1.0 + i as f64 * 0.2),
+                        2 => 0.05 / (1.0 + i as f64 * 0.3),
+                        _ => 0.0,
+                    })
+                    .collect()
+            })
+            .collect();
+        Tables {
+            model: model.into(),
+            c_grid,
+            samples: 16,
+            base_accuracy: 0.9,
+            acc,
+            size,
+            raw_size: raw,
+            image_png_bytes: 1500.0,
+            image_raw_bytes: 3072.0,
+        }
+    }
+
+    fn engine(model: &str, da: f64) -> DecisionEngine {
+        let n = fullscale_stages(model).unwrap().stages.len();
+        let tables = fake_tables(model, n);
+        let latency =
+            LatencyTables::analytic(model, DeviceModel::TEGRA_X2, DeviceModel::CLOUD_12T)
+                .unwrap();
+        DecisionEngine::new(model, tables, latency, Scale::Paper, da).unwrap()
+    }
+
+    #[test]
+    fn low_bandwidth_cuts_inside_network() {
+        let e = engine("vgg16", 0.10);
+        let plan = e.decide(300_000.0 / 8.0 * 8.0 * 0.3); // ~paper's 300KBps
+        match plan.decision {
+            Decision::Cut { i, c } => {
+                assert!(i >= 1);
+                assert!(e.tables.c_grid.contains(&c));
+            }
+            Decision::CloudOnly => panic!("should not upload at 300 KB/s: {plan:?}"),
+        }
+        assert!(plan.acc_drop <= 0.10 + 1e-12);
+    }
+
+    #[test]
+    fn high_bandwidth_converges_to_cloud() {
+        // Fig. 8: "when the network condition is good, JALAD tends to
+        // upload the raw PNG images to the cloud".
+        let e = engine("vgg16", 0.10);
+        let plan = e.decide(1e12);
+        assert_eq!(plan.decision, Decision::CloudOnly);
+    }
+
+    #[test]
+    fn latency_decreases_with_looser_accuracy() {
+        // Fig. 7: larger Δα → no worse latency.
+        let bw = 125_000.0; // 1 Mbps
+        let mut prev = f64::INFINITY;
+        for da in [0.0, 0.02, 0.05, 0.10, 0.20, 0.30] {
+            let plan = engine("vgg16", da).decide(bw);
+            assert!(plan.latency <= prev + 1e-12, "Δα={da}: {} > {prev}", plan.latency);
+            prev = plan.latency;
+        }
+    }
+
+    #[test]
+    fn paper_scale_projection_is_consistent() {
+        let e = engine("resnet50", 0.1);
+        // Paper-scale wire bytes must scale with full-scale activations.
+        let w = e.wire_bytes(1, 8).unwrap();
+        assert!(w > e.tables.size[0][3], "projection should inflate sizes");
+        assert!(e.image_png_bytes() > 10_000.0, "224² png > 10 KB");
+    }
+
+    #[test]
+    fn mismatched_tables_rejected() {
+        let tables = fake_tables("vgg16", 7); // wrong N
+        let latency =
+            LatencyTables::analytic("vgg16", DeviceModel::TEGRA_X2, DeviceModel::CLOUD_12T)
+                .unwrap();
+        assert!(DecisionEngine::new("vgg16", tables, latency, Scale::Paper, 0.1).is_err());
+    }
+}

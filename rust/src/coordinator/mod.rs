@@ -1,0 +1,24 @@
+//! The JALAD coordinator — the paper's system contribution at L3.
+//!
+//! * [`decision`] — builds the §III-E ILP from the predictor tables +
+//!   latency tables + current bandwidth and solves for `(i*, c)`;
+//! * [`pipeline`] — executes a plan end-to-end in process over a
+//!   simulated channel (edge stages → L1 quant → Huffman → transmit →
+//!   dequant → cloud stages), with full latency breakdowns;
+//! * [`baselines`] — Origin2Cloud / PNG2Cloud / JPEG2Cloud / edge-only /
+//!   Neurosurgeon-style no-compression partitioning (§IV-A, §V);
+//! * [`adaptive`] — the re-decoupling controller: EWMA bandwidth
+//!   estimate drift triggers an ILP re-solve (§III-E);
+//! * [`router`] — request queue + worker pool for the serving deployment.
+
+pub mod adaptive;
+pub mod baselines;
+pub mod decision;
+pub mod pipeline;
+pub mod router;
+
+pub use adaptive::AdaptationController;
+pub use baselines::Baseline;
+pub use decision::{DecisionEngine, Scale};
+pub use pipeline::{LocalPipeline, RunResult};
+pub use router::{Router, RouterConfig};

@@ -1,0 +1,202 @@
+//! Procedural dataset generator — bit-compatible with
+//! `python/compile/data.py` (same PRNG, same seed layout, same bilinear
+//! upsample), up to float rounding in libm (`ln`, `cos`): distributional
+//! parity is the contract, and in practice values agree to ~1e-7.
+//!
+//! `K` classes; class prototype = 8×8×3 Gaussian grid bilinearly
+//! upsampled to 32×32; sample = prototype + σ·noise. σ puts samples near
+//! the class boundaries so quantization produces the paper's
+//! accuracy/bit-width trade-off (see the python twin's rationale).
+
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::XorShift64Star;
+
+pub const NUM_CLASSES: usize = 16;
+pub const HW: usize = 32;
+pub const PROTO_RES: usize = 8;
+/// Noise is smooth (drawn on NOISE_RES and upsampled) so the 8-bit
+/// images stay PNG-compressible — see the python twin's rationale.
+pub const NOISE_RES: usize = 8;
+pub const SIGMA: f32 = 1.2;
+pub const PROTO_SEED: u64 = 0x9E3779B97F4A7C15;
+pub const SAMPLE_SEED: u64 = 0xD1B54A32D192ED03;
+
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// (1, hw, hw, 3) model-space image.
+    pub image: Tensor,
+    pub label: usize,
+}
+
+/// Bilinear upsample (r, r, c) → (hw, hw, c), align_corners=False.
+fn bilinear_upsample(grid: &[f32], r: usize, ch: usize, hw: usize) -> Vec<f32> {
+    let scale = r as f64 / hw as f64;
+    // Precompute per-axis lo index and fraction.
+    let mut lo0 = vec![0usize; hw];
+    let mut lo1 = vec![0usize; hw];
+    let mut frac = vec![0f32; hw];
+    for (i, ((l0, l1), fr)) in lo0.iter_mut().zip(&mut lo1).zip(&mut frac).enumerate() {
+        let coord = (i as f64 + 0.5) * scale - 0.5;
+        let fl = coord.floor();
+        *fr = (coord - fl) as f32;
+        let fl = fl as isize;
+        *l0 = fl.clamp(0, r as isize - 1) as usize;
+        *l1 = (fl + 1).clamp(0, r as isize - 1) as usize;
+    }
+    let mut out = vec![0f32; hw * hw * ch];
+    for y in 0..hw {
+        for x in 0..hw {
+            for c in 0..ch {
+                let g = |yy: usize, xx: usize| grid[(yy * r + xx) * ch + c];
+                let top = g(lo0[y], lo0[x]) * (1.0 - frac[x]) + g(lo0[y], lo1[x]) * frac[x];
+                let bot = g(lo1[y], lo0[x]) * (1.0 - frac[x]) + g(lo1[y], lo1[x]) * frac[x];
+                out[(y * hw + x) * ch + c] = top * (1.0 - frac[y]) + bot * frac[y];
+            }
+        }
+    }
+    out
+}
+
+/// Class prototype field (hw, hw, 3).
+pub fn prototype(class_id: usize, hw: usize) -> Vec<f32> {
+    let mut rng =
+        XorShift64Star::new(PROTO_SEED ^ (class_id as u64).wrapping_mul(0xA0761D6478BD642F));
+    let grid = rng.fill_gaussian(PROTO_RES * PROTO_RES * 3);
+    bilinear_upsample(&grid, PROTO_RES, 3, hw)
+}
+
+/// One labelled sample; returns (pixels hw·hw·3, label).
+pub fn sample(class_id: usize, sample_id: usize, sigma: f32, hw: usize) -> (Vec<f32>, usize) {
+    let mut rng = XorShift64Star::new(
+        SAMPLE_SEED
+            ^ (class_id as u64).wrapping_mul(0xE7037ED1A0B428DB)
+            ^ (sample_id as u64).wrapping_mul(0x8EBC6AF09C88C6E3),
+    );
+    let grid = rng.fill_gaussian(NOISE_RES * NOISE_RES * 3);
+    let noise = bilinear_upsample(&grid, NOISE_RES, 3, hw);
+    // Normalize to unit RMS — exactly as the python twin does.
+    let rms = (noise.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+        / noise.len() as f64)
+        .sqrt()
+        .max(1e-6) as f32;
+    let mut img = prototype(class_id, hw);
+    for (p, n) in img.iter_mut().zip(&noise) {
+        *p += sigma * n / rms;
+    }
+    (img, class_id)
+}
+
+/// Deterministic id → sample mapping (same convention as python
+/// `data.batch`): class = id % K, per-class sample index = id / K.
+pub fn sample_image(id: usize, hw: usize) -> Sample {
+    let (img, label) = sample(id % NUM_CLASSES, id / NUM_CLASSES, SIGMA, hw);
+    Sample { image: Tensor::new(vec![1, hw, hw, 3], img), label }
+}
+
+/// Sample shaped to a model's manifest input (batch dim must be 1).
+pub fn sample_image_shaped(class_id: usize, sample_id: usize, shape: &[usize]) -> Tensor {
+    assert_eq!(shape.len(), 4);
+    assert_eq!(shape[0], 1);
+    assert_eq!(shape[3], 3);
+    let hw = shape[1];
+    let (img, _) = sample(class_id, sample_id, SIGMA, hw);
+    Tensor::new(shape.to_vec(), img)
+}
+
+/// A batch of deterministic samples by id range.
+pub fn batch(ids: impl Iterator<Item = usize>, hw: usize) -> Vec<Sample> {
+    ids.map(|id| sample_image(id, hw)).collect()
+}
+
+/// Model-space f32 → 8-bit RGB (the file Origin2Cloud uploads).
+/// Same affine constants as the python twin.
+pub fn to_rgb8(img: &Tensor) -> Vec<u8> {
+    img.data().iter().map(|&v| (v * 32.0 + 128.0).clamp(0.0, 255.0) as u8).collect()
+}
+
+/// Inverse of [`to_rgb8`] (what the cloud feeds the network).
+pub fn from_rgb8(bytes: &[u8], shape: Vec<usize>) -> Tensor {
+    let data: Vec<f32> = bytes.iter().map(|&b| (b as f32 - 128.0) / 32.0).collect();
+    Tensor::new(shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_distinct() {
+        let a = sample_image(5, HW);
+        let b = sample_image(5, HW);
+        let c = sample_image(6, HW);
+        assert_eq!(a.image, b.image);
+        assert_ne!(a.image, c.image);
+        assert_eq!(a.label, 5 % NUM_CLASSES);
+    }
+
+    #[test]
+    fn image_statistics_sane() {
+        let s = sample_image(3, HW);
+        let d = s.image.data();
+        let mean = d.iter().sum::<f32>() / d.len() as f32;
+        let var = d.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / d.len() as f32;
+        assert!(mean.abs() < 0.6, "mean {mean}");
+        // prototype (≲1) + sigma noise (1.44): total var around 1.5-2.5
+        assert!(var > 0.8 && var < 4.0, "var {var}");
+    }
+
+    #[test]
+    fn prototypes_differ_between_classes() {
+        let p0 = prototype(0, HW);
+        let p1 = prototype(1, HW);
+        let dist: f32 =
+            p0.iter().zip(&p1).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / p0.len() as f32;
+        assert!(dist > 0.1, "classes too close: {dist}");
+    }
+
+    #[test]
+    fn rgb8_roundtrip_error_small() {
+        let s = sample_image(9, HW);
+        let rgb = to_rgb8(&s.image);
+        let back = from_rgb8(&rgb, s.image.shape().to_vec());
+        // 1/32 per gray level → max error 1/64 + clipping tails.
+        let mut big = 0;
+        for (a, b) in s.image.data().iter().zip(back.data()) {
+            if (a - b).abs() > 1.0 / 32.0 {
+                big += 1;
+            }
+        }
+        // Values beyond the ±4.0 representable band clip; with pixel std
+        // ≈1.5 that is a sub-percent tail.
+        assert!(big * 100 < s.image.len(), "{big} clipped of {}", s.image.len());
+    }
+
+    #[test]
+    fn batch_labels_cycle() {
+        let b = batch(0..32, HW);
+        for (i, s) in b.iter().enumerate() {
+            assert_eq!(s.label, i % NUM_CLASSES);
+        }
+    }
+
+    /// Golden cross-language check: first pixels of prototype(0) match
+    /// the python generator (values locked in tests/test_data.py).
+    #[test]
+    fn golden_prototype_values() {
+        let p = prototype(0, HW);
+        // Locked from python: see python/tests/test_data.py golden test.
+        let got: Vec<f32> = p[..4].to_vec();
+        let want = golden::PROTO0_FIRST4;
+        for (g, w) in got.iter().zip(want) {
+            assert!((g - w).abs() < 1e-5, "got {got:?}, want {want:?}");
+        }
+    }
+
+    mod golden {
+        /// Locked from the python twin; regenerate with
+        /// `cd python && python -c "from compile.data import prototype;
+        ///  print([float(x) for x in prototype(0).ravel()[:4]])"`.
+        pub const PROTO0_FIRST4: [f32; 4] =
+            [-1.1834038, 2.1171653, -0.91424388, -1.1834038];
+    }
+}

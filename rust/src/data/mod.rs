@@ -1,0 +1,13 @@
+//! Synthetic ILSVRC substitute (rust side).
+//!
+//! Mirrors `python/compile/data.py` exactly — same xorshift64* streams,
+//! same prototype construction — so the calibration/test images the
+//! runtime mints come from the same distribution the models were trained
+//! on at build time (DESIGN.md substitution table).
+
+pub mod gen;
+
+pub use gen::{
+    batch, from_rgb8, prototype, sample, sample_image, sample_image_shaped, to_rgb8, Sample,
+    HW, NUM_CLASSES, SIGMA,
+};

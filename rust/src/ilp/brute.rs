@@ -1,0 +1,57 @@
+//! Exhaustive 0-1 ILP oracle (≤ ~22 variables) for cross-checking the
+//! branch-and-bound solver in tests and benches.
+
+use super::solver::{Ilp01, Sense, Solution};
+
+/// Enumerate all 2ⁿ assignments; `None` if infeasible.
+pub fn solve(ilp: &Ilp01) -> Option<Solution> {
+    let n = ilp.num_vars();
+    assert!(n <= 22, "brute force capped at 22 vars (got {n})");
+    let mut best: Option<Solution> = None;
+    for mask in 0u64..(1u64 << n) {
+        let x: Vec<bool> = (0..n).map(|i| mask >> i & 1 == 1).collect();
+        if !feasible(ilp, &x) {
+            continue;
+        }
+        let obj: f64 =
+            ilp.costs.iter().zip(&x).filter(|(_, &xi)| xi).map(|(c, _)| c).sum();
+        if best.as_ref().map(|b| obj < b.objective).unwrap_or(true) {
+            best = Some(Solution { assignment: x, objective: obj });
+        }
+    }
+    best
+}
+
+pub fn feasible(ilp: &Ilp01, x: &[bool]) -> bool {
+    for c in &ilp.constraints {
+        let act: f64 = c.coeffs.iter().zip(x).filter(|(_, &xi)| xi).map(|(a, _)| a).sum();
+        let ok = match c.sense {
+            Sense::Le => act <= c.rhs + 1e-9,
+            Sense::Eq => (act - c.rhs).abs() <= 1e-9,
+        };
+        if !ok {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_optimum() {
+        let mut ilp = Ilp01::new(vec![3.0, 1.0, 2.0]);
+        ilp.eq(vec![1.0, 1.0, 1.0], 1.0);
+        let s = solve(&ilp).unwrap();
+        assert_eq!(s.assignment, vec![false, true, false]);
+    }
+
+    #[test]
+    fn reports_infeasible() {
+        let mut ilp = Ilp01::new(vec![1.0]);
+        ilp.eq(vec![1.0], 2.0);
+        assert!(solve(&ilp).is_none());
+    }
+}

@@ -1,0 +1,264 @@
+//! The paper's decoupling ILP (§III-E), built from latency + accuracy
+//! tables and solved exactly.
+//!
+//! Variables: `x_0` = cloud-only (ship the compressed input image,
+//! accuracy loss 0 — this is how JALAD "tends to upload the raw PNG
+//! images" when bandwidth is good, Fig. 8), and `x_ic` for stage
+//! `i ∈ 1..=N`, bit-width `c ∈ 1..=C` = cut after stage `i`, quantize to
+//! `c` bits. `i = N` transmits the logits (the paper's "no decoupling"
+//! corner `x_NC`).
+//!
+//! minimize   Σ (T_E(i) + T_C(i) + S_i(c)/BW) · x_ic
+//! subject to Σ x_ic = 1,     Σ A_i(c) · x_ic ≤ Δα,     x ∈ {0,1}
+//!
+//! Every latency term is a per-variable constant at solve time, exactly
+//! as the paper observes ("T_trans, T_E, T_C are just like constants").
+
+use super::solver::{Ilp01, Solution};
+
+/// Chosen execution plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Ship the (losslessly compressed) input image; run all on cloud.
+    CloudOnly,
+    /// Cut after stage `i` (1-based), quantize features to `c` bits.
+    Cut { i: usize, c: u8 },
+}
+
+/// One fully-materialized ILP instance.
+#[derive(Debug, Clone)]
+pub struct JaladInstance {
+    /// Number of decoupling stages N.
+    pub n: usize,
+    /// Bit-width count C (c ranges 1..=C).
+    pub c_max: u8,
+    /// `t_edge[i-1]` = edge latency through stages 1..=i (seconds).
+    pub t_edge: Vec<f64>,
+    /// `t_cloud[i-1]` = cloud latency of stages i+1..=N (seconds).
+    pub t_cloud: Vec<f64>,
+    /// `size[i-1][c-1]` = S_i(c), compressed feature bytes.
+    pub size: Vec<Vec<f64>>,
+    /// `acc[i-1][c-1]` = A_i(c), accuracy drop in [0,1].
+    pub acc: Vec<Vec<f64>>,
+    /// Cloud-only option: compressed input image bytes.
+    pub image_bytes: f64,
+    /// Cloud-only option: full-model cloud latency (seconds).
+    pub t_cloud_full: f64,
+    /// Current bandwidth, bytes/second.
+    pub bandwidth: f64,
+    /// User accuracy-loss bound Δα in [0,1].
+    pub delta_alpha: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub decision: Decision,
+    /// Predicted total latency (s).
+    pub latency: f64,
+    /// Predicted accuracy drop of the chosen plan.
+    pub acc_drop: f64,
+    /// Predicted transmitted bytes.
+    pub tx_bytes: f64,
+}
+
+impl JaladInstance {
+    fn var_count(&self) -> usize {
+        1 + self.n * self.c_max as usize
+    }
+
+    fn var_index(&self, i: usize, c: u8) -> usize {
+        debug_assert!((1..=self.n).contains(&i) && (1..=self.c_max).contains(&c));
+        1 + (i - 1) * self.c_max as usize + (c as usize - 1)
+    }
+
+    /// Latency of variable `v` (seconds).
+    fn latency_of(&self, v: usize) -> f64 {
+        if v == 0 {
+            return self.image_bytes / self.bandwidth + self.t_cloud_full;
+        }
+        let (i, c) = self.decode_var(v);
+        self.t_edge[i - 1]
+            + self.size[i - 1][c as usize - 1] / self.bandwidth
+            + self.t_cloud[i - 1]
+    }
+
+    fn acc_of(&self, v: usize) -> f64 {
+        if v == 0 {
+            0.0
+        } else {
+            let (i, c) = self.decode_var(v);
+            self.acc[i - 1][c as usize - 1]
+        }
+    }
+
+    fn decode_var(&self, v: usize) -> (usize, u8) {
+        let k = v - 1;
+        let i = k / self.c_max as usize + 1;
+        let c = (k % self.c_max as usize) as u8 + 1;
+        (i, c)
+    }
+
+    /// Build the 0-1 ILP exactly as §III-E writes it.
+    pub fn build_ilp(&self) -> Ilp01 {
+        let nv = self.var_count();
+        let costs: Vec<f64> = (0..nv).map(|v| self.latency_of(v)).collect();
+        let mut ilp = Ilp01::new(costs);
+        ilp.eq(vec![1.0; nv], 1.0);
+        ilp.le((0..nv).map(|v| self.acc_of(v)).collect(), self.delta_alpha);
+        ilp
+    }
+
+    /// Solve and decode into a [`Plan`]. Feasibility: the paper argues a
+    /// solution always exists for Δα > 0 (late layers quantize almost
+    /// losslessly); the cloud-only variable makes it unconditional here.
+    pub fn solve(&self) -> Plan {
+        let ilp = self.build_ilp();
+        let sol = ilp.solve().expect("JALAD ILP always has the cloud-only fallback");
+        self.decode_solution(&sol)
+    }
+
+    pub fn decode_solution(&self, sol: &Solution) -> Plan {
+        let v = sol
+            .assignment
+            .iter()
+            .position(|&x| x)
+            .expect("selection constraint guarantees one pick");
+        let decision = if v == 0 {
+            Decision::CloudOnly
+        } else {
+            let (i, c) = self.decode_var(v);
+            Decision::Cut { i, c }
+        };
+        let tx_bytes = if v == 0 {
+            self.image_bytes
+        } else {
+            let (i, c) = self.decode_var(v);
+            self.size[i - 1][c as usize - 1]
+        };
+        Plan { decision, latency: self.latency_of(v), acc_drop: self.acc_of(v), tx_bytes }
+    }
+
+    /// Exhaustive reference (the instance is tiny): scan all options.
+    pub fn solve_scan(&self) -> Plan {
+        let mut best_v = 0usize;
+        let mut best = f64::INFINITY;
+        for v in 0..self.var_count() {
+            if self.acc_of(v) <= self.delta_alpha + 1e-12 {
+                let l = self.latency_of(v);
+                if l < best {
+                    best = l;
+                    best_v = v;
+                }
+            }
+        }
+        let assignment: Vec<bool> = (0..self.var_count()).map(|v| v == best_v).collect();
+        self.decode_solution(&Solution { assignment, objective: best })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift64Star;
+
+    /// A hand-sized instance with a known optimum.
+    fn toy() -> JaladInstance {
+        JaladInstance {
+            n: 3,
+            c_max: 2,
+            t_edge: vec![0.010, 0.020, 0.030],
+            t_cloud: vec![0.006, 0.003, 0.000],
+            // stage 2 compresses brilliantly; stage 1 is huge.
+            size: vec![
+                vec![4000.0, 8000.0],
+                vec![200.0, 400.0],
+                vec![50.0, 100.0],
+            ],
+            acc: vec![
+                vec![0.30, 0.02], // early cut at c=1 is bad
+                vec![0.15, 0.01],
+                vec![0.05, 0.00],
+            ],
+            image_bytes: 3000.0,
+            t_cloud_full: 0.008,
+            bandwidth: 100_000.0, // 100 KB/s
+            delta_alpha: 0.10,
+        }
+    }
+
+    #[test]
+    fn picks_known_optimum() {
+        let plan = toy().solve();
+        // candidates (latency): cloud-only = 0.03+0.008 = 0.038
+        // (2,c=1): 0.020+0.002+0.003 = 0.025  acc 0.15 > 0.1 infeasible
+        // (2,c=2): 0.020+0.004+0.003 = 0.027  acc 0.01 ok   <-- best
+        // (3,c=1): 0.030+0.0005 = 0.0305 acc 0.05 ok
+        assert_eq!(plan.decision, Decision::Cut { i: 2, c: 2 });
+        assert!((plan.latency - 0.027).abs() < 1e-9, "{}", plan.latency);
+    }
+
+    #[test]
+    fn tight_accuracy_forces_cloud_only() {
+        let mut inst = toy();
+        inst.delta_alpha = 0.0;
+        // Only acc == 0 options: cloud-only (0.038) and (3,c=2) (0.031).
+        let plan = inst.solve();
+        assert_eq!(plan.decision, Decision::Cut { i: 3, c: 2 });
+        inst.acc[2][1] = 0.001; // now nothing but cloud-only is lossless
+        let plan = inst.solve();
+        assert_eq!(plan.decision, Decision::CloudOnly);
+    }
+
+    #[test]
+    fn high_bandwidth_prefers_cloud_only() {
+        let mut inst = toy();
+        inst.bandwidth = 1e9; // transmission free → lowest compute wins
+        let plan = inst.solve();
+        // cloud-only = t_cloud_full = 8 ms beats any edge compute path.
+        assert_eq!(plan.decision, Decision::CloudOnly);
+    }
+
+    #[test]
+    fn ilp_matches_scan_on_random_instances() {
+        let mut rng = XorShift64Star::new(0xBEEF);
+        for trial in 0..40 {
+            let n = 2 + rng.below(12) as usize;
+            let c_max = 1 + rng.below(8) as u8;
+            let inst = JaladInstance {
+                n,
+                c_max,
+                t_edge: (0..n).map(|i| (i + 1) as f64 * 0.002).collect(),
+                t_cloud: (0..n).map(|i| (n - i) as f64 * 0.001).collect(),
+                size: (0..n)
+                    .map(|_| {
+                        (1..=c_max).map(|_| 50.0 + rng.below(10_000) as f64).collect()
+                    })
+                    .collect(),
+                acc: (0..n)
+                    .map(|_| (1..=c_max).map(|_| rng.next_f64() * 0.3).collect())
+                    .collect(),
+                image_bytes: 3000.0,
+                t_cloud_full: 0.008,
+                bandwidth: 10_000.0 + rng.below(2_000_000) as f64,
+                delta_alpha: rng.next_f64() * 0.2,
+            };
+            let a = inst.solve();
+            let b = inst.solve_scan();
+            assert!(
+                (a.latency - b.latency).abs() < 1e-9,
+                "trial {trial}: ilp {a:?} vs scan {b:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn decision_respects_accuracy_bound() {
+        let mut rng = XorShift64Star::new(77);
+        for _ in 0..20 {
+            let mut inst = toy();
+            inst.delta_alpha = rng.next_f64() * 0.3;
+            let plan = inst.solve();
+            assert!(plan.acc_drop <= inst.delta_alpha + 1e-12);
+        }
+    }
+}

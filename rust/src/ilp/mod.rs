@@ -1,0 +1,22 @@
+//! 0-1 Integer Linear Programming for the decoupling decision (§III-E).
+//!
+//! The paper formulates choosing the decoupling layer `i*` and bit-width
+//! `c` as a 0-1 ILP over `x_ic` with one selection constraint
+//! (`Σ x_ic = 1`) and one accuracy constraint (`Σ A_i(c)·x_ic ≤ Δα`),
+//! noting that a fixed-variable-count 0-1 ILP solves in polynomial time
+//! (Lenstra '83) — their desktop solves it in 1.77 ms.
+//!
+//! * [`solver`] — a generic 0-1 branch-and-bound minimizer with LP-free
+//!   bounding (suitable for the small, structured instances here, and
+//!   exact);
+//! * [`brute`] — exhaustive oracle used to cross-check the solver in
+//!   tests and property tests;
+//! * [`jalad`] — the paper's concrete formulation built from latency and
+//!   accuracy tables, plus helpers to build instances from predictors.
+
+pub mod brute;
+pub mod jalad;
+pub mod solver;
+
+pub use jalad::{Decision, JaladInstance};
+pub use solver::{Ilp01, Solution, SolveStats};

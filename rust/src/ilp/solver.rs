@@ -1,0 +1,284 @@
+//! Exact 0-1 ILP branch-and-bound minimizer.
+//!
+//! Model: minimize `cᵀx`, subject to `≤` / `=` linear constraints over
+//! binary variables. General enough for the JALAD instance (selection +
+//! knapsack-style accuracy bound) and the ablation variants (multi-cut,
+//! per-link budgets), while staying exact:
+//!
+//! * depth-first branch and bound, branching on the lowest-index
+//!   undecided variable (most-fractional heuristics don't pay off at
+//!   this size);
+//! * bounding: optimistic completion = sum of negative remaining costs;
+//!   feasibility pruning per constraint from remaining min/max
+//!   achievable row activity;
+//! * equality constraints are treated as a pair of `≤` rows internally.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Eq,
+}
+
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub coeffs: Vec<f64>,
+    pub sense: Sense,
+    pub rhs: f64,
+}
+
+/// minimize costs·x  s.t. constraints, x ∈ {0,1}ⁿ.
+#[derive(Debug, Clone, Default)]
+pub struct Ilp01 {
+    pub costs: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Solution {
+    pub assignment: Vec<bool>,
+    pub objective: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SolveStats {
+    pub nodes: u64,
+    pub pruned_bound: u64,
+    pub pruned_infeasible: u64,
+}
+
+impl Ilp01 {
+    pub fn new(costs: Vec<f64>) -> Self {
+        Self { costs, constraints: Vec::new() }
+    }
+
+    pub fn le(&mut self, coeffs: Vec<f64>, rhs: f64) -> &mut Self {
+        assert_eq!(coeffs.len(), self.costs.len());
+        self.constraints.push(Constraint { coeffs, sense: Sense::Le, rhs });
+        self
+    }
+
+    pub fn eq(&mut self, coeffs: Vec<f64>, rhs: f64) -> &mut Self {
+        assert_eq!(coeffs.len(), self.costs.len());
+        self.constraints.push(Constraint { coeffs, sense: Sense::Eq, rhs });
+        self
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.costs.len()
+    }
+
+    /// Solve exactly; `None` if infeasible.
+    pub fn solve(&self) -> Option<Solution> {
+        self.solve_with_stats().0
+    }
+
+    pub fn solve_with_stats(&self) -> (Option<Solution>, SolveStats) {
+        let n = self.costs.len();
+        // Expand Eq into two Le rows.
+        let mut rows: Vec<(Vec<f64>, f64)> = Vec::new();
+        for c in &self.constraints {
+            rows.push((c.coeffs.clone(), c.rhs));
+            if c.sense == Sense::Eq {
+                rows.push((c.coeffs.iter().map(|v| -v).collect(), -c.rhs));
+            }
+        }
+        // Per-row suffix min/max activity achievable from variables ≥ k.
+        let m = rows.len();
+        let mut suffix_min = vec![vec![0f64; n + 1]; m];
+        let mut suffix_max = vec![vec![0f64; n + 1]; m];
+        for (r, (coeffs, _)) in rows.iter().enumerate() {
+            for k in (0..n).rev() {
+                let a = coeffs[k];
+                suffix_min[r][k] = suffix_min[r][k + 1] + a.min(0.0);
+                suffix_max[r][k] = suffix_max[r][k + 1] + a.max(0.0);
+            }
+        }
+        // Suffix sum of negative costs = optimistic completion of objective.
+        let mut opt_completion = vec![0f64; n + 1];
+        for k in (0..n).rev() {
+            opt_completion[k] = opt_completion[k + 1] + self.costs[k].min(0.0);
+        }
+
+        struct Ctx<'a> {
+            ilp: &'a Ilp01,
+            rows: Vec<(Vec<f64>, f64)>,
+            suffix_min: Vec<Vec<f64>>,
+            suffix_max: Vec<Vec<f64>>,
+            opt_completion: Vec<f64>,
+            best: Option<Solution>,
+            stats: SolveStats,
+            x: Vec<bool>,
+            activity: Vec<f64>,
+            cost_so_far: f64,
+        }
+
+        fn dfs(ctx: &mut Ctx<'_>, k: usize) {
+            ctx.stats.nodes += 1;
+            let n = ctx.ilp.costs.len();
+            // Bound: even the best completion can't beat the incumbent.
+            if let Some(best) = &ctx.best {
+                if ctx.cost_so_far + ctx.opt_completion[k] >= best.objective - 1e-12 {
+                    ctx.stats.pruned_bound += 1;
+                    return;
+                }
+            }
+            // Feasibility: each row must still be satisfiable.
+            for (r, (_, rhs)) in ctx.rows.iter().enumerate() {
+                if ctx.activity[r] + ctx.suffix_min[r][k] > rhs + 1e-9 {
+                    ctx.stats.pruned_infeasible += 1;
+                    return;
+                }
+            }
+            if k == n {
+                let sol = Solution { assignment: ctx.x.clone(), objective: ctx.cost_so_far };
+                if ctx.best.as_ref().map(|b| sol.objective < b.objective).unwrap_or(true) {
+                    ctx.best = Some(sol);
+                }
+                return;
+            }
+            // Branch. Try the cheaper direction first.
+            let order = if ctx.ilp.costs[k] <= 0.0 { [true, false] } else { [false, true] };
+            for &take in &order {
+                ctx.x[k] = take;
+                if take {
+                    for (r, (coeffs, _)) in ctx.rows.iter().enumerate() {
+                        ctx.activity[r] += coeffs[k];
+                    }
+                    ctx.cost_so_far += ctx.ilp.costs[k];
+                }
+                dfs(ctx, k + 1);
+                if take {
+                    for (r, (coeffs, _)) in ctx.rows.iter().enumerate() {
+                        ctx.activity[r] -= coeffs[k];
+                    }
+                    ctx.cost_so_far -= ctx.ilp.costs[k];
+                }
+            }
+            ctx.x[k] = false;
+        }
+
+        let mut ctx = Ctx {
+            ilp: self,
+            activity: vec![0.0; rows.len()],
+            rows,
+            suffix_min,
+            suffix_max,
+            opt_completion,
+            best: None,
+            stats: SolveStats::default(),
+            x: vec![false; n],
+            cost_so_far: 0.0,
+        };
+        dfs(&mut ctx, 0);
+        let _ = &ctx.suffix_max; // kept for symmetric pruning extensions
+        (ctx.best, ctx.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::brute;
+    use crate::util::prop;
+    use crate::util::rng::XorShift64Star;
+
+    #[test]
+    fn unconstrained_picks_negatives() {
+        let ilp = Ilp01::new(vec![1.0, -2.0, 3.0, -0.5]);
+        let s = ilp.solve().unwrap();
+        assert_eq!(s.assignment, vec![false, true, false, true]);
+        assert!((s.objective + 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn selection_constraint() {
+        // pick exactly one, cheapest feasible under a "weight" cap
+        let mut ilp = Ilp01::new(vec![5.0, 3.0, 4.0]);
+        ilp.eq(vec![1.0, 1.0, 1.0], 1.0);
+        ilp.le(vec![0.0, 10.0, 0.0], 5.0); // forbids the cheapest (index 1)
+        let s = ilp.solve().unwrap();
+        assert_eq!(s.assignment, vec![false, false, true]);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut ilp = Ilp01::new(vec![1.0, 1.0]);
+        ilp.eq(vec![1.0, 1.0], 1.0);
+        ilp.le(vec![1.0, 1.0], 0.0); // cannot pick any, contradicts eq
+        assert!(ilp.solve().is_none());
+    }
+
+    #[test]
+    fn knapsack_small() {
+        // maximize value = minimize -value under weight cap
+        let values = [6.0, 10.0, 12.0];
+        let weights = [1.0, 2.0, 3.0];
+        let mut ilp = Ilp01::new(values.iter().map(|v| -v).collect());
+        ilp.le(weights.to_vec(), 5.0);
+        let s = ilp.solve().unwrap();
+        assert_eq!(s.assignment, vec![false, true, true]);
+        assert!((s.objective + 22.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_bruteforce_on_random_instances() {
+        let mut rng = XorShift64Star::new(0xDECAF);
+        for trial in 0..60 {
+            let n = 3 + (rng.below(9) as usize); // up to 11 vars
+            let costs: Vec<f64> =
+                (0..n).map(|_| rng.next_gaussian_pair().0 * 10.0).collect();
+            let mut ilp = Ilp01::new(costs);
+            // random ≤ constraint
+            let coeffs: Vec<f64> = (0..n).map(|_| rng.below(10) as f64).collect();
+            let cap = rng.below(20) as f64;
+            ilp.le(coeffs, cap);
+            // optional selection constraint
+            if rng.below(2) == 1 {
+                ilp.eq(vec![1.0; n], 1.0);
+            }
+            let got = ilp.solve();
+            let want = brute::solve(&ilp);
+            match (got, want) {
+                (None, None) => {}
+                (Some(g), Some(w)) => {
+                    assert!(
+                        (g.objective - w.objective).abs() < 1e-9,
+                        "trial {trial}: {} vs {}",
+                        g.objective,
+                        w.objective
+                    );
+                }
+                (g, w) => panic!("trial {trial}: solver {g:?} vs brute {w:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn prop_solution_is_feasible() {
+        prop::check(
+            "b&b solution satisfies all constraints",
+            prop::usize_in(2, 10),
+            |&n| {
+                let mut rng = XorShift64Star::new(n as u64 * 7 + 1);
+                let costs: Vec<f64> = (0..n).map(|_| rng.next_gaussian_pair().0 * 5.0).collect();
+                let mut ilp = Ilp01::new(costs);
+                let coeffs: Vec<f64> = (0..n).map(|_| rng.below(6) as f64).collect();
+                ilp.le(coeffs.clone(), 7.0);
+                ilp.eq(vec![1.0; n], 1.0);
+                match ilp.solve() {
+                    None => true,
+                    Some(s) => {
+                        let act: f64 = coeffs
+                            .iter()
+                            .zip(&s.assignment)
+                            .filter(|(_, &x)| x)
+                            .map(|(a, _)| a)
+                            .sum();
+                        let picked = s.assignment.iter().filter(|&&x| x).count();
+                        act <= 7.0 + 1e-9 && picked == 1
+                    }
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! # JALAD — Joint Accuracy- and Latency-Aware Deep Structure Decoupling
+//!
+//! Rust reproduction of *JALAD: Joint Accuracy- and Latency-Aware Deep
+//! Structure Decoupling for Edge-Cloud Execution* (Li et al., IEEE
+//! PADSW 2018). A pre-trained CNN is cut at a decoupling point `i*`:
+//! stages `1..i*` run on the edge device, the stage-`i*` feature map is
+//! affine-quantized to `c` bits, entropy-coded, shipped to the cloud,
+//! dequantized and finished there. `(i*, c)` minimizes total latency
+//! under a user accuracy-loss bound via a 0-1 ILP, and is re-solved as
+//! bandwidth drifts.
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! * **L1** Pallas quantize/dequantize (+ conv) kernels — compiled AOT
+//!   from python, executed here through PJRT;
+//! * **L2** stage-sliced JAX models (VGG-16/19, ResNet-50/101,
+//!   TinyConv) — one HLO artifact per decoupling point;
+//! * **L3** this crate: the entire request path. Python never runs at
+//!   request time.
+//!
+//! Crate map:
+//! * [`runtime`] — PJRT client, artifact registry, lazy-compiled stage
+//!   executor;
+//! * [`compression`] — feature wire codec (bit-packing + canonical
+//!   Huffman), LZ77/deflate, PNG-like and JPEG-like image codecs for the
+//!   baselines;
+//! * [`ilp`] — 0-1 branch-and-bound ILP solver + the paper's
+//!   formulation;
+//! * [`predictor`] — the `A_i(c)` / `S_i(c)` lookup tables (§III-C);
+//! * [`profiler`] — measured stage latencies + the paper's analytic
+//!   FMAC/FLOPS device model (§IV-A);
+//! * [`network`] — simulated channels, bandwidth traces, token-bucket
+//!   throttling, EWMA estimation;
+//! * [`coordinator`] — decision engine, edge/cloud pipelines, baselines,
+//!   adaptation controller, request router;
+//! * [`server`] — real TCP edge/cloud deployment over a throttled link;
+//! * [`models`] — stage metadata + full-scale analytic FMAC tables;
+//! * [`data`] — the synthetic ILSVRC substitute (mirrors
+//!   `python/compile/data.py`);
+//! * [`metrics`] — latency histograms and breakdowns;
+//! * [`util`] — from-scratch substrates: JSON, CLI, bench harness,
+//!   property testing, threadpool (the offline vendor set has no serde/
+//!   clap/criterion/proptest/tokio).
+
+pub mod compression;
+pub mod coordinator;
+pub mod data;
+pub mod ilp;
+pub mod metrics;
+pub mod models;
+pub mod network;
+pub mod predictor;
+pub mod profiler;
+pub mod runtime;
+pub mod server;
+pub mod util;
+
+/// Quantization bit-widths the runtime supports: `c ∈ 1..=C_MAX`.
+/// Must match `python/compile/aot.py::C_MAX` (manifest carries it too).
+pub const C_MAX: u8 = 8;
+
+/// Workspace-relative default artifact directory.
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";

@@ -1,0 +1,144 @@
+//! `jalad` — the leader CLI: calibrate, decide, serve, infer, profile.
+//!
+//! ```text
+//! jalad calibrate --model vgg16            # build A_i(c)/S_i(c) tables
+//! jalad decide --model vgg16 --bw 300000   # print the ILP plan
+//! jalad serve-cloud --addr 127.0.0.1:7878  # run the cloud server
+//! jalad infer --model resnet50 --bw 125000 --requests 20
+//! jalad profile --model vgg16              # per-stage wall clocks
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use jalad::coordinator::{AdaptationController, DecisionEngine, LocalPipeline, Scale};
+use jalad::ilp::Decision;
+use jalad::network::SimChannel;
+use jalad::predictor::Tables;
+use jalad::profiler::{measure_stages, DeviceModel, LatencyTables};
+use jalad::runtime::{Executor, Manifest, SharedExecutor};
+use jalad::server::CloudServer;
+use jalad::util::cli::Args;
+
+fn main() {
+    jalad::util::logging::init();
+    let args = Args::new(
+        "jalad",
+        "joint accuracy- and latency-aware deep structure decoupling (PADSW'18)",
+    )
+    .opt("artifacts", "artifacts", "artifact directory (make artifacts)")
+    .opt("model", "vgg16", "model name (vgg16|vgg19|resnet50|resnet101|tinyconv)")
+    .opt("bw", "125000", "edge-cloud bandwidth, bytes/second")
+    .opt("delta-alpha", "0.10", "accuracy-loss bound Δα")
+    .opt("addr", "127.0.0.1:7878", "cloud server address")
+    .opt("requests", "20", "request count for `infer`")
+    .opt("edge-device", "tegra-x2", "edge device for paper-scale decisions")
+    .opt("cloud-device", "cloud-12T", "cloud device for paper-scale decisions")
+    .flag("paper-scale", "use the paper's analytic FMAC/FLOPS latency model")
+    .parse_env();
+
+    let command = args.positional().first().cloned().unwrap_or_else(|| {
+        eprintln!("{}", args.usage());
+        eprintln!("COMMANDS: calibrate | decide | serve-cloud | infer | profile");
+        std::process::exit(2);
+    });
+
+    if let Err(e) = run(&command, &args) {
+        eprintln!("jalad {command}: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn engine(args: &Args, exe: &Executor) -> Result<DecisionEngine> {
+    let model = args.get("model");
+    let tables = Tables::load_or_build(exe, model, args.get("artifacts"))?;
+    let (latency, scale) = if args.get_flag("paper-scale") {
+        let edge = DeviceModel::by_name(args.get("edge-device"))
+            .ok_or_else(|| anyhow!("unknown edge device"))?;
+        let cloud = DeviceModel::by_name(args.get("cloud-device"))
+            .ok_or_else(|| anyhow!("unknown cloud device"))?;
+        (
+            LatencyTables::analytic(model, edge, cloud)
+                .ok_or_else(|| anyhow!("no full-scale table for {model}"))?,
+            Scale::Paper,
+        )
+    } else {
+        (LatencyTables::measured(exe, model, 3, 4.0)?, Scale::Measured)
+    };
+    DecisionEngine::new(model, tables, latency, scale, args.get_f64("delta-alpha"))
+}
+
+fn run(command: &str, args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").to_string();
+    match command {
+        "calibrate" => {
+            let exe = Executor::new(Manifest::load(&dir)?)?;
+            let model = args.get("model");
+            let t = Tables::load_or_build(&exe, model, &dir)?;
+            println!(
+                "{model}: {} stages, base accuracy {:.3}, c grid {:?} (cached under {dir}/tables)",
+                t.num_stages(),
+                t.base_accuracy,
+                t.c_grid
+            );
+        }
+        "decide" => {
+            let exe = Executor::new(Manifest::load(&dir)?)?;
+            let engine = engine(args, &exe)?;
+            let bw = args.get_f64("bw");
+            let plan = engine.decide(bw);
+            println!(
+                "model={} bw={:.0} B/s Δα={}: {:?}  latency={:.2} ms  acc_drop={:.3}  tx={:.0} B",
+                args.get("model"),
+                bw,
+                args.get("delta-alpha"),
+                plan.decision,
+                plan.latency * 1e3,
+                plan.acc_drop,
+                plan.tx_bytes
+            );
+        }
+        "serve-cloud" => {
+            let exe = Arc::new(SharedExecutor::new(Manifest::load(&dir)?)?);
+            let server = Arc::new(CloudServer::new(exe));
+            let (addr, handle) = Arc::clone(&server).spawn(args.get("addr"))?;
+            println!("cloud server on {addr} (Ctrl-C or a Shutdown frame stops it)");
+            handle.join().ok();
+        }
+        "infer" => {
+            let exe = Executor::new(Manifest::load(&dir)?)?;
+            let eng = engine(args, &exe)?;
+            let model = args.get("model");
+            let pipe = LocalPipeline::new(&exe, model);
+            let mut controller = AdaptationController::new(eng, args.get_f64("bw"));
+            let mut channel = SimChannel::constant(args.get_f64("bw"));
+            let mut correct = 0usize;
+            let n = args.get_usize("requests");
+            for id in 0..n {
+                let s = jalad::data::gen::sample_image(9000 + id, 32);
+                let plan = controller.plan().clone();
+                let r = pipe.run(&s, plan.decision, &mut channel)?;
+                correct += r.correct as usize;
+                println!("req {id:3}  {:?}  {}", r.decision, r.breakdown.summary());
+            }
+            println!("accuracy {}/{n}", correct);
+        }
+        "profile" => {
+            let exe = Executor::new(Manifest::load(&dir)?)?;
+            let model = args.get("model");
+            let t = measure_stages(&exe, model, 5)?;
+            println!("{model}: per-stage median seconds");
+            for (i, s) in t.iter().enumerate() {
+                println!("  stage {:2}  {:9.3} ms", i + 1, s * 1e3);
+            }
+            println!("  total    {:9.3} ms", t.iter().sum::<f64>() * 1e3);
+        }
+        other => {
+            return Err(anyhow!(
+                "unknown command {other:?} (calibrate|decide|serve-cloud|infer|profile)"
+            ))
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! Serving metrics: latency histograms, counters, per-request breakdown.
+//!
+//! Everything the paper reports is a latency decomposition
+//! (edge compute + transmission + cloud compute); [`Breakdown`] carries
+//! those fields per request and [`Histogram`] aggregates distributions
+//! for the server's stats endpoint and the bench harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::stats;
+
+/// Per-request latency decomposition, seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Breakdown {
+    pub edge_compute: f64,
+    pub quantize: f64,
+    pub encode: f64,
+    pub transmit: f64,
+    pub decode: f64,
+    pub dequantize: f64,
+    pub cloud_compute: f64,
+    /// Wire bytes actually shipped.
+    pub tx_bytes: usize,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.edge_compute
+            + self.quantize
+            + self.encode
+            + self.transmit
+            + self.decode
+            + self.dequantize
+            + self.cloud_compute
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "total {:.2} ms (edge {:.2} + quant {:.2} + enc {:.2} + tx {:.2} + dec {:.2} + deq {:.2} + cloud {:.2}), {} B on wire",
+            self.total() * 1e3,
+            self.edge_compute * 1e3,
+            self.quantize * 1e3,
+            self.encode * 1e3,
+            self.transmit * 1e3,
+            self.decode * 1e3,
+            self.dequantize * 1e3,
+            self.cloud_compute * 1e3,
+            self.tx_bytes
+        )
+    }
+}
+
+/// Reservoir-less latency histogram: stores all samples (evaluation runs
+/// are bounded) and reports percentiles on demand.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        stats::percentile(&self.samples, p)
+    }
+
+    pub fn summary(&self, unit_scale: f64, unit: &str) -> String {
+        format!(
+            "n={} mean={:.2}{unit} p50={:.2}{unit} p95={:.2}{unit} p99={:.2}{unit}",
+            self.len(),
+            self.mean() * unit_scale,
+            self.percentile(50.0) * unit_scale,
+            self.percentile(95.0) * unit_scale,
+            self.percentile(99.0) * unit_scale,
+        )
+    }
+}
+
+/// Cheap thread-safe counters for the servers.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub bytes_tx: AtomicU64,
+    pub redecouples: AtomicU64,
+}
+
+impl Counters {
+    pub fn inc_requests(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn inc_errors(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add_bytes(&self, n: u64) {
+        self.bytes_tx.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn inc_redecouples(&self) {
+        self.redecouples.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.requests.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.bytes_tx.load(Ordering::Relaxed),
+            self.redecouples.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_sums_components() {
+        let b = Breakdown {
+            edge_compute: 0.01,
+            quantize: 0.002,
+            encode: 0.003,
+            transmit: 0.1,
+            decode: 0.001,
+            dequantize: 0.002,
+            cloud_compute: 0.005,
+            tx_bytes: 123,
+        };
+        assert!((b.total() - 0.123).abs() < 1e-12);
+        assert!(b.summary().contains("123 B"));
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.len(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert!((h.percentile(50.0) - 50.5).abs() < 1.0);
+        assert!(h.percentile(99.0) > 98.0);
+    }
+
+    #[test]
+    fn counters_are_threadsafe() {
+        let c = std::sync::Arc::new(Counters::default());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let c = std::sync::Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc_requests();
+                        c.add_bytes(10);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let (req, _, bytes, _) = c.snapshot();
+        assert_eq!(req, 4000);
+        assert_eq!(bytes, 40_000);
+    }
+}

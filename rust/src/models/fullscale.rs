@@ -1,0 +1,203 @@
+//! Paper-scale analytic stage tables: FMACs and activation sizes for
+//! VGG-16/19 and ResNet-50/101 at 224×224 / ImageNet widths.
+//!
+//! Stage granularity matches §III-A (and our exported artifacts): one
+//! stage per conv/fc layer for VGG (pool fused into the closing conv of
+//! a block), one per res-unit for ResNet (stem and head are stages).
+//! The FMAC counts agree with the usual published figures (VGG-16 ≈
+//! 15.5 GFMACs, ResNet-50 ≈ 4.1 GFMACs — see the `totals_match_published`
+//! test), which is what the paper's `T = w·Q/F` device model consumes.
+
+/// One decoupling stage of the full-scale model.
+#[derive(Debug, Clone)]
+pub struct FullStage {
+    pub name: String,
+    /// Multiply-accumulate operations in this stage.
+    pub fmacs: u64,
+    /// Elements of the stage's output activation (batch 1).
+    pub out_elems: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct FullModel {
+    pub name: &'static str,
+    pub input_elems: u64,
+    /// 8-bit RGB input file size (the paper's raw upload), bytes.
+    pub input_rgb_bytes: u64,
+    pub stages: Vec<FullStage>,
+}
+
+impl FullModel {
+    pub fn total_fmacs(&self) -> u64 {
+        self.stages.iter().map(|s| s.fmacs).sum()
+    }
+
+    /// Cumulative FMACs through stage i (1-based); i=0 → 0.
+    pub fn fmacs_to(&self, i: usize) -> u64 {
+        self.stages[..i].iter().map(|s| s.fmacs).sum()
+    }
+
+    /// FMACs of stages i+1..N.
+    pub fn fmacs_from(&self, i: usize) -> u64 {
+        self.stages[i..].iter().map(|s| s.fmacs).sum()
+    }
+}
+
+/// Conv stage computing on an `hw`×`hw` grid with a `k`×`k` kernel.
+fn conv(name: &str, hw: u64, k: u64, cin: u64, cout: u64) -> FullStage {
+    FullStage {
+        name: name.to_string(),
+        fmacs: hw * hw * k * k * cin * cout,
+        out_elems: hw * hw * cout,
+    }
+}
+
+fn fc(name: &str, nin: u64, nout: u64) -> FullStage {
+    FullStage { name: name.to_string(), fmacs: nin * nout, out_elems: nout }
+}
+
+fn vgg(name: &'static str, blocks: &[(u64, u64)]) -> FullModel {
+    let mut stages = Vec::new();
+    let mut hw = 224u64;
+    let mut cin = 3u64;
+    for (bi, &(convs, ch)) in blocks.iter().enumerate() {
+        for ci in 0..convs {
+            let last = ci == convs - 1;
+            // conv computes at `hw`; the closing pool shrinks the
+            // activation that would be shipped across the cut.
+            let mut s = conv(
+                &format!("conv{}_{}{}", bi + 1, ci + 1, if last { "_pool" } else { "" }),
+                hw,
+                3,
+                cin,
+                ch,
+            );
+            if last {
+                hw /= 2;
+                s.out_elems = hw * hw * ch;
+            }
+            stages.push(s);
+            cin = ch;
+        }
+    }
+    // 7·7·512 = 25088 → 4096 → 4096 → 1000
+    stages.push(fc("fc1", hw * hw * cin, 4096));
+    stages.push(fc("fc2", 4096, 4096));
+    stages.push(fc("logits", 4096, 1000));
+    FullModel {
+        name,
+        input_elems: 224 * 224 * 3,
+        input_rgb_bytes: 224 * 224 * 3,
+        stages,
+    }
+}
+
+fn resnet(name: &'static str, groups: &[(u64, u64, u64)]) -> FullModel {
+    let mut stages = Vec::new();
+    // Stem: 7x7/2 conv (112²·64) + 3x3/2 maxpool → 56²·64.
+    stages.push(FullStage {
+        name: "stem".into(),
+        fmacs: 112 * 112 * 7 * 7 * 3 * 64,
+        out_elems: 56 * 56 * 64,
+    });
+    let mut hw = 56u64;
+    let mut cin = 64u64;
+    for (gi, &(units, width, first_stride)) in groups.iter().enumerate() {
+        let cout = width * 4;
+        for ui in 0..units {
+            let stride = if ui == 0 { first_stride } else { 1 };
+            let out_hw = hw / stride;
+            let project = stride != 1 || cin != cout;
+            let mut fmacs = hw * hw * cin * width; // 1x1 (computed pre-stride)
+            fmacs += out_hw * out_hw * 9 * width * width; // 3x3 (strided)
+            fmacs += out_hw * out_hw * width * cout; // 1x1 expand
+            if project {
+                fmacs += out_hw * out_hw * cin * cout;
+            }
+            stages.push(FullStage {
+                name: format!("unit{}_{}", gi + 1, ui + 1),
+                fmacs,
+                out_elems: out_hw * out_hw * cout,
+            });
+            cin = cout;
+            hw = out_hw;
+        }
+    }
+    stages.push(fc("head", cin, 1000));
+    FullModel { name, input_elems: 224 * 224 * 3, input_rgb_bytes: 224 * 224 * 3, stages }
+}
+
+/// Paper-scale stage table by model name (same names as the manifest).
+pub fn fullscale_stages(model: &str) -> Option<FullModel> {
+    match model {
+        "vgg16" => Some(vgg("vgg16", &[(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)])),
+        "vgg19" => Some(vgg("vgg19", &[(2, 64), (2, 128), (4, 256), (4, 512), (4, 512)])),
+        "resnet50" => {
+            Some(resnet("resnet50", &[(3, 64, 1), (4, 128, 2), (6, 256, 2), (3, 512, 2)]))
+        }
+        "resnet101" => {
+            Some(resnet("resnet101", &[(3, 64, 1), (4, 128, 2), (23, 256, 2), (3, 512, 2)]))
+        }
+        // tinyconv has no paper-scale twin; simulation uses scaled FMACs.
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_match_published() {
+        // Published FMAC figures (±5%): VGG16 15.5G, VGG19 19.6G,
+        // ResNet50 4.1G, ResNet101 7.8G.
+        let cases = [
+            ("vgg16", 15.5e9),
+            ("vgg19", 19.6e9),
+            ("resnet50", 4.1e9),
+            ("resnet101", 7.8e9),
+        ];
+        for (name, want) in cases {
+            let m = fullscale_stages(name).unwrap();
+            let got = m.total_fmacs() as f64;
+            let ratio = got / want;
+            assert!(
+                (0.90..=1.10).contains(&ratio),
+                "{name}: {:.2}G vs published {:.2}G",
+                got / 1e9,
+                want / 1e9
+            );
+        }
+    }
+
+    #[test]
+    fn stage_counts_match_decoupling_points() {
+        assert_eq!(fullscale_stages("vgg16").unwrap().stages.len(), 16);
+        assert_eq!(fullscale_stages("vgg19").unwrap().stages.len(), 19);
+        assert_eq!(fullscale_stages("resnet50").unwrap().stages.len(), 18);
+        assert_eq!(fullscale_stages("resnet101").unwrap().stages.len(), 35);
+    }
+
+    #[test]
+    fn amplification_exists_in_early_layers() {
+        // Paper Fig. 2: early in-layer features dwarf the 8-bit input.
+        for name in ["vgg16", "resnet50"] {
+            let m = fullscale_stages(name).unwrap();
+            let amp = m.stages[0].out_elems as f64 * 4.0 / m.input_rgb_bytes as f64;
+            assert!(amp > 5.0, "{name}: amplification {amp}");
+        }
+    }
+
+    #[test]
+    fn cumulative_splits_are_consistent() {
+        let m = fullscale_stages("resnet50").unwrap();
+        for i in 0..=m.stages.len() {
+            assert_eq!(m.fmacs_to(i) + m.fmacs_from(i), m.total_fmacs());
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(fullscale_stages("tinyconv").is_none());
+    }
+}

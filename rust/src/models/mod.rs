@@ -1,0 +1,14 @@
+//! Model metadata: the paper-scale (224×224, full-width) analytic stage
+//! tables used by the latency simulation, alongside the scaled execution
+//! models described by the artifact manifest.
+//!
+//! The paper's own simulation experiments (§IV-A) estimate device time
+//! as `T = w · Q(x)/F` from per-layer FMAC counts `Q`; [`fullscale`]
+//! reconstructs those counts for VGG-16/19 and ResNet-50/101 exactly as
+//! published (224×224 inputs, ImageNet widths), stage-aligned with our
+//! scaled executables so measured compression ratios can be projected
+//! onto paper-scale feature sizes.
+
+pub mod fullscale;
+
+pub use fullscale::{fullscale_stages, FullStage, FullModel};

@@ -1,0 +1,126 @@
+//! Simulated edge↔cloud channel for the in-process evaluation pipeline.
+//!
+//! The paper's transmission model is `T_trans = S_i(c) / BW` (§III-D);
+//! we add an optional fixed RTT term and trace-driven time variation.
+//! The channel keeps a virtual clock so back-to-back transfers queue
+//! behind each other like a real uplink.
+
+use super::trace::BandwidthTrace;
+
+#[derive(Debug, Clone)]
+pub struct SimChannel {
+    trace: BandwidthTrace,
+    rtt: f64,
+    /// Virtual time (seconds since channel creation).
+    now: f64,
+    /// Totals for metrics.
+    pub bytes_sent: u64,
+    pub transfers: u64,
+}
+
+impl SimChannel {
+    pub fn new(trace: BandwidthTrace, rtt: f64) -> Self {
+        Self { trace, rtt, now: 0.0, bytes_sent: 0, transfers: 0 }
+    }
+
+    pub fn constant(bytes_per_sec: f64) -> Self {
+        Self::new(BandwidthTrace::constant(bytes_per_sec), 0.0)
+    }
+
+    /// Current bandwidth (bytes/s) at the virtual clock.
+    pub fn bandwidth_now(&self) -> f64 {
+        self.trace.at(self.now)
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance the virtual clock by non-transfer work (compute).
+    pub fn advance(&mut self, seconds: f64) {
+        self.now += seconds.max(0.0);
+    }
+
+    /// Transfer `bytes`; returns the transmission latency and advances
+    /// the clock. Integrates across trace segments: a transfer started
+    /// in a slow period finishes faster once the trace steps up.
+    pub fn transmit(&mut self, bytes: usize) -> f64 {
+        let start = self.now;
+        let mut remaining = bytes as f64;
+        let mut t = self.now;
+        // Integrate in small steps relative to the trace granularity.
+        const DT: f64 = 0.010;
+        let mut guard = 0u64;
+        while remaining > 0.0 {
+            let bw = self.trace.at(t).max(1.0);
+            let sent = bw * DT;
+            if sent >= remaining {
+                t += remaining / bw;
+                remaining = 0.0;
+            } else {
+                remaining -= sent;
+                t += DT;
+            }
+            guard += 1;
+            if guard > 100_000_000 {
+                break; // pathological trace; avoid infinite loop
+            }
+        }
+        self.now = t + self.rtt;
+        self.bytes_sent += bytes as u64;
+        self.transfers += 1;
+        self.now - start
+    }
+
+    /// Latency a transfer of `bytes` would take right now, without
+    /// advancing the clock (what the decision engine predicts).
+    pub fn predict(&self, bytes: f64) -> f64 {
+        bytes / self.bandwidth_now().max(1.0) + self.rtt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_channel_is_linear() {
+        let mut ch = SimChannel::constant(1_000_000.0);
+        let t = ch.transmit(500_000);
+        assert!((t - 0.5).abs() < 1e-2, "t={t}");
+        assert_eq!(ch.bytes_sent, 500_000);
+    }
+
+    #[test]
+    fn rtt_added_once_per_transfer() {
+        let mut ch = SimChannel::new(BandwidthTrace::constant(1e6), 0.050);
+        let t = ch.transmit(1000);
+        assert!((t - 0.051).abs() < 1e-2, "t={t}");
+    }
+
+    #[test]
+    fn step_trace_speeds_up_mid_transfer() {
+        // 1 MB at 100 KB/s would take 10 s, but the trace steps to
+        // 1 MB/s at t=1 s: 100 KB in the first second, 900 KB in ~0.9 s.
+        let tr = BandwidthTrace::parse("0, 100000\n1.0, 1000000").unwrap();
+        let mut ch = SimChannel::new(tr, 0.0);
+        let t = ch.transmit(1_000_000);
+        assert!((t - 1.9).abs() < 0.05, "t={t}");
+    }
+
+    #[test]
+    fn clock_advances_with_compute() {
+        let tr = BandwidthTrace::parse("0, 100000\n1.0, 1000000").unwrap();
+        let mut ch = SimChannel::new(tr, 0.0);
+        ch.advance(2.0); // past the step
+        assert_eq!(ch.bandwidth_now(), 1_000_000.0);
+        let t = ch.transmit(1_000_000);
+        assert!((t - 1.0).abs() < 0.05, "t={t}");
+    }
+
+    #[test]
+    fn predict_matches_constant_transmit() {
+        let ch = SimChannel::constant(250_000.0);
+        assert!((ch.predict(1_000_000.0) - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,114 @@
+//! EWMA bandwidth estimation from observed transfers.
+//!
+//! The adaptation controller (§III-E: "re-decouples the deep neural
+//! network upon the edge-cloud network change") needs a running estimate
+//! of the uplink. Each completed transfer contributes one throughput
+//! observation; an exponentially weighted moving average smooths jitter,
+//! and a relative-change trigger tells the controller when the estimate
+//! moved enough to justify re-solving the ILP.
+
+#[derive(Debug, Clone)]
+pub struct BandwidthEstimator {
+    alpha: f64,
+    estimate: Option<f64>,
+    /// Estimate at the time of the last `take_change` acknowledgement.
+    acked: Option<f64>,
+    observations: u64,
+}
+
+impl BandwidthEstimator {
+    /// `alpha` ∈ (0,1]: weight of the newest observation (default 0.3).
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        Self { alpha, estimate: None, acked: None, observations: 0 }
+    }
+
+    pub fn observe(&mut self, bytes: usize, seconds: f64) {
+        if seconds <= 0.0 || bytes == 0 {
+            return;
+        }
+        let sample = bytes as f64 / seconds;
+        self.estimate = Some(match self.estimate {
+            None => sample,
+            Some(e) => e + self.alpha * (sample - e),
+        });
+        self.observations += 1;
+    }
+
+    pub fn bytes_per_sec(&self) -> Option<f64> {
+        self.estimate
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// True when the estimate drifted ≥ `rel_threshold` (e.g. 0.2 = 20%)
+    /// from the last acknowledged value; acknowledging resets the baseline.
+    pub fn take_change(&mut self, rel_threshold: f64) -> Option<f64> {
+        let est = self.estimate?;
+        let drifted = match self.acked {
+            None => true,
+            Some(a) => (est - a).abs() / a.max(1.0) >= rel_threshold,
+        };
+        if drifted {
+            self.acked = Some(est);
+            Some(est)
+        } else {
+            None
+        }
+    }
+}
+
+impl Default for BandwidthEstimator {
+    fn default() -> Self {
+        Self::new(0.3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_to_constant_rate() {
+        let mut e = BandwidthEstimator::new(0.3);
+        for _ in 0..50 {
+            e.observe(100_000, 0.1); // 1 MB/s
+        }
+        let bw = e.bytes_per_sec().unwrap();
+        assert!((bw - 1e6).abs() / 1e6 < 0.01, "bw={bw}");
+    }
+
+    #[test]
+    fn ignores_degenerate_samples() {
+        let mut e = BandwidthEstimator::default();
+        e.observe(0, 1.0);
+        e.observe(100, 0.0);
+        assert!(e.bytes_per_sec().is_none());
+        assert_eq!(e.observations(), 0);
+    }
+
+    #[test]
+    fn change_trigger_fires_on_drift() {
+        let mut e = BandwidthEstimator::new(1.0); // no smoothing
+        e.observe(1_000_000, 1.0);
+        assert!(e.take_change(0.2).is_some(), "first estimate always fires");
+        assert!(e.take_change(0.2).is_none(), "no drift yet");
+        e.observe(1_050_000, 1.0); // +5%
+        assert!(e.take_change(0.2).is_none());
+        e.observe(300_000, 1.0); // big drop
+        assert!(e.take_change(0.2).is_some());
+    }
+
+    #[test]
+    fn smoothing_dampens_spikes() {
+        let mut e = BandwidthEstimator::new(0.1);
+        for _ in 0..20 {
+            e.observe(1_000_000, 1.0);
+        }
+        e.observe(10_000_000, 1.0); // one spike
+        let bw = e.bytes_per_sec().unwrap();
+        assert!(bw < 2_500_000.0, "spike over-weighted: {bw}");
+    }
+}

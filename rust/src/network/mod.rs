@@ -1,0 +1,21 @@
+//! Edge↔cloud link modelling and control.
+//!
+//! * [`trace`] — bandwidth-over-time traces (constant, step, sine,
+//!   random-walk, or parsed from file): the workload for Fig. 8;
+//! * [`channel`] — the simulated channel (`T_trans = S/BW + rtt`) used by
+//!   the in-process evaluation pipeline;
+//! * [`throttle`] — token-bucket pacing for *real* sockets, giving the
+//!   TCP deployment a controlled uplink like the paper's testbed;
+//! * [`estimator`] — EWMA bandwidth estimation from observed transfers,
+//!   feeding the adaptation controller (§III-E "re-decouples the deep
+//!   neural network upon the edge-cloud network change").
+
+pub mod channel;
+pub mod estimator;
+pub mod throttle;
+pub mod trace;
+
+pub use channel::SimChannel;
+pub use estimator::BandwidthEstimator;
+pub use throttle::ThrottledWriter;
+pub use trace::BandwidthTrace;

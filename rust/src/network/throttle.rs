@@ -1,0 +1,121 @@
+//! Token-bucket pacing for real sockets.
+//!
+//! The paper's testbed controls the link between the edge and cloud
+//! machines; our TCP deployment runs both on one host, so the edge
+//! client writes through this pacer to emulate a configured uplink.
+//! Burst capacity is one bucket's worth (default 64 KiB) — small enough
+//! that multi-hundred-KiB feature frames see the configured rate.
+
+use std::io::{self, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shared, adjustable rate in bytes/second (lets a trace-driver retune a
+/// live connection).
+#[derive(Debug, Clone)]
+pub struct RateHandle(Arc<AtomicU64>);
+
+impl RateHandle {
+    pub fn new(bytes_per_sec: u64) -> Self {
+        Self(Arc::new(AtomicU64::new(bytes_per_sec)))
+    }
+    pub fn set(&self, bytes_per_sec: u64) {
+        self.0.store(bytes_per_sec.max(1), Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed).max(1)
+    }
+}
+
+pub struct ThrottledWriter<W: Write> {
+    inner: W,
+    rate: RateHandle,
+    bucket: f64,
+    capacity: f64,
+    last: Instant,
+}
+
+impl<W: Write> ThrottledWriter<W> {
+    pub fn new(inner: W, rate: RateHandle) -> Self {
+        Self::with_burst(inner, rate, 64 * 1024)
+    }
+
+    pub fn with_burst(inner: W, rate: RateHandle, burst_bytes: usize) -> Self {
+        Self {
+            inner,
+            rate,
+            bucket: burst_bytes as f64,
+            capacity: burst_bytes as f64,
+            last: Instant::now(),
+        }
+    }
+
+    fn refill(&mut self) {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.bucket = (self.bucket + dt * self.rate.get() as f64).min(self.capacity);
+    }
+
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: Write> Write for ThrottledWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.refill();
+        if self.bucket < 1.0 {
+            // Sleep until at least one chunk of tokens accrues.
+            let deficit = 1.0 - self.bucket;
+            let wait = deficit / self.rate.get() as f64;
+            std::thread::sleep(Duration::from_secs_f64(wait.min(0.1)));
+            self.refill();
+        }
+        let allowed = (self.bucket.max(1.0) as usize).min(buf.len());
+        let written = self.inner.write(&buf[..allowed])?;
+        self.bucket -= written as f64;
+        Ok(written)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_is_respected() {
+        let rate = RateHandle::new(1_000_000); // 1 MB/s
+        let mut w = ThrottledWriter::with_burst(Vec::new(), rate, 16 * 1024);
+        let data = vec![0u8; 300_000];
+        let t0 = Instant::now();
+        w.write_all(&data).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        // 300 KB minus 16 KB burst at 1 MB/s ≈ 0.28 s.
+        assert!(dt > 0.20, "too fast: {dt}");
+        assert!(dt < 1.0, "too slow: {dt}");
+        assert_eq!(w.into_inner().len(), 300_000);
+    }
+
+    #[test]
+    fn rate_handle_is_live() {
+        let rate = RateHandle::new(100);
+        let r2 = rate.clone();
+        r2.set(1_000_000_000);
+        let mut w = ThrottledWriter::with_burst(Vec::new(), rate, 1024);
+        let t0 = Instant::now();
+        w.write_all(&vec![0u8; 200_000]).unwrap();
+        assert!(t0.elapsed().as_secs_f64() < 0.5, "new rate not picked up");
+    }
+
+    #[test]
+    fn zero_rate_clamped() {
+        let rate = RateHandle::new(0);
+        assert_eq!(rate.get(), 1);
+    }
+}

@@ -1,0 +1,156 @@
+//! Bandwidth traces: BW as a function of time.
+//!
+//! Drives Fig. 8 (execution under different/varying edge-cloud
+//! bandwidth) and the adaptation controller tests. All generators are
+//! deterministic.
+
+use crate::util::rng::XorShift64Star;
+
+/// Piecewise-linear bandwidth trace, bytes/second over seconds.
+#[derive(Debug, Clone)]
+pub struct BandwidthTrace {
+    /// (t_seconds, bytes_per_second), strictly increasing t, t[0] = 0.
+    points: Vec<(f64, f64)>,
+}
+
+impl BandwidthTrace {
+    pub fn constant(bps: f64) -> Self {
+        Self { points: vec![(0.0, bps)] }
+    }
+
+    /// Step between two rates every `period` seconds.
+    pub fn step(low: f64, high: f64, period: f64, total: f64) -> Self {
+        let mut points = Vec::new();
+        let mut t = 0.0;
+        let mut hi = false;
+        while t < total {
+            points.push((t, if hi { high } else { low }));
+            hi = !hi;
+            t += period;
+        }
+        Self { points }
+    }
+
+    /// Sinusoid between `low` and `high` sampled every `dt`.
+    pub fn sine(low: f64, high: f64, period: f64, total: f64, dt: f64) -> Self {
+        let mid = (low + high) / 2.0;
+        let amp = (high - low) / 2.0;
+        let mut points = Vec::new();
+        let mut t = 0.0;
+        while t < total {
+            points.push((t, mid + amp * (2.0 * std::f64::consts::PI * t / period).sin()));
+            t += dt;
+        }
+        Self { points }
+    }
+
+    /// Multiplicative random walk within [low, high].
+    pub fn random_walk(seed: u64, low: f64, high: f64, total: f64, dt: f64) -> Self {
+        let mut rng = XorShift64Star::new(seed);
+        let mut bw = (low * high).sqrt();
+        let mut points = Vec::new();
+        let mut t = 0.0;
+        while t < total {
+            points.push((t, bw));
+            let f = 1.0 + 0.25 * (rng.next_f64() - 0.5);
+            bw = (bw * f).clamp(low, high);
+            t += dt;
+        }
+        Self { points }
+    }
+
+    /// Parse "t,bps" lines (seconds, bytes/second).
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut points = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (a, b) = line
+                .split_once(',')
+                .ok_or_else(|| format!("line {}: expected 't,bps'", lineno + 1))?;
+            let t: f64 = a.trim().parse().map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let bw: f64 = b.trim().parse().map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            points.push((t, bw));
+        }
+        if points.is_empty() {
+            return Err("empty trace".into());
+        }
+        if points.windows(2).any(|w| w[1].0 <= w[0].0) {
+            return Err("timestamps must be strictly increasing".into());
+        }
+        Ok(Self { points })
+    }
+
+    /// Bandwidth at time `t` (step-hold between points).
+    pub fn at(&self, t: f64) -> f64 {
+        match self.points.iter().rev().find(|(pt, _)| *pt <= t) {
+            Some((_, bw)) => *bw,
+            None => self.points[0].1,
+        }
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.points.last().map(|(t, _)| *t).unwrap_or(0.0)
+    }
+
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_holds() {
+        let tr = BandwidthTrace::constant(1e6);
+        assert_eq!(tr.at(0.0), 1e6);
+        assert_eq!(tr.at(100.0), 1e6);
+    }
+
+    #[test]
+    fn step_alternates() {
+        let tr = BandwidthTrace::step(1e5, 1e6, 10.0, 40.0);
+        assert_eq!(tr.at(0.0), 1e5);
+        assert_eq!(tr.at(10.0), 1e6);
+        assert_eq!(tr.at(19.9), 1e6);
+        assert_eq!(tr.at(20.0), 1e5);
+    }
+
+    #[test]
+    fn sine_stays_in_band() {
+        let tr = BandwidthTrace::sine(1e5, 1e6, 20.0, 60.0, 0.5);
+        for (_, bw) in tr.points() {
+            assert!((1e5 - 1.0..=1e6 + 1.0).contains(bw));
+        }
+    }
+
+    #[test]
+    fn random_walk_deterministic_and_bounded() {
+        let a = BandwidthTrace::random_walk(7, 1e5, 2e6, 30.0, 1.0);
+        let b = BandwidthTrace::random_walk(7, 1e5, 2e6, 30.0, 1.0);
+        assert_eq!(a.points(), b.points());
+        for (_, bw) in a.points() {
+            assert!((1e5..=2e6).contains(bw));
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let tr = BandwidthTrace::parse("# comment\n0, 100000\n5.5, 300000\n").unwrap();
+        assert_eq!(tr.at(0.0), 100000.0);
+        assert_eq!(tr.at(6.0), 300000.0);
+        assert!(BandwidthTrace::parse("").is_err());
+        assert!(BandwidthTrace::parse("5,1\n3,1").is_err());
+        assert!(BandwidthTrace::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn before_first_point_clamps() {
+        let tr = BandwidthTrace::parse("1.0, 500\n2.0, 900").unwrap();
+        assert_eq!(tr.at(0.5), 500.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Accuracy- and size-predictor lookup tables (paper §III-C).
+//!
+//! "We build a lookup table A_i(c) to predict the accuracy loss and
+//! compressed data size S_i(c) in a specific quantization bit c. …
+//! trained on ILSVRC2012 … once the lookup table is built, we don't
+//! need a twice build-up process."
+//!
+//! [`tables::Tables`] is that pair of lookup tables, built by sweeping
+//! the calibration set through the stage executables with the rust
+//! quantizer twin, persisted as JSON under `artifacts/tables/`, and
+//! consumed by the decision engine. [`tables::StabilityReport`]
+//! reproduces Fig. 5's epoch-overlap argument.
+
+pub mod tables;
+
+pub use tables::{StabilityReport, Tables};

@@ -1,0 +1,334 @@
+//! Building, persisting and querying the `A_i(c)` / `S_i(c)` tables.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::compression::{feature, quant};
+use crate::data::gen;
+use crate::runtime::{Executor, Tensor};
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Default calibration bit-grid (c values the ILP may choose from).
+pub const DEFAULT_C_GRID: &[u8] = &[1, 2, 3, 4, 6, 8];
+/// Default calibration set size.
+pub const DEFAULT_SAMPLES: usize = 48;
+/// First sample id of the calibration range (distinct from the training
+/// ids 0..1023 and the eval ids 2048.. used at build time).
+pub const CALIB_OFFSET: usize = 4096;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tables {
+    pub model: String,
+    pub c_grid: Vec<u8>,
+    pub samples: usize,
+    /// Top-1 accuracy of the un-quantized model on the calibration set.
+    pub base_accuracy: f64,
+    /// `acc[i-1][k]` = A_i(c_grid[k]): accuracy *drop* in [0,1].
+    pub acc: Vec<Vec<f64>>,
+    /// `size[i-1][k]` = S_i(c_grid[k]): mean wire bytes.
+    pub size: Vec<Vec<f64>>,
+    /// Raw f32 feature bytes per stage (Fig. 2's in-layer sizes).
+    pub raw_size: Vec<f64>,
+    /// Mean PNG-like-compressed input image bytes (cloud-only upload).
+    pub image_png_bytes: f64,
+    /// Mean raw 8-bit RGB input bytes (Origin2Cloud upload).
+    pub image_raw_bytes: f64,
+}
+
+impl Tables {
+    /// Sweep the calibration ids through the stage executables.
+    ///
+    /// For every sample: one clean forward (activations cached), then for
+    /// each decoupling point `i` and bit-width `c`: quantize → measure
+    /// wire size → dequantize → run the tail → score against the label.
+    pub fn build(
+        exe: &Executor,
+        model: &str,
+        sample_ids: impl Iterator<Item = usize> + Clone,
+        c_grid: &[u8],
+    ) -> Result<Self> {
+        let m = exe.manifest().model(model)?;
+        let n = m.num_stages();
+        let input_shape = m.input_shape.clone();
+        let hw = input_shape[1];
+        let ids: Vec<usize> = sample_ids.collect();
+        assert!(!ids.is_empty());
+
+        let mut correct_base = 0usize;
+        let mut correct = vec![vec![0usize; c_grid.len()]; n];
+        let mut sizes = vec![vec![0f64; c_grid.len()]; n];
+        let mut png_bytes = 0f64;
+        let mut raw_bytes = 0f64;
+
+        for &id in &ids {
+            let s = gen::sample_image(id, hw);
+            // Clean forward, caching every activation.
+            let mut acts: Vec<Tensor> = Vec::with_capacity(n + 1);
+            acts.push(s.image.clone());
+            for i in 1..=n {
+                acts.push(exe.run_stage(model, i, &acts[i - 1])?.tensor);
+            }
+            let base_pred = acts[n].argmax();
+            if base_pred == s.label {
+                correct_base += 1;
+            }
+            // Input-image upload sizes for the baselines.
+            let rgb = gen::to_rgb8(&s.image);
+            raw_bytes += rgb.len() as f64;
+            let img8 = crate::compression::png::Image8::new(hw, hw, 3, rgb);
+            png_bytes += crate::compression::png::encode(&img8).len() as f64;
+
+            for i in 1..=n {
+                for (k, &c) in c_grid.iter().enumerate() {
+                    let q = quant::quantize(acts[i].data(), c);
+                    sizes[i - 1][k] += feature::encoded_size(&q) as f64;
+                    let deq = quant::dequantize(&q);
+                    let mut cur = Tensor::new(acts[i].shape().to_vec(), deq);
+                    for j in i + 1..=n {
+                        cur = exe.run_stage(model, j, &cur)?.tensor;
+                    }
+                    if cur.argmax() == s.label {
+                        correct[i - 1][k] += 1;
+                    }
+                }
+            }
+        }
+
+        let nf = ids.len() as f64;
+        let base_accuracy = correct_base as f64 / nf;
+        let acc = correct
+            .iter()
+            .map(|row| {
+                row.iter().map(|&c| (base_accuracy - c as f64 / nf).max(0.0)).collect()
+            })
+            .collect();
+        let size = sizes
+            .iter()
+            .map(|row| row.iter().map(|&b| b / nf).collect())
+            .collect();
+        let raw_size = (1..=n).map(|i| m.stage_raw_bytes(i) as f64).collect();
+
+        Ok(Self {
+            model: model.to_string(),
+            c_grid: c_grid.to_vec(),
+            samples: ids.len(),
+            base_accuracy,
+            acc,
+            size,
+            raw_size,
+            image_png_bytes: png_bytes / nf,
+            image_raw_bytes: raw_bytes / nf,
+        })
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.acc.len()
+    }
+
+    fn c_index(&self, c: u8) -> Result<usize> {
+        self.c_grid
+            .iter()
+            .position(|&g| g == c)
+            .ok_or_else(|| anyhow!("c={c} not in calibration grid {:?}", self.c_grid))
+    }
+
+    /// A_i(c); stage i is 1-based.
+    pub fn acc_drop(&self, i: usize, c: u8) -> Result<f64> {
+        Ok(self.acc[i - 1][self.c_index(c)?])
+    }
+
+    /// S_i(c) in bytes; stage i is 1-based.
+    pub fn wire_bytes(&self, i: usize, c: u8) -> Result<f64> {
+        Ok(self.size[i - 1][self.c_index(c)?])
+    }
+
+    /// Compression ratio raw/wire at (i, c) — scale-invariant, used to
+    /// project paper-scale feature sizes (DESIGN.md).
+    pub fn compression_ratio(&self, i: usize, c: u8) -> Result<f64> {
+        Ok(self.raw_size[i - 1] / self.wire_bytes(i, c)?)
+    }
+
+    // ---------------- persistence ----------------
+
+    pub fn to_json(&self) -> Json {
+        let vv = |rows: &Vec<Vec<f64>>| {
+            Json::arr(rows.iter().map(|r| Json::arr(r.iter().map(|&x| Json::num(x)))))
+        };
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("c_grid", Json::arr(self.c_grid.iter().map(|&c| Json::num(c as f64)))),
+            ("samples", Json::num(self.samples as f64)),
+            ("base_accuracy", Json::num(self.base_accuracy)),
+            ("acc", vv(&self.acc)),
+            ("size", vv(&self.size)),
+            ("raw_size", Json::arr(self.raw_size.iter().map(|&x| Json::num(x)))),
+            ("image_png_bytes", Json::num(self.image_png_bytes)),
+            ("image_raw_bytes", Json::num(self.image_raw_bytes)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let vv = |key: &str| -> Result<Vec<Vec<f64>>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing {key}"))?
+                .iter()
+                .map(|r| {
+                    r.as_arr()
+                        .ok_or_else(|| anyhow!("bad row in {key}"))?
+                        .iter()
+                        .map(|x| x.as_f64().ok_or_else(|| anyhow!("bad num")))
+                        .collect()
+                })
+                .collect()
+        };
+        Ok(Self {
+            model: j
+                .get("model")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing model"))?
+                .to_string(),
+            c_grid: j
+                .get("c_grid")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing c_grid"))?
+                .iter()
+                .map(|x| x.as_u64().map(|v| v as u8).ok_or_else(|| anyhow!("bad c")))
+                .collect::<Result<_>>()?,
+            samples: j.get("samples").and_then(Json::as_u64).unwrap_or(0) as usize,
+            base_accuracy: j.get("base_accuracy").and_then(Json::as_f64).unwrap_or(0.0),
+            acc: vv("acc")?,
+            size: vv("size")?,
+            raw_size: j
+                .get("raw_size")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing raw_size"))?
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| anyhow!("bad num")))
+                .collect::<Result<_>>()?,
+            image_png_bytes: j.get("image_png_bytes").and_then(Json::as_f64).unwrap_or(0.0),
+            image_raw_bytes: j.get("image_raw_bytes").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path.as_ref(), self.to_json().to_pretty()).context("writing tables")
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+    }
+
+    /// Load from `<dir>/tables/<model>.json`, or build and cache.
+    pub fn load_or_build(exe: &Executor, model: &str, dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("tables").join(format!("{model}.json"));
+        if path.exists() {
+            if let Ok(t) = Self::load(&path) {
+                if t.model == model {
+                    return Ok(t);
+                }
+            }
+        }
+        let ids = CALIB_OFFSET..CALIB_OFFSET + DEFAULT_SAMPLES;
+        let t = Self::build(exe, model, ids, DEFAULT_C_GRID)?;
+        t.save(&path)?;
+        Ok(t)
+    }
+}
+
+/// Fig. 5's epoch-stability evidence: tables from two disjoint sample
+/// epochs should overlap tightly.
+#[derive(Debug, Clone)]
+pub struct StabilityReport {
+    pub model: String,
+    /// Max |ΔA_i(c)| across all (i, c).
+    pub max_acc_delta: f64,
+    /// Max relative size deviation across all (i, c).
+    pub max_size_rel_delta: f64,
+    /// Pearson correlation of the flattened size tables.
+    pub size_correlation: f64,
+}
+
+impl StabilityReport {
+    pub fn compare(a: &Tables, b: &Tables) -> Self {
+        assert_eq!(a.c_grid, b.c_grid);
+        assert_eq!(a.num_stages(), b.num_stages());
+        let mut max_acc = 0f64;
+        let mut max_size = 0f64;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..a.num_stages() {
+            for k in 0..a.c_grid.len() {
+                max_acc = max_acc.max((a.acc[i][k] - b.acc[i][k]).abs());
+                let rel = (a.size[i][k] - b.size[i][k]).abs() / a.size[i][k].max(1.0);
+                max_size = max_size.max(rel);
+                xs.push(a.size[i][k]);
+                ys.push(b.size[i][k]);
+            }
+        }
+        Self {
+            model: a.model.clone(),
+            max_acc_delta: max_acc,
+            max_size_rel_delta: max_size,
+            size_correlation: stats::pearson(&xs, &ys),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn executor() -> Option<Executor> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Executor::new(crate::runtime::Manifest::load(dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn build_on_tinyconv_and_query() {
+        let Some(exe) = executor() else { return };
+        let t = Tables::build(&exe, "tinyconv", 5000..5008, &[1, 4, 8]).unwrap();
+        assert_eq!(t.num_stages(), 4);
+        assert!(t.base_accuracy >= 0.5, "base acc {}", t.base_accuracy);
+        // Sizes grow with c; accuracy drop shrinks with c (weakly).
+        for i in 1..=4 {
+            assert!(t.wire_bytes(i, 1).unwrap() <= t.wire_bytes(i, 8).unwrap());
+            assert!(t.acc_drop(i, 1).unwrap() >= t.acc_drop(i, 8).unwrap() - 1e-9);
+            assert!(t.compression_ratio(i, 4).unwrap() > 1.0);
+        }
+        assert!(t.image_png_bytes > 0.0 && t.image_png_bytes < t.image_raw_bytes * 1.2);
+        assert!(t.acc_drop(1, 5).is_err(), "off-grid c must error");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let Some(exe) = executor() else { return };
+        let t = Tables::build(&exe, "tinyconv", 5000..5004, &[2, 8]).unwrap();
+        let path = std::env::temp_dir().join("jalad_tables_test.json");
+        t.save(&path).unwrap();
+        let back = Tables::load(&path).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn stability_between_epochs() {
+        let Some(exe) = executor() else { return };
+        let a = Tables::build(&exe, "tinyconv", 5000..5012, &[4, 8]).unwrap();
+        let b = Tables::build(&exe, "tinyconv", 5100..5112, &[4, 8]).unwrap();
+        let rep = StabilityReport::compare(&a, &b);
+        // Fig. 5: different epochs "highly overlapped".
+        assert!(rep.size_correlation > 0.99, "corr {}", rep.size_correlation);
+        assert!(rep.max_size_rel_delta < 0.15, "size delta {}", rep.max_size_rel_delta);
+        assert!(rep.max_acc_delta <= 0.35, "acc delta {}", rep.max_acc_delta);
+    }
+}

@@ -1,0 +1,83 @@
+//! Device catalog for the analytic latency model (paper §IV-A).
+//!
+//! `T = w · Q / F`: `Q` FMACs, `F` device FLOPS, `w` a fitted slack
+//! factor absorbing everything the roofline misses (kernel launch,
+//! memory traffic, framework overhead). The constants below are the
+//! paper's own: `F_C = 12 TFLOPs`, `F_E = 2 TFLOPs` (Tegra X2) or
+//! `300 GFLOPs` (Tegra K1), `w_e = 1.1176`, `w_c = 2.1761` (regressed on
+//! an NVIDIA 1080ti at `F = 10.5 TFLOPs`).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    /// Peak FLOPS.
+    pub flops: f64,
+    /// Fitted slack factor w (≥ 1 in practice).
+    pub w: f64,
+}
+
+pub const W_EDGE: f64 = 1.1176;
+pub const W_CLOUD: f64 = 2.1761;
+
+impl DeviceModel {
+    pub const CLOUD_12T: DeviceModel =
+        DeviceModel { name: "cloud-12T", flops: 12.0e12, w: W_CLOUD };
+    pub const GTX_1080TI: DeviceModel =
+        DeviceModel { name: "gtx-1080ti", flops: 10.5e12, w: W_CLOUD };
+    pub const TEGRA_X2: DeviceModel =
+        DeviceModel { name: "tegra-x2", flops: 2.0e12, w: W_EDGE };
+    pub const TEGRA_K1: DeviceModel =
+        DeviceModel { name: "tegra-k1", flops: 300.0e9, w: W_EDGE };
+    /// Paper's edge testbed GPU (Quadro K620, ~0.86 TFLOPs fp32).
+    pub const QUADRO_K620: DeviceModel =
+        DeviceModel { name: "quadro-k620", flops: 0.86e12, w: W_EDGE };
+
+    pub fn by_name(name: &str) -> Option<DeviceModel> {
+        [
+            Self::CLOUD_12T,
+            Self::GTX_1080TI,
+            Self::TEGRA_X2,
+            Self::TEGRA_K1,
+            Self::QUADRO_K620,
+        ]
+        .into_iter()
+        .find(|d| d.name == name)
+    }
+
+    /// Simulated execution latency of `fmacs` multiply-accumulates.
+    pub fn latency(&self, fmacs: u64) -> f64 {
+        self.w * fmacs as f64 / self.flops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::fullscale_stages;
+
+    #[test]
+    fn catalog_lookup() {
+        assert_eq!(DeviceModel::by_name("tegra-k1"), Some(DeviceModel::TEGRA_K1));
+        assert!(DeviceModel::by_name("gameboy").is_none());
+    }
+
+    #[test]
+    fn latency_scales_inverse_flops() {
+        let q = 1_000_000_000u64;
+        let fast = DeviceModel::TEGRA_X2.latency(q);
+        let slow = DeviceModel::TEGRA_K1.latency(q);
+        assert!((slow / fast - 2.0e12 / 300.0e9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_scale_sanity() {
+        // VGG16 (15.5 GFMACs) on the 12T cloud: w·Q/F ≈ 2.8 ms — the
+        // order of magnitude the paper's latency plots show for compute.
+        let m = fullscale_stages("vgg16").unwrap();
+        let t = DeviceModel::CLOUD_12T.latency(m.total_fmacs());
+        assert!(t > 1e-3 && t < 10e-3, "t = {t}");
+        // Same net on Tegra K1: ~58 ms — two orders slower.
+        let tk1 = DeviceModel::TEGRA_K1.latency(m.total_fmacs());
+        assert!(tk1 > 20e-3 && tk1 < 200e-3, "tk1 = {tk1}");
+    }
+}

@@ -1,0 +1,120 @@
+//! The `T_E(i)` / `T_C(i)` tables the decision engine consumes (§III-D).
+//!
+//! Two construction paths, matching the paper's two experiment modes:
+//!
+//! * [`LatencyTables::analytic`] — paper-scale simulation: full-scale
+//!   FMAC tables (`models::fullscale`) through the `T = w·Q/F` device
+//!   model, for arbitrary (edge, cloud) device pairs (Table III, Fig 7/8);
+//! * [`LatencyTables::measured`] — deployment mode: wall clocks of the
+//!   scaled executables on this host, with an `edge_slowdown` factor
+//!   modelling the weaker edge silicon (both "devices" are this CPU).
+
+use anyhow::Result;
+
+use super::device::DeviceModel;
+use super::measure;
+use crate::models::fullscale_stages;
+use crate::runtime::Executor;
+
+#[derive(Debug, Clone)]
+pub struct LatencyTables {
+    /// `t_edge[i-1]`: edge seconds through stages 1..=i.
+    pub t_edge: Vec<f64>,
+    /// `t_cloud[i-1]`: cloud seconds for stages i+1..=N.
+    pub t_cloud: Vec<f64>,
+    /// Cloud seconds for the whole model (i*=0 path).
+    pub t_cloud_full: f64,
+}
+
+impl LatencyTables {
+    /// Paper-scale analytic tables for `model` on a device pair.
+    pub fn analytic(model: &str, edge: DeviceModel, cloud: DeviceModel) -> Option<Self> {
+        let fm = fullscale_stages(model)?;
+        let n = fm.stages.len();
+        let mut t_edge = Vec::with_capacity(n);
+        let mut t_cloud = Vec::with_capacity(n);
+        for i in 1..=n {
+            t_edge.push(edge.latency(fm.fmacs_to(i)));
+            t_cloud.push(cloud.latency(fm.fmacs_from(i)));
+        }
+        Some(Self { t_edge, t_cloud, t_cloud_full: cloud.latency(fm.total_fmacs()) })
+    }
+
+    /// Measured tables from the scaled executables on this host.
+    ///
+    /// `edge_slowdown ≥ 1` scales the edge side (the paper's edge GPU is
+    /// ~12× weaker than its cloud GPU; our single host plays both roles).
+    pub fn measured(
+        exe: &Executor,
+        model: &str,
+        reps: usize,
+        edge_slowdown: f64,
+    ) -> Result<Self> {
+        let per_stage = measure::measure_stages(exe, model, reps)?;
+        let full = measure::measure_full(exe, model, reps)?;
+        let n = per_stage.len();
+        let mut t_edge = Vec::with_capacity(n);
+        let mut t_cloud = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for s in &per_stage {
+            acc += s;
+            t_edge.push(acc * edge_slowdown);
+        }
+        let total: f64 = per_stage.iter().sum();
+        let mut tail = total;
+        for s in &per_stage {
+            tail -= s;
+            t_cloud.push(tail);
+        }
+        Ok(Self { t_edge, t_cloud, t_cloud_full: full })
+    }
+
+    pub fn num_stages(&self) -> usize {
+        self.t_edge.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_tables_are_monotone() {
+        let t = LatencyTables::analytic(
+            "vgg16",
+            DeviceModel::TEGRA_X2,
+            DeviceModel::CLOUD_12T,
+        )
+        .unwrap();
+        assert_eq!(t.num_stages(), 16);
+        for w in t.t_edge.windows(2) {
+            assert!(w[0] <= w[1], "t_edge must be cumulative");
+        }
+        for w in t.t_cloud.windows(2) {
+            assert!(w[0] >= w[1], "t_cloud must shrink as the cut moves later");
+        }
+        assert_eq!(t.t_cloud[t.num_stages() - 1], 0.0);
+        // Full-cloud run beats edge-full run on a weaker edge device.
+        assert!(t.t_cloud_full < t.t_edge[15]);
+    }
+
+    #[test]
+    fn weaker_edge_scales_edge_only() {
+        let x2 =
+            LatencyTables::analytic("resnet50", DeviceModel::TEGRA_X2, DeviceModel::CLOUD_12T)
+                .unwrap();
+        let k1 =
+            LatencyTables::analytic("resnet50", DeviceModel::TEGRA_K1, DeviceModel::CLOUD_12T)
+                .unwrap();
+        for (a, b) in x2.t_edge.iter().zip(&k1.t_edge) {
+            assert!((b / a - 2.0e12 / 300.0e9).abs() < 1e-6);
+        }
+        assert_eq!(x2.t_cloud, k1.t_cloud);
+    }
+
+    #[test]
+    fn unknown_model_none() {
+        assert!(LatencyTables::analytic("tinyconv", DeviceModel::TEGRA_X2, DeviceModel::CLOUD_12T)
+            .is_none());
+    }
+}

@@ -1,0 +1,68 @@
+//! Wall-clock stage profiling through the PJRT executor.
+//!
+//! The paper's deployment-time initialization: run every stage a few
+//! times on this device, keep the median. Compilation is excluded (the
+//! executor's lazy cache is warmed by the first pass).
+
+use anyhow::Result;
+
+use crate::runtime::{Executor, Tensor};
+use crate::util::stats;
+
+/// Median per-stage seconds for stages 1..=N of `model`.
+pub fn measure_stages(exe: &Executor, model: &str, reps: usize) -> Result<Vec<f64>> {
+    let m = exe.manifest().model(model)?;
+    let n = m.num_stages();
+    let input_shape = m.input_shape.clone();
+    let x0 = crate::data::gen::sample_image_shaped(0, 9999, &input_shape);
+
+    // Forward once, caching activations (and warming the compile cache).
+    let mut acts: Vec<Tensor> = Vec::with_capacity(n + 1);
+    acts.push(x0);
+    for i in 1..=n {
+        let out = exe.run_stage(model, i, &acts[i - 1])?;
+        acts.push(out.tensor);
+    }
+
+    let mut medians = Vec::with_capacity(n);
+    for i in 1..=n {
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps.max(1) {
+            samples.push(exe.run_stage(model, i, &acts[i - 1])?.seconds);
+        }
+        medians.push(stats::percentile(&samples, 50.0));
+    }
+    Ok(medians)
+}
+
+/// Median full-forward seconds (cloud-only baseline path).
+pub fn measure_full(exe: &Executor, model: &str, reps: usize) -> Result<f64> {
+    let m = exe.manifest().model(model)?;
+    let x0 = crate::data::gen::sample_image_shaped(0, 9999, &m.input_shape.clone());
+    let _ = exe.run_full(model, &x0)?; // warm compile
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        samples.push(exe.run_full(model, &x0)?.seconds);
+    }
+    Ok(stats::percentile(&samples, 50.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn measures_positive_latencies() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let exe = Executor::new(Manifest::load(dir).unwrap()).unwrap();
+        let t = measure_stages(&exe, "tinyconv", 3).unwrap();
+        assert_eq!(t.len(), 4);
+        assert!(t.iter().all(|&s| s > 0.0));
+        let full = measure_full(&exe, "tinyconv", 3).unwrap();
+        assert!(full > 0.0);
+    }
+}

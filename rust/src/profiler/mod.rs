@@ -1,0 +1,21 @@
+//! Latency profiling: measured per-stage wall clocks and the paper's
+//! analytic FMAC/FLOPS device model (§IV-A).
+//!
+//! The paper profiles `T_E(i)` / `T_C(i)` once per deployment ("for a
+//! specific device, the execution time tends to be stable … iteratively
+//! decouple the DNN on each layer and log the execution time") and, for
+//! devices it does not own, simulates `T = w · Q(x)/F` with published
+//! FLOPS figures. Both paths live here:
+//!
+//! * [`device`] — device catalog with the paper's exact constants;
+//! * [`measure`] — wall-clock stage profiles via the PJRT executor;
+//! * [`latency`] — the `T_E`/`T_C` tables the decision engine consumes,
+//!   built from either source, plus `w` regression (`util::stats`).
+
+pub mod device;
+pub mod latency;
+pub mod measure;
+
+pub use device::DeviceModel;
+pub use latency::LatencyTables;
+pub use measure::measure_stages;

@@ -1,0 +1,243 @@
+//! `artifacts/manifest.json` parsing: what `python/compile/aot.py` wrote.
+//!
+//! The manifest is the single contract between the build-time python
+//! side and this runtime: model stage graphs (shapes, FMACs, artifact
+//! file names) and the shared quant/dequant codec kernels keyed by
+//! tensor geometry.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct StageManifest {
+    pub index: usize,
+    pub name: String,
+    pub artifact: String,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub out_elems: usize,
+    pub fmacs_scaled: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub full_artifact: String,
+    pub stages: Vec<StageManifest>,
+}
+
+impl ModelManifest {
+    /// Number of decoupling points N.
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Raw f32 feature bytes at stage `i` (1-based), the paper's
+    /// "original feature map" size in Fig. 2/3.
+    pub fn stage_raw_bytes(&self, i: usize) -> usize {
+        self.stages[i - 1].out_elems * 4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CodecArtifacts {
+    /// quant artifact file by flat element count.
+    pub quant: BTreeMap<usize, String>,
+    /// dequant artifact file by exact output shape.
+    pub dequant: BTreeMap<Vec<usize>, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub c_max: u8,
+    pub num_classes: usize,
+    pub source_digest: String,
+    pub models: Vec<ModelManifest>,
+    pub codecs: CodecArtifacts,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape is not an array"))?
+        .iter()
+        .map(|d| d.as_u64().map(|v| v as usize).ok_or_else(|| anyhow!("bad shape dim")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let mut models = Vec::new();
+        for m in j.get("models").and_then(Json::as_arr).unwrap_or(&[]) {
+            let mut stages = Vec::new();
+            for s in m.get("stages").and_then(Json::as_arr).unwrap_or(&[]) {
+                stages.push(StageManifest {
+                    index: s.get("index").and_then(Json::as_u64).unwrap_or(0) as usize,
+                    name: s
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    artifact: s
+                        .get("artifact")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("stage missing artifact"))?
+                        .to_string(),
+                    in_shape: shape_of(s.get("in_shape").ok_or_else(|| anyhow!("in_shape"))?)?,
+                    out_shape: shape_of(
+                        s.get("out_shape").ok_or_else(|| anyhow!("out_shape"))?,
+                    )?,
+                    out_elems: s.get("out_elems").and_then(Json::as_u64).unwrap_or(0) as usize,
+                    fmacs_scaled: s.get("fmacs_scaled").and_then(Json::as_u64).unwrap_or(0),
+                });
+            }
+            models.push(ModelManifest {
+                name: m
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("model missing name"))?
+                    .to_string(),
+                input_shape: shape_of(
+                    m.get("input_shape").ok_or_else(|| anyhow!("input_shape"))?,
+                )?,
+                num_classes: m.get("num_classes").and_then(Json::as_u64).unwrap_or(0) as usize,
+                full_artifact: m
+                    .get("full_artifact")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("model missing full_artifact"))?
+                    .to_string(),
+                stages,
+            });
+        }
+
+        let mut quant = BTreeMap::new();
+        for q in j.path(&["codecs", "quant"]).and_then(Json::as_arr).unwrap_or(&[]) {
+            quant.insert(
+                q.get("elems").and_then(Json::as_u64).unwrap_or(0) as usize,
+                q.get("artifact").and_then(Json::as_str).unwrap_or_default().to_string(),
+            );
+        }
+        let mut dequant = BTreeMap::new();
+        for d in j.path(&["codecs", "dequant"]).and_then(Json::as_arr).unwrap_or(&[]) {
+            dequant.insert(
+                shape_of(d.get("shape").ok_or_else(|| anyhow!("dequant shape"))?)?,
+                d.get("artifact").and_then(Json::as_str).unwrap_or_default().to_string(),
+            );
+        }
+
+        Ok(Self {
+            dir,
+            c_max: j.get("c_max").and_then(Json::as_u64).unwrap_or(8) as u8,
+            num_classes: j.get("num_classes").and_then(Json::as_u64).unwrap_or(16) as usize,
+            source_digest: j
+                .get("source_digest")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            models,
+            codecs: CodecArtifacts { quant, dequant },
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+
+    /// Numeric model id used in wire frames (stable: manifest order).
+    pub fn model_id(&self, name: &str) -> Option<u16> {
+        self.models.iter().position(|m| m.name == name).map(|i| i as u16)
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "c_max": 8, "num_classes": 16, "source_digest": "abc",
+      "models": [{
+        "name": "m", "input_shape": [1, 4, 4, 3], "num_classes": 16,
+        "full_artifact": "m_full.hlo.txt",
+        "stages": [
+          {"index": 0, "name": "s0", "artifact": "m_stage_00.hlo.txt",
+           "in_shape": [1,4,4,3], "out_shape": [1,4,4,8], "out_elems": 128,
+           "fmacs_scaled": 3456, "hlo_bytes": 10}
+        ]
+      }],
+      "codecs": {
+        "quant": [{"elems": 128, "artifact": "quant_128.hlo.txt"}],
+        "dequant": [{"shape": [1,4,4,8], "elems": 128, "artifact": "dq.hlo.txt"}]
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("jalad_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.c_max, 8);
+        assert_eq!(m.models.len(), 1);
+        let model = m.model("m").unwrap();
+        assert_eq!(model.num_stages(), 1);
+        assert_eq!(model.stages[0].out_elems, 128);
+        assert_eq!(model.stage_raw_bytes(1), 512);
+        assert_eq!(m.codecs.quant[&128], "quant_128.hlo.txt");
+        assert_eq!(m.codecs.dequant[&vec![1usize, 4, 4, 8]], "dq.hlo.txt");
+        assert_eq!(m.model_id("m"), Some(0));
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    /// Against the real exported manifest when present (skips otherwise).
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.len() >= 5, "expected 5 models, got {}", m.models.len());
+        for model in &m.models {
+            assert!(!model.stages.is_empty());
+            // stage chain shapes must be consistent
+            for w in model.stages.windows(2) {
+                assert_eq!(w[0].out_shape, w[1].in_shape, "model {}", model.name);
+            }
+            // every stage's quant/dequant geometry must exist in codecs
+            for s in &model.stages {
+                assert!(
+                    m.codecs.quant.contains_key(&s.out_elems),
+                    "missing quant_{} for {}",
+                    s.out_elems,
+                    model.name
+                );
+                assert!(m.codecs.dequant.contains_key(&s.out_shape));
+            }
+        }
+    }
+}

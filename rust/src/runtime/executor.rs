@@ -1,0 +1,336 @@
+//! PJRT executor with a lazy compile cache.
+//!
+//! One `Executor` wraps one PJRT CPU client (the paper's edge device or
+//! cloud server — each process owns one). HLO text artifacts compile on
+//! first use and are cached; compilation is tens of milliseconds per
+//! stage while execution is micro/milliseconds, so the cache is what
+//! keeps re-decoupling cheap: switching `(i*, c)` never recompiles
+//! anything already seen.
+//!
+//! Calling conventions (all lowered with `return_tuple=True`):
+//! * stage:   (x: f32[in_shape])                  -> (y,)
+//! * full:    (x: f32[input_shape])               -> (logits,)
+//! * quant:   (x: f32[n], c: f32[])               -> (y, lo, hi)
+//! * dequant: (y: f32[n], lo, hi, c: f32[])       -> (x̂[out_shape],)
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::Manifest;
+use super::tensor::Tensor;
+use crate::compression::quant::Quantized;
+
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative compile time, for the metrics endpoint.
+    compile_seconds: Mutex<f64>,
+}
+
+/// Output of a stage execution plus its wall-clock cost.
+#[derive(Debug, Clone)]
+pub struct StageOutput {
+    pub tensor: Tensor,
+    pub seconds: f64,
+}
+
+impl Executor {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compile_seconds: Mutex::new(0.0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn compile_seconds(&self) -> f64 {
+        *self.compile_seconds.lock().unwrap()
+    }
+
+    /// Fetch-or-compile the executable for an artifact file name.
+    fn executable(&self, file: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(file) {
+            return Ok(std::sync::Arc::clone(exe));
+        }
+        let path = self.manifest.artifact_path(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {file}: {e}"))?;
+        let exe = std::sync::Arc::new(exe);
+        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        self.cache.lock().unwrap().insert(file.to_string(), std::sync::Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Warm the cache for a set of artifacts (server startup).
+    pub fn precompile(&self, files: &[&str]) -> Result<()> {
+        for f in files {
+            self.executable(f)?;
+        }
+        Ok(())
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    fn run(&self, file: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self.executable(file)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {file}: {e}"))?;
+        result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {file}: {e}"))
+    }
+
+    /// Run stage `i` (1-based) of `model` on an activation.
+    pub fn run_stage(&self, model: &str, i: usize, x: &Tensor) -> Result<StageOutput> {
+        let m = self.manifest.model(model)?;
+        let stage = m
+            .stages
+            .get(i - 1)
+            .ok_or_else(|| anyhow!("{model} has {} stages, asked {i}", m.stages.len()))?;
+        if x.shape() != stage.in_shape.as_slice() {
+            return Err(anyhow!(
+                "{model} stage {i} expects {:?}, got {:?}",
+                stage.in_shape,
+                x.shape()
+            ));
+        }
+        let t0 = Instant::now();
+        let out = self.run(&stage.artifact.clone(), &[x.to_literal()])?;
+        let lit = out.to_tuple1().map_err(|e| anyhow!("stage output unwrap: {e}"))?;
+        let tensor = Tensor::from_literal(&lit)?;
+        Ok(StageOutput { tensor, seconds: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Run stages `from..=to` (1-based, inclusive) sequentially.
+    pub fn run_stages(
+        &self,
+        model: &str,
+        from: usize,
+        to: usize,
+        x: &Tensor,
+    ) -> Result<StageOutput> {
+        let mut cur = x.clone();
+        let mut total = 0.0;
+        for i in from..=to {
+            let out = self.run_stage(model, i, &cur)?;
+            cur = out.tensor;
+            total += out.seconds;
+        }
+        Ok(StageOutput { tensor: cur, seconds: total })
+    }
+
+    /// Whole-model forward (cloud-only baselines, i* = 0).
+    pub fn run_full(&self, model: &str, x: &Tensor) -> Result<StageOutput> {
+        let m = self.manifest.model(model)?;
+        let t0 = Instant::now();
+        let out = self.run(&m.full_artifact.clone(), &[x.to_literal()])?;
+        let lit = out.to_tuple1().map_err(|e| anyhow!("full output unwrap: {e}"))?;
+        Ok(StageOutput { tensor: Tensor::from_literal(&lit)?, seconds: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Quantize via the exported L1 Pallas kernel: (x[n], c) → Quantized.
+    pub fn run_quant(&self, x: &Tensor, c: u8) -> Result<Quantized> {
+        let n = x.len();
+        let file = self
+            .manifest
+            .codecs
+            .quant
+            .get(&n)
+            .ok_or_else(|| anyhow!("no quant artifact for n={n}"))?
+            .clone();
+        let flat = x.clone().flattened();
+        let out = self.run(&file, &[flat.to_literal(), Tensor::scalar(c as f32).to_literal()])?;
+        let (y, lo, hi) = out.to_tuple3().map_err(|e| anyhow!("quant unwrap: {e}"))?;
+        let values: Vec<u16> =
+            y.to_vec::<f32>()?.into_iter().map(|v| v as u16).collect();
+        Ok(Quantized {
+            values,
+            lo: lo.get_first_element::<f32>()?,
+            hi: hi.get_first_element::<f32>()?,
+            c,
+        })
+    }
+
+    /// Dequantize via the exported L1 Pallas kernel into `shape`.
+    pub fn run_dequant(&self, q: &Quantized, shape: &[usize]) -> Result<Tensor> {
+        let file = self
+            .manifest
+            .codecs
+            .dequant
+            .get(shape)
+            .ok_or_else(|| anyhow!("no dequant artifact for shape {shape:?}"))?
+            .clone();
+        let y: Vec<f32> = q.values.iter().map(|&v| v as f32).collect();
+        let yt = Tensor::new(vec![y.len()], y);
+        let out = self.run(
+            &file,
+            &[
+                yt.to_literal(),
+                Tensor::scalar(q.lo).to_literal(),
+                Tensor::scalar(q.hi).to_literal(),
+                Tensor::scalar(q.c as f32).to_literal(),
+            ],
+        )?;
+        let lit = out.to_tuple1().map_err(|e| anyhow!("dequant unwrap: {e}"))?;
+        Tensor::from_literal(&lit).context("dequant output")
+    }
+}
+
+/// Thread-safe wrapper: serializes all PJRT access behind one mutex.
+///
+/// The `xla` crate's handles are `Rc` + raw pointers (not `Send`), but
+/// every object lives strictly inside [`Executor`] — its public API only
+/// traffics in plain-rust `Tensor`/`Quantized` values, and literals are
+/// created/destroyed inside the locked region. With exclusive access
+/// enforced by the mutex no `Rc` refcount or XLA object is ever touched
+/// from two threads at once, which makes the `Send + Sync` assertion
+/// sound. CPU inference is compute-bound, so serialization costs little;
+/// scale out with one `SharedExecutor` per worker if needed.
+pub struct SharedExecutor {
+    inner: Mutex<Executor>,
+}
+
+unsafe impl Send for SharedExecutor {}
+unsafe impl Sync for SharedExecutor {}
+
+impl SharedExecutor {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        Ok(Self { inner: Mutex::new(Executor::new(manifest)?) })
+    }
+
+    pub fn from_executor(exe: Executor) -> Self {
+        Self { inner: Mutex::new(exe) }
+    }
+
+    /// Run `f` with exclusive access to the executor.
+    pub fn with<R>(&self, f: impl FnOnce(&Executor) -> R) -> R {
+        let g = self.inner.lock().unwrap();
+        f(&g)
+    }
+
+    pub fn run_stage(&self, model: &str, i: usize, x: &Tensor) -> Result<StageOutput> {
+        self.with(|e| e.run_stage(model, i, x))
+    }
+
+    pub fn run_full(&self, model: &str, x: &Tensor) -> Result<StageOutput> {
+        self.with(|e| e.run_full(model, x))
+    }
+
+    pub fn run_quant(&self, x: &Tensor, c: u8) -> Result<Quantized> {
+        self.with(|e| e.run_quant(x, c))
+    }
+
+    pub fn run_dequant(&self, q: &Quantized, shape: &[usize]) -> Result<Tensor> {
+        self.with(|e| e.run_dequant(q, shape))
+    }
+
+    pub fn manifest_clone(&self) -> Manifest {
+        self.with(|e| e.manifest().clone())
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.with(|e| e.cached_count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Integration-grade tests against the real artifacts; every test
+    //! skips silently when `make artifacts` has not run yet.
+    use super::*;
+    use crate::compression::quant;
+
+    fn executor() -> Option<Executor> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Executor::new(Manifest::load(dir).unwrap()).unwrap())
+    }
+
+    fn input_for(exe: &Executor, model: &str) -> Tensor {
+        let shape = exe.manifest().model(model).unwrap().input_shape.clone();
+        crate::data::gen::sample_image_shaped(0, 0, &shape)
+    }
+
+    #[test]
+    fn stage_chain_matches_full_forward() {
+        let Some(exe) = executor() else { return };
+        for model in ["tinyconv", "vgg16"] {
+            let x = input_for(&exe, model);
+            let n = exe.manifest().model(model).unwrap().num_stages();
+            let chained = exe.run_stages(model, 1, n, &x).unwrap().tensor;
+            let full = exe.run_full(model, &x).unwrap().tensor;
+            assert_eq!(chained.shape(), full.shape());
+            for (a, b) in chained.data().iter().zip(full.data()) {
+                assert!((a - b).abs() < 1e-3, "{model}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn pallas_quant_matches_rust_twin() {
+        let Some(exe) = executor() else { return };
+        let x = input_for(&exe, "tinyconv");
+        let mid = exe.run_stage("tinyconv", 1, &x).unwrap().tensor;
+        for c in [1u8, 4, 8] {
+            let via_pjrt = exe.run_quant(&mid, c).unwrap();
+            let via_rust = quant::quantize(mid.data(), c);
+            assert_eq!(via_pjrt.values, via_rust.values, "c={c}");
+            assert!((via_pjrt.lo - via_rust.lo).abs() < 1e-6);
+            assert!((via_pjrt.hi - via_rust.hi).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pallas_dequant_roundtrip() {
+        let Some(exe) = executor() else { return };
+        let x = input_for(&exe, "tinyconv");
+        let mid = exe.run_stage("tinyconv", 1, &x).unwrap().tensor;
+        let q = exe.run_quant(&mid, 8).unwrap();
+        let back = exe.run_dequant(&q, mid.shape()).unwrap();
+        assert_eq!(back.shape(), mid.shape());
+        let bound = quant::error_bound(q.lo, q.hi, 8) * 1.001;
+        for (a, b) in mid.data().iter().zip(back.data()) {
+            assert!((a - b).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn compile_cache_hits() {
+        let Some(exe) = executor() else { return };
+        let x = input_for(&exe, "tinyconv");
+        let _ = exe.run_stage("tinyconv", 1, &x).unwrap();
+        let cached = exe.cached_count();
+        let _ = exe.run_stage("tinyconv", 1, &x).unwrap();
+        assert_eq!(exe.cached_count(), cached, "second run must not compile");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(exe) = executor() else { return };
+        let bad = Tensor::zeros(vec![1, 2, 2, 3]);
+        assert!(exe.run_stage("tinyconv", 1, &bad).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the
+//! request path (the L3 half of the AOT bridge; see DESIGN.md).
+//!
+//! * [`tensor`] — host-side `Tensor` (shape + contiguous f32 buffer);
+//! * [`artifacts`] — `artifacts/manifest.json` parsing and path lookup;
+//! * [`executor`] — a PJRT CPU client with a lazy compile cache: HLO text
+//!   is parsed and compiled on first use, cached thereafter (one
+//!   executable per stage / codec kernel), plus typed helpers for the
+//!   stage / quant / dequant / full-model calling conventions.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serialized protos use 64-bit ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod artifacts;
+pub mod executor;
+pub mod tensor;
+
+pub use artifacts::{CodecArtifacts, Manifest, ModelManifest, StageManifest};
+pub use executor::{Executor, SharedExecutor, StageOutput};
+pub use tensor::Tensor;

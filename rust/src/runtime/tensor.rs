@@ -1,0 +1,156 @@
+//! Host-side dense f32 tensor: shape + contiguous row-major buffer.
+//!
+//! The thin currency between pipeline stages, the feature codec and the
+//! PJRT boundary. Deliberately minimal — all heavy math happens inside
+//! compiled XLA executables; the coordinator only reshapes, flattens and
+//! shuttles buffers.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match buffer length {}",
+            shape,
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Flatten to 1-D.
+    pub fn flattened(self) -> Self {
+        let n = self.data.len();
+        self.reshaped(vec![n])
+    }
+
+    /// Index of the maximum element (ties → first). Logits → class id.
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Raw byte size of the f32 buffer (the paper's "original" size).
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// To an XLA literal of this shape.
+    ///
+    /// Single-copy construction straight into the target shape (§Perf
+    /// log: the earlier `vec1` + `reshape` pair did two literal
+    /// allocations and copies per PJRT call).
+    pub fn to_literal(&self) -> xla::Literal {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.shape,
+            bytes,
+        )
+        .expect("literal construction")
+    }
+
+    /// From an XLA literal (must be f32).
+    pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Self::new(dims, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_views() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.byte_size(), 24);
+        let f = t.clone().flattened();
+        assert_eq!(f.shape(), &[6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn argmax_ties_first() {
+        let t = Tensor::new(vec![4], vec![1.0, 5.0, 5.0, 0.0]);
+        assert_eq!(t.argmax(), 1);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let t = Tensor::scalar(7.5);
+        let lit = t.to_literal();
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 7.5);
+    }
+}

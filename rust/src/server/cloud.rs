@@ -1,0 +1,190 @@
+//! The cloud server: one thread per connection, PJRT-backed inference.
+//!
+//! Handles two request kinds:
+//! * `Features` — the decoupled path: decode the wire frame (its header
+//!   names model + stage + c), dequantize through the L1 artifact, run
+//!   stages `i*+1..N`, reply with logits;
+//! * `Image` — the cloud-only path: decode the PNG-like image, run the
+//!   full model.
+//!
+//! The wire frame being self-describing is what lets the edge
+//! re-decouple unilaterally — the "synchronize" step of §III-E costs
+//! nothing here.
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::compression::{feature, png, quant};
+use crate::metrics::Counters;
+use crate::runtime::{Manifest, SharedExecutor};
+use crate::server::proto::Frame;
+use crate::util::json::Json;
+
+pub struct CloudServer {
+    exe: Arc<SharedExecutor>,
+    manifest: Manifest,
+    pub counters: Arc<Counters>,
+    stop: Arc<AtomicBool>,
+}
+
+impl CloudServer {
+    pub fn new(exe: Arc<SharedExecutor>) -> Self {
+        let manifest = exe.manifest_clone();
+        Self {
+            exe,
+            manifest,
+            counters: Arc::new(Counters::default()),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Bind and serve on a background thread; returns the local address
+    /// and a join handle. `addr` like "127.0.0.1:0" picks a free port.
+    pub fn spawn(self: Arc<Self>, addr: &str) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let me = Arc::clone(&self);
+        let handle = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if me.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let me2 = Arc::clone(&me);
+                        std::thread::spawn(move || {
+                            if let Err(e) = me2.serve_conn(stream) {
+                                crate::log_debug!("cloud", "connection ended: {e:#}");
+                            }
+                        });
+                    }
+                    Err(e) => {
+                        crate::log_warn!("cloud", "accept error: {e}");
+                    }
+                }
+            }
+        });
+        Ok((local, handle))
+    }
+
+    fn serve_conn(&self, stream: TcpStream) -> Result<()> {
+        stream.set_nodelay(true).ok();
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        loop {
+            let frame = match Frame::read_from(&mut reader) {
+                Ok(f) => f,
+                Err(_) => return Ok(()), // peer closed
+            };
+            match frame {
+                Frame::Features(bytes) => {
+                    self.counters.inc_requests();
+                    self.counters.add_bytes(bytes.len() as u64);
+                    match self.handle_features(&bytes) {
+                        Ok(logits) => Frame::Logits(logits).write_to(&mut writer)?,
+                        Err(e) => {
+                            self.counters.inc_errors();
+                            Frame::Error(format!("{e:#}")).write_to(&mut writer)?
+                        }
+                    };
+                }
+                Frame::Image { model_id, hw: _, png } => {
+                    self.counters.inc_requests();
+                    self.counters.add_bytes(png.len() as u64);
+                    match self.handle_image(model_id, &png) {
+                        Ok(logits) => Frame::Logits(logits).write_to(&mut writer)?,
+                        Err(e) => {
+                            self.counters.inc_errors();
+                            Frame::Error(format!("{e:#}")).write_to(&mut writer)?
+                        }
+                    };
+                }
+                Frame::Stats => {
+                    let (req, err, bytes, _) = self.counters.snapshot();
+                    let j = Json::obj(vec![
+                        ("requests", Json::num(req as f64)),
+                        ("errors", Json::num(err as f64)),
+                        ("bytes_rx", Json::num(bytes as f64)),
+                        ("compiled", Json::num(self.exe.cached_count() as f64)),
+                    ]);
+                    Frame::StatsReply(j.to_string().into_bytes()).write_to(&mut writer)?;
+                }
+                Frame::Probe(padding) => {
+                    // Bandwidth probe: acknowledge immediately; the edge
+                    // times the (throttled) upload of the padding.
+                    self.counters.add_bytes(padding.len() as u64);
+                    Frame::ProbeAck.write_to(&mut writer)?;
+                }
+                Frame::Shutdown => {
+                    self.stop.store(true, Ordering::Relaxed);
+                    // Unblock the accept loop with a dummy connection.
+                    return Ok(());
+                }
+                other => {
+                    Frame::Error(format!("unexpected frame {:?}", other.kind()))
+                        .write_to(&mut writer)?;
+                }
+            }
+        }
+    }
+
+    fn handle_features(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let frame = feature::decode(bytes).map_err(anyhow::Error::new)?;
+        let model = self
+            .manifest
+            .models
+            .get(frame.model as usize)
+            .ok_or_else(|| anyhow!("bad model id {}", frame.model))?
+            .name
+            .clone();
+        let m = self.manifest.model(&model)?;
+        let i = frame.stage as usize;
+        if i == 0 || i > m.num_stages() {
+            return Err(anyhow!("bad stage {i}"));
+        }
+        let out_shape = m.stages[i - 1].out_shape.clone();
+        let n = m.num_stages();
+        let q = quant::Quantized {
+            values: frame.values,
+            lo: frame.lo,
+            hi: frame.hi,
+            c: frame.c,
+        };
+        // One locked region for the whole tail keeps per-request lock
+        // traffic to a single acquisition.
+        self.exe.with(|e| {
+            let mut cur = e.run_dequant(&q, &out_shape)?;
+            for j in i + 1..=n {
+                cur = e.run_stage(&model, j, &cur)?.tensor;
+            }
+            Ok(cur.data().to_vec())
+        })
+    }
+
+    fn handle_image(&self, model_id: u16, png_bytes: &[u8]) -> Result<Vec<f32>> {
+        let model = self
+            .manifest
+            .models
+            .get(model_id as usize)
+            .ok_or_else(|| anyhow!("bad model id {model_id}"))?
+            .name
+            .clone();
+        let m = self.manifest.model(&model)?;
+        let img = png::decode(png_bytes).map_err(anyhow::Error::new)?;
+        let x = crate::data::gen::from_rgb8(&img.data, m.input_shape.clone());
+        Ok(self.exe.run_full(&model, &x)?.tensor.data().to_vec())
+    }
+
+    /// Ask a running server (possibly in another process) to stop.
+    pub fn request_shutdown(addr: std::net::SocketAddr) {
+        if let Ok(mut s) = TcpStream::connect(addr) {
+            let _ = Frame::Shutdown.write_to(&mut s);
+        }
+        // One more connect unblocks the accept loop.
+        let _ = TcpStream::connect(addr);
+    }
+}

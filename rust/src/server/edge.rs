@@ -1,0 +1,221 @@
+//! The edge client: head stages + L1 quantize + Huffman + throttled TCP.
+//!
+//! One `EdgeClient` models the paper's edge device: it executes stages
+//! `1..=i*` locally, compresses the cut feature map, ships it through a
+//! token-bucket-paced socket (the controlled uplink of the testbed), and
+//! adapts `(i*, c)` as its bandwidth estimate drifts (§III-E).
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::compression::{feature, png};
+use crate::coordinator::AdaptationController;
+use crate::data::gen::Sample;
+use crate::ilp::Decision;
+use crate::metrics::Breakdown;
+use crate::network::throttle::{RateHandle, ThrottledWriter};
+use crate::runtime::Executor;
+use crate::server::proto::Frame;
+
+/// Transfers below this size are RTT/compute-dominated and excluded
+/// from bandwidth estimation.
+pub const MIN_ESTIMATE_BYTES: usize = 4096;
+
+pub struct EdgeClient<'a> {
+    exe: &'a Executor,
+    model: String,
+    model_id: u16,
+    reader: BufReader<TcpStream>,
+    writer: ThrottledWriter<TcpStream>,
+    pub controller: AdaptationController,
+}
+
+/// One served request's outcome on the edge side.
+#[derive(Debug, Clone)]
+pub struct EdgeResult {
+    pub prediction: usize,
+    pub correct: bool,
+    pub decision: Decision,
+    pub breakdown: Breakdown,
+    pub replanned: bool,
+}
+
+impl<'a> EdgeClient<'a> {
+    pub fn connect(
+        exe: &'a Executor,
+        model: &str,
+        addr: std::net::SocketAddr,
+        uplink: RateHandle,
+        controller: AdaptationController,
+    ) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        // Small burst: feature frames are a few KB, so a default 64 KiB
+        // bucket would swallow whole frames and defeat the throttle
+        // (§Perf log — this showed up as bimodal latencies).
+        let writer = ThrottledWriter::with_burst(stream, uplink, 2048);
+        let model_id = exe
+            .manifest()
+            .model_id(model)
+            .ok_or_else(|| anyhow!("model {model} not in manifest"))?;
+        Ok(Self { exe, model: model.to_string(), model_id, reader, writer, controller })
+    }
+
+    /// Serve one request end-to-end; blocks for the cloud reply.
+    pub fn infer(&mut self, sample: &Sample) -> Result<EdgeResult> {
+        let plan = self.controller.plan().clone();
+        let mut bd = Breakdown::default();
+        let (frame, sent_decision) = match plan.decision {
+            Decision::CloudOnly => {
+                let t0 = Instant::now();
+                let hw = sample.image.shape()[1];
+                let rgb = crate::data::gen::to_rgb8(&sample.image);
+                let wire = png::encode(&png::Image8::new(hw, hw, 3, rgb));
+                bd.encode = t0.elapsed().as_secs_f64();
+                (
+                    Frame::Image { model_id: self.model_id, hw: hw as u16, png: wire },
+                    Decision::CloudOnly,
+                )
+            }
+            Decision::Cut { i, c } => {
+                let mut cur = sample.image.clone();
+                for j in 1..=i {
+                    let out = self.exe.run_stage(&self.model, j, &cur)?;
+                    cur = out.tensor;
+                    bd.edge_compute += out.seconds;
+                }
+                let t0 = Instant::now();
+                let q = self.exe.run_quant(&cur, c)?;
+                bd.quantize = t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                let wire = feature::encode(&q, i as u16, self.model_id);
+                bd.encode = t1.elapsed().as_secs_f64();
+                (Frame::Features(wire), Decision::Cut { i, c })
+            }
+        };
+
+        // Transmit through the paced socket and await the reply.
+        let t2 = Instant::now();
+        let sent = frame.write_to(&mut self.writer)?;
+        bd.tx_bytes = sent;
+        let reply = Frame::read_from(&mut self.reader)?;
+        // Transmit time ≈ send + queueing; the cloud compute is inside
+        // this round trip too, but at our throttled rates (≤ a few MB/s)
+        // the wire dominates by an order of magnitude.
+        bd.transmit = t2.elapsed().as_secs_f64();
+
+        let logits = match reply {
+            Frame::Logits(v) => v,
+            Frame::Error(e) => return Err(anyhow!("cloud error: {e}")),
+            other => return Err(anyhow!("unexpected reply kind {}", other.kind())),
+        };
+        let prediction = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+
+        // Feed the adaptation loop with the observed uplink throughput.
+        // Only transfers large enough to be bandwidth-dominated count:
+        // for a 33-byte logits frame the round trip is all RTT + cloud
+        // compute, and folding those in collapsed the estimate and sent
+        // the controller into pathological early cuts (§Perf log).
+        let replanned = if sent >= MIN_ESTIMATE_BYTES {
+            self.controller.observe_transfer(sent, bd.transmit.max(1e-9)).is_some()
+        } else {
+            false
+        };
+
+        Ok(EdgeResult {
+            prediction,
+            correct: prediction == sample.label,
+            decision: sent_decision,
+            breakdown: bd,
+            replanned,
+        })
+    }
+
+    /// Active bandwidth probe: upload `bytes` of padding through the
+    /// throttled socket and feed the observed throughput to the
+    /// adaptation controller. Used when the current plan's frames are
+    /// too small to estimate from (e.g. logits-only cuts); returns the
+    /// new plan when the probe triggered a re-decoupling.
+    pub fn probe_bandwidth(&mut self, bytes: usize) -> Result<bool> {
+        let t0 = Instant::now();
+        let sent = Frame::Probe(vec![0xAB; bytes]).write_to(&mut self.writer)?;
+        match Frame::read_from(&mut self.reader)? {
+            Frame::ProbeAck => {}
+            other => return Err(anyhow!("unexpected probe reply {}", other.kind())),
+        }
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        Ok(self.controller.observe_transfer(sent, dt).is_some())
+    }
+
+    /// Query the cloud's stats endpoint.
+    pub fn stats(&mut self) -> Result<String> {
+        Frame::Stats.write_to(&mut self.writer)?;
+        match Frame::read_from(&mut self.reader)? {
+            Frame::StatsReply(b) => Ok(String::from_utf8_lossy(&b).into_owned()),
+            other => Err(anyhow!("unexpected reply {}", other.kind())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Full-stack loopback test: real sockets, real PJRT on both sides.
+    use super::*;
+    use crate::coordinator::decision::{DecisionEngine, Scale};
+    use crate::predictor::Tables;
+    use crate::profiler::LatencyTables;
+    use crate::runtime::{Manifest, SharedExecutor};
+    use crate::server::cloud::CloudServer;
+    use std::sync::Arc;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loopback_feature_and_image_paths() {
+        let Some(dir) = artifacts_dir() else { return };
+        // Two PJRT clients in one process: the cloud's (shared, behind
+        // the server threads) and the edge's (plain, this thread).
+        let cloud_exe =
+            Arc::new(SharedExecutor::new(Manifest::load(&dir).unwrap()).unwrap());
+        let server = Arc::new(CloudServer::new(Arc::clone(&cloud_exe)));
+        let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+
+        let exe = Executor::new(Manifest::load(&dir).unwrap()).unwrap();
+        let tables = Tables::load_or_build(&exe, "tinyconv", &dir).unwrap();
+        let latency = LatencyTables::measured(&exe, "tinyconv", 2, 4.0).unwrap();
+        let engine =
+            DecisionEngine::new("tinyconv", tables, latency, Scale::Measured, 0.10).unwrap();
+        let controller = AdaptationController::new(engine, 1_000_000.0);
+        let rate = RateHandle::new(10_000_000);
+        let mut edge =
+            EdgeClient::connect(&exe, "tinyconv", addr, rate, controller).unwrap();
+
+        // Whatever the plan says, predictions must match local execution.
+        for id in 7000..7006 {
+            let s = crate::data::gen::sample_image(id, 32);
+            let r = edge.infer(&s).unwrap();
+            assert!(r.breakdown.tx_bytes > 0);
+            if let Decision::Cut { c, .. } = r.decision {
+                if c >= 4 {
+                    let clean = exe.run_full("tinyconv", &s.image).unwrap().tensor.argmax();
+                    assert_eq!(r.prediction, clean, "id {id}");
+                }
+            }
+        }
+        let stats = edge.stats().unwrap();
+        assert!(stats.contains("\"requests\""), "stats: {stats}");
+        CloudServer::request_shutdown(addr);
+    }
+}

@@ -1,0 +1,17 @@
+//! Real TCP edge/cloud deployment (the paper's "real-world experiment"
+//! substrate, §IV-A, on one host with a token-bucket-throttled uplink).
+//!
+//! * [`proto`] — length-prefixed wire protocol shared by both ends;
+//! * [`cloud`] — the cloud server: accepts connections, dequantizes
+//!   feature frames (L1 dequant artifact) and finishes inference, or
+//!   runs the full model on uploaded images;
+//! * [`edge`] — the edge client: runs the head stages, quantizes,
+//!   entropy-codes, ships frames through the throttled socket, and
+//!   re-decouples as its bandwidth estimate drifts.
+
+pub mod cloud;
+pub mod edge;
+pub mod proto;
+
+pub use cloud::CloudServer;
+pub use edge::EdgeClient;

@@ -1,0 +1,190 @@
+//! Length-prefixed wire protocol between edge and cloud.
+//!
+//! Frame layout: `[len: u32 LE][kind: u8][payload: len-1 bytes]`.
+//! `len` counts kind + payload. Payloads:
+//!
+//! * `Features` — a `compression::feature` frame (self-describing:
+//!   model id, stage, c, range, entropy-coded values);
+//! * `Image` — `[model_id u16][hw u16][png-like bytes]` for the
+//!   cloud-only path;
+//! * `Logits` — `[count u16][count × f32]` response;
+//! * `Stats` / `StatsReply` — queries the cloud's counters;
+//! * `Shutdown` — graceful server stop (tests).
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, Result};
+
+pub const KIND_FEATURES: u8 = 1;
+pub const KIND_IMAGE: u8 = 2;
+pub const KIND_LOGITS: u8 = 3;
+pub const KIND_STATS: u8 = 4;
+pub const KIND_STATS_REPLY: u8 = 5;
+pub const KIND_SHUTDOWN: u8 = 6;
+pub const KIND_ERROR: u8 = 7;
+pub const KIND_PROBE: u8 = 8;
+pub const KIND_PROBE_ACK: u8 = 9;
+
+/// Hard cap on frame size (a 224²·512-channel f32 map is ~100 MB; our
+/// frames are far smaller — reject anything absurd).
+pub const MAX_FRAME: usize = 256 * 1024 * 1024;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Features(Vec<u8>),
+    Image { model_id: u16, hw: u16, png: Vec<u8> },
+    Logits(Vec<f32>),
+    Stats,
+    StatsReply(Vec<u8>),
+    Shutdown,
+    Error(String),
+    /// Active bandwidth probe: opaque padding the cloud discards. Used
+    /// when the serving plan's frames are too small to estimate from
+    /// (`edge::MIN_ESTIMATE_BYTES`).
+    Probe(Vec<u8>),
+    ProbeAck,
+}
+
+impl Frame {
+    pub fn kind(&self) -> u8 {
+        match self {
+            Frame::Features(_) => KIND_FEATURES,
+            Frame::Image { .. } => KIND_IMAGE,
+            Frame::Logits(_) => KIND_LOGITS,
+            Frame::Stats => KIND_STATS,
+            Frame::StatsReply(_) => KIND_STATS_REPLY,
+            Frame::Shutdown => KIND_SHUTDOWN,
+            Frame::Error(_) => KIND_ERROR,
+            Frame::Probe(_) => KIND_PROBE,
+            Frame::ProbeAck => KIND_PROBE_ACK,
+        }
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> Result<usize> {
+        let payload: Vec<u8> = match self {
+            Frame::Features(b) => b.clone(),
+            Frame::Image { model_id, hw, png } => {
+                let mut p = Vec::with_capacity(4 + png.len());
+                p.extend_from_slice(&model_id.to_le_bytes());
+                p.extend_from_slice(&hw.to_le_bytes());
+                p.extend_from_slice(png);
+                p
+            }
+            Frame::Logits(v) => {
+                let mut p = Vec::with_capacity(2 + v.len() * 4);
+                p.extend_from_slice(&(v.len() as u16).to_le_bytes());
+                for x in v {
+                    p.extend_from_slice(&x.to_le_bytes());
+                }
+                p
+            }
+            Frame::Stats | Frame::Shutdown | Frame::ProbeAck => Vec::new(),
+            Frame::StatsReply(b) => b.clone(),
+            Frame::Error(s) => s.as_bytes().to_vec(),
+            Frame::Probe(b) => b.clone(),
+        };
+        let len = (payload.len() + 1) as u32;
+        w.write_all(&len.to_le_bytes())?;
+        w.write_all(&[self.kind()])?;
+        w.write_all(&payload)?;
+        w.flush()?;
+        Ok(4 + 1 + payload.len())
+    }
+
+    pub fn read_from(r: &mut impl Read) -> Result<Frame> {
+        let mut lenb = [0u8; 4];
+        r.read_exact(&mut lenb)?;
+        let len = u32::from_le_bytes(lenb) as usize;
+        if len == 0 || len > MAX_FRAME {
+            return Err(anyhow!("bad frame length {len}"));
+        }
+        let mut kind = [0u8; 1];
+        r.read_exact(&mut kind)?;
+        let mut payload = vec![0u8; len - 1];
+        r.read_exact(&mut payload)?;
+        Ok(match kind[0] {
+            KIND_FEATURES => Frame::Features(payload),
+            KIND_IMAGE => {
+                if payload.len() < 4 {
+                    return Err(anyhow!("short image frame"));
+                }
+                let model_id = u16::from_le_bytes([payload[0], payload[1]]);
+                let hw = u16::from_le_bytes([payload[2], payload[3]]);
+                Frame::Image { model_id, hw, png: payload[4..].to_vec() }
+            }
+            KIND_LOGITS => {
+                if payload.len() < 2 {
+                    return Err(anyhow!("short logits frame"));
+                }
+                let n = u16::from_le_bytes([payload[0], payload[1]]) as usize;
+                if payload.len() != 2 + n * 4 {
+                    return Err(anyhow!("logits length mismatch"));
+                }
+                let v = (0..n)
+                    .map(|i| {
+                        f32::from_le_bytes(
+                            payload[2 + i * 4..6 + i * 4].try_into().unwrap(),
+                        )
+                    })
+                    .collect();
+                Frame::Logits(v)
+            }
+            KIND_STATS => Frame::Stats,
+            KIND_STATS_REPLY => Frame::StatsReply(payload),
+            KIND_SHUTDOWN => Frame::Shutdown,
+            KIND_ERROR => Frame::Error(String::from_utf8_lossy(&payload).into_owned()),
+            KIND_PROBE => Frame::Probe(payload),
+            KIND_PROBE_ACK => Frame::ProbeAck,
+            k => return Err(anyhow!("unknown frame kind {k}")),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(Frame::read_from(&mut r).unwrap(), f);
+        assert!(r.is_empty(), "trailing bytes");
+    }
+
+    #[test]
+    fn all_frames_roundtrip() {
+        roundtrip(Frame::Features(vec![1, 2, 3, 255]));
+        roundtrip(Frame::Image { model_id: 3, hw: 32, png: vec![9; 100] });
+        roundtrip(Frame::Logits(vec![1.5, -2.25, 0.0]));
+        roundtrip(Frame::Stats);
+        roundtrip(Frame::StatsReply(b"{}".to_vec()));
+        roundtrip(Frame::Shutdown);
+        roundtrip(Frame::Error("boom".into()));
+    }
+
+    #[test]
+    fn multiple_frames_stream() {
+        let mut buf = Vec::new();
+        Frame::Features(vec![1]).write_to(&mut buf).unwrap();
+        Frame::Logits(vec![2.0]).write_to(&mut buf).unwrap();
+        let mut r = &buf[..];
+        assert!(matches!(Frame::read_from(&mut r).unwrap(), Frame::Features(_)));
+        assert!(matches!(Frame::read_from(&mut r).unwrap(), Frame::Logits(_)));
+    }
+
+    #[test]
+    fn corrupt_length_rejected() {
+        let mut buf = Vec::new();
+        Frame::Stats.write_to(&mut buf).unwrap();
+        buf[0..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(Frame::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let mut buf = Vec::new();
+        Frame::Features(vec![0; 50]).write_to(&mut buf).unwrap();
+        assert!(Frame::read_from(&mut &buf[..10]).is_err());
+    }
+}

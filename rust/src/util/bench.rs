@@ -1,0 +1,223 @@
+//! Criterion-like benchmark harness for `cargo bench` (harness = false).
+//!
+//! Auto-calibrates iteration counts to a target measurement time, warms
+//! up, reports mean / p50 / p95 and throughput, and can emit the paper's
+//! table rows. `cargo bench` filters benches by substring argument just
+//! like criterion (`cargo bench -- huffman`).
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub struct Bencher {
+    filter: Option<String>,
+    target: Duration,
+    results: Vec<BenchResult>,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+impl Bencher {
+    /// Reads the cargo-bench CLI: any non-flag argument is a substring
+    /// filter; `--quick` shortens the target time (CI).
+    pub fn from_env() -> Self {
+        let mut filter = None;
+        let mut target = Duration::from_millis(400);
+        for arg in std::env::args().skip(1) {
+            match arg.as_str() {
+                "--bench" | "--test" => {} // cargo passes these through
+                "--quick" => target = Duration::from_millis(60),
+                s if !s.starts_with('-') => filter = Some(s.to_string()),
+                _ => {}
+            }
+        }
+        Self { filter, target, results: Vec::new() }
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map(|f| name.contains(f)).unwrap_or(true)
+    }
+
+    /// Benchmark a closure; returns the result (also stored for summary).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Option<BenchResult> {
+        self.bench_with_throughput(name, None, &mut f)
+    }
+
+    /// Benchmark with a bytes-per-iteration throughput annotation.
+    pub fn bench_bytes<F: FnMut()>(&mut self, name: &str, bytes: usize, mut f: F) -> Option<BenchResult> {
+        self.bench_with_throughput(name, Some((bytes as f64, "B")), &mut f)
+    }
+
+    /// Benchmark with an items-per-iteration throughput annotation.
+    pub fn bench_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: f64,
+        unit: &'static str,
+        mut f: F,
+    ) -> Option<BenchResult> {
+        self.bench_with_throughput(name, Some((items, unit)), &mut f)
+    }
+
+    fn bench_with_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        per_iter: Option<(f64, &'static str)>,
+        f: &mut F,
+    ) -> Option<BenchResult> {
+        if !self.enabled(name) {
+            return None;
+        }
+        // Calibrate: find an iteration count that takes ≥ target/10.
+        let mut iters_per_sample: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            let el = t0.elapsed();
+            if el >= self.target / 10 || iters_per_sample >= 1 << 24 {
+                break;
+            }
+            iters_per_sample = (iters_per_sample * 4).min(1 << 24);
+        }
+        // Measure: collect ~10 samples.
+        let mut samples_ns = Vec::with_capacity(12);
+        let deadline = Instant::now() + self.target;
+        while Instant::now() < deadline || samples_ns.len() < 3 {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+            if samples_ns.len() >= 30 {
+                break;
+            }
+        }
+        let mean = stats::mean(&samples_ns);
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: iters_per_sample * samples_ns.len() as u64,
+            mean_ns: mean,
+            p50_ns: stats::percentile(&samples_ns, 50.0),
+            p95_ns: stats::percentile(&samples_ns, 95.0),
+            throughput: per_iter.map(|(n, u)| (n / (mean / 1e9), u)),
+        };
+        println!("{}", format_result(&result));
+        self.results.push(result.clone());
+        Some(result)
+    }
+
+    /// Print a closing summary (call at the end of the bench main).
+    pub fn finish(&self) {
+        println!("\n{} benchmark(s) run.", self.results.len());
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+pub fn format_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{:.1} ns", ns)
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn format_result(r: &BenchResult) -> String {
+    let tp = match r.throughput {
+        Some((v, "B")) => format!("  ({:.1} MiB/s)", v / (1024.0 * 1024.0)),
+        Some((v, u)) => format!("  ({:.1} {}/s)", v, u),
+        None => String::new(),
+    };
+    format!(
+        "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}{}",
+        r.name,
+        format_ns(r.mean_ns),
+        format_ns(r.p50_ns),
+        format_ns(r.p95_ns),
+        tp
+    )
+}
+
+/// Render a paper-style table (used by the table benches to print the
+/// same rows the paper reports).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher { filter: None, target: Duration::from_millis(20), results: vec![] };
+        let r = b
+            .bench("spin", || {
+                std::hint::black_box((0..100).sum::<u64>());
+            })
+            .unwrap();
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bencher {
+            filter: Some("xyz".into()),
+            target: Duration::from_millis(5),
+            results: vec![],
+        };
+        assert!(b.bench("abc", || {}).is_none());
+        assert!(b.bench("has_xyz_inside", || {}).is_some());
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert_eq!(format_ns(12.3), "12.3 ns");
+        assert_eq!(format_ns(1234.0), "1.23 µs");
+        assert_eq!(format_ns(12_345_678.0), "12.35 ms");
+    }
+}

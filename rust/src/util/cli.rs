@@ -1,0 +1,196 @@
+//! Tiny declarative CLI argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! auto-generated `--help`. Used by `rust/src/main.rs` and every example.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument set. Build with [`Args::new`], declare options,
+/// then [`Args::parse`].
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: &'static str,
+    about: &'static str,
+    specs: Vec<Spec>,
+    values: BTreeMap<&'static str, String>,
+    flags: BTreeMap<&'static str, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Self {
+            program,
+            about,
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// `--name <value>` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, default: Some(default.to_string()), is_flag: false });
+        self.values.insert(name, default.to_string());
+        self
+    }
+
+    /// Boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, default: None, is_flag: true });
+        self.flags.insert(name, false);
+        self
+    }
+
+    /// Parse `std::env::args().skip(1)`-style input. On `--help`, prints
+    /// usage and exits. Unknown options are an error.
+    pub fn parse(self, argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut me = self;
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                eprintln!("{}", me.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = me
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n{}", me.usage()))?
+                    .clone();
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    *me.flags.get_mut(spec.name).unwrap() = true;
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{key} needs a value"))?,
+                    };
+                    *me.values.get_mut(spec.name).unwrap() = val;
+                }
+            } else {
+                me.positional.push(arg);
+            }
+        }
+        Ok(me)
+    }
+
+    /// Convenience: parse the real process arguments, exiting on error.
+    pub fn parse_env(self) -> Args {
+        match self.parse(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.program, self.about);
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <v> [default: {}]", spec.name, spec.default.as_deref().unwrap())
+            };
+            s.push_str(&format!("{head:<44} {}\n", spec.help));
+        }
+        s
+    }
+
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or_else(|| {
+            panic!("option --{name} was never declared");
+        })
+    }
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.parse_num(name)
+    }
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.parse_num(name)
+    }
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.parse_num(name)
+    }
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, name: &str) -> T {
+        let raw = self.get(name);
+        raw.parse().unwrap_or_else(|_| {
+            eprintln!("--{name}: cannot parse {raw:?}");
+            std::process::exit(2);
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    fn base() -> Args {
+        Args::new("t", "test")
+            .opt("model", "vgg16", "model name")
+            .opt("bw", "1.0", "bandwidth MBps")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults() {
+        let a = base().parse(argv("")).unwrap();
+        assert_eq!(a.get("model"), "vgg16");
+        assert_eq!(a.get_f64("bw"), 1.0);
+        assert!(!a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let a = base().parse(argv("--model resnet50 --bw=0.3 --verbose pos1")).unwrap();
+        assert_eq!(a.get("model"), "resnet50");
+        assert_eq!(a.get_f64("bw"), 0.3);
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(base().parse(argv("--nope 1")).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(base().parse(argv("--model")).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(base().parse(argv("--verbose=1")).is_err());
+    }
+}

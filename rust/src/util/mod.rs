@@ -1,0 +1,15 @@
+//! From-scratch utility substrates.
+//!
+//! The offline vendor set ships only `xla` + `anyhow`, so the crates a
+//! serving system would normally lean on (serde, clap, criterion,
+//! proptest, tokio, rand) are reimplemented here at the scale this
+//! project needs. Each is a deliberate deliverable with its own tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,215 @@
+//! Mini property-testing harness (no proptest offline).
+//!
+//! Deterministic: every property runs `CASES` cases from a fixed seed;
+//! on failure the failing case index and a debug rendering of the input
+//! are reported, and a bounded shrink loop tries to find a smaller
+//! counterexample for `Vec` inputs.
+//!
+//! ```ignore
+//! prop::check("huffman roundtrip", prop::vec_u8(0..=255, 0..4096), |bytes| {
+//!     let enc = encode(&bytes);
+//!     decode(&enc) == bytes
+//! });
+//! ```
+
+use super::rng::XorShift64Star;
+
+pub const CASES: usize = 128;
+const SEED: u64 = 0x7A1AD; // "JALAD"
+
+/// A generator of random values of type `T`.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut XorShift64Star) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut XorShift64Star) -> T + 'static) -> Self {
+        Self { f: Box::new(f) }
+    }
+    pub fn sample(&self, rng: &mut XorShift64Star) -> T {
+        (self.f)(rng)
+    }
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |rng| g(self.sample(rng)))
+    }
+}
+
+/// u64 uniform in [lo, hi].
+pub fn u64_in(lo: u64, hi: u64) -> Gen<u64> {
+    assert!(lo <= hi);
+    Gen::new(move |r| lo + r.below(hi - lo + 1))
+}
+
+/// usize uniform in [lo, hi].
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    u64_in(lo as u64, hi as u64).map(|x| x as usize)
+}
+
+/// f32 uniform in [lo, hi).
+pub fn f32_in(lo: f32, hi: f32) -> Gen<f32> {
+    Gen::new(move |r| lo + (hi - lo) * (r.next_f64() as f32))
+}
+
+/// Standard normal f32 scaled by `scale`.
+pub fn f32_gauss(scale: f32) -> Gen<f32> {
+    Gen::new(move |r| (r.next_gaussian_pair().0 as f32) * scale)
+}
+
+/// Vec with length in `len` and elements from `elem`.
+pub fn vec_of<T: 'static>(elem: Gen<T>, min_len: usize, max_len: usize) -> Gen<Vec<T>> {
+    Gen::new(move |r| {
+        let n = min_len + r.below((max_len - min_len + 1) as u64) as usize;
+        (0..n).map(|_| elem.sample(r)).collect()
+    })
+}
+
+/// Vec<u8> with arbitrary bytes.
+pub fn bytes(min_len: usize, max_len: usize) -> Gen<Vec<u8>> {
+    vec_of(u64_in(0, 255).map(|x| x as u8), min_len, max_len)
+}
+
+/// Sparse f32 feature-map-like vectors: mostly zeros (post-ReLU
+/// statistics), occasional positive spikes — the distribution JALAD's
+/// codec actually sees.
+pub fn sparse_features(min_len: usize, max_len: usize) -> Gen<Vec<f32>> {
+    Gen::new(move |r| {
+        let n = min_len + r.below((max_len - min_len + 1) as u64) as usize;
+        (0..n)
+            .map(|_| {
+                if r.next_f64() < 0.6 {
+                    0.0
+                } else {
+                    (r.next_gaussian_pair().0.abs() * 3.0) as f32
+                }
+            })
+            .collect()
+    })
+}
+
+/// Pair generator.
+pub fn pair<A: 'static, B: 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    Gen::new(move |r| (a.sample(r), b.sample(r)))
+}
+
+/// Run `prop` on `CASES` random cases; panic with diagnostics on failure.
+pub fn check<T: std::fmt::Debug + Clone + 'static>(
+    name: &str,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    check_n(name, gen, prop, CASES)
+}
+
+pub fn check_n<T: std::fmt::Debug + Clone + 'static>(
+    name: &str,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> bool,
+    cases: usize,
+) {
+    let mut rng = XorShift64Star::new(SEED ^ fxhash(name));
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            let rendered = format!("{:?}", input);
+            let shown: String = rendered.chars().take(400).collect();
+            panic!(
+                "property {name:?} failed at case {case}/{cases}\ninput (truncated): {shown}"
+            );
+        }
+    }
+}
+
+/// Shrinking variant for Vec inputs: halves the failing vector while the
+/// property keeps failing, then reports the minimal found slice.
+pub fn check_vec<T: std::fmt::Debug + Clone + 'static>(
+    name: &str,
+    gen: Gen<Vec<T>>,
+    prop: impl Fn(&Vec<T>) -> bool,
+) {
+    let mut rng = XorShift64Star::new(SEED ^ fxhash(name));
+    for case in 0..CASES {
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            let mut minimal = input.clone();
+            loop {
+                let mut shrunk = false;
+                for keep in [minimal.len() / 2, minimal.len().saturating_sub(1)] {
+                    if keep == 0 || keep >= minimal.len() {
+                        continue;
+                    }
+                    let head: Vec<T> = minimal[..keep].to_vec();
+                    if !prop(&head) {
+                        minimal = head;
+                        shrunk = true;
+                        break;
+                    }
+                    let tail: Vec<T> = minimal[minimal.len() - keep..].to_vec();
+                    if !prop(&tail) {
+                        minimal = tail;
+                        shrunk = true;
+                        break;
+                    }
+                }
+                if !shrunk {
+                    break;
+                }
+            }
+            let rendered = format!("{:?}", minimal);
+            let shown: String = rendered.chars().take(400).collect();
+            panic!(
+                "property {name:?} failed at case {case}; shrunk to len {}: {shown}",
+                minimal.len()
+            );
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add commutes", pair(u64_in(0, 1000), u64_in(0, 1000)), |(a, b)| a + b == b + a);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics() {
+        check("always false eventually", u64_in(0, 100), |x| *x < 95);
+    }
+
+    #[test]
+    fn shrinker_reduces() {
+        let r = std::panic::catch_unwind(|| {
+            check_vec("has no 7", vec_of(u64_in(0, 10), 0, 64), |v| !v.contains(&7));
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        // The minimal counterexample is a single [7].
+        assert!(msg.contains("len 1"), "msg: {msg}");
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = XorShift64Star::new(5);
+        let g = usize_in(3, 9);
+        for _ in 0..1000 {
+            let v = g.sample(&mut rng);
+            assert!((3..=9).contains(&v));
+        }
+        let vg = bytes(2, 5);
+        for _ in 0..200 {
+            let v = vg.sample(&mut rng);
+            assert!((2..=5).contains(&v.len()));
+        }
+    }
+}

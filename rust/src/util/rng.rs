@@ -1,0 +1,124 @@
+//! xorshift64* PRNG + Box-Muller gaussians.
+//!
+//! Bit-identical to `python/compile/data.py::XorShift64Star` — the data
+//! generator contract between build-time python and the rust runtime
+//! depends on both sides drawing the same streams (see `data::gen`).
+
+#[derive(Debug, Clone)]
+pub struct XorShift64Star {
+    s: u64,
+}
+
+impl XorShift64Star {
+    pub fn new(seed: u64) -> Self {
+        Self { s: if seed == 0 { 0x2545F4914F6CDD1D } else { seed } }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut s = self.s;
+        s ^= s >> 12;
+        s ^= s << 25;
+        s ^= s >> 27;
+        self.s = s;
+        s.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in (0, 1]: top 53 bits / 2^53, never exactly 0.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Modulo bias is < 2^-40 for the n used here (≤ millions).
+        self.next_u64() % n
+    }
+
+    /// Box-Muller pair of standard normals.
+    pub fn next_gaussian_pair(&mut self) -> (f64, f64) {
+        let u1 = self.next_f64();
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        (r * th.cos(), r * th.sin())
+    }
+
+    /// Fill `n` f32 standard normals — same draw order as the python twin.
+    pub fn fill_gaussian(&mut self, n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; n];
+        let mut i = 0;
+        while i + 1 < n {
+            let (a, b) = self.next_gaussian_pair();
+            out[i] = a as f32;
+            out[i + 1] = b as f32;
+            i += 2;
+        }
+        if n % 2 == 1 {
+            out[n - 1] = self.next_gaussian_pair().0 as f32;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = XorShift64Star::new(42);
+        let mut b = XorShift64Star::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn zero_seed_is_remapped() {
+        let mut r = XorShift64Star::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = XorShift64Star::new(7);
+        for _ in 0..10_000 {
+            let u = r.next_f64();
+            assert!(u > 0.0 && u <= 1.0);
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = XorShift64Star::new(1234);
+        let xs = r.fill_gaussian(100_000);
+        let mean = xs.iter().map(|x| *x as f64).sum::<f64>() / xs.len() as f64;
+        let var =
+            xs.iter().map(|x| (*x as f64 - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean {}", mean);
+        assert!((var - 1.0).abs() < 0.03, "var {}", var);
+    }
+
+    /// Golden values locked against the python implementation
+    /// (`tests/test_data.py::test_rng_golden` holds the same constants).
+    #[test]
+    fn golden_cross_language() {
+        let mut r = XorShift64Star::new(1);
+        let got: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+        assert_eq!(
+            got,
+            vec![
+                0x47e4ce4b896cdd1d,
+                0xabcfa6a8e079651d,
+                0xb9d10d8feb731f57,
+                0x4db418a0bb1b019d,
+            ]
+        );
+        let mut r2 = XorShift64Star::new(1);
+        assert!((r2.next_f64() - 0.2808350500503596).abs() < 1e-15);
+        assert!((r2.next_f64() - 0.6711372530266765).abs() < 1e-15);
+    }
+}

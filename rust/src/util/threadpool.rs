@@ -1,0 +1,165 @@
+//! Fixed-size thread pool with a simple MPMC job queue (no tokio offline).
+//!
+//! Serves the cloud server's request concurrency and the calibration
+//! sweeps. Jobs are `FnOnce() + Send`; `scope`-style joining is provided
+//! by [`ThreadPool::run_all`] which blocks until every submitted closure
+//! in the batch finished.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<(std::collections::VecDeque<Job>, bool)>,
+    cv: Condvar,
+}
+
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new((std::collections::VecDeque::new(), false)),
+            cv: Condvar::new(),
+        });
+        let in_flight = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..threads.max(1))
+            .map(|_| {
+                let q = Arc::clone(&queue);
+                let fl = Arc::clone(&in_flight);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let mut g = q.jobs.lock().unwrap();
+                        loop {
+                            if let Some(j) = g.0.pop_front() {
+                                break j;
+                            }
+                            if g.1 {
+                                return; // shut down
+                            }
+                            g = q.cv.wait(g).unwrap();
+                        }
+                    };
+                    job();
+                    let (lock, cv) = &*fl;
+                    let mut n = lock.lock().unwrap();
+                    *n -= 1;
+                    if *n == 0 {
+                        cv.notify_all();
+                    }
+                })
+            })
+            .collect();
+        Self { queue, workers, in_flight }
+    }
+
+    /// Pool sized to the machine (cores, capped to 16).
+    pub fn default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.min(16))
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (lock, _) = &*self.in_flight;
+        *lock.lock().unwrap() += 1;
+        let mut g = self.queue.jobs.lock().unwrap();
+        g.0.push_back(Box::new(f));
+        self.queue.cv.notify_one();
+    }
+
+    /// Block until every previously submitted job completed.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.in_flight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+
+    /// Run a batch of closures to completion (convenience wrapper).
+    pub fn run_all<F: FnOnce() + Send + 'static>(&self, jobs: Vec<F>) {
+        for j in jobs {
+            self.submit(j);
+        }
+        self.wait_idle();
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn par_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + Default + Clone + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let results = Arc::new(Mutex::new(vec![R::default(); n]));
+        let f = Arc::new(f);
+        let done = Arc::new(AtomicUsize::new(0));
+        for (i, item) in items.into_iter().enumerate() {
+            let results = Arc::clone(&results);
+            let f = Arc::clone(&f);
+            let done = Arc::clone(&done);
+            self.submit(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = r;
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        self.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), n);
+        Arc::try_unwrap(results).ok().unwrap().into_inner().unwrap()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.queue.jobs.lock().unwrap();
+            g.1 = true;
+        }
+        self.queue.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.par_map((0..50).collect::<Vec<_>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        drop(pool); // must not hang or panic
+    }
+}

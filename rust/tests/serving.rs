@@ -1,0 +1,142 @@
+//! Serving-path integration: real TCP cloud server + edge client +
+//! throttled uplink + router concurrency, in one process.
+//!
+//! Skips silently without `make artifacts`.
+
+use std::sync::Arc;
+
+use jalad::coordinator::{
+    AdaptationController, DecisionEngine, Router, RouterConfig, Scale,
+};
+use jalad::network::throttle::RateHandle;
+use jalad::predictor::Tables;
+use jalad::profiler::LatencyTables;
+use jalad::runtime::{Executor, Manifest, SharedExecutor};
+use jalad::server::proto::Frame;
+use jalad::server::{CloudServer, EdgeClient};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn make_controller(exe: &Executor, dir: &std::path::Path, bw: f64) -> AdaptationController {
+    let tables = Tables::load_or_build(exe, "tinyconv", dir).unwrap();
+    let latency = LatencyTables::measured(exe, "tinyconv", 2, 4.0).unwrap();
+    let engine =
+        DecisionEngine::new("tinyconv", tables, latency, Scale::Measured, 0.10).unwrap();
+    AdaptationController::new(engine, bw)
+}
+
+/// Many concurrent connections against one cloud server: the
+/// SharedExecutor serialization must be correct under contention.
+#[test]
+fn concurrent_clients_get_correct_answers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cloud = Arc::new(SharedExecutor::new(Manifest::load(&dir).unwrap()).unwrap());
+    let server = Arc::new(CloudServer::new(cloud));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let dir = dir.clone();
+            std::thread::spawn(move || {
+                let exe = Executor::new(Manifest::load(&dir).unwrap()).unwrap();
+                let ctrl = make_controller(&exe, &dir, 1e6);
+                let rate = RateHandle::new(50_000_000);
+                let mut edge =
+                    EdgeClient::connect(&exe, "tinyconv", addr, rate, ctrl).unwrap();
+                let mut correct = 0;
+                for k in 0..6 {
+                    let s = jalad::data::gen::sample_image(40_000 + t * 100 + k, 32);
+                    let r = edge.infer(&s).unwrap();
+                    correct += r.correct as usize;
+                }
+                correct
+            })
+        })
+        .collect();
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    // tinyconv is ~99% accurate; 24 requests should be nearly all right.
+    assert!(total >= 20, "only {total}/24 correct under concurrency");
+    CloudServer::request_shutdown(addr);
+}
+
+/// The throttle actually limits throughput: serving over a slow uplink
+/// takes proportionally longer than over a fast one.
+#[test]
+fn throttled_uplink_slows_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cloud = Arc::new(SharedExecutor::new(Manifest::load(&dir).unwrap()).unwrap());
+    let server = Arc::new(CloudServer::new(cloud));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+    let exe = Executor::new(Manifest::load(&dir).unwrap()).unwrap();
+
+    // Ship a payload well above the 2 KiB burst so pacing dominates:
+    // a 48 KiB probe at 60 KB/s must take ≈ 0.8 s; at 20 MB/s ≈ instant.
+    let mut time_at = |bps: u64| {
+        let ctrl = make_controller(&exe, &dir, bps as f64);
+        let rate = RateHandle::new(bps);
+        let mut edge = EdgeClient::connect(&exe, "tinyconv", addr, rate, ctrl).unwrap();
+        let t0 = std::time::Instant::now();
+        edge.probe_bandwidth(48 * 1024).unwrap();
+        t0.elapsed().as_secs_f64()
+    };
+    let fast = time_at(20_000_000);
+    let slow = time_at(60_000);
+    assert!(
+        slow > fast * 5.0 && slow > 0.4,
+        "throttle ineffective: slow {slow:.3}s vs fast {fast:.3}s"
+    );
+    CloudServer::request_shutdown(addr);
+}
+
+/// Malformed frames must produce an Error reply, not kill the server.
+#[test]
+fn cloud_survives_garbage_frames() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cloud = Arc::new(SharedExecutor::new(Manifest::load(&dir).unwrap()).unwrap());
+    let server = Arc::new(CloudServer::new(cloud));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+
+    // Garbage features payload.
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    Frame::Features(vec![0xde, 0xad, 0xbe, 0xef]).write_to(&mut s).unwrap();
+    let reply = Frame::read_from(&mut s).unwrap();
+    assert!(matches!(reply, Frame::Error(_)), "{reply:?}");
+
+    // Bad model id in an image frame.
+    Frame::Image { model_id: 999, hw: 32, png: vec![1, 2, 3] }.write_to(&mut s).unwrap();
+    let reply = Frame::read_from(&mut s).unwrap();
+    assert!(matches!(reply, Frame::Error(_)));
+
+    // The server still answers a valid stats request afterwards.
+    Frame::Stats.write_to(&mut s).unwrap();
+    let reply = Frame::read_from(&mut s).unwrap();
+    assert!(matches!(reply, Frame::StatsReply(_)));
+    CloudServer::request_shutdown(addr);
+}
+
+/// Router + live pipeline: requests fan out over worker threads, all
+/// complete, and backpressure kicks in under a tiny queue.
+#[test]
+fn router_drives_pipeline_workers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let exe = Arc::new(SharedExecutor::new(Manifest::load(&dir).unwrap()).unwrap());
+    let results = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let r2 = Arc::clone(&results);
+    let e2 = Arc::clone(&exe);
+    let router = Router::new(RouterConfig { queue_capacity: 64, workers: 3 }, move |id: usize| {
+        let s = jalad::data::gen::sample_image(id, 32);
+        let pred = e2.run_full("tinyconv", &s.image).unwrap().tensor.argmax();
+        r2.lock().unwrap().push((id, pred == s.label));
+    });
+    for id in 42_000..42_020 {
+        router.submit(id).unwrap();
+    }
+    router.shutdown();
+    let results = results.lock().unwrap();
+    assert_eq!(results.len(), 20);
+    let correct = results.iter().filter(|(_, ok)| *ok).count();
+    assert!(correct >= 18, "{correct}/20");
+}
