@@ -74,7 +74,7 @@ fn main() -> Result<()> {
     }
 
     println!("== 5. live requests over a simulated 100 KB/s uplink ==");
-    let pipe = LocalPipeline::new(&exe, model);
+    let mut pipe = LocalPipeline::new(&exe, model);
     let mut channel = SimChannel::constant(100_000.0);
     let plan = engine.decide(100_000.0);
     let mut correct = 0;

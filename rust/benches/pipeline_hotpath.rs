@@ -1,26 +1,262 @@
 //! E11 support — the live request hot path, end to end and by component:
 //! stage execution (PJRT), Pallas quantize artifact vs rust twin,
-//! wire encode/decode, and the full in-process pipeline on TinyConv.
-//! This is the primary target of the §Perf optimization pass.
+//! wire encode/decode (pooled vs allocating A/B), proto framing, the
+//! full in-process pipeline on TinyConv, and concurrent cloud-server
+//! throughput at 1/4/8 connections. This is the primary target of the
+//! §Perf optimization pass.
+//!
+//! A counting global allocator asserts the acceptance property: the
+//! steady-state codec + proto hops (quantize_into → encode_parts_into →
+//! write_frame_raw → read_frame_into → decode_into) perform **zero**
+//! heap allocations once their scratch is warm.
+//!
+//! Results are emitted as `BENCH_pipeline.json`. The PJRT sections skip
+//! when `make artifacts` has not run; the codec/proto sections always
+//! run.
 //!
 //! Run: `cargo bench --bench pipeline_hotpath`
 
-use jalad::compression::{feature, quant};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use jalad::compression::feature::{self, CodecScratch};
+use jalad::compression::quant;
 use jalad::coordinator::LocalPipeline;
 use jalad::ilp::Decision;
 use jalad::network::SimChannel;
-use jalad::runtime::{Executor, Manifest};
+use jalad::runtime::{Executor, Manifest, SharedExecutor};
+use jalad::server::proto::{self, Frame, RecvFrame};
+use jalad::server::CloudServer;
 use jalad::util::bench::Bencher;
+use jalad::util::json::Json;
 
-fn main() {
-    let dir = "artifacts";
-    let Ok(manifest) = Manifest::load(dir) else {
-        eprintln!("pipeline_hotpath: run `make artifacts` first — skipping");
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+fn sample_features(n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| if i % 3 == 0 { 0.0 } else { ((i * 2654435761) % 1000) as f32 / 100.0 })
+        .collect()
+}
+
+/// Pooled-vs-allocating A/B over the pure-rust codec + proto hops
+/// (no artifacts needed).
+fn codec_proto_ab(b: &mut Bencher) {
+    let xs = sample_features(16 * 1024);
+    let q = quant::quantize(&xs, 4);
+
+    // quantize hop
+    b.bench_bytes("quant/quantize_alloc", xs.len() * 4, || {
+        std::hint::black_box(quant::quantize(&xs, 4));
+    });
+    let mut qvals = Vec::new();
+    b.bench_bytes("quant/quantize_pooled", xs.len() * 4, || {
+        std::hint::black_box(quant::quantize_into(&xs, 4, &mut qvals));
+    });
+    let mut floats = Vec::new();
+    b.bench_bytes("quant/dequantize_alloc", xs.len() * 4, || {
+        std::hint::black_box(quant::dequantize(&q));
+    });
+    b.bench_bytes("quant/dequantize_pooled", xs.len() * 4, || {
+        quant::dequantize_into(&q.values, q.lo, q.hi, q.c, &mut floats);
+        std::hint::black_box(floats.len());
+    });
+
+    // entropy-coding hop
+    b.bench_bytes("codec/encode_alloc", xs.len() * 4, || {
+        std::hint::black_box(feature::encode(&q, 2, 0));
+    });
+    let mut ws = CodecScratch::new();
+    let mut wire = Vec::new();
+    b.bench_bytes("codec/encode_pooled", xs.len() * 4, || {
+        feature::encode_into(&q, 2, 0, &mut ws, &mut wire);
+        std::hint::black_box(wire.len());
+    });
+    feature::encode_into(&q, 2, 0, &mut ws, &mut wire);
+    b.bench_bytes("codec/decode_alloc", wire.len(), || {
+        std::hint::black_box(feature::decode(&wire).unwrap());
+    });
+    let mut dec_ws = CodecScratch::new();
+    let mut values = Vec::new();
+    b.bench_bytes("codec/decode_pooled", wire.len(), || {
+        std::hint::black_box(feature::decode_into(&wire, &mut dec_ws, &mut values).unwrap());
+    });
+
+    // proto framing hop
+    let mut sink: Vec<u8> = Vec::new();
+    b.bench_bytes("proto/write_typed_clone", wire.len(), || {
+        sink.clear();
+        // The seed behavior: payload owned by the frame (a clone per
+        // request) — what the raw path eliminates.
+        std::hint::black_box(Frame::Features(wire.clone()).write_to(&mut sink).unwrap());
+    });
+    b.bench_bytes("proto/write_raw_pooled", wire.len(), || {
+        sink.clear();
+        std::hint::black_box(
+            proto::write_frame_raw(&mut sink, proto::KIND_FEATURES, &wire).unwrap(),
+        );
+    });
+    proto::write_frame_raw(&mut sink, proto::KIND_FEATURES, &wire).unwrap();
+    b.bench_bytes("proto/read_typed_alloc", sink.len(), || {
+        let mut r: &[u8] = &sink;
+        std::hint::black_box(Frame::read_from(&mut r).unwrap());
+    });
+    let mut rx = Vec::new();
+    b.bench_bytes("proto/read_into_pooled", sink.len(), || {
+        let mut r: &[u8] = &sink;
+        std::hint::black_box(proto::read_frame_into(&mut r, &mut rx).unwrap());
+    });
+}
+
+/// The acceptance assertion: one full edge→cloud codec + proto round
+/// (quantize → encode → frame → unframe → decode) allocates nothing in
+/// steady state. Returns (iterations, allocations observed).
+fn zero_alloc_steady_state() -> (u64, u64) {
+    let xs = sample_features(8 * 1024);
+    let mut enc_ws = CodecScratch::new();
+    let mut dec_ws = CodecScratch::new();
+    let mut qvals = Vec::new();
+    let mut wire = Vec::new();
+    let mut framed: Vec<u8> = Vec::new();
+    let mut rx = Vec::new();
+    let mut values = Vec::new();
+
+    let mut round = |enc_ws: &mut CodecScratch,
+                     dec_ws: &mut CodecScratch,
+                     qvals: &mut Vec<u16>,
+                     wire: &mut Vec<u8>,
+                     framed: &mut Vec<u8>,
+                     rx: &mut Vec<u8>,
+                     values: &mut Vec<u16>| {
+        let (lo, hi) = quant::quantize_into(&xs, 4, qvals);
+        feature::encode_parts_into(qvals, 4, lo, hi, 2, 0, enc_ws, wire);
+        framed.clear();
+        proto::write_frame_raw(framed, proto::KIND_FEATURES, wire).unwrap();
+        let mut r: &[u8] = framed;
+        match proto::read_frame_into(&mut r, rx).unwrap() {
+            RecvFrame::Data(k) => assert_eq!(k, proto::KIND_FEATURES),
+            other => panic!("unexpected {other:?}"),
+        }
+        let h = feature::decode_into(rx, dec_ws, values).unwrap();
+        assert_eq!(values.len(), xs.len());
+        std::hint::black_box(h);
+    };
+
+    // Warm up: size every buffer and table.
+    for _ in 0..3 {
+        round(&mut enc_ws, &mut dec_ws, &mut qvals, &mut wire, &mut framed, &mut rx, &mut values);
+    }
+    let iters = 256u64;
+    let before = allocations();
+    for _ in 0..iters {
+        round(&mut enc_ws, &mut dec_ws, &mut qvals, &mut wire, &mut framed, &mut rx, &mut values);
+    }
+    let allocs = allocations() - before;
+    println!(
+        "zero_alloc_steady_state: {} allocations over {} warm codec+proto rounds",
+        allocs, iters
+    );
+    assert_eq!(allocs, 0, "steady-state codec+proto hops must not allocate");
+    (iters, allocs)
+}
+
+/// Concurrent-server throughput: req/s over 1/4/8 raw TCP connections
+/// firing pre-encoded feature frames (artifacts required).
+fn server_throughput(results: &mut Vec<Json>) {
+    let Ok(manifest) = Manifest::load("artifacts") else { return };
+    let cloud = Arc::new(SharedExecutor::new(manifest).expect("PJRT client"));
+    let server = Arc::new(CloudServer::new(cloud));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").expect("bind");
+
+    let exe = Executor::new(Manifest::load("artifacts").unwrap()).expect("PJRT client");
+    let s = jalad::data::gen::sample_image(1, 32);
+    let a1 = exe.run_stage("tinyconv", 1, &s.image).unwrap().tensor;
+    let a2 = exe.run_stage("tinyconv", 2, &a1).unwrap().tensor;
+    let q = quant::quantize(a2.data(), 4);
+    let model_id = exe.manifest().model_id("tinyconv").unwrap_or(0);
+    let wire = feature::encode(&q, 2, model_id);
+
+    for conns in [1usize, 4, 8] {
+        let per = 24usize;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..conns)
+            .map(|_| {
+                let wire = wire.clone();
+                std::thread::spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    stream.set_nodelay(true).unwrap();
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    let mut rx = Vec::new();
+                    for _ in 0..per {
+                        proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &wire)
+                            .unwrap();
+                        match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+                            RecvFrame::Data(k) => assert_eq!(k, proto::KIND_LOGITS),
+                            other => panic!("unexpected reply {other:?}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let rps = (conns * per) as f64 / secs;
+        println!("server_throughput/{conns}conn: {rps:.1} req/s ({per} req × {conns} conn)");
+        results.push(Json::obj(vec![
+            ("connections", Json::num(conns as f64)),
+            ("requests", Json::num((conns * per) as f64)),
+            ("req_per_sec", Json::num(rps)),
+        ]));
+    }
+    let ps = server.pool_stats();
+    println!(
+        "server scratch pool: {} hits / {} misses (hit rate {:.2})",
+        ps.hits,
+        ps.misses,
+        ps.hit_rate()
+    );
+    results.push(Json::obj(vec![
+        ("pool_hits", Json::num(ps.hits as f64)),
+        ("pool_misses", Json::num(ps.misses as f64)),
+    ]));
+    CloudServer::request_shutdown(addr);
+}
+
+/// The original PJRT-backed component benches (artifacts required).
+fn pjrt_benches(b: &mut Bencher) {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("pipeline_hotpath: no artifacts — skipping PJRT sections");
         return;
     };
     let exe = Executor::new(manifest).expect("PJRT client");
-    let mut b = Bencher::from_env();
-
     let model = "tinyconv";
     let s = jalad::data::gen::sample_image(1, 32);
 
@@ -54,17 +290,8 @@ fn main() {
         std::hint::black_box(exe.run_dequant(&q, mid.shape()).unwrap());
     });
 
-    // Wire frame.
-    b.bench_bytes("wire/encode", mid.byte_size(), || {
-        std::hint::black_box(feature::encode(&q, 2, 0));
-    });
-    let wire = feature::encode(&q, 2, 0);
-    b.bench_bytes("wire/decode", wire.len(), || {
-        std::hint::black_box(feature::decode(&wire).unwrap());
-    });
-
     // Whole request through the in-process pipeline (1 MB/s channel).
-    let pipe = LocalPipeline::new(&exe, model);
+    let mut pipe = LocalPipeline::new(&exe, model);
     let mut ch = SimChannel::constant(1_000_000.0);
     b.bench("pipeline/e2e_cut2_c4", || {
         std::hint::black_box(pipe.run(&s, Decision::Cut { i: 2, c: 4 }, &mut ch).unwrap());
@@ -81,6 +308,49 @@ fn main() {
             );
         });
     }
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+
+    codec_proto_ab(&mut b);
+    let (za_iters, za_allocs) = zero_alloc_steady_state();
+    pjrt_benches(&mut b);
+    let mut server_results = Vec::new();
+    server_throughput(&mut server_results);
+
+    // Emit BENCH_pipeline.json.
+    let bench_rows: Vec<Json> = b
+        .results()
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(&r.name)),
+                ("mean_ns", Json::num(r.mean_ns)),
+                ("p50_ns", Json::num(r.p50_ns)),
+                ("p95_ns", Json::num(r.p95_ns)),
+                ("iters", Json::num(r.iters as f64)),
+                (
+                    "throughput_per_sec",
+                    r.throughput.map(|(v, _)| Json::num(v)).unwrap_or(Json::num(0.0)),
+                ),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("pipeline_hotpath")),
+        ("results", Json::arr(bench_rows)),
+        (
+            "zero_alloc_steady_state",
+            Json::obj(vec![
+                ("iterations", Json::num(za_iters as f64)),
+                ("allocations", Json::num(za_allocs as f64)),
+            ]),
+        ),
+        ("server_throughput", Json::arr(server_results)),
+    ]);
+    std::fs::write("BENCH_pipeline.json", doc.to_pretty()).expect("write BENCH_pipeline.json");
+    println!("wrote BENCH_pipeline.json");
 
     b.finish();
 }

@@ -3,17 +3,24 @@
 //! Shared by the Huffman coder, the c-bit packer in the feature codec and
 //! the deflate-like container. LSB-first (like DEFLATE): the first bit
 //! written lands in bit 0 of byte 0.
+//!
+//! The writer appends to a *borrowed* `Vec<u8>` so callers on the request
+//! hot path can reuse one buffer across requests (see `util::pool`); the
+//! bytes already in the buffer are preserved, which lets codecs lay down
+//! a fixed header first and stream the payload straight after it.
 
-#[derive(Debug, Default)]
-pub struct BitWriter {
-    buf: Vec<u8>,
+#[derive(Debug)]
+pub struct BitWriter<'a> {
+    buf: &'a mut Vec<u8>,
     acc: u64,
     nbits: u32,
 }
 
-impl BitWriter {
-    pub fn new() -> Self {
-        Self::default()
+impl<'a> BitWriter<'a> {
+    /// Start a bit stream that appends to `buf` (existing contents are
+    /// kept untouched ahead of the stream).
+    pub fn over(buf: &'a mut Vec<u8>) -> Self {
+        Self { buf, acc: 0, nbits: 0 }
     }
 
     /// Write the low `n` bits of `value` (n ≤ 57).
@@ -30,17 +37,18 @@ impl BitWriter {
         }
     }
 
-    /// Number of complete bytes plus any partial byte once finished.
+    /// Bits in the backing buffer plus any pending partial byte.
     pub fn bit_len(&self) -> usize {
         self.buf.len() * 8 + self.nbits as usize
     }
 
-    /// Flush the partial byte (zero-padded) and return the buffer.
-    pub fn finish(mut self) -> Vec<u8> {
+    /// Flush the partial byte (zero-padded). The stream's bytes are in
+    /// the backing buffer; returns its total length in bytes.
+    pub fn finish(self) -> usize {
         if self.nbits > 0 {
             self.buf.push((self.acc & 0xff) as u8);
         }
-        self.buf
+        self.buf.len()
     }
 }
 
@@ -128,12 +136,13 @@ mod tests {
 
     #[test]
     fn roundtrip_simple() {
-        let mut w = BitWriter::new();
+        let mut bytes = Vec::new();
+        let mut w = BitWriter::over(&mut bytes);
         w.write(0b101, 3);
         w.write(0xff, 8);
         w.write(0, 1);
         w.write(0x1234, 16);
-        let bytes = w.finish();
+        w.finish();
         let mut r = BitReader::new(&bytes);
         assert_eq!(r.read(3).unwrap(), 0b101);
         assert_eq!(r.read(8).unwrap(), 0xff);
@@ -143,11 +152,38 @@ mod tests {
 
     #[test]
     fn lsb_first_layout() {
-        let mut w = BitWriter::new();
+        let mut bytes = Vec::new();
+        let mut w = BitWriter::over(&mut bytes);
         w.write(1, 1); // bit 0 of byte 0
         w.write(0, 6);
         w.write(1, 1); // bit 7 of byte 0
-        assert_eq!(w.finish(), vec![0b1000_0001]);
+        w.finish();
+        assert_eq!(bytes, vec![0b1000_0001]);
+    }
+
+    #[test]
+    fn preserves_existing_prefix() {
+        let mut bytes = vec![0xAA, 0xBB];
+        let mut w = BitWriter::over(&mut bytes);
+        w.write(0xCC, 8);
+        let total = w.finish();
+        assert_eq!(total, 3);
+        assert_eq!(bytes, vec![0xAA, 0xBB, 0xCC]);
+    }
+
+    #[test]
+    fn reused_buffer_keeps_capacity() {
+        let mut bytes = Vec::new();
+        for _ in 0..3 {
+            bytes.clear();
+            let mut w = BitWriter::over(&mut bytes);
+            w.write(0x1F, 5);
+            w.write(0x3FF, 10);
+            w.finish();
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(r.read(5).unwrap(), 0x1F);
+            assert_eq!(r.read(10).unwrap(), 0x3FF);
+        }
     }
 
     #[test]
@@ -160,9 +196,10 @@ mod tests {
 
     #[test]
     fn peek_consume() {
-        let mut w = BitWriter::new();
+        let mut b = Vec::new();
+        let mut w = BitWriter::over(&mut b);
         w.write(0b1101, 4);
-        let b = w.finish();
+        w.finish();
         let mut r = BitReader::new(&b);
         assert_eq!(r.peek(4) & 0xf, 0b1101);
         r.consume(2).unwrap();
@@ -179,11 +216,12 @@ mod tests {
                 200,
             ),
             |items| {
-                let mut w = BitWriter::new();
+                let mut bytes = Vec::new();
+                let mut w = BitWriter::over(&mut bytes);
                 for (v, n) in items {
                     w.write(v & ((1u64 << n) - 1), *n as u32);
                 }
-                let bytes = w.finish();
+                w.finish();
                 let mut r = BitReader::new(&bytes);
                 items.iter().all(|(v, n)| r.read(*n as u32).unwrap() == v & ((1u64 << n) - 1))
             },

@@ -88,7 +88,8 @@ pub fn compress(data: &[u8]) -> Vec<u8> {
     let lit_enc = Encoder::from_freqs(&lit_freq);
     let dist_enc = Encoder::from_freqs(&dist_freq);
 
-    let mut w = BitWriter::new();
+    let mut out = Vec::new();
+    let mut w = BitWriter::over(&mut out);
     w.write(data.len() as u64, 32);
     for &l in lit_enc.lengths() {
         w.write(l as u64, 4);
@@ -110,7 +111,8 @@ pub fn compress(data: &[u8]) -> Vec<u8> {
         }
     }
     lit_enc.encode(&mut w, SYM_END);
-    w.finish()
+    w.finish();
+    out
 }
 
 pub fn decompress(bytes: &[u8]) -> Result<Vec<u8>, HuffError> {

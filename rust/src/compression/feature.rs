@@ -16,6 +16,12 @@
 //! model  u16  model id
 //! len    u32  payload byte length
 //! ```
+//!
+//! The streaming entry points ([`encode_into`] / [`decode_into`]) write
+//! the header in place and backfill the payload length, so one reusable
+//! output buffer plus a [`CodecScratch`] make the codec hop
+//! allocation-free in steady state. The legacy allocating [`encode`] /
+//! [`decode`] are thin wrappers producing byte-identical frames.
 
 use super::bitio::{BitReader, BitWriter};
 use super::huffman;
@@ -41,6 +47,19 @@ pub struct Frame {
     pub values: Vec<u16>,
 }
 
+/// Frame metadata decoded by [`decode_into`] (the values land in the
+/// caller's reusable buffer instead of an owned `Vec`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Header {
+    pub mode: Mode,
+    pub c: u8,
+    pub n: usize,
+    pub lo: f32,
+    pub hi: f32,
+    pub stage: u16,
+    pub model: u16,
+}
+
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CodecError {
     BadMagic,
@@ -56,61 +75,151 @@ impl std::fmt::Display for CodecError {
 }
 impl std::error::Error for CodecError {}
 
+/// Reusable codec workspace: the symbol histogram plus rebuildable
+/// Huffman encoder/decoder state. One per session or connection — with
+/// it, [`encode_into`]/[`decode_into`] never touch the heap once warm.
+#[derive(Debug)]
+pub struct CodecScratch {
+    freqs: Vec<u64>,
+    encoder: huffman::Encoder,
+    enc_ws: huffman::EncoderScratch,
+    dec: huffman::DecodeScratch,
+}
+
+impl Default for CodecScratch {
+    fn default() -> Self {
+        Self {
+            freqs: Vec::new(),
+            encoder: huffman::Encoder::new_empty(),
+            enc_ws: huffman::EncoderScratch::default(),
+            dec: huffman::DecodeScratch::default(),
+        }
+    }
+}
+
+impl CodecScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Pack quantized values with plain c-bit fields (no entropy coding).
 pub fn bitpack(values: &[u16], c: u8) -> Vec<u8> {
-    let mut w = BitWriter::new();
+    let mut out = Vec::new();
+    bitpack_into(values, c, &mut out);
+    out
+}
+
+/// [`bitpack`] appending to a caller-owned buffer.
+pub fn bitpack_into(values: &[u16], c: u8, out: &mut Vec<u8>) {
+    let mut w = BitWriter::over(out);
     for &v in values {
         w.write(v as u64, c as u32);
     }
-    w.finish()
+    w.finish();
 }
 
 pub fn bitunpack(bytes: &[u8], c: u8, n: usize) -> Result<Vec<u16>, CodecError> {
-    let mut r = BitReader::new(bytes);
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        out.push(r.read(c as u32).map_err(|_| CodecError::Truncated)? as u16);
-    }
+    let mut out = Vec::new();
+    bitunpack_into(bytes, c, n, &mut out)?;
     Ok(out)
 }
 
+/// [`bitunpack`] into a caller-owned buffer (cleared, capacity reused).
+pub fn bitunpack_into(bytes: &[u8], c: u8, n: usize, out: &mut Vec<u16>) -> Result<(), CodecError> {
+    // Reject element counts the payload cannot hold before reserving
+    // memory for them (untrusted header hardening).
+    if (n as u64) * (c as u64) > bytes.len() as u64 * 8 {
+        return Err(CodecError::Truncated);
+    }
+    let mut r = BitReader::new(bytes);
+    out.clear();
+    out.reserve(n);
+    for _ in 0..n {
+        out.push(r.read(c as u32).map_err(|_| CodecError::Truncated)? as u16);
+    }
+    Ok(())
+}
+
 /// Encode a quantized feature map into a self-describing wire frame.
+pub fn encode(q: &Quantized, stage: u16, model: u16) -> Vec<u8> {
+    let mut ws = CodecScratch::new();
+    let mut out = Vec::new();
+    encode_into(q, stage, model, &mut ws, &mut out);
+    out
+}
+
+/// [`encode`] into a caller-owned buffer with reusable codec scratch.
+pub fn encode_into(q: &Quantized, stage: u16, model: u16, ws: &mut CodecScratch, out: &mut Vec<u8>) {
+    encode_parts_into(&q.values, q.c, q.lo, q.hi, stage, model, ws, out)
+}
+
+/// Core streaming encoder over borrowed parts (lets the caller keep the
+/// quantized values in a pooled buffer rather than a `Quantized`).
 ///
 /// Mode selection uses the exact size predictor (one histogram pass) so
 /// only the winning representation is materialized — building both and
 /// discarding one cost ~2× on the edge's encode path (§Perf log). Dense
-/// high-entropy maps at large c fall back to plain bit-packing.
-pub fn encode(q: &Quantized, stage: u16, model: u16) -> Vec<u8> {
-    let alphabet = (1usize << q.c).max(2);
-    let mut freqs = vec![0u64; alphabet];
-    for &v in &q.values {
-        freqs[v as usize] += 1;
-    }
-    let enc = huffman::Encoder::from_freqs(&freqs);
-    let payload_bits: u64 =
-        freqs.iter().enumerate().map(|(s, &f)| f * enc.cost_bits(s) as u64).sum();
-    let header_bits = 16 + alphabet as u64 * 4 + 32;
-    let huff_bytes = ((payload_bits + header_bits) as usize).div_ceil(8);
-    let packed_bytes = (q.values.len() * q.c as usize).div_ceil(8);
-
-    let (mode, payload) = if huff_bytes <= packed_bytes {
-        (Mode::Huffman, huffman::encode_block_with(&enc, &q.values, alphabet))
+/// high-entropy maps at large c fall back to plain bit-packing. The
+/// header is written first and the payload streams straight after it;
+/// the payload length is backfilled, so no intermediate payload buffer
+/// exists (the seed path allocated and copied one per request).
+#[allow(clippy::too_many_arguments)]
+pub fn encode_parts_into(
+    values: &[u16],
+    c: u8,
+    lo: f32,
+    hi: f32,
+    stage: u16,
+    model: u16,
+    ws: &mut CodecScratch,
+    out: &mut Vec<u8>,
+) {
+    let alphabet = (1usize << c).max(2);
+    let packed_bytes = (values.len() * c as usize).div_ceil(8);
+    // The Huffman block header stores the alphabet in 16 bits, so a
+    // c=16 alphabet (65536) cannot be represented — the seed silently
+    // truncated it to 0 and produced an undecodable frame. Force the
+    // bit-packed representation there (and skip the pointless histogram
+    // + tree build entirely).
+    let (mode, predicted_payload) = if alphabet > u16::MAX as usize {
+        (Mode::BitPack, packed_bytes)
     } else {
-        (Mode::BitPack, bitpack(&q.values, q.c))
+        let CodecScratch { freqs, encoder, enc_ws, .. } = &mut *ws;
+        freqs.clear();
+        freqs.resize(alphabet, 0);
+        for &v in values {
+            freqs[v as usize] += 1;
+        }
+        encoder.rebuild_from_freqs(freqs, enc_ws);
+        let payload_bits: u64 =
+            freqs.iter().enumerate().map(|(s, &f)| f * encoder.cost_bits(s) as u64).sum();
+        let header_bits = 16 + alphabet as u64 * 4 + 32;
+        let huff_bytes = ((payload_bits + header_bits) as usize).div_ceil(8);
+        if huff_bytes <= packed_bytes {
+            (Mode::Huffman, huff_bytes)
+        } else {
+            (Mode::BitPack, packed_bytes)
+        }
     };
 
-    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.clear();
+    out.reserve(HEADER_BYTES + predicted_payload);
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.push(mode as u8);
-    out.push(q.c);
-    out.extend_from_slice(&(q.values.len() as u32).to_le_bytes());
-    out.extend_from_slice(&q.lo.to_le_bytes());
-    out.extend_from_slice(&q.hi.to_le_bytes());
+    out.push(c);
+    out.extend_from_slice(&(values.len() as u32).to_le_bytes());
+    out.extend_from_slice(&lo.to_le_bytes());
+    out.extend_from_slice(&hi.to_le_bytes());
     out.extend_from_slice(&stage.to_le_bytes());
     out.extend_from_slice(&model.to_le_bytes());
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(&payload);
-    out
+    out.extend_from_slice(&[0u8; 4]); // payload length, backfilled below
+    match mode {
+        Mode::Huffman => huffman::encode_block_with_into(&ws.encoder, values, alphabet, out),
+        Mode::BitPack => bitpack_into(values, c, out),
+    }
+    let plen = (out.len() - HEADER_BYTES) as u32;
+    out[HEADER_BYTES - 4..HEADER_BYTES].copy_from_slice(&plen.to_le_bytes());
 }
 
 /// Size in bytes [`encode`] would produce, without producing it.
@@ -127,12 +236,36 @@ pub fn encoded_size(q: &Quantized) -> usize {
     let header_bits = 16 + alphabet as u64 * 4 + 32;
     let huff_bytes = ((payload_bits + header_bits) as usize).div_ceil(8);
     let packed_bytes = (q.values.len() * q.c as usize).div_ceil(8);
+    if alphabet > u16::MAX as usize {
+        return HEADER_BYTES + packed_bytes; // c=16: Huffman unrepresentable
+    }
     HEADER_BYTES + huff_bytes.min(packed_bytes)
 }
 
 /// Decode a wire frame. The caller dequantizes via `quant::dequantize`
 /// or the PJRT dequant artifact.
 pub fn decode(bytes: &[u8]) -> Result<Frame, CodecError> {
+    let mut ws = CodecScratch::new();
+    let mut values = Vec::new();
+    let h = decode_into(bytes, &mut ws, &mut values)?;
+    Ok(Frame {
+        mode: h.mode,
+        c: h.c,
+        lo: h.lo,
+        hi: h.hi,
+        stage: h.stage,
+        model: h.model,
+        values,
+    })
+}
+
+/// [`decode`] into a caller-owned values buffer with reusable scratch;
+/// returns the frame metadata.
+pub fn decode_into(
+    bytes: &[u8],
+    ws: &mut CodecScratch,
+    values: &mut Vec<u16>,
+) -> Result<Header, CodecError> {
     if bytes.len() < HEADER_BYTES {
         return Err(CodecError::Truncated);
     }
@@ -157,21 +290,21 @@ pub fn decode(bytes: &[u8]) -> Result<Frame, CodecError> {
     let plen = u32::from_le_bytes(bytes[20..24].try_into().unwrap()) as usize;
     let payload = bytes.get(HEADER_BYTES..HEADER_BYTES + plen).ok_or(CodecError::Truncated)?;
 
-    let values = match mode {
+    match mode {
         Mode::Huffman => {
-            let v = huffman::decode_block(payload).map_err(|_| CodecError::Corrupt("huffman"))?;
-            if v.len() != n {
+            huffman::decode_block_into(payload, &mut ws.dec, values)
+                .map_err(|_| CodecError::Corrupt("huffman"))?;
+            if values.len() != n {
                 return Err(CodecError::Corrupt("length mismatch"));
             }
-            v
         }
-        Mode::BitPack => bitunpack(payload, c, n)?,
-    };
+        Mode::BitPack => bitunpack_into(payload, c, n, values)?,
+    }
     let maxv = super::quant::qmax(c) as u16;
     if values.iter().any(|&v| v > maxv) {
         return Err(CodecError::Corrupt("value exceeds 2^c-1"));
     }
-    Ok(Frame { mode, c, lo, hi, stage, model, values })
+    Ok(Header { mode, c, n, lo, hi, stage, model })
 }
 
 #[cfg(test)]
@@ -237,6 +370,72 @@ mod tests {
         for cut in [0, 5, HEADER_BYTES, wire.len() - 1] {
             assert!(decode(&wire[..cut]).is_err(), "cut={cut}");
         }
+    }
+
+    #[test]
+    fn c16_roundtrips_via_bitpack() {
+        // At c=16 the Huffman header cannot hold the alphabet; the
+        // codec must fall back to bit-packing and still round-trip.
+        let xs = sample_features(512);
+        let q = quant::quantize(&xs, 16);
+        let wire = encode(&q, 1, 0);
+        let frame = decode(&wire).unwrap();
+        assert_eq!(frame.mode, Mode::BitPack);
+        assert_eq!(frame.values, q.values);
+        assert_eq!(encoded_size(&q), wire.len());
+    }
+
+    #[test]
+    fn scratch_reuse_across_mixed_frames() {
+        // One scratch serving frames of different c / size / mode must
+        // not leak state between requests (the per-connection pattern).
+        let mut ws = CodecScratch::new();
+        let mut out = Vec::new();
+        let mut values = Vec::new();
+        for (n, c) in [(4096usize, 4u8), (64, 8), (10_000, 1), (333, 6)] {
+            let xs = sample_features(n);
+            let q = quant::quantize(&xs, c);
+            encode_into(&q, 9, 3, &mut ws, &mut out);
+            assert_eq!(out, encode(&q, 9, 3), "n={n} c={c}");
+            let h = decode_into(&out, &mut ws, &mut values).unwrap();
+            assert_eq!(values, q.values, "n={n} c={c}");
+            assert_eq!((h.c, h.stage, h.model, h.lo, h.hi), (c, 9, 3, q.lo, q.hi));
+        }
+    }
+
+    #[test]
+    fn prop_into_matches_legacy() {
+        // The acceptance property: streaming APIs are byte-identical to
+        // the legacy allocating codec across random (c, n, lo, hi,
+        // sparsity) inputs — lo/hi vary through a random affine map.
+        prop::check(
+            "encode_into/decode_into ≡ encode/decode",
+            prop::pair(
+                prop::pair(prop::sparse_features(0, 4096), prop::u64_in(1, 8)),
+                prop::pair(prop::f32_in(-50.0, 50.0), prop::f32_in(0.1, 20.0)),
+            ),
+            |((xs, c), (offset, scale))| {
+                let xs: Vec<f32> = xs.iter().map(|&x| x * scale + offset).collect();
+                let q = quant::quantize(&xs, *c as u8);
+                let legacy_wire = encode(&q, 3, 1);
+                let mut ws = CodecScratch::new();
+                let mut wire = Vec::new();
+                encode_into(&q, 3, 1, &mut ws, &mut wire);
+                if wire != legacy_wire {
+                    return false;
+                }
+                let legacy_frame = decode(&legacy_wire).unwrap();
+                let mut values = Vec::new();
+                let h = decode_into(&wire, &mut ws, &mut values).unwrap();
+                values == legacy_frame.values
+                    && h.lo == legacy_frame.lo
+                    && h.hi == legacy_frame.hi
+                    && h.c == legacy_frame.c
+                    && h.stage == legacy_frame.stage
+                    && h.model == legacy_frame.model
+                    && h.mode == legacy_frame.mode
+            },
+        );
     }
 
     #[test]

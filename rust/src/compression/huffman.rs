@@ -10,6 +10,10 @@
 //! * Decoding is table-driven: one [`LOOKUP_BITS`]-wide table resolves
 //!   most symbols in a single probe; longer codes fall back to the
 //!   per-length canonical walk.
+//! * Both [`Encoder`] and [`Decoder`] can be **rebuilt in place**
+//!   ([`Encoder::rebuild_from_freqs`], [`Decoder::rebuild`]) so the
+//!   serving hot path re-derives per-frame code tables without heap
+//!   allocations once its scratch buffers are warm.
 
 use super::bitio::{BitReader, BitWriter, OutOfBits};
 
@@ -37,17 +41,31 @@ impl From<OutOfBits> for HuffError {
     }
 }
 
-/// Compute canonical code lengths for `freqs` (0 freq → no code).
-pub fn code_lengths(freqs: &[u64]) -> Vec<u8> {
-    let mut freqs: Vec<u64> = freqs.to_vec();
+/// Reusable workspace for the length computation: the damped frequency
+/// copy, the merge-tree parent links, node frequencies and the heap's
+/// backing vector are all retained between builds.
+#[derive(Debug, Default)]
+pub struct EncoderScratch {
+    damped: Vec<u64>,
+    parent: Vec<u32>,
+    node_freq: Vec<u64>,
+    heap: Vec<std::cmp::Reverse<(u64, u32)>>,
+}
+
+/// Compute canonical code lengths for `freqs` into `lengths`
+/// (0 freq → no code), reusing `ws` allocations.
+pub fn code_lengths_into(freqs: &[u64], ws: &mut EncoderScratch, lengths: &mut Vec<u8>) {
+    let EncoderScratch { damped, parent, node_freq, heap } = ws;
+    damped.clear();
+    damped.extend_from_slice(freqs);
     loop {
-        let lengths = tree_lengths(&freqs);
+        tree_lengths_into(damped, parent, node_freq, heap, lengths);
         let max = lengths.iter().copied().max().unwrap_or(0);
         if (max as u32) <= MAX_BITS {
-            return lengths;
+            return;
         }
         // Damp and retry: flattens the distribution, shortening the tree.
-        for f in freqs.iter_mut() {
+        for f in damped.iter_mut() {
             if *f > 0 {
                 *f = *f / 2 + 1;
             }
@@ -55,61 +73,76 @@ pub fn code_lengths(freqs: &[u64]) -> Vec<u8> {
     }
 }
 
-fn tree_lengths(freqs: &[u64]) -> Vec<u8> {
+/// Compute canonical code lengths for `freqs` (0 freq → no code).
+pub fn code_lengths(freqs: &[u64]) -> Vec<u8> {
+    let mut ws = EncoderScratch::default();
+    let mut lengths = Vec::new();
+    code_lengths_into(freqs, &mut ws, &mut lengths);
+    lengths
+}
+
+fn tree_lengths_into(
+    freqs: &[u64],
+    parent: &mut Vec<u32>,
+    node_freq: &mut Vec<u64>,
+    heap_vec: &mut Vec<std::cmp::Reverse<(u64, u32)>>,
+    lengths: &mut Vec<u8>,
+) {
     let n = freqs.len();
-    let mut lengths = vec![0u8; n];
-    let active: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
-    match active.len() {
-        0 => return lengths,
+    lengths.clear();
+    lengths.resize(n, 0);
+    heap_vec.clear();
+    for (i, &f) in freqs.iter().enumerate() {
+        if f > 0 {
+            heap_vec.push(std::cmp::Reverse((f, i as u32)));
+        }
+    }
+    match heap_vec.len() {
+        0 => return,
         1 => {
-            lengths[active[0]] = 1;
-            return lengths;
+            let std::cmp::Reverse((_, i)) = heap_vec[0];
+            lengths[i as usize] = 1;
+            return;
         }
         _ => {}
     }
-    // Nodes: leaves 0..n, internal nodes appended. parent[] tracks the merge tree.
-    let mut heap = std::collections::BinaryHeap::new();
-    let mut parent: Vec<usize> = vec![usize::MAX; n];
-    for &i in &active {
-        heap.push(std::cmp::Reverse((freqs[i], i)));
-    }
-    let mut node_freq: Vec<u64> = freqs.to_vec();
+    // Nodes: leaves 0..n, internal nodes appended. parent[] tracks the
+    // merge tree. BinaryHeap::from / into_vec reuse the same backing
+    // allocation, and merging pops two for every push, so the heap never
+    // grows past its initial size.
+    parent.clear();
+    parent.resize(n, u32::MAX);
+    node_freq.clear();
+    node_freq.extend_from_slice(freqs);
+    let mut heap = std::collections::BinaryHeap::from(std::mem::take(heap_vec));
     while heap.len() > 1 {
         let std::cmp::Reverse((fa, a)) = heap.pop().unwrap();
         let std::cmp::Reverse((fb, b)) = heap.pop().unwrap();
-        let id = node_freq.len();
+        let id = node_freq.len() as u32;
         node_freq.push(fa + fb);
-        parent.push(usize::MAX);
-        parent[a] = id;
-        parent[b] = id;
+        parent.push(u32::MAX);
+        parent[a as usize] = id;
+        parent[b as usize] = id;
         heap.push(std::cmp::Reverse((fa + fb, id)));
     }
-    for &i in &active {
+    *heap_vec = heap.into_vec();
+    for (i, &f) in freqs.iter().enumerate() {
+        if f == 0 {
+            continue;
+        }
         let mut d = 0u8;
-        let mut cur = i;
-        while parent[cur] != usize::MAX {
-            cur = parent[cur];
+        let mut cur = i as u32;
+        while parent[cur as usize] != u32::MAX {
+            cur = parent[cur as usize];
             d += 1;
         }
         lengths[i] = d;
     }
-    lengths
 }
 
 /// Canonical code assignment: shorter codes first, ties by symbol index.
 pub fn canonical_codes(lengths: &[u8]) -> Vec<u32> {
-    let mut bl_count = [0u32; (MAX_BITS + 1) as usize];
-    for &l in lengths {
-        if l > 0 {
-            bl_count[l as usize] += 1;
-        }
-    }
-    let mut next_code = [0u32; (MAX_BITS + 2) as usize];
-    let mut code = 0u32;
-    for bits in 1..=MAX_BITS as usize {
-        code = (code + bl_count[bits - 1]) << 1;
-        next_code[bits] = code;
-    }
+    let mut next_code = next_code_table(lengths);
     lengths
         .iter()
         .map(|&l| {
@@ -122,6 +155,23 @@ pub fn canonical_codes(lengths: &[u8]) -> Vec<u32> {
             }
         })
         .collect()
+}
+
+/// First canonical code per length, from a length table.
+fn next_code_table(lengths: &[u8]) -> [u32; (MAX_BITS + 2) as usize] {
+    let mut bl_count = [0u32; (MAX_BITS + 1) as usize];
+    for &l in lengths {
+        if l > 0 {
+            bl_count[l as usize] += 1;
+        }
+    }
+    let mut next_code = [0u32; (MAX_BITS + 2) as usize];
+    let mut code = 0u32;
+    for bits in 1..=MAX_BITS as usize {
+        code = (code + bl_count[bits - 1]) << 1;
+        next_code[bits] = code;
+    }
+    next_code
 }
 
 /// Encoder: symbol → (code, length), written MSB-first within the code so
@@ -137,19 +187,44 @@ pub struct Encoder {
 }
 
 impl Encoder {
+    /// An empty encoder to be filled by [`Encoder::rebuild_from_freqs`].
+    pub fn new_empty() -> Self {
+        Self { rev_codes: Vec::new(), lengths: Vec::new() }
+    }
+
     pub fn from_freqs(freqs: &[u64]) -> Self {
-        let lengths = code_lengths(freqs);
-        Self::from_lengths(lengths)
+        let mut enc = Self::new_empty();
+        let mut ws = EncoderScratch::default();
+        enc.rebuild_from_freqs(freqs, &mut ws);
+        enc
     }
 
     pub fn from_lengths(lengths: Vec<u8>) -> Self {
-        let codes = canonical_codes(&lengths);
-        let rev_codes = codes
-            .iter()
-            .zip(&lengths)
-            .map(|(&c, &l)| if l == 0 { 0 } else { c.reverse_bits() >> (32 - l as u32) })
-            .collect();
-        Self { rev_codes, lengths }
+        let mut enc = Self { rev_codes: Vec::new(), lengths };
+        enc.rebuild_codes();
+        enc
+    }
+
+    /// Rebuild in place from a fresh histogram, reusing all allocations.
+    pub fn rebuild_from_freqs(&mut self, freqs: &[u64], ws: &mut EncoderScratch) {
+        code_lengths_into(freqs, ws, &mut self.lengths);
+        self.rebuild_codes();
+    }
+
+    fn rebuild_codes(&mut self) {
+        let mut next_code = next_code_table(&self.lengths);
+        let lengths = &self.lengths;
+        let rev_codes = &mut self.rev_codes;
+        rev_codes.clear();
+        for &l in lengths {
+            if l == 0 {
+                rev_codes.push(0);
+            } else {
+                let c = next_code[l as usize];
+                next_code[l as usize] += 1;
+                rev_codes.push(c.reverse_bits() >> (32 - l as u32));
+            }
+        }
     }
 
     pub fn lengths(&self) -> &[u8] {
@@ -157,7 +232,7 @@ impl Encoder {
     }
 
     #[inline]
-    pub fn encode(&self, w: &mut BitWriter, sym: usize) {
+    pub fn encode(&self, w: &mut BitWriter<'_>, sym: usize) {
         let len = self.lengths[sym] as u32;
         debug_assert!(len > 0, "encoding symbol {sym} with no code");
         w.write(self.rev_codes[sym] as u64, len);
@@ -183,55 +258,81 @@ pub struct Decoder {
 }
 
 impl Decoder {
+    /// An empty decoder to be filled by [`Decoder::rebuild`].
+    pub fn new_empty() -> Self {
+        Self {
+            lookup: Vec::new(),
+            count: [0; (MAX_BITS + 1) as usize],
+            first_code: [0; (MAX_BITS + 1) as usize],
+            first_index: [0; (MAX_BITS + 1) as usize],
+            symbols: Vec::new(),
+        }
+    }
+
     pub fn from_lengths(lengths: &[u8]) -> Result<Self, HuffError> {
+        let mut dec = Self::new_empty();
+        dec.rebuild(lengths)?;
+        Ok(dec)
+    }
+
+    /// Rebuild in place from canonical lengths, reusing allocations.
+    pub fn rebuild(&mut self, lengths: &[u8]) -> Result<(), HuffError> {
         if lengths.len() > u16::MAX as usize {
             return Err(HuffError::BadHeader);
         }
-        let mut count = [0u32; (MAX_BITS + 1) as usize];
+        self.count = [0; (MAX_BITS + 1) as usize];
         for &l in lengths {
             if l as u32 > MAX_BITS {
                 return Err(HuffError::BadHeader);
             }
             if l > 0 {
-                count[l as usize] += 1;
+                self.count[l as usize] += 1;
             }
         }
-        let mut symbols: Vec<u16> = Vec::new();
+        self.symbols.clear();
         for bits in 1..=MAX_BITS as usize {
             for (s, &l) in lengths.iter().enumerate() {
                 if l as usize == bits {
-                    symbols.push(s as u16);
+                    self.symbols.push(s as u16);
                 }
             }
         }
-        let mut first_code = [0u32; (MAX_BITS + 1) as usize];
-        let mut first_index = [0u32; (MAX_BITS + 1) as usize];
+        self.first_code = [0; (MAX_BITS + 1) as usize];
+        self.first_index = [0; (MAX_BITS + 1) as usize];
         let mut code = 0u32;
         let mut index = 0u32;
         for bits in 1..=MAX_BITS as usize {
-            code = (code + count[bits - 1]) << 1;
-            first_code[bits] = code;
-            first_index[bits] = index;
-            index += count[bits];
+            code = (code + self.count[bits - 1]) << 1;
+            self.first_code[bits] = code;
+            self.first_index[bits] = index;
+            index += self.count[bits];
         }
 
-        // Build the fast lookup table.
-        let codes = canonical_codes(lengths);
-        let mut lookup = vec![(0u16, 0u8); 1 << LOOKUP_BITS];
+        // Build the fast lookup table. Codes are assigned in canonical
+        // order (every non-zero length consumes one), matching
+        // `canonical_codes` without materializing the code vector.
+        self.lookup.clear();
+        self.lookup.resize(1 << LOOKUP_BITS, (0u16, 0u8));
+        let mut next_code = next_code_table(lengths);
         for (s, &l) in lengths.iter().enumerate() {
-            let l32 = l as u32;
-            if l == 0 || l32 > LOOKUP_BITS {
+            if l == 0 {
                 continue;
             }
-            let rev = codes[s].reverse_bits() >> (32 - l32);
+            let l32 = l as u32;
+            let c = next_code[l as usize];
+            next_code[l as usize] += 1;
+            if l32 > LOOKUP_BITS {
+                continue;
+            }
+            let rev = c.reverse_bits() >> (32 - l32);
             let step = 1u32 << l32;
             let mut idx = rev;
             while idx < (1 << LOOKUP_BITS) {
-                lookup[idx as usize] = (s as u16, l);
+                self.lookup[idx as usize] = (s as u16, l);
                 idx += step;
             }
         }
-        Ok(Self { lookup, count, first_code, first_index, symbols })
+        Ok(())
     }
 
     #[inline]
@@ -257,6 +358,26 @@ impl Decoder {
     }
 }
 
+/// Reusable decode-side state: the header length table plus the
+/// table-driven decoder it rebuilds. One per session/connection.
+#[derive(Debug)]
+pub struct DecodeScratch {
+    lengths: Vec<u8>,
+    decoder: Decoder,
+}
+
+impl Default for DecodeScratch {
+    fn default() -> Self {
+        Self { lengths: Vec::new(), decoder: Decoder::new_empty() }
+    }
+}
+
+impl DecodeScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// One-shot convenience: encode `symbols` over alphabet size `alphabet`.
 /// Stream layout: [alphabet: u16][lengths: alphabet × u4 packed][count: u32][payload].
 pub fn encode_block(symbols: &[u16], alphabet: usize) -> Vec<u8> {
@@ -272,7 +393,15 @@ pub fn encode_block(symbols: &[u16], alphabet: usize) -> Vec<u8> {
 /// histogram it already computed for mode selection — see
 /// `compression::feature::encode`).
 pub fn encode_block_with(enc: &Encoder, symbols: &[u16], alphabet: usize) -> Vec<u8> {
-    let mut w = BitWriter::new();
+    let mut out = Vec::new();
+    encode_block_with_into(enc, symbols, alphabet, &mut out);
+    out
+}
+
+/// Streaming form of [`encode_block_with`]: appends the block to `out`
+/// (no intermediate allocation — the request hot path's entropy hop).
+pub fn encode_block_with_into(enc: &Encoder, symbols: &[u16], alphabet: usize, out: &mut Vec<u8>) {
+    let mut w = BitWriter::over(out);
     w.write(alphabet as u64, 16);
     for &l in enc.lengths() {
         w.write(l as u64, 4); // MAX_BITS=15 fits in 4 bits
@@ -281,27 +410,47 @@ pub fn encode_block_with(enc: &Encoder, symbols: &[u16], alphabet: usize) -> Vec
     for &s in symbols {
         enc.encode(&mut w, s as usize);
     }
-    w.finish()
+    w.finish();
 }
 
 /// Inverse of [`encode_block`].
 pub fn decode_block(bytes: &[u8]) -> Result<Vec<u16>, HuffError> {
+    let mut ws = DecodeScratch::default();
+    let mut out = Vec::new();
+    decode_block_into(bytes, &mut ws, &mut out)?;
+    Ok(out)
+}
+
+/// Streaming form of [`decode_block`]: decodes into `out`, reusing its
+/// capacity and the scratch's decoder tables.
+pub fn decode_block_into(
+    bytes: &[u8],
+    ws: &mut DecodeScratch,
+    out: &mut Vec<u16>,
+) -> Result<(), HuffError> {
     let mut r = BitReader::new(bytes);
     let alphabet = r.read(16)? as usize;
     if alphabet == 0 {
         return Err(HuffError::BadHeader);
     }
-    let mut lengths = vec![0u8; alphabet];
-    for l in lengths.iter_mut() {
+    ws.lengths.clear();
+    ws.lengths.resize(alphabet, 0);
+    for l in ws.lengths.iter_mut() {
         *l = r.read(4)? as u8;
     }
     let n = r.read(32)? as usize;
-    let dec = Decoder::from_lengths(&lengths)?;
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        out.push(dec.decode(&mut r)?);
+    // Every symbol costs ≥ 1 bit: reject counts the payload cannot hold
+    // before reserving memory for them (untrusted header hardening).
+    if n > r.remaining_bits() {
+        return Err(HuffError::Truncated);
     }
-    Ok(out)
+    ws.decoder.rebuild(&ws.lengths)?;
+    out.clear();
+    out.reserve(n);
+    for _ in 0..n {
+        out.push(ws.decoder.decode(&mut r)?);
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -356,6 +505,57 @@ mod tests {
     }
 
     #[test]
+    fn rebuilt_encoder_matches_fresh() {
+        // Rebuild over several different histograms; each must match a
+        // from-scratch construction exactly (codes and lengths).
+        let mut enc = Encoder::new_empty();
+        let mut ws = EncoderScratch::default();
+        for seed in 1u64..6 {
+            let freqs: Vec<u64> = (0..64).map(|i| (i as u64 * seed * 2654435761) % 97).collect();
+            enc.rebuild_from_freqs(&freqs, &mut ws);
+            let fresh = Encoder::from_freqs(&freqs);
+            assert_eq!(enc.lengths(), fresh.lengths(), "seed {seed}");
+            assert_eq!(enc.rev_codes, fresh.rev_codes, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn rebuilt_decoder_matches_fresh() {
+        let mut dec = Decoder::new_empty();
+        for seed in 1u64..6 {
+            let freqs: Vec<u64> = (0..64).map(|i| (i as u64 * seed * 40503) % 31).collect();
+            let lengths = code_lengths(&freqs);
+            dec.rebuild(&lengths).unwrap();
+            let fresh = Decoder::from_lengths(&lengths).unwrap();
+            assert_eq!(dec.lookup, fresh.lookup, "seed {seed}");
+            assert_eq!(dec.symbols, fresh.symbols, "seed {seed}");
+            assert_eq!(dec.count, fresh.count, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn prop_into_matches_allocating() {
+        prop::check(
+            "encode_block_with_into ≡ encode_block_with",
+            prop::vec_of(prop::u64_in(0, 255).map(|x| x as u16), 0, 2000),
+            |symbols| {
+                let mut freqs = vec![0u64; 256];
+                for &s in symbols {
+                    freqs[s as usize] += 1;
+                }
+                let enc = Encoder::from_freqs(&freqs);
+                let legacy = encode_block_with(&enc, symbols, 256);
+                let mut streamed = Vec::new();
+                encode_block_with_into(&enc, symbols, 256, &mut streamed);
+                let mut ws = DecodeScratch::default();
+                let mut decoded = Vec::new();
+                decode_block_into(&legacy, &mut ws, &mut decoded).unwrap();
+                streamed == legacy && &decoded == symbols
+            },
+        );
+    }
+
+    #[test]
     fn prop_roundtrip() {
         prop::check(
             "huffman block roundtrip",
@@ -378,11 +578,12 @@ mod tests {
         }
         let enc = Encoder::from_freqs(&freqs);
         let dec = Decoder::from_lengths(enc.lengths()).unwrap();
-        let mut w = BitWriter::new();
+        let mut bytes = Vec::new();
+        let mut w = BitWriter::over(&mut bytes);
         for s in 0..32 {
             enc.encode(&mut w, s);
         }
-        let bytes = w.finish();
+        w.finish();
         let mut r = BitReader::new(&bytes);
         for s in 0..32u16 {
             assert_eq!(dec.decode(&mut r).unwrap(), s);

@@ -42,26 +42,43 @@ pub fn min_max(xs: &[f32]) -> (f32, f32) {
 
 /// Affine-quantize `xs` to `c` bits (1 ≤ c ≤ 16).
 pub fn quantize(xs: &[f32], c: u8) -> Quantized {
+    let mut values = Vec::new();
+    let (lo, hi) = quantize_into(xs, c, &mut values);
+    Quantized { values, lo, hi, c }
+}
+
+/// [`quantize`] into a caller-owned buffer (cleared, capacity reused);
+/// returns the observed `(lo, hi)` range. The serving hot path's
+/// quantize hop — allocation-free once the buffer is warm.
+pub fn quantize_into(xs: &[f32], c: u8, out: &mut Vec<u16>) -> (f32, f32) {
     assert!((1..=16).contains(&c));
     let (lo, hi) = min_max(xs);
     let span = hi - lo;
     let levels = qmax(c) as f32;
     let scale = if span > 0.0 { levels / span } else { 0.0 };
-    let values = xs
-        .iter()
-        .map(|&x| {
-            let y = ((x - lo) * scale).round();
-            y.clamp(0.0, levels) as u16
-        })
-        .collect();
-    Quantized { values, lo, hi, c }
+    out.clear();
+    out.reserve(xs.len());
+    out.extend(xs.iter().map(|&x| {
+        let y = ((x - lo) * scale).round();
+        y.clamp(0.0, levels) as u16
+    }));
+    (lo, hi)
 }
 
 /// Inverse: x̂ = y / (2^c − 1) · (hi − lo) + lo.
 pub fn dequantize(q: &Quantized) -> Vec<f32> {
-    let levels = qmax(q.c) as f32;
-    let step = if levels > 0.0 { (q.hi - q.lo) / levels } else { 0.0 };
-    q.values.iter().map(|&y| y as f32 * step + q.lo).collect()
+    let mut out = Vec::new();
+    dequantize_into(&q.values, q.lo, q.hi, q.c, &mut out);
+    out
+}
+
+/// [`dequantize`] into a caller-owned buffer (cleared, capacity reused).
+pub fn dequantize_into(values: &[u16], lo: f32, hi: f32, c: u8, out: &mut Vec<f32>) {
+    let levels = qmax(c) as f32;
+    let step = if levels > 0.0 { (hi - lo) / levels } else { 0.0 };
+    out.clear();
+    out.reserve(values.len());
+    out.extend(values.iter().map(|&y| y as f32 * step + lo));
 }
 
 /// quantize→dequantize round trip (the distortion the cloud model sees).
@@ -132,6 +149,23 @@ mod tests {
             |(xs, c)| {
                 let q = quantize(xs, *c as u8);
                 q.values.iter().all(|&v| (v as u32) <= qmax(*c as u8))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_into_matches_allocating() {
+        prop::check(
+            "quantize_into/dequantize_into ≡ legacy",
+            prop::pair(prop::sparse_features(0, 1024), prop::u64_in(1, 12)),
+            |(xs, c)| {
+                let c = *c as u8;
+                let q = quantize(xs, c);
+                let mut values = vec![7u16; 3]; // stale contents must be cleared
+                let (lo, hi) = quantize_into(xs, c, &mut values);
+                let mut rec = vec![1.0f32];
+                dequantize_into(&values, lo, hi, c, &mut rec);
+                values == q.values && lo == q.lo && hi == q.hi && rec == dequantize(&q)
             },
         );
     }

@@ -2,9 +2,12 @@
 //!
 //! * [`decision`] — builds the §III-E ILP from the predictor tables +
 //!   latency tables + current bandwidth and solves for `(i*, c)`;
+//! * [`session`] — the shared edge half of a request (head stages → L1
+//!   quant → entropy-code into pooled scratch); both the simulated and
+//!   the TCP deployments drive this one implementation;
 //! * [`pipeline`] — executes a plan end-to-end in process over a
-//!   simulated channel (edge stages → L1 quant → Huffman → transmit →
-//!   dequant → cloud stages), with full latency breakdowns;
+//!   simulated channel (a [`session::Session`] plus the simulated uplink
+//!   and the cloud tail), with full latency breakdowns;
 //! * [`baselines`] — Origin2Cloud / PNG2Cloud / JPEG2Cloud / edge-only /
 //!   Neurosurgeon-style no-compression partitioning (§IV-A, §V);
 //! * [`adaptive`] — the re-decoupling controller: EWMA bandwidth
@@ -16,9 +19,11 @@ pub mod baselines;
 pub mod decision;
 pub mod pipeline;
 pub mod router;
+pub mod session;
 
 pub use adaptive::AdaptationController;
 pub use baselines::Baseline;
 pub use decision::{DecisionEngine, Scale};
 pub use pipeline::{LocalPipeline, RunResult};
 pub use router::{Router, RouterConfig};
+pub use session::{EncodedRequest, Session};

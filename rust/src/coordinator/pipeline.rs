@@ -1,23 +1,28 @@
 //! In-process end-to-end pipeline over a simulated channel.
 //!
 //! Runs one request through the decoupled path exactly as the deployed
-//! system would — edge stages through PJRT, the L1 Pallas quantizer
-//! artifact, Huffman wire coding, the simulated uplink, dequantization
-//! and the cloud tail — collecting a full latency [`Breakdown`]. The
-//! simulated clock uses *measured* compute seconds plus *modelled*
-//! transmission seconds, which is the paper's evaluation methodology.
+//! system would — the edge half through the shared
+//! [`coordinator::session::Session`](super::session::Session) (the same
+//! code `server::edge` drives over TCP), the simulated uplink, then
+//! dequantization and the cloud tail — collecting a full latency
+//! [`Breakdown`]. The simulated clock uses *measured* compute seconds
+//! plus *modelled* transmission seconds, which is the paper's evaluation
+//! methodology. Cloud-side decode reuses a per-pipeline scratch, so the
+//! codec hop allocates nothing in steady state.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::compression::{feature, quant};
+use crate::compression::{feature, png, quant};
 use crate::coordinator::decision::DecisionEngine;
+use crate::coordinator::session::{EncodedRequest, Session};
 use crate::data::gen::Sample;
 use crate::ilp::Decision;
 use crate::metrics::Breakdown;
 use crate::network::SimChannel;
 use crate::runtime::{Executor, Tensor};
+use crate::util::pool::Scratch;
 
 /// Outcome of one request.
 #[derive(Debug, Clone)]
@@ -29,8 +34,11 @@ pub struct RunResult {
 }
 
 pub struct LocalPipeline<'a> {
-    pub exe: &'a Executor,
-    pub model: String,
+    session: Session<'a>,
+    /// Cloud-side decode scratch — kept apart from the session's
+    /// edge-side scratch because in the deployment those buffers live on
+    /// different hosts.
+    cloud: Scratch,
     /// Use the exported Pallas quant/dequant artifacts (true) or the
     /// rust twin (false). Identical numerics; the artifact path proves
     /// L1 on the request path, the twin is faster for large sweeps.
@@ -39,121 +47,84 @@ pub struct LocalPipeline<'a> {
 
 impl<'a> LocalPipeline<'a> {
     pub fn new(exe: &'a Executor, model: &str) -> Self {
-        Self { exe, model: model.to_string(), use_pjrt_codec: true }
+        Self { session: Session::lenient(exe, model), cloud: Scratch::new(), use_pjrt_codec: true }
     }
 
     /// Execute `decision` for `sample` over `channel`.
     pub fn run(
-        &self,
+        &mut self,
         sample: &Sample,
         decision: Decision,
         channel: &mut SimChannel,
     ) -> Result<RunResult> {
-        match decision {
-            Decision::CloudOnly => self.run_cloud_only(sample, channel),
-            Decision::Cut { i, c } => self.run_cut(sample, i, c, channel),
-        }
-    }
-
-    fn run_cloud_only(&self, sample: &Sample, channel: &mut SimChannel) -> Result<RunResult> {
-        let mut bd = Breakdown::default();
-        // Edge: PNG-compress the 8-bit image.
-        let t0 = Instant::now();
-        let hw = sample.image.shape()[1];
-        let rgb = crate::data::gen::to_rgb8(&sample.image);
-        let img8 = crate::compression::png::Image8::new(hw, hw, 3, rgb);
-        let wire = crate::compression::png::encode(&img8);
-        bd.encode = t0.elapsed().as_secs_f64();
-        channel.advance(bd.encode);
-        bd.tx_bytes = wire.len();
-        bd.transmit = channel.transmit(wire.len());
-        // Cloud: decode + full forward.
-        let t1 = Instant::now();
-        let decoded = crate::compression::png::decode(&wire).map_err(anyhow::Error::new)?;
-        let x = crate::data::gen::from_rgb8(&decoded.data, sample.image.shape().to_vec());
-        bd.decode = t1.elapsed().as_secs_f64();
-        let out = self.exe.run_full(&self.model, &x)?;
-        bd.cloud_compute = out.seconds;
-        channel.advance(bd.decode + bd.cloud_compute);
-        let prediction = out.tensor.argmax();
-        Ok(RunResult {
-            prediction,
-            correct: prediction == sample.label,
-            decision: Decision::CloudOnly,
-            breakdown: bd,
-        })
-    }
-
-    fn run_cut(
-        &self,
-        sample: &Sample,
-        i: usize,
-        c: u8,
-        channel: &mut SimChannel,
-    ) -> Result<RunResult> {
-        let m = self.exe.manifest().model(&self.model)?;
-        let n = m.num_stages();
-        let model_id = self.exe.manifest().model_id(&self.model).unwrap_or(0);
+        self.session.use_pjrt_codec = self.use_pjrt_codec;
         let mut bd = Breakdown::default();
 
-        // --- edge: stages 1..=i ---
-        let mut cur = sample.image.clone();
-        for j in 1..=i {
-            let out = self.exe.run_stage(&self.model, j, &cur)?;
-            cur = out.tensor;
-            bd.edge_compute += out.seconds;
-        }
-
-        // --- edge: L1 quantize ---
-        let t0 = Instant::now();
-        let q = if self.use_pjrt_codec {
-            self.exe.run_quant(&cur, c)?
-        } else {
-            quant::quantize(cur.data(), c)
-        };
-        bd.quantize = t0.elapsed().as_secs_f64();
-
-        // --- edge: entropy-code to the wire frame ---
-        let t1 = Instant::now();
-        let wire = feature::encode(&q, i as u16, model_id);
-        bd.encode = t1.elapsed().as_secs_f64();
-
+        // --- edge half: shared with the TCP deployment ---
+        let req = self.session.encode_request(sample, decision, &mut bd)?;
         channel.advance(bd.edge_compute + bd.quantize + bd.encode);
-        bd.tx_bytes = wire.len();
-        bd.transmit = channel.transmit(wire.len());
+        bd.tx_bytes = self.session.wire().len();
+        bd.transmit = channel.transmit(bd.tx_bytes);
 
-        // --- cloud: decode, dequantize, stages i+1..=N ---
-        let t2 = Instant::now();
-        let frame = feature::decode(&wire).map_err(anyhow::Error::new)?;
-        bd.decode = t2.elapsed().as_secs_f64();
-        let rq = quant::Quantized { values: frame.values, lo: frame.lo, hi: frame.hi, c };
-        let out_shape = m.stages[i - 1].out_shape.clone();
-        let t3 = Instant::now();
-        let mut cur = if self.use_pjrt_codec {
-            self.exe.run_dequant(&rq, &out_shape)?
-        } else {
-            Tensor::new(out_shape, quant::dequantize(&rq))
+        // --- cloud half over the simulated link ---
+        let prediction = match req {
+            EncodedRequest::Image { .. } => {
+                let t1 = Instant::now();
+                let decoded =
+                    png::decode(self.session.wire()).map_err(anyhow::Error::new)?;
+                let x =
+                    crate::data::gen::from_rgb8(&decoded.data, sample.image.shape().to_vec());
+                bd.decode = t1.elapsed().as_secs_f64();
+                let out = self.session.executor().run_full(self.session.model(), &x)?;
+                bd.cloud_compute = out.seconds;
+                channel.advance(bd.decode + bd.cloud_compute);
+                out.tensor.argmax()
+            }
+            EncodedRequest::Features { .. } => {
+                let exe = self.session.executor();
+                let m = exe.manifest().model(self.session.model())?;
+                let n = m.num_stages();
+
+                // decode into the cloud scratch
+                let t2 = Instant::now();
+                let Scratch { values, codec, .. } = &mut self.cloud;
+                let header = feature::decode_into(self.session.wire(), codec, values)
+                    .map_err(anyhow::Error::new)?;
+                bd.decode = t2.elapsed().as_secs_f64();
+
+                // dequantize + tail stages
+                let i = header.stage as usize;
+                let out_shape = m.stages[i - 1].out_shape.clone();
+                let t3 = Instant::now();
+                let mut cur = if self.use_pjrt_codec {
+                    exe.run_dequant_parts(values, header.lo, header.hi, header.c, &out_shape)?
+                } else {
+                    let mut rec = Vec::with_capacity(values.len());
+                    quant::dequantize_into(values, header.lo, header.hi, header.c, &mut rec);
+                    Tensor::new(out_shape, rec)
+                };
+                bd.dequantize = t3.elapsed().as_secs_f64();
+                for j in i + 1..=n {
+                    let out = exe.run_stage(self.session.model(), j, &cur)?;
+                    cur = out.tensor;
+                    bd.cloud_compute += out.seconds;
+                }
+                channel.advance(bd.decode + bd.dequantize + bd.cloud_compute);
+                cur.argmax()
+            }
         };
-        bd.dequantize = t3.elapsed().as_secs_f64();
-        for j in i + 1..=n {
-            let out = self.exe.run_stage(&self.model, j, &cur)?;
-            cur = out.tensor;
-            bd.cloud_compute += out.seconds;
-        }
-        channel.advance(bd.decode + bd.dequantize + bd.cloud_compute);
 
-        let prediction = cur.argmax();
         Ok(RunResult {
             prediction,
             correct: prediction == sample.label,
-            decision: Decision::Cut { i, c },
+            decision,
             breakdown: bd,
         })
     }
 
     /// Decide-and-run: what the deployed edge does per request.
     pub fn run_decided(
-        &self,
+        &mut self,
         engine: &DecisionEngine,
         sample: &Sample,
         channel: &mut SimChannel,
@@ -179,7 +150,7 @@ mod tests {
     #[test]
     fn cut_path_matches_clean_prediction_at_c8() {
         let Some(exe) = executor() else { return };
-        let pipe = LocalPipeline::new(&exe, "tinyconv");
+        let mut pipe = LocalPipeline::new(&exe, "tinyconv");
         let mut ch = SimChannel::constant(1e6);
         for id in 6000..6008 {
             let s = crate::data::gen::sample_image(id, 32);
@@ -194,7 +165,7 @@ mod tests {
     #[test]
     fn cloud_only_matches_full_forward() {
         let Some(exe) = executor() else { return };
-        let pipe = LocalPipeline::new(&exe, "tinyconv");
+        let mut pipe = LocalPipeline::new(&exe, "tinyconv");
         let mut ch = SimChannel::constant(1e6);
         let s = crate::data::gen::sample_image(42, 32);
         let clean = exe.run_full("tinyconv", &s.image).unwrap().tensor.argmax();
@@ -209,7 +180,7 @@ mod tests {
     #[test]
     fn lower_c_ships_fewer_bytes() {
         let Some(exe) = executor() else { return };
-        let pipe = LocalPipeline::new(&exe, "tinyconv");
+        let mut pipe = LocalPipeline::new(&exe, "tinyconv");
         let s = crate::data::gen::sample_image(7, 32);
         let mut ch = SimChannel::constant(1e6);
         let b1 = pipe.run(&s, Decision::Cut { i: 1, c: 1 }, &mut ch).unwrap().breakdown;

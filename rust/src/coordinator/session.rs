@@ -1,0 +1,193 @@
+//! The shared edge-side request path (sim/real unification).
+//!
+//! `coordinator::pipeline::LocalPipeline` (simulated channel) and
+//! `server::edge::EdgeClient` (real TCP) used to each carry their own
+//! copy of the edge half of a request — run head stages, L1-quantize the
+//! cut feature map, entropy-code it into a wire frame. Both now drive
+//! this `Session`, so the simulated and deployed paths execute literally
+//! the same code; only the transport behind [`Session::wire`] differs.
+//!
+//! A `Session` owns a [`util::pool::Scratch`](crate::util::pool::Scratch):
+//! the quantized values, the Huffman tables and the encoded wire frame
+//! all live in reusable buffers, making the codec hop allocation-free in
+//! steady state (asserted in `benches/pipeline_hotpath.rs`).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::compression::{feature, png, quant};
+use crate::data::gen::Sample;
+use crate::ilp::Decision;
+use crate::metrics::Breakdown;
+use crate::runtime::Executor;
+use crate::util::pool::Scratch;
+
+/// What [`Session::encode_request`] produced. The encoded bytes live in
+/// the session scratch — borrow them via [`Session::wire`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EncodedRequest {
+    /// A `compression::feature` frame for the decoupled path.
+    Features { stage: u16, c: u8 },
+    /// A PNG-compressed image for the cloud-only path.
+    Image { hw: u16 },
+}
+
+/// One edge session: a model binding plus the per-session scratch the
+/// encode path reuses request after request.
+pub struct Session<'a> {
+    exe: &'a Executor,
+    model: String,
+    model_id: u16,
+    /// Use the exported Pallas quant artifact (true) or the rust twin
+    /// (false). Identical numerics; the artifact path proves L1 on the
+    /// request path, the twin is faster for large sweeps.
+    pub use_pjrt_codec: bool,
+    scratch: Scratch,
+}
+
+impl<'a> Session<'a> {
+    /// Strict constructor: the model must be in the manifest (what a
+    /// deployed edge requires — it sends the id on the wire).
+    pub fn new(exe: &'a Executor, model: &str) -> Result<Self> {
+        let model_id = exe
+            .manifest()
+            .model_id(model)
+            .ok_or_else(|| anyhow!("model {model} not in manifest"))?;
+        Ok(Self::with_model_id(exe, model, model_id))
+    }
+
+    /// Lenient constructor: unknown models fall back to id 0 and fail at
+    /// run time instead (the historical `LocalPipeline` contract).
+    pub fn lenient(exe: &'a Executor, model: &str) -> Self {
+        let model_id = exe.manifest().model_id(model).unwrap_or(0);
+        Self::with_model_id(exe, model, model_id)
+    }
+
+    fn with_model_id(exe: &'a Executor, model: &str, model_id: u16) -> Self {
+        Self {
+            exe,
+            model: model.to_string(),
+            model_id,
+            use_pjrt_codec: true,
+            scratch: Scratch::new(),
+        }
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn model_id(&self) -> u16 {
+        self.model_id
+    }
+
+    pub fn executor(&self) -> &'a Executor {
+        self.exe
+    }
+
+    /// The wire bytes produced by the last [`Session::encode_request`].
+    pub fn wire(&self) -> &[u8] {
+        &self.scratch.wire
+    }
+
+    /// Run the edge half of one request: head stages, L1 quantize,
+    /// entropy-code into the session scratch. Fills the edge-side fields
+    /// of `bd` (`edge_compute`, `quantize`, `encode`); transmission and
+    /// the cloud half belong to the caller's transport.
+    pub fn encode_request(
+        &mut self,
+        sample: &Sample,
+        decision: Decision,
+        bd: &mut Breakdown,
+    ) -> Result<EncodedRequest> {
+        match decision {
+            Decision::CloudOnly => {
+                let t0 = Instant::now();
+                let hw = sample.image.shape()[1];
+                let rgb = crate::data::gen::to_rgb8(&sample.image);
+                let encoded = png::encode(&png::Image8::new(hw, hw, 3, rgb));
+                self.scratch.wire.clear();
+                self.scratch.wire.extend_from_slice(&encoded);
+                bd.encode = t0.elapsed().as_secs_f64();
+                Ok(EncodedRequest::Image { hw: hw as u16 })
+            }
+            Decision::Cut { i, c } => {
+                let mut cur = sample.image.clone();
+                for j in 1..=i {
+                    let out = self.exe.run_stage(&self.model, j, &cur)?;
+                    cur = out.tensor;
+                    bd.edge_compute += out.seconds;
+                }
+
+                // --- edge: L1 quantize ---
+                let t0 = Instant::now();
+                let Scratch { wire, values, codec, .. } = &mut self.scratch;
+                let q_pjrt;
+                let (vals, lo, hi): (&[u16], f32, f32) = if self.use_pjrt_codec {
+                    q_pjrt = self.exe.run_quant(&cur, c)?;
+                    (&q_pjrt.values, q_pjrt.lo, q_pjrt.hi)
+                } else {
+                    let (lo, hi) = quant::quantize_into(cur.data(), c, values);
+                    (&*values, lo, hi)
+                };
+                bd.quantize = t0.elapsed().as_secs_f64();
+
+                // --- edge: entropy-code to the wire frame ---
+                let t1 = Instant::now();
+                feature::encode_parts_into(vals, c, lo, hi, i as u16, self.model_id, codec, wire);
+                bd.encode = t1.elapsed().as_secs_f64();
+                Ok(EncodedRequest::Features { stage: i as u16, c })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn executor() -> Option<Executor> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Executor::new(Manifest::load(dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn encoded_frame_decodes_back() {
+        let Some(exe) = executor() else { return };
+        let mut s = Session::new(&exe, "tinyconv").unwrap();
+        s.use_pjrt_codec = false;
+        let sample = crate::data::gen::sample_image(100, 32);
+        let mut bd = Breakdown::default();
+        let req = s.encode_request(&sample, Decision::Cut { i: 1, c: 8 }, &mut bd).unwrap();
+        assert_eq!(req, EncodedRequest::Features { stage: 1, c: 8 });
+        let frame = feature::decode(s.wire()).unwrap();
+        assert_eq!(frame.stage, 1);
+        assert_eq!(frame.model, s.model_id());
+        assert!(bd.edge_compute > 0.0);
+    }
+
+    #[test]
+    fn repeated_requests_reuse_wire_buffer() {
+        let Some(exe) = executor() else { return };
+        let mut s = Session::new(&exe, "tinyconv").unwrap();
+        s.use_pjrt_codec = false;
+        let mut bd = Breakdown::default();
+        let sample = crate::data::gen::sample_image(101, 32);
+        s.encode_request(&sample, Decision::Cut { i: 1, c: 8 }, &mut bd).unwrap();
+        let first = s.wire().to_vec();
+        s.encode_request(&sample, Decision::Cut { i: 1, c: 8 }, &mut bd).unwrap();
+        assert_eq!(s.wire(), &first[..], "same request must encode identically");
+    }
+
+    #[test]
+    fn unknown_model_rejected_strictly() {
+        let Some(exe) = executor() else { return };
+        assert!(Session::new(&exe, "no-such-model").is_err());
+        assert_eq!(Session::lenient(&exe, "no-such-model").model_id(), 0);
+    }
+}

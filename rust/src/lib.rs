@@ -30,16 +30,31 @@
 //!   FMAC/FLOPS device model (§IV-A);
 //! * [`network`] — simulated channels, bandwidth traces, token-bucket
 //!   throttling, EWMA estimation;
-//! * [`coordinator`] — decision engine, edge/cloud pipelines, baselines,
-//!   adaptation controller, request router;
+//! * [`coordinator`] — decision engine, the shared edge-side
+//!   [`coordinator::session::Session`] (one implementation of the
+//!   run-stages → quantize → entropy-code path driven by both the
+//!   simulated pipeline and the TCP edge client), baselines, adaptation
+//!   controller, request router;
 //! * [`server`] — real TCP edge/cloud deployment over a throttled link;
+//!   the cloud serves connections concurrently on `util::threadpool`
+//!   with pooled per-connection scratch;
 //! * [`models`] — stage metadata + full-scale analytic FMAC tables;
 //! * [`data`] — the synthetic ILSVRC substitute (mirrors
 //!   `python/compile/data.py`);
-//! * [`metrics`] — latency histograms and breakdowns;
+//! * [`metrics`] — latency histograms, serving counters, throughput;
 //! * [`util`] — from-scratch substrates: JSON, CLI, bench harness,
-//!   property testing, threadpool (the offline vendor set has no serde/
-//!   clap/criterion/proptest/tokio).
+//!   property testing, threadpool, pooled scratch buffers
+//!   ([`util::pool`]) (the offline vendor set has no serde/clap/
+//!   criterion/proptest/tokio).
+//!
+//! The request hot path is zero-copy in steady state: `compression`
+//! exposes `*_into` APIs over borrowed buffers (`bitio::BitWriter`
+//! appends to a borrowed `Vec`, `huffman`/`feature` encode and decode
+//! into reusable scratch, `quant` has `quantize_into`/
+//! `dequantize_into`), `server::proto` reads and writes frames through
+//! caller-owned buffers, and sessions/connections hold their buffers in
+//! `util::pool::Scratch` — so the codec + proto hops perform no heap
+//! allocations once warm (asserted in `benches/pipeline_hotpath.rs`).
 
 pub mod compression;
 pub mod coordinator;

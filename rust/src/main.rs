@@ -110,7 +110,7 @@ fn run(command: &str, args: &Args) -> Result<()> {
             let exe = Executor::new(Manifest::load(&dir)?)?;
             let eng = engine(args, &exe)?;
             let model = args.get("model");
-            let pipe = LocalPipeline::new(&exe, model);
+            let mut pipe = LocalPipeline::new(&exe, model);
             let mut controller = AdaptationController::new(eng, args.get_f64("bw"));
             let mut channel = SimChannel::constant(args.get_f64("bw"));
             let mut correct = 0usize;

@@ -3,9 +3,15 @@
 //! Everything the paper reports is a latency decomposition
 //! (edge compute + transmission + cloud compute); [`Breakdown`] carries
 //! those fields per request and [`Histogram`] aggregates distributions
-//! for the server's stats endpoint and the bench harness.
+//! for the server's stats endpoint and the bench harness. The
+//! concurrent cloud server additionally uses [`SharedHistogram`]
+//! (mutex-wrapped, recorded from connection workers) and [`Throughput`]
+//! (a monotonic events-per-second meter), and the allocation-reuse side
+//! of serving is tracked by `util::pool::PoolStats`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::util::stats;
 
@@ -101,6 +107,7 @@ pub struct Counters {
     pub errors: AtomicU64,
     pub bytes_tx: AtomicU64,
     pub redecouples: AtomicU64,
+    pub connections: AtomicU64,
 }
 
 impl Counters {
@@ -116,6 +123,12 @@ impl Counters {
     pub fn inc_redecouples(&self) {
         self.redecouples.fetch_add(1, Ordering::Relaxed);
     }
+    pub fn inc_connections(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn connections(&self) -> u64 {
+        self.connections.load(Ordering::Relaxed)
+    }
     pub fn snapshot(&self) -> (u64, u64, u64, u64) {
         (
             self.requests.load(Ordering::Relaxed),
@@ -123,6 +136,54 @@ impl Counters {
             self.bytes_tx.load(Ordering::Relaxed),
             self.redecouples.load(Ordering::Relaxed),
         )
+    }
+}
+
+/// A [`Histogram`] safe to record into from many connection workers.
+/// One mutex: a record is nanoseconds next to a network hop.
+#[derive(Debug, Default)]
+pub struct SharedHistogram(Mutex<Histogram>);
+
+impl SharedHistogram {
+    pub fn record(&self, v: f64) {
+        self.0.lock().unwrap().record(v);
+    }
+
+    pub fn snapshot(&self) -> Histogram {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+/// Monotonic events-per-second meter (requests, bytes) for serving
+/// throughput reporting.
+#[derive(Debug)]
+pub struct Throughput {
+    started: Instant,
+    events: AtomicU64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self { started: Instant::now(), events: AtomicU64::new(0) }
+    }
+
+    pub fn observe(&self, n: u64) {
+        self.events.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.events.load(Ordering::Relaxed)
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64().max(1e-9);
+        self.count() as f64 / dt
     }
 }
 
@@ -156,6 +217,34 @@ mod tests {
         assert!((h.mean() - 50.5).abs() < 1e-9);
         assert!((h.percentile(50.0) - 50.5).abs() < 1.0);
         assert!(h.percentile(99.0) > 98.0);
+    }
+
+    #[test]
+    fn shared_histogram_records_concurrently() {
+        let h = std::sync::Arc::new(SharedHistogram::default());
+        let workers: Vec<_> = (0..4)
+            .map(|t| {
+                let h = std::sync::Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        h.record((t * 100 + i) as f64);
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(h.snapshot().len(), 400);
+    }
+
+    #[test]
+    fn throughput_counts_events() {
+        let t = Throughput::new();
+        t.observe(10);
+        t.observe(5);
+        assert_eq!(t.count(), 15);
+        assert!(t.per_second() > 0.0);
     }
 
     #[test]

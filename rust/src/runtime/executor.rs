@@ -174,6 +174,20 @@ impl Executor {
 
     /// Dequantize via the exported L1 Pallas kernel into `shape`.
     pub fn run_dequant(&self, q: &Quantized, shape: &[usize]) -> Result<Tensor> {
+        self.run_dequant_parts(&q.values, q.lo, q.hi, q.c, shape)
+    }
+
+    /// [`Executor::run_dequant`] over borrowed parts — lets servers keep
+    /// decoded values in a pooled buffer instead of building a
+    /// [`Quantized`] per request.
+    pub fn run_dequant_parts(
+        &self,
+        values: &[u16],
+        lo: f32,
+        hi: f32,
+        c: u8,
+        shape: &[usize],
+    ) -> Result<Tensor> {
         let file = self
             .manifest
             .codecs
@@ -181,15 +195,15 @@ impl Executor {
             .get(shape)
             .ok_or_else(|| anyhow!("no dequant artifact for shape {shape:?}"))?
             .clone();
-        let y: Vec<f32> = q.values.iter().map(|&v| v as f32).collect();
+        let y: Vec<f32> = values.iter().map(|&v| v as f32).collect();
         let yt = Tensor::new(vec![y.len()], y);
         let out = self.run(
             &file,
             &[
                 yt.to_literal(),
-                Tensor::scalar(q.lo).to_literal(),
-                Tensor::scalar(q.hi).to_literal(),
-                Tensor::scalar(q.c as f32).to_literal(),
+                Tensor::scalar(lo).to_literal(),
+                Tensor::scalar(hi).to_literal(),
+                Tensor::scalar(c as f32).to_literal(),
             ],
         )?;
         let lit = out.to_tuple1().map_err(|e| anyhow!("dequant unwrap: {e}"))?;
@@ -243,6 +257,17 @@ impl SharedExecutor {
 
     pub fn run_dequant(&self, q: &Quantized, shape: &[usize]) -> Result<Tensor> {
         self.with(|e| e.run_dequant(q, shape))
+    }
+
+    pub fn run_dequant_parts(
+        &self,
+        values: &[u16],
+        lo: f32,
+        hi: f32,
+        c: u8,
+        shape: &[usize],
+    ) -> Result<Tensor> {
+        self.with(|e| e.run_dequant_parts(values, lo, hi, c, shape))
     }
 
     pub fn manifest_clone(&self) -> Manifest {

@@ -1,45 +1,97 @@
-//! The cloud server: one thread per connection, PJRT-backed inference.
+//! The cloud server: a `util::threadpool` worker per connection,
+//! PJRT-backed inference, pooled per-connection scratch.
 //!
 //! Handles two request kinds:
 //! * `Features` — the decoupled path: decode the wire frame (its header
-//!   names model + stage + c), dequantize through the L1 artifact, run
-//!   stages `i*+1..N`, reply with logits;
+//!   names model + stage + c) into the connection's scratch, dequantize
+//!   through the L1 artifact, run stages `i*+1..N`, reply with logits;
 //! * `Image` — the cloud-only path: decode the PNG-like image, run the
 //!   full model.
 //!
+//! Concurrency model: the accept loop hands each connection to a fixed
+//! [`ThreadPool`]; when every pooled lane is parked on a long-lived
+//! connection, further connections run on dedicated overflow threads so
+//! control traffic (Stats/Shutdown) can never starve behind data
+//! connections. The
+//! PJRT executor is `Arc`-shared and serialized behind the
+//! `SharedExecutor` mutex; counters are atomics and the service-time
+//! histogram sits behind its own mutex. Every connection checks a
+//! [`Scratch`](crate::util::pool::Scratch) out of a shared
+//! [`BufPool`], so its codec + proto hops reuse warm buffers — the
+//! steady-state request performs no heap allocations in those hops.
+//!
 //! The wire frame being self-describing is what lets the edge
 //! re-decouple unilaterally — the "synchronize" step of §III-E costs
-//! nothing here.
+//! nothing here. Malformed frames get an `Error` reply instead of a
+//! dropped connection; only an unrecoverable length-prefix violation
+//! closes the stream (it can no longer be framed).
 
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::compression::{feature, png, quant};
-use crate::metrics::Counters;
+use crate::compression::feature::{self, CodecScratch};
+use crate::compression::png;
+use crate::metrics::{Counters, SharedHistogram, Throughput};
 use crate::runtime::{Manifest, SharedExecutor};
-use crate::server::proto::Frame;
+use crate::server::proto::{self, RecvFrame};
 use crate::util::json::Json;
+use crate::util::pool::{BufPool, Scratch};
+use crate::util::threadpool::ThreadPool;
+
+/// Default connection-worker count (the pooled serving lanes).
+pub const DEFAULT_WORKERS: usize = 16;
 
 pub struct CloudServer {
     exe: Arc<SharedExecutor>,
     manifest: Manifest,
     pub counters: Arc<Counters>,
+    /// Per-request service time (frame read → reply written), seconds.
+    pub service_hist: Arc<SharedHistogram>,
+    /// Requests per second since the server was constructed.
+    pub throughput: Arc<Throughput>,
     stop: Arc<AtomicBool>,
+    scratch_pool: Arc<BufPool>,
+    workers: ThreadPool,
+    worker_count: usize,
+    /// Connections currently assigned (queued or serving). When this
+    /// reaches `worker_count`, new connections overflow to dedicated
+    /// threads so control frames (Stats/Shutdown) can never starve
+    /// behind long-lived data connections parked on every worker.
+    active_conns: Arc<AtomicUsize>,
 }
 
 impl CloudServer {
     pub fn new(exe: Arc<SharedExecutor>) -> Self {
+        Self::with_workers(exe, DEFAULT_WORKERS)
+    }
+
+    /// A server whose accept loop fans out to `workers` pooled
+    /// connection workers (min 1); connections beyond that run on
+    /// dedicated overflow threads.
+    pub fn with_workers(exe: Arc<SharedExecutor>, workers: usize) -> Self {
         let manifest = exe.manifest_clone();
         Self {
             exe,
             manifest,
             counters: Arc::new(Counters::default()),
+            service_hist: Arc::new(SharedHistogram::default()),
+            throughput: Arc::new(Throughput::new()),
             stop: Arc::new(AtomicBool::new(false)),
+            scratch_pool: BufPool::new(workers.max(1)),
+            workers: ThreadPool::new(workers.max(1)),
+            worker_count: workers.max(1),
+            active_conns: Arc::new(AtomicUsize::new(0)),
         }
+    }
+
+    /// Scratch-pool counters (hit rate is the allocation-reuse metric).
+    pub fn pool_stats(&self) -> crate::util::pool::PoolStats {
+        self.scratch_pool.stats()
     }
 
     /// Bind and serve on a background thread; returns the local address
@@ -55,12 +107,34 @@ impl CloudServer {
                 }
                 match conn {
                     Ok(stream) => {
+                        me.counters.inc_connections();
                         let me2 = Arc::clone(&me);
-                        std::thread::spawn(move || {
+                        let assigned =
+                            me.active_conns.fetch_add(1, Ordering::SeqCst);
+                        let job = move || {
+                            // Decrement on all exits, including panics
+                            // (a leak here would push every later
+                            // connection onto overflow threads).
+                            struct Dec(Arc<AtomicUsize>);
+                            impl Drop for Dec {
+                                fn drop(&mut self) {
+                                    self.0.fetch_sub(1, Ordering::SeqCst);
+                                }
+                            }
+                            let _dec = Dec(Arc::clone(&me2.active_conns));
                             if let Err(e) = me2.serve_conn(stream) {
                                 crate::log_debug!("cloud", "connection ended: {e:#}");
                             }
-                        });
+                        };
+                        if assigned < me.worker_count {
+                            me.workers.submit(job);
+                        } else {
+                            // All pooled lanes are parked on long-lived
+                            // connections: overflow to a dedicated
+                            // thread so this connection (possibly a
+                            // Stats/Shutdown control frame) is served.
+                            std::thread::spawn(job);
+                        }
                     }
                     Err(e) => {
                         crate::log_warn!("cloud", "accept error: {e}");
@@ -75,114 +149,178 @@ impl CloudServer {
         stream.set_nodelay(true).ok();
         let mut writer = stream.try_clone()?;
         let mut reader = BufReader::new(stream);
+        let mut scratch = self.scratch_pool.get();
         loop {
-            let frame = match Frame::read_from(&mut reader) {
-                Ok(f) => f,
-                Err(_) => return Ok(()), // peer closed
+            let recv = match proto::read_frame_into(&mut reader, &mut scratch.frame) {
+                Ok(r) => r,
+                Err(_) => return Ok(()), // peer closed mid-frame
             };
-            match frame {
-                Frame::Features(bytes) => {
+            let kind = match recv {
+                RecvFrame::Data(k) => k,
+                RecvFrame::Eof => return Ok(()),
+                RecvFrame::Malformed { reason, resync } => {
+                    self.counters.inc_errors();
+                    proto::write_frame_raw(&mut writer, proto::KIND_ERROR, reason.as_bytes())?;
+                    if resync {
+                        continue; // stream still framed; keep serving
+                    }
+                    return Ok(()); // length prefix unusable; close
+                }
+            };
+            let t0 = Instant::now();
+            let Scratch { frame, values, floats, codec, wire } = &mut *scratch;
+            match kind {
+                proto::KIND_FEATURES => {
                     self.counters.inc_requests();
-                    self.counters.add_bytes(bytes.len() as u64);
-                    match self.handle_features(&bytes) {
-                        Ok(logits) => Frame::Logits(logits).write_to(&mut writer)?,
+                    self.throughput.observe(1);
+                    self.counters.add_bytes(frame.len() as u64);
+                    match self.handle_features(frame, codec, values, floats) {
+                        Ok(()) => {
+                            proto::write_logits_frame(&mut writer, floats, wire)?;
+                        }
                         Err(e) => {
                             self.counters.inc_errors();
-                            Frame::Error(format!("{e:#}")).write_to(&mut writer)?
+                            proto::write_frame_raw(
+                                &mut writer,
+                                proto::KIND_ERROR,
+                                format!("{e:#}").as_bytes(),
+                            )?;
                         }
-                    };
+                    }
+                    self.service_hist.record(t0.elapsed().as_secs_f64());
                 }
-                Frame::Image { model_id, hw: _, png } => {
+                proto::KIND_IMAGE => {
                     self.counters.inc_requests();
-                    self.counters.add_bytes(png.len() as u64);
-                    match self.handle_image(model_id, &png) {
-                        Ok(logits) => Frame::Logits(logits).write_to(&mut writer)?,
+                    self.throughput.observe(1);
+                    self.counters.add_bytes(frame.len() as u64);
+                    let result = if frame.len() < 4 {
+                        Err(anyhow!("short image frame"))
+                    } else {
+                        let model_id = u16::from_le_bytes([frame[0], frame[1]]);
+                        self.handle_image(model_id, &frame[4..], floats)
+                    };
+                    match result {
+                        Ok(()) => {
+                            proto::write_logits_frame(&mut writer, floats, wire)?;
+                        }
                         Err(e) => {
                             self.counters.inc_errors();
-                            Frame::Error(format!("{e:#}")).write_to(&mut writer)?
+                            proto::write_frame_raw(
+                                &mut writer,
+                                proto::KIND_ERROR,
+                                format!("{e:#}").as_bytes(),
+                            )?;
                         }
-                    };
+                    }
+                    self.service_hist.record(t0.elapsed().as_secs_f64());
                 }
-                Frame::Stats => {
-                    let (req, err, bytes, _) = self.counters.snapshot();
-                    let j = Json::obj(vec![
-                        ("requests", Json::num(req as f64)),
-                        ("errors", Json::num(err as f64)),
-                        ("bytes_rx", Json::num(bytes as f64)),
-                        ("compiled", Json::num(self.exe.cached_count() as f64)),
-                    ]);
-                    Frame::StatsReply(j.to_string().into_bytes()).write_to(&mut writer)?;
+                proto::KIND_STATS => {
+                    let json = self.stats_json();
+                    proto::write_frame_raw(&mut writer, proto::KIND_STATS_REPLY, json.as_bytes())?;
                 }
-                Frame::Probe(padding) => {
+                proto::KIND_PROBE => {
                     // Bandwidth probe: acknowledge immediately; the edge
                     // times the (throttled) upload of the padding.
-                    self.counters.add_bytes(padding.len() as u64);
-                    Frame::ProbeAck.write_to(&mut writer)?;
+                    self.counters.add_bytes(frame.len() as u64);
+                    proto::write_frame_raw(&mut writer, proto::KIND_PROBE_ACK, &[])?;
                 }
-                Frame::Shutdown => {
+                proto::KIND_SHUTDOWN => {
                     self.stop.store(true, Ordering::Relaxed);
-                    // Unblock the accept loop with a dummy connection.
+                    // The accept loop unblocks on the next connection
+                    // (`request_shutdown` makes one).
                     return Ok(());
                 }
                 other => {
-                    Frame::Error(format!("unexpected frame {:?}", other.kind()))
-                        .write_to(&mut writer)?;
+                    proto::write_frame_raw(
+                        &mut writer,
+                        proto::KIND_ERROR,
+                        format!("unexpected frame kind {other}").as_bytes(),
+                    )?;
                 }
             }
         }
     }
 
-    fn handle_features(&self, bytes: &[u8]) -> Result<Vec<f32>> {
-        let frame = feature::decode(bytes).map_err(anyhow::Error::new)?;
-        let model = self
+    fn stats_json(&self) -> String {
+        let (req, err, bytes, _) = self.counters.snapshot();
+        let ps = self.scratch_pool.stats();
+        let hist = self.service_hist.snapshot();
+        let (p50, p95) = if hist.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (hist.percentile(50.0) * 1e3, hist.percentile(95.0) * 1e3)
+        };
+        Json::obj(vec![
+            ("requests", Json::num(req as f64)),
+            ("errors", Json::num(err as f64)),
+            ("bytes_rx", Json::num(bytes as f64)),
+            ("compiled", Json::num(self.exe.cached_count() as f64)),
+            ("connections", Json::num(self.counters.connections() as f64)),
+            ("pool_hits", Json::num(ps.hits as f64)),
+            ("pool_misses", Json::num(ps.misses as f64)),
+            ("req_per_sec", Json::num(self.throughput.per_second())),
+            ("service_p50_ms", Json::num(p50)),
+            ("service_p95_ms", Json::num(p95)),
+        ])
+        .to_string()
+    }
+
+    /// Decode a feature frame and finish inference; the logits land in
+    /// `logits` (reused). All buffers are the connection's scratch.
+    fn handle_features(
+        &self,
+        bytes: &[u8],
+        ws: &mut CodecScratch,
+        values: &mut Vec<u16>,
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
+        let h = feature::decode_into(bytes, ws, values).map_err(anyhow::Error::new)?;
+        let model = &self
             .manifest
             .models
-            .get(frame.model as usize)
-            .ok_or_else(|| anyhow!("bad model id {}", frame.model))?
-            .name
-            .clone();
-        let m = self.manifest.model(&model)?;
-        let i = frame.stage as usize;
+            .get(h.model as usize)
+            .ok_or_else(|| anyhow!("bad model id {}", h.model))?
+            .name;
+        let m = self.manifest.model(model)?;
+        let i = h.stage as usize;
         if i == 0 || i > m.num_stages() {
             return Err(anyhow!("bad stage {i}"));
         }
-        let out_shape = m.stages[i - 1].out_shape.clone();
+        let out_shape = &m.stages[i - 1].out_shape;
         let n = m.num_stages();
-        let q = quant::Quantized {
-            values: frame.values,
-            lo: frame.lo,
-            hi: frame.hi,
-            c: frame.c,
-        };
         // One locked region for the whole tail keeps per-request lock
         // traffic to a single acquisition.
         self.exe.with(|e| {
-            let mut cur = e.run_dequant(&q, &out_shape)?;
+            let mut cur = e.run_dequant_parts(values, h.lo, h.hi, h.c, out_shape)?;
             for j in i + 1..=n {
-                cur = e.run_stage(&model, j, &cur)?.tensor;
+                cur = e.run_stage(model, j, &cur)?.tensor;
             }
-            Ok(cur.data().to_vec())
+            logits.clear();
+            logits.extend_from_slice(cur.data());
+            Ok(())
         })
     }
 
-    fn handle_image(&self, model_id: u16, png_bytes: &[u8]) -> Result<Vec<f32>> {
-        let model = self
+    fn handle_image(&self, model_id: u16, png_bytes: &[u8], logits: &mut Vec<f32>) -> Result<()> {
+        let model = &self
             .manifest
             .models
             .get(model_id as usize)
             .ok_or_else(|| anyhow!("bad model id {model_id}"))?
-            .name
-            .clone();
-        let m = self.manifest.model(&model)?;
+            .name;
+        let m = self.manifest.model(model)?;
         let img = png::decode(png_bytes).map_err(anyhow::Error::new)?;
         let x = crate::data::gen::from_rgb8(&img.data, m.input_shape.clone());
-        Ok(self.exe.run_full(&model, &x)?.tensor.data().to_vec())
+        let out = self.exe.run_full(model, &x)?;
+        logits.clear();
+        logits.extend_from_slice(out.tensor.data());
+        Ok(())
     }
 
     /// Ask a running server (possibly in another process) to stop.
     pub fn request_shutdown(addr: std::net::SocketAddr) {
         if let Ok(mut s) = TcpStream::connect(addr) {
-            let _ = Frame::Shutdown.write_to(&mut s);
+            let _ = proto::Frame::Shutdown.write_to(&mut s);
         }
         // One more connect unblocks the accept loop.
         let _ = TcpStream::connect(addr);

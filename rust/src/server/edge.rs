@@ -4,6 +4,13 @@
 //! `1..=i*` locally, compresses the cut feature map, ships it through a
 //! token-bucket-paced socket (the controlled uplink of the testbed), and
 //! adapts `(i*, c)` as its bandwidth estimate drifts (§III-E).
+//!
+//! The encode half runs through the shared
+//! [`coordinator::session::Session`](crate::coordinator::session::Session)
+//! — the exact code `LocalPipeline` drives over the simulated channel —
+//! and the transport uses the raw `proto` functions over the session's
+//! wire buffer plus a reusable receive buffer, so a steady-state request
+//! performs no heap allocations in the codec + proto hops.
 
 use std::io::BufReader;
 use std::net::TcpStream;
@@ -11,26 +18,28 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::compression::{feature, png};
+use crate::coordinator::session::{EncodedRequest, Session};
 use crate::coordinator::AdaptationController;
 use crate::data::gen::Sample;
 use crate::ilp::Decision;
 use crate::metrics::Breakdown;
 use crate::network::throttle::{RateHandle, ThrottledWriter};
 use crate::runtime::Executor;
-use crate::server::proto::Frame;
+use crate::server::proto::{self, Frame, RecvFrame};
 
 /// Transfers below this size are RTT/compute-dominated and excluded
 /// from bandwidth estimation.
 pub const MIN_ESTIMATE_BYTES: usize = 4096;
 
 pub struct EdgeClient<'a> {
-    exe: &'a Executor,
-    model: String,
-    model_id: u16,
+    session: Session<'a>,
     reader: BufReader<TcpStream>,
     writer: ThrottledWriter<TcpStream>,
     pub controller: AdaptationController,
+    /// Reusable receive buffer (reply payloads).
+    rx_buf: Vec<u8>,
+    /// Reusable decoded logits.
+    logits: Vec<f32>,
 }
 
 /// One served request's outcome on the edge side.
@@ -58,62 +67,45 @@ impl<'a> EdgeClient<'a> {
         // bucket would swallow whole frames and defeat the throttle
         // (§Perf log — this showed up as bimodal latencies).
         let writer = ThrottledWriter::with_burst(stream, uplink, 2048);
-        let model_id = exe
-            .manifest()
-            .model_id(model)
-            .ok_or_else(|| anyhow!("model {model} not in manifest"))?;
-        Ok(Self { exe, model: model.to_string(), model_id, reader, writer, controller })
+        let session = Session::new(exe, model)?;
+        Ok(Self { session, reader, writer, controller, rx_buf: Vec::new(), logits: Vec::new() })
     }
 
     /// Serve one request end-to-end; blocks for the cloud reply.
     pub fn infer(&mut self, sample: &Sample) -> Result<EdgeResult> {
         let plan = self.controller.plan().clone();
         let mut bd = Breakdown::default();
-        let (frame, sent_decision) = match plan.decision {
-            Decision::CloudOnly => {
-                let t0 = Instant::now();
-                let hw = sample.image.shape()[1];
-                let rgb = crate::data::gen::to_rgb8(&sample.image);
-                let wire = png::encode(&png::Image8::new(hw, hw, 3, rgb));
-                bd.encode = t0.elapsed().as_secs_f64();
-                (
-                    Frame::Image { model_id: self.model_id, hw: hw as u16, png: wire },
-                    Decision::CloudOnly,
-                )
-            }
-            Decision::Cut { i, c } => {
-                let mut cur = sample.image.clone();
-                for j in 1..=i {
-                    let out = self.exe.run_stage(&self.model, j, &cur)?;
-                    cur = out.tensor;
-                    bd.edge_compute += out.seconds;
-                }
-                let t0 = Instant::now();
-                let q = self.exe.run_quant(&cur, c)?;
-                bd.quantize = t0.elapsed().as_secs_f64();
-                let t1 = Instant::now();
-                let wire = feature::encode(&q, i as u16, self.model_id);
-                bd.encode = t1.elapsed().as_secs_f64();
-                (Frame::Features(wire), Decision::Cut { i, c })
-            }
-        };
+        let req = self.session.encode_request(sample, plan.decision, &mut bd)?;
 
         // Transmit through the paced socket and await the reply.
         let t2 = Instant::now();
-        let sent = frame.write_to(&mut self.writer)?;
+        let sent = match req {
+            EncodedRequest::Features { .. } => {
+                proto::write_frame_raw(&mut self.writer, proto::KIND_FEATURES, self.session.wire())?
+            }
+            EncodedRequest::Image { hw } => {
+                let mut head = [0u8; 4];
+                head[..2].copy_from_slice(&self.session.model_id().to_le_bytes());
+                head[2..].copy_from_slice(&hw.to_le_bytes());
+                proto::write_frame_parts(&mut self.writer, proto::KIND_IMAGE, &head, self.session.wire())?
+            }
+        };
         bd.tx_bytes = sent;
-        let reply = Frame::read_from(&mut self.reader)?;
+        let kind = self.read_reply()?;
         // Transmit time ≈ send + queueing; the cloud compute is inside
         // this round trip too, but at our throttled rates (≤ a few MB/s)
         // the wire dominates by an order of magnitude.
         bd.transmit = t2.elapsed().as_secs_f64();
 
-        let logits = match reply {
-            Frame::Logits(v) => v,
-            Frame::Error(e) => return Err(anyhow!("cloud error: {e}")),
-            other => return Err(anyhow!("unexpected reply kind {}", other.kind())),
-        };
-        let prediction = logits
+        match kind {
+            proto::KIND_LOGITS => proto::parse_logits_into(&self.rx_buf, &mut self.logits)?,
+            proto::KIND_ERROR => {
+                return Err(anyhow!("cloud error: {}", String::from_utf8_lossy(&self.rx_buf)))
+            }
+            k => return Err(anyhow!("unexpected reply kind {k}")),
+        }
+        let prediction = self
+            .logits
             .iter()
             .enumerate()
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
@@ -134,23 +126,33 @@ impl<'a> EdgeClient<'a> {
         Ok(EdgeResult {
             prediction,
             correct: prediction == sample.label,
-            decision: sent_decision,
+            decision: plan.decision,
             breakdown: bd,
             replanned,
         })
     }
 
+    /// Read one reply frame into the reusable receive buffer; returns
+    /// its kind.
+    fn read_reply(&mut self) -> Result<u8> {
+        match proto::read_frame_into(&mut self.reader, &mut self.rx_buf)? {
+            RecvFrame::Data(k) => Ok(k),
+            RecvFrame::Eof => Err(anyhow!("cloud closed the connection")),
+            RecvFrame::Malformed { reason, .. } => Err(anyhow!("malformed reply: {reason}")),
+        }
+    }
+
     /// Active bandwidth probe: upload `bytes` of padding through the
     /// throttled socket and feed the observed throughput to the
     /// adaptation controller. Used when the current plan's frames are
-    /// too small to estimate from (e.g. logits-only cuts); returns the
-    /// new plan when the probe triggered a re-decoupling.
+    /// too small to estimate from (e.g. logits-only cuts); returns
+    /// whether the probe triggered a re-decoupling.
     pub fn probe_bandwidth(&mut self, bytes: usize) -> Result<bool> {
         let t0 = Instant::now();
         let sent = Frame::Probe(vec![0xAB; bytes]).write_to(&mut self.writer)?;
-        match Frame::read_from(&mut self.reader)? {
-            Frame::ProbeAck => {}
-            other => return Err(anyhow!("unexpected probe reply {}", other.kind())),
+        match self.read_reply()? {
+            proto::KIND_PROBE_ACK => {}
+            k => return Err(anyhow!("unexpected probe reply {k}")),
         }
         let dt = t0.elapsed().as_secs_f64().max(1e-9);
         Ok(self.controller.observe_transfer(sent, dt).is_some())
@@ -159,9 +161,9 @@ impl<'a> EdgeClient<'a> {
     /// Query the cloud's stats endpoint.
     pub fn stats(&mut self) -> Result<String> {
         Frame::Stats.write_to(&mut self.writer)?;
-        match Frame::read_from(&mut self.reader)? {
-            Frame::StatsReply(b) => Ok(String::from_utf8_lossy(&b).into_owned()),
-            other => Err(anyhow!("unexpected reply {}", other.kind())),
+        match self.read_reply()? {
+            proto::KIND_STATS_REPLY => Ok(String::from_utf8_lossy(&self.rx_buf).into_owned()),
+            k => Err(anyhow!("unexpected reply {k}")),
         }
     }
 }
@@ -216,6 +218,7 @@ mod tests {
         }
         let stats = edge.stats().unwrap();
         assert!(stats.contains("\"requests\""), "stats: {stats}");
+        assert!(stats.contains("\"pool_hits\""), "stats: {stats}");
         CloudServer::request_shutdown(addr);
     }
 }

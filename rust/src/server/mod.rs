@@ -2,11 +2,15 @@
 //! substrate, §IV-A, on one host with a token-bucket-throttled uplink).
 //!
 //! * [`proto`] — length-prefixed wire protocol shared by both ends;
-//! * [`cloud`] — the cloud server: accepts connections, dequantizes
-//!   feature frames (L1 dequant artifact) and finishes inference, or
-//!   runs the full model on uploaded images;
-//! * [`edge`] — the edge client: runs the head stages, quantizes,
-//!   entropy-codes, ships frames through the throttled socket, and
+//!   raw zero-copy read/write over caller-owned buffers plus a typed
+//!   [`proto::Frame`] wrapper;
+//! * [`cloud`] — the cloud server: a threadpool worker per connection,
+//!   pooled per-connection scratch, dequantizes feature frames (L1
+//!   dequant artifact) and finishes inference, or runs the full model
+//!   on uploaded images;
+//! * [`edge`] — the edge client: drives the shared
+//!   `coordinator::session::Session` (head stages, quantize,
+//!   entropy-code), ships frames through the throttled socket, and
 //!   re-decouples as its bandwidth estimate drifts.
 
 pub mod cloud;

@@ -10,6 +10,19 @@
 //! * `Logits` — `[count u16][count × f32]` response;
 //! * `Stats` / `StatsReply` — queries the cloud's counters;
 //! * `Shutdown` — graceful server stop (tests).
+//!
+//! Two API levels:
+//!
+//! * the raw functions ([`read_frame_into`], [`write_frame_raw`],
+//!   [`write_frame_parts`], [`write_logits_frame`]) move borrowed bytes
+//!   in and out of caller-owned buffers — the serving hot path; zero
+//!   allocations once the connection's buffer is warm;
+//! * the typed [`Frame`] enum wraps them for tests, tools and cold
+//!   paths.
+//!
+//! Malformed input (oversized length, unknown kind) is reported as data
+//! — [`RecvFrame::Malformed`] / [`Frame::Error`] — rather than an `Err`
+//! that tears down the connection; only genuine I/O failures are errors.
 
 use std::io::{Read, Write};
 
@@ -25,9 +38,126 @@ pub const KIND_ERROR: u8 = 7;
 pub const KIND_PROBE: u8 = 8;
 pub const KIND_PROBE_ACK: u8 = 9;
 
-/// Hard cap on frame size (a 224²·512-channel f32 map is ~100 MB; our
-/// frames are far smaller — reject anything absurd).
-pub const MAX_FRAME: usize = 256 * 1024 * 1024;
+/// Hard cap on frame size. Our largest legitimate payload is a VGG
+/// stage-1 feature map (224·224·64 values) bit-packed at c=16 ≈ 6.4 MB;
+/// 16 MB leaves headroom without letting a corrupt length prefix commit
+/// us to a quarter-gigabyte read (the seed cap was 256 MB).
+pub const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// Outcome of [`read_frame_into`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RecvFrame {
+    /// A well-formed frame of this kind; the payload bytes are in the
+    /// caller's buffer.
+    Data(u8),
+    /// Protocol violation. `resync` says whether the stream is still
+    /// aligned on a frame boundary (unknown kind: payload was consumed,
+    /// keep serving) or not (bad length prefix: reply then close).
+    Malformed { reason: &'static str, resync: bool },
+    /// Clean EOF before the first byte of a new frame.
+    Eof,
+}
+
+/// `read_exact` that distinguishes clean EOF at a frame boundary
+/// (returns `Ok(false)`) from truncation mid-read (an error).
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        let n = r.read(&mut buf[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(false);
+            }
+            return Err(anyhow!("connection closed mid-frame"));
+        }
+        got += n;
+    }
+    Ok(true)
+}
+
+/// Read one frame into `buf` (cleared and reused — the connection's
+/// receive path allocates nothing once the buffer is warm). On success
+/// `buf` holds the payload and the kind byte is returned.
+pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<RecvFrame> {
+    let mut lenb = [0u8; 4];
+    if !read_exact_or_eof(r, &mut lenb)? {
+        return Ok(RecvFrame::Eof);
+    }
+    let len = u32::from_le_bytes(lenb) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Ok(RecvFrame::Malformed { reason: "bad frame length", resync: false });
+    }
+    let mut kind = [0u8; 1];
+    r.read_exact(&mut kind)?;
+    buf.clear();
+    // `take` + `read_to_end` appends straight into the reused capacity —
+    // no zero-fill of up to MAX_FRAME bytes that `resize` would memset
+    // only for `read_exact` to overwrite.
+    let want = (len - 1) as u64;
+    let got = r.by_ref().take(want).read_to_end(buf)?;
+    if (got as u64) < want {
+        return Err(anyhow!("connection closed mid-frame"));
+    }
+    if !(KIND_FEATURES..=KIND_PROBE_ACK).contains(&kind[0]) {
+        return Ok(RecvFrame::Malformed { reason: "unknown frame kind", resync: true });
+    }
+    Ok(RecvFrame::Data(kind[0]))
+}
+
+/// Write one frame whose payload is `head` followed by `body` (lets the
+/// Image path prepend its 4-byte header without assembling a payload).
+pub fn write_frame_parts(w: &mut impl Write, kind: u8, head: &[u8], body: &[u8]) -> Result<usize> {
+    let payload_len = head.len() + body.len();
+    if payload_len + 1 > MAX_FRAME {
+        return Err(anyhow!("frame too large: {payload_len} bytes"));
+    }
+    let len = (payload_len + 1) as u32;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&[kind])?;
+    if !head.is_empty() {
+        w.write_all(head)?;
+    }
+    if !body.is_empty() {
+        w.write_all(body)?;
+    }
+    w.flush()?;
+    Ok(4 + 1 + payload_len)
+}
+
+/// Write one frame from a borrowed payload (no clone, no staging Vec).
+pub fn write_frame_raw(w: &mut impl Write, kind: u8, payload: &[u8]) -> Result<usize> {
+    write_frame_parts(w, kind, &[], payload)
+}
+
+/// Serialize `logits` into `scratch` (reused) and ship a Logits frame.
+pub fn write_logits_frame(w: &mut impl Write, logits: &[f32], scratch: &mut Vec<u8>) -> Result<usize> {
+    if logits.len() > u16::MAX as usize {
+        return Err(anyhow!("too many logits: {}", logits.len()));
+    }
+    scratch.clear();
+    scratch.extend_from_slice(&(logits.len() as u16).to_le_bytes());
+    for x in logits {
+        scratch.extend_from_slice(&x.to_le_bytes());
+    }
+    write_frame_raw(w, KIND_LOGITS, scratch)
+}
+
+/// Parse a Logits payload into `out` (cleared, capacity reused).
+pub fn parse_logits_into(payload: &[u8], out: &mut Vec<f32>) -> Result<()> {
+    if payload.len() < 2 {
+        return Err(anyhow!("short logits frame"));
+    }
+    let n = u16::from_le_bytes([payload[0], payload[1]]) as usize;
+    if payload.len() != 2 + n * 4 {
+        return Err(anyhow!("logits length mismatch"));
+    }
+    out.clear();
+    out.reserve(n);
+    for i in 0..n {
+        out.push(f32::from_le_bytes(payload[2 + i * 4..6 + i * 4].try_into().unwrap()));
+    }
+    Ok(())
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
@@ -61,48 +191,30 @@ impl Frame {
     }
 
     pub fn write_to(&self, w: &mut impl Write) -> Result<usize> {
-        let payload: Vec<u8> = match self {
-            Frame::Features(b) => b.clone(),
+        match self {
+            Frame::Features(b) => write_frame_raw(w, KIND_FEATURES, b),
             Frame::Image { model_id, hw, png } => {
-                let mut p = Vec::with_capacity(4 + png.len());
-                p.extend_from_slice(&model_id.to_le_bytes());
-                p.extend_from_slice(&hw.to_le_bytes());
-                p.extend_from_slice(png);
-                p
+                let mut head = [0u8; 4];
+                head[..2].copy_from_slice(&model_id.to_le_bytes());
+                head[2..].copy_from_slice(&hw.to_le_bytes());
+                write_frame_parts(w, KIND_IMAGE, &head, png)
             }
             Frame::Logits(v) => {
-                let mut p = Vec::with_capacity(2 + v.len() * 4);
-                p.extend_from_slice(&(v.len() as u16).to_le_bytes());
-                for x in v {
-                    p.extend_from_slice(&x.to_le_bytes());
-                }
-                p
+                let mut scratch = Vec::with_capacity(2 + v.len() * 4);
+                write_logits_frame(w, v, &mut scratch)
             }
-            Frame::Stats | Frame::Shutdown | Frame::ProbeAck => Vec::new(),
-            Frame::StatsReply(b) => b.clone(),
-            Frame::Error(s) => s.as_bytes().to_vec(),
-            Frame::Probe(b) => b.clone(),
-        };
-        let len = (payload.len() + 1) as u32;
-        w.write_all(&len.to_le_bytes())?;
-        w.write_all(&[self.kind()])?;
-        w.write_all(&payload)?;
-        w.flush()?;
-        Ok(4 + 1 + payload.len())
+            Frame::Stats => write_frame_raw(w, KIND_STATS, &[]),
+            Frame::StatsReply(b) => write_frame_raw(w, KIND_STATS_REPLY, b),
+            Frame::Shutdown => write_frame_raw(w, KIND_SHUTDOWN, &[]),
+            Frame::Error(s) => write_frame_raw(w, KIND_ERROR, s.as_bytes()),
+            Frame::Probe(b) => write_frame_raw(w, KIND_PROBE, b),
+            Frame::ProbeAck => write_frame_raw(w, KIND_PROBE_ACK, &[]),
+        }
     }
 
-    pub fn read_from(r: &mut impl Read) -> Result<Frame> {
-        let mut lenb = [0u8; 4];
-        r.read_exact(&mut lenb)?;
-        let len = u32::from_le_bytes(lenb) as usize;
-        if len == 0 || len > MAX_FRAME {
-            return Err(anyhow!("bad frame length {len}"));
-        }
-        let mut kind = [0u8; 1];
-        r.read_exact(&mut kind)?;
-        let mut payload = vec![0u8; len - 1];
-        r.read_exact(&mut payload)?;
-        Ok(match kind[0] {
+    /// Parse a payload read by [`read_frame_into`] into a typed frame.
+    pub fn parse(kind: u8, payload: Vec<u8>) -> Result<Frame> {
+        Ok(match kind {
             KIND_FEATURES => Frame::Features(payload),
             KIND_IMAGE => {
                 if payload.len() < 4 {
@@ -113,20 +225,8 @@ impl Frame {
                 Frame::Image { model_id, hw, png: payload[4..].to_vec() }
             }
             KIND_LOGITS => {
-                if payload.len() < 2 {
-                    return Err(anyhow!("short logits frame"));
-                }
-                let n = u16::from_le_bytes([payload[0], payload[1]]) as usize;
-                if payload.len() != 2 + n * 4 {
-                    return Err(anyhow!("logits length mismatch"));
-                }
-                let v = (0..n)
-                    .map(|i| {
-                        f32::from_le_bytes(
-                            payload[2 + i * 4..6 + i * 4].try_into().unwrap(),
-                        )
-                    })
-                    .collect();
+                let mut v = Vec::new();
+                parse_logits_into(&payload, &mut v)?;
                 Frame::Logits(v)
             }
             KIND_STATS => Frame::Stats,
@@ -137,6 +237,19 @@ impl Frame {
             KIND_PROBE_ACK => Frame::ProbeAck,
             k => return Err(anyhow!("unknown frame kind {k}")),
         })
+    }
+
+    /// Typed read. Malformed frames (bad length prefix, unknown kind)
+    /// come back as `Ok(Frame::Error(..))` so a server can answer and —
+    /// where the stream is still aligned — keep the connection; only
+    /// I/O failures and EOF are `Err`.
+    pub fn read_from(r: &mut impl Read) -> Result<Frame> {
+        let mut buf = Vec::new();
+        match read_frame_into(r, &mut buf)? {
+            RecvFrame::Eof => Err(anyhow!("connection closed")),
+            RecvFrame::Malformed { reason, .. } => Ok(Frame::Error(reason.to_string())),
+            RecvFrame::Data(kind) => Frame::parse(kind, buf),
+        }
     }
 }
 
@@ -161,6 +274,8 @@ mod tests {
         roundtrip(Frame::StatsReply(b"{}".to_vec()));
         roundtrip(Frame::Shutdown);
         roundtrip(Frame::Error("boom".into()));
+        roundtrip(Frame::Probe(vec![0xAB; 64]));
+        roundtrip(Frame::ProbeAck);
     }
 
     #[test]
@@ -174,11 +289,43 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_length_rejected() {
+    fn corrupt_length_reported_not_fatal() {
         let mut buf = Vec::new();
         Frame::Stats.write_to(&mut buf).unwrap();
         buf[0..4].copy_from_slice(&(u32::MAX).to_le_bytes());
-        assert!(Frame::read_from(&mut &buf[..]).is_err());
+        // The bad prefix is data (an Error frame), not a connection-fatal Err.
+        assert!(matches!(Frame::read_from(&mut &buf[..]).unwrap(), Frame::Error(_)));
+        let mut raw = Vec::new();
+        assert_eq!(
+            read_frame_into(&mut &buf[..], &mut raw).unwrap(),
+            RecvFrame::Malformed { reason: "bad frame length", resync: false }
+        );
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_reading() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&((MAX_FRAME as u32) + 1).to_le_bytes());
+        buf.push(KIND_STATS);
+        let mut raw = Vec::new();
+        let r = read_frame_into(&mut &buf[..], &mut raw).unwrap();
+        assert!(matches!(r, RecvFrame::Malformed { resync: false, .. }));
+        assert!(raw.is_empty(), "nothing may be buffered for an oversized frame");
+    }
+
+    #[test]
+    fn unknown_kind_consumes_payload_and_resyncs() {
+        let mut buf = Vec::new();
+        write_frame_raw(&mut buf, 200, &[1, 2, 3]).unwrap();
+        Frame::Stats.write_to(&mut buf).unwrap();
+        let mut r = &buf[..];
+        let mut raw = Vec::new();
+        assert_eq!(
+            read_frame_into(&mut r, &mut raw).unwrap(),
+            RecvFrame::Malformed { reason: "unknown frame kind", resync: true }
+        );
+        // The stream is still aligned: the next frame parses cleanly.
+        assert_eq!(read_frame_into(&mut r, &mut raw).unwrap(), RecvFrame::Data(KIND_STATS));
     }
 
     #[test]
@@ -186,5 +333,48 @@ mod tests {
         let mut buf = Vec::new();
         Frame::Features(vec![0; 50]).write_to(&mut buf).unwrap();
         assert!(Frame::read_from(&mut &buf[..10]).is_err());
+    }
+
+    #[test]
+    fn eof_at_boundary_is_clean() {
+        let empty: &[u8] = &[];
+        let mut raw = Vec::new();
+        assert_eq!(read_frame_into(&mut &empty[..], &mut raw).unwrap(), RecvFrame::Eof);
+    }
+
+    #[test]
+    fn raw_write_matches_typed_write() {
+        let payload = vec![7u8; 33];
+        let mut typed = Vec::new();
+        Frame::Features(payload.clone()).write_to(&mut typed).unwrap();
+        let mut raw = Vec::new();
+        let n = write_frame_raw(&mut raw, KIND_FEATURES, &payload).unwrap();
+        assert_eq!(raw, typed);
+        assert_eq!(n, raw.len());
+
+        let logits = vec![0.5f32, -1.25, 3.75];
+        let mut typed = Vec::new();
+        Frame::Logits(logits.clone()).write_to(&mut typed).unwrap();
+        let mut scratch = Vec::new();
+        let mut raw = Vec::new();
+        write_logits_frame(&mut raw, &logits, &mut scratch).unwrap();
+        assert_eq!(raw, typed);
+        let mut parsed = Vec::new();
+        parse_logits_into(&scratch, &mut parsed).unwrap();
+        assert_eq!(parsed, logits);
+    }
+
+    #[test]
+    fn read_into_reuses_buffer() {
+        let mut stream = Vec::new();
+        Frame::Features(vec![1; 1000]).write_to(&mut stream).unwrap();
+        Frame::Features(vec![2; 10]).write_to(&mut stream).unwrap();
+        let mut r = &stream[..];
+        let mut buf = Vec::new();
+        assert_eq!(read_frame_into(&mut r, &mut buf).unwrap(), RecvFrame::Data(KIND_FEATURES));
+        let cap = buf.capacity();
+        assert_eq!(read_frame_into(&mut r, &mut buf).unwrap(), RecvFrame::Data(KIND_FEATURES));
+        assert_eq!(buf, vec![2; 10]);
+        assert_eq!(buf.capacity(), cap, "second read must reuse the first read's buffer");
     }
 }

@@ -1,0 +1,244 @@
+//! Pooled per-session scratch buffers for the request hot path.
+//!
+//! Every hop of the decoupled request path (quantize → entropy-code →
+//! proto frame → decode) used to allocate fresh `Vec`s per request. A
+//! [`Scratch`] bundles the reusable buffers one session or connection
+//! needs; a [`BufPool`] hands them out RAII-style ([`PooledScratch`]
+//! returns its scratch on drop) so short-lived connections amortize
+//! buffer growth across each other. Hit/miss counters feed the serving
+//! metrics and the zero-allocation assertion in
+//! `benches/pipeline_hotpath.rs`.
+//!
+//! Locking is one uncontended mutex around the free list — check-out /
+//! check-in happen once per *connection*, not per request, so this is
+//! nowhere near the hot path.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::compression::feature::CodecScratch;
+
+/// The reusable buffers one session/connection owns. Field roles follow
+/// the request path: `wire` holds the outgoing encoded frame, `frame`
+/// the incoming proto payload, `values` the (de)quantized integers,
+/// `floats` dequantized activations or logits, and `codec` the entropy
+/// coder's rebuildable tables.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    pub wire: Vec<u8>,
+    pub frame: Vec<u8>,
+    pub values: Vec<u16>,
+    pub floats: Vec<f32>,
+    pub codec: CodecScratch,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset contents, keep capacity (what makes reuse worthwhile).
+    pub fn clear(&mut self) {
+        self.wire.clear();
+        self.frame.clear();
+        self.values.clear();
+        self.floats.clear();
+    }
+
+    /// Bytes currently reserved across the plain buffers (capacity
+    /// telemetry for the stats endpoint).
+    pub fn reserved_bytes(&self) -> usize {
+        self.wire.capacity()
+            + self.frame.capacity()
+            + self.values.capacity() * 2
+            + self.floats.capacity() * 4
+    }
+}
+
+/// Point-in-time pool counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `get()` satisfied from the free list (a warm scratch).
+    pub hits: u64,
+    /// `get()` that had to construct a fresh scratch.
+    pub misses: u64,
+    /// Scratches checked back in (drops beyond `max_idle` are not).
+    pub returned: u64,
+    /// Free-list length right now.
+    pub idle: usize,
+}
+
+impl PoolStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A shared pool of [`Scratch`] buffers.
+#[derive(Debug)]
+pub struct BufPool {
+    free: Mutex<Vec<Scratch>>,
+    max_idle: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    returned: AtomicU64,
+}
+
+impl BufPool {
+    /// A pool keeping at most `max_idle` warm scratches; excess returns
+    /// are dropped so one burst does not pin memory forever.
+    pub fn new(max_idle: usize) -> Arc<Self> {
+        Arc::new(Self {
+            free: Mutex::new(Vec::new()),
+            max_idle: max_idle.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            returned: AtomicU64::new(0),
+        })
+    }
+
+    /// Check out a scratch; it returns to the pool when dropped.
+    pub fn get(self: &Arc<Self>) -> PooledScratch {
+        let reused = self.free.lock().unwrap().pop();
+        let scratch = match reused {
+            Some(s) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                s
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Scratch::new()
+            }
+        };
+        PooledScratch { scratch: Some(scratch), pool: Arc::clone(self) }
+    }
+
+    fn put(&self, mut s: Scratch) {
+        s.clear();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_idle {
+            free.push(s);
+            self.returned.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            returned: self.returned.load(Ordering::Relaxed),
+            idle: self.free.lock().unwrap().len(),
+        }
+    }
+}
+
+/// RAII guard over a checked-out [`Scratch`].
+pub struct PooledScratch {
+    scratch: Option<Scratch>,
+    pool: Arc<BufPool>,
+}
+
+impl PooledScratch {
+    /// Keep the scratch permanently (it will not return to the pool).
+    pub fn detach(mut self) -> Scratch {
+        self.scratch.take().expect("scratch present until drop")
+    }
+}
+
+impl Deref for PooledScratch {
+    type Target = Scratch;
+    fn deref(&self) -> &Scratch {
+        self.scratch.as_ref().expect("scratch present until drop")
+    }
+}
+
+impl DerefMut for PooledScratch {
+    fn deref_mut(&mut self) -> &mut Scratch {
+        self.scratch.as_mut().expect("scratch present until drop")
+    }
+}
+
+impl Drop for PooledScratch {
+    fn drop(&mut self) {
+        if let Some(s) = self.scratch.take() {
+            self.pool.put(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_returns_to_pool_and_keeps_capacity() {
+        let pool = BufPool::new(4);
+        {
+            let mut s = pool.get();
+            s.wire.reserve(4096);
+            s.values.extend_from_slice(&[1, 2, 3]);
+        }
+        let s = pool.get();
+        assert!(s.wire.capacity() >= 4096, "capacity not retained");
+        assert!(s.values.is_empty(), "stale contents not cleared");
+        let st = pool.stats();
+        assert_eq!((st.hits, st.misses, st.returned), (1, 1, 1));
+    }
+
+    #[test]
+    fn max_idle_bounds_free_list() {
+        let pool = BufPool::new(2);
+        let all: Vec<_> = (0..5).map(|_| pool.get()).collect();
+        drop(all);
+        let st = pool.stats();
+        assert_eq!(st.idle, 2);
+        assert_eq!(st.misses, 5);
+        assert_eq!(st.returned, 2);
+    }
+
+    #[test]
+    fn detach_keeps_scratch_out() {
+        let pool = BufPool::new(4);
+        let s = pool.get().detach();
+        drop(s);
+        assert_eq!(pool.stats().idle, 0);
+    }
+
+    #[test]
+    fn concurrent_checkout_is_consistent() {
+        let pool = BufPool::new(16);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        let mut s = pool.get();
+                        s.floats.push(1.0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let st = pool.stats();
+        assert_eq!(st.hits + st.misses, 800);
+        assert!(st.idle <= 16);
+    }
+
+    #[test]
+    fn hit_rate_steady_state_is_one() {
+        let pool = BufPool::new(2);
+        drop(pool.get()); // miss, warms the pool
+        for _ in 0..99 {
+            drop(pool.get()); // all hits
+        }
+        assert!(pool.stats().hit_rate() > 0.98);
+    }
+}

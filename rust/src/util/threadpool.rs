@@ -46,7 +46,12 @@ impl ThreadPool {
                             g = q.cv.wait(g).unwrap();
                         }
                     };
-                    job();
+                    // A panicking job must neither kill the worker nor
+                    // leave `wait_idle` hanging on its in-flight count —
+                    // the cloud server runs whole connections as jobs.
+                    if std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_err() {
+                        crate::log_warn!("threadpool", "job panicked; worker continues");
+                    }
                     let (lock, cv) = &*fl;
                     let mut n = lock.lock().unwrap();
                     *n -= 1;
@@ -154,6 +159,21 @@ mod tests {
         let pool = ThreadPool::new(8);
         let out = pool.par_map((0..50).collect::<Vec<_>>(), |x| x * x);
         assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_job_does_not_poison_pool() {
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicUsize::new(0));
+        pool.submit(|| panic!("boom"));
+        for _ in 0..10 {
+            let d = Arc::clone(&done);
+            pool.submit(move || {
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle(); // must not hang
+        assert_eq!(done.load(Ordering::SeqCst), 10);
     }
 
     #[test]

@@ -84,7 +84,7 @@ fn jalad_beats_baselines_at_low_bandwidth() {
     let bw = 30_000.0; // 30 KB/s — a poor uplink
     let plan = engine.decide(bw);
 
-    let pipe = LocalPipeline::new(&exe, model);
+    let mut pipe = LocalPipeline::new(&exe, model);
     let mut total_jalad = 0.0;
     let mut total_png = 0.0;
     let mut total_origin = 0.0;
@@ -129,7 +129,7 @@ fn accuracy_bound_holds_end_to_end() {
         DecisionEngine::new(model, tables, latency, Scale::Measured, delta).unwrap();
     let plan = engine.decide(50_000.0);
 
-    let pipe = LocalPipeline::new(&exe, model);
+    let mut pipe = LocalPipeline::new(&exe, model);
     let mut ch = SimChannel::constant(50_000.0);
     let n = 24;
     let mut correct = 0;

@@ -59,6 +59,17 @@ fn concurrent_clients_get_correct_answers() {
     let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
     // tinyconv is ~99% accurate; 24 requests should be nearly all right.
     assert!(total >= 20, "only {total}/24 correct under concurrency");
+
+    // Stats must be consistent after concurrent per-connection serving:
+    // 4 clients × 6 requests, no drops, no double counts.
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    Frame::Stats.write_to(&mut s).unwrap();
+    let reply = Frame::read_from(&mut s).unwrap();
+    let Frame::StatsReply(b) = reply else { panic!("unexpected reply {reply:?}") };
+    let j = jalad::util::json::Json::parse(&String::from_utf8_lossy(&b)).unwrap();
+    assert_eq!(j.get("requests").and_then(|v| v.as_u64()), Some(24), "stats: {j:?}");
+    let conns = j.get("connections").and_then(|v| v.as_u64()).unwrap_or(0);
+    assert!(conns >= 5, "expected ≥5 accepted connections, saw {conns}");
     CloudServer::request_shutdown(addr);
 }
 

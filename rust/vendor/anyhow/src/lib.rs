@@ -1,0 +1,200 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! This container does not vendor the real `anyhow`, so this crate
+//! implements the exact subset the workspace uses: the [`Error`] type
+//! (context chain, `{:#}` alternate formatting), the [`anyhow!`] macro,
+//! [`Result`], the [`Context`] extension trait, and `?`-conversion from
+//! any `std::error::Error`. Behavior mirrors the real crate closely
+//! enough that swapping the genuine dependency back in is a one-line
+//! `Cargo.toml` change.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` (the error type defaults like the real crate).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed error with an optional cause chain.
+///
+/// Like the real `anyhow::Error`, this deliberately does **not**
+/// implement `std::error::Error` — that is what allows the blanket
+/// `From<E: std::error::Error>` conversion powering `?`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Wrap a standard error, preserving its `source()` chain as
+    /// formatted strings.
+    pub fn new<E>(e: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn chain(e: &(dyn std::error::Error + 'static)) -> Option<Box<Error>> {
+            e.source().map(|s| Box::new(Error { msg: s.to_string(), source: chain(s) }))
+        }
+        Error { msg: e.to_string(), source: chain(&e) }
+    }
+
+    /// An error from a bare message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` as the cause of a new, higher-level message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain outermost-first as strings.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut items = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            items.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        items.into_iter()
+    }
+
+    /// The innermost message in the chain.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(s) = cur.source.as_deref() {
+            cur = s;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain: "outer: mid: inner".
+            write!(f, "{}", self.msg)?;
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::new(e)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (the `anyhow!` macro).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an error (the `bail!` macro).
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Leaf;
+    impl fmt::Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "leaf failure")
+        }
+    }
+    impl std::error::Error for Leaf {}
+
+    #[test]
+    fn macro_formats() {
+        let x = 7;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 7");
+        let e = anyhow!("{} then {}", 1, 2);
+        assert_eq!(e.to_string(), "1 then 2");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(Leaf)?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "leaf failure");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_format() {
+        let e: Result<()> = Err(Error::new(Leaf));
+        let e = e.context("while testing").unwrap_err();
+        assert_eq!(format!("{e}"), "while testing");
+        assert_eq!(format!("{e:#}"), "while testing: leaf failure");
+        assert_eq!(e.root_cause(), "leaf failure");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, Leaf> = Ok(3);
+        let v = ok.with_context(|| "never evaluated").unwrap();
+        assert_eq!(v, 3);
+    }
+}

@@ -1,0 +1,223 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real `xla_extension`-backed crate is not present in this
+//! container, so this stub type-checks every call site in
+//! `jalad::runtime` while reporting PJRT as unavailable:
+//! [`PjRtClient::cpu`] returns an error, which makes every
+//! artifact-gated code path skip cleanly (they all probe for
+//! `artifacts/manifest.json` or an executor before running).
+//!
+//! [`Literal`] is functional — it really stores shape + bytes — because
+//! host-side tensor round-trips (`Tensor::to_literal` /
+//! `Tensor::from_literal`) are exercised by unit tests that need no
+//! PJRT runtime. Compilation and execution entry points are the only
+//! stubs that always fail.
+
+use std::fmt;
+
+/// Error type matching the real crate's role: `Display` for message
+/// formatting, `std::error::Error` for `?` conversion into `anyhow`.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable() -> XlaError {
+    XlaError("xla stub: PJRT runtime not available in this build".to_string())
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        match self {
+            ElementType::F32 => 4,
+        }
+    }
+}
+
+/// Element types [`Literal::to_vec`] can decode.
+pub trait NativeType: Copy + Sized {
+    const TYPE: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TYPE: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+/// A host literal: element type, dimensions, raw little-endian bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if n * ty.byte_size() != data.len() {
+            return Err(XlaError(format!(
+                "shape {dims:?} needs {} bytes, got {}",
+                n * ty.byte_size(),
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TYPE != self.ty {
+            return Err(XlaError("literal element type mismatch".to_string()));
+        }
+        Ok(self
+            .data
+            .chunks_exact(self.ty.byte_size())
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| XlaError("empty literal".to_string()))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        Err(unavailable())
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _priv: () }
+    }
+}
+
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<A: AsRef<Literal>>(&self, _args: &[A]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_is_functional() {
+        let data: Vec<f32> = vec![1.0, 2.5, -3.0, 4.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &bytes)
+                .unwrap();
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &[0u8; 4])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn runtime_entry_points_report_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
