@@ -2,19 +2,27 @@
 //! stage execution (PJRT), Pallas quantize artifact vs rust twin,
 //! wire encode/decode (pooled vs allocating A/B), proto framing, the
 //! full in-process pipeline on TinyConv, and concurrent cloud-server
-//! throughput at 1/4/8 connections. This is the primary target of the
-//! §Perf optimization pass.
+//! throughput. This is the primary target of the §Perf optimization
+//! pass.
 //!
 //! A counting global allocator asserts the acceptance property: the
 //! steady-state codec + proto hops (quantize_into → encode_parts_into →
 //! write_frame_raw → read_frame_into → decode_into) perform **zero**
 //! heap allocations once their scratch is warm.
 //!
-//! Results are emitted as `BENCH_pipeline.json`. The PJRT sections skip
-//! when `make artifacts` has not run; the codec/proto sections always
-//! run.
+//! The **concurrency A/B** (`server_concurrency_ab`, always runs — sim
+//! backend, no artifacts needed) drives identical wire traffic at
+//! 1/4/8/16 connections against (a) the single-mutex serialized
+//! compute path and (b) the sharded + micro-batched engine, and emits
+//! both curves plus the 8-connection speedup. This is the acceptance
+//! measurement for the executor-sharding rewrite.
 //!
-//! Run: `cargo bench --bench pipeline_hotpath`
+//! Results are emitted as `BENCH_pipeline.json`. The PJRT sections skip
+//! when `make artifacts` has not run; the codec/proto and concurrency
+//! sections always run.
+//!
+//! Run: `cargo bench --bench pipeline_hotpath` (`-- --smoke` for the
+//! CI wiring check).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::io::BufReader;
@@ -28,9 +36,10 @@ use jalad::compression::quant;
 use jalad::coordinator::LocalPipeline;
 use jalad::ilp::Decision;
 use jalad::network::SimChannel;
-use jalad::runtime::{Executor, Manifest, SharedExecutor};
+use jalad::runtime::sim::sim_manifest;
+use jalad::runtime::{BatchConfig, Executor, ExecutorPool, Manifest, SharedExecutor};
 use jalad::server::proto::{self, Frame, RecvFrame};
-use jalad::server::CloudServer;
+use jalad::server::{CloudServer, ServeConfig};
 use jalad::util::bench::Bencher;
 use jalad::util::json::Json;
 
@@ -250,6 +259,109 @@ fn server_throughput(results: &mut Vec<Json>) {
     CloudServer::request_shutdown(addr);
 }
 
+/// Drive `conns` closed-loop TCP clients, `per` feature requests each,
+/// against a running server; returns requests/second.
+fn drive_clients(addr: std::net::SocketAddr, wire: &[u8], conns: usize, per: usize) -> f64 {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..conns)
+        .map(|_| {
+            let wire = wire.to_vec();
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_nodelay(true).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut rx = Vec::new();
+                for _ in 0..per {
+                    proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &wire).unwrap();
+                    match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+                        RecvFrame::Data(k) => assert_eq!(k, proto::KIND_LOGITS),
+                        other => panic!("unexpected reply {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (conns * per) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Concurrent-serving A/B on the sim backend (always runs): identical
+/// wire traffic against (a) the single-mutex serialized compute path —
+/// one shard, batching off, i.e. PR 1's server — and (b) the sharded +
+/// micro-batched engine. The acceptance number is the 8-connection
+/// speedup.
+fn server_concurrency_ab(results: &mut Vec<Json>) -> Option<f64> {
+    let smoke = Bencher::smoke();
+    let manifest = sim_manifest();
+    // Fan-in sets per-request tail compute; big enough that scheduling,
+    // not syscalls, dominates (hundreds of µs per tail).
+    let fanin = if smoke { 32 } else { 256 };
+    let per = if smoke { 6 } else { 48 };
+    let shards = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+
+    // One pre-encoded stage-2 / c=4 feature frame shared by every client.
+    let m = manifest.model("simnet").unwrap();
+    let xs = sample_features(m.stages[1].out_elems);
+    let q = quant::quantize(&xs, 4);
+    let wire = feature::encode(&q, 2, 0);
+
+    let mut rps8 = std::collections::HashMap::new();
+    for (mode, nshards, batching) in
+        [("serialized", 1usize, false), ("sharded_batched", shards, true)]
+    {
+        let pool = ExecutorPool::new_sim_with(manifest.clone(), nshards, fanin);
+        let server = Arc::new(CloudServer::with_pool(
+            pool,
+            ServeConfig {
+                workers: 16,
+                batch: BatchConfig { enabled: batching, ..BatchConfig::default() },
+            },
+        ));
+        let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").expect("bind");
+        for conns in [1usize, 4, 8, 16] {
+            let rps = drive_clients(addr, &wire, conns, per);
+            println!(
+                "server_concurrency_ab/{mode}/{conns}conn: {rps:.1} req/s \
+                 ({nshards} shard(s), batching {})",
+                if batching { "on" } else { "off" }
+            );
+            if conns == 8 {
+                rps8.insert(mode, rps);
+            }
+            results.push(Json::obj(vec![
+                ("mode", Json::str(mode)),
+                ("shards", Json::num(nshards as f64)),
+                ("connections", Json::num(conns as f64)),
+                ("requests", Json::num((conns * per) as f64)),
+                ("req_per_sec", Json::num(rps)),
+            ]));
+        }
+        let (batches, batched, bypassed, max_occ) = server.batch_metrics().snapshot();
+        println!(
+            "server_concurrency_ab/{mode}: {batches} batches, {batched} batched + \
+             {bypassed} bypassed requests, max occupancy {max_occ}, \
+             mean occupancy {:.2}",
+            server.batch_metrics().mean_occupancy()
+        );
+        results.push(Json::obj(vec![
+            ("mode", Json::str(mode)),
+            ("batches", Json::num(batches as f64)),
+            ("batched_requests", Json::num(batched as f64)),
+            ("batch_bypassed", Json::num(bypassed as f64)),
+            ("batch_max_occupancy", Json::num(max_occ as f64)),
+        ]));
+        CloudServer::request_shutdown(addr);
+    }
+    let speedup = rps8.get("sharded_batched")? / rps8.get("serialized")?;
+    println!(
+        "server_concurrency_ab: {speedup:.2}x req/s at 8 connections \
+         ({shards} shards + batching vs single mutex)"
+    );
+    Some(speedup)
+}
+
 /// The original PJRT-backed component benches (artifacts required).
 fn pjrt_benches(b: &mut Bencher) {
     let Ok(manifest) = Manifest::load("artifacts") else {
@@ -318,6 +430,8 @@ fn main() {
     pjrt_benches(&mut b);
     let mut server_results = Vec::new();
     server_throughput(&mut server_results);
+    let mut ab_results = Vec::new();
+    let ab_speedup = server_concurrency_ab(&mut ab_results);
 
     // Emit BENCH_pipeline.json.
     let bench_rows: Vec<Json> = b
@@ -348,6 +462,11 @@ fn main() {
             ]),
         ),
         ("server_throughput", Json::arr(server_results)),
+        ("server_concurrency_ab", Json::arr(ab_results)),
+        (
+            "concurrency_speedup_8conn",
+            Json::num(ab_speedup.unwrap_or(0.0)),
+        ),
     ]);
     std::fs::write("BENCH_pipeline.json", doc.to_pretty()).expect("write BENCH_pipeline.json");
     println!("wrote BENCH_pipeline.json");

@@ -226,6 +226,12 @@ pub fn encode_parts_into(
 /// Used by the `S_i(c)` predictor builder (§III-C) on the calibration path.
 pub fn encoded_size(q: &Quantized) -> usize {
     let alphabet = (1usize << q.c).max(2);
+    let packed_bytes = (q.values.len() * q.c as usize).div_ceil(8);
+    if alphabet > u16::MAX as usize {
+        // c=16: Huffman unrepresentable — skip the 65k-entry histogram
+        // and tree build entirely (mirrors encode_parts_into).
+        return HEADER_BYTES + packed_bytes;
+    }
     let mut freqs = vec![0u64; alphabet];
     for &v in &q.values {
         freqs[v as usize] += 1;
@@ -235,10 +241,6 @@ pub fn encoded_size(q: &Quantized) -> usize {
         freqs.iter().enumerate().map(|(s, &f)| f * enc.cost_bits(s) as u64).sum();
     let header_bits = 16 + alphabet as u64 * 4 + 32;
     let huff_bytes = ((payload_bits + header_bits) as usize).div_ceil(8);
-    let packed_bytes = (q.values.len() * q.c as usize).div_ceil(8);
-    if alphabet > u16::MAX as usize {
-        return HEADER_BYTES + packed_bytes; // c=16: Huffman unrepresentable
-    }
     HEADER_BYTES + huff_bytes.min(packed_bytes)
 }
 

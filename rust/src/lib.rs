@@ -18,8 +18,10 @@
 //!   request time.
 //!
 //! Crate map:
-//! * [`runtime`] — PJRT client, artifact registry, lazy-compiled stage
-//!   executor;
+//! * [`runtime`] — PJRT client + deterministic sim backend, artifact
+//!   registry, lazy (compile-exactly-once) stage executor, the sharded
+//!   [`runtime::ExecutorPool`] and the micro-batching
+//!   [`runtime::BatchEngine`] that form the cloud compute spine;
 //! * [`compression`] — feature wire codec (bit-packing + canonical
 //!   Huffman), LZ77/deflate, PNG-like and JPEG-like image codecs for the
 //!   baselines;
@@ -37,14 +39,16 @@
 //!   controller, request router;
 //! * [`server`] — real TCP edge/cloud deployment over a throttled link;
 //!   the cloud serves connections concurrently on `util::threadpool`
-//!   with pooled per-connection scratch;
+//!   with pooled per-connection scratch, native worker-side
+//!   dequantization, and sharded + micro-batched tail inference;
 //! * [`models`] — stage metadata + full-scale analytic FMAC tables;
 //! * [`data`] — the synthetic ILSVRC substitute (mirrors
 //!   `python/compile/data.py`);
 //! * [`metrics`] — latency histograms, serving counters, throughput;
 //! * [`util`] — from-scratch substrates: JSON, CLI, bench harness,
 //!   property testing, threadpool, pooled scratch buffers
-//!   ([`util::pool`]) (the offline vendor set has no serde/clap/
+//!   ([`util::pool`]), a build-exactly-once concurrent map
+//!   ([`util::once_map`]) (the offline vendor set has no serde/clap/
 //!   criterion/proptest/tokio).
 //!
 //! The request hot path is zero-copy in steady state: `compression`

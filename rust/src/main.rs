@@ -17,8 +17,8 @@ use jalad::ilp::Decision;
 use jalad::network::SimChannel;
 use jalad::predictor::Tables;
 use jalad::profiler::{measure_stages, DeviceModel, LatencyTables};
-use jalad::runtime::{Executor, Manifest, SharedExecutor};
-use jalad::server::CloudServer;
+use jalad::runtime::{BatchConfig, Executor, ExecutorPool, Manifest};
+use jalad::server::{CloudServer, ServeConfig};
 use jalad::util::cli::Args;
 
 fn main() {
@@ -35,6 +35,12 @@ fn main() {
     .opt("requests", "20", "request count for `infer`")
     .opt("edge-device", "tegra-x2", "edge device for paper-scale decisions")
     .opt("cloud-device", "cloud-12T", "cloud device for paper-scale decisions")
+    .opt("shards", "2", "serve-cloud: independent executor shards (PJRT clients)")
+    .opt("workers", "16", "serve-cloud: pooled connection workers")
+    .opt("max-batch", "4", "serve-cloud: max requests coalesced per tail batch")
+    .opt("gather-us", "1000", "serve-cloud: micro-batch gather window, microseconds")
+    .flag("no-batch", "serve-cloud: disable micro-batching (serialized tails)")
+    .flag("sim", "serve-cloud: use the deterministic sim backend (no artifacts)")
     .flag("paper-scale", "use the paper's analytic FMAC/FLOPS latency model")
     .parse_env();
 
@@ -100,10 +106,31 @@ fn run(command: &str, args: &Args) -> Result<()> {
             );
         }
         "serve-cloud" => {
-            let exe = Arc::new(SharedExecutor::new(Manifest::load(&dir)?)?);
-            let server = Arc::new(CloudServer::new(exe));
+            let shards = args.get_usize("shards");
+            let pool = if args.get_flag("sim") {
+                ExecutorPool::new_sim(jalad::runtime::sim::sim_manifest(), shards)
+            } else {
+                ExecutorPool::new_pjrt(Manifest::load(&dir)?, shards)?
+            };
+            let cfg = ServeConfig {
+                workers: args.get_usize("workers"),
+                batch: BatchConfig {
+                    max_batch: args.get_usize("max-batch").max(1),
+                    gather_window: std::time::Duration::from_micros(
+                        args.get_usize("gather-us") as u64,
+                    ),
+                    enabled: !args.get_flag("no-batch"),
+                },
+            };
+            let server = Arc::new(CloudServer::with_pool(pool, cfg));
             let (addr, handle) = Arc::clone(&server).spawn(args.get("addr"))?;
-            println!("cloud server on {addr} (Ctrl-C or a Shutdown frame stops it)");
+            println!(
+                "cloud server on {addr}: {shards} shard(s), max batch {}, gather {} µs{} \
+                 (Ctrl-C or a Shutdown frame stops it)",
+                args.get_usize("max-batch"),
+                args.get_usize("gather-us"),
+                if args.get_flag("no-batch") { ", batching OFF" } else { "" },
+            );
             handle.join().ok();
         }
         "infer" => {

@@ -1,0 +1,589 @@
+//! Micro-batched tail inference over an [`ExecutorPool`].
+//!
+//! Under load, many connections ask the cloud for the same work shape:
+//! "finish `model` from stage `i`". The [`BatchEngine`] coalesces
+//! concurrent requests with the same `(model, tail-start)` key into one
+//! executor acquisition: the first arriver becomes the batch **leader**
+//! and waits a short gather window (or until the batch fills); later
+//! arrivers join as **followers** and park until the leader scatters
+//! their logits back. The quantization width `c` is *not* part of the
+//! key — dequantization already happened natively on the connection
+//! worker, so by the time a request reaches the engine it is plain
+//! f32 activations and requests of any `c` batch together.
+//!
+//! Latency contract: a request that observes **no other request with
+//! the same key in flight** bypasses the queue entirely and runs
+//! directly on its affinity shard — an unloaded server adds zero
+//! batching latency, and heterogeneous traffic (every connection
+//! cutting at a different stage) never pays a gather window for
+//! followers that cannot exist. The window only ever delays requests
+//! whose shape-mates are genuinely concurrent — exactly when batching
+//! pays.
+//!
+//! Buffer discipline: inputs are **moved** in (`Vec<f32>`, usually
+//! lent out of a connection's `util::pool::Scratch` via
+//! `Scratch::lend_floats`) and each is transformed in place into that
+//! request's logits — across the batch boundary no activation or logit
+//! is copied into a staging buffer, and the caller gets its own
+//! allocation back to restore into its scratch.
+//!
+//! Robustness: a request with the wrong activation length is rejected
+//! by the server *before* enqueueing (a malformed request must not
+//! poison its batchmates); if the tail itself fails, every request in
+//! that batch gets the error; if a leader panics mid-batch, a guard
+//! marks the batch failed so followers return an error instead of
+//! parking forever.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::pool::ExecutorPool;
+use crate::metrics::BatchMetrics;
+
+/// Knobs for the micro-batch scheduler (the README's serving knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Coalesce at most this many requests per executor acquisition.
+    pub max_batch: usize,
+    /// How long a leader waits for followers before running anyway.
+    pub gather_window: Duration,
+    /// `false` turns the engine into a pass-through (every request
+    /// runs directly on its affinity shard) — the serialized arm of
+    /// the scaling A/B. Even when `true`, coalescing only activates on
+    /// a batch-capable pool ([`ExecutorPool::batch_capable`]); on a
+    /// serial-batch backend the engine passes through regardless.
+    pub enabled: bool,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        // max_batch deliberately stays below typical shard counts:
+        // under an 8-connection burst, two batches of 4 on two shards
+        // beat one batch of 8 on one shard whenever per-sample compute
+        // is near-linear in batch size.
+        Self { max_batch: 4, gather_window: Duration::from_micros(1000), enabled: true }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct BatchKey {
+    model: u16,
+    /// First tail stage (1-based); fixes the input geometry.
+    from: u16,
+}
+
+#[derive(Default)]
+struct CellState {
+    inputs: Vec<Vec<f32>>,
+    outputs: Vec<Option<Vec<f32>>>,
+    /// No more joins (leader is draining, or the batch filled).
+    closed: bool,
+    /// Results (or the error) are in; waiters may collect.
+    done: bool,
+    error: Option<String>,
+    /// When the leader started executing — lets every member compute
+    /// its own exact queue wait.
+    exec_start: Option<Instant>,
+}
+
+struct BatchCell {
+    state: Mutex<CellState>,
+    cv: Condvar,
+}
+
+impl BatchCell {
+    fn with_first(input: Vec<f32>) -> Self {
+        Self {
+            state: Mutex::new(CellState { inputs: vec![input], ..CellState::default() }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Marks a cell failed-and-done on drop unless defused — the leader's
+/// unwind safety net for its followers.
+struct FailBatchGuard {
+    cell: Arc<BatchCell>,
+    armed: bool,
+}
+
+impl Drop for FailBatchGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let mut st = self.cell.state.lock().unwrap();
+            if !st.done {
+                st.error = Some("batch leader panicked before scattering results".into());
+                st.done = true;
+                self.cell.cv.notify_all();
+            }
+        }
+    }
+}
+
+pub struct BatchEngine {
+    pool: Arc<ExecutorPool>,
+    cfg: BatchConfig,
+    /// `cfg.enabled` gated on [`ExecutorPool::batch_capable`]: a
+    /// backend that executes batch members serially (PJRT on batch-1
+    /// artifacts) gains nothing from coalescing and loses the shard
+    /// parallelism, so the engine passes everything through.
+    coalesce: bool,
+    pending: Mutex<HashMap<BatchKey, Arc<BatchCell>>>,
+    /// Requests currently inside the engine, **per key** — the signal
+    /// for the zero-latency bypass. Per-key (not global) so traffic
+    /// with no shape-mates never waits a gather window it cannot fill.
+    key_counts: Mutex<HashMap<BatchKey, usize>>,
+    pub metrics: BatchMetrics,
+}
+
+impl BatchEngine {
+    pub fn new(pool: Arc<ExecutorPool>, cfg: BatchConfig) -> Arc<Self> {
+        let coalesce = cfg.enabled && cfg.max_batch > 1 && pool.batch_capable();
+        Arc::new(Self {
+            pool,
+            cfg,
+            coalesce,
+            pending: Mutex::new(HashMap::new()),
+            key_counts: Mutex::new(HashMap::new()),
+            metrics: BatchMetrics::default(),
+        })
+    }
+
+    pub fn config(&self) -> BatchConfig {
+        self.cfg
+    }
+
+    pub fn pool(&self) -> &Arc<ExecutorPool> {
+        &self.pool
+    }
+
+    /// Finish inference for one request: run stages `from..=N` of the
+    /// model on `input` (a flat, already-dequantized activation) and
+    /// return its logits. The returned `Vec` is the same allocation,
+    /// transformed in place — hand it back to the scratch it came from.
+    pub fn infer_tail(
+        &self,
+        affinity: usize,
+        model_id: u16,
+        from: usize,
+        input: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        if !self.coalesce {
+            self.metrics.record_bypass();
+            return self.run_single(affinity, model_id, from, input);
+        }
+
+        let key = BatchKey { model: model_id, from: from as u16 };
+        // Per-key in-flight census, decremented on every exit path.
+        // The decrement also wakes any leader gathering on this key —
+        // its early-fire check compares batch size against the census,
+        // so a departing peer (e.g. a bypasser that was never going to
+        // join) must not leave it sleeping out the window.
+        struct KeyGuard<'a> {
+            engine: &'a BatchEngine,
+            key: BatchKey,
+        }
+        impl Drop for KeyGuard<'_> {
+            fn drop(&mut self) {
+                {
+                    let mut counts = self.engine.key_counts.lock().unwrap();
+                    if let Some(c) = counts.get_mut(&self.key) {
+                        *c -= 1;
+                        if *c == 0 {
+                            counts.remove(&self.key);
+                        }
+                    }
+                }
+                // Locks are taken strictly one at a time here (counts,
+                // then pending, then cell) — no cycle with the
+                // pending→cell or cell→counts orderings. The notify
+                // happens under the cell's state lock so it cannot
+                // land between a leader's census check and its park
+                // (the leader holds that lock from check to wait).
+                let cell = self.engine.pending.lock().unwrap().get(&self.key).map(Arc::clone);
+                if let Some(cell) = cell {
+                    let _st = cell.state.lock().unwrap();
+                    cell.cv.notify_all();
+                }
+            }
+        }
+        let peers = {
+            let mut counts = self.key_counts.lock().unwrap();
+            let c = counts.entry(key).or_insert(0);
+            let prev = *c;
+            *c += 1;
+            prev
+        };
+        let _guard = KeyGuard { engine: self, key };
+
+        // No shape-mate in flight: the direct path. No queue, no
+        // window — single-request latency is untouched, and mixed-key
+        // traffic never waits for followers that cannot exist.
+        if peers == 0 {
+            self.metrics.record_bypass();
+            return self.run_single(affinity, model_id, from, input);
+        }
+
+        let enqueued = Instant::now();
+
+        enum Role {
+            Leader(Arc<BatchCell>),
+            Follower(Arc<BatchCell>, usize),
+        }
+        // Lock order everywhere: pending map, then cell state.
+        let role = {
+            let mut map = self.pending.lock().unwrap();
+            let mut input = Some(input);
+            loop {
+                if let Some(cell) = map.get(&key) {
+                    let cell = Arc::clone(cell);
+                    let mut st = cell.state.lock().unwrap();
+                    if st.closed {
+                        // A leader is draining this cell; replace it.
+                        drop(st);
+                        map.remove(&key);
+                        continue;
+                    }
+                    st.inputs.push(input.take().expect("input consumed once"));
+                    let slot = st.inputs.len() - 1;
+                    let full = st.inputs.len() >= self.cfg.max_batch;
+                    if full {
+                        // Batch is full: close it.
+                        st.closed = true;
+                    }
+                    // Wake the leader on every join — it re-checks
+                    // fullness *and* the per-key census, so it can fire
+                    // as soon as everyone who could join has joined.
+                    cell.cv.notify_all();
+                    drop(st);
+                    if full {
+                        map.remove(&key);
+                    }
+                    break Role::Follower(cell, slot);
+                }
+                let cell = Arc::new(BatchCell::with_first(input.take().expect("input once")));
+                map.insert(key, Arc::clone(&cell));
+                break Role::Leader(cell);
+            }
+        };
+
+        match role {
+            Role::Leader(cell) => self.lead(cell, key, model_id, from, enqueued),
+            Role::Follower(cell, slot) => Self::follow(cell, slot, enqueued, &self.metrics),
+        }
+    }
+
+    /// Leader: gather followers for up to the window, detach the cell,
+    /// run the whole batch in one shard acquisition (routed to the
+    /// least-busy shard so concurrent batches spread across the pool),
+    /// scatter results.
+    fn lead(
+        &self,
+        cell: Arc<BatchCell>,
+        key: BatchKey,
+        model_id: u16,
+        from: usize,
+        enqueued: Instant,
+    ) -> Result<Vec<f32>> {
+        let deadline = Instant::now() + self.cfg.gather_window;
+        {
+            let mut st = cell.state.lock().unwrap();
+            loop {
+                if st.closed || st.inputs.len() >= self.cfg.max_batch {
+                    break;
+                }
+                // Fire early once everyone who *could* join has: the
+                // per-key census counts every same-key request inside
+                // the engine (including this leader), so when the batch
+                // holds that many there is nobody left to wait for.
+                // (Cell→counts lock order; counts is never held while
+                // acquiring a cell, so this cannot deadlock.)
+                if st.inputs.len() >= self.key_inflight(&key) {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g, _) = cell.cv.wait_timeout(st, deadline - now).unwrap();
+                st = g;
+            }
+        }
+        // Detach from the map (map→cell order) so late arrivals start a
+        // fresh batch, then close and take the gathered inputs.
+        {
+            let mut map = self.pending.lock().unwrap();
+            if let Some(cur) = map.get(&key) {
+                if Arc::ptr_eq(cur, &cell) {
+                    map.remove(&key);
+                }
+            }
+        }
+        let mut inputs = {
+            let mut st = cell.state.lock().unwrap();
+            st.closed = true;
+            st.exec_start = Some(Instant::now());
+            std::mem::take(&mut st.inputs)
+        };
+
+        let mut guard = FailBatchGuard { cell: Arc::clone(&cell), armed: true };
+        self.metrics.record_batch(inputs.len());
+        self.metrics.queue_wait.record(enqueued.elapsed().as_secs_f64());
+        let result = self.run_batch(None, model_id, from, &mut inputs);
+
+        let mut st = cell.state.lock().unwrap();
+        let mine = match result {
+            Ok(()) => {
+                let mut outs: Vec<Option<Vec<f32>>> =
+                    inputs.into_iter().map(Some).collect();
+                let mine = outs[0].take().expect("leader slot");
+                st.outputs = outs;
+                Ok(mine)
+            }
+            Err(e) => {
+                st.error = Some(format!("{e:#}"));
+                Err(e)
+            }
+        };
+        st.done = true;
+        guard.armed = false;
+        drop(st);
+        cell.cv.notify_all();
+        mine
+    }
+
+    /// Follower: park until the leader scatters, then take our slot.
+    fn follow(
+        cell: Arc<BatchCell>,
+        slot: usize,
+        enqueued: Instant,
+        metrics: &BatchMetrics,
+    ) -> Result<Vec<f32>> {
+        let mut st = cell.state.lock().unwrap();
+        while !st.done {
+            st = cell.cv.wait(st).unwrap();
+        }
+        if let Some(start) = st.exec_start {
+            let wait = start.saturating_duration_since(enqueued);
+            metrics.queue_wait.record(wait.as_secs_f64());
+        }
+        if let Some(e) = &st.error {
+            return Err(anyhow!("batched tail failed: {e}"));
+        }
+        st.outputs
+            .get_mut(slot)
+            .and_then(Option::take)
+            .ok_or_else(|| anyhow!("batch result slot {slot} missing"))
+    }
+
+    /// Same-key requests currently inside the engine (0 if none).
+    fn key_inflight(&self, key: &BatchKey) -> usize {
+        self.key_counts.lock().unwrap().get(key).copied().unwrap_or(0)
+    }
+
+    /// Bypass path: one request straight through its affinity shard.
+    fn run_single(
+        &self,
+        affinity: usize,
+        model_id: u16,
+        from: usize,
+        input: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        let mut batch = [input];
+        self.run_batch(Some(affinity), model_id, from, &mut batch)?;
+        let [out] = batch;
+        Ok(out)
+    }
+
+    /// One shard acquisition for the whole batch. `Some(affinity)`
+    /// pins the caller's connection-affine shard (bypass path, keeps
+    /// its compile cache hot); `None` routes to the least-busy shard
+    /// (batch leaders, so simultaneous batches parallelize).
+    fn run_batch(
+        &self,
+        affinity: Option<usize>,
+        model_id: u16,
+        from: usize,
+        batch: &mut [Vec<f32>],
+    ) -> Result<()> {
+        let model = &self
+            .pool
+            .manifest()
+            .models
+            .get(model_id as usize)
+            .ok_or_else(|| anyhow!("bad model id {model_id}"))?
+            .name;
+        match affinity {
+            Some(a) => self.pool.run_on(a, |e| e.run_tail_batch(model, from, batch))?,
+            None => self.pool.run_on_least_busy(|e| e.run_tail_batch(model, from, batch))?,
+        };
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sim::sim_manifest;
+    use crate::runtime::Executor;
+
+    fn engine(shards: usize, cfg: BatchConfig) -> Arc<BatchEngine> {
+        BatchEngine::new(ExecutorPool::new_sim_with(sim_manifest(), shards, 8), cfg)
+    }
+
+    fn activation(seed: usize, elems: usize) -> Vec<f32> {
+        (0..elems)
+            .map(|i| {
+                let h = ((i + seed * 7919) as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                ((h >> 44) & 0xFFF) as f32 / 409.6
+            })
+            .collect()
+    }
+
+    fn serial_reference(from: usize, input: &[f32]) -> Vec<f32> {
+        let exe = Executor::sim_with(sim_manifest(), 8);
+        let mut batch = vec![input.to_vec()];
+        exe.run_tail_batch("simnet", from, &mut batch).unwrap();
+        batch.pop().unwrap()
+    }
+
+    #[test]
+    fn uncontended_request_bypasses_queue() {
+        let eng = engine(2, BatchConfig::default());
+        let m = sim_manifest();
+        let elems = m.model("simnet").unwrap().stages[1].out_elems;
+        let input = activation(1, elems);
+        let out = eng.infer_tail(0, 0, 3, input.clone()).unwrap();
+        assert_eq!(out.len(), 16);
+        let (batches, _, bypassed, _) = eng.metrics.snapshot();
+        assert_eq!((batches, bypassed), (0, 1), "a lone request must not queue");
+        assert_eq!(
+            out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            serial_reference(3, &input).iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn contended_requests_match_serial_bit_for_bit() {
+        let eng = engine(4, BatchConfig {
+            max_batch: 4,
+            gather_window: Duration::from_millis(5),
+            enabled: true,
+        });
+        let m = sim_manifest();
+        let elems = m.model("simnet").unwrap().stages[1].out_elems;
+        let start = Arc::new(std::sync::Barrier::new(8));
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let eng = Arc::clone(&eng);
+                let start = Arc::clone(&start);
+                let input = activation(t, elems);
+                std::thread::spawn(move || {
+                    start.wait();
+                    let mut outs = Vec::new();
+                    for _ in 0..16 {
+                        outs.push(eng.infer_tail(t, 0, 3, input.clone()).unwrap());
+                    }
+                    (t, outs)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (t, outs) = h.join().unwrap();
+            let expected = serial_reference(3, &activation(t, elems));
+            for out in outs {
+                assert!(
+                    out.iter().zip(&expected).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "thread {t}: batched logits diverged from serial"
+                );
+            }
+        }
+        let (batches, batched, bypassed, max_occ) = eng.metrics.snapshot();
+        assert_eq!(batched + bypassed, 8 * 16, "every request accounted exactly once");
+        // With 8 threads in a barrier-aligned burst, at least some
+        // requests must actually have coalesced.
+        assert!(batches > 0, "no batches formed under contention");
+        assert!(max_occ >= 2, "batches never held more than one request");
+        assert!(eng.metrics.queue_wait.snapshot().len() as u64 >= batched);
+    }
+
+    #[test]
+    fn different_keys_never_coalesce_or_wait() {
+        // Four threads, four distinct tail-start keys, all concurrent:
+        // every request must bypass (peers census is per key), so no
+        // batch forms and nobody pays a gather window.
+        let eng = engine(4, BatchConfig {
+            max_batch: 4,
+            gather_window: Duration::from_millis(100), // would hurt if waited
+            enabled: true,
+        });
+        let m = sim_manifest();
+        let start = Arc::new(std::sync::Barrier::new(4));
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let eng = Arc::clone(&eng);
+                let start = Arc::clone(&start);
+                let from = t + 2; // tail starts 2..=5, all distinct
+                let elems = m.model("simnet").unwrap().stages[t].out_elems;
+                std::thread::spawn(move || {
+                    start.wait();
+                    for k in 0..4 {
+                        eng.infer_tail(t, 0, from, activation(t * 10 + k, elems)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (batches, _, bypassed, _) = eng.metrics.snapshot();
+        assert_eq!(batches, 0, "distinct keys must never share a batch");
+        assert_eq!(bypassed, 16);
+        // 16 small tails finish in µs; a regression to global-census
+        // bypass would wait ≥4 windows (400 ms) per thread.
+        assert!(
+            t0.elapsed() < Duration::from_millis(300),
+            "mixed-key traffic appears to have waited for gather windows"
+        );
+    }
+
+    #[test]
+    fn disabled_engine_is_pass_through() {
+        let eng = engine(1, BatchConfig { enabled: false, ..BatchConfig::default() });
+        let m = sim_manifest();
+        let elems = m.model("simnet").unwrap().stages[0].out_elems;
+        let out = eng.infer_tail(0, 0, 2, activation(3, elems)).unwrap();
+        assert_eq!(out.len(), 16);
+        let (batches, _, bypassed, _) = eng.metrics.snapshot();
+        assert_eq!(batches, 0);
+        assert_eq!(bypassed, 1);
+    }
+
+    #[test]
+    fn tail_past_last_stage_returns_input() {
+        let eng = engine(1, BatchConfig::default());
+        let logits = vec![0.5f32; 16];
+        let out = eng.infer_tail(0, 0, 5, logits.clone()).unwrap();
+        assert_eq!(out, logits);
+    }
+
+    #[test]
+    fn bad_model_id_errors() {
+        let eng = engine(1, BatchConfig::default());
+        assert!(eng.infer_tail(0, 42, 2, vec![0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn bad_activation_length_errors_without_hanging() {
+        let eng = engine(2, BatchConfig::default());
+        assert!(eng.infer_tail(0, 0, 2, vec![0.0; 3]).is_err());
+        // Engine still serves afterwards.
+        let m = sim_manifest();
+        let elems = m.model("simnet").unwrap().stages[0].out_elems;
+        assert!(eng.infer_tail(0, 0, 2, activation(9, elems)).is_ok());
+    }
+}

@@ -1,34 +1,64 @@
-//! PJRT executor with a lazy compile cache.
+//! Stage executor with a lazy, race-free compile cache and two
+//! interchangeable backends.
 //!
-//! One `Executor` wraps one PJRT CPU client (the paper's edge device or
-//! cloud server — each process owns one). HLO text artifacts compile on
-//! first use and are cached; compilation is tens of milliseconds per
-//! stage while execution is micro/milliseconds, so the cache is what
-//! keeps re-decoupling cheap: switching `(i*, c)` never recompiles
-//! anything already seen.
+//! One `Executor` wraps one inference backend:
+//! * **PJRT** ([`Executor::new`]) — one PJRT CPU client; HLO text
+//!   artifacts compile on first use and are cached. Compilation is tens
+//!   of milliseconds per stage while execution is micro/milliseconds,
+//!   so the cache is what keeps re-decoupling cheap: switching
+//!   `(i*, c)` never recompiles anything already seen. The cache is a
+//!   [`OnceMap`], so two threads that miss the same artifact
+//!   concurrently compile it exactly once (the loser waits).
+//! * **Sim** ([`Executor::sim`]) — the deterministic host-compute
+//!   stand-in from [`super::sim`]; needs no artifacts and no PJRT
+//!   runtime, used by the serving benches/tests and available as a
+//!   backend for the sharded cloud engine.
 //!
 //! Calling conventions (all lowered with `return_tuple=True`):
 //! * stage:   (x: f32[in_shape])                  -> (y,)
 //! * full:    (x: f32[input_shape])               -> (logits,)
 //! * quant:   (x: f32[n], c: f32[])               -> (y, lo, hi)
 //! * dequant: (y: f32[n], lo, hi, c: f32[])       -> (x̂[out_shape],)
+//!
+//! [`Executor::run_tail_batch`] is the micro-batch entry point: it runs
+//! the tail of the network for a whole batch of flat activations in one
+//! call (one lock acquisition when reached through [`SharedExecutor`]),
+//! replacing each input buffer with its logits in place.
 
-use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use super::artifacts::Manifest;
+use super::sim::SimBackend;
 use super::tensor::Tensor;
-use crate::compression::quant::Quantized;
+use crate::compression::quant::{self, Quantized};
+use crate::util::once_map::OnceMap;
+
+enum Backend {
+    Pjrt(xla::PjRtClient),
+    Sim(SimBackend),
+}
 
 pub struct Executor {
-    client: xla::PjRtClient,
+    backend: Backend,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    cache: OnceMap<String, Arc<xla::PjRtLoadedExecutable>>,
+    /// Lock-free mirror of the PJRT cache size, shared out through
+    /// [`Executor::compiled_handle`] so stats endpoints never queue
+    /// behind in-flight compute to read it.
+    compiled: Arc<AtomicUsize>,
     /// Cumulative compile time, for the metrics endpoint.
     compile_seconds: Mutex<f64>,
+    /// Reusable staging buffer for the sim batched-tail kernel. The
+    /// executor is already exclusively held whenever it runs (shard
+    /// mutex), so this lock is uncontended — it exists only to give
+    /// `&self` interior mutability while keeping the buffer's
+    /// capacity across requests (no per-request allocation inside the
+    /// shard lock).
+    tail_scratch: Mutex<Vec<f32>>,
 }
 
 /// Output of a stage execution plus its wall-clock cost.
@@ -39,14 +69,48 @@ pub struct StageOutput {
 }
 
 impl Executor {
+    /// PJRT-backed executor (the production path; needs artifacts).
     pub fn new(manifest: Manifest) -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
         Ok(Self {
-            client,
+            backend: Backend::Pjrt(client),
             manifest,
-            cache: Mutex::new(HashMap::new()),
+            cache: OnceMap::new(),
+            compiled: Arc::new(AtomicUsize::new(0)),
             compile_seconds: Mutex::new(0.0),
+            tail_scratch: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Simulated executor (deterministic host compute, no artifacts).
+    pub fn sim(manifest: Manifest) -> Self {
+        Self::sim_with(manifest, super::sim::DEFAULT_FANIN)
+    }
+
+    /// [`Executor::sim`] with an explicit per-element fan-in — the knob
+    /// for how much CPU each simulated stage burns.
+    pub fn sim_with(manifest: Manifest, fanin: usize) -> Self {
+        Self {
+            backend: Backend::Sim(SimBackend::new(fanin)),
+            manifest,
+            cache: OnceMap::new(),
+            compiled: Arc::new(AtomicUsize::new(0)),
+            compile_seconds: Mutex::new(0.0),
+            tail_scratch: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Shared handle to the compiled/warmed-artifact count — readable
+    /// without locking the executor (stats never wait on inference).
+    pub fn compiled_handle(&self) -> Arc<AtomicUsize> {
+        match &self.backend {
+            Backend::Pjrt(_) => Arc::clone(&self.compiled),
+            Backend::Sim(sim) => sim.warmed_handle(),
+        }
+    }
+
+    pub fn is_sim(&self) -> bool {
+        matches!(self.backend, Backend::Sim(_))
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -58,37 +122,48 @@ impl Executor {
     }
 
     /// Fetch-or-compile the executable for an artifact file name.
-    fn executable(&self, file: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(file) {
-            return Ok(std::sync::Arc::clone(exe));
-        }
-        let path = self.manifest.artifact_path(file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {file}: {e}"))?;
-        let exe = std::sync::Arc::new(exe);
-        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
-        self.cache.lock().unwrap().insert(file.to_string(), std::sync::Arc::clone(&exe));
-        Ok(exe)
+    /// Concurrent first accesses compile exactly once: the `OnceMap`
+    /// holds a per-key in-flight marker, so the second thread parks
+    /// until the first finishes instead of compiling a duplicate.
+    fn executable(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let Backend::Pjrt(client) = &self.backend else {
+            return Err(anyhow!("sim backend has no PJRT executables"));
+        };
+        self.cache.get_or_try_build(file, || {
+            let path = self.manifest.artifact_path(file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {file}: {e}"))?;
+            *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+            self.compiled.fetch_add(1, Ordering::Relaxed);
+            Ok(Arc::new(exe))
+        })
     }
 
     /// Warm the cache for a set of artifacts (server startup).
     pub fn precompile(&self, files: &[&str]) -> Result<()> {
         for f in files {
-            self.executable(f)?;
+            match &self.backend {
+                Backend::Pjrt(_) => {
+                    self.executable(f)?;
+                }
+                Backend::Sim(sim) => sim.warm(f),
+            }
         }
         Ok(())
     }
 
     pub fn cached_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        match &self.backend {
+            Backend::Pjrt(_) => self.cache.len(),
+            Backend::Sim(sim) => sim.warmed_count(),
+        }
     }
 
     fn run(&self, file: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
@@ -116,9 +191,19 @@ impl Executor {
             ));
         }
         let t0 = Instant::now();
-        let out = self.run(&stage.artifact.clone(), &[x.to_literal()])?;
-        let lit = out.to_tuple1().map_err(|e| anyhow!("stage output unwrap: {e}"))?;
-        let tensor = Tensor::from_literal(&lit)?;
+        let tensor = match &self.backend {
+            Backend::Pjrt(_) => {
+                let out = self.run(&stage.artifact, &[x.to_literal()])?;
+                let lit =
+                    out.to_tuple1().map_err(|e| anyhow!("stage output unwrap: {e}"))?;
+                Tensor::from_literal(&lit)?
+            }
+            Backend::Sim(sim) => {
+                let mut out = Vec::new();
+                sim.stage_into(stage, x.data(), &mut out)?;
+                Tensor::new(stage.out_shape.clone(), out)
+            }
+        };
         Ok(StageOutput { tensor, seconds: t0.elapsed().as_secs_f64() })
     }
 
@@ -143,10 +228,91 @@ impl Executor {
     /// Whole-model forward (cloud-only baselines, i* = 0).
     pub fn run_full(&self, model: &str, x: &Tensor) -> Result<StageOutput> {
         let m = self.manifest.model(model)?;
+        match &self.backend {
+            Backend::Pjrt(_) => {
+                let t0 = Instant::now();
+                let out = self.run(&m.full_artifact, &[x.to_literal()])?;
+                let lit = out.to_tuple1().map_err(|e| anyhow!("full output unwrap: {e}"))?;
+                Ok(StageOutput {
+                    tensor: Tensor::from_literal(&lit)?,
+                    seconds: t0.elapsed().as_secs_f64(),
+                })
+            }
+            // Sim has no separate fused-forward program: the stage chain
+            // *is* the full model (and is bit-identical to it).
+            Backend::Sim(sim) => {
+                sim.warm(&m.full_artifact);
+                self.run_stages(model, 1, m.num_stages(), x)
+            }
+        }
+    }
+
+    /// Run the tail `from..=N` of `model` for a whole batch of flat
+    /// activations in one call. Each `Vec` in `batch` holds one
+    /// sample's stage-`from-1` output and is replaced in place by that
+    /// sample's logits (capacity reused — nothing is returned by
+    /// allocation). `from > N` is the "cut at the last stage" case: the
+    /// activations already are the logits, so the batch is untouched.
+    ///
+    /// Per-sample results are bit-identical to running
+    /// [`Executor::run_stages`] on each sample alone: the sim backend
+    /// walks the stacked batch stage-major but applies the identical
+    /// per-sample kernel, and the PJRT backend executes the (batch-1)
+    /// stage executables back to back — batching there amortizes lock
+    /// acquisition and scheduling, not the MACs, until batched
+    /// artifacts are exported (see ROADMAP).
+    pub fn run_tail_batch(
+        &self,
+        model: &str,
+        from: usize,
+        batch: &mut [Vec<f32>],
+    ) -> Result<f64> {
+        let m = self.manifest.model(model)?;
+        let n = m.num_stages();
+        if from == 0 {
+            return Err(anyhow!("tail stages are 1-based; from=0 is the whole model"));
+        }
+        if from > n {
+            return Ok(0.0);
+        }
+        let expect: usize = m.stages[from - 1].in_shape.iter().product();
+        for (s, sample) in batch.iter().enumerate() {
+            if sample.len() != expect {
+                return Err(anyhow!(
+                    "{model} tail from stage {from}: sample {s} has {} elements, expected {expect}",
+                    sample.len()
+                ));
+            }
+        }
         let t0 = Instant::now();
-        let out = self.run(&m.full_artifact.clone(), &[x.to_literal()])?;
-        let lit = out.to_tuple1().map_err(|e| anyhow!("full output unwrap: {e}"))?;
-        Ok(StageOutput { tensor: Tensor::from_literal(&lit)?, seconds: t0.elapsed().as_secs_f64() })
+        match &self.backend {
+            Backend::Sim(sim) => {
+                // Stage-major over the stacked batch: one pass per stage
+                // derives each tap/weight once and applies it to every
+                // sample (the batched kernel). The staging buffer is
+                // the executor's reusable scratch — capacity persists
+                // across requests, so the warm path allocates nothing
+                // inside the shard lock.
+                let mut stacked = self.tail_scratch.lock().unwrap();
+                for i in from..=n {
+                    sim.stage_batch_into(&m.stages[i - 1], batch, &mut stacked)?;
+                }
+            }
+            Backend::Pjrt(_) => {
+                let in_shape = m.stages[from - 1].in_shape.clone();
+                for sample in batch.iter_mut() {
+                    // Move the activation into a Tensor and chain stages
+                    // by value — no clone of the full activation inside
+                    // the shard lock (run_stages would start with one).
+                    let mut cur = Tensor::new(in_shape.clone(), std::mem::take(sample));
+                    for i in from..=n {
+                        cur = self.run_stage(model, i, &cur)?.tensor;
+                    }
+                    *sample = cur.into_data();
+                }
+            }
+        }
+        Ok(t0.elapsed().as_secs_f64())
     }
 
     /// Quantize via the exported L1 Pallas kernel: (x[n], c) → Quantized.
@@ -157,10 +323,17 @@ impl Executor {
             .codecs
             .quant
             .get(&n)
-            .ok_or_else(|| anyhow!("no quant artifact for n={n}"))?
-            .clone();
+            .ok_or_else(|| anyhow!("no quant artifact for n={n}"))?;
+        if let Backend::Sim(sim) = &self.backend {
+            // The rust twin computes the same quantization the Pallas
+            // kernel does (`pallas_quant_matches_rust_twin` asserts
+            // exact value equality when artifacts exist), so sim mode
+            // routes straight through it.
+            sim.warm(file);
+            return Ok(quant::quantize(x.data(), c));
+        }
         let flat = x.clone().flattened();
-        let out = self.run(&file, &[flat.to_literal(), Tensor::scalar(c as f32).to_literal()])?;
+        let out = self.run(file, &[flat.to_literal(), Tensor::scalar(c as f32).to_literal()])?;
         let (y, lo, hi) = out.to_tuple3().map_err(|e| anyhow!("quant unwrap: {e}"))?;
         let values: Vec<u16> =
             y.to_vec::<f32>()?.into_iter().map(|v| v as u16).collect();
@@ -179,7 +352,11 @@ impl Executor {
 
     /// [`Executor::run_dequant`] over borrowed parts — lets servers keep
     /// decoded values in a pooled buffer instead of building a
-    /// [`Quantized`] per request.
+    /// [`Quantized`] per request. (The serving hot path no longer comes
+    /// through here at all: the cloud server dequantizes natively on the
+    /// connection worker via `quant::dequantize_into` before the tail —
+    /// this entry point remains for the codec cross-checks and any
+    /// caller that wants the kernel itself.)
     pub fn run_dequant_parts(
         &self,
         values: &[u16],
@@ -193,12 +370,17 @@ impl Executor {
             .codecs
             .dequant
             .get(shape)
-            .ok_or_else(|| anyhow!("no dequant artifact for shape {shape:?}"))?
-            .clone();
+            .ok_or_else(|| anyhow!("no dequant artifact for shape {shape:?}"))?;
+        if let Backend::Sim(sim) = &self.backend {
+            sim.warm(file);
+            let mut out = Vec::new();
+            quant::dequantize_into(values, lo, hi, c, &mut out);
+            return Ok(Tensor::new(shape.to_vec(), out));
+        }
         let y: Vec<f32> = values.iter().map(|&v| v as f32).collect();
         let yt = Tensor::new(vec![y.len()], y);
         let out = self.run(
-            &file,
+            file,
             &[
                 yt.to_literal(),
                 Tensor::scalar(lo).to_literal(),
@@ -211,7 +393,7 @@ impl Executor {
     }
 }
 
-/// Thread-safe wrapper: serializes all PJRT access behind one mutex.
+/// Thread-safe wrapper: serializes all backend access behind one mutex.
 ///
 /// The `xla` crate's handles are `Rc` + raw pointers (not `Send`), but
 /// every object lives strictly inside [`Executor`] — its public API only
@@ -219,10 +401,14 @@ impl Executor {
 /// created/destroyed inside the locked region. With exclusive access
 /// enforced by the mutex no `Rc` refcount or XLA object is ever touched
 /// from two threads at once, which makes the `Send + Sync` assertion
-/// sound. CPU inference is compute-bound, so serialization costs little;
-/// scale out with one `SharedExecutor` per worker if needed.
+/// sound. One `SharedExecutor` is one serialized inference lane; the
+/// cloud engine scales out with a [`super::pool::ExecutorPool`] of
+/// independently-locked lanes.
 pub struct SharedExecutor {
     inner: Mutex<Executor>,
+    /// Compile-cache size handle grabbed at construction: stats reads
+    /// (`cached_count`) never wait on the inference lock.
+    compiled: Arc<AtomicUsize>,
 }
 
 unsafe impl Send for SharedExecutor {}
@@ -230,11 +416,12 @@ unsafe impl Sync for SharedExecutor {}
 
 impl SharedExecutor {
     pub fn new(manifest: Manifest) -> Result<Self> {
-        Ok(Self { inner: Mutex::new(Executor::new(manifest)?) })
+        Ok(Self::from_executor(Executor::new(manifest)?))
     }
 
     pub fn from_executor(exe: Executor) -> Self {
-        Self { inner: Mutex::new(exe) }
+        let compiled = exe.compiled_handle();
+        Self { inner: Mutex::new(exe), compiled }
     }
 
     /// Run `f` with exclusive access to the executor.
@@ -270,21 +457,29 @@ impl SharedExecutor {
         self.with(|e| e.run_dequant_parts(values, lo, hi, c, shape))
     }
 
+    /// One lock acquisition for a whole micro-batch tail.
+    pub fn run_tail_batch(&self, model: &str, from: usize, batch: &mut [Vec<f32>]) -> Result<f64> {
+        self.with(|e| e.run_tail_batch(model, from, batch))
+    }
+
     pub fn manifest_clone(&self) -> Manifest {
         self.with(|e| e.manifest().clone())
     }
 
+    /// Compiled-artifact count without taking the inference lock — a
+    /// Stats frame must never queue behind a long compile or batch.
     pub fn cached_count(&self) -> usize {
-        self.with(|e| e.cached_count())
+        self.compiled.load(Ordering::Relaxed)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    //! Integration-grade tests against the real artifacts; every test
-    //! skips silently when `make artifacts` has not run yet.
+    //! PJRT tests run against the real artifacts and skip silently when
+    //! `make artifacts` has not run yet; sim tests always run.
     use super::*;
     use crate::compression::quant;
+    use crate::runtime::sim::sim_manifest;
 
     fn executor() -> Option<Executor> {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -328,6 +523,33 @@ mod tests {
         }
     }
 
+    /// The serving path dequantizes through the rust twin
+    /// (`quant::dequantize_into` on the connection worker) instead of
+    /// the L1 dequant artifact; this pins the two implementations
+    /// together so kernel drift can't silently change served logits.
+    /// Tolerance is a tight epsilon, not bit equality — XLA may fuse
+    /// the affine multiply-add differently, and anything beyond ~1 ulp
+    /// of the scale means a formula divergence, which this catches.
+    #[test]
+    fn pallas_dequant_matches_rust_twin() {
+        let Some(exe) = executor() else { return };
+        let x = input_for(&exe, "tinyconv");
+        let mid = exe.run_stage("tinyconv", 1, &x).unwrap().tensor;
+        for c in [1u8, 4, 8, 12] {
+            let q = exe.run_quant(&mid, c).unwrap();
+            let via_pjrt = exe.run_dequant(&q, mid.shape()).unwrap();
+            let via_rust = quant::dequantize(&q);
+            assert_eq!(via_pjrt.len(), via_rust.len());
+            let scale = (q.hi - q.lo).abs().max(1.0);
+            for (i, (a, b)) in via_pjrt.data().iter().zip(&via_rust).enumerate() {
+                assert!(
+                    (a - b).abs() <= scale * 1e-6,
+                    "c={c} elem {i}: artifact {a} vs twin {b} — dequant kernels diverged"
+                );
+            }
+        }
+    }
+
     #[test]
     fn pallas_dequant_roundtrip() {
         let Some(exe) = executor() else { return };
@@ -357,5 +579,93 @@ mod tests {
         let Some(exe) = executor() else { return };
         let bad = Tensor::zeros(vec![1, 2, 2, 3]);
         assert!(exe.run_stage("tinyconv", 1, &bad).is_err());
+    }
+
+    // ---- sim backend (always runs) ----
+
+    fn sim_exe() -> Executor {
+        Executor::sim_with(sim_manifest(), 16)
+    }
+
+    fn sim_input(exe: &Executor) -> Tensor {
+        let shape = exe.manifest().model("simnet").unwrap().input_shape.clone();
+        crate::data::gen::sample_image_shaped(1, 2, &shape)
+    }
+
+    #[test]
+    fn sim_stage_chain_matches_full_forward_exactly() {
+        let exe = sim_exe();
+        let x = sim_input(&exe);
+        let n = exe.manifest().model("simnet").unwrap().num_stages();
+        let chained = exe.run_stages("simnet", 1, n, &x).unwrap().tensor;
+        let full = exe.run_full("simnet", &x).unwrap().tensor;
+        assert_eq!(chained.shape(), full.shape());
+        assert!(chained
+            .data()
+            .iter()
+            .zip(full.data())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn sim_tail_batch_bit_identical_to_serial() {
+        let exe = sim_exe();
+        let m = exe.manifest().model("simnet").unwrap().clone();
+        let x = sim_input(&exe);
+        let mid = exe.run_stage("simnet", 1, &x).unwrap().tensor;
+        // Serial reference: stages 2..=4 one sample at a time.
+        let serial = exe.run_stages("simnet", 2, 4, &mid).unwrap().tensor;
+        // Batched: four copies (and one perturbed sample) through the
+        // batch entry point.
+        let mut perturbed = mid.data().to_vec();
+        perturbed[0] += 1.0;
+        let serial_p = exe
+            .run_stages("simnet", 2, 4, &Tensor::new(m.stages[0].out_shape.clone(), perturbed.clone()))
+            .unwrap()
+            .tensor;
+        let mut batch = vec![
+            mid.data().to_vec(),
+            perturbed,
+            mid.data().to_vec(),
+            mid.data().to_vec(),
+        ];
+        exe.run_tail_batch("simnet", 2, &mut batch).unwrap();
+        for (bi, expected) in [(0, &serial), (1, &serial_p), (2, &serial), (3, &serial)] {
+            assert_eq!(batch[bi].len(), expected.data().len());
+            assert!(
+                batch[bi]
+                    .iter()
+                    .zip(expected.data())
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "sample {bi} diverged from serial"
+            );
+        }
+    }
+
+    #[test]
+    fn sim_tail_batch_past_last_stage_is_identity() {
+        let exe = sim_exe();
+        let logits = vec![1.0f32, -2.0, 3.0];
+        let mut batch = vec![logits.clone()];
+        exe.run_tail_batch("simnet", 5, &mut batch).unwrap();
+        assert_eq!(batch[0], logits);
+    }
+
+    #[test]
+    fn sim_tail_batch_rejects_bad_sample_length() {
+        let exe = sim_exe();
+        let mut batch = vec![vec![0.0f32; 3]];
+        assert!(exe.run_tail_batch("simnet", 2, &mut batch).is_err());
+    }
+
+    #[test]
+    fn sim_quant_dequant_route_through_rust_twin() {
+        let exe = sim_exe();
+        let x = sim_input(&exe);
+        let mid = exe.run_stage("simnet", 1, &x).unwrap().tensor;
+        let q = exe.run_quant(&mid, 6).unwrap();
+        assert_eq!(q, quant::quantize(mid.data(), 6));
+        let back = exe.run_dequant(&q, mid.shape()).unwrap();
+        assert_eq!(back.data(), quant::dequantize(&q).as_slice());
     }
 }

@@ -1,20 +1,36 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them on the
-//! request path (the L3 half of the AOT bridge; see DESIGN.md).
+//! Inference runtime: load AOT HLO-text artifacts and execute them on
+//! the request path (the L3 half of the AOT bridge; see DESIGN.md).
 //!
 //! * [`tensor`] — host-side `Tensor` (shape + contiguous f32 buffer);
 //! * [`artifacts`] — `artifacts/manifest.json` parsing and path lookup;
-//! * [`executor`] — a PJRT CPU client with a lazy compile cache: HLO text
-//!   is parsed and compiled on first use, cached thereafter (one
-//!   executable per stage / codec kernel), plus typed helpers for the
-//!   stage / quant / dequant / full-model calling conventions.
+//! * [`executor`] — one inference lane: a PJRT CPU client with a lazy,
+//!   race-free compile cache (HLO text parsed and compiled on first
+//!   use, exactly once even under concurrent misses), or the
+//!   deterministic [`sim`] backend behind the same API; typed helpers
+//!   for the stage / quant / dequant / full-model calling conventions
+//!   plus the batched-tail entry point;
+//! * [`sim`] — artifact-free deterministic host compute (serving
+//!   benches, contention tests, PJRT-less builds);
+//! * [`pool`] — [`pool::ExecutorPool`]: N independently-locked
+//!   executors (one backend instance each), affinity-addressed, with
+//!   per-shard utilization counters;
+//! * [`batch`] — [`batch::BatchEngine`]: coalesces concurrent
+//!   same-shape tail requests into one executor acquisition behind a
+//!   bounded gather window; lone requests bypass with zero added
+//!   latency.
 //!
 //! Interchange is HLO *text*: jax ≥ 0.5 serialized protos use 64-bit ids
 //! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
 
 pub mod artifacts;
+pub mod batch;
 pub mod executor;
+pub mod pool;
+pub mod sim;
 pub mod tensor;
 
 pub use artifacts::{CodecArtifacts, Manifest, ModelManifest, StageManifest};
+pub use batch::{BatchConfig, BatchEngine};
 pub use executor::{Executor, SharedExecutor, StageOutput};
+pub use pool::{ExecutorPool, ShardStats};
 pub use tensor::Tensor;

@@ -1,0 +1,287 @@
+//! Sharded inference: a pool of independently-locked executors.
+//!
+//! One [`SharedExecutor`] is one serialized inference lane — fine for a
+//! single edge device, a bottleneck for a cloud server whose connection
+//! workers all funnel through the same mutex. An [`ExecutorPool`] holds
+//! `N` executors (one backend instance each: N PJRT clients, or N sim
+//! engines), each behind its *own* mutex, so tails from different
+//! requests genuinely run in parallel. Callers pick a shard by
+//! **affinity** (the cloud server uses the connection id), which keeps
+//! one connection's requests on one shard — its compile cache stays
+//! hot and cross-shard cache duplication is bounded to the artifacts a
+//! shard actually serves.
+//!
+//! Per-shard run/busy counters feed the stats endpoint's shard
+//! utilization report — the observable that tells an operator whether
+//! the shard count, not the transport, is the throughput ceiling.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::artifacts::Manifest;
+use super::executor::{Executor, SharedExecutor};
+
+struct Shard {
+    exe: Arc<SharedExecutor>,
+    /// Completed executor acquisitions on this shard.
+    runs: AtomicU64,
+    /// Total nanoseconds spent holding this shard's lock.
+    busy_ns: AtomicU64,
+    /// Callers currently holding (or queued on) this shard's lock.
+    active: AtomicU64,
+}
+
+/// Point-in-time utilization of one shard.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardStats {
+    pub runs: u64,
+    pub busy_seconds: f64,
+}
+
+pub struct ExecutorPool {
+    shards: Vec<Shard>,
+    manifest: Manifest,
+    /// Whether this backend executes a stacked batch better than
+    /// serially (see [`ExecutorPool::batch_capable`]).
+    batch_capable: bool,
+}
+
+impl ExecutorPool {
+    /// A pool of `n` PJRT-backed executors, each with its own client
+    /// and compile cache. Not batch-capable yet: stage artifacts are
+    /// batch-1 programs, so a coalesced batch would execute its
+    /// samples serially under one shard lock — worse than letting the
+    /// shards run them in parallel. Flips when batched artifacts are
+    /// exported (ROADMAP).
+    pub fn new_pjrt(manifest: Manifest, n: usize) -> Result<Arc<Self>> {
+        let mut shards = Vec::new();
+        for _ in 0..n.max(1) {
+            shards.push(Arc::new(SharedExecutor::new(manifest.clone())?));
+        }
+        Ok(Self::from_shards(manifest, shards, false))
+    }
+
+    /// A pool of `n` simulated executors (no artifacts needed).
+    pub fn new_sim(manifest: Manifest, n: usize) -> Arc<Self> {
+        Self::new_sim_with(manifest, n, super::sim::DEFAULT_FANIN)
+    }
+
+    /// [`ExecutorPool::new_sim`] with an explicit sim compute fan-in.
+    pub fn new_sim_with(manifest: Manifest, n: usize, fanin: usize) -> Arc<Self> {
+        let shards = (0..n.max(1))
+            .map(|_| {
+                Arc::new(SharedExecutor::from_executor(Executor::sim_with(
+                    manifest.clone(),
+                    fanin,
+                )))
+            })
+            .collect();
+        Self::from_shards(manifest, shards, true)
+    }
+
+    /// Wrap one existing executor as a single-shard pool (the
+    /// compatibility path for callers that built a [`SharedExecutor`]
+    /// themselves, and the "serialized" arm of the scaling A/B).
+    pub fn from_shared(exe: Arc<SharedExecutor>) -> Arc<Self> {
+        let manifest = exe.manifest_clone();
+        let capable = exe.with(|e| e.is_sim());
+        Self::from_shards(manifest, vec![exe], capable)
+    }
+
+    fn from_shards(
+        manifest: Manifest,
+        exes: Vec<Arc<SharedExecutor>>,
+        batch_capable: bool,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            shards: exes
+                .into_iter()
+                .map(|exe| Shard {
+                    exe,
+                    runs: AtomicU64::new(0),
+                    busy_ns: AtomicU64::new(0),
+                    active: AtomicU64::new(0),
+                })
+                .collect(),
+            manifest,
+            batch_capable,
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True when the backend genuinely amortizes work across a stacked
+    /// batch (sim's batched kernel; PJRT once batched artifacts
+    /// exist). The batch engine only coalesces on capable pools —
+    /// otherwise batching would serialize compute that independent
+    /// shards run in parallel.
+    pub fn batch_capable(&self) -> bool {
+        self.batch_capable
+    }
+
+    /// The manifest every shard was built from.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Run `f` with exclusive access to the shard `affinity` maps to,
+    /// recording the hold time in that shard's utilization counters.
+    pub fn run_on<R>(&self, affinity: usize, f: impl FnOnce(&Executor) -> R) -> R {
+        self.run_on_shard(affinity % self.shards.len(), f)
+    }
+
+    /// Run `f` on the shard with the fewest callers in flight (ties
+    /// break toward the least cumulative busy time). Batch leaders use
+    /// this so concurrent batches spread across shards instead of
+    /// piling onto one connection's affinity shard.
+    pub fn run_on_least_busy<R>(&self, f: impl FnOnce(&Executor) -> R) -> R {
+        let idx = self
+            .shards
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| {
+                (s.active.load(Ordering::Relaxed), s.busy_ns.load(Ordering::Relaxed))
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        self.run_on_shard(idx, f)
+    }
+
+    fn run_on_shard<R>(&self, idx: usize, f: impl FnOnce(&Executor) -> R) -> R {
+        // Decrement `active` on unwind too — a leaked count would make
+        // least-busy routing shun this shard forever.
+        struct ActiveGuard<'a>(&'a AtomicU64);
+        impl Drop for ActiveGuard<'_> {
+            fn drop(&mut self) {
+                self.0.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        let shard = &self.shards[idx];
+        shard.active.fetch_add(1, Ordering::SeqCst);
+        let _active = ActiveGuard(&shard.active);
+        let t0 = Instant::now();
+        let out = shard.exe.with(f);
+        shard.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        shard.runs.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+
+    /// Compiled artifacts summed across shards (each shard has its own
+    /// cache, so the sum counts per-shard duplicates — by design).
+    pub fn cached_count(&self) -> usize {
+        self.shards.iter().map(|s| s.exe.cached_count()).sum()
+    }
+
+    /// Cumulative compile seconds summed across shards.
+    pub fn compile_seconds(&self) -> f64 {
+        self.shards.iter().map(|s| s.exe.with(|e| e.compile_seconds())).sum()
+    }
+
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .map(|s| ShardStats {
+                runs: s.runs.load(Ordering::Relaxed),
+                busy_seconds: s.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sim::sim_manifest;
+    use crate::runtime::Tensor;
+
+    #[test]
+    fn affinity_is_stable_modulo_shards() {
+        let pool = ExecutorPool::new_sim_with(sim_manifest(), 3, 4);
+        assert_eq!(pool.shard_count(), 3);
+        for conn in 0..9 {
+            pool.run_on(conn, |_| ());
+        }
+        let stats = pool.shard_stats();
+        // 9 connections over 3 shards, round-robin by id: 3 runs each.
+        assert!(stats.iter().all(|s| s.runs == 3), "{stats:?}");
+    }
+
+    #[test]
+    fn shards_compute_independently_and_identically() {
+        let pool = ExecutorPool::new_sim_with(sim_manifest(), 4, 8);
+        let shape = pool.manifest().model("simnet").unwrap().input_shape.clone();
+        let x = crate::data::gen::sample_image_shaped(0, 5, &shape);
+        let outs: Vec<Tensor> = (0..4)
+            .map(|a| pool.run_on(a, |e| e.run_full("simnet", &x).unwrap().tensor))
+            .collect();
+        for o in &outs[1..] {
+            assert!(o
+                .data()
+                .iter()
+                .zip(outs[0].data())
+                .all(|(p, q)| p.to_bits() == q.to_bits()));
+        }
+    }
+
+    #[test]
+    fn parallel_shards_serve_concurrently() {
+        let pool = ExecutorPool::new_sim_with(sim_manifest(), 4, 16);
+        let shape = pool.manifest().model("simnet").unwrap().input_shape.clone();
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let pool = Arc::clone(&pool);
+                let shape = shape.clone();
+                std::thread::spawn(move || {
+                    let x = crate::data::gen::sample_image_shaped(t % 4, t, &shape);
+                    for _ in 0..10 {
+                        pool.run_on(t, |e| e.run_full("simnet", &x).unwrap());
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total: u64 = pool.shard_stats().iter().map(|s| s.runs).sum();
+        assert_eq!(total, 80);
+    }
+
+    #[test]
+    fn least_busy_spreads_concurrent_work() {
+        let pool = ExecutorPool::new_sim_with(sim_manifest(), 4, 16);
+        let shape = pool.manifest().model("simnet").unwrap().input_shape.clone();
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let pool = Arc::clone(&pool);
+                let shape = shape.clone();
+                std::thread::spawn(move || {
+                    let x = crate::data::gen::sample_image_shaped(t % 4, t, &shape);
+                    for _ in 0..12 {
+                        pool.run_on_least_busy(|e| e.run_full("simnet", &x).unwrap());
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = pool.shard_stats();
+        let total: u64 = stats.iter().map(|s| s.runs).sum();
+        assert_eq!(total, 96);
+        let used = stats.iter().filter(|s| s.runs > 0).count();
+        assert!(used >= 2, "least-busy routing never left shard 0: {stats:?}");
+    }
+
+    #[test]
+    fn from_shared_is_single_shard() {
+        let exe = Arc::new(SharedExecutor::from_executor(Executor::sim_with(sim_manifest(), 4)));
+        let pool = ExecutorPool::from_shared(exe);
+        assert_eq!(pool.shard_count(), 1);
+        assert_eq!(pool.manifest().models.len(), 1);
+    }
+}

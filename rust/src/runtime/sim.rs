@@ -1,0 +1,396 @@
+//! Deterministic simulated inference backend.
+//!
+//! The PJRT path needs exported artifacts and an `xla_extension`
+//! runtime; this backend needs neither — it computes every stage with a
+//! fixed pseudo-conv mixing function on the host, so the serving stack
+//! (executor pool, micro-batch engine, cloud server, benches, tests)
+//! can run end to end in any build. It is *not* a model: it is a
+//! deterministic stand-in with the same shapes, the same calling
+//! conventions and a tunable compute cost, which is exactly what the
+//! concurrency/batching work needs to measure scheduling behavior
+//! without GPU/PJRT variance.
+//!
+//! Determinism contract (load-bearing for the batching engine's
+//! byte-identity property): a stage's output depends only on the stage
+//! metadata and its input buffer, every float op happens in a fixed
+//! order, and running a sample alone or inside a stacked batch is the
+//! same code path per sample. Two executions of the same request are
+//! bit-for-bit equal.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use super::artifacts::{CodecArtifacts, Manifest, ModelManifest, StageManifest};
+
+/// Default per-output-element fan-in (multiply-accumulates). The knob
+/// that sets how much CPU a simulated stage burns.
+pub const DEFAULT_FANIN: usize = 64;
+
+/// Host-side simulated compute engine. Cheap to construct; holds only
+/// the fan-in knob and the set of "warmed" artifacts (so
+/// `cached_count` parity with the PJRT compile cache holds in stats).
+#[derive(Debug)]
+pub struct SimBackend {
+    fanin: usize,
+    warmed: Mutex<HashSet<String>>,
+    /// Lock-free mirror of `warmed.len()`; shared (`Arc`) so stats
+    /// endpoints can read it without any executor lock.
+    warmed_len: Arc<AtomicUsize>,
+}
+
+/// Per-stage seed for the mixing function (Knuth multiplicative hash).
+#[inline]
+fn stage_seed(stage: &StageManifest) -> u64 {
+    (stage.index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xA5A5_5A5A
+}
+
+/// Per-output-element base hash.
+#[inline]
+fn out_base(sseed: u64, j: usize) -> u64 {
+    (j as u64).wrapping_mul(0x2545_F491_4F6C_DD1D) ^ sseed
+}
+
+/// One tap: input index + weight in [-1, 1) for `(j, k)`. The single
+/// source of truth for the mixing function — both the single-sample
+/// and the batched kernel derive taps here, so they cannot drift.
+#[inline]
+fn tap(jbase: u64, k: usize, n_in: usize) -> (usize, f32) {
+    let h = jbase.wrapping_add((k as u64).wrapping_mul(0x9E37_79B9));
+    let idx = (h % n_in as u64) as usize;
+    let w = ((h >> 40) & 0xFFFF) as f32 / 32768.0 - 1.0;
+    (idx, w)
+}
+
+/// Fan-in normalization + leaky-ReLU, shared by both kernels.
+#[inline]
+fn finalize(acc: f32, inv: f32) -> f32 {
+    let a = acc * inv;
+    if a > 0.0 {
+        a
+    } else {
+        0.1 * a
+    }
+}
+
+impl SimBackend {
+    pub fn new(fanin: usize) -> Self {
+        Self {
+            fanin: fanin.max(1),
+            warmed: Mutex::new(HashSet::new()),
+            warmed_len: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Shared handle to the warm-artifact count (lock-free reads).
+    pub fn warmed_handle(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.warmed_len)
+    }
+
+    pub fn fanin(&self) -> usize {
+        self.fanin
+    }
+
+    /// Artifacts "compiled" so far (first-touch set, mirrors the PJRT
+    /// compile cache for the stats endpoint). Lock-free — safe to call
+    /// from a stats path while every shard is mid-inference.
+    pub fn warmed_count(&self) -> usize {
+        self.warmed_len.load(Ordering::Relaxed)
+    }
+
+    pub fn warm(&self, artifact: &str) {
+        let mut w = self.warmed.lock().unwrap();
+        if !w.contains(artifact) {
+            w.insert(artifact.to_string());
+            self.warmed_len.store(w.len(), Ordering::Relaxed);
+        }
+    }
+
+    /// One stage forward: `input` (flat, `in_shape` elements) →
+    /// `out` (flat, `out_shape` elements). Pseudo-conv: every output
+    /// element accumulates `fanin` strided input taps against a
+    /// deterministic weight derived from (stage, output, tap) indices,
+    /// normalized by the fan-in, then a leaky-ReLU keeps magnitudes
+    /// bounded across deep chains.
+    pub fn stage_into(&self, stage: &StageManifest, input: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        let n_in = input.len();
+        let n_out: usize = stage.out_shape.iter().product();
+        if n_in == 0 {
+            return Err(anyhow!("sim stage {} on empty input", stage.index));
+        }
+        self.warm(&stage.artifact);
+        let inv = 1.0f32 / self.fanin as f32;
+        let sseed = stage_seed(stage);
+        out.clear();
+        out.reserve(n_out);
+        for j in 0..n_out {
+            let jbase = out_base(sseed, j);
+            let mut acc = 0.0f32;
+            for k in 0..self.fanin {
+                let (idx, w) = tap(jbase, k, n_in);
+                acc += input[idx] * w;
+            }
+            out.push(finalize(acc, inv));
+        }
+        Ok(())
+    }
+
+    /// One stage forward for a whole stacked batch, amortizing the tap
+    /// and weight derivation (the expensive per-`(j,k)` hash) across
+    /// every sample — the sim analog of a batched kernel re-using its
+    /// loaded weights. Per-sample results are **bit-identical** to
+    /// [`SimBackend::stage_into`]: each sample's accumulator sees the
+    /// same addends in the same `k` order, then the same finalize.
+    /// `stacked` is the reusable staging buffer (`B × out_elems`);
+    /// each sample's `Vec` is replaced in place by its stage output.
+    pub fn stage_batch_into(
+        &self,
+        stage: &StageManifest,
+        samples: &mut [Vec<f32>],
+        stacked: &mut Vec<f32>,
+    ) -> Result<()> {
+        let b = samples.len();
+        if b == 0 {
+            return Ok(());
+        }
+        let n_in = samples[0].len();
+        for (s, sample) in samples.iter().enumerate() {
+            if sample.len() != n_in || n_in == 0 {
+                return Err(anyhow!("sim batch stage {}: sample {s} length mismatch", stage.index));
+            }
+        }
+        let n_out: usize = stage.out_shape.iter().product();
+        self.warm(&stage.artifact);
+        let inv = 1.0f32 / self.fanin as f32;
+        let sseed = stage_seed(stage);
+        stacked.clear();
+        stacked.resize(b * n_out, 0.0);
+        for j in 0..n_out {
+            let jbase = out_base(sseed, j);
+            for k in 0..self.fanin {
+                let (idx, w) = tap(jbase, k, n_in);
+                // One tap derivation, B fused multiply-adds.
+                for (s, sample) in samples.iter().enumerate() {
+                    stacked[s * n_out + j] += sample[idx] * w;
+                }
+            }
+        }
+        for (s, sample) in samples.iter_mut().enumerate() {
+            sample.clear();
+            sample.extend(
+                stacked[s * n_out..(s + 1) * n_out].iter().map(|&acc| finalize(acc, inv)),
+            );
+        }
+        Ok(())
+    }
+
+    /// Run stages `from..=to` (1-based, inclusive) of `model` over a
+    /// flat buffer, ping-ponging between `cur` and `tmp`; the final
+    /// activation ends in `cur`. Both buffers keep their capacity, so a
+    /// warm caller performs no allocation.
+    pub fn run_chain_into(
+        &self,
+        model: &ModelManifest,
+        from: usize,
+        to: usize,
+        cur: &mut Vec<f32>,
+        tmp: &mut Vec<f32>,
+    ) -> Result<()> {
+        for i in from..=to {
+            let stage = model
+                .stages
+                .get(i - 1)
+                .ok_or_else(|| anyhow!("{} has {} stages, asked {i}", model.name, model.stages.len()))?;
+            let expect: usize = stage.in_shape.iter().product();
+            if cur.len() != expect {
+                return Err(anyhow!(
+                    "{} stage {i} expects {} elements, got {}",
+                    model.name,
+                    expect,
+                    cur.len()
+                ));
+            }
+            self.stage_into(stage, cur, tmp)?;
+            std::mem::swap(cur, tmp);
+        }
+        Ok(())
+    }
+}
+
+/// A synthetic manifest for the sim backend: one model (`simnet`, four
+/// stages, 16 classes) with internally consistent shapes and codec
+/// entries for every stage geometry. Mirrors what `make artifacts`
+/// exports, minus the artifact files nobody reads in sim mode.
+pub fn sim_manifest() -> Manifest {
+    let specs: [(&str, Vec<usize>, Vec<usize>); 4] = [
+        ("conv1", vec![1, 16, 16, 3], vec![1, 16, 16, 16]),
+        ("conv2", vec![1, 16, 16, 16], vec![1, 8, 8, 32]),
+        ("conv3", vec![1, 8, 8, 32], vec![1, 4, 4, 64]),
+        ("head", vec![1, 4, 4, 64], vec![1, 16]),
+    ];
+    let mut stages = Vec::new();
+    let mut quant = std::collections::BTreeMap::new();
+    let mut dequant = std::collections::BTreeMap::new();
+    for (idx, (name, in_shape, out_shape)) in specs.into_iter().enumerate() {
+        let out_elems: usize = out_shape.iter().product();
+        quant.insert(out_elems, format!("sim_quant_{out_elems}.hlo.txt"));
+        dequant.insert(out_shape.clone(), format!("sim_dequant_{out_elems}.hlo.txt"));
+        stages.push(StageManifest {
+            index: idx,
+            name: name.to_string(),
+            artifact: format!("simnet_stage_{idx:02}.hlo.txt"),
+            in_shape,
+            out_shape,
+            out_elems,
+            // Rough pseudo-conv cost, only consumed by the ILP tables.
+            fmacs_scaled: (out_elems * DEFAULT_FANIN) as u64,
+        });
+    }
+    Manifest {
+        dir: PathBuf::from("sim"),
+        c_max: 8,
+        num_classes: 16,
+        source_digest: "sim-backend".to_string(),
+        models: vec![ModelManifest {
+            name: "simnet".to_string(),
+            input_shape: vec![1, 16, 16, 3],
+            num_classes: 16,
+            full_artifact: "simnet_full.hlo.txt".to_string(),
+            stages,
+        }],
+        codecs: CodecArtifacts { quant, dequant },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input_for(m: &ModelManifest, seed: u64) -> Vec<f32> {
+        let n: usize = m.input_shape.iter().product();
+        (0..n)
+            .map(|i| {
+                let h = (i as u64).wrapping_add(seed).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                ((h >> 40) & 0xFFFF) as f32 / 6553.6
+            })
+            .collect()
+    }
+
+    #[test]
+    fn manifest_shapes_chain() {
+        let m = sim_manifest();
+        let model = m.model("simnet").unwrap();
+        assert_eq!(model.input_shape, model.stages[0].in_shape);
+        for w in model.stages.windows(2) {
+            assert_eq!(w[0].out_shape, w[1].in_shape);
+        }
+        for s in &model.stages {
+            assert!(m.codecs.quant.contains_key(&s.out_elems));
+            assert!(m.codecs.dequant.contains_key(&s.out_shape));
+        }
+        assert_eq!(m.model_id("simnet"), Some(0));
+    }
+
+    #[test]
+    fn stages_are_deterministic() {
+        let m = sim_manifest();
+        let model = m.model("simnet").unwrap();
+        let sim = SimBackend::new(16);
+        let x = input_for(model, 7);
+        let (mut a, mut t1) = (x.clone(), Vec::new());
+        let (mut b, mut t2) = (x, Vec::new());
+        sim.run_chain_into(model, 1, 4, &mut a, &mut t1).unwrap();
+        sim.run_chain_into(model, 1, 4, &mut b, &mut t2).unwrap();
+        assert_eq!(a.len(), 16);
+        assert!(a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()));
+        // Outputs stay finite and non-degenerate through the chain.
+        assert!(a.iter().all(|v| v.is_finite()));
+        assert!(a.iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_outputs() {
+        let m = sim_manifest();
+        let model = m.model("simnet").unwrap();
+        let sim = SimBackend::new(16);
+        let (mut a, mut ta) = (input_for(model, 1), Vec::new());
+        let (mut b, mut tb) = (input_for(model, 2), Vec::new());
+        sim.run_chain_into(model, 1, 4, &mut a, &mut ta).unwrap();
+        sim.run_chain_into(model, 1, 4, &mut b, &mut tb).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn batch_kernel_bit_identical_to_single_sample() {
+        let m = sim_manifest();
+        let model = m.model("simnet").unwrap();
+        let sim = SimBackend::new(16);
+        let stage = &model.stages[1];
+        let n_in: usize = stage.in_shape.iter().product();
+        let mut samples: Vec<Vec<f32>> = (0..5)
+            .map(|s| {
+                (0..n_in)
+                    .map(|i| {
+                        let h = ((i + s * 101) as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                        ((h >> 40) & 0xFFFF) as f32 / 3276.8 - 5.0
+                    })
+                    .collect()
+            })
+            .collect();
+        let singles: Vec<Vec<f32>> = samples
+            .iter()
+            .map(|x| {
+                let mut out = Vec::new();
+                sim.stage_into(stage, x, &mut out).unwrap();
+                out
+            })
+            .collect();
+        let mut stacked = Vec::new();
+        sim.stage_batch_into(stage, &mut samples, &mut stacked).unwrap();
+        for (s, (batched, single)) in samples.iter().zip(&singles).enumerate() {
+            assert_eq!(batched.len(), single.len());
+            assert!(
+                batched.iter().zip(single).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "sample {s}: batched kernel diverged from single-sample kernel"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_kernel_rejects_ragged_batch() {
+        let m = sim_manifest();
+        let model = m.model("simnet").unwrap();
+        let sim = SimBackend::new(4);
+        let n_in: usize = model.stages[0].in_shape.iter().product();
+        let mut samples = vec![vec![1.0f32; n_in], vec![1.0f32; n_in - 1]];
+        let mut stacked = Vec::new();
+        assert!(sim.stage_batch_into(&model.stages[0], &mut samples, &mut stacked).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let m = sim_manifest();
+        let model = m.model("simnet").unwrap();
+        let sim = SimBackend::new(4);
+        let mut bad = vec![0.0f32; 5];
+        let mut tmp = Vec::new();
+        assert!(sim.run_chain_into(model, 1, 1, &mut bad, &mut tmp).is_err());
+    }
+
+    #[test]
+    fn warm_set_counts_first_touch_only() {
+        let m = sim_manifest();
+        let model = m.model("simnet").unwrap();
+        let sim = SimBackend::new(4);
+        let mut x = input_for(model, 3);
+        let mut tmp = Vec::new();
+        sim.run_chain_into(model, 1, 2, &mut x, &mut tmp).unwrap();
+        assert_eq!(sim.warmed_count(), 2);
+        let mut y = input_for(model, 4);
+        sim.run_chain_into(model, 1, 2, &mut y, &mut tmp).unwrap();
+        assert_eq!(sim.warmed_count(), 2, "re-runs must not grow the warm set");
+    }
+}

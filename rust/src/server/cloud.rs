@@ -1,24 +1,34 @@
-//! The cloud server: a `util::threadpool` worker per connection,
-//! PJRT-backed inference, pooled per-connection scratch.
+//! The cloud server: a `util::threadpool` worker per connection, a
+//! sharded + micro-batched inference engine, pooled per-connection
+//! scratch.
 //!
 //! Handles two request kinds:
 //! * `Features` — the decoupled path: decode the wire frame (its header
-//!   names model + stage + c) into the connection's scratch, dequantize
-//!   through the L1 artifact, run stages `i*+1..N`, reply with logits;
+//!   names model + stage + c) into the connection's scratch,
+//!   dequantize **natively on the connection worker**
+//!   (`quant::dequantize_into` — the executor's critical path never
+//!   sees the dequant hop or its staging buffers), then hand the flat
+//!   activation to the [`BatchEngine`] which finishes stages
+//!   `i*+1..N` and returns the logits;
 //! * `Image` — the cloud-only path: decode the PNG-like image, run the
-//!   full model.
+//!   full model on the connection's affinity shard.
 //!
 //! Concurrency model: the accept loop hands each connection to a fixed
 //! [`ThreadPool`]; when every pooled lane is parked on a long-lived
 //! connection, further connections run on dedicated overflow threads so
 //! control traffic (Stats/Shutdown) can never starve behind data
-//! connections. The
-//! PJRT executor is `Arc`-shared and serialized behind the
-//! `SharedExecutor` mutex; counters are atomics and the service-time
-//! histogram sits behind its own mutex. Every connection checks a
+//! connections. Compute is an [`ExecutorPool`] of independently-locked
+//! executors — the connection id is the shard affinity — and
+//! concurrent same-shape tails coalesce in the [`BatchEngine`] (one
+//! lock acquisition per batch; lone requests bypass the queue).
+//! Counters are atomics with an explicit taxonomy (data requests vs
+//! control frames vs malformed input — see [`Counters`]); the
+//! service-time and queue-wait histograms sit behind their own
+//! mutexes. Every connection checks a
 //! [`Scratch`](crate::util::pool::Scratch) out of a shared
-//! [`BufPool`], so its codec + proto hops reuse warm buffers — the
-//! steady-state request performs no heap allocations in those hops.
+//! [`BufPool`], so its codec + proto hops reuse warm buffers, and its
+//! float buffer is *lent* through the batch engine and restored with
+//! the logits in the same allocation.
 //!
 //! The wire frame being self-describing is what lets the edge
 //! re-decouple unilaterally — the "synchronize" step of §III-E costs
@@ -34,10 +44,11 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::compression::feature::{self, CodecScratch};
+use crate::compression::feature;
 use crate::compression::png;
-use crate::metrics::{Counters, SharedHistogram, Throughput};
-use crate::runtime::{Manifest, SharedExecutor};
+use crate::compression::quant;
+use crate::metrics::{BatchMetrics, Counters, SharedHistogram};
+use crate::runtime::{BatchConfig, BatchEngine, ExecutorPool, Manifest, SharedExecutor};
 use crate::server::proto::{self, RecvFrame};
 use crate::util::json::Json;
 use crate::util::pool::{BufPool, Scratch};
@@ -46,14 +57,31 @@ use crate::util::threadpool::ThreadPool;
 /// Default connection-worker count (the pooled serving lanes).
 pub const DEFAULT_WORKERS: usize = 16;
 
+/// Serving configuration: transport lanes + compute batching.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Pooled connection workers (overflow spawns dedicated threads).
+    pub workers: usize,
+    /// Micro-batch scheduler knobs (shard count comes from the pool).
+    pub batch: BatchConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { workers: DEFAULT_WORKERS, batch: BatchConfig::default() }
+    }
+}
+
 pub struct CloudServer {
-    exe: Arc<SharedExecutor>,
+    engine: Arc<BatchEngine>,
     manifest: Manifest,
     pub counters: Arc<Counters>,
     /// Per-request service time (frame read → reply written), seconds.
     pub service_hist: Arc<SharedHistogram>,
-    /// Requests per second since the server was constructed.
-    pub throughput: Arc<Throughput>,
+    /// Construction time — `req_per_sec` is derived from
+    /// `counters.requests` over this, not tracked separately (one
+    /// counter cannot desynchronize from itself).
+    started: Instant,
     stop: Arc<AtomicBool>,
     scratch_pool: Arc<BufPool>,
     workers: ThreadPool,
@@ -63,35 +91,59 @@ pub struct CloudServer {
     /// threads so control frames (Stats/Shutdown) can never starve
     /// behind long-lived data connections parked on every worker.
     active_conns: Arc<AtomicUsize>,
+    /// Monotonic connection ids — the shard affinity.
+    conn_seq: Arc<AtomicUsize>,
 }
 
 impl CloudServer {
+    /// Single-shard compatibility constructor: wraps one executor as a
+    /// one-lane pool with default batching.
     pub fn new(exe: Arc<SharedExecutor>) -> Self {
-        Self::with_workers(exe, DEFAULT_WORKERS)
+        Self::with_pool(ExecutorPool::from_shared(exe), ServeConfig::default())
     }
 
-    /// A server whose accept loop fans out to `workers` pooled
-    /// connection workers (min 1); connections beyond that run on
-    /// dedicated overflow threads.
+    /// [`CloudServer::new`] with an explicit connection-worker count.
     pub fn with_workers(exe: Arc<SharedExecutor>, workers: usize) -> Self {
-        let manifest = exe.manifest_clone();
+        Self::with_pool(
+            ExecutorPool::from_shared(exe),
+            ServeConfig { workers, ..ServeConfig::default() },
+        )
+    }
+
+    /// The full constructor: a sharded executor pool plus serving
+    /// knobs. This is the production path — shard count scales the
+    /// compute half, `cfg.batch` tunes coalescing.
+    pub fn with_pool(pool: Arc<ExecutorPool>, cfg: ServeConfig) -> Self {
+        let manifest = pool.manifest().clone();
+        let workers = cfg.workers.max(1);
         Self {
-            exe,
+            engine: BatchEngine::new(pool, cfg.batch),
             manifest,
             counters: Arc::new(Counters::default()),
             service_hist: Arc::new(SharedHistogram::default()),
-            throughput: Arc::new(Throughput::new()),
+            started: Instant::now(),
             stop: Arc::new(AtomicBool::new(false)),
-            scratch_pool: BufPool::new(workers.max(1)),
-            workers: ThreadPool::new(workers.max(1)),
-            worker_count: workers.max(1),
+            scratch_pool: BufPool::new(workers),
+            workers: ThreadPool::new(workers),
+            worker_count: workers,
             active_conns: Arc::new(AtomicUsize::new(0)),
+            conn_seq: Arc::new(AtomicUsize::new(0)),
         }
     }
 
     /// Scratch-pool counters (hit rate is the allocation-reuse metric).
     pub fn pool_stats(&self) -> crate::util::pool::PoolStats {
         self.scratch_pool.stats()
+    }
+
+    /// Micro-batch scheduler telemetry.
+    pub fn batch_metrics(&self) -> &BatchMetrics {
+        &self.engine.metrics
+    }
+
+    /// The compute pool behind the batch engine.
+    pub fn executor_pool(&self) -> &Arc<ExecutorPool> {
+        self.engine.pool()
     }
 
     /// Bind and serve on a background thread; returns the local address
@@ -109,6 +161,7 @@ impl CloudServer {
                     Ok(stream) => {
                         me.counters.inc_connections();
                         let me2 = Arc::clone(&me);
+                        let conn_id = me.conn_seq.fetch_add(1, Ordering::Relaxed);
                         let assigned =
                             me.active_conns.fetch_add(1, Ordering::SeqCst);
                         let job = move || {
@@ -122,7 +175,7 @@ impl CloudServer {
                                 }
                             }
                             let _dec = Dec(Arc::clone(&me2.active_conns));
-                            if let Err(e) = me2.serve_conn(stream) {
+                            if let Err(e) = me2.serve_conn(stream, conn_id) {
                                 crate::log_debug!("cloud", "connection ended: {e:#}");
                             }
                         };
@@ -145,7 +198,7 @@ impl CloudServer {
         Ok((local, handle))
     }
 
-    fn serve_conn(&self, stream: TcpStream) -> Result<()> {
+    fn serve_conn(&self, stream: TcpStream, conn_id: usize) -> Result<()> {
         stream.set_nodelay(true).ok();
         let mut writer = stream.try_clone()?;
         let mut reader = BufReader::new(stream);
@@ -159,7 +212,7 @@ impl CloudServer {
                 RecvFrame::Data(k) => k,
                 RecvFrame::Eof => return Ok(()),
                 RecvFrame::Malformed { reason, resync } => {
-                    self.counters.inc_errors();
+                    self.counters.inc_malformed();
                     proto::write_frame_raw(&mut writer, proto::KIND_ERROR, reason.as_bytes())?;
                     if resync {
                         continue; // stream still framed; keep serving
@@ -168,69 +221,49 @@ impl CloudServer {
                 }
             };
             let t0 = Instant::now();
-            let Scratch { frame, values, floats, codec, wire } = &mut *scratch;
+            let sc = &mut *scratch;
             match kind {
                 proto::KIND_FEATURES => {
-                    self.counters.inc_requests();
-                    self.throughput.observe(1);
-                    self.counters.add_bytes(frame.len() as u64);
-                    match self.handle_features(frame, codec, values, floats) {
-                        Ok(()) => {
-                            proto::write_logits_frame(&mut writer, floats, wire)?;
-                        }
-                        Err(e) => {
-                            self.counters.inc_errors();
-                            proto::write_frame_raw(
-                                &mut writer,
-                                proto::KIND_ERROR,
-                                format!("{e:#}").as_bytes(),
-                            )?;
-                        }
-                    }
-                    self.service_hist.record(t0.elapsed().as_secs_f64());
+                    self.note_data_request(sc.frame.len());
+                    let result = self.handle_features(conn_id, sc);
+                    self.reply_data(&mut writer, sc, t0, result)?;
                 }
                 proto::KIND_IMAGE => {
-                    self.counters.inc_requests();
-                    self.throughput.observe(1);
-                    self.counters.add_bytes(frame.len() as u64);
-                    let result = if frame.len() < 4 {
+                    self.note_data_request(sc.frame.len());
+                    let result = if sc.frame.len() < 4 {
                         Err(anyhow!("short image frame"))
                     } else {
-                        let model_id = u16::from_le_bytes([frame[0], frame[1]]);
-                        self.handle_image(model_id, &frame[4..], floats)
+                        let model_id = u16::from_le_bytes([sc.frame[0], sc.frame[1]]);
+                        let Scratch { frame, floats, .. } = sc;
+                        self.handle_image(conn_id, model_id, &frame[4..], floats)
                     };
-                    match result {
-                        Ok(()) => {
-                            proto::write_logits_frame(&mut writer, floats, wire)?;
-                        }
-                        Err(e) => {
-                            self.counters.inc_errors();
-                            proto::write_frame_raw(
-                                &mut writer,
-                                proto::KIND_ERROR,
-                                format!("{e:#}").as_bytes(),
-                            )?;
-                        }
-                    }
-                    self.service_hist.record(t0.elapsed().as_secs_f64());
+                    self.reply_data(&mut writer, sc, t0, result)?;
                 }
                 proto::KIND_STATS => {
+                    self.counters.inc_control();
                     let json = self.stats_json();
                     proto::write_frame_raw(&mut writer, proto::KIND_STATS_REPLY, json.as_bytes())?;
                 }
                 proto::KIND_PROBE => {
                     // Bandwidth probe: acknowledge immediately; the edge
-                    // times the (throttled) upload of the padding.
-                    self.counters.add_bytes(frame.len() as u64);
+                    // times the (throttled) upload of the padding. Probe
+                    // padding is accounted separately from data ingress
+                    // so req/bytes rates stay honest.
+                    self.counters.inc_control();
+                    self.counters.add_probe_bytes(sc.frame.len() as u64);
                     proto::write_frame_raw(&mut writer, proto::KIND_PROBE_ACK, &[])?;
                 }
                 proto::KIND_SHUTDOWN => {
+                    self.counters.inc_control();
                     self.stop.store(true, Ordering::Relaxed);
                     // The accept loop unblocks on the next connection
                     // (`request_shutdown` makes one).
                     return Ok(());
                 }
                 other => {
+                    // Framed correctly but nonsensical here (e.g. a
+                    // Logits frame sent *to* the server).
+                    self.counters.inc_malformed();
                     proto::write_frame_raw(
                         &mut writer,
                         proto::KIND_ERROR,
@@ -239,6 +272,35 @@ impl CloudServer {
                 }
             }
         }
+    }
+
+    /// Ingress accounting shared by every data-request kind.
+    fn note_data_request(&self, payload_len: usize) {
+        self.counters.inc_requests();
+        self.counters.add_bytes(payload_len as u64);
+    }
+
+    /// Reply plumbing shared by every data-request kind: logits frame
+    /// on success, error frame (+ error counter) on failure, service
+    /// histogram either way.
+    fn reply_data(
+        &self,
+        writer: &mut impl std::io::Write,
+        sc: &mut Scratch,
+        t0: Instant,
+        result: Result<()>,
+    ) -> Result<()> {
+        match result {
+            Ok(()) => {
+                proto::write_logits_frame(writer, &sc.floats, &mut sc.wire)?;
+            }
+            Err(e) => {
+                self.counters.inc_errors();
+                proto::write_frame_raw(writer, proto::KIND_ERROR, format!("{e:#}").as_bytes())?;
+            }
+        }
+        self.service_hist.record(t0.elapsed().as_secs_f64());
+        Ok(())
     }
 
     fn stats_json(&self) -> String {
@@ -250,58 +312,105 @@ impl CloudServer {
         } else {
             (hist.percentile(50.0) * 1e3, hist.percentile(95.0) * 1e3)
         };
+        let bm = &self.engine.metrics;
+        let (batches, batched_requests, bypassed, max_occ) = bm.snapshot();
+        let qw = bm.queue_wait.snapshot();
+        let (qw50, qw95) = if qw.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (qw.percentile(50.0) * 1e3, qw.percentile(95.0) * 1e3)
+        };
+        let pool = self.engine.pool();
+        let shards = pool
+            .shard_stats()
+            .into_iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("runs", Json::num(s.runs as f64)),
+                    ("busy_ms", Json::num(s.busy_seconds * 1e3)),
+                ])
+            })
+            .collect();
         Json::obj(vec![
+            // Data-request taxonomy (see metrics::Counters): `requests`
+            // counts Features/Image only; probes and stats queries land
+            // in control_frames/probe_bytes.
             ("requests", Json::num(req as f64)),
             ("errors", Json::num(err as f64)),
             ("bytes_rx", Json::num(bytes as f64)),
-            ("compiled", Json::num(self.exe.cached_count() as f64)),
+            ("control_frames", Json::num(self.counters.control() as f64)),
+            ("probe_bytes", Json::num(self.counters.probe() as f64)),
+            ("malformed", Json::num(self.counters.malformed_count() as f64)),
+            ("compiled", Json::num(pool.cached_count() as f64)),
             ("connections", Json::num(self.counters.connections() as f64)),
             ("pool_hits", Json::num(ps.hits as f64)),
             ("pool_misses", Json::num(ps.misses as f64)),
-            ("req_per_sec", Json::num(self.throughput.per_second())),
+            (
+                "req_per_sec",
+                Json::num(req as f64 / self.started.elapsed().as_secs_f64().max(1e-9)),
+            ),
             ("service_p50_ms", Json::num(p50)),
             ("service_p95_ms", Json::num(p95)),
+            // Compute-spine telemetry: shard utilization + batching.
+            ("shard_count", Json::num(pool.shard_count() as f64)),
+            ("shards", Json::arr(shards)),
+            ("batches", Json::num(batches as f64)),
+            ("batched_requests", Json::num(batched_requests as f64)),
+            ("batch_bypassed", Json::num(bypassed as f64)),
+            ("batch_mean_occupancy", Json::num(bm.mean_occupancy())),
+            ("batch_max_occupancy", Json::num(max_occ as f64)),
+            ("queue_wait_p50_ms", Json::num(qw50)),
+            ("queue_wait_p95_ms", Json::num(qw95)),
         ])
         .to_string()
     }
 
-    /// Decode a feature frame and finish inference; the logits land in
-    /// `logits` (reused). All buffers are the connection's scratch.
-    fn handle_features(
-        &self,
-        bytes: &[u8],
-        ws: &mut CodecScratch,
-        values: &mut Vec<u16>,
-        logits: &mut Vec<f32>,
-    ) -> Result<()> {
-        let h = feature::decode_into(bytes, ws, values).map_err(anyhow::Error::new)?;
-        let model = &self
-            .manifest
-            .models
-            .get(h.model as usize)
-            .ok_or_else(|| anyhow!("bad model id {}", h.model))?
-            .name;
-        let m = self.manifest.model(model)?;
-        let i = h.stage as usize;
-        if i == 0 || i > m.num_stages() {
-            return Err(anyhow!("bad stage {i}"));
-        }
-        let out_shape = &m.stages[i - 1].out_shape;
-        let n = m.num_stages();
-        // One locked region for the whole tail keeps per-request lock
-        // traffic to a single acquisition.
-        self.exe.with(|e| {
-            let mut cur = e.run_dequant_parts(values, h.lo, h.hi, h.c, out_shape)?;
-            for j in i + 1..=n {
-                cur = e.run_stage(model, j, &cur)?.tensor;
+    /// Decode a feature frame, dequantize natively, and finish
+    /// inference through the batch engine; the logits land in
+    /// `scratch.floats` (reused). The float buffer is lent through the
+    /// engine by move and restored as the same allocation.
+    fn handle_features(&self, conn_id: usize, scratch: &mut Scratch) -> Result<()> {
+        let (model_id, from) = {
+            let Scratch { frame, values, floats, codec, .. } = scratch;
+            let h = feature::decode_into(frame, codec, values).map_err(anyhow::Error::new)?;
+            let m = self
+                .manifest
+                .models
+                .get(h.model as usize)
+                .ok_or_else(|| anyhow!("bad model id {}", h.model))?;
+            let i = h.stage as usize;
+            if i == 0 || i > m.num_stages() {
+                return Err(anyhow!("bad stage {i}"));
             }
-            logits.clear();
-            logits.extend_from_slice(cur.data());
-            Ok(())
-        })
+            // Validate geometry *before* enqueueing: a malformed
+            // request must fail alone, never poison a batch it would
+            // have joined.
+            let stage = &m.stages[i - 1];
+            if values.len() != stage.out_elems {
+                return Err(anyhow!(
+                    "stage {i} feature map has {} elements, frame carried {}",
+                    stage.out_elems,
+                    values.len()
+                ));
+            }
+            // Native dequant on the connection worker: the executor
+            // shard never spends its lock time widening u16s.
+            quant::dequantize_into(values, h.lo, h.hi, h.c, floats);
+            (h.model, i + 1)
+        };
+        let activation = scratch.lend_floats();
+        let out = self.engine.infer_tail(conn_id, model_id, from, activation)?;
+        scratch.restore_floats(out);
+        Ok(())
     }
 
-    fn handle_image(&self, model_id: u16, png_bytes: &[u8], logits: &mut Vec<f32>) -> Result<()> {
+    fn handle_image(
+        &self,
+        conn_id: usize,
+        model_id: u16,
+        png_bytes: &[u8],
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
         let model = &self
             .manifest
             .models
@@ -310,8 +419,24 @@ impl CloudServer {
             .name;
         let m = self.manifest.model(model)?;
         let img = png::decode(png_bytes).map_err(anyhow::Error::new)?;
+        // Validate geometry before building the tensor — a wrong-sized
+        // image must produce an Error reply, not a worker panic.
+        let expect: usize = m.input_shape.iter().product();
+        if img.data.len() != expect {
+            return Err(anyhow!(
+                "image is {}x{}x{} ({} bytes), {model} expects {:?}",
+                img.w,
+                img.h,
+                img.channels,
+                img.data.len(),
+                m.input_shape
+            ));
+        }
         let x = crate::data::gen::from_rgb8(&img.data, m.input_shape.clone());
-        let out = self.exe.run_full(model, &x)?;
+        let out = self
+            .engine
+            .pool()
+            .run_on(conn_id, |e| e.run_full(model, &x))?;
         logits.clear();
         logits.extend_from_slice(out.tensor.data());
         Ok(())

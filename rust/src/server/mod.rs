@@ -5,9 +5,11 @@
 //!   raw zero-copy read/write over caller-owned buffers plus a typed
 //!   [`proto::Frame`] wrapper;
 //! * [`cloud`] — the cloud server: a threadpool worker per connection,
-//!   pooled per-connection scratch, dequantizes feature frames (L1
-//!   dequant artifact) and finishes inference, or runs the full model
-//!   on uploaded images;
+//!   pooled per-connection scratch; feature frames are dequantized
+//!   natively on the connection worker and finished through the
+//!   sharded, micro-batched inference engine
+//!   (`runtime::{ExecutorPool, BatchEngine}`); image frames run the
+//!   full model on the connection's affinity shard;
 //! * [`edge`] — the edge client: drives the shared
 //!   `coordinator::session::Session` (head stages, quantize,
 //!   entropy-code), ships frames through the throttled socket, and
@@ -17,5 +19,5 @@ pub mod cloud;
 pub mod edge;
 pub mod proto;
 
-pub use cloud::CloudServer;
+pub use cloud::{CloudServer, ServeConfig};
 pub use edge::EdgeClient;

@@ -33,7 +33,9 @@ impl Default for Bencher {
 
 impl Bencher {
     /// Reads the cargo-bench CLI: any non-flag argument is a substring
-    /// filter; `--quick` shortens the target time (CI).
+    /// filter; `--quick` shortens the target time (CI), and `--smoke`
+    /// (the verify.sh smoke mode) shortens it further — benches that
+    /// drive their own iteration counts also check [`Bencher::smoke`].
     pub fn from_env() -> Self {
         let mut filter = None;
         let mut target = Duration::from_millis(400);
@@ -41,11 +43,18 @@ impl Bencher {
             match arg.as_str() {
                 "--bench" | "--test" => {} // cargo passes these through
                 "--quick" => target = Duration::from_millis(60),
+                "--smoke" => target = Duration::from_millis(30),
                 s if !s.starts_with('-') => filter = Some(s.to_string()),
                 _ => {}
             }
         }
         Self { filter, target, results: Vec::new() }
+    }
+
+    /// True when `--smoke` was passed: emit well-formed results as fast
+    /// as possible (CI wiring check, not a measurement).
+    pub fn smoke() -> bool {
+        std::env::args().any(|a| a == "--smoke")
     }
 
     fn enabled(&self, name: &str) -> bool {

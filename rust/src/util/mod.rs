@@ -9,6 +9,7 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod once_map;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,246 @@
+//! A concurrent build-exactly-once map: the compile-cache primitive.
+//!
+//! `HashMap` + "check, miss, build, insert" has a classic race: two
+//! threads both miss and both build the same (expensive) artifact.
+//! [`OnceMap::get_or_try_build`] closes it with a per-key in-flight
+//! marker — the first thread to miss becomes the builder, later threads
+//! park on a condvar until the value lands. A failed build releases the
+//! key so a later caller can retry (errors are not cached), and a
+//! builder that *panics* also releases it (unwind guard) instead of
+//! wedging every waiter forever.
+//!
+//! The build closure runs **outside** the map lock, so building one key
+//! never blocks lookups or builds of other keys.
+
+use std::borrow::Borrow;
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Condvar, Mutex};
+
+use anyhow::Result;
+
+#[derive(Debug)]
+enum Slot<V> {
+    Ready(V),
+    Building,
+}
+
+/// Map from `K` to a cached `V` where each key's value is built at most
+/// once even under concurrent first access. `V: Clone` — store an `Arc`
+/// for expensive values.
+#[derive(Debug)]
+pub struct OnceMap<K, V> {
+    slots: Mutex<HashMap<K, Slot<V>>>,
+    cv: Condvar,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Default for OnceMap<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> OnceMap<K, V> {
+    pub fn new() -> Self {
+        Self { slots: Mutex::new(HashMap::new()), cv: Condvar::new() }
+    }
+
+    /// Number of *ready* values (in-flight builds are not counted).
+    pub fn len(&self) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| matches!(s, Slot::Ready(_)))
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The ready value for `key`, if any (never waits on a builder).
+    /// Borrowed-key lookup (`&str` against `String` keys) so the hit
+    /// path allocates nothing.
+    pub fn get<Q>(&self, key: &Q) -> Option<V>
+    where
+        K: Borrow<Q>,
+        Q: Hash + Eq + ?Sized,
+    {
+        match self.slots.lock().unwrap().get(key) {
+            Some(Slot::Ready(v)) => Some(v.clone()),
+            _ => None,
+        }
+    }
+
+    /// Fetch `key`, building it with `build` on first access. At most
+    /// one build runs per key at a time; concurrent callers park until
+    /// it lands. On `Err` the builder gets the error and the key is
+    /// released — a parked waiter then claims the build and retries
+    /// with its own closure (errors are never cached). The key is only
+    /// cloned-to-owned on the build path; hits borrow it.
+    pub fn get_or_try_build<Q>(&self, key: &Q, build: impl FnOnce() -> Result<V>) -> Result<V>
+    where
+        K: Borrow<Q>,
+        Q: Hash + Eq + ToOwned<Owned = K> + ?Sized,
+    {
+        {
+            let mut slots = self.slots.lock().unwrap();
+            loop {
+                match slots.get(key) {
+                    Some(Slot::Ready(v)) => return Ok(v.clone()),
+                    Some(Slot::Building) => {
+                        slots = self.cv.wait(slots).unwrap();
+                        // Re-inspect: the build finished (Ready), failed
+                        // (absent — claim it below), or is still going.
+                    }
+                    None => {
+                        slots.insert(key.to_owned(), Slot::Building);
+                        break; // we are the builder
+                    }
+                }
+            }
+        }
+
+        // Build outside the lock. The guard un-claims the key if `build`
+        // panics, so waiters fail over to rebuilding instead of hanging.
+        struct Unclaim<'a, K: Eq + Hash + Clone, V: Clone, Q: Hash + Eq + ?Sized>
+        where
+            K: Borrow<Q>,
+        {
+            map: &'a OnceMap<K, V>,
+            key: &'a Q,
+            armed: bool,
+        }
+        impl<K: Eq + Hash + Clone, V: Clone, Q: Hash + Eq + ?Sized> Drop for Unclaim<'_, K, V, Q>
+        where
+            K: Borrow<Q>,
+        {
+            fn drop(&mut self) {
+                if self.armed {
+                    self.map.slots.lock().unwrap().remove(self.key);
+                    self.map.cv.notify_all();
+                }
+            }
+        }
+        let mut guard = Unclaim { map: self, key, armed: true };
+        let built = build();
+        match built {
+            Ok(v) => {
+                guard.armed = false;
+                let mut slots = self.slots.lock().unwrap();
+                slots.insert(key.to_owned(), Slot::Ready(v.clone()));
+                drop(slots);
+                self.cv.notify_all();
+                Ok(v)
+            }
+            // The guard's drop releases the key and wakes waiters.
+            Err(e) => Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Barrier};
+
+    #[test]
+    fn builds_once_under_race() {
+        let map = Arc::new(OnceMap::<String, usize>::new());
+        let builds = Arc::new(AtomicUsize::new(0));
+        let start = Arc::new(Barrier::new(8));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let map = Arc::clone(&map);
+                let builds = Arc::clone(&builds);
+                let start = Arc::clone(&start);
+                std::thread::spawn(move || {
+                    start.wait(); // all threads miss "simultaneously"
+                    map.get_or_try_build("stage_1.hlo", || {
+                        builds.fetch_add(1, Ordering::SeqCst);
+                        // A slow compile widens the race window.
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        Ok(42usize)
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 42);
+        }
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "artifact compiled more than once");
+        assert_eq!(map.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_build_independently() {
+        let map = OnceMap::<usize, usize>::new();
+        for k in 0..10 {
+            assert_eq!(map.get_or_try_build(&k, || Ok(k * k)).unwrap(), k * k);
+        }
+        assert_eq!(map.len(), 10);
+        assert_eq!(map.get(&3), Some(9));
+        assert_eq!(map.get(&99), None);
+    }
+
+    #[test]
+    fn failed_build_releases_key_for_retry() {
+        let map = OnceMap::<u8, u8>::new();
+        assert!(map.get_or_try_build(&1, || Err(anyhow::anyhow!("boom"))).is_err());
+        assert_eq!(map.len(), 0, "errors must not be cached");
+        assert_eq!(map.get_or_try_build(&1, || Ok(7)).unwrap(), 7);
+    }
+
+    #[test]
+    fn waiters_survive_builder_failure() {
+        let map = Arc::new(OnceMap::<u8, u8>::new());
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let map = Arc::clone(&map);
+                let attempts = Arc::clone(&attempts);
+                std::thread::spawn(move || {
+                    map.get_or_try_build(&9, || {
+                        let n = attempts.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                        if n == 0 {
+                            Err(anyhow::anyhow!("first build fails"))
+                        } else {
+                            Ok(3)
+                        }
+                    })
+                })
+            })
+            .collect();
+        let ok = handles.into_iter().filter_map(|h| h.join().unwrap().ok());
+        // At least one caller (the retrier) must see the value; nobody hangs.
+        assert!(ok.count() >= 1);
+        assert_eq!(map.get(&9), Some(3));
+    }
+
+    #[test]
+    fn builder_panic_does_not_wedge_waiters() {
+        let map = Arc::new(OnceMap::<u8, u8>::new());
+        let start = Arc::new(Barrier::new(2));
+        let m2 = Arc::clone(&map);
+        let s2 = Arc::clone(&start);
+        let panicker = std::thread::spawn(move || {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                m2.get_or_try_build(&5, || {
+                    s2.wait(); // let the waiter queue up behind us
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    panic!("compile crashed")
+                })
+            }));
+        });
+        start.wait();
+        // This call either waits out the panicking builder and then
+        // builds itself, or arrives after the key was released.
+        let v = map.get_or_try_build(&5, || Ok(11)).unwrap();
+        assert_eq!(v, 11);
+        panicker.join().unwrap();
+    }
+}

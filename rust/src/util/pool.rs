@@ -46,6 +46,22 @@ impl Scratch {
         self.floats.clear();
     }
 
+    /// Lend the float buffer across an ownership boundary (the
+    /// micro-batch engine takes activations by move and returns the
+    /// logits in the same allocation). Pair with
+    /// [`Scratch::restore_floats`]; while lent, `floats` is an empty
+    /// stand-in Vec, so a failed handoff costs at most one fresh
+    /// allocation on the next request.
+    pub fn lend_floats(&mut self) -> Vec<f32> {
+        std::mem::take(&mut self.floats)
+    }
+
+    /// Take a buffer back after a [`Scratch::lend_floats`] round trip
+    /// (contents are the callee's output — typically logits).
+    pub fn restore_floats(&mut self, floats: Vec<f32>) {
+        self.floats = floats;
+    }
+
     /// Bytes currently reserved across the plain buffers (capacity
     /// telemetry for the stats endpoint).
     pub fn reserved_bytes(&self) -> usize {
@@ -200,6 +216,22 @@ mod tests {
         assert_eq!(st.idle, 2);
         assert_eq!(st.misses, 5);
         assert_eq!(st.returned, 2);
+    }
+
+    #[test]
+    fn lend_restore_roundtrip_keeps_allocation() {
+        let pool = BufPool::new(2);
+        let mut s = pool.get();
+        s.floats.reserve(1024);
+        s.floats.extend_from_slice(&[1.0, 2.0]);
+        let ptr = s.floats.as_ptr();
+        let mut lent = s.lend_floats();
+        assert!(s.floats.is_empty() && s.floats.capacity() == 0, "stand-in must be empty");
+        lent.clear();
+        lent.extend_from_slice(&[9.0; 16]); // the callee's "logits"
+        s.restore_floats(lent);
+        assert_eq!(s.floats.as_ptr(), ptr, "handoff must reuse the same allocation");
+        assert_eq!(s.floats.len(), 16);
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! Serving under contention, artifact-free: a sharded + micro-batched
+//! cloud server on the deterministic sim backend, driven by ≥8
+//! concurrent TCP connections with mixed Features / Image / Stats
+//! traffic. Asserts the two properties the batching rewrite must
+//! preserve:
+//!
+//! 1. **Byte identity** — every logits reply is bit-for-bit equal to
+//!    the serial single-executor path, whichever shard served it and
+//!    whether or not it coalesced into a batch;
+//! 2. **Counter reconciliation** — data requests, errors, and
+//!    batched/bypassed tallies sum exactly to what the clients sent
+//!    (no lost or duplicated replies), and control traffic stays out
+//!    of the data counters.
+//!
+//! Unlike `tests/serving.rs` (PJRT, skips without `make artifacts`),
+//! this suite always runs.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+
+use jalad::compression::feature;
+use jalad::compression::png::{self, Image8};
+use jalad::compression::quant;
+use jalad::runtime::sim::sim_manifest;
+use jalad::runtime::{BatchConfig, Executor, ExecutorPool};
+use jalad::server::proto::{self, Frame, RecvFrame};
+use jalad::server::{CloudServer, ServeConfig};
+use jalad::util::json::Json;
+
+const FANIN: usize = 8;
+const THREADS: usize = 8;
+const FEATURES_PER_THREAD: usize = 12;
+
+/// Deterministic pseudo stage-`i` activation for (thread, request).
+fn activation(seed: usize, elems: usize) -> Vec<f32> {
+    (0..elems)
+        .map(|j| {
+            let h = ((j + 1) as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(seed as u64 * 0x2545_F491_4F6C_DD1D);
+            ((h >> 42) & 0x3FFF) as f32 / 1638.4 - 2.0
+        })
+        .collect()
+}
+
+struct FeatureCase {
+    wire: Vec<u8>,
+    expected_bits: Vec<u32>,
+}
+
+/// Build the wire frame and the serial-path expected logits for one
+/// feature request: quantize → encode (client side), then
+/// dequantize → tail stages `i+1..=N` on a lone executor (the serial
+/// reference the batched server must match bit-for-bit).
+fn feature_case(reference: &Executor, stage: usize, c: u8, seed: usize) -> FeatureCase {
+    let m = reference.manifest().model("simnet").unwrap();
+    let xs = activation(seed, m.stages[stage - 1].out_elems);
+    let q = quant::quantize(&xs, c);
+    let wire = feature::encode(&q, stage as u16, 0);
+    let mut tail = vec![quant::dequantize(&q)];
+    reference.run_tail_batch("simnet", stage + 1, &mut tail).unwrap();
+    FeatureCase { wire, expected_bits: tail[0].iter().map(|v| v.to_bits()).collect() }
+}
+
+struct ImageCase {
+    png: Vec<u8>,
+    expected_bits: Vec<u32>,
+}
+
+fn image_case(reference: &Executor, seed: usize) -> ImageCase {
+    let m = reference.manifest().model("simnet").unwrap();
+    let (h, w) = (m.input_shape[1], m.input_shape[2]);
+    let x = jalad::data::gen::sample_image_shaped(seed % 16, seed, &m.input_shape);
+    let rgb = jalad::data::gen::to_rgb8(&x);
+    let png = png::encode(&Image8::new(w, h, 3, rgb.clone()));
+    // The server reconstructs from the 8-bit image, so the reference
+    // must see the same u8 round trip.
+    let back = jalad::data::gen::from_rgb8(&rgb, m.input_shape.clone());
+    let logits = reference.run_full("simnet", &back).unwrap().tensor;
+    ImageCase { png, expected_bits: logits.data().iter().map(|v| v.to_bits()).collect() }
+}
+
+fn read_reply(reader: &mut BufReader<TcpStream>, rx: &mut Vec<u8>) -> (u8, Vec<u8>) {
+    match proto::read_frame_into(reader, rx).unwrap() {
+        RecvFrame::Data(k) => (k, rx.clone()),
+        other => panic!("unexpected reply {other:?}"),
+    }
+}
+
+#[test]
+fn contended_mixed_traffic_is_bit_identical_and_reconciles() {
+    let manifest = sim_manifest();
+    let pool = ExecutorPool::new_sim_with(manifest.clone(), 4, FANIN);
+    let server = Arc::new(CloudServer::with_pool(
+        pool,
+        ServeConfig {
+            workers: THREADS,
+            batch: BatchConfig {
+                max_batch: 4,
+                gather_window: std::time::Duration::from_micros(500),
+                enabled: true,
+            },
+        },
+    ));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+
+    // Serial reference: one lone executor, no sharding, no batching.
+    let reference = Executor::sim_with(manifest, FANIN);
+    let cases: Vec<Vec<FeatureCase>> = (0..THREADS)
+        .map(|t| {
+            (0..FEATURES_PER_THREAD)
+                .map(|k| {
+                    let stage = (k % 4) + 1; // every cut point, incl. i* = N
+                    let c = [2u8, 4, 8][k % 3];
+                    feature_case(&reference, stage, c, t * 1000 + k)
+                })
+                .collect()
+        })
+        .collect();
+    let images: Vec<ImageCase> = (0..THREADS).map(|t| image_case(&reference, t)).collect();
+
+    let start = Arc::new(Barrier::new(THREADS));
+    let handles: Vec<_> = cases
+        .into_iter()
+        .zip(images)
+        .enumerate()
+        .map(|(t, (feats, image))| {
+            let start = Arc::clone(&start);
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_nodelay(true).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut rx = Vec::new();
+                let mut replies = 0usize;
+                start.wait(); // contend for real
+                for (k, case) in feats.iter().enumerate() {
+                    proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &case.wire)
+                        .unwrap();
+                    let (kind, payload) = read_reply(&mut reader, &mut rx);
+                    assert_eq!(kind, proto::KIND_LOGITS, "thread {t} req {k}");
+                    let mut logits = Vec::new();
+                    proto::parse_logits_into(&payload, &mut logits).unwrap();
+                    let bits: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        bits, case.expected_bits,
+                        "thread {t} req {k}: batched logits != serial path"
+                    );
+                    replies += 1;
+                    if k % 5 == 0 {
+                        // Interleave control traffic mid-connection.
+                        proto::write_frame_raw(&mut stream, proto::KIND_STATS, &[]).unwrap();
+                        let (kind, _) = read_reply(&mut reader, &mut rx);
+                        assert_eq!(kind, proto::KIND_STATS_REPLY);
+                    }
+                }
+                // One malformed data request: must error, alone.
+                proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &[0xde, 0xad])
+                    .unwrap();
+                let (kind, _) = read_reply(&mut reader, &mut rx);
+                assert_eq!(kind, proto::KIND_ERROR);
+                replies += 1;
+                // One cloud-only image request.
+                Frame::Image { model_id: 0, hw: 16, png: image.png.clone() }
+                    .write_to(&mut stream)
+                    .unwrap();
+                let (kind, payload) = read_reply(&mut reader, &mut rx);
+                assert_eq!(kind, proto::KIND_LOGITS, "thread {t} image");
+                let mut logits = Vec::new();
+                proto::parse_logits_into(&payload, &mut logits).unwrap();
+                let bits: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits, image.expected_bits, "thread {t}: image logits diverged");
+                replies += 1;
+                replies
+            })
+        })
+        .collect();
+    let replies: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(replies, THREADS * (FEATURES_PER_THREAD + 2), "lost or duplicated replies");
+
+    // Counters must reconcile exactly with what the clients sent.
+    let mut s = TcpStream::connect(addr).unwrap();
+    Frame::Stats.write_to(&mut s).unwrap();
+    let reply = Frame::read_from(&mut s).unwrap();
+    let Frame::StatsReply(b) = reply else { panic!("unexpected reply {reply:?}") };
+    let j = Json::parse(&String::from_utf8_lossy(&b)).unwrap();
+    let num = |k: &str| j.get(k).and_then(|v| v.as_u64()).unwrap_or_else(|| panic!("missing {k}"));
+    let data_sent = (THREADS * (FEATURES_PER_THREAD + 2)) as u64;
+    assert_eq!(num("requests"), data_sent, "stats: {j:?}");
+    assert_eq!(num("errors"), THREADS as u64, "one garbage frame per thread");
+    assert_eq!(num("malformed"), 0);
+    assert_eq!(num("shard_count"), 4);
+    // Every *valid* features request went through the engine exactly
+    // once, batched or bypassed.
+    assert_eq!(
+        num("batched_requests") + num("batch_bypassed"),
+        (THREADS * FEATURES_PER_THREAD) as u64,
+        "engine lost or double-served tails: {j:?}"
+    );
+    // Mid-connection stats queries were counted as control, not data.
+    assert!(num("control_frames") >= (THREADS * 3 + 1) as u64);
+    assert!(num("connections") >= (THREADS + 1) as u64);
+    // Shard utilization must show more than one shard doing real work.
+    let shards = j.get("shards").and_then(|v| v.as_arr()).expect("shards array");
+    let active = shards
+        .iter()
+        .filter(|s| s.get("runs").and_then(|v| v.as_u64()).unwrap_or(0) > 0)
+        .count();
+    assert!(active >= 2, "connection affinity never spread load: {j:?}");
+    CloudServer::request_shutdown(addr);
+}
+
+/// The serialized (single-shard, batching-off) configuration serves the
+/// same bytes — the A/B baseline the bench compares against is not a
+/// different *answer*, only a different schedule.
+#[test]
+fn serialized_config_matches_batched_config() {
+    let manifest = sim_manifest();
+    let mk = |shards: usize, enabled: bool| {
+        let pool = ExecutorPool::new_sim_with(manifest.clone(), shards, FANIN);
+        let server = Arc::new(CloudServer::with_pool(
+            pool,
+            ServeConfig {
+                workers: 4,
+                batch: BatchConfig { enabled, ..BatchConfig::default() },
+            },
+        ));
+        Arc::clone(&server).spawn("127.0.0.1:0").unwrap().0
+    };
+    let serialized = mk(1, false);
+    let batched = mk(4, true);
+
+    let reference = Executor::sim_with(manifest, FANIN);
+    for (k, (stage, c)) in [(1usize, 4u8), (2, 2), (3, 8), (4, 4)].into_iter().enumerate() {
+        let case = feature_case(&reference, stage, c, 31_000 + k);
+        let ask = |addr| {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut rx = Vec::new();
+            proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &case.wire).unwrap();
+            let (kind, payload) = read_reply(&mut reader, &mut rx);
+            assert_eq!(kind, proto::KIND_LOGITS);
+            let mut logits = Vec::new();
+            proto::parse_logits_into(&payload, &mut logits).unwrap();
+            logits.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+        };
+        let a = ask(serialized);
+        let b = ask(batched);
+        assert_eq!(a, b, "stage {stage} c {c}: A/B arms disagree");
+        assert_eq!(
+            a, case.expected_bits,
+            "stage {stage} c {c}: serial reference disagrees"
+        );
+    }
+    CloudServer::request_shutdown(serialized);
+    CloudServer::request_shutdown(batched);
+}

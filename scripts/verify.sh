@@ -1,7 +1,28 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build, test, lint. Run from anywhere.
+# Tier-1 verification: format, build, test, lint. Run from anywhere.
+#
+#   scripts/verify.sh           # full gate
+#   scripts/verify.sh --smoke   # + bench smoke: runs the serving
+#                               # concurrency A/B a few iterations and
+#                               # checks BENCH_pipeline.json is emitted
+#                               # and well-formed
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+SMOKE=0
+for arg in "$@"; do
+  case "$arg" in
+    --smoke) SMOKE=1 ;;
+    *) echo "verify.sh: unknown argument $arg" >&2; exit 2 ;;
+  esac
+done
+
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "== cargo fmt --check =="
+  cargo fmt --all --check
+else
+  echo "== cargo fmt --check == (rustfmt not installed; skipped)"
+fi
 
 echo "== cargo build --release =="
 cargo build --release
@@ -11,5 +32,39 @@ cargo test -q
 
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
+
+if [ "$SMOKE" = 1 ]; then
+  echo "== bench smoke: pipeline_hotpath --smoke =="
+  rm -f rust/BENCH_pipeline.json BENCH_pipeline.json
+  cargo bench --bench pipeline_hotpath -- --smoke
+  # cargo bench runs with the package dir as cwd; accept either layout.
+  BENCH_JSON=""
+  for f in rust/BENCH_pipeline.json BENCH_pipeline.json; do
+    [ -f "$f" ] && BENCH_JSON="$f" && break
+  done
+  if [ -z "$BENCH_JSON" ]; then
+    echo "verify: BENCH_pipeline.json was not emitted" >&2
+    exit 1
+  fi
+  if command -v python3 >/dev/null 2>&1; then
+    python3 - "$BENCH_JSON" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+ab = doc.get("server_concurrency_ab")
+assert isinstance(ab, list) and ab, "server_concurrency_ab missing/empty"
+modes = {row.get("mode") for row in ab if "req_per_sec" in row}
+assert {"serialized", "sharded_batched"} <= modes, f"missing A/B arms: {modes}"
+assert "concurrency_speedup_8conn" in doc, "speedup field missing"
+print(f"verify: {sys.argv[1]} well-formed "
+      f"(speedup_8conn={doc['concurrency_speedup_8conn']:.2f}x)")
+EOF
+  else
+    # No python3: at least require both A/B arms to appear in the JSON.
+    grep -q '"server_concurrency_ab"' "$BENCH_JSON"
+    grep -q '"serialized"' "$BENCH_JSON"
+    grep -q '"sharded_batched"' "$BENCH_JSON"
+    echo "verify: $BENCH_JSON emitted (python3 absent; grep-checked)"
+  fi
+fi
 
 echo "verify: OK"
