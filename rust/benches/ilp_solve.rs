@@ -27,6 +27,7 @@ fn instance(n: usize, c_max: u8, seed: u64) -> JaladInstance {
         t_cloud_full: 0.003,
         bandwidth: 300_000.0,
         delta_alpha: 0.10,
+        load: jalad::ilp::CloudLoad::default(),
     }
 }
 

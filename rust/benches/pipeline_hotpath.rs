@@ -317,6 +317,7 @@ fn server_concurrency_ab(results: &mut Vec<Json>) -> Option<f64> {
             ServeConfig {
                 workers: 16,
                 batch: BatchConfig { enabled: batching, ..BatchConfig::default() },
+                ..ServeConfig::default()
             },
         ));
         let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").expect("bind");

@@ -261,6 +261,25 @@ pub fn decode(bytes: &[u8]) -> Result<Frame, CodecError> {
     })
 }
 
+/// Read `(model, stage)` from a frame's fixed header without touching
+/// the entropy-coded payload. The cloud's admission control uses this
+/// to decide a shed *before* paying the Huffman decode — refusing work
+/// must not cost a multi-megabyte decode on the very worker the server
+/// is trying to protect. `None` when the bytes cannot be a valid frame
+/// head (short / wrong magic); such frames proceed to the full decode
+/// path and fail there with a precise error.
+pub fn peek_route(bytes: &[u8]) -> Option<(u16, u16)> {
+    if bytes.len() < HEADER_BYTES {
+        return None;
+    }
+    if u16::from_le_bytes([bytes[0], bytes[1]]) != MAGIC {
+        return None;
+    }
+    let stage = u16::from_le_bytes(bytes[16..18].try_into().unwrap());
+    let model = u16::from_le_bytes(bytes[18..20].try_into().unwrap());
+    Some((model, stage))
+}
+
 /// [`decode`] into a caller-owned values buffer with reusable scratch;
 /// returns the frame metadata.
 pub fn decode_into(
@@ -335,6 +354,21 @@ mod tests {
             assert_eq!(frame.lo, q.lo);
             assert_eq!(frame.hi, q.hi);
         }
+    }
+
+    #[test]
+    fn peek_route_reads_header_without_decode() {
+        let q = quant::quantize(&sample_features(256), 4);
+        let wire = encode(&q, 9, 3);
+        assert_eq!(peek_route(&wire), Some((3, 9)));
+        // Short or mis-tagged bytes are unpeekable, never misread.
+        assert_eq!(peek_route(&wire[..HEADER_BYTES - 1]), None);
+        let mut bad = wire.clone();
+        bad[0] ^= 0xFF;
+        assert_eq!(peek_route(&bad), None);
+        // The peek agrees with the full decode on the same frame.
+        let h = decode(&wire).unwrap();
+        assert_eq!((h.model, h.stage), (3, 9));
     }
 
     #[test]

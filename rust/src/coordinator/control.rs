@@ -1,0 +1,386 @@
+//! The live adaptation control plane (§III-E, closed over *both* link
+//! and server state).
+//!
+//! The paper's re-decoupling strategy says the edge should re-solve the
+//! decoupling ILP "upon the edge-cloud network change"; partition
+//! frameworks since (Auto-Split, Edgent) treat *server load* as an
+//! equally first-class input. The [`ControlPlane`] fuses the two
+//! signals:
+//!
+//! * **bandwidth** — the EWMA [`BandwidthEstimator`] fed by every
+//!   completed transfer (unchanged from the original controller);
+//! * **cloud load** — the [`CloudTelemetry`] block the cloud
+//!   piggybacks on every logits reply (queue-wait p95, shard
+//!   utilization, batch occupancy, admission state), smoothed into a
+//!   [`CloudLoad`] that the ILP folds into `T_C(i)`.
+//!
+//! Drift of *either* signal past its threshold triggers a re-solve.
+//! A `Busy` shed is the strongest load signal of all: the edge adopts
+//! the refusal's telemetry immediately (fast attack — the smoothed
+//! estimate only governs recovery) and, if the re-solve refuses to
+//! move, forces the next-later cut via the exact min-cut-constrained
+//! ILP. That is the §III-E prescription — under server pressure the
+//! cut shifts edge-ward (later `i*`, smaller transfer, less cloud
+//! compute) until the cloud admits the work again.
+//!
+//! One implementation serves every deployment shape: `LocalPipeline`
+//! (simulated channel) drives it through
+//! [`run_controlled`](super::pipeline::LocalPipeline::run_controlled),
+//! `server::edge::EdgeClient` drives it over real TCP, and the
+//! trace-replay tests drive it directly.
+
+use crate::coordinator::decision::DecisionEngine;
+use crate::ilp::jalad::Plan;
+use crate::ilp::{CloudLoad, Decision};
+use crate::network::BandwidthEstimator;
+use crate::server::proto::CloudTelemetry;
+
+/// Historical name: the bandwidth-only controller this grew out of.
+/// Every call site that compiled against it still does.
+pub type AdaptationController = ControlPlane;
+
+/// How edge-ward a decision is: cloud-only ships everything (depth 0),
+/// a cut after stage `i` keeps `i` stages on the edge.
+pub fn cut_depth(d: Decision) -> usize {
+    match d {
+        Decision::CloudOnly => 0,
+        Decision::Cut { i, .. } => i,
+    }
+}
+
+pub struct ControlPlane {
+    pub engine: DecisionEngine,
+    pub estimator: BandwidthEstimator,
+    /// Relative bandwidth drift that triggers a re-solve (default 0.15).
+    pub rel_threshold: f64,
+    /// Cloud-load drift that triggers a re-solve (default 0.10):
+    /// absolute change in utilization, or relative change in queue
+    /// wait (with a floor so microsecond jitter near zero is inert).
+    pub load_threshold: f64,
+    /// EWMA weight for fusing incoming load telemetry (default 0.4:
+    /// react within a couple of replies, ignore single-reply spikes).
+    pub load_alpha: f64,
+    /// Smoothed cloud-load estimate (what re-solves use).
+    load: CloudLoad,
+    /// Load at the last re-solve — the drift baseline.
+    acked_load: CloudLoad,
+    current: Plan,
+    resolves: u64,
+    plan_changes: u64,
+    sheds_observed: u64,
+}
+
+impl ControlPlane {
+    pub fn new(engine: DecisionEngine, initial_bandwidth: f64) -> Self {
+        let current = engine.decide(initial_bandwidth);
+        let mut estimator = BandwidthEstimator::default();
+        estimator.observe(initial_bandwidth as usize, 1.0);
+        let _ = estimator.take_change(0.0);
+        Self {
+            engine,
+            estimator,
+            rel_threshold: 0.15,
+            load_threshold: 0.10,
+            load_alpha: 0.4,
+            load: CloudLoad::default(),
+            acked_load: CloudLoad::default(),
+            current,
+            resolves: 0,
+            plan_changes: 0,
+            sheds_observed: 0,
+        }
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.current
+    }
+
+    /// ILP re-solves performed (either signal's drift, or forced).
+    pub fn resolves(&self) -> u64 {
+        self.resolves
+    }
+
+    /// Re-solves whose decision differed from the plan they replaced.
+    pub fn plan_changes(&self) -> u64 {
+        self.plan_changes
+    }
+
+    /// `Busy` sheds this plane has reacted to.
+    pub fn sheds_observed(&self) -> u64 {
+        self.sheds_observed
+    }
+
+    pub fn bandwidth_estimate(&self) -> Option<f64> {
+        self.estimator.bytes_per_sec()
+    }
+
+    /// The smoothed cloud-load estimate currently steering `T_C`.
+    pub fn cloud_load(&self) -> CloudLoad {
+        self.load
+    }
+
+    /// Feed one completed transfer; returns the new plan if the
+    /// controller re-decoupled (re-solved *and* the decision changed).
+    pub fn observe_transfer(&mut self, bytes: usize, seconds: f64) -> Option<&Plan> {
+        self.estimator.observe(bytes, seconds);
+        if self.estimator.take_change(self.rel_threshold).is_some() {
+            return self.resolve_now();
+        }
+        None
+    }
+
+    /// Feed a cloud-load observation (typically from piggybacked
+    /// telemetry); returns the new plan if the drift re-decoupled.
+    pub fn observe_cloud_load(&mut self, observed: CloudLoad) -> Option<&Plan> {
+        let a = self.load_alpha;
+        self.load = CloudLoad::new(
+            self.load.queue_wait + a * (observed.queue_wait - self.load.queue_wait),
+            self.load.utilization + a * (observed.utilization - self.load.utilization),
+        );
+        if self.load_drifted() {
+            return self.resolve_now();
+        }
+        None
+    }
+
+    /// Feed a piggybacked telemetry block from a logits reply.
+    pub fn observe_telemetry(&mut self, t: &CloudTelemetry) -> Option<&Plan> {
+        self.observe_cloud_load(Self::telemetry_load(t))
+    }
+
+    /// React to a `Busy` shed: adopt the refusal's load verbatim (fast
+    /// attack; the EWMA only smooths recovery), re-solve, and if the
+    /// optimum refuses to move strictly edge-ward, force the next-later
+    /// cut with the min-cut-constrained ILP. Returns the plan to retry
+    /// with. Progress is guaranteed: each call either deepens the cut
+    /// or leaves it at the deepest feasible stage.
+    pub fn on_busy(&mut self, t: &CloudTelemetry) -> &Plan {
+        self.sheds_observed += 1;
+        let reported = Self::telemetry_load(t);
+        self.load = CloudLoad::new(
+            self.load.queue_wait.max(reported.queue_wait),
+            self.load.utilization.max(reported.utilization),
+        );
+        let before = cut_depth(self.current.decision);
+        let bw = self.bandwidth();
+        let mut plan = self.engine.decide_with_load(bw, self.load);
+        if cut_depth(plan.decision) <= before {
+            // The unconstrained optimum refused to move (or would move
+            // cloud-ward — the one direction a shed must never take).
+            // Force the next-later cut; at the deepest feasible stage,
+            // hold depth rather than bounce back. Whatever wins is
+            // committed exactly once, so one shed is one re-solve (and
+            // at most one plan change) in the adaptation counters.
+            if let Some(forced) = self
+                .engine
+                .decide_edgeward(bw, self.load, before + 1)
+                .or_else(|| self.engine.decide_edgeward(bw, self.load, before.max(1)))
+            {
+                plan = forced;
+            }
+        }
+        self.note_change(&plan);
+        self.current = plan;
+        self.resolves += 1;
+        self.acked_load = self.load;
+        &self.current
+    }
+
+    /// Force a re-solve at an externally known bandwidth (tests,
+    /// traces). Keeps the current load signal in the instance.
+    pub fn resolve_at(&mut self, bandwidth: f64) -> &Plan {
+        let plan = self.engine.decide_with_load(bandwidth, self.load);
+        self.note_change(&plan);
+        self.current = plan;
+        self.resolves += 1;
+        self.acked_load = self.load;
+        &self.current
+    }
+
+    fn bandwidth(&self) -> f64 {
+        // The constructor seeds the estimator, so the estimate exists
+        // for the whole life of the plane; the fallback is for safety.
+        self.estimator.bytes_per_sec().unwrap_or(1.0)
+    }
+
+    /// Re-solve with the fused (bandwidth, load) signals; returns the
+    /// plan when the decision changed.
+    fn resolve_now(&mut self) -> Option<&Plan> {
+        let plan = self.engine.decide_with_load(self.bandwidth(), self.load);
+        let changed = plan.decision != self.current.decision;
+        self.note_change(&plan);
+        self.current = plan;
+        self.resolves += 1;
+        self.acked_load = self.load;
+        if changed {
+            Some(&self.current)
+        } else {
+            None
+        }
+    }
+
+    fn note_change(&mut self, next: &Plan) {
+        if next.decision != self.current.decision {
+            self.plan_changes += 1;
+        }
+    }
+
+    /// Has the smoothed load drifted past `load_threshold` since the
+    /// last re-solve? Utilization compares absolutely (it is already a
+    /// fraction); queue wait compares relatively with a 1 ms floor so
+    /// near-zero jitter never triggers.
+    fn load_drifted(&self) -> bool {
+        let du = (self.load.utilization - self.acked_load.utilization).abs();
+        if du >= self.load_threshold {
+            return true;
+        }
+        let base = self.acked_load.queue_wait.abs().max(1e-3);
+        (self.load.queue_wait - self.acked_load.queue_wait).abs() / base >= self.load_threshold
+    }
+
+    fn telemetry_load(t: &CloudTelemetry) -> CloudLoad {
+        CloudLoad::new(
+            (t.queue_wait_p95_ms as f64 / 1e3).max(0.0),
+            (t.utilization as f64).clamp(0.0, 1.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::decision::{tests::fake_tables, Scale};
+    use crate::ilp::Decision;
+    use crate::models::fullscale_stages;
+    use crate::profiler::{DeviceModel, LatencyTables};
+
+    fn controller() -> ControlPlane {
+        let model = "vgg16";
+        let n = fullscale_stages(model).unwrap().stages.len();
+        let engine = DecisionEngine::new(
+            model,
+            fake_tables(model, n),
+            LatencyTables::analytic(model, DeviceModel::TEGRA_X2, DeviceModel::CLOUD_12T)
+                .unwrap(),
+            Scale::Paper,
+            0.10,
+        )
+        .unwrap();
+        ControlPlane::new(engine, 125_000.0)
+    }
+
+    #[test]
+    fn stable_bandwidth_never_replans() {
+        let mut c = controller();
+        let before = c.resolves();
+        for _ in 0..50 {
+            // 125 KB/s steady — inside the threshold band.
+            assert!(c.observe_transfer(12_500, 0.1).is_none());
+        }
+        assert_eq!(c.resolves(), before);
+    }
+
+    #[test]
+    fn bandwidth_collapse_triggers_replan() {
+        // Start fast enough that cloud-only wins (paper-scale 224² PNG is
+        // ~73 KB, so "fast" means ≳13 MB/s), then collapse the link.
+        let mut c = controller();
+        c.resolve_at(1e8);
+        let initial = c.plan().decision;
+        assert_eq!(initial, Decision::CloudOnly, "100 MB/s should upload");
+        // Collapse to 5 KB/s: EWMA needs a few observations to drift 15%.
+        let mut changed = false;
+        for _ in 0..40 {
+            if c.observe_transfer(500, 0.1).is_some() {
+                changed = true;
+                break;
+            }
+        }
+        assert!(changed, "controller never re-decoupled");
+        assert_ne!(c.plan().decision, initial);
+        // At 5 KB/s the plan must be a deep cut with small wire size.
+        match c.plan().decision {
+            Decision::Cut { i, .. } => assert!(i >= 1),
+            Decision::CloudOnly => panic!("cloud-only at 5 KB/s is wrong"),
+        }
+    }
+
+    #[test]
+    fn bandwidth_recovery_returns_to_cloud() {
+        let mut c = controller();
+        c.resolve_at(5_000.0);
+        let deep = c.plan().latency;
+        let p = c.resolve_at(1e12).clone();
+        assert_eq!(p.decision, Decision::CloudOnly);
+        assert!(p.latency < deep);
+    }
+
+    #[test]
+    fn stable_load_never_replans() {
+        let mut c = controller();
+        // Settle the smoothed estimate on a fixed mild load, ack it…
+        let mild = CloudLoad::new(0.002, 0.3);
+        for _ in 0..20 {
+            c.observe_cloud_load(mild);
+        }
+        let base = c.resolves();
+        // …then keep reporting it: no drift, no re-solve.
+        for _ in 0..50 {
+            assert!(c.observe_cloud_load(mild).is_none());
+        }
+        assert_eq!(c.resolves(), base);
+    }
+
+    #[test]
+    fn load_spike_resolves_and_recovers() {
+        let mut c = controller();
+        c.resolve_at(1e8);
+        assert_eq!(c.plan().decision, Decision::CloudOnly);
+        let base_resolves = c.resolves();
+        // A sustained utilization spike must trigger a re-solve within
+        // a few replies (EWMA α=0.4 → 2 observations pass 0.10 drift).
+        let spike = CloudLoad::new(0.050, 0.95);
+        for _ in 0..10 {
+            c.observe_cloud_load(spike);
+        }
+        assert!(c.resolves() > base_resolves, "load drift never re-solved");
+        assert!(c.cloud_load().utilization > 0.5, "fusion never tracked the spike");
+        // Recovery decays the estimate and re-solves back.
+        for _ in 0..30 {
+            c.observe_cloud_load(CloudLoad::default());
+        }
+        assert!(c.cloud_load().utilization < 0.05);
+        assert_eq!(c.plan().decision, Decision::CloudOnly, "idle cloud at 100 MB/s uploads");
+    }
+
+    #[test]
+    fn busy_always_moves_edgeward_until_the_last_stage() {
+        let mut c = controller();
+        c.resolve_at(1e8);
+        assert_eq!(cut_depth(c.plan().decision), 0, "fast link starts cloud-only");
+        let t = CloudTelemetry {
+            queue_wait_p95_ms: 40.0,
+            utilization: 0.97,
+            batch_occupancy: 4.0,
+            shedding: true,
+            sheds: 1,
+        };
+        let n = c.engine.num_stages();
+        let mut depth = 0;
+        // Repeated sheds must walk the cut strictly edge-ward until it
+        // parks at the deepest feasible stage — never oscillate back.
+        for k in 0..n + 3 {
+            let next = cut_depth(c.on_busy(&t).decision);
+            assert!(
+                next > depth || (next == depth && next == n) || depth == n,
+                "shed {k}: depth went {depth} → {next}"
+            );
+            if next == depth {
+                break;
+            }
+            depth = next;
+        }
+        assert!(depth >= 1, "busy never left cloud-only");
+        assert!(c.sheds_observed() >= 1);
+    }
+}

@@ -14,7 +14,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::ilp::{Decision, JaladInstance};
+use crate::ilp::{CloudLoad, Decision, JaladInstance};
 use crate::ilp::jalad::Plan;
 use crate::models::fullscale_stages;
 use crate::predictor::Tables;
@@ -95,6 +95,56 @@ impl DecisionEngine {
         })
     }
 
+    /// A fully synthetic engine for the artifact-free sim backend
+    /// (`runtime::sim`'s "simnet"): calibration-free tables with
+    /// paper-shaped structure — sizes derived from the sim stages'
+    /// real activation counts at compression ratios 8/4/2× for
+    /// c = 2/4/8, accuracy drops that shrink with depth, an edge much
+    /// slower than the cloud, and cloud stage times large enough that
+    /// load inflation visibly moves the optimum. The closed-loop
+    /// tests and the control-plane scenario bench run the *deployed*
+    /// serving stack against this engine with zero artifacts.
+    pub fn sim_default(delta_alpha: f64) -> Result<Self> {
+        let manifest = crate::runtime::sim::sim_manifest();
+        let model = manifest.model("simnet")?;
+        let n = model.num_stages();
+        let raw: Vec<f64> = model.stages.iter().map(|s| s.out_elems as f64 * 4.0).collect();
+        let c_grid = vec![2u8, 4, 8];
+        let size: Vec<Vec<f64>> = raw
+            .iter()
+            .map(|&r| c_grid.iter().map(|&c| r * c as f64 / 16.0).collect())
+            .collect();
+        let acc: Vec<Vec<f64>> = (0..n)
+            .map(|i| {
+                c_grid
+                    .iter()
+                    .map(|&c| match c {
+                        2 => [0.12, 0.08, 0.05, 0.03].get(i).copied().unwrap_or(0.02),
+                        4 => 0.01,
+                        _ => 0.0,
+                    })
+                    .collect()
+            })
+            .collect();
+        let tables = Tables {
+            model: "simnet".into(),
+            c_grid,
+            samples: 16,
+            base_accuracy: 0.9,
+            acc,
+            size,
+            raw_size: raw,
+            image_png_bytes: 600.0,
+            image_raw_bytes: model.input_shape.iter().product::<usize>() as f64,
+        };
+        let latency = LatencyTables {
+            t_edge: vec![0.010, 0.030, 0.070, 0.140],
+            t_cloud: vec![0.012, 0.008, 0.004, 0.0],
+            t_cloud_full: 0.014,
+        };
+        Self::new("simnet", tables, latency, Scale::Measured, delta_alpha)
+    }
+
     pub fn num_stages(&self) -> usize {
         self.tables.num_stages()
     }
@@ -125,11 +175,17 @@ impl DecisionEngine {
         Ok(self.size[i - 1][k])
     }
 
-    /// Materialize the ILP instance at `bandwidth` (bytes/s).
+    /// Materialize the load-free ILP instance at `bandwidth` (bytes/s).
     ///
     /// The ILP's c-axis is the calibration grid: variable `(i, k)` maps
     /// to bit-width `c_grid[k]`.
     pub fn instance(&self, bandwidth: f64) -> JaladInstance {
+        self.instance_with_load(bandwidth, CloudLoad::default())
+    }
+
+    /// Materialize the ILP instance at `bandwidth` with a live cloud
+    /// load term folded into `T_C` (the control plane's entry point).
+    pub fn instance_with_load(&self, bandwidth: f64, load: CloudLoad) -> JaladInstance {
         let n = self.num_stages();
         JaladInstance {
             n,
@@ -142,17 +198,38 @@ impl DecisionEngine {
             t_cloud_full: self.latency.t_cloud_full,
             bandwidth,
             delta_alpha: self.delta_alpha,
+            load,
         }
     }
 
     /// Solve at `bandwidth`; the plan's `c` is translated back from grid
     /// index to an actual bit-width.
     pub fn decide(&self, bandwidth: f64) -> Plan {
-        let mut plan = self.instance(bandwidth).solve();
+        self.decide_with_load(bandwidth, CloudLoad::default())
+    }
+
+    /// Solve at `bandwidth` under a live cloud load.
+    pub fn decide_with_load(&self, bandwidth: f64, load: CloudLoad) -> Plan {
+        let mut plan = self.instance_with_load(bandwidth, load).solve();
+        self.translate_c(&mut plan);
+        plan
+    }
+
+    /// Solve restricted to cuts at stage ≥ `min_i` (cloud-only
+    /// excluded) — the forced edge-ward step after a `Busy` shed when
+    /// the unconstrained optimum refuses to move. `None` when no such
+    /// cut satisfies the accuracy bound.
+    pub fn decide_edgeward(&self, bandwidth: f64, load: CloudLoad, min_i: usize) -> Option<Plan> {
+        let mut plan = self.instance_with_load(bandwidth, load).solve_min_cut(min_i)?;
+        self.translate_c(&mut plan);
+        Some(plan)
+    }
+
+    /// Translate a plan's `c` from grid index back to a bit-width.
+    fn translate_c(&self, plan: &mut Plan) {
         if let Decision::Cut { i, c } = plan.decision {
             plan.decision = Decision::Cut { i, c: self.tables.c_grid[c as usize - 1] };
         }
-        plan
     }
 
     /// Latency this engine predicts for a baseline that ships `bytes`
@@ -262,6 +339,62 @@ pub(crate) mod tests {
         let w = e.wire_bytes(1, 8).unwrap();
         assert!(w > e.tables.size[0][3], "projection should inflate sizes");
         assert!(e.image_png_bytes() > 10_000.0, "224² png > 10 KB");
+    }
+
+    #[test]
+    fn cloud_load_moves_the_decision_edgeward() {
+        use crate::ilp::CloudLoad;
+        let e = engine("vgg16", 0.10);
+        let bw = 300_000.0;
+        let idle = e.decide(bw);
+        let loaded = e.decide_with_load(bw, CloudLoad::new(0.5, 0.95));
+        let depth = |d: Decision| match d {
+            Decision::CloudOnly => 0,
+            Decision::Cut { i, .. } => i,
+        };
+        assert!(
+            depth(loaded.decision) >= depth(idle.decision),
+            "load must never move the cut cloud-ward: {idle:?} → {loaded:?}"
+        );
+        assert!(loaded.latency >= idle.latency, "load cannot make things faster");
+        // decide == decide_with_load(idle): the legacy path is the
+        // zero-load special case, bit-for-bit.
+        assert_eq!(e.decide_with_load(bw, CloudLoad::default()), idle);
+        // Forced edge-ward restriction honors min_i and the c grid.
+        if let Decision::Cut { i, .. } = idle.decision {
+            if let Some(p) = e.decide_edgeward(bw, CloudLoad::default(), i + 1) {
+                match p.decision {
+                    Decision::Cut { i: j, c } => {
+                        assert!(j > i);
+                        assert!(e.tables.c_grid.contains(&c));
+                    }
+                    Decision::CloudOnly => panic!("edge-ward decide picked cloud-only"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sim_engine_closes_the_loop_shapewise() {
+        use crate::ilp::CloudLoad;
+        let e = DecisionEngine::sim_default(0.10).unwrap();
+        assert_eq!(e.num_stages(), 4);
+        // Idle at 50 KB/s: the 600 B image upload wins.
+        let idle = e.decide(50_000.0);
+        assert_eq!(idle.decision, Decision::CloudOnly, "{idle:?}");
+        // A loaded cloud moves the cut strictly edge-ward…
+        let spike = e.decide_with_load(50_000.0, CloudLoad::new(0.040, 0.9));
+        match spike.decision {
+            Decision::Cut { i, .. } => assert!(i >= 2, "{spike:?}"),
+            Decision::CloudOnly => panic!("spike must leave cloud-only: {spike:?}"),
+        }
+        // …and a saturated one parks at the logits-forward cut the
+        // admission controller always admits.
+        let busy = e.decide_with_load(50_000.0, CloudLoad::new(0.040, 0.97));
+        assert_eq!(busy.decision, Decision::Cut { i: 4, c: 2 }, "{busy:?}");
+        // Bandwidth collapse (idle cloud) also ends at the deep cut.
+        let slow = e.decide(3_000.0);
+        assert_eq!(slow.decision, Decision::Cut { i: 4, c: 2 }, "{slow:?}");
     }
 
     #[test]

@@ -10,18 +10,20 @@
 //!   and the cloud tail), with full latency breakdowns;
 //! * [`baselines`] — Origin2Cloud / PNG2Cloud / JPEG2Cloud / edge-only /
 //!   Neurosurgeon-style no-compression partitioning (§IV-A, §V);
-//! * [`adaptive`] — the re-decoupling controller: EWMA bandwidth
-//!   estimate drift triggers an ILP re-solve (§III-E);
+//! * [`control`] — the live adaptation control plane: fuses the EWMA
+//!   bandwidth estimate with the cloud's piggybacked load telemetry,
+//!   re-solves on drift of either, and walks the cut edge-ward on
+//!   `Busy` sheds (§III-E closed over link *and* server state);
 //! * [`router`] — request queue + worker pool for the serving deployment.
 
-pub mod adaptive;
 pub mod baselines;
+pub mod control;
 pub mod decision;
 pub mod pipeline;
 pub mod router;
 pub mod session;
 
-pub use adaptive::AdaptationController;
+pub use control::{cut_depth, AdaptationController, ControlPlane};
 pub use baselines::Baseline;
 pub use decision::{DecisionEngine, Scale};
 pub use pipeline::{LocalPipeline, RunResult};

@@ -132,6 +132,34 @@ impl<'a> LocalPipeline<'a> {
         let plan = engine.decide(channel.bandwidth_now());
         self.run(sample, plan.decision, channel)
     }
+
+    /// Closed-loop run: execute the control plane's current plan, then
+    /// feed the observed (simulated) transfer back into it — the same
+    /// loop `server::edge::EdgeClient` closes over real TCP, driven
+    /// over the simulated channel. Cloud-load telemetry is the
+    /// caller's to inject (`ControlPlane::observe_cloud_load`); the
+    /// simulated channel carries no server. Returns the result and
+    /// whether the plane re-decoupled off this transfer.
+    ///
+    /// Transfers below `server::edge::MIN_ESTIMATE_BYTES` are excluded
+    /// from estimation for the same reason the TCP client excludes
+    /// them: `SimChannel::transmit` includes the RTT, so a tiny frame's
+    /// "throughput" is RTT-dominated noise — feeding it in collapses
+    /// the EWMA and ratchets the plan into ever-deeper cuts.
+    pub fn run_controlled(
+        &mut self,
+        control: &mut crate::coordinator::ControlPlane,
+        sample: &Sample,
+        channel: &mut SimChannel,
+    ) -> Result<(RunResult, bool)> {
+        let decision = control.plan().decision;
+        let result = self.run(sample, decision, channel)?;
+        let replanned = result.breakdown.tx_bytes >= crate::server::edge::MIN_ESTIMATE_BYTES
+            && control
+                .observe_transfer(result.breakdown.tx_bytes, result.breakdown.transmit.max(1e-9))
+                .is_some();
+        Ok((result, replanned))
+    }
 }
 
 #[cfg(test)]

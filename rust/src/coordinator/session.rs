@@ -92,9 +92,11 @@ impl<'a> Session<'a> {
     }
 
     /// Run the edge half of one request: head stages, L1 quantize,
-    /// entropy-code into the session scratch. Fills the edge-side fields
-    /// of `bd` (`edge_compute`, `quantize`, `encode`); transmission and
-    /// the cloud half belong to the caller's transport.
+    /// entropy-code into the session scratch. *Accumulates* into the
+    /// edge-side fields of `bd` (`edge_compute`, `quantize`, `encode`)
+    /// so a caller that re-encodes after a `Busy` shed keeps the cost
+    /// of every attempt; transmission and the cloud half belong to the
+    /// caller's transport.
     pub fn encode_request(
         &mut self,
         sample: &Sample,
@@ -109,7 +111,7 @@ impl<'a> Session<'a> {
                 let encoded = png::encode(&png::Image8::new(hw, hw, 3, rgb));
                 self.scratch.wire.clear();
                 self.scratch.wire.extend_from_slice(&encoded);
-                bd.encode = t0.elapsed().as_secs_f64();
+                bd.encode += t0.elapsed().as_secs_f64();
                 Ok(EncodedRequest::Image { hw: hw as u16 })
             }
             Decision::Cut { i, c } => {
@@ -131,12 +133,12 @@ impl<'a> Session<'a> {
                     let (lo, hi) = quant::quantize_into(cur.data(), c, values);
                     (&*values, lo, hi)
                 };
-                bd.quantize = t0.elapsed().as_secs_f64();
+                bd.quantize += t0.elapsed().as_secs_f64();
 
                 // --- edge: entropy-code to the wire frame ---
                 let t1 = Instant::now();
                 feature::encode_parts_into(vals, c, lo, hi, i as u16, self.model_id, codec, wire);
-                bd.encode = t1.elapsed().as_secs_f64();
+                bd.encode += t1.elapsed().as_secs_f64();
                 Ok(EncodedRequest::Features { stage: i as u16, c })
             }
         }

@@ -13,8 +13,45 @@
 //!
 //! Every latency term is a per-variable constant at solve time, exactly
 //! as the paper observes ("T_trans, T_E, T_C are just like constants").
+//!
+//! The live control plane extends `T_C` with a [`CloudLoad`] term: the
+//! cloud's reported queue wait is a constant every request pays, and
+//! its utilization inflates the *residual* cloud compute (an M/M/1-ish
+//! `1/(1-ρ)` slowdown). Both stay per-variable constants at solve
+//! time, so the solver remains exact; a loaded cloud simply makes
+//! compute-heavy variables cost more, which is what shifts the optimum
+//! edge-ward (§III-E re-decoupling under server load, cf. Auto-Split /
+//! Edgent treating server load as a partition input).
 
 use super::solver::{Ilp01, Solution};
+
+/// Cloud-load signal fed into `T_C(i)`. `Default` (all zero) reproduces
+/// the paper's load-free instance bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CloudLoad {
+    /// Queue wait a newly admitted request is expected to pay before
+    /// its tail executes, seconds (the cloud reports its recent p95).
+    pub queue_wait: f64,
+    /// Cloud utilization ρ ∈ [0,1): busiest-shard busy fraction.
+    pub utilization: f64,
+}
+
+impl CloudLoad {
+    pub fn new(queue_wait: f64, utilization: f64) -> Self {
+        Self { queue_wait, utilization }
+    }
+
+    /// Multiplier applied to cloud compute: `1/(1-ρ)`, with ρ clamped
+    /// to 0.95 so a saturated snapshot degrades the estimate instead
+    /// of exploding it.
+    pub fn inflation(&self) -> f64 {
+        1.0 / (1.0 - self.utilization.clamp(0.0, 0.95))
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue_wait <= 0.0 && self.utilization <= 0.0
+    }
+}
 
 /// Chosen execution plan.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -48,6 +85,9 @@ pub struct JaladInstance {
     pub bandwidth: f64,
     /// User accuracy-loss bound Δα in [0,1].
     pub delta_alpha: f64,
+    /// Live cloud-load term folded into `T_C` (zero = the paper's
+    /// load-free instance).
+    pub load: CloudLoad,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -71,15 +111,23 @@ impl JaladInstance {
         1 + (i - 1) * self.c_max as usize + (c as usize - 1)
     }
 
-    /// Latency of variable `v` (seconds).
+    /// Latency of variable `v` (seconds). Cloud compute is inflated by
+    /// the load's `1/(1-ρ)` factor and every variable pays the queue
+    /// wait once — a uniform constant that keeps the latency estimate
+    /// honest while the inflation term (proportional to residual cloud
+    /// work) is what moves the optimum edge-ward under load.
     fn latency_of(&self, v: usize) -> f64 {
+        let infl = self.load.inflation();
         if v == 0 {
-            return self.image_bytes / self.bandwidth + self.t_cloud_full;
+            return self.image_bytes / self.bandwidth
+                + self.t_cloud_full * infl
+                + self.load.queue_wait;
         }
         let (i, c) = self.decode_var(v);
         self.t_edge[i - 1]
             + self.size[i - 1][c as usize - 1] / self.bandwidth
-            + self.t_cloud[i - 1]
+            + self.t_cloud[i - 1] * infl
+            + self.load.queue_wait
     }
 
     fn acc_of(&self, v: usize) -> f64 {
@@ -138,6 +186,35 @@ impl JaladInstance {
         Plan { decision, latency: self.latency_of(v), acc_drop: self.acc_of(v), tx_bytes }
     }
 
+    /// Solve with the cut constrained strictly edge-ward: only `Cut`
+    /// variables with `i ≥ min_i` are admissible (cloud-only is
+    /// excluded). Still the exact ILP — the restriction is one extra
+    /// `≤ 0` row over the forbidden variables. `None` when no
+    /// admissible variable satisfies the accuracy bound (e.g. the
+    /// current plan is already the deepest feasible cut).
+    ///
+    /// This is the §III-E response to a `Busy` shed: when the solver's
+    /// unconstrained optimum refuses to move (transfer-dominated
+    /// regimes), the edge forces the next-later cut and re-enters the
+    /// loop from there.
+    pub fn solve_min_cut(&self, min_i: usize) -> Option<Plan> {
+        if min_i > self.n {
+            return None;
+        }
+        let nv = self.var_count();
+        let mut ilp = self.build_ilp();
+        let mut forbidden = vec![0.0; nv];
+        forbidden[0] = 1.0; // cloud-only
+        for v in 1..nv {
+            let (i, _) = self.decode_var(v);
+            if i < min_i {
+                forbidden[v] = 1.0;
+            }
+        }
+        ilp.le(forbidden, 0.0);
+        ilp.solve().map(|sol| self.decode_solution(&sol))
+    }
+
     /// Exhaustive reference (the instance is tiny): scan all options.
     pub fn solve_scan(&self) -> Plan {
         let mut best_v = 0usize;
@@ -183,6 +260,7 @@ mod tests {
             t_cloud_full: 0.008,
             bandwidth: 100_000.0, // 100 KB/s
             delta_alpha: 0.10,
+            load: CloudLoad::default(),
         }
     }
 
@@ -241,6 +319,10 @@ mod tests {
                 t_cloud_full: 0.008,
                 bandwidth: 10_000.0 + rng.below(2_000_000) as f64,
                 delta_alpha: rng.next_f64() * 0.2,
+                load: CloudLoad::new(
+                    rng.next_f64() * 0.05,
+                    rng.next_f64() * 0.95,
+                ),
             };
             let a = inst.solve();
             let b = inst.solve_scan();
@@ -249,6 +331,73 @@ mod tests {
                 "trial {trial}: ilp {a:?} vs scan {b:?}"
             );
         }
+    }
+
+    #[test]
+    fn idle_load_is_bit_identical_to_paper_instance() {
+        // CloudLoad::default() must not perturb a single float: the
+        // load-free path is the paper's instance, verbatim.
+        let inst = toy();
+        assert_eq!(inst.load.inflation(), 1.0);
+        assert!(inst.load.is_idle());
+        let plan = inst.solve();
+        assert_eq!(plan.decision, Decision::Cut { i: 2, c: 2 });
+        assert!((plan.latency - 0.027).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cloud_load_shifts_cut_edgeward() {
+        let mut inst = toy();
+        let idle = inst.solve();
+        // Saturate the cloud: residual compute inflates 10×, queue
+        // wait adds a constant. The optimum must move to a cut with
+        // *less* cloud work (strictly later i), never cloud-ward.
+        inst.load = CloudLoad::new(0.040, 0.9);
+        let loaded = inst.solve();
+        let depth = |d: Decision| match d {
+            Decision::CloudOnly => 0,
+            Decision::Cut { i, .. } => i,
+        };
+        assert!(
+            depth(loaded.decision) > depth(idle.decision),
+            "load must push the cut edge-ward: idle {idle:?} loaded {loaded:?}"
+        );
+        // The loaded latency estimate includes the queue wait.
+        assert!(loaded.latency > 0.040);
+        // Recovery returns the original plan exactly.
+        inst.load = CloudLoad::default();
+        assert_eq!(inst.solve(), idle);
+    }
+
+    #[test]
+    fn loaded_instances_still_match_scan() {
+        let mut inst = toy();
+        for (qw, rho) in [(0.0, 0.5), (0.02, 0.9), (0.1, 0.99), (0.5, 2.0)] {
+            inst.load = CloudLoad::new(qw, rho);
+            let a = inst.solve();
+            let b = inst.solve_scan();
+            assert!((a.latency - b.latency).abs() < 1e-9, "qw={qw} rho={rho}: {a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn min_cut_constraint_forces_later_cuts() {
+        let inst = toy(); // unconstrained optimum: Cut { i: 2, c: 2 }
+        let p = inst.solve_min_cut(3).unwrap();
+        match p.decision {
+            Decision::Cut { i, .. } => assert!(i >= 3, "{p:?}"),
+            Decision::CloudOnly => panic!("min-cut solve must never pick cloud-only"),
+        }
+        // Constrained optimum at i ≥ 3: (3,c=1) 0.0305 vs (3,c=2) 0.031.
+        assert_eq!(p.decision, Decision::Cut { i: 3, c: 1 });
+        // Past the last stage there is nothing to force.
+        assert!(inst.solve_min_cut(4).is_none());
+        // An infeasible accuracy bound under the restriction is None,
+        // not a panic.
+        let mut strict = toy();
+        strict.delta_alpha = 0.0;
+        strict.acc[2] = vec![0.1, 0.1]; // stage 3 never lossless now
+        assert!(strict.solve_min_cut(3).is_none());
     }
 
     #[test]

@@ -18,5 +18,5 @@ pub mod brute;
 pub mod jalad;
 pub mod solver;
 
-pub use jalad::{Decision, JaladInstance};
+pub use jalad::{CloudLoad, Decision, JaladInstance};
 pub use solver::{Ilp01, Solution, SolveStats};

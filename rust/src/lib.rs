@@ -32,15 +32,21 @@
 //!   FMAC/FLOPS device model (§IV-A);
 //! * [`network`] — simulated channels, bandwidth traces, token-bucket
 //!   throttling, EWMA estimation;
-//! * [`coordinator`] — decision engine, the shared edge-side
-//!   [`coordinator::session::Session`] (one implementation of the
-//!   run-stages → quantize → entropy-code path driven by both the
-//!   simulated pipeline and the TCP edge client), baselines, adaptation
-//!   controller, request router;
+//! * [`coordinator`] — decision engine (load-aware: `T_C(i)` carries
+//!   the cloud's reported queue wait and utilization), the shared
+//!   edge-side [`coordinator::session::Session`] (one implementation
+//!   of the run-stages → quantize → entropy-code path driven by both
+//!   the simulated pipeline and the TCP edge client), baselines, the
+//!   live adaptation [`coordinator::ControlPlane`] (re-solves on
+//!   bandwidth *or* cloud-load drift, walks the cut edge-ward on
+//!   `Busy` sheds), request router;
 //! * [`server`] — real TCP edge/cloud deployment over a throttled link;
 //!   the cloud serves connections concurrently on `util::threadpool`
 //!   with pooled per-connection scratch, native worker-side
-//!   dequantization, and sharded + micro-batched tail inference;
+//!   dequantization, sharded + micro-batched tail inference
+//!   (adaptive gather window, deadline-ordered), shard-aware
+//!   admission control (`Busy` sheds) and load telemetry piggybacked
+//!   on every logits reply;
 //! * [`models`] — stage metadata + full-scale analytic FMAC tables;
 //! * [`data`] — the synthetic ILSVRC substitute (mirrors
 //!   `python/compile/data.py`);

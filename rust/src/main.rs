@@ -38,8 +38,26 @@ fn main() {
     .opt("shards", "2", "serve-cloud: independent executor shards (PJRT clients)")
     .opt("workers", "16", "serve-cloud: pooled connection workers")
     .opt("max-batch", "4", "serve-cloud: max requests coalesced per tail batch")
-    .opt("gather-us", "1000", "serve-cloud: micro-batch gather window, microseconds")
+    .opt("gather-us", "1000", "serve-cloud: micro-batch gather window ceiling, microseconds")
+    .opt("gather-min-us", "100", "serve-cloud: adaptive gather window floor, microseconds")
+    .opt(
+        "admission-queue-ms",
+        "0",
+        "serve-cloud: shed (Busy) when windowed queue-wait p95 exceeds this, ms (0 = off)",
+    )
+    .opt(
+        "admission-util",
+        "0",
+        "serve-cloud: shed (Busy) when busiest-shard utilization exceeds this, 0..1 (0 = off)",
+    )
+    .opt(
+        "deadline-ms",
+        "0",
+        "serve-cloud: SLA deadline attached to admitted requests, ms (0 = none)",
+    )
     .flag("no-batch", "serve-cloud: disable micro-batching (serialized tails)")
+    .flag("no-adaptive-gather", "serve-cloud: always wait the full gather window")
+    .flag("pin-shards", "serve-cloud: pin connection workers to their shard's core (Linux)")
     .flag("sim", "serve-cloud: use the deterministic sim backend (no artifacts)")
     .flag("paper-scale", "use the paper's analytic FMAC/FLOPS latency model")
     .parse_env();
@@ -112,6 +130,7 @@ fn run(command: &str, args: &Args) -> Result<()> {
             } else {
                 ExecutorPool::new_pjrt(Manifest::load(&dir)?, shards)?
             };
+            let admission_util = args.get_f64("admission-util");
             let cfg = ServeConfig {
                 workers: args.get_usize("workers"),
                 batch: BatchConfig {
@@ -119,17 +138,43 @@ fn run(command: &str, args: &Args) -> Result<()> {
                     gather_window: std::time::Duration::from_micros(
                         args.get_usize("gather-us") as u64,
                     ),
+                    min_gather: std::time::Duration::from_micros(
+                        args.get_usize("gather-min-us") as u64,
+                    ),
+                    adaptive_gather: !args.get_flag("no-adaptive-gather"),
                     enabled: !args.get_flag("no-batch"),
                 },
+                admission: jalad::server::AdmissionConfig {
+                    queue_p95_budget: std::time::Duration::from_millis(
+                        args.get_usize("admission-queue-ms") as u64,
+                    ),
+                    utilization_budget: if admission_util > 0.0 {
+                        admission_util
+                    } else {
+                        f64::INFINITY
+                    },
+                    deadline: std::time::Duration::from_millis(
+                        args.get_usize("deadline-ms") as u64,
+                    ),
+                    ..jalad::server::AdmissionConfig::default()
+                },
+                pin_shards: args.get_flag("pin-shards"),
             };
             let server = Arc::new(CloudServer::with_pool(pool, cfg));
             let (addr, handle) = Arc::clone(&server).spawn(args.get("addr"))?;
             println!(
-                "cloud server on {addr}: {shards} shard(s), max batch {}, gather {} µs{} \
+                "cloud server on {addr}: {shards} shard(s), max batch {}, gather {}..{} µs{}{}{} \
                  (Ctrl-C or a Shutdown frame stops it)",
                 args.get_usize("max-batch"),
+                args.get_usize("gather-min-us"),
                 args.get_usize("gather-us"),
                 if args.get_flag("no-batch") { ", batching OFF" } else { "" },
+                if admission_util > 0.0 || args.get_usize("admission-queue-ms") > 0 {
+                    ", admission ON"
+                } else {
+                    ""
+                },
+                if args.get_flag("pin-shards") { ", shard pinning ON" } else { "" },
             );
             handle.join().ok();
         }

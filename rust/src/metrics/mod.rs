@@ -76,6 +76,16 @@ impl Histogram {
         self.samples.len()
     }
 
+    /// Percentile over samples recorded at index `from` onward — the
+    /// sliding-window view used by cloud telemetry ("recent" queue
+    /// wait, not lifetime). Empty windows report 0.
+    pub fn tail_percentile(&self, from: usize, p: f64) -> f64 {
+        if from >= self.samples.len() {
+            return 0.0;
+        }
+        stats::percentile(&self.samples[from..], p)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
@@ -113,7 +123,10 @@ impl Histogram {
 /// as `bytes_rx`); probe padding is deliberately split into
 /// `probe_bytes` because a bandwidth probe is sized to saturate the
 /// link and would otherwise dwarf the real number. `errors` counts
-/// data requests that were well-framed but failed in handling.
+/// data requests that were well-framed but failed in handling;
+/// `sheds` counts data requests admission control refused with a
+/// `Busy` frame (they are *also* counted in `requests` — a shed is a
+/// data request the server chose not to serve, not a protocol event).
 #[derive(Debug, Default)]
 pub struct Counters {
     pub requests: AtomicU64,
@@ -124,6 +137,7 @@ pub struct Counters {
     pub control_frames: AtomicU64,
     pub probe_bytes: AtomicU64,
     pub malformed: AtomicU64,
+    pub sheds: AtomicU64,
 }
 
 impl Counters {
@@ -151,6 +165,12 @@ impl Counters {
     pub fn inc_malformed(&self) {
         self.malformed.fetch_add(1, Ordering::Relaxed);
     }
+    pub fn inc_sheds(&self) {
+        self.sheds.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn sheds(&self) -> u64 {
+        self.sheds.load(Ordering::Relaxed)
+    }
     pub fn connections(&self) -> u64 {
         self.connections.load(Ordering::Relaxed)
     }
@@ -173,18 +193,63 @@ impl Counters {
     }
 }
 
-/// A [`Histogram`] safe to record into from many connection workers.
-/// One mutex: a record is nanoseconds next to a network hop.
+/// Most recent samples a [`SharedHistogram`] retains. Serving
+/// percentiles are computed over this sliding window — a long-lived
+/// server's histograms stay bounded (64 KiB each) instead of growing
+/// one f64 per request forever, and 8k samples is far more than any
+/// percentile needs to be stable.
+pub const SHARED_HISTOGRAM_CAP: usize = 8192;
+
+/// A histogram safe to record into from many connection workers.
+/// One mutex: a record is nanoseconds next to a network hop. Unlike
+/// the unbounded [`Histogram`] (sized for bounded evaluation runs),
+/// this retains only the last [`SHARED_HISTOGRAM_CAP`] samples — so
+/// the serving stats endpoint's percentiles describe *recent*
+/// behavior, which is also what an operator wants from a live server.
 #[derive(Debug, Default)]
-pub struct SharedHistogram(Mutex<Histogram>);
+pub struct SharedHistogram(Mutex<SharedHistInner>);
+
+#[derive(Debug, Default)]
+struct SharedHistInner {
+    /// The retained window, insertion order (front = oldest).
+    ring: std::collections::VecDeque<f64>,
+    /// Samples ever recorded (the window covers
+    /// `total - ring.len() .. total`).
+    total: usize,
+}
 
 impl SharedHistogram {
     pub fn record(&self, v: f64) {
-        self.0.lock().unwrap().record(v);
+        let mut h = self.0.lock().unwrap();
+        if h.ring.len() == SHARED_HISTOGRAM_CAP {
+            h.ring.pop_front();
+        }
+        h.ring.push_back(v);
+        h.total += 1;
     }
 
+    /// The retained window as a plain [`Histogram`] (bounded clone).
     pub fn snapshot(&self) -> Histogram {
-        self.0.lock().unwrap().clone()
+        let h = self.0.lock().unwrap();
+        Histogram { samples: h.ring.iter().copied().collect() }
+    }
+
+    /// Percentile over the samples recorded since total-count watermark
+    /// `from`, computed under the histogram's own lock. Returns
+    /// `(percentile, total)` so the caller carries `total` forward as
+    /// its next window start (the load monitor's refresh path). If the
+    /// window start has already been evicted from the ring, the
+    /// retained suffix is used — the window can only get *more* recent,
+    /// never resurrect old samples.
+    pub fn tail_percentile(&self, from: usize, p: f64) -> (f64, usize) {
+        let h = self.0.lock().unwrap();
+        let start_total = h.total - h.ring.len();
+        let skip = from.saturating_sub(start_total);
+        if skip >= h.ring.len() {
+            return (0.0, h.total);
+        }
+        let window: Vec<f64> = h.ring.iter().skip(skip).copied().collect();
+        (stats::percentile(&window, p), h.total)
     }
 }
 
@@ -202,6 +267,14 @@ pub struct BatchMetrics {
     /// Seconds from enqueue to batch execution start, per batched
     /// request.
     pub queue_wait: SharedHistogram,
+    /// Gauge: the adaptive gather window the last batch leader used,
+    /// microseconds (equals the configured window when adaptation is
+    /// off).
+    pub gather_window_us: AtomicU64,
+    /// Batches whose gather was cut short because a member's deadline
+    /// would have expired inside the window (the deadline-ordered
+    /// queue doing its job).
+    pub deadline_clamped: AtomicU64,
 }
 
 impl BatchMetrics {
@@ -213,6 +286,14 @@ impl BatchMetrics {
 
     pub fn record_bypass(&self) {
         self.bypassed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_gather_window(&self, window: std::time::Duration) {
+        self.gather_window_us.store(window.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_deadline_clamp(&self) {
+        self.deadline_clamped.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Mean requests per executed batch (0 when none ran).
@@ -357,6 +438,67 @@ mod tests {
         assert_eq!((batches, reqs, bypassed, max), (2, 6, 1, 4));
         assert!((m.mean_occupancy() - 3.0).abs() < 1e-12);
         assert_eq!(m.queue_wait.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn tail_percentile_windows_the_histogram() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        // Window = last 10 samples (91..=100): p95 sits near the top.
+        assert!(h.tail_percentile(90, 95.0) > 98.0);
+        // Full-history percentile is much lower — the window matters.
+        assert!(h.percentile(95.0) < 97.0);
+        assert_eq!(h.tail_percentile(100, 95.0), 0.0, "empty window is 0");
+        assert_eq!(h.tail_percentile(500, 50.0), 0.0, "past-the-end window is 0");
+        // The shared (lock-side, clone-free) variant agrees and
+        // reports the total length for the next window start.
+        let sh = SharedHistogram::default();
+        for i in 1..=100 {
+            sh.record(i as f64);
+        }
+        let (p, n) = sh.tail_percentile(90, 95.0);
+        assert_eq!(n, 100);
+        assert!(p > 98.0);
+    }
+
+    #[test]
+    fn shared_histogram_is_bounded_and_window_survives_eviction() {
+        let sh = SharedHistogram::default();
+        // Overfill by half a capacity: retention must cap and keep the
+        // *newest* samples.
+        let n = SHARED_HISTOGRAM_CAP + SHARED_HISTOGRAM_CAP / 2;
+        for i in 0..n {
+            sh.record(i as f64);
+        }
+        let snap = sh.snapshot();
+        assert_eq!(snap.len(), SHARED_HISTOGRAM_CAP, "retention must cap");
+        assert_eq!(snap.percentile(100.0), (n - 1) as f64, "newest survive");
+        assert_eq!(snap.percentile(0.0), (n - SHARED_HISTOGRAM_CAP) as f64, "oldest evicted");
+        // A window whose start was evicted degrades to the retained
+        // suffix instead of resurrecting stale data or panicking.
+        let (p, total) = sh.tail_percentile(10, 0.0);
+        assert_eq!(total, n);
+        assert_eq!(p, (n - SHARED_HISTOGRAM_CAP) as f64);
+        // A fully-evicted window (start beyond total) reports 0.
+        assert_eq!(sh.tail_percentile(n + 5, 50.0).0, 0.0);
+        // A recent window reads the true tail.
+        let (p, _) = sh.tail_percentile(n - 10, 0.0);
+        assert_eq!(p, (n - 10) as f64);
+    }
+
+    #[test]
+    fn shed_counter_and_gather_gauge() {
+        let c = Counters::default();
+        c.inc_sheds();
+        c.inc_sheds();
+        assert_eq!(c.sheds(), 2);
+        let m = BatchMetrics::default();
+        m.record_gather_window(std::time::Duration::from_micros(250));
+        assert_eq!(m.gather_window_us.load(Ordering::Relaxed), 250);
+        m.record_deadline_clamp();
+        assert_eq!(m.deadline_clamped.load(Ordering::Relaxed), 1);
     }
 
     #[test]

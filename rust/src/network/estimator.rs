@@ -45,11 +45,17 @@ impl BandwidthEstimator {
 
     /// True when the estimate drifted ≥ `rel_threshold` (e.g. 0.2 = 20%)
     /// from the last acknowledged value; acknowledging resets the baseline.
+    ///
+    /// The denominator is the acknowledged estimate guarded by a true
+    /// epsilon (`f64::EPSILON`), not `max(1.0)`: clamping to 1 B/s
+    /// silently rescaled the threshold for any baseline below one
+    /// byte per second, so a trickle link could collapse by half
+    /// without ever registering as drift.
     pub fn take_change(&mut self, rel_threshold: f64) -> Option<f64> {
         let est = self.estimate?;
         let drifted = match self.acked {
             None => true,
-            Some(a) => (est - a).abs() / a.max(1.0) >= rel_threshold,
+            Some(a) => (est - a).abs() / a.abs().max(f64::EPSILON) >= rel_threshold,
         };
         if drifted {
             self.acked = Some(est);
@@ -99,6 +105,27 @@ mod tests {
         assert!(e.take_change(0.2).is_none());
         e.observe(300_000, 1.0); // big drop
         assert!(e.take_change(0.2).is_some());
+    }
+
+    #[test]
+    fn sub_unit_estimates_still_detect_drift() {
+        // Regression: the old `a.max(1.0)` denominator measured drift
+        // against 1 B/s whenever the baseline was below it, so a
+        // 0.1 B/s link halving to 0.05 B/s showed "5% drift" and never
+        // fired. Relative drift is scale-free; it must fire at any
+        // magnitude.
+        let mut e = BandwidthEstimator::new(1.0); // no smoothing
+        e.observe(1, 10.0); // 0.1 B/s
+        assert!(e.take_change(0.2).is_some(), "first estimate always fires");
+        e.observe(1, 20.0); // 0.05 B/s — 50% drift
+        assert!(
+            e.take_change(0.2).is_some(),
+            "50% collapse on a sub-1 B/s link must register"
+        );
+        // And the threshold semantics match the >1 B/s regime exactly:
+        // a 5% wiggle stays quiet at a 20% threshold.
+        e.observe(1, 19.0); // ~0.0526 B/s, ~5% off the 0.05 baseline
+        assert!(e.take_change(0.2).is_none());
     }
 
     #[test]

@@ -20,6 +20,17 @@
 //! whose shape-mates are genuinely concurrent — exactly when batching
 //! pays.
 //!
+//! The window itself is **adaptive**: it scales between
+//! [`BatchConfig::min_gather`] and [`BatchConfig::gather_window`] with
+//! an EWMA of recent effective occupancy, so a lightly loaded server
+//! bounds its worst-case added latency near the floor while a
+//! saturated one waits long enough to fill batches. And the per-key
+//! queue is **deadline-ordered** rather than FIFO where it matters:
+//! each member may carry an SLA deadline, and a gathering leader never
+//! sleeps past the earliest one — a latency-critical request jumps the
+//! window instead of queueing behind it
+//! ([`BatchEngine::infer_tail_deadline`]).
+//!
 //! Buffer discipline: inputs are **moved** in (`Vec<f32>`, usually
 //! lent out of a connection's `util::pool::Scratch` via
 //! `Scratch::lend_floats`) and each is transformed in place into that
@@ -48,8 +59,17 @@ use crate::metrics::BatchMetrics;
 pub struct BatchConfig {
     /// Coalesce at most this many requests per executor acquisition.
     pub max_batch: usize,
-    /// How long a leader waits for followers before running anyway.
+    /// The longest a leader waits for followers before running anyway
+    /// (the adaptive window's ceiling).
     pub gather_window: Duration,
+    /// The adaptive window's floor: what a leader waits under light
+    /// load, when a full batch is unlikely anyway.
+    pub min_gather: Duration,
+    /// Scale the gather window with recent batch occupancy: shrink
+    /// toward `min_gather` under light load, grow toward
+    /// `gather_window` under saturation. `false` always waits the full
+    /// `gather_window` (the pre-adaptive behavior).
+    pub adaptive_gather: bool,
     /// `false` turns the engine into a pass-through (every request
     /// runs directly on its affinity shard) — the serialized arm of
     /// the scaling A/B. Even when `true`, coalescing only activates on
@@ -64,7 +84,13 @@ impl Default for BatchConfig {
         // under an 8-connection burst, two batches of 4 on two shards
         // beat one batch of 8 on one shard whenever per-sample compute
         // is near-linear in batch size.
-        Self { max_batch: 4, gather_window: Duration::from_micros(1000), enabled: true }
+        Self {
+            max_batch: 4,
+            gather_window: Duration::from_micros(1000),
+            min_gather: Duration::from_micros(100),
+            adaptive_gather: true,
+            enabled: true,
+        }
     }
 }
 
@@ -87,6 +113,23 @@ struct CellState {
     /// When the leader started executing — lets every member compute
     /// its own exact queue wait.
     exec_start: Option<Instant>,
+    /// Earliest deadline across the gathered members. The per-key
+    /// queue is deadline-ordered rather than FIFO in the sense that
+    /// matters: the most urgent member, not arrival order, dictates
+    /// when the batch fires (a leader never sleeps a gather window
+    /// past anyone's deadline).
+    min_deadline: Option<Instant>,
+}
+
+impl CellState {
+    fn absorb_deadline(&mut self, deadline: Option<Instant>) {
+        if let Some(d) = deadline {
+            self.min_deadline = Some(match self.min_deadline {
+                Some(cur) => cur.min(d),
+                None => d,
+            });
+        }
+    }
 }
 
 struct BatchCell {
@@ -95,9 +138,13 @@ struct BatchCell {
 }
 
 impl BatchCell {
-    fn with_first(input: Vec<f32>) -> Self {
+    fn with_first(input: Vec<f32>, deadline: Option<Instant>) -> Self {
         Self {
-            state: Mutex::new(CellState { inputs: vec![input], ..CellState::default() }),
+            state: Mutex::new(CellState {
+                inputs: vec![input],
+                min_deadline: deadline,
+                ..CellState::default()
+            }),
             cv: Condvar::new(),
         }
     }
@@ -136,6 +183,14 @@ pub struct BatchEngine {
     /// for the zero-latency bypass. Per-key (not global) so traffic
     /// with no shape-mates never waits a gather window it cannot fill.
     key_counts: Mutex<HashMap<BatchKey, usize>>,
+    /// EWMA of recent effective occupancy (batch sizes and bypasses
+    /// alike — a bypass is an occupancy-1 event), stored as f64 bits
+    /// in an atomic so the bypass fast path never takes a shared lock
+    /// for it. This is the saturation signal the adaptive gather
+    /// window scales with: near 1 the server is lightly loaded and
+    /// leaders fire after `min_gather`; near `max_batch` it is
+    /// saturated and waiting the full window keeps filling batches.
+    occupancy_ewma: std::sync::atomic::AtomicU64,
     pub metrics: BatchMetrics,
 }
 
@@ -148,8 +203,40 @@ impl BatchEngine {
             coalesce,
             pending: Mutex::new(HashMap::new()),
             key_counts: Mutex::new(HashMap::new()),
+            occupancy_ewma: std::sync::atomic::AtomicU64::new(1.0f64.to_bits()),
             metrics: BatchMetrics::default(),
         })
+    }
+
+    /// Recent effective occupancy (EWMA over batches and bypasses).
+    pub fn occupancy_ewma(&self) -> f64 {
+        f64::from_bits(self.occupancy_ewma.load(std::sync::atomic::Ordering::Relaxed))
+    }
+
+    /// The gather window a leader starting now would use: scaled
+    /// between `min_gather` and `gather_window` by recent occupancy
+    /// when adaptive, the configured window otherwise.
+    pub fn effective_gather_window(&self) -> Duration {
+        if !self.cfg.adaptive_gather || self.cfg.max_batch <= 1 {
+            return self.cfg.gather_window;
+        }
+        let floor = self.cfg.min_gather.min(self.cfg.gather_window);
+        let occ = self.occupancy_ewma();
+        // Map occupancy 1 → 0 saturation, max_batch → 1.
+        let denom = (self.cfg.max_batch - 1).max(1) as f64;
+        let sat = ((occ - 1.0) / denom).clamp(0.0, 1.0);
+        floor + Duration::from_secs_f64((self.cfg.gather_window - floor).as_secs_f64() * sat)
+    }
+
+    fn note_occupancy(&self, occupancy: usize) {
+        use std::sync::atomic::Ordering::Relaxed;
+        // CAS loop keeps concurrent updates exact; contention is rare
+        // (one update per batch or bypass) and each attempt is a few
+        // float ops.
+        let _ = self.occupancy_ewma.fetch_update(Relaxed, Relaxed, |bits| {
+            let e = f64::from_bits(bits);
+            Some((e + 0.2 * (occupancy as f64 - e)).to_bits())
+        });
     }
 
     pub fn config(&self) -> BatchConfig {
@@ -170,6 +257,21 @@ impl BatchEngine {
         model_id: u16,
         from: usize,
         input: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        self.infer_tail_deadline(affinity, model_id, from, input, None)
+    }
+
+    /// [`BatchEngine::infer_tail`] with an SLA deadline. A gathering
+    /// leader never sleeps past the earliest deadline among its
+    /// members — a latency-critical request jumps the gather window
+    /// instead of queueing FIFO behind it (deadline-ordered firing).
+    pub fn infer_tail_deadline(
+        &self,
+        affinity: usize,
+        model_id: u16,
+        from: usize,
+        input: Vec<f32>,
+        deadline: Option<Instant>,
     ) -> Result<Vec<f32>> {
         if !self.coalesce {
             self.metrics.record_bypass();
@@ -224,6 +326,7 @@ impl BatchEngine {
         // traffic never waits for followers that cannot exist.
         if peers == 0 {
             self.metrics.record_bypass();
+            self.note_occupancy(1);
             return self.run_single(affinity, model_id, from, input);
         }
 
@@ -248,6 +351,7 @@ impl BatchEngine {
                         continue;
                     }
                     st.inputs.push(input.take().expect("input consumed once"));
+                    st.absorb_deadline(deadline);
                     let slot = st.inputs.len() - 1;
                     let full = st.inputs.len() >= self.cfg.max_batch;
                     if full {
@@ -264,7 +368,8 @@ impl BatchEngine {
                     }
                     break Role::Follower(cell, slot);
                 }
-                let cell = Arc::new(BatchCell::with_first(input.take().expect("input once")));
+                let cell =
+                    Arc::new(BatchCell::with_first(input.take().expect("input once"), deadline));
                 map.insert(key, Arc::clone(&cell));
                 break Role::Leader(cell);
             }
@@ -276,8 +381,9 @@ impl BatchEngine {
         }
     }
 
-    /// Leader: gather followers for up to the window, detach the cell,
-    /// run the whole batch in one shard acquisition (routed to the
+    /// Leader: gather followers for up to the (adaptive) window — but
+    /// never past the earliest member deadline — detach the cell, run
+    /// the whole batch in one shard acquisition (routed to the
     /// least-busy shard so concurrent batches spread across the pool),
     /// scatter results.
     fn lead(
@@ -288,7 +394,10 @@ impl BatchEngine {
         from: usize,
         enqueued: Instant,
     ) -> Result<Vec<f32>> {
-        let deadline = Instant::now() + self.cfg.gather_window;
+        let window = self.effective_gather_window();
+        self.metrics.record_gather_window(window);
+        let gather_until = Instant::now() + window;
+        let mut deadline_fired = false;
         {
             let mut st = cell.state.lock().unwrap();
             loop {
@@ -304,13 +413,23 @@ impl BatchEngine {
                 if st.inputs.len() >= self.key_inflight(&key) {
                     break;
                 }
+                // Deadline-ordered firing: the most urgent member, not
+                // arrival order, dictates when the batch runs.
+                let until = match st.min_deadline {
+                    Some(d) if d < gather_until => d,
+                    _ => gather_until,
+                };
                 let now = Instant::now();
-                if now >= deadline {
+                if now >= until {
+                    deadline_fired = until < gather_until;
                     break;
                 }
-                let (g, _) = cell.cv.wait_timeout(st, deadline - now).unwrap();
+                let (g, _) = cell.cv.wait_timeout(st, until - now).unwrap();
                 st = g;
             }
+        }
+        if deadline_fired {
+            self.metrics.record_deadline_clamp();
         }
         // Detach from the map (map→cell order) so late arrivals start a
         // fresh batch, then close and take the gathered inputs.
@@ -331,6 +450,7 @@ impl BatchEngine {
 
         let mut guard = FailBatchGuard { cell: Arc::clone(&cell), armed: true };
         self.metrics.record_batch(inputs.len());
+        self.note_occupancy(inputs.len());
         self.metrics.queue_wait.record(enqueued.elapsed().as_secs_f64());
         let result = self.run_batch(None, model_id, from, &mut inputs);
 
@@ -385,6 +505,11 @@ impl BatchEngine {
     }
 
     /// Bypass path: one request straight through its affinity shard.
+    /// The wait for the shard lock is recorded as queue wait — on
+    /// backends where everything bypasses (PJRT batch-1 artifacts,
+    /// `--no-batch`), shard-lock contention *is* the queue, and it
+    /// must feed the same windowed p95 the admission budget and the
+    /// edge's `CloudLoad.queue_wait` term consume.
     fn run_single(
         &self,
         affinity: usize,
@@ -417,7 +542,15 @@ impl BatchEngine {
             .ok_or_else(|| anyhow!("bad model id {model_id}"))?
             .name;
         match affinity {
-            Some(a) => self.pool.run_on(a, |e| e.run_tail_batch(model, from, batch))?,
+            Some(a) => {
+                // Bypass: time-to-closure-start = shard-lock wait.
+                // (Leaders record their own gather wait in `lead`.)
+                let t0 = Instant::now();
+                self.pool.run_on(a, |e| {
+                    self.metrics.queue_wait.record(t0.elapsed().as_secs_f64());
+                    e.run_tail_batch(model, from, batch)
+                })?
+            }
             None => self.pool.run_on_least_busy(|e| e.run_tail_batch(model, from, batch))?,
         };
         Ok(())
@@ -471,7 +604,8 @@ mod tests {
         let eng = engine(4, BatchConfig {
             max_batch: 4,
             gather_window: Duration::from_millis(5),
-            enabled: true,
+            min_gather: Duration::from_millis(5),
+            ..BatchConfig::default()
         });
         let m = sim_manifest();
         let elems = m.model("simnet").unwrap().stages[1].out_elems;
@@ -518,7 +652,8 @@ mod tests {
         let eng = engine(4, BatchConfig {
             max_batch: 4,
             gather_window: Duration::from_millis(100), // would hurt if waited
-            enabled: true,
+            min_gather: Duration::from_millis(100),
+            ..BatchConfig::default()
         });
         let m = sim_manifest();
         let start = Arc::new(std::sync::Barrier::new(4));
@@ -561,6 +696,82 @@ mod tests {
         let (batches, _, bypassed, _) = eng.metrics.snapshot();
         assert_eq!(batches, 0);
         assert_eq!(bypassed, 1);
+    }
+
+    #[test]
+    fn adaptive_window_tracks_occupancy() {
+        let cfg = BatchConfig {
+            max_batch: 4,
+            gather_window: Duration::from_micros(1000),
+            min_gather: Duration::from_micros(100),
+            adaptive_gather: true,
+            enabled: true,
+        };
+        let eng = engine(2, cfg);
+        // Fresh engine assumes light load: window sits at the floor.
+        assert_eq!(eng.effective_gather_window(), cfg.min_gather);
+        // Saturate the occupancy signal: window grows toward the cap.
+        for _ in 0..50 {
+            eng.note_occupancy(4);
+        }
+        let saturated = eng.effective_gather_window();
+        assert!(
+            saturated > Duration::from_micros(900),
+            "saturated window stayed at {saturated:?}"
+        );
+        // Light load again: decays back toward the floor.
+        for _ in 0..50 {
+            eng.note_occupancy(1);
+        }
+        let light = eng.effective_gather_window();
+        assert!(light < Duration::from_micros(200), "light-load window stuck at {light:?}");
+        // Adaptation off: always the configured window, whatever the
+        // occupancy history says.
+        let fixed = engine(2, BatchConfig { adaptive_gather: false, ..cfg });
+        for _ in 0..50 {
+            fixed.note_occupancy(4);
+        }
+        assert_eq!(fixed.effective_gather_window(), cfg.gather_window);
+    }
+
+    #[test]
+    fn expired_deadline_fires_without_gathering() {
+        // Concurrent same-key requests, a huge fixed window, and an
+        // already-expired deadline on each: whatever role each request
+        // lands in, nobody may sleep out the 2 s window. (The census
+        // early-fire covers the both-joined case; the deadline bound
+        // covers a leader whose census stays ahead of its cell — e.g.
+        // members of a previous full batch still draining.)
+        let eng = engine(2, BatchConfig {
+            max_batch: 4,
+            gather_window: Duration::from_secs(2),
+            min_gather: Duration::from_secs(2),
+            adaptive_gather: false,
+            enabled: true,
+        });
+        let m = sim_manifest();
+        let elems = m.model("simnet").unwrap().stages[1].out_elems;
+        let start = Arc::new(std::sync::Barrier::new(2));
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..2)
+            .map(|t| {
+                let eng = Arc::clone(&eng);
+                let start = Arc::clone(&start);
+                let input = activation(t, elems);
+                std::thread::spawn(move || {
+                    start.wait();
+                    let past = Instant::now() - Duration::from_millis(1);
+                    eng.infer_tail_deadline(t, 0, 3, input, Some(past)).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "a leader slept a 2 s window past an expired deadline"
+        );
     }
 
     #[test]

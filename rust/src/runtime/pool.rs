@@ -171,6 +171,13 @@ impl ExecutorPool {
         out
     }
 
+    /// Callers currently holding or queued on any shard's lock — the
+    /// "work in flight right now" signal (admission control uses it to
+    /// distinguish a stalled window from an idle one).
+    pub fn active_count(&self) -> u64 {
+        self.shards.iter().map(|s| s.active.load(Ordering::SeqCst)).sum()
+    }
+
     /// Compiled artifacts summed across shards (each shard has its own
     /// cache, so the sum counts per-shard duplicates — by design).
     pub fn cached_count(&self) -> usize {

@@ -35,12 +35,22 @@
 //! nothing here. Malformed frames get an `Error` reply instead of a
 //! dropped connection; only an unrecoverable length-prefix violation
 //! closes the stream (it can no longer be framed).
+//!
+//! The server is also the sensor half of the live control plane: a
+//! [`LoadMonitor`] samples queue-wait p95 (windowed), busiest-shard
+//! utilization and batch occupancy into a [`CloudTelemetry`] block
+//! that every logits reply piggybacks, and an [`AdmissionConfig`]
+//! turns the same snapshot into shard-aware load shedding — when a
+//! budget is exceeded, cuts short of the last stage get a `Busy`
+//! refusal (carrying that telemetry) instead of queueing past the
+//! SLA, while `i = N` logits-forwards stay admitted so the edge's
+//! edge-ward march always terminates at a servable plan.
 
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -49,7 +59,7 @@ use crate::compression::png;
 use crate::compression::quant;
 use crate::metrics::{BatchMetrics, Counters, SharedHistogram};
 use crate::runtime::{BatchConfig, BatchEngine, ExecutorPool, Manifest, SharedExecutor};
-use crate::server::proto::{self, RecvFrame};
+use crate::server::proto::{self, CloudTelemetry, RecvFrame};
 use crate::util::json::Json;
 use crate::util::pool::{BufPool, Scratch};
 use crate::util::threadpool::ThreadPool;
@@ -57,24 +67,270 @@ use crate::util::threadpool::ThreadPool;
 /// Default connection-worker count (the pooled serving lanes).
 pub const DEFAULT_WORKERS: usize = 16;
 
-/// Serving configuration: transport lanes + compute batching.
+/// Shard-aware admission control (§III-E consumed cloud-side): when
+/// the compute spine is over budget, new data requests are refused
+/// with a `Busy` frame *before* they queue past the latency budget,
+/// and the refusal carries the telemetry the edge needs to
+/// re-decouple edge-ward. Defaults disable shedding and deadlines —
+/// admission is opt-in; telemetry piggybacking is always on (it costs
+/// 19 bytes per reply).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Shed when the queue-wait p95 over the current sampling window
+    /// exceeds this. `Duration::ZERO` disables the queue budget.
+    pub queue_p95_budget: Duration,
+    /// Shed when the busiest shard's busy fraction over the sampling
+    /// window exceeds this. `INFINITY` disables the utilization
+    /// budget.
+    pub utilization_budget: f64,
+    /// SLA deadline attached to every admitted tail request — the
+    /// batch engine's deadline-ordered gather never sleeps past it.
+    /// `Duration::ZERO` attaches none.
+    pub deadline: Duration,
+    /// How stale the sampled telemetry may be before it is recomputed
+    /// (sampling touches every shard's counters; 50 ms of staleness is
+    /// invisible to the control loop, which reacts over replies).
+    pub refresh: Duration,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            queue_p95_budget: Duration::ZERO,
+            utilization_budget: f64::INFINITY,
+            deadline: Duration::ZERO,
+            refresh: Duration::from_millis(50),
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// Is `t` over either budget?
+    fn over_budget(&self, t: &CloudTelemetry) -> bool {
+        (self.queue_p95_budget > Duration::ZERO
+            && f64::from(t.queue_wait_p95_ms) > self.queue_p95_budget.as_secs_f64() * 1e3)
+            || f64::from(t.utilization) > self.utilization_budget
+    }
+}
+
+/// Serving configuration: transport lanes + compute batching +
+/// admission control.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
     /// Pooled connection workers (overflow spawns dedicated threads).
     pub workers: usize,
     /// Micro-batch scheduler knobs (shard count comes from the pool).
     pub batch: BatchConfig,
+    /// Load shedding + deadline + telemetry sampling knobs.
+    pub admission: AdmissionConfig,
+    /// Pin each connection worker to the core its affinity shard maps
+    /// to (best-effort `sched_setaffinity`; no-op off Linux). Shard
+    /// affinity is connection-stable, so this keeps one shard's work
+    /// on one core's cache hierarchy.
+    pub pin_shards: bool,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { workers: DEFAULT_WORKERS, batch: BatchConfig::default() }
+        Self {
+            workers: DEFAULT_WORKERS,
+            batch: BatchConfig::default(),
+            admission: AdmissionConfig::default(),
+            pin_shards: false,
+        }
     }
+}
+
+/// Samples the compute spine into a [`CloudTelemetry`] snapshot at a
+/// bounded rate: windowed queue-wait p95 (samples since the previous
+/// refresh), busiest-shard busy fraction over the wall-clock window,
+/// and the batch engine's occupancy EWMA. Tests and the scenario
+/// bench can inject a synthetic snapshot to drive the loop
+/// deterministically.
+///
+/// Lock discipline: the per-request warm path is lock-free — an
+/// `AtomicBool` gates the (rare) injected override and the cached
+/// snapshot lives packed in two relaxed `AtomicU64`s behind an atomic
+/// freshness stamp, so connection workers only contend on the refresh
+/// mutex once per `cfg.refresh` interval. A reader racing a refresh
+/// may mix fields from two adjacent snapshots (the two words are not
+/// loaded atomically together); telemetry is a smoothed advisory
+/// signal, so that tear is harmless by design.
+struct LoadMonitor {
+    cfg: AdmissionConfig,
+    /// Time base for the freshness stamp.
+    base: Instant,
+    /// Nanoseconds-since-`base` until which the cached snapshot is
+    /// fresh (0 = never sampled).
+    fresh_until: AtomicU64,
+    /// Packed cache word A: `[queue_wait_p95_ms f32 | utilization f32]`.
+    cached_a: AtomicU64,
+    /// Packed cache word B: `[batch_occupancy f32 | shedding u8]`.
+    cached_b: AtomicU64,
+    /// Fast gate for the injected override (true ⇔ injected is Some).
+    injected_on: AtomicBool,
+    injected: Mutex<Option<CloudTelemetry>>,
+    refresh_state: Mutex<RefreshState>,
+}
+
+struct RefreshState {
+    last_refresh: Option<Instant>,
+    /// Per-shard busy seconds at the last refresh.
+    prev_busy: Vec<f64>,
+    /// Queue-wait histogram length at the last refresh (the window
+    /// start for the next p95).
+    qw_seen: usize,
+    /// The last reported queue-wait p95 — held across windows that
+    /// completed no work while requests were in flight (a stall must
+    /// not read as "queue empty" and lift admission mid-overload).
+    last_qw_ms: f64,
+}
+
+fn pack_a(t: &CloudTelemetry) -> u64 {
+    ((t.queue_wait_p95_ms.to_bits() as u64) << 32) | t.utilization.to_bits() as u64
+}
+
+fn pack_b(t: &CloudTelemetry) -> u64 {
+    ((t.batch_occupancy.to_bits() as u64) << 32) | t.shedding as u64
+}
+
+fn unpack(a: u64, b: u64) -> CloudTelemetry {
+    CloudTelemetry {
+        queue_wait_p95_ms: f32::from_bits((a >> 32) as u32),
+        utilization: f32::from_bits(a as u32),
+        batch_occupancy: f32::from_bits((b >> 32) as u32),
+        shedding: b & 1 != 0,
+        sheds: 0,
+    }
+}
+
+impl LoadMonitor {
+    fn new(cfg: AdmissionConfig, shards: usize) -> Self {
+        Self {
+            cfg,
+            base: Instant::now(),
+            fresh_until: AtomicU64::new(0),
+            cached_a: AtomicU64::new(0),
+            cached_b: AtomicU64::new(0),
+            injected_on: AtomicBool::new(false),
+            injected: Mutex::new(None),
+            refresh_state: Mutex::new(RefreshState {
+                last_refresh: None,
+                prev_busy: vec![0.0; shards],
+                qw_seen: 0,
+                last_qw_ms: 0.0,
+            }),
+        }
+    }
+
+    /// Current telemetry, refreshed if stale. `sheds` is stamped from
+    /// the live counter either way (it is one atomic load).
+    fn sample(&self, pool: &ExecutorPool, engine: &BatchEngine, sheds: u64) -> CloudTelemetry {
+        if self.injected_on.load(Ordering::Relaxed) {
+            if let Some(mut t) = *self.injected.lock().unwrap() {
+                t.shedding = t.shedding || self.cfg.over_budget(&t);
+                t.sheds = sheds as u32;
+                return t;
+            }
+        }
+        let now_n = self.base.elapsed().as_nanos() as u64;
+        if now_n >= self.fresh_until.load(Ordering::Relaxed) {
+            self.refresh_now(pool, engine);
+        }
+        let mut t = unpack(
+            self.cached_a.load(Ordering::Relaxed),
+            self.cached_b.load(Ordering::Relaxed),
+        );
+        t.sheds = sheds as u32;
+        t
+    }
+
+    /// Slow path: recompute the snapshot under the refresh mutex.
+    fn refresh_now(&self, pool: &ExecutorPool, engine: &BatchEngine) {
+        let mut st = self.refresh_state.lock().unwrap();
+        let now = Instant::now();
+        // Herd guard: a worker that queued behind the refresher finds
+        // the stamp already advanced and leaves.
+        let now_n = self.base.elapsed().as_nanos() as u64;
+        if now_n < self.fresh_until.load(Ordering::Relaxed) {
+            return;
+        }
+        let wall = st
+            .last_refresh
+            .map(|at| now.duration_since(at).as_secs_f64())
+            .unwrap_or(0.0)
+            .max(1e-9);
+        let mut util: f64 = 0.0;
+        for (k, s) in pool.shard_stats().into_iter().enumerate() {
+            if k < st.prev_busy.len() {
+                util = util.max((s.busy_seconds - st.prev_busy[k]) / wall);
+                st.prev_busy[k] = s.busy_seconds;
+            }
+        }
+        // First sample has no window: report idle, start the clock.
+        if st.last_refresh.is_none() {
+            util = 0.0;
+        }
+        // Windowed p95 computed under the histogram's lock (bounded —
+        // no clone of an unbounded sample vector per refresh). An
+        // empty window is ambiguous: with work in flight it means the
+        // engine is *stalled* (nothing started executing), and
+        // reporting 0 there would lift queue-based admission at the
+        // exact moment the queue is growing — hold the previous
+        // estimate instead. With nothing in flight, empty really means
+        // idle and the signal decays to 0.
+        let (p95, total) = engine.metrics.queue_wait.tail_percentile(st.qw_seen, 95.0);
+        let qw_ms = if total == st.qw_seen {
+            if pool.active_count() > 0 {
+                st.last_qw_ms
+            } else {
+                0.0
+            }
+        } else {
+            p95 * 1e3
+        };
+        st.qw_seen = total;
+        st.last_qw_ms = qw_ms;
+        let mut t = CloudTelemetry {
+            queue_wait_p95_ms: qw_ms as f32,
+            utilization: util as f32,
+            batch_occupancy: engine.occupancy_ewma() as f32,
+            shedding: false,
+            sheds: 0,
+        };
+        t.shedding = self.cfg.over_budget(&t);
+        st.last_refresh = Some(now);
+        self.cached_a.store(pack_a(&t), Ordering::Relaxed);
+        self.cached_b.store(pack_b(&t), Ordering::Relaxed);
+        self.fresh_until
+            .store(now_n.saturating_add(self.cfg.refresh.as_nanos() as u64), Ordering::Relaxed);
+    }
+
+    fn inject(&self, t: Option<CloudTelemetry>) {
+        let mut slot = self.injected.lock().unwrap();
+        *slot = t;
+        self.injected_on.store(slot.is_some(), Ordering::Relaxed);
+        // Removing an injection must not leave a long-lived stale
+        // cached window: force the next sample to refresh.
+        if slot.is_none() {
+            self.fresh_until.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Outcome of an admitted-or-shed data request.
+enum Served {
+    /// Logits are in the scratch's float buffer.
+    Logits,
+    /// Admission control refused; reply `Busy` with telemetry.
+    Shed,
 }
 
 pub struct CloudServer {
     engine: Arc<BatchEngine>,
     manifest: Manifest,
+    cfg: ServeConfig,
+    monitor: LoadMonitor,
     pub counters: Arc<Counters>,
     /// Per-request service time (frame read → reply written), seconds.
     pub service_hist: Arc<SharedHistogram>,
@@ -116,9 +372,12 @@ impl CloudServer {
     pub fn with_pool(pool: Arc<ExecutorPool>, cfg: ServeConfig) -> Self {
         let manifest = pool.manifest().clone();
         let workers = cfg.workers.max(1);
+        let monitor = LoadMonitor::new(cfg.admission, pool.shard_count());
         Self {
             engine: BatchEngine::new(pool, cfg.batch),
             manifest,
+            cfg,
+            monitor,
             counters: Arc::new(Counters::default()),
             service_hist: Arc::new(SharedHistogram::default()),
             started: Instant::now(),
@@ -144,6 +403,21 @@ impl CloudServer {
     /// The compute pool behind the batch engine.
     pub fn executor_pool(&self) -> &Arc<ExecutorPool> {
         self.engine.pool()
+    }
+
+    /// The current cloud telemetry snapshot (what the next reply will
+    /// piggyback).
+    pub fn telemetry(&self) -> CloudTelemetry {
+        self.monitor.sample(self.engine.pool(), &self.engine, self.counters.sheds())
+    }
+
+    /// Override the sampled telemetry with a synthetic snapshot
+    /// (`None` restores live sampling). The deterministic load hook
+    /// for the closed-loop tests and the control-plane scenario bench:
+    /// admission budgets are evaluated against the injected values, so
+    /// an injected overload really sheds.
+    pub fn inject_load(&self, t: Option<CloudTelemetry>) {
+        self.monitor.inject(t);
     }
 
     /// Bind and serve on a background thread; returns the local address
@@ -200,6 +474,21 @@ impl CloudServer {
 
     fn serve_conn(&self, stream: TcpStream, conn_id: usize) -> Result<()> {
         stream.set_nodelay(true).ok();
+        if self.cfg.pin_shards {
+            // Connection → shard → core *group*: the cores are
+            // partitioned into one contiguous group per shard and a
+            // shard's connection workers spread across its group — the
+            // shard's working set stays on one cache/NUMA neighborhood
+            // without collapsing the worker pool onto shard_count
+            // cores (tail compute runs on these threads; one core per
+            // shard would serialize it). Best-effort; failure is fine.
+            let shards = self.engine.pool().shard_count();
+            let cores = crate::util::affinity::available_cores();
+            let shard = conn_id % shards;
+            let group = (cores / shards).max(1);
+            let core = (shard * group + (conn_id / shards) % group) % cores;
+            crate::util::affinity::pin_to_core(core);
+        }
         let mut writer = stream.try_clone()?;
         let mut reader = BufReader::new(stream);
         let mut scratch = self.scratch_pool.get();
@@ -225,19 +514,27 @@ impl CloudServer {
             match kind {
                 proto::KIND_FEATURES => {
                     self.note_data_request(sc.frame.len());
-                    let result = self.handle_features(conn_id, sc);
-                    self.reply_data(&mut writer, sc, t0, result)?;
+                    let telemetry = self.telemetry();
+                    let deadline = self.request_deadline(t0);
+                    let result = self.handle_features(conn_id, sc, telemetry.shedding, deadline);
+                    self.reply_data(&mut writer, sc, t0, telemetry, result)?;
                 }
                 proto::KIND_IMAGE => {
                     self.note_data_request(sc.frame.len());
-                    let result = if sc.frame.len() < 4 {
+                    let telemetry = self.telemetry();
+                    let result = if telemetry.shedding {
+                        // Full-model work is the most expensive thing
+                        // admission can refuse; shed before decoding.
+                        Ok(Served::Shed)
+                    } else if sc.frame.len() < 4 {
                         Err(anyhow!("short image frame"))
                     } else {
                         let model_id = u16::from_le_bytes([sc.frame[0], sc.frame[1]]);
                         let Scratch { frame, floats, .. } = sc;
                         self.handle_image(conn_id, model_id, &frame[4..], floats)
+                            .map(|()| Served::Logits)
                     };
-                    self.reply_data(&mut writer, sc, t0, result)?;
+                    self.reply_data(&mut writer, sc, t0, telemetry, result)?;
                 }
                 proto::KIND_STATS => {
                     self.counters.inc_control();
@@ -280,26 +577,51 @@ impl CloudServer {
         self.counters.add_bytes(payload_len as u64);
     }
 
+    /// The SLA deadline attached to a request arriving at `t0`, if
+    /// admission configures one.
+    fn request_deadline(&self, t0: Instant) -> Option<Instant> {
+        if self.cfg.admission.deadline > Duration::ZERO {
+            Some(t0 + self.cfg.admission.deadline)
+        } else {
+            None
+        }
+    }
+
     /// Reply plumbing shared by every data-request kind: logits frame
-    /// on success, error frame (+ error counter) on failure, service
-    /// histogram either way.
+    /// (with piggybacked telemetry) on success, `Busy` (+ shed
+    /// counter) when admission refused, error frame (+ error counter)
+    /// on failure. Served and failed requests land in the service
+    /// histogram; sheds deliberately do not — a shed is the server
+    /// refusing to pay service time, and folding its microseconds in
+    /// would flatter p95 exactly when the server is struggling.
     fn reply_data(
         &self,
         writer: &mut impl std::io::Write,
         sc: &mut Scratch,
         t0: Instant,
-        result: Result<()>,
+        telemetry: CloudTelemetry,
+        result: Result<Served>,
     ) -> Result<()> {
         match result {
-            Ok(()) => {
-                proto::write_logits_frame(writer, &sc.floats, &mut sc.wire)?;
+            Ok(Served::Logits) => {
+                proto::write_logits_frame_with(writer, &sc.floats, Some(&telemetry), &mut sc.wire)?;
+                self.service_hist.record(t0.elapsed().as_secs_f64());
+            }
+            Ok(Served::Shed) => {
+                self.counters.inc_sheds();
+                let mut t = telemetry;
+                t.shedding = true;
+                t.sheds = self.counters.sheds() as u32;
+                sc.wire.clear();
+                t.encode_into(&mut sc.wire);
+                proto::write_frame_raw(writer, proto::KIND_BUSY, &sc.wire)?;
             }
             Err(e) => {
                 self.counters.inc_errors();
                 proto::write_frame_raw(writer, proto::KIND_ERROR, format!("{e:#}").as_bytes())?;
+                self.service_hist.record(t0.elapsed().as_secs_f64());
             }
         }
-        self.service_hist.record(t0.elapsed().as_secs_f64());
         Ok(())
     }
 
@@ -331,6 +653,7 @@ impl CloudServer {
                 ])
             })
             .collect();
+        let telemetry = self.telemetry();
         Json::obj(vec![
             // Data-request taxonomy (see metrics::Counters): `requests`
             // counts Features/Image only; probes and stats queries land
@@ -361,6 +684,23 @@ impl CloudServer {
             ("batch_max_occupancy", Json::num(max_occ as f64)),
             ("queue_wait_p50_ms", Json::num(qw50)),
             ("queue_wait_p95_ms", Json::num(qw95)),
+            // Control-plane telemetry: what the next reply piggybacks,
+            // plus the admission + adaptive-gather observables.
+            ("sheds", Json::num(self.counters.sheds() as f64)),
+            ("shedding", Json::num(telemetry.shedding as u8 as f64)),
+            ("utilization", Json::num(f64::from(telemetry.utilization))),
+            (
+                "queue_wait_window_p95_ms",
+                Json::num(f64::from(telemetry.queue_wait_p95_ms)),
+            ),
+            (
+                "gather_window_us",
+                Json::num(bm.gather_window_us.load(std::sync::atomic::Ordering::Relaxed) as f64),
+            ),
+            (
+                "deadline_clamped",
+                Json::num(bm.deadline_clamped.load(std::sync::atomic::Ordering::Relaxed) as f64),
+            ),
         ])
         .to_string()
     }
@@ -369,7 +709,35 @@ impl CloudServer {
     /// inference through the batch engine; the logits land in
     /// `scratch.floats` (reused). The float buffer is lent through the
     /// engine by move and restored as the same allocation.
-    fn handle_features(&self, conn_id: usize, scratch: &mut Scratch) -> Result<()> {
+    ///
+    /// Shedding is shard-aware *and* cut-aware: when admission is over
+    /// budget, cuts short of the last stage are refused (their tails
+    /// are the compute being protected), but an `i = N` cut — the
+    /// logits-forward whose tail is the identity — is always admitted.
+    /// That keeps the control loop live under overload: the edge's
+    /// edge-ward march terminates at a plan the cloud accepts, load
+    /// drains, and the piggybacked telemetry then walks the cut back.
+    fn handle_features(
+        &self,
+        conn_id: usize,
+        scratch: &mut Scratch,
+        shedding: bool,
+        deadline: Option<Instant>,
+    ) -> Result<Served> {
+        // Shed off the fixed header alone — refusing work must not pay
+        // the entropy decode. Unpeekable frames fall through and fail
+        // in the full decode with a precise error.
+        if shedding {
+            if let Some((model, stage)) = feature::peek_route(&scratch.frame) {
+                let shed = match self.manifest.models.get(model as usize) {
+                    Some(m) => (stage as usize) < m.num_stages(),
+                    None => true, // bogus model: not worth decoding while over budget
+                };
+                if shed {
+                    return Ok(Served::Shed);
+                }
+            }
+        }
         let (model_id, from) = {
             let Scratch { frame, values, floats, codec, .. } = scratch;
             let h = feature::decode_into(frame, codec, values).map_err(anyhow::Error::new)?;
@@ -399,9 +767,9 @@ impl CloudServer {
             (h.model, i + 1)
         };
         let activation = scratch.lend_floats();
-        let out = self.engine.infer_tail(conn_id, model_id, from, activation)?;
+        let out = self.engine.infer_tail_deadline(conn_id, model_id, from, activation, deadline)?;
         scratch.restore_floats(out);
-        Ok(())
+        Ok(Served::Logits)
     }
 
     fn handle_image(

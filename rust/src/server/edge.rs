@@ -3,7 +3,14 @@
 //! One `EdgeClient` models the paper's edge device: it executes stages
 //! `1..=i*` locally, compresses the cut feature map, ships it through a
 //! token-bucket-paced socket (the controlled uplink of the testbed), and
-//! adapts `(i*, c)` as its bandwidth estimate drifts (§III-E).
+//! adapts `(i*, c)` through the
+//! [`ControlPlane`](crate::coordinator::ControlPlane) as its bandwidth
+//! estimate *or* the cloud's piggybacked load telemetry drifts
+//! (§III-E, closed over both signals). A `Busy` shed is handled inside
+//! [`EdgeClient::infer`]: the plane adopts the refusal's telemetry,
+//! shifts the cut edge-ward, and the request is re-encoded and resent
+//! under the new plan (bounded retries — the march terminates at the
+//! logits-forward cut the cloud always admits).
 //!
 //! The encode half runs through the shared
 //! [`coordinator::session::Session`](crate::coordinator::session::Session)
@@ -19,23 +26,30 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::session::{EncodedRequest, Session};
-use crate::coordinator::AdaptationController;
+use crate::coordinator::ControlPlane;
 use crate::data::gen::Sample;
 use crate::ilp::Decision;
 use crate::metrics::Breakdown;
 use crate::network::throttle::{RateHandle, ThrottledWriter};
 use crate::runtime::Executor;
 use crate::server::proto::{self, Frame, RecvFrame};
+use crate::util::json::Json;
 
 /// Transfers below this size are RTT/compute-dominated and excluded
 /// from bandwidth estimation.
 pub const MIN_ESTIMATE_BYTES: usize = 4096;
 
+/// How many `Busy` sheds one request tolerates before giving up. Each
+/// shed moves the plan at least one stage edge-ward, so any model
+/// whose stage count exceeds this still converges across requests —
+/// and the shed-everything pathological server can't wedge a caller.
+pub const MAX_BUSY_RETRIES: usize = 4;
+
 pub struct EdgeClient<'a> {
     session: Session<'a>,
     reader: BufReader<TcpStream>,
     writer: ThrottledWriter<TcpStream>,
-    pub controller: AdaptationController,
+    pub controller: ControlPlane,
     /// Reusable receive buffer (reply payloads).
     rx_buf: Vec<u8>,
     /// Reusable decoded logits.
@@ -47,9 +61,14 @@ pub struct EdgeClient<'a> {
 pub struct EdgeResult {
     pub prediction: usize,
     pub correct: bool,
+    /// The decision that was actually served (after any shed-driven
+    /// edge-ward retries).
     pub decision: Decision,
     pub breakdown: Breakdown,
     pub replanned: bool,
+    /// `Busy` sheds absorbed (and retried edge-ward) serving this
+    /// request.
+    pub sheds: usize,
 }
 
 impl<'a> EdgeClient<'a> {
@@ -58,7 +77,7 @@ impl<'a> EdgeClient<'a> {
         model: &str,
         addr: std::net::SocketAddr,
         uplink: RateHandle,
-        controller: AdaptationController,
+        controller: ControlPlane,
     ) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
@@ -72,64 +91,116 @@ impl<'a> EdgeClient<'a> {
     }
 
     /// Serve one request end-to-end; blocks for the cloud reply.
+    /// `Busy` sheds are absorbed here: the control plane shifts the
+    /// cut edge-ward and the request is re-encoded and resent, up to
+    /// [`MAX_BUSY_RETRIES`] times.
     pub fn infer(&mut self, sample: &Sample) -> Result<EdgeResult> {
-        let plan = self.controller.plan().clone();
         let mut bd = Breakdown::default();
-        let req = self.session.encode_request(sample, plan.decision, &mut bd)?;
+        let mut sheds = 0usize;
+        let mut replanned = false;
+        loop {
+            let decision = self.controller.plan().decision;
+            let req = self.session.encode_request(sample, decision, &mut bd)?;
 
-        // Transmit through the paced socket and await the reply.
-        let t2 = Instant::now();
-        let sent = match req {
-            EncodedRequest::Features { .. } => {
-                proto::write_frame_raw(&mut self.writer, proto::KIND_FEATURES, self.session.wire())?
-            }
-            EncodedRequest::Image { hw } => {
-                let mut head = [0u8; 4];
-                head[..2].copy_from_slice(&self.session.model_id().to_le_bytes());
-                head[2..].copy_from_slice(&hw.to_le_bytes());
-                proto::write_frame_parts(&mut self.writer, proto::KIND_IMAGE, &head, self.session.wire())?
-            }
-        };
-        bd.tx_bytes = sent;
-        let kind = self.read_reply()?;
-        // Transmit time ≈ send + queueing; the cloud compute is inside
-        // this round trip too, but at our throttled rates (≤ a few MB/s)
-        // the wire dominates by an order of magnitude.
-        bd.transmit = t2.elapsed().as_secs_f64();
+            // Transmit through the paced socket and await the reply.
+            let t2 = Instant::now();
+            let sent = match req {
+                EncodedRequest::Features { .. } => proto::write_frame_raw(
+                    &mut self.writer,
+                    proto::KIND_FEATURES,
+                    self.session.wire(),
+                )?,
+                EncodedRequest::Image { hw } => {
+                    let mut head = [0u8; 4];
+                    head[..2].copy_from_slice(&self.session.model_id().to_le_bytes());
+                    head[2..].copy_from_slice(&hw.to_le_bytes());
+                    proto::write_frame_parts(
+                        &mut self.writer,
+                        proto::KIND_IMAGE,
+                        &head,
+                        self.session.wire(),
+                    )?
+                }
+            };
+            // Across retries the breakdown accumulates edge compute
+            // and counts the bytes of every attempt — the shed
+            // attempts were really paid for.
+            bd.tx_bytes += sent;
+            let kind = self.read_reply()?;
+            // Transmit time ≈ send + queueing; the cloud compute is
+            // inside this round trip too, but at our throttled rates
+            // (≤ a few MB/s) the wire dominates by an order of
+            // magnitude.
+            bd.transmit += t2.elapsed().as_secs_f64();
 
-        match kind {
-            proto::KIND_LOGITS => proto::parse_logits_into(&self.rx_buf, &mut self.logits)?,
-            proto::KIND_ERROR => {
-                return Err(anyhow!("cloud error: {}", String::from_utf8_lossy(&self.rx_buf)))
+            // Feed the adaptation loop with the observed uplink
+            // throughput. Only transfers large enough to be
+            // bandwidth-dominated count: for a 33-byte logits frame
+            // the round trip is all RTT + cloud compute, and folding
+            // those in collapsed the estimate and sent the controller
+            // into pathological early cuts (§Perf log).
+            if sent >= MIN_ESTIMATE_BYTES {
+                replanned |= self
+                    .controller
+                    .observe_transfer(sent, t2.elapsed().as_secs_f64().max(1e-9))
+                    .is_some();
             }
-            k => return Err(anyhow!("unexpected reply kind {k}")),
+
+            match kind {
+                proto::KIND_LOGITS => {
+                    // The reply's piggybacked telemetry is the load
+                    // half of the closed loop.
+                    let telemetry =
+                        proto::parse_logits_telemetry_into(&self.rx_buf, &mut self.logits)?;
+                    if let Some(t) = telemetry {
+                        replanned |= self.controller.observe_telemetry(&t).is_some();
+                    }
+                }
+                proto::KIND_BUSY => {
+                    // Shed: adopt the refusal's telemetry, move the
+                    // cut edge-ward, retry under the new plan. A
+                    // telemetry-less (or garbled) refusal still counts
+                    // — the shed itself is the signal.
+                    sheds += 1;
+                    let t = proto::CloudTelemetry::decode(&self.rx_buf)
+                        .map(|(t, _)| t)
+                        .unwrap_or_default();
+                    let before = decision;
+                    self.controller.on_busy(&t);
+                    replanned = true;
+                    if sheds > MAX_BUSY_RETRIES {
+                        return Err(anyhow!(
+                            "cloud shed the request {sheds} times (last plan {before:?})"
+                        ));
+                    }
+                    continue;
+                }
+                proto::KIND_ERROR => {
+                    return Err(anyhow!(
+                        "cloud error: {}",
+                        String::from_utf8_lossy(&self.rx_buf)
+                    ))
+                }
+                k => return Err(anyhow!("unexpected reply kind {k}")),
+            }
+
+            let prediction = self
+                .logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+
+            return Ok(EdgeResult {
+                prediction,
+                correct: prediction == sample.label,
+                decision,
+                breakdown: bd,
+                replanned,
+                sheds,
+            });
         }
-        let prediction = self
-            .logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-
-        // Feed the adaptation loop with the observed uplink throughput.
-        // Only transfers large enough to be bandwidth-dominated count:
-        // for a 33-byte logits frame the round trip is all RTT + cloud
-        // compute, and folding those in collapsed the estimate and sent
-        // the controller into pathological early cuts (§Perf log).
-        let replanned = if sent >= MIN_ESTIMATE_BYTES {
-            self.controller.observe_transfer(sent, bd.transmit.max(1e-9)).is_some()
-        } else {
-            false
-        };
-
-        Ok(EdgeResult {
-            prediction,
-            correct: prediction == sample.label,
-            decision: plan.decision,
-            breakdown: bd,
-            replanned,
-        })
     }
 
     /// Read one reply frame into the reusable receive buffer; returns
@@ -158,13 +229,50 @@ impl<'a> EdgeClient<'a> {
         Ok(self.controller.observe_transfer(sent, dt).is_some())
     }
 
-    /// Query the cloud's stats endpoint.
+    /// Query the cloud's stats endpoint and merge this edge's
+    /// adaptation counters in as an `"edge"` object — one JSON
+    /// document describes both halves of the control loop (re-solves,
+    /// plan changes, sheds observed, the current `(i*, c)` and the
+    /// fused bandwidth/load estimates alongside the cloud's per-shard
+    /// stats).
     pub fn stats(&mut self) -> Result<String> {
         Frame::Stats.write_to(&mut self.writer)?;
-        match self.read_reply()? {
-            proto::KIND_STATS_REPLY => Ok(String::from_utf8_lossy(&self.rx_buf).into_owned()),
-            k => Err(anyhow!("unexpected reply {k}")),
-        }
+        let cloud = match self.read_reply()? {
+            proto::KIND_STATS_REPLY => String::from_utf8_lossy(&self.rx_buf).into_owned(),
+            k => return Err(anyhow!("unexpected reply {k}")),
+        };
+        let mut obj = match Json::parse(&cloud) {
+            Ok(Json::Obj(map)) => map,
+            // A cloud that serves something unexpected still gets its
+            // payload through, nested verbatim.
+            _ => {
+                let mut map = std::collections::BTreeMap::new();
+                map.insert("cloud_raw".to_string(), Json::str(&cloud));
+                map
+            }
+        };
+        let (cut_i, cut_c) = match self.controller.plan().decision {
+            Decision::CloudOnly => (0usize, 0u8),
+            Decision::Cut { i, c } => (i, c),
+        };
+        let load = self.controller.cloud_load();
+        obj.insert(
+            "edge".to_string(),
+            Json::obj(vec![
+                ("resolves", Json::num(self.controller.resolves() as f64)),
+                ("plan_changes", Json::num(self.controller.plan_changes() as f64)),
+                ("sheds_observed", Json::num(self.controller.sheds_observed() as f64)),
+                ("cut_i", Json::num(cut_i as f64)),
+                ("cut_c", Json::num(cut_c as f64)),
+                (
+                    "bandwidth_est",
+                    Json::num(self.controller.bandwidth_estimate().unwrap_or(0.0)),
+                ),
+                ("cloud_queue_wait_ms", Json::num(load.queue_wait * 1e3)),
+                ("cloud_utilization", Json::num(load.utilization)),
+            ]),
+        );
+        Ok(Json::Obj(obj).to_string())
     }
 }
 
@@ -199,7 +307,7 @@ mod tests {
         let latency = LatencyTables::measured(&exe, "tinyconv", 2, 4.0).unwrap();
         let engine =
             DecisionEngine::new("tinyconv", tables, latency, Scale::Measured, 0.10).unwrap();
-        let controller = AdaptationController::new(engine, 1_000_000.0);
+        let controller = ControlPlane::new(engine, 1_000_000.0);
         let rate = RateHandle::new(10_000_000);
         let mut edge =
             EdgeClient::connect(&exe, "tinyconv", addr, rate, controller).unwrap();

@@ -9,15 +9,18 @@
 //!   natively on the connection worker and finished through the
 //!   sharded, micro-batched inference engine
 //!   (`runtime::{ExecutorPool, BatchEngine}`); image frames run the
-//!   full model on the connection's affinity shard;
+//!   full model on the connection's affinity shard; shard-aware
+//!   admission control sheds over-budget work with `Busy` frames and
+//!   every logits reply piggybacks a compact load-telemetry block;
 //! * [`edge`] — the edge client: drives the shared
 //!   `coordinator::session::Session` (head stages, quantize,
 //!   entropy-code), ships frames through the throttled socket, and
-//!   re-decouples as its bandwidth estimate drifts.
+//!   re-decouples as its bandwidth estimate *or* the cloud's reported
+//!   load drifts (`coordinator::control::ControlPlane`).
 
 pub mod cloud;
 pub mod edge;
 pub mod proto;
 
-pub use cloud::{CloudServer, ServeConfig};
+pub use cloud::{AdmissionConfig, CloudServer, ServeConfig};
 pub use edge::EdgeClient;

@@ -7,7 +7,16 @@
 //!   model id, stage, c, range, entropy-coded values);
 //! * `Image` — `[model_id u16][hw u16][png-like bytes]` for the
 //!   cloud-only path;
-//! * `Logits` — `[count u16][count × f32]` response;
+//! * `Logits` — `[count u16][count × f32]`, optionally followed by a
+//!   self-describing [`CloudTelemetry`] block (the control plane's
+//!   piggyback channel). Telemetry-aware readers accept frames with
+//!   or without the block and skip unknown trailing fields inside it,
+//!   so writers can omit it or extend it freely; note the cloud
+//!   attaches it unconditionally, so in a mixed-version rollout the
+//!   *edges* must be upgraded first (a pre-telemetry reader rejects
+//!   trailing bytes);
+//! * `Busy` — admission control shed the request; payload is the same
+//!   telemetry block so the edge can re-decouple off the refusal;
 //! * `Stats` / `StatsReply` — queries the cloud's counters;
 //! * `Shutdown` — graceful server stop (tests).
 //!
@@ -37,6 +46,7 @@ pub const KIND_SHUTDOWN: u8 = 6;
 pub const KIND_ERROR: u8 = 7;
 pub const KIND_PROBE: u8 = 8;
 pub const KIND_PROBE_ACK: u8 = 9;
+pub const KIND_BUSY: u8 = 10;
 
 /// Hard cap on frame size. Our largest legitimate payload is a VGG
 /// stage-1 feature map (224·224·64 values) bit-packed at c=16 ≈ 6.4 MB;
@@ -98,7 +108,7 @@ pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<RecvFrame
     if (got as u64) < want {
         return Err(anyhow!("connection closed mid-frame"));
     }
-    if !(KIND_FEATURES..=KIND_PROBE_ACK).contains(&kind[0]) {
+    if !(KIND_FEATURES..=KIND_BUSY).contains(&kind[0]) {
         return Ok(RecvFrame::Malformed { reason: "unknown frame kind", resync: true });
     }
     Ok(RecvFrame::Data(kind[0]))
@@ -129,8 +139,96 @@ pub fn write_frame_raw(w: &mut impl Write, kind: u8, payload: &[u8]) -> Result<u
     write_frame_parts(w, kind, &[], payload)
 }
 
+/// Marker byte opening a [`CloudTelemetry`] block. Chosen outside the
+/// printable range so a truncated/garbage tail cannot masquerade as
+/// telemetry by accident *and* fail to length-check.
+pub const TELEMETRY_MAGIC: u8 = 0xC7;
+
+/// Compact cloud-load block piggybacked on every `Logits` reply and
+/// carried as the whole payload of a `Busy` shed. This is the signal
+/// half of the §III-E closed loop: the edge fuses it with its own
+/// bandwidth estimate and re-solves the decoupling ILP when either
+/// drifts.
+///
+/// Wire layout: `[0xC7][len u8][fields: len bytes]` where the current
+/// fields are `queue_wait_p95_ms f32 | utilization f32 |
+/// batch_occupancy f32 | flags u8 (bit 0 = shedding) | sheds u32`, all
+/// LE. The explicit length makes the block self-describing: readers
+/// skip fields they don't know, writers may append new ones, and a
+/// logits frame without any block stays exactly the pre-telemetry
+/// format.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CloudTelemetry {
+    /// p95 of the batch-engine queue wait over the last sampling
+    /// window, milliseconds.
+    pub queue_wait_p95_ms: f32,
+    /// Busiest shard's busy fraction over the last sampling window,
+    /// 0..1 (can exceed 1 transiently when a hold spans the window).
+    pub utilization: f32,
+    /// Recent mean requests per executed micro-batch (EWMA).
+    pub batch_occupancy: f32,
+    /// Admission control is currently over budget (new data requests
+    /// are being shed).
+    pub shedding: bool,
+    /// Total requests shed since the server started.
+    pub sheds: u32,
+}
+
+/// Byte length of the current telemetry field set (excluding the
+/// 2-byte magic+len header).
+const TELEMETRY_FIELDS_LEN: usize = 4 + 4 + 4 + 1 + 4;
+
+impl CloudTelemetry {
+    /// Append the block to `buf` (magic + length + fields).
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        buf.push(TELEMETRY_MAGIC);
+        buf.push(TELEMETRY_FIELDS_LEN as u8);
+        buf.extend_from_slice(&self.queue_wait_p95_ms.to_le_bytes());
+        buf.extend_from_slice(&self.utilization.to_le_bytes());
+        buf.extend_from_slice(&self.batch_occupancy.to_le_bytes());
+        buf.push(self.shedding as u8);
+        buf.extend_from_slice(&self.sheds.to_le_bytes());
+    }
+
+    /// Decode a block from the front of `bytes`; returns the telemetry
+    /// and the total bytes consumed (header + declared length), or
+    /// `None` when `bytes` does not start with a well-formed block.
+    /// Unknown trailing fields inside the declared length are skipped.
+    pub fn decode(bytes: &[u8]) -> Option<(CloudTelemetry, usize)> {
+        if bytes.len() < 2 || bytes[0] != TELEMETRY_MAGIC {
+            return None;
+        }
+        let len = bytes[1] as usize;
+        if len < TELEMETRY_FIELDS_LEN || bytes.len() < 2 + len {
+            return None;
+        }
+        let f = &bytes[2..];
+        let f32_at = |o: usize| f32::from_le_bytes(f[o..o + 4].try_into().unwrap());
+        Some((
+            CloudTelemetry {
+                queue_wait_p95_ms: f32_at(0),
+                utilization: f32_at(4),
+                batch_occupancy: f32_at(8),
+                shedding: f[12] != 0,
+                sheds: u32::from_le_bytes(f[13..17].try_into().unwrap()),
+            },
+            2 + len,
+        ))
+    }
+}
+
 /// Serialize `logits` into `scratch` (reused) and ship a Logits frame.
 pub fn write_logits_frame(w: &mut impl Write, logits: &[f32], scratch: &mut Vec<u8>) -> Result<usize> {
+    write_logits_frame_with(w, logits, None, scratch)
+}
+
+/// [`write_logits_frame`] with an optional piggybacked telemetry block.
+pub fn write_logits_frame_with(
+    w: &mut impl Write,
+    logits: &[f32],
+    telemetry: Option<&CloudTelemetry>,
+    scratch: &mut Vec<u8>,
+) -> Result<usize> {
     if logits.len() > u16::MAX as usize {
         return Err(anyhow!("too many logits: {}", logits.len()));
     }
@@ -139,24 +237,47 @@ pub fn write_logits_frame(w: &mut impl Write, logits: &[f32], scratch: &mut Vec<
     for x in logits {
         scratch.extend_from_slice(&x.to_le_bytes());
     }
+    if let Some(t) = telemetry {
+        t.encode_into(scratch);
+    }
     write_frame_raw(w, KIND_LOGITS, scratch)
 }
 
-/// Parse a Logits payload into `out` (cleared, capacity reused).
+/// Parse a Logits payload into `out` (cleared, capacity reused). A
+/// trailing telemetry block, if present, is validated and ignored —
+/// use [`parse_logits_telemetry_into`] to read it.
 pub fn parse_logits_into(payload: &[u8], out: &mut Vec<f32>) -> Result<()> {
+    parse_logits_telemetry_into(payload, out).map(|_| ())
+}
+
+/// Parse a Logits payload into `out` and return the piggybacked
+/// [`CloudTelemetry`] when the sender attached one.
+pub fn parse_logits_telemetry_into(
+    payload: &[u8],
+    out: &mut Vec<f32>,
+) -> Result<Option<CloudTelemetry>> {
     if payload.len() < 2 {
         return Err(anyhow!("short logits frame"));
     }
     let n = u16::from_le_bytes([payload[0], payload[1]]) as usize;
-    if payload.len() != 2 + n * 4 {
+    let logits_end = 2 + n * 4;
+    if payload.len() < logits_end {
         return Err(anyhow!("logits length mismatch"));
     }
+    let telemetry = if payload.len() == logits_end {
+        None
+    } else {
+        match CloudTelemetry::decode(&payload[logits_end..]) {
+            Some((t, consumed)) if logits_end + consumed == payload.len() => Some(t),
+            _ => return Err(anyhow!("logits length mismatch")),
+        }
+    };
     out.clear();
     out.reserve(n);
     for i in 0..n {
         out.push(f32::from_le_bytes(payload[2 + i * 4..6 + i * 4].try_into().unwrap()));
     }
-    Ok(())
+    Ok(telemetry)
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -173,6 +294,11 @@ pub enum Frame {
     /// (`edge::MIN_ESTIMATE_BYTES`).
     Probe(Vec<u8>),
     ProbeAck,
+    /// Admission control refused the request; the telemetry says why
+    /// (queue wait / utilization over budget). The edge's contract is
+    /// to retry *edge-ward*: re-solve with the reported load and ship
+    /// a later cut (§III-E).
+    Busy(CloudTelemetry),
 }
 
 impl Frame {
@@ -187,6 +313,7 @@ impl Frame {
             Frame::Error(_) => KIND_ERROR,
             Frame::Probe(_) => KIND_PROBE,
             Frame::ProbeAck => KIND_PROBE_ACK,
+            Frame::Busy(_) => KIND_BUSY,
         }
     }
 
@@ -209,6 +336,11 @@ impl Frame {
             Frame::Error(s) => write_frame_raw(w, KIND_ERROR, s.as_bytes()),
             Frame::Probe(b) => write_frame_raw(w, KIND_PROBE, b),
             Frame::ProbeAck => write_frame_raw(w, KIND_PROBE_ACK, &[]),
+            Frame::Busy(t) => {
+                let mut scratch = Vec::with_capacity(2 + TELEMETRY_FIELDS_LEN);
+                t.encode_into(&mut scratch);
+                write_frame_raw(w, KIND_BUSY, &scratch)
+            }
         }
     }
 
@@ -235,6 +367,20 @@ impl Frame {
             KIND_ERROR => Frame::Error(String::from_utf8_lossy(&payload).into_owned()),
             KIND_PROBE => Frame::Probe(payload),
             KIND_PROBE_ACK => Frame::ProbeAck,
+            KIND_BUSY => {
+                // An empty payload is a valid (telemetry-less) shed so
+                // a minimal sender can still refuse work.
+                if payload.is_empty() {
+                    Frame::Busy(CloudTelemetry::default())
+                } else {
+                    let (t, consumed) = CloudTelemetry::decode(&payload)
+                        .ok_or_else(|| anyhow!("malformed busy telemetry"))?;
+                    if consumed != payload.len() {
+                        return Err(anyhow!("malformed busy telemetry"));
+                    }
+                    Frame::Busy(t)
+                }
+            }
             k => return Err(anyhow!("unknown frame kind {k}")),
         })
     }
@@ -265,6 +411,16 @@ mod tests {
         assert!(r.is_empty(), "trailing bytes");
     }
 
+    fn telemetry() -> CloudTelemetry {
+        CloudTelemetry {
+            queue_wait_p95_ms: 12.5,
+            utilization: 0.875,
+            batch_occupancy: 3.25,
+            shedding: true,
+            sheds: 42,
+        }
+    }
+
     #[test]
     fn all_frames_roundtrip() {
         roundtrip(Frame::Features(vec![1, 2, 3, 255]));
@@ -276,6 +432,63 @@ mod tests {
         roundtrip(Frame::Error("boom".into()));
         roundtrip(Frame::Probe(vec![0xAB; 64]));
         roundtrip(Frame::ProbeAck);
+        roundtrip(Frame::Busy(telemetry()));
+        roundtrip(Frame::Busy(CloudTelemetry::default()));
+    }
+
+    #[test]
+    fn telemetry_block_roundtrips_and_skips_future_fields() {
+        let t = telemetry();
+        let mut buf = Vec::new();
+        t.encode_into(&mut buf);
+        let (back, consumed) = CloudTelemetry::decode(&buf).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(consumed, buf.len());
+        // A future writer appends fields and bumps the length: the
+        // current reader must consume the whole block and keep the
+        // fields it knows.
+        let mut extended = buf.clone();
+        extended[1] += 3;
+        extended.extend_from_slice(&[1, 2, 3]);
+        let (back, consumed) = CloudTelemetry::decode(&extended).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(consumed, extended.len());
+        // Truncated or mis-tagged blocks are rejected, not misread.
+        assert!(CloudTelemetry::decode(&buf[..buf.len() - 1]).is_none());
+        assert!(CloudTelemetry::decode(&[0x00, 17]).is_none());
+        assert!(CloudTelemetry::decode(&[]).is_none());
+    }
+
+    #[test]
+    fn logits_telemetry_piggyback_is_backward_compatible() {
+        let logits = vec![0.5f32, -1.25, 3.75];
+        let t = telemetry();
+        let mut scratch = Vec::new();
+        let mut framed = Vec::new();
+        write_logits_frame_with(&mut framed, &logits, Some(&t), &mut scratch).unwrap();
+
+        // A telemetry-aware reader gets both halves.
+        let mut parsed = Vec::new();
+        let got = parse_logits_telemetry_into(&scratch, &mut parsed).unwrap();
+        assert_eq!(parsed, logits);
+        assert_eq!(got, Some(t));
+
+        // A legacy-style read (logits only) still parses the same frame.
+        let mut legacy = Vec::new();
+        parse_logits_into(&scratch, &mut legacy).unwrap();
+        assert_eq!(legacy, logits);
+        // And the typed reader sees a Logits frame, not an error.
+        assert!(matches!(Frame::read_from(&mut &framed[..]).unwrap(), Frame::Logits(v) if v == logits));
+
+        // A frame without the block reports no telemetry.
+        let mut bare = Vec::new();
+        write_logits_frame(&mut Vec::new(), &logits, &mut bare).unwrap();
+        assert_eq!(parse_logits_telemetry_into(&bare, &mut legacy).unwrap(), None);
+
+        // Garbage after the logits is still a length mismatch.
+        let mut corrupt = bare.clone();
+        corrupt.extend_from_slice(&[1, 2, 3]);
+        assert!(parse_logits_telemetry_into(&corrupt, &mut legacy).is_err());
     }
 
     #[test]

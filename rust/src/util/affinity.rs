@@ -1,0 +1,108 @@
+//! Best-effort thread→core pinning (the `--pin-shards` satellite of
+//! the NUMA roadmap item).
+//!
+//! Shard affinity is already connection-stable — connection `k` always
+//! computes on shard `k % shards` — so pinning each shard's connection
+//! workers to a stable core keeps that shard's compile cache, scratch
+//! buffers and executor state warm in one core's (and one NUMA node's)
+//! cache hierarchy instead of migrating under the scheduler.
+//!
+//! Callers address cores by **logical index into the process's allowed
+//! CPU set** (read via `sched_getaffinity(2)`), not by raw CPU id — in
+//! a cpuset-restricted container (CPUs 4–7, or a non-contiguous mask)
+//! index 0 is the first CPU the process may actually run on, so
+//! pinning keeps working exactly where it was previously a silent
+//! no-op. On Linux this is raw `sched_setaffinity(2)` on the calling
+//! thread (declared directly — the vendored dependency set has no
+//! `libc` crate); everywhere else it is a no-op that reports `false`.
+//! Failures are deliberately silent beyond the return value: pinning
+//! is an optimization, never a correctness requirement.
+
+/// Mirrors glibc's `cpu_set_t`: 1024 bits.
+#[cfg(target_os = "linux")]
+const MASK_WORDS: usize = 1024 / 64;
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut u64) -> i32;
+}
+
+/// The CPU ids this process is allowed to run on, ascending. Empty
+/// when the mask cannot be read (treat as "pinning unavailable").
+#[cfg(target_os = "linux")]
+pub fn allowed_cpus() -> Vec<usize> {
+    let mut mask = [0u64; MASK_WORDS];
+    // pid 0 = the calling thread.
+    if unsafe { sched_getaffinity(0, MASK_WORDS * 8, mask.as_mut_ptr()) } != 0 {
+        return Vec::new();
+    }
+    (0..MASK_WORDS * 64).filter(|&c| (mask[c / 64] >> (c % 64)) & 1 == 1).collect()
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn allowed_cpus() -> Vec<usize> {
+    Vec::new()
+}
+
+/// Pin the calling thread to the `index`-th allowed CPU (modulo the
+/// allowed count). Returns whether the kernel accepted the mask;
+/// always `false` on non-Linux targets or when the allowed set cannot
+/// be read.
+#[cfg(target_os = "linux")]
+pub fn pin_to_core(index: usize) -> bool {
+    let allowed = allowed_cpus();
+    if allowed.is_empty() {
+        return false;
+    }
+    let cpu = allowed[index % allowed.len()];
+    let mut mask = [0u64; MASK_WORDS];
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    unsafe { sched_setaffinity(0, MASK_WORDS * 8, mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to_core(_index: usize) -> bool {
+    false
+}
+
+/// Cores available to this process (≥ 1).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn available_cores_is_positive() {
+        assert!(available_cores() >= 1);
+    }
+
+    #[test]
+    fn pin_is_best_effort_and_survivable() {
+        // Index 0 maps to the first CPU this process may run on, so on
+        // Linux the pin must succeed even inside a cpuset-restricted
+        // container; elsewhere it reports false. Either way the thread
+        // keeps running.
+        let ok = pin_to_core(0);
+        if cfg!(target_os = "linux") {
+            assert_eq!(allowed_cpus().is_empty(), !ok, "pin must track the allowed set");
+        } else {
+            assert!(!ok);
+        }
+        // Indices wrap into the allowed set instead of corrupting
+        // memory or targeting a forbidden CPU.
+        let _ = pin_to_core(usize::MAX - 3);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn allowed_cpus_is_sane() {
+        let cpus = allowed_cpus();
+        assert!(!cpus.is_empty(), "a running test always has ≥1 allowed CPU");
+        assert!(cpus.windows(2).all(|w| w[0] < w[1]), "ascending, unique");
+        assert!(cpus.len() <= 1024);
+    }
+}

@@ -5,6 +5,7 @@
 //! proptest, tokio, rand) are reimplemented here at the scale this
 //! project needs. Each is a deliberate deliverable with its own tests.
 
+pub mod affinity;
 pub mod bench;
 pub mod cli;
 pub mod json;

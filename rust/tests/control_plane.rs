@@ -1,0 +1,257 @@
+//! Closed-loop control-plane tests — artifact-free, always run.
+//!
+//! 1. **Trace replay** (in-process): a bandwidth swing
+//!    (`network::trace`) plus a synthetic cloud-load swing drive a
+//!    [`ControlPlane`]; every re-solve's plan is asserted *bit-exactly*
+//!    equal to an offline ILP solve at the plane's own fused
+//!    (bandwidth, load) signals, the cut moves strictly edge-ward
+//!    under the load spike and back under recovery, and `Busy` sheds
+//!    walk it edge-ward monotonically.
+//! 2. **End-to-end on the sim backend**: a real `CloudServer` (sim
+//!    executors, admission control, injected overload) serves a real
+//!    `EdgeClient` over loopback TCP; the injected spike makes the
+//!    server shed, the edge retries edge-ward within the same
+//!    `infer()` call, telemetry piggybacked on recovery replies walks
+//!    the plan back, and the merged stats JSON carries both halves of
+//!    the loop.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use jalad::coordinator::{cut_depth, ControlPlane, DecisionEngine};
+use jalad::ilp::{CloudLoad, Decision};
+use jalad::network::throttle::RateHandle;
+use jalad::network::BandwidthTrace;
+use jalad::runtime::sim::sim_manifest;
+use jalad::runtime::{Executor, ExecutorPool};
+use jalad::server::proto::CloudTelemetry;
+use jalad::server::{AdmissionConfig, CloudServer, EdgeClient, ServeConfig};
+use jalad::util::json::Json;
+
+fn plane(bw: f64) -> ControlPlane {
+    ControlPlane::new(DecisionEngine::sim_default(0.10).unwrap(), bw)
+}
+
+/// At a re-solve instant the plane's plan must equal an offline solve
+/// at its own fused signals, bit-exactly — the "cloud follows
+/// automatically" contract depends on the edge's plan being exactly
+/// the ILP optimum, never a drifted copy. (Between re-solves the plan
+/// intentionally lags the smoothed signals; the invariant is per
+/// adaptation step.)
+fn assert_matches_offline(ctrl: &ControlPlane) {
+    let offline = ctrl
+        .engine
+        .decide_with_load(ctrl.bandwidth_estimate().unwrap(), ctrl.cloud_load());
+    assert_eq!(
+        *ctrl.plan(),
+        offline,
+        "control-plane plan diverged from the offline ILP solve"
+    );
+}
+
+#[test]
+fn trace_replay_load_spike_moves_cut_edgeward_and_back() {
+    let mut ctrl = plane(50_000.0);
+    assert_eq!(ctrl.plan().decision, Decision::CloudOnly, "idle 50 KB/s uploads");
+    let base_depth = cut_depth(ctrl.plan().decision);
+
+    // --- steady phase: constant bandwidth, idle cloud → no churn ---
+    let resolves_before = ctrl.resolves();
+    for _ in 0..10 {
+        ctrl.observe_transfer(5_000, 0.1); // 50 KB/s on the nose
+        ctrl.observe_cloud_load(CloudLoad::default());
+    }
+    assert_eq!(ctrl.resolves(), resolves_before, "steady state must not re-solve");
+
+    // --- cloud-load spike at constant bandwidth ---
+    let spike = CloudLoad::new(0.050, 0.95);
+    let mut resolves_seen = 0;
+    for _ in 0..15 {
+        ctrl.observe_transfer(5_000, 0.1);
+        let before = ctrl.resolves();
+        ctrl.observe_cloud_load(spike);
+        if ctrl.resolves() > before {
+            resolves_seen += 1;
+            assert_matches_offline(&ctrl);
+        }
+    }
+    assert!(resolves_seen >= 1, "load spike never re-solved");
+    let spike_depth = cut_depth(ctrl.plan().decision);
+    assert!(
+        spike_depth > base_depth,
+        "spike must move the cut strictly edge-ward (was {base_depth}, now {spike_depth})"
+    );
+
+    // --- recovery: the plan must come back cloud-ward ---
+    for _ in 0..40 {
+        ctrl.observe_transfer(5_000, 0.1);
+        let before = ctrl.resolves();
+        ctrl.observe_cloud_load(CloudLoad::default());
+        if ctrl.resolves() > before {
+            assert_matches_offline(&ctrl);
+        }
+    }
+    let recovered_depth = cut_depth(ctrl.plan().decision);
+    assert!(
+        recovered_depth < spike_depth,
+        "recovery never moved the cut back ({spike_depth} → {recovered_depth})"
+    );
+    assert_eq!(ctrl.plan().decision, Decision::CloudOnly, "idle recovery returns to upload");
+    assert!(ctrl.plan_changes() >= 2, "spike + recovery are two decision changes");
+}
+
+#[test]
+fn trace_replay_bandwidth_swing_matches_offline_at_every_resolve() {
+    // A step trace swings the link 50 KB/s ↔ 3 KB/s. At 3 KB/s the
+    // 600 B image upload loses to the 8 B logits-forward cut, so each
+    // phase edge has a decision flip; every re-solve must match the
+    // offline solve at the fused estimate.
+    let trace = BandwidthTrace::step(50_000.0, 3_000.0, 5.0, 30.0);
+    let mut ctrl = plane(trace.at(0.0));
+    let mut t = 0.0;
+    let mut flips = Vec::new();
+    while t < 30.0 {
+        let bw = trace.at(t);
+        // One transfer per 100 ms of trace time at the current rate.
+        let before = ctrl.resolves();
+        if let Some(plan) = ctrl.observe_transfer((bw * 0.1) as usize, 0.1) {
+            flips.push(plan.decision);
+        }
+        if ctrl.resolves() > before {
+            assert_matches_offline(&ctrl);
+        }
+        t += 0.1;
+    }
+    assert!(
+        flips.iter().any(|d| matches!(d, Decision::Cut { i: 4, .. })),
+        "slow phases must reach the deep cut: {flips:?}"
+    );
+    assert!(
+        flips.iter().any(|d| matches!(d, Decision::CloudOnly)),
+        "fast phases must return to upload: {flips:?}"
+    );
+}
+
+#[test]
+fn busy_sheds_walk_the_cut_edgeward_monotonically() {
+    let mut ctrl = plane(50_000.0);
+    let busy = CloudTelemetry {
+        queue_wait_p95_ms: 50.0,
+        utilization: 0.97,
+        batch_occupancy: 4.0,
+        shedding: true,
+        sheds: 1,
+    };
+    let mut depth = cut_depth(ctrl.plan().decision);
+    for _ in 0..6 {
+        let next = cut_depth(ctrl.on_busy(&busy).decision);
+        assert!(next >= depth, "a shed must never move the cut cloud-ward");
+        if next == depth {
+            break; // parked at the deepest feasible cut
+        }
+        depth = next;
+    }
+    assert_eq!(depth, ctrl.engine.num_stages(), "the march ends at the logits-forward cut");
+    assert!(ctrl.sheds_observed() >= 1);
+}
+
+/// End-to-end: real server, real edge, injected overload. No
+/// artifacts — both halves run the deterministic sim backend.
+#[test]
+fn e2e_shed_retry_and_recovery_on_sim_backend() {
+    let manifest = sim_manifest();
+    let pool = ExecutorPool::new_sim_with(manifest.clone(), 2, 8);
+    let server = Arc::new(CloudServer::with_pool(
+        pool,
+        ServeConfig {
+            workers: 4,
+            admission: AdmissionConfig {
+                // High enough that the sim backend's real (µs-scale)
+                // compute can never trip it — only the injected 0.97
+                // overload sheds, keeping the test deterministic.
+                utilization_budget: 0.9,
+                refresh: Duration::ZERO,
+                ..AdmissionConfig::default()
+            },
+            ..ServeConfig::default()
+        },
+    ));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+
+    let exe = Executor::sim_with(manifest.clone(), 8);
+    let ctrl = plane(50_000.0);
+    let uplink = RateHandle::new(200_000);
+    let mut edge = EdgeClient::connect(&exe, "simnet", addr, uplink, ctrl).unwrap();
+
+    let shape = manifest.model("simnet").unwrap().input_shape.clone();
+    let sample = |id: usize| jalad::data::gen::Sample {
+        image: jalad::data::gen::sample_image_shaped(id % 16, id, &shape),
+        label: id % 16,
+    };
+
+    // Idle: the plan is cloud-only and requests sail through.
+    let r = edge.infer(&sample(1)).unwrap();
+    assert_eq!(r.decision, Decision::CloudOnly);
+    assert_eq!(r.sheds, 0);
+
+    // Inject an overload past the utilization budget: the server now
+    // sheds everything except logits-forward cuts. One infer() call
+    // must absorb the Busy, shift edge-ward, and still return logits.
+    server.inject_load(Some(CloudTelemetry {
+        queue_wait_p95_ms: 50.0,
+        utilization: 0.97,
+        batch_occupancy: 4.0,
+        shedding: false, // budgets must trip on the numbers alone
+        sheds: 0,
+    }));
+    let r = edge.infer(&sample(2)).unwrap();
+    assert!(r.sheds >= 1, "the overloaded server never shed");
+    assert!(r.replanned);
+    assert_eq!(
+        r.decision,
+        Decision::Cut { i: 4, c: 2 },
+        "the served plan must be the deep cut admission admits"
+    );
+    assert_eq!(cut_depth(edge.controller.plan().decision), 4);
+    assert!(edge.controller.sheds_observed() >= 1);
+    // The plan the plane converged to matches the offline solve at its
+    // fused signals — the acceptance bit-exactness, live.
+    let offline = edge
+        .controller
+        .engine
+        .decide_with_load(edge.controller.bandwidth_estimate().unwrap(), edge.controller.cloud_load());
+    assert_eq!(*edge.controller.plan(), offline);
+
+    // Under sustained overload, deep-cut requests are admitted without
+    // further sheds.
+    let r = edge.infer(&sample(3)).unwrap();
+    assert_eq!(r.sheds, 0, "the logits-forward cut must be admitted while shedding");
+
+    // Recovery: restore live sampling (idle server). The telemetry
+    // piggybacked on the next replies walks the plan back cloud-ward.
+    server.inject_load(None);
+    let mut recovered = false;
+    for id in 4..40 {
+        let r = edge.infer(&sample(id)).unwrap();
+        assert_eq!(r.sheds, 0, "an idle server must not shed");
+        if cut_depth(r.decision) < 4 {
+            recovered = true;
+            break;
+        }
+    }
+    assert!(recovered, "recovery telemetry never moved the plan cloud-ward");
+
+    // The merged stats JSON reports both halves of the loop.
+    let stats = edge.stats().unwrap();
+    let j = Json::parse(&stats).unwrap();
+    let cloud_sheds = j.get("sheds").and_then(|v| v.as_u64()).expect("cloud sheds field");
+    assert!(cloud_sheds >= 1, "stats: {stats}");
+    let e = j.get("edge").expect("edge block in stats");
+    assert!(e.get("resolves").and_then(|v| v.as_u64()).unwrap() >= 1);
+    assert!(e.get("sheds_observed").and_then(|v| v.as_u64()).unwrap() >= 1);
+    assert!(e.get("cut_i").is_some() && e.get("cut_c").is_some());
+    let gw = j.get("gather_window_us");
+    assert!(gw.is_some(), "adaptive gather gauge missing: {stats}");
+
+    CloudServer::request_shutdown(addr);
+}

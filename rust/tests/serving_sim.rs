@@ -99,8 +99,9 @@ fn contended_mixed_traffic_is_bit_identical_and_reconciles() {
             batch: BatchConfig {
                 max_batch: 4,
                 gather_window: std::time::Duration::from_micros(500),
-                enabled: true,
+                ..BatchConfig::default()
             },
+            ..ServeConfig::default()
         },
     ));
     let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
@@ -223,6 +224,7 @@ fn serialized_config_matches_batched_config() {
             ServeConfig {
                 workers: 4,
                 batch: BatchConfig { enabled, ..BatchConfig::default() },
+                ..ServeConfig::default()
             },
         ));
         Arc::clone(&server).spawn("127.0.0.1:0").unwrap().0

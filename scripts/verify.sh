@@ -5,7 +5,10 @@
 #   scripts/verify.sh --smoke   # + bench smoke: runs the serving
 #                               # concurrency A/B a few iterations and
 #                               # checks BENCH_pipeline.json is emitted
-#                               # and well-formed
+#                               # and well-formed, then runs the
+#                               # control-plane closed-loop scenario and
+#                               # validates BENCH_adaptive.json (re-solve
+#                               # count, shed rate, per-phase p95)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -64,6 +67,49 @@ EOF
     grep -q '"serialized"' "$BENCH_JSON"
     grep -q '"sharded_batched"' "$BENCH_JSON"
     echo "verify: $BENCH_JSON emitted (python3 absent; grep-checked)"
+  fi
+
+  echo "== bench smoke: control_plane --smoke =="
+  rm -f rust/BENCH_adaptive.json BENCH_adaptive.json
+  cargo bench --bench control_plane -- --smoke
+  ADAPTIVE_JSON=""
+  for f in rust/BENCH_adaptive.json BENCH_adaptive.json; do
+    [ -f "$f" ] && ADAPTIVE_JSON="$f" && break
+  done
+  if [ -z "$ADAPTIVE_JSON" ]; then
+    echo "verify: BENCH_adaptive.json was not emitted" >&2
+    exit 1
+  fi
+  if command -v python3 >/dev/null 2>&1; then
+    python3 - "$ADAPTIVE_JSON" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+phases = doc.get("scenario")
+assert isinstance(phases, list) and len(phases) == 3, "scenario must have 3 phases"
+names = [p.get("phase") for p in phases]
+assert names == ["baseline", "spike", "recovered"], f"phases: {names}"
+for p in phases:
+    for k in ("requests", "p50_ms", "p95_ms", "final_cut_depth", "sheds"):
+        assert k in p, f"phase {p.get('phase')}: missing {k}"
+assert doc.get("resolves", 0) >= 1, "the loop never re-solved"
+assert doc.get("sheds_observed", 0) >= 1, "the spike never shed"
+assert doc.get("shed_rate_spike", 0) > 0, "spike shed rate is zero"
+base, spike, rec = phases
+assert spike["final_cut_depth"] > base["final_cut_depth"], \
+    "spike did not move the cut edge-ward"
+assert rec["final_cut_depth"] < spike["final_cut_depth"], \
+    "recovery did not move the cut back"
+for k in ("p95_before_ms", "p95_spike_ms", "p95_after_ms"):
+    assert k in doc, f"missing {k}"
+print(f"verify: {sys.argv[1]} well-formed "
+      f"(resolves={doc['resolves']}, shed_rate={doc['shed_rate_spike']:.2f}, "
+      f"depths {base['final_cut_depth']}→{spike['final_cut_depth']}→{rec['final_cut_depth']})")
+EOF
+  else
+    grep -q '"scenario"' "$ADAPTIVE_JSON"
+    grep -q '"spike"' "$ADAPTIVE_JSON"
+    grep -q '"sheds_observed"' "$ADAPTIVE_JSON"
+    echo "verify: $ADAPTIVE_JSON emitted (python3 absent; grep-checked)"
   fi
 fi
 
