@@ -124,7 +124,7 @@ fn main() {
         utilization: 0.97,
         batch_occupancy: 4.0,
         shedding: false, // budgets trip on the numbers
-        sheds: 0,
+        ..CloudTelemetry::default()
     }));
     let spike = run_phase(&mut edge, &shape, "spike", per_phase, 20_000);
 

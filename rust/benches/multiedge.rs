@@ -1,0 +1,226 @@
+//! Multi-edge fairness scenario bench — fair vs global admission under
+//! a flooding tenant, measured end-to-end on the sim backend (real
+//! loopback TCP, real admission control, injected overload).
+//!
+//! Three tenants share one overloaded cloud: two polite (~50 req/s
+//! each) and one flooding (~10–20× that). The same traffic runs twice:
+//!
+//! 1. **fair** — `--fair-admission` semantics: a 180 req/s admitted
+//!    budget water-filled across tenants, per-tenant token buckets,
+//!    backoff hints on refusals;
+//! 2. **global** — the pre-tenant global budget: over budget, every
+//!    sheddable request sheds, whoever sent it.
+//!
+//! Emits `BENCH_multiedge.json` (per-tenant shed rates, throughput
+//! shares, served p95s, the polite tenants' fair-share retention) —
+//! `scripts/verify.sh --smoke` runs this briefly and gates the
+//! headline metrics against `bench_baselines/`.
+//!
+//! Run: `cargo bench --bench multiedge` (`-- --smoke` for CI).
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jalad::compression::{feature, quant};
+use jalad::runtime::sim::sim_manifest;
+use jalad::runtime::{Executor, ExecutorPool};
+use jalad::server::proto::{self, CloudTelemetry, RecvFrame};
+use jalad::server::{AdmissionConfig, CloudServer, ServeConfig};
+use jalad::util::bench::Bencher;
+use jalad::util::json::Json;
+use jalad::util::stats;
+
+const BUDGET_RPS: f64 = 180.0;
+
+fn feature_wire(reference: &Executor, stage: usize, c: u8, seed: usize, tenant: u32) -> Vec<u8> {
+    let m = reference.manifest().model("simnet").unwrap();
+    let elems = m.stages[stage - 1].out_elems;
+    let xs: Vec<f32> = (0..elems)
+        .map(|j| {
+            let h = ((j + 1) as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(seed as u64 * 0x2545_F491_4F6C_DD1D);
+            ((h >> 42) & 0x3FFF) as f32 / 1638.4 - 2.0
+        })
+        .collect();
+    let q = quant::quantize(&xs, c);
+    let mut wire = feature::encode(&q, stage as u16, 0);
+    proto::append_tenant_trailer(tenant, &mut wire);
+    wire
+}
+
+#[derive(Debug, Default)]
+struct Tally {
+    sent: usize,
+    admitted: usize,
+    sheds: usize,
+    /// Round-trip seconds of served (admitted) requests.
+    served_lat: Vec<f64>,
+}
+
+fn run_client(
+    addr: std::net::SocketAddr,
+    wire: Vec<u8>,
+    gap: Duration,
+    count_from: Instant,
+    until: Instant,
+) -> Tally {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut rx = Vec::new();
+    let mut tally = Tally::default();
+    while Instant::now() < until {
+        let t0 = Instant::now();
+        proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &wire).unwrap();
+        let kind = match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+            RecvFrame::Data(k) => k,
+            other => panic!("unexpected reply {other:?}"),
+        };
+        if t0 >= count_from {
+            tally.sent += 1;
+            match kind {
+                proto::KIND_LOGITS => {
+                    tally.admitted += 1;
+                    tally.served_lat.push(t0.elapsed().as_secs_f64());
+                }
+                proto::KIND_BUSY => tally.sheds += 1,
+                k => panic!("unexpected reply kind {k}"),
+            }
+        }
+        std::thread::sleep(gap);
+    }
+    tally
+}
+
+/// Run the 3-tenant scenario once; returns (polite A, polite B, flood).
+fn run_arm(fair: bool, warmup: Duration, measure: Duration) -> Vec<Tally> {
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, 8);
+    let server = Arc::new(CloudServer::with_pool(
+        pool,
+        ServeConfig {
+            workers: 6,
+            admission: AdmissionConfig {
+                utilization_budget: 0.9,
+                refresh: Duration::ZERO,
+                fair,
+                tenant_budget: BUDGET_RPS,
+                ..AdmissionConfig::default()
+            },
+            ..ServeConfig::default()
+        },
+    ));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").expect("bind");
+    server.inject_load(Some(CloudTelemetry {
+        queue_wait_p95_ms: 50.0,
+        utilization: 0.97,
+        batch_occupancy: 4.0,
+        ..CloudTelemetry::default()
+    }));
+
+    let reference = Executor::sim_with(sim_manifest(), 8);
+    let start = Instant::now();
+    let count_from = start + warmup;
+    let until = count_from + measure;
+    let handles: Vec<_> = (0..3)
+        .map(|t| {
+            let wire = feature_wire(&reference, 2, 4, 100 + t, (t + 1) as u32);
+            let gap = if t < 2 { Duration::from_millis(20) } else { Duration::from_millis(1) };
+            std::thread::spawn(move || run_client(addr, wire, gap, count_from, until))
+        })
+        .collect();
+    let tallies = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    CloudServer::request_shutdown(addr);
+    tallies
+}
+
+fn arm_json(name: &str, tallies: &[Tally]) -> (Json, f64, f64) {
+    let total_admitted: usize = tallies.iter().map(|t| t.admitted).sum();
+    let roles = ["polite", "polite", "flood"];
+    let per_tenant: Vec<Json> = tallies
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let ms: Vec<f64> = t.served_lat.iter().map(|s| s * 1e3).collect();
+            Json::obj(vec![
+                ("tenant", Json::str(&format!("t:{}", i + 1))),
+                ("role", Json::str(roles[i])),
+                ("sent", Json::num(t.sent as f64)),
+                ("admitted", Json::num(t.admitted as f64)),
+                ("sheds", Json::num(t.sheds as f64)),
+                ("shed_rate", Json::num(t.sheds as f64 / t.sent.max(1) as f64)),
+                (
+                    "throughput_share",
+                    Json::num(t.admitted as f64 / total_admitted.max(1) as f64),
+                ),
+                (
+                    "served_p95_ms",
+                    Json::num(if ms.is_empty() { 0.0 } else { stats::percentile(&ms, 95.0) }),
+                ),
+            ])
+        })
+        .collect();
+    // Polite fair-share retention: admitted / sent, averaged over the
+    // two polite tenants (each is under an equal split, so its fair
+    // share is its own demand).
+    let retention = tallies[..2]
+        .iter()
+        .map(|t| t.admitted as f64 / t.sent.max(1) as f64)
+        .sum::<f64>()
+        / 2.0;
+    let flood_shed_rate = tallies[2].sheds as f64 / tallies[2].sent.max(1) as f64;
+    let polite_shed_rate = tallies[..2]
+        .iter()
+        .map(|t| t.sheds as f64 / t.sent.max(1) as f64)
+        .sum::<f64>()
+        / 2.0;
+    println!(
+        "{name:>6}: polite retention {retention:.2}, polite shed {polite_shed_rate:.2}, \
+         flood shed {flood_shed_rate:.2}, admitted {total_admitted}"
+    );
+    (
+        Json::obj(vec![
+            ("per_tenant", Json::arr(per_tenant)),
+            ("polite_retention", Json::num(retention)),
+            ("polite_shed_rate", Json::num(polite_shed_rate)),
+            ("flood_shed_rate", Json::num(flood_shed_rate)),
+            ("total_admitted", Json::num(total_admitted as f64)),
+        ]),
+        retention,
+        flood_shed_rate,
+    )
+}
+
+fn main() {
+    let (warmup, measure) = if Bencher::smoke() {
+        (Duration::from_millis(600), Duration::from_millis(800))
+    } else {
+        (Duration::from_millis(700), Duration::from_millis(2000))
+    };
+
+    let fair = run_arm(true, warmup, measure);
+    let global = run_arm(false, warmup, measure);
+
+    let (fair_json, fair_retention, fair_flood_shed) = arm_json("fair", &fair);
+    let (global_json, _, _) = arm_json("global", &global);
+
+    // Fairness gain: polite throughput kept under fairness vs under
+    // the global budget (which sheds everything while over budget).
+    let fair_polite: usize = fair[..2].iter().map(|t| t.admitted).sum();
+    let global_polite: usize = global[..2].iter().map(|t| t.admitted).sum();
+    let gain = fair_polite as f64 / global_polite.max(1) as f64;
+
+    let doc = Json::obj(vec![
+        ("tenants", Json::num(3.0)),
+        ("budget_rps", Json::num(BUDGET_RPS)),
+        ("fair", fair_json),
+        ("global", global_json),
+        ("fair_polite_retention", Json::num(fair_retention)),
+        ("fair_flood_shed_rate", Json::num(fair_flood_shed)),
+        ("fairness_polite_throughput_gain", Json::num(gain)),
+    ]);
+    std::fs::write("BENCH_multiedge.json", doc.to_pretty()).expect("write BENCH_multiedge.json");
+    println!("wrote BENCH_multiedge.json (fairness gain {gain:.1}x)");
+}

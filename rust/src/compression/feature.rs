@@ -280,6 +280,20 @@ pub fn peek_route(bytes: &[u8]) -> Option<(u16, u16)> {
     Some((model, stage))
 }
 
+/// Total byte length the fixed header says this frame occupies
+/// (header + declared payload length), without touching the payload.
+/// `None` when the bytes cannot be a valid frame head (short / wrong
+/// magic). The cloud server uses this to decide whether trailing bytes
+/// (e.g. a tenant trailer) follow the frame — exactly, not
+/// heuristically.
+pub fn frame_len(bytes: &[u8]) -> Option<usize> {
+    if bytes.len() < HEADER_BYTES || u16::from_le_bytes([bytes[0], bytes[1]]) != MAGIC {
+        return None;
+    }
+    let plen = u32::from_le_bytes(bytes[20..24].try_into().unwrap()) as usize;
+    Some(HEADER_BYTES + plen)
+}
+
 /// [`decode`] into a caller-owned values buffer with reusable scratch;
 /// returns the frame metadata.
 pub fn decode_into(
@@ -354,6 +368,24 @@ mod tests {
             assert_eq!(frame.lo, q.lo);
             assert_eq!(frame.hi, q.hi);
         }
+    }
+
+    #[test]
+    fn frame_len_matches_encoded_length() {
+        for (n, c) in [(64usize, 2u8), (4096, 4), (512, 16)] {
+            let q = quant::quantize(&sample_features(n), c);
+            let wire = encode(&q, 1, 0);
+            assert_eq!(frame_len(&wire), Some(wire.len()), "n={n} c={c}");
+            // Trailing bytes (e.g. a tenant trailer) don't change the
+            // declared frame length.
+            let mut extended = wire.clone();
+            extended.extend_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+            assert_eq!(frame_len(&extended), Some(wire.len()));
+        }
+        assert_eq!(frame_len(&[0u8; 4]), None);
+        let mut bad = encode(&quant::quantize(&sample_features(16), 4), 0, 0);
+        bad[0] ^= 0xFF;
+        assert_eq!(frame_len(&bad), None);
     }
 
     #[test]

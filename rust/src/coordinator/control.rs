@@ -68,6 +68,11 @@ pub struct ControlPlane {
     resolves: u64,
     plan_changes: u64,
     sheds_observed: u64,
+    /// The last `Busy` refusal's per-tenant backoff hint, seconds
+    /// (0 = no hint — a pre-tenant or non-fair cloud). The transport
+    /// paces its shed retries with this instead of hammering an
+    /// overloaded server.
+    advised_backoff: f64,
 }
 
 impl ControlPlane {
@@ -88,6 +93,7 @@ impl ControlPlane {
             resolves: 0,
             plan_changes: 0,
             sheds_observed: 0,
+            advised_backoff: 0.0,
         }
     }
 
@@ -108,6 +114,13 @@ impl ControlPlane {
     /// `Busy` sheds this plane has reacted to.
     pub fn sheds_observed(&self) -> u64 {
         self.sheds_observed
+    }
+
+    /// The last shed's per-tenant backoff hint, seconds (0 = none).
+    /// Fast attack, decayed on served replies: a hint from one refusal
+    /// should pace the immediate retries, not every future request.
+    pub fn advised_backoff(&self) -> f64 {
+        self.advised_backoff
     }
 
     pub fn bandwidth_estimate(&self) -> Option<f64> {
@@ -145,6 +158,12 @@ impl ControlPlane {
 
     /// Feed a piggybacked telemetry block from a logits reply.
     pub fn observe_telemetry(&mut self, t: &CloudTelemetry) -> Option<&Plan> {
+        // A served reply means this tenant is back inside its share:
+        // decay the pacing hint so it only governs the shed episode.
+        self.advised_backoff *= 0.5;
+        if self.advised_backoff < 1e-4 {
+            self.advised_backoff = 0.0;
+        }
         self.observe_cloud_load(Self::telemetry_load(t))
     }
 
@@ -156,6 +175,11 @@ impl ControlPlane {
     /// or leaves it at the deepest feasible stage.
     pub fn on_busy(&mut self, t: &CloudTelemetry) -> &Plan {
         self.sheds_observed += 1;
+        // Sanitize before clamping: clamp() passes NaN through, and a
+        // NaN hint would stick (the served-reply decay can never zero
+        // it) and poison the stats JSON.
+        let hint = f64::from(t.tenant_backoff_ms);
+        self.advised_backoff = if hint.is_finite() { (hint / 1e3).clamp(0.0, 2.0) } else { 0.0 };
         let reported = Self::telemetry_load(t);
         self.load = CloudLoad::new(
             self.load.queue_wait.max(reported.queue_wait),
@@ -364,6 +388,7 @@ mod tests {
             batch_occupancy: 4.0,
             shedding: true,
             sheds: 1,
+            tenant_backoff_ms: 0.0,
         };
         let n = c.engine.num_stages();
         let mut depth = 0;
@@ -382,5 +407,47 @@ mod tests {
         }
         assert!(depth >= 1, "busy never left cloud-only");
         assert!(c.sheds_observed() >= 1);
+    }
+
+    #[test]
+    fn backoff_hint_is_adopted_and_decays_when_served() {
+        let mut c = controller();
+        assert_eq!(c.advised_backoff(), 0.0, "no hint before any shed");
+        let busy = CloudTelemetry {
+            queue_wait_p95_ms: 10.0,
+            utilization: 0.95,
+            shedding: true,
+            tenant_backoff_ms: 80.0,
+            ..CloudTelemetry::default()
+        };
+        c.on_busy(&busy);
+        assert!((c.advised_backoff() - 0.080).abs() < 1e-9, "hint must be adopted in seconds");
+        // A hint-less shed (pre-tenant cloud) resets to the legacy
+        // immediate-retry contract.
+        c.on_busy(&CloudTelemetry { shedding: true, ..CloudTelemetry::default() });
+        assert_eq!(c.advised_backoff(), 0.0);
+        // Served replies halve the hint away: after a shed episode the
+        // pacing must not tax steady-state traffic.
+        c.on_busy(&busy);
+        for _ in 0..16 {
+            c.observe_telemetry(&CloudTelemetry::default());
+        }
+        assert_eq!(c.advised_backoff(), 0.0, "hint never decayed");
+        // Hints are clamped to a sane ceiling (a garbled f32 cannot
+        // stall the edge for minutes)…
+        c.on_busy(&CloudTelemetry {
+            shedding: true,
+            tenant_backoff_ms: 1e9,
+            ..CloudTelemetry::default()
+        });
+        assert!(c.advised_backoff() <= 2.0);
+        // …and a NaN hint is dropped, never stored (clamp alone would
+        // pass it through and it could then never decay away).
+        c.on_busy(&CloudTelemetry {
+            shedding: true,
+            tenant_backoff_ms: f32::NAN,
+            ..CloudTelemetry::default()
+        });
+        assert_eq!(c.advised_backoff(), 0.0);
     }
 }

@@ -55,6 +55,21 @@ fn main() {
         "0",
         "serve-cloud: SLA deadline attached to admitted requests, ms (0 = none)",
     )
+    .opt(
+        "tenant-budget",
+        "0",
+        "serve-cloud: global admitted req/s under overload, water-filled across tenants (0 = auto)",
+    )
+    .opt(
+        "tenant",
+        "",
+        "infer --connect: explicit tenant id sent with every request (empty = per-connection)",
+    )
+    .flag(
+        "fair-admission",
+        "serve-cloud: per-tenant fair admission + tenant-aware batching when over budget",
+    )
+    .flag("connect", "infer: drive a real EdgeClient against --addr instead of the local pipeline")
     .flag("no-batch", "serve-cloud: disable micro-batching (serialized tails)")
     .flag("no-adaptive-gather", "serve-cloud: always wait the full gather window")
     .flag("pin-shards", "serve-cloud: pin connection workers to their shard's core (Linux)")
@@ -156,6 +171,8 @@ fn run(command: &str, args: &Args) -> Result<()> {
                     deadline: std::time::Duration::from_millis(
                         args.get_usize("deadline-ms") as u64,
                     ),
+                    fair: args.get_flag("fair-admission"),
+                    tenant_budget: args.get_f64("tenant-budget"),
                     ..jalad::server::AdmissionConfig::default()
                 },
                 pin_shards: args.get_flag("pin-shards"),
@@ -163,7 +180,7 @@ fn run(command: &str, args: &Args) -> Result<()> {
             let server = Arc::new(CloudServer::with_pool(pool, cfg));
             let (addr, handle) = Arc::clone(&server).spawn(args.get("addr"))?;
             println!(
-                "cloud server on {addr}: {shards} shard(s), max batch {}, gather {}..{} µs{}{}{} \
+                "cloud server on {addr}: {shards} shard(s), max batch {}, gather {}..{} µs{}{}{}{} \
                  (Ctrl-C or a Shutdown frame stops it)",
                 args.get_usize("max-batch"),
                 args.get_usize("gather-min-us"),
@@ -174,9 +191,57 @@ fn run(command: &str, args: &Args) -> Result<()> {
                 } else {
                     ""
                 },
+                if args.get_flag("fair-admission") { ", fair admission ON" } else { "" },
                 if args.get_flag("pin-shards") { ", shard pinning ON" } else { "" },
             );
             handle.join().ok();
+        }
+        "infer" if args.get_flag("connect") => {
+            // Remote mode: a real EdgeClient over TCP against --addr,
+            // with an optional explicit tenant identity — the client
+            // half of the multi-edge serving story (`--sim` pairs with
+            // `serve-cloud --sim`, no artifacts needed on either end).
+            let addr: std::net::SocketAddr = args
+                .get("addr")
+                .parse()
+                .map_err(|e| anyhow!("--addr {}: {e}", args.get("addr")))?;
+            let sim = args.get_flag("sim");
+            let exe = if sim {
+                Executor::sim_with(jalad::runtime::sim::sim_manifest(), 8)
+            } else {
+                Executor::new(Manifest::load(&dir)?)?
+            };
+            let (eng, model) = if sim {
+                (DecisionEngine::sim_default(args.get_f64("delta-alpha"))?, "simnet".to_string())
+            } else {
+                (engine(args, &exe)?, args.get("model").to_string())
+            };
+            let controller = AdaptationController::new(eng, args.get_f64("bw"));
+            let rate = jalad::network::throttle::RateHandle::new(args.get_f64("bw") as u64);
+            let mut edge = jalad::server::EdgeClient::connect(&exe, &model, addr, rate, controller)?;
+            if !args.get("tenant").is_empty() {
+                let t: u32 = args
+                    .get("tenant")
+                    .parse()
+                    .map_err(|_| anyhow!("--tenant must be a u32"))?;
+                edge.set_tenant(Some(t));
+            }
+            let shape = exe.manifest().model(&model)?.input_shape.clone();
+            let mut correct = 0usize;
+            let mut sheds = 0usize;
+            let n = args.get_usize("requests");
+            for id in 0..n {
+                let s = jalad::data::gen::Sample {
+                    image: jalad::data::gen::sample_image_shaped((9000 + id) % 16, 9000 + id, &shape),
+                    label: (9000 + id) % 16,
+                };
+                let r = edge.infer(&s)?;
+                correct += r.correct as usize;
+                sheds += r.sheds;
+                println!("req {id:3}  {:?}  sheds {}  {}", r.decision, r.sheds, r.breakdown.summary());
+            }
+            println!("accuracy {}/{n}, {} sheds absorbed", correct, sheds);
+            println!("stats: {}", edge.stats()?);
         }
         "infer" => {
             let exe = Executor::new(Manifest::load(&dir)?)?;

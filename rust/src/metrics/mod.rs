@@ -253,6 +253,81 @@ impl SharedHistogram {
     }
 }
 
+/// Per-tenant serving counters: what one tenant was admitted, shed and
+/// charged for, plus its own queue-wait distribution. One entry per
+/// tenant in a [`TenantRegistry`]; the cloud server records
+/// admit/shed/bytes on the connection worker and the batch engine
+/// records each request's queue wait under the requester's tenant, so
+/// the stats endpoint can report fairness per tenant, not just in
+/// aggregate.
+#[derive(Debug, Default)]
+pub struct TenantCounters {
+    pub admitted: AtomicU64,
+    pub sheds: AtomicU64,
+    pub bytes: AtomicU64,
+    /// Seconds from enqueue to execution start for this tenant's
+    /// requests (bounded ring, same retention as the global histogram).
+    pub queue_wait: SharedHistogram,
+}
+
+impl TenantCounters {
+    pub fn inc_admitted(&self) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn inc_sheds(&self) {
+        self.sheds.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add_bytes(&self, n: u64) {
+        self.bytes.fetch_add(n, Ordering::Relaxed);
+    }
+    /// (admitted, sheds, bytes).
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.admitted.load(Ordering::Relaxed),
+            self.sheds.load(Ordering::Relaxed),
+            self.bytes.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Registry of per-tenant counters keyed by the server's internal
+/// tenant id (explicit wire tenants and implicit per-connection
+/// tenants live in disjoint key ranges). Lookups clone an `Arc` out
+/// under a mutex held only for a map probe; the cloud server memoizes
+/// its connection's entry (one u64 compare per request while the
+/// tenant is stable), and the batch engine's per-request probe is no
+/// heavier than the shared queue-wait histogram lock it records into.
+#[derive(Debug, Default)]
+pub struct TenantRegistry {
+    tenants: Mutex<std::collections::BTreeMap<u64, std::sync::Arc<TenantCounters>>>,
+}
+
+impl TenantRegistry {
+    pub fn get(&self, tenant: u64) -> std::sync::Arc<TenantCounters> {
+        std::sync::Arc::clone(
+            self.tenants.lock().unwrap().entry(tenant).or_default(),
+        )
+    }
+
+    /// All tenants seen so far, in key order (stable stats output).
+    pub fn snapshot(&self) -> Vec<(u64, std::sync::Arc<TenantCounters>)> {
+        self.tenants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (*k, std::sync::Arc::clone(v)))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Micro-batch scheduler telemetry: how full batches run, how many
 /// requests bypassed the queue, and how long batched requests waited
 /// between enqueue and execution start. Occupancy (mean/max batch
@@ -275,6 +350,10 @@ pub struct BatchMetrics {
     /// would have expired inside the window (the deadline-ordered
     /// queue doing its job).
     pub deadline_clamped: AtomicU64,
+    /// Joins refused by the tenant-aware dequeue because the tenant
+    /// had already taken its share of the open batch's slots (the
+    /// refused request starts its own batch instead of waiting).
+    pub tenant_capped: AtomicU64,
 }
 
 impl BatchMetrics {
@@ -294,6 +373,10 @@ impl BatchMetrics {
 
     pub fn record_deadline_clamp(&self) {
         self.deadline_clamped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_tenant_cap(&self) {
+        self.tenant_capped.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Mean requests per executed batch (0 when none ran).
@@ -499,6 +582,43 @@ mod tests {
         assert_eq!(m.gather_window_us.load(Ordering::Relaxed), 250);
         m.record_deadline_clamp();
         assert_eq!(m.deadline_clamped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn tenant_registry_tracks_per_tenant_counters() {
+        let reg = TenantRegistry::default();
+        assert!(reg.is_empty());
+        let a = reg.get(1);
+        a.inc_admitted();
+        a.add_bytes(100);
+        a.queue_wait.record(0.002);
+        let b = reg.get(2);
+        b.inc_sheds();
+        // Same key returns the same entry (counters accumulate).
+        reg.get(1).inc_admitted();
+        assert_eq!(reg.len(), 2);
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, 1);
+        assert_eq!(snap[0].1.snapshot(), (2, 0, 100));
+        assert_eq!(snap[1].1.snapshot(), (0, 1, 0));
+        assert_eq!(snap[0].1.queue_wait.snapshot().len(), 1);
+        // Concurrent get/record on one key never loses counts.
+        let reg = std::sync::Arc::new(TenantRegistry::default());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let reg = std::sync::Arc::clone(&reg);
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        reg.get(9).inc_admitted();
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.get(9).snapshot().0, 2000);
     }
 
     #[test]

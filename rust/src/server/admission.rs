@@ -1,0 +1,416 @@
+//! Deficit-weighted per-tenant fair admission (the multi-edge rung of
+//! §III-E, cloud side).
+//!
+//! The global admission budget (`AdmissionConfig`'s queue/utilization
+//! thresholds) decides *whether* the cloud is over budget; this module
+//! decides *who* gets the capacity that remains. Each active tenant is
+//! allocated a share of a global admitted-rate budget by **max-min
+//! water-filling** over observed demand: a tenant asking for less than
+//! an equal split keeps exactly what it asks for, and its unused slack
+//! redistributes to the heavier tenants (the "deficit-weighted" part —
+//! idle tenants never pin capacity, aggressive tenants absorb exactly
+//! the leftovers, never a polite tenant's share). Shares are enforced
+//! with per-tenant token buckets, so enforcement is O(1) per request
+//! under one short mutex.
+//!
+//! Fairness only *changes* anything when at least two tenants are
+//! active: with a single tenant (or the `fair` knob off) the caller
+//! falls back to the global-budget path, keeping zero-config behavior
+//! bit-identical to the pre-tenant server.
+//!
+//! A shed tenant gets a **backoff hint**: the time until its bucket
+//! refills one credit. The hint rides the `Busy` frame's
+//! [`CloudTelemetry`](crate::server::proto::CloudTelemetry) and the
+//! edge paces its retries with it — tenant-scoped pacing instead of a
+//! fixed retry count hammering an overloaded server.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Arrival/served-rate estimation window. Short enough to track a
+/// flooder ramping up within a second, long enough that a handful of
+/// requests produce a stable rate.
+const RATE_WINDOW: Duration = Duration::from_millis(250);
+
+/// How often the water-filled allocations are recomputed. Between
+/// refreshes tenants spend tokens against the last allocation.
+const ALLOC_REFRESH: Duration = Duration::from_millis(50);
+
+/// A tenant counts as active (and earns an allocation) if it sent
+/// anything this recently.
+const ACTIVE_WINDOW: Duration = Duration::from_secs(1);
+
+/// Tenants idle longer than this are dropped from the rate map
+/// (their counters in the `TenantRegistry` survive — only the
+/// admission state is bounded here).
+const PRUNE_AFTER: Duration = Duration::from_secs(60);
+
+/// Token-bucket burst, seconds of allocation: absorbs arrival jitter
+/// so a tenant sending exactly its share is not shed on phase noise.
+const BURST_SECONDS: f64 = 0.25;
+const MIN_BURST_TOKENS: f64 = 2.0;
+
+/// Floor for the auto-derived budget so a cold server never computes a
+/// zero share and sheds everyone forever.
+const MIN_BUDGET_RPS: f64 = 1.0;
+
+/// Outcome of a fair-admission check for one over-budget request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FairDecision {
+    /// Admit: the tenant is within its fair share (a credit was spent).
+    Admit,
+    /// Shed: the tenant exhausted its share; the backoff is the time
+    /// until its bucket refills one credit (the edge's pacing hint).
+    Shed { backoff: Duration },
+    /// Fairness does not apply (fewer than two active tenants): the
+    /// caller must use the global-budget behavior, unchanged.
+    Global,
+}
+
+/// Max-min fair allocation of `budget` over `demands` (all req/s).
+/// Every tenant gets `min(demand, fair level)`; slack from tenants
+/// below the level raises the level for the rest. When total demand
+/// fits the budget, the headroom is spread equally so allocations sit
+/// above demand (nobody sheds on estimator noise).
+pub fn water_fill(budget: f64, demands: &[f64]) -> Vec<f64> {
+    let k = demands.len();
+    if k == 0 {
+        return Vec::new();
+    }
+    let total: f64 = demands.iter().sum();
+    if total <= budget {
+        let headroom = (budget - total) / k as f64;
+        return demands.iter().map(|d| d + headroom).collect();
+    }
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| demands[a].partial_cmp(&demands[b]).unwrap());
+    let mut alloc = vec![0.0; k];
+    let mut remaining = budget;
+    for (rank, &idx) in order.iter().enumerate() {
+        let share = remaining / (k - rank) as f64;
+        let a = demands[idx].min(share);
+        alloc[idx] = a;
+        remaining -= a;
+    }
+    alloc
+}
+
+struct TenantRate {
+    /// Arrivals since `win_start`.
+    win_count: u64,
+    win_start: Instant,
+    /// Blended arrivals/sec over completed windows (the demand signal).
+    rate: f64,
+    /// Admission credits (requests).
+    tokens: f64,
+    /// Current water-filled allocation, req/s.
+    alloc: f64,
+    last_refill: Instant,
+    last_seen: Instant,
+}
+
+impl TenantRate {
+    fn new(now: Instant) -> Self {
+        Self {
+            win_count: 0,
+            win_start: now,
+            rate: 0.0,
+            tokens: MIN_BURST_TOKENS,
+            alloc: 0.0,
+            last_refill: now,
+            last_seen: now,
+        }
+    }
+
+    fn burst(&self) -> f64 {
+        (self.alloc * BURST_SECONDS).max(MIN_BURST_TOKENS)
+    }
+}
+
+struct FairState {
+    tenants: HashMap<u64, TenantRate>,
+    /// Served-rate estimator for the auto budget (completions/sec).
+    served_count: u64,
+    served_win_start: Instant,
+    served_rate: f64,
+    last_alloc: Option<Instant>,
+}
+
+/// The per-tenant fair-admission governor. One per server; every call
+/// takes `now` so tests drive it on a synthetic clock.
+pub struct FairAdmission {
+    /// Global admitted-rate budget under overload, req/s. 0 derives it
+    /// from the recently-served rate (what the cloud demonstrably
+    /// completes while over budget *is* its capacity).
+    budget: f64,
+    state: Mutex<FairState>,
+}
+
+impl FairAdmission {
+    pub fn new(budget_rps: f64) -> Self {
+        let now = Instant::now();
+        Self {
+            budget: budget_rps.max(0.0),
+            state: Mutex::new(FairState {
+                tenants: HashMap::new(),
+                served_count: 0,
+                served_win_start: now,
+                served_rate: 0.0,
+                last_alloc: None,
+            }),
+        }
+    }
+
+    /// Record one data-request arrival for `tenant` (admitted or not —
+    /// demand is what arrives, not what survives).
+    pub fn note_arrival(&self, tenant: u64, now: Instant) {
+        let mut st = self.state.lock().unwrap();
+        let entry = st.tenants.entry(tenant).or_insert_with(|| TenantRate::new(now));
+        let dt = now.duration_since(entry.win_start);
+        if dt >= RATE_WINDOW {
+            let inst = entry.win_count as f64 / dt.as_secs_f64();
+            entry.rate = if entry.rate == 0.0 { inst } else { 0.5 * entry.rate + 0.5 * inst };
+            entry.win_start = now;
+            entry.win_count = 0;
+        }
+        entry.win_count += 1;
+        entry.last_seen = now;
+    }
+
+    /// Record one served (replied-with-logits) data request — the auto
+    /// budget's capacity signal.
+    pub fn note_served(&self, now: Instant) {
+        let mut st = self.state.lock().unwrap();
+        st.served_count += 1;
+        let dt = now.duration_since(st.served_win_start);
+        if dt >= RATE_WINDOW {
+            let inst = st.served_count as f64 / dt.as_secs_f64();
+            st.served_rate =
+                if st.served_rate == 0.0 { inst } else { 0.5 * st.served_rate + 0.5 * inst };
+            st.served_win_start = now;
+            st.served_count = 0;
+        }
+    }
+
+    /// Tenants that sent anything within the activity window.
+    pub fn active_tenants(&self, now: Instant) -> usize {
+        let st = self.state.lock().unwrap();
+        st.tenants
+            .values()
+            .filter(|t| now.duration_since(t.last_seen) <= ACTIVE_WINDOW)
+            .count()
+    }
+
+    /// Current (tenant, allocation req/s) pairs, for the stats JSON.
+    pub fn allocations(&self) -> Vec<(u64, f64)> {
+        let st = self.state.lock().unwrap();
+        let mut v: Vec<(u64, f64)> = st.tenants.iter().map(|(k, t)| (*k, t.alloc)).collect();
+        v.sort_by_key(|(k, _)| *k);
+        v
+    }
+
+    /// Decide an over-budget, sheddable request from `tenant`. Callers
+    /// must treat [`FairDecision::Global`] as "behave exactly like the
+    /// pre-tenant global budget" — that branch is what keeps the
+    /// single-tenant path bit-identical.
+    pub fn decide(&self, tenant: u64, now: Instant) -> FairDecision {
+        let mut st = self.state.lock().unwrap();
+        let active: Vec<u64> = st
+            .tenants
+            .iter()
+            .filter(|(_, t)| now.duration_since(t.last_seen) <= ACTIVE_WINDOW)
+            .map(|(k, _)| *k)
+            .collect();
+        if active.len() < 2 {
+            return FairDecision::Global;
+        }
+        let alloc_stale = st
+            .last_alloc
+            .map(|at| now.duration_since(at) >= ALLOC_REFRESH)
+            .unwrap_or(true);
+        if alloc_stale {
+            st.tenants.retain(|_, t| now.duration_since(t.last_seen) <= PRUNE_AFTER);
+            let budget = if self.budget > 0.0 {
+                self.budget
+            } else {
+                st.served_rate.max(MIN_BUDGET_RPS)
+            };
+            let demands: Vec<f64> = active.iter().map(|k| st.tenants[k].rate).collect();
+            let allocs = water_fill(budget, &demands);
+            for (k, a) in active.iter().zip(allocs) {
+                if let Some(t) = st.tenants.get_mut(k) {
+                    t.alloc = a;
+                }
+            }
+            st.last_alloc = Some(now);
+        }
+        let Some(entry) = st.tenants.get_mut(&tenant) else {
+            // Pruned between arrival and decision (pathological clock
+            // skew in a test); re-admit rather than wedge.
+            return FairDecision::Global;
+        };
+        let dt = now.duration_since(entry.last_refill).as_secs_f64();
+        entry.tokens = (entry.tokens + entry.alloc * dt).min(entry.burst());
+        entry.last_refill = now;
+        if entry.tokens >= 1.0 {
+            entry.tokens -= 1.0;
+            FairDecision::Admit
+        } else {
+            let deficit = 1.0 - entry.tokens;
+            let secs = if entry.alloc > 1e-9 { deficit / entry.alloc } else { 2.0 };
+            FairDecision::Shed {
+                backoff: Duration::from_secs_f64(secs.clamp(1e-3, 2.0)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn water_fill_is_max_min_with_slack_redistribution() {
+        // Overloaded: equal split would be 120 each; the two polite
+        // tenants are demand-limited and their slack goes to the
+        // flooder.
+        let a = water_fill(360.0, &[100.0, 100.0, 400.0]);
+        assert!((a[0] - 100.0).abs() < 1e-9);
+        assert!((a[1] - 100.0).abs() < 1e-9);
+        assert!((a[2] - 160.0).abs() < 1e-9);
+        assert!((a.iter().sum::<f64>() - 360.0).abs() < 1e-9);
+        // All heavy: equal split.
+        let a = water_fill(300.0, &[400.0, 500.0, 600.0]);
+        assert!(a.iter().all(|&x| (x - 100.0).abs() < 1e-9));
+        // Underloaded: everyone gets demand + equal headroom.
+        let a = water_fill(100.0, &[10.0, 20.0]);
+        assert!((a[0] - 45.0).abs() < 1e-9);
+        assert!((a[1] - 55.0).abs() < 1e-9);
+        // Degenerate inputs.
+        assert!(water_fill(100.0, &[]).is_empty());
+        let a = water_fill(0.0, &[5.0, 5.0]);
+        assert!(a.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn single_tenant_falls_back_to_global_semantics() {
+        let fa = FairAdmission::new(100.0);
+        let t0 = Instant::now();
+        for i in 0..50 {
+            fa.note_arrival(1, t0 + Duration::from_millis(i * 10));
+        }
+        // One active tenant: fairness must not change the decision.
+        assert_eq!(fa.decide(1, t0 + Duration::from_millis(500)), FairDecision::Global);
+        assert_eq!(fa.active_tenants(t0 + Duration::from_millis(500)), 1);
+    }
+
+    #[test]
+    fn flooder_sheds_before_polite_tenant() {
+        // Budget 100 req/s; polite sends 40/s, flooder 400/s on a
+        // synthetic clock. After the rate windows settle, the polite
+        // tenant is always admitted and the flooder is paced down to
+        // the leftover share with a real backoff hint.
+        let fa = FairAdmission::new(100.0);
+        let t0 = Instant::now();
+        let mut polite_shed = 0;
+        let mut flood_shed = 0;
+        let mut flood_admit = 0;
+        let mut polite_admit = 0;
+        // 2 seconds of traffic at 1 ms resolution.
+        for ms in 0..2000u64 {
+            let now = t0 + Duration::from_millis(ms);
+            if ms % 25 == 0 {
+                // polite: 40/s
+                fa.note_arrival(1, now);
+                if ms >= 1000 {
+                    match fa.decide(1, now) {
+                        FairDecision::Admit => polite_admit += 1,
+                        FairDecision::Shed { .. } => polite_shed += 1,
+                        FairDecision::Global => {}
+                    }
+                }
+            }
+            if ms % 25 < 10 {
+                // flooder: 400/s
+                fa.note_arrival(2, now);
+                if ms >= 1000 {
+                    match fa.decide(2, now) {
+                        FairDecision::Admit => flood_admit += 1,
+                        FairDecision::Shed { backoff } => {
+                            flood_shed += 1;
+                            assert!(backoff >= Duration::from_millis(1));
+                            assert!(backoff <= Duration::from_secs(2));
+                        }
+                        FairDecision::Global => {}
+                    }
+                }
+            }
+        }
+        assert_eq!(polite_shed, 0, "polite tenant under its share must never shed");
+        assert!(polite_admit > 30, "polite tenant was starved: {polite_admit}");
+        assert!(
+            flood_shed > flood_admit,
+            "flooder must shed more than it admits at 4x the budget ({flood_admit} admits, {flood_shed} sheds)"
+        );
+        // The flooder's admitted rate lands near its water-filled
+        // leftover share (100 - 40 = 60/s over the 1 s measured phase),
+        // with slack for bucket bursts.
+        assert!(
+            (30..=100).contains(&flood_admit),
+            "flooder admitted {flood_admit}/s, expected ≈60"
+        );
+        assert_eq!(fa.active_tenants(t0 + Duration::from_secs(2)), 2);
+        let allocs = fa.allocations();
+        assert_eq!(allocs.len(), 2);
+        assert!(allocs[0].1 < allocs[1].1, "flooder's allocation should absorb the slack");
+    }
+
+    #[test]
+    fn idle_tenant_slack_redistributes_and_activity_expires() {
+        let fa = FairAdmission::new(90.0);
+        let t0 = Instant::now();
+        // Three tenants active, then tenant 3 goes idle.
+        for ms in 0..1500u64 {
+            let now = t0 + Duration::from_millis(ms);
+            if ms % 10 == 0 {
+                fa.note_arrival(1, now);
+                fa.note_arrival(2, now);
+                if ms < 400 {
+                    fa.note_arrival(3, now);
+                }
+            }
+        }
+        let late = t0 + Duration::from_millis(1500);
+        assert_eq!(fa.active_tenants(late), 2, "idle tenant must leave the active set");
+        // Force an allocation refresh and check the two live tenants
+        // split the whole budget (the idle tenant pins nothing).
+        let _ = fa.decide(1, late);
+        let allocs = fa.allocations();
+        let live: f64 = allocs.iter().filter(|(k, _)| *k != 3).map(|(_, a)| a).sum();
+        assert!(live > 89.0, "live tenants should hold ~the whole budget, got {live}");
+    }
+
+    #[test]
+    fn auto_budget_derives_from_served_rate() {
+        let fa = FairAdmission::new(0.0);
+        let t0 = Instant::now();
+        // Serve 200/s for a second so the capacity estimate settles,
+        // with two tenants arriving so fairness applies.
+        for ms in 0..1000u64 {
+            let now = t0 + Duration::from_millis(ms);
+            if ms % 5 == 0 {
+                fa.note_served(now);
+            }
+            if ms % 10 == 0 {
+                fa.note_arrival(1, now);
+                fa.note_arrival(2, now);
+            }
+        }
+        let now = t0 + Duration::from_millis(1001);
+        // Equal demand, budget ≈ 200: each side gets ≈100/s — both
+        // admit their 100/s demand without sheds.
+        let d = fa.decide(1, now);
+        assert!(matches!(d, FairDecision::Admit), "auto budget starved an in-share tenant: {d:?}");
+    }
+}

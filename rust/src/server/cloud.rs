@@ -57,8 +57,9 @@ use anyhow::{anyhow, Result};
 use crate::compression::feature;
 use crate::compression::png;
 use crate::compression::quant;
-use crate::metrics::{BatchMetrics, Counters, SharedHistogram};
+use crate::metrics::{BatchMetrics, Counters, SharedHistogram, TenantCounters, TenantRegistry};
 use crate::runtime::{BatchConfig, BatchEngine, ExecutorPool, Manifest, SharedExecutor};
+use crate::server::admission::{FairAdmission, FairDecision};
 use crate::server::proto::{self, CloudTelemetry, RecvFrame};
 use crate::util::json::Json;
 use crate::util::pool::{BufPool, Scratch};
@@ -91,6 +92,18 @@ pub struct AdmissionConfig {
     /// (sampling touches every shard's counters; 50 ms of staleness is
     /// invisible to the control loop, which reacts over replies).
     pub refresh: Duration,
+    /// Per-tenant fair admission: when the global budget trips, shed
+    /// by deficit-weighted per-tenant shares
+    /// ([`FairAdmission`](crate::server::admission::FairAdmission))
+    /// instead of refusing every sheddable request. Also turns on the
+    /// batch engine's tenant-aware dequeue. With fewer than two active
+    /// tenants the decisions are identical to the global budget — and
+    /// `false` (the default) never consults tenants at all.
+    pub fair: bool,
+    /// Global admitted-rate budget under overload, requests/second,
+    /// split across active tenants by water-filling. 0 derives it from
+    /// the recently-served rate. Only meaningful with `fair`.
+    pub tenant_budget: f64,
 }
 
 impl Default for AdmissionConfig {
@@ -100,6 +113,8 @@ impl Default for AdmissionConfig {
             utilization_budget: f64::INFINITY,
             deadline: Duration::ZERO,
             refresh: Duration::from_millis(50),
+            fair: false,
+            tenant_budget: 0.0,
         }
     }
 }
@@ -201,6 +216,7 @@ fn unpack(a: u64, b: u64) -> CloudTelemetry {
         batch_occupancy: f32::from_bits((b >> 32) as u32),
         shedding: b & 1 != 0,
         sheds: 0,
+        tenant_backoff_ms: 0.0,
     }
 }
 
@@ -230,6 +246,9 @@ impl LoadMonitor {
             if let Some(mut t) = *self.injected.lock().unwrap() {
                 t.shedding = t.shedding || self.cfg.over_budget(&t);
                 t.sheds = sheds as u32;
+                // The backoff hint is per-tenant, stamped on the Busy
+                // reply path — never part of the sampled snapshot.
+                t.tenant_backoff_ms = 0.0;
                 return t;
             }
         }
@@ -297,6 +316,7 @@ impl LoadMonitor {
             batch_occupancy: engine.occupancy_ewma() as f32,
             shedding: false,
             sheds: 0,
+            tenant_backoff_ms: 0.0,
         };
         t.shedding = self.cfg.over_budget(&t);
         st.last_refresh = Some(now);
@@ -322,8 +342,31 @@ impl LoadMonitor {
 enum Served {
     /// Logits are in the scratch's float buffer.
     Logits,
-    /// Admission control refused; reply `Busy` with telemetry.
-    Shed,
+    /// Admission control refused; reply `Busy` with telemetry carrying
+    /// the shed tenant's backoff hint (0 = no hint, the global-budget
+    /// immediate-retry contract).
+    Shed { backoff_ms: f32 },
+}
+
+/// Internal tenant key: explicit wire tenants and implicit
+/// per-connection tenants live in disjoint u64 ranges so a wire tenant
+/// id can never collide with a connection id.
+const EXPLICIT_TENANT_BIT: u64 = 1 << 32;
+
+fn tenant_key(conn_id: usize, wire_tenant: Option<u32>) -> u64 {
+    match wire_tenant {
+        Some(t) => EXPLICIT_TENANT_BIT | t as u64,
+        None => conn_id as u64,
+    }
+}
+
+/// Human-readable tenant label for the stats JSON.
+fn tenant_label(key: u64) -> String {
+    if key & EXPLICIT_TENANT_BIT != 0 {
+        format!("t:{}", key & (EXPLICIT_TENANT_BIT - 1))
+    } else {
+        format!("conn:{key}")
+    }
 }
 
 pub struct CloudServer {
@@ -331,6 +374,12 @@ pub struct CloudServer {
     manifest: Manifest,
     cfg: ServeConfig,
     monitor: LoadMonitor,
+    /// Per-tenant admitted/shed/bytes/queue-wait counters (explicit
+    /// wire tenants and implicit per-connection tenants alike).
+    tenants: Arc<TenantRegistry>,
+    /// Deficit-weighted fair-share governor (consulted only when
+    /// `admission.fair` and the global budget trips).
+    fairness: FairAdmission,
     pub counters: Arc<Counters>,
     /// Per-request service time (frame read → reply written), seconds.
     pub service_hist: Arc<SharedHistogram>,
@@ -373,9 +422,17 @@ impl CloudServer {
         let manifest = pool.manifest().clone();
         let workers = cfg.workers.max(1);
         let monitor = LoadMonitor::new(cfg.admission, pool.shard_count());
+        let tenants = Arc::new(TenantRegistry::default());
+        // Fair admission implies the tenant-aware dequeue: the same
+        // flood that exhausts a tenant's admission share must not also
+        // monopolize gather windows.
+        let mut batch_cfg = cfg.batch;
+        batch_cfg.tenant_fair = batch_cfg.tenant_fair || cfg.admission.fair;
         Self {
-            engine: BatchEngine::new(pool, cfg.batch),
+            engine: BatchEngine::with_tenants(pool, batch_cfg, Some(Arc::clone(&tenants))),
             manifest,
+            fairness: FairAdmission::new(cfg.admission.tenant_budget),
+            tenants,
             cfg,
             monitor,
             counters: Arc::new(Counters::default()),
@@ -492,6 +549,10 @@ impl CloudServer {
         let mut writer = stream.try_clone()?;
         let mut reader = BufReader::new(stream);
         let mut scratch = self.scratch_pool.get();
+        // One-entry memo for this connection's tenant counters: a
+        // connection's tenant is stable in practice, so the warm path
+        // is a u64 compare instead of a registry lock per request.
+        let mut tenant_memo: Option<(u64, Arc<TenantCounters>)> = None;
         loop {
             let recv = match proto::read_frame_into(&mut reader, &mut scratch.frame) {
                 Ok(r) => r,
@@ -513,28 +574,70 @@ impl CloudServer {
             let sc = &mut *scratch;
             match kind {
                 proto::KIND_FEATURES => {
-                    self.note_data_request(sc.frame.len());
+                    // Tenant identity rides an optional trailer; the
+                    // body left after stripping it is exactly the
+                    // pre-tenant frame (absent trailer ⇒ implicit
+                    // per-connection tenant, nothing stripped). The
+                    // codec header declares the frame's exact length,
+                    // so a trailer is looked for only in bytes beyond
+                    // it — a pre-tenant frame whose entropy payload
+                    // happens to end in trailer-looking bytes can
+                    // never be misread.
+                    let raw_len = sc.frame.len();
+                    let (body_len, wire_tenant) = match feature::frame_len(&sc.frame) {
+                        Some(flen) if sc.frame.len() <= flen => (sc.frame.len(), None),
+                        _ => proto::split_tenant_trailer(&sc.frame),
+                    };
+                    sc.frame.truncate(body_len);
+                    let tenant = tenant_key(conn_id, wire_tenant);
+                    let tc = self.tenant_counters(&mut tenant_memo, tenant);
+                    tc.add_bytes(raw_len as u64);
+                    self.note_data_request(raw_len);
+                    if self.cfg.admission.fair {
+                        self.fairness.note_arrival(tenant, t0);
+                    }
                     let telemetry = self.telemetry();
                     let deadline = self.request_deadline(t0);
-                    let result = self.handle_features(conn_id, sc, telemetry.shedding, deadline);
-                    self.reply_data(&mut writer, sc, t0, telemetry, result)?;
+                    let result =
+                        self.handle_features(conn_id, sc, telemetry.shedding, deadline, tenant);
+                    self.reply_data(&mut writer, sc, t0, telemetry, result, &tc)?;
                 }
                 proto::KIND_IMAGE => {
-                    self.note_data_request(sc.frame.len());
+                    let raw_len = sc.frame.len();
+                    let (body_len, wire_tenant) = proto::split_tenant_trailer(&sc.frame);
+                    sc.frame.truncate(body_len);
+                    let tenant = tenant_key(conn_id, wire_tenant);
+                    let tc = self.tenant_counters(&mut tenant_memo, tenant);
+                    tc.add_bytes(raw_len as u64);
+                    self.note_data_request(raw_len);
+                    if self.cfg.admission.fair {
+                        self.fairness.note_arrival(tenant, t0);
+                    }
                     let telemetry = self.telemetry();
-                    let result = if telemetry.shedding {
-                        // Full-model work is the most expensive thing
-                        // admission can refuse; shed before decoding.
-                        Ok(Served::Shed)
-                    } else if sc.frame.len() < 4 {
-                        Err(anyhow!("short image frame"))
+                    // Full-model work is the most expensive thing
+                    // admission can refuse; shed before decoding.
+                    let shed = if telemetry.shedding {
+                        match self.fair_decision(tenant, t0) {
+                            FairDecision::Admit => None,
+                            FairDecision::Shed { backoff } => {
+                                Some(backoff.as_secs_f64() as f32 * 1e3)
+                            }
+                            FairDecision::Global => Some(0.0),
+                        }
                     } else {
-                        let model_id = u16::from_le_bytes([sc.frame[0], sc.frame[1]]);
-                        let Scratch { frame, floats, .. } = sc;
-                        self.handle_image(conn_id, model_id, &frame[4..], floats)
-                            .map(|()| Served::Logits)
+                        None
                     };
-                    self.reply_data(&mut writer, sc, t0, telemetry, result)?;
+                    let result = match shed {
+                        Some(backoff_ms) => Ok(Served::Shed { backoff_ms }),
+                        None if sc.frame.len() < 4 => Err(anyhow!("short image frame")),
+                        None => {
+                            let model_id = u16::from_le_bytes([sc.frame[0], sc.frame[1]]);
+                            let Scratch { frame, floats, .. } = sc;
+                            self.handle_image(conn_id, model_id, &frame[4..], floats)
+                                .map(|()| Served::Logits)
+                        }
+                    };
+                    self.reply_data(&mut writer, sc, t0, telemetry, result, &tc)?;
                 }
                 proto::KIND_STATS => {
                     self.counters.inc_control();
@@ -571,6 +674,24 @@ impl CloudServer {
         }
     }
 
+    /// This connection's tenant counters, through a one-entry memo:
+    /// the registry mutex is only touched when the tenant changes
+    /// (explicit wire tenants are connection-stable in practice).
+    fn tenant_counters(
+        &self,
+        memo: &mut Option<(u64, Arc<TenantCounters>)>,
+        tenant: u64,
+    ) -> Arc<TenantCounters> {
+        match memo {
+            Some((k, tc)) if *k == tenant => Arc::clone(tc),
+            _ => {
+                let tc = self.tenants.get(tenant);
+                *memo = Some((tenant, Arc::clone(&tc)));
+                tc
+            }
+        }
+    }
+
     /// Ingress accounting shared by every data-request kind.
     fn note_data_request(&self, payload_len: usize) {
         self.counters.inc_requests();
@@ -584,6 +705,17 @@ impl CloudServer {
             Some(t0 + self.cfg.admission.deadline)
         } else {
             None
+        }
+    }
+
+    /// What fairness says about an over-budget, sheddable request.
+    /// With `fair` off this is always [`FairDecision::Global`] — the
+    /// caller sheds exactly as the pre-tenant server did.
+    fn fair_decision(&self, tenant: u64, now: Instant) -> FairDecision {
+        if self.cfg.admission.fair {
+            self.fairness.decide(tenant, now)
+        } else {
+            FairDecision::Global
         }
     }
 
@@ -601,17 +733,25 @@ impl CloudServer {
         t0: Instant,
         telemetry: CloudTelemetry,
         result: Result<Served>,
+        tenant: &TenantCounters,
     ) -> Result<()> {
         match result {
             Ok(Served::Logits) => {
                 proto::write_logits_frame_with(writer, &sc.floats, Some(&telemetry), &mut sc.wire)?;
                 self.service_hist.record(t0.elapsed().as_secs_f64());
+                tenant.inc_admitted();
+                if self.cfg.admission.fair {
+                    // Completions are the auto budget's capacity signal.
+                    self.fairness.note_served(Instant::now());
+                }
             }
-            Ok(Served::Shed) => {
+            Ok(Served::Shed { backoff_ms }) => {
                 self.counters.inc_sheds();
+                tenant.inc_sheds();
                 let mut t = telemetry;
                 t.shedding = true;
                 t.sheds = self.counters.sheds() as u32;
+                t.tenant_backoff_ms = backoff_ms;
                 sc.wire.clear();
                 t.encode_into(&mut sc.wire);
                 proto::write_frame_raw(writer, proto::KIND_BUSY, &sc.wire)?;
@@ -701,6 +841,29 @@ impl CloudServer {
                 "deadline_clamped",
                 Json::num(bm.deadline_clamped.load(std::sync::atomic::Ordering::Relaxed) as f64),
             ),
+            // Multi-edge fairness observables: per-tenant admission
+            // outcomes + the tenant-aware dequeue's cap events.
+            ("fair_admission", Json::num(self.cfg.admission.fair as u8 as f64)),
+            ("active_tenants", Json::num(self.fairness.active_tenants(Instant::now()) as f64)),
+            (
+                "tenant_capped",
+                Json::num(bm.tenant_capped.load(std::sync::atomic::Ordering::Relaxed) as f64),
+            ),
+            (
+                "tenants",
+                Json::arr(self.tenants.snapshot().into_iter().map(|(key, tc)| {
+                    let (admitted, sheds, bytes) = tc.snapshot();
+                    let qw = tc.queue_wait.snapshot();
+                    let qw95 = if qw.is_empty() { 0.0 } else { qw.percentile(95.0) * 1e3 };
+                    Json::obj(vec![
+                        ("tenant", Json::str(&tenant_label(key))),
+                        ("admitted", Json::num(admitted as f64)),
+                        ("sheds", Json::num(sheds as f64)),
+                        ("bytes_rx", Json::num(bytes as f64)),
+                        ("queue_wait_p95_ms", Json::num(qw95)),
+                    ])
+                })),
+            ),
         ])
         .to_string()
     }
@@ -723,18 +886,33 @@ impl CloudServer {
         scratch: &mut Scratch,
         shedding: bool,
         deadline: Option<Instant>,
+        tenant: u64,
     ) -> Result<Served> {
         // Shed off the fixed header alone — refusing work must not pay
         // the entropy decode. Unpeekable frames fall through and fail
         // in the full decode with a precise error.
         if shedding {
             if let Some((model, stage)) = feature::peek_route(&scratch.frame) {
-                let shed = match self.manifest.models.get(model as usize) {
+                let sheddable = match self.manifest.models.get(model as usize) {
                     Some(m) => (stage as usize) < m.num_stages(),
                     None => true, // bogus model: not worth decoding while over budget
                 };
-                if shed {
-                    return Ok(Served::Shed);
+                if sheddable {
+                    // Fairness decides *who* the over-budget server
+                    // refuses: a tenant inside its fair share is
+                    // admitted anyway; one past it gets a Busy with a
+                    // backoff hint. Without fairness (or with a single
+                    // active tenant) this is the pre-tenant global
+                    // shed, hint-less.
+                    match self.fair_decision(tenant, Instant::now()) {
+                        FairDecision::Admit => {}
+                        FairDecision::Shed { backoff } => {
+                            return Ok(Served::Shed {
+                                backoff_ms: backoff.as_secs_f64() as f32 * 1e3,
+                            })
+                        }
+                        FairDecision::Global => return Ok(Served::Shed { backoff_ms: 0.0 }),
+                    }
                 }
             }
         }
@@ -767,7 +945,8 @@ impl CloudServer {
             (h.model, i + 1)
         };
         let activation = scratch.lend_floats();
-        let out = self.engine.infer_tail_deadline(conn_id, model_id, from, activation, deadline)?;
+        let out =
+            self.engine.infer_tail_for(conn_id, model_id, from, activation, deadline, tenant)?;
         scratch.restore_floats(out);
         Ok(Served::Logits)
     }

@@ -39,17 +39,34 @@ use crate::util::json::Json;
 /// from bandwidth estimation.
 pub const MIN_ESTIMATE_BYTES: usize = 4096;
 
-/// How many `Busy` sheds one request tolerates before giving up. Each
-/// shed moves the plan at least one stage edge-ward, so any model
-/// whose stage count exceeds this still converges across requests —
-/// and the shed-everything pathological server can't wedge a caller.
+/// How many `Busy` sheds one request tolerates before giving up when
+/// the cloud sends no backoff hint. Each shed moves the plan at least
+/// one stage edge-ward, so any model whose stage count exceeds this
+/// still converges across requests — and the shed-everything
+/// pathological server can't wedge a caller.
 pub const MAX_BUSY_RETRIES: usize = 4;
+
+/// Retry bounds when the cloud *does* hint a per-tenant backoff: the
+/// edge paces itself instead of marching edge-ward as fast as it can
+/// re-encode, so it tolerates more attempts — bounded by count and by
+/// total time slept so a hostile hint can't wedge a caller either.
+pub const MAX_PACED_RETRIES: usize = 16;
+const MAX_PACED_SLEEP_TOTAL: f64 = 1.0; // seconds per request
+const MAX_SINGLE_SLEEP: f64 = 0.25; // seconds per retry
 
 pub struct EdgeClient<'a> {
     session: Session<'a>,
     reader: BufReader<TcpStream>,
     writer: ThrottledWriter<TcpStream>,
     pub controller: ControlPlane,
+    /// Explicit tenant identity: appended to every request as a wire
+    /// trailer so the cloud scopes admission to this tenant across
+    /// all of its connections. `None` (the default) sends the exact
+    /// pre-tenant frames and the cloud falls back to a per-connection
+    /// tenant.
+    tenant: Option<u32>,
+    /// Reusable encoded tenant trailer (empty when `tenant` is None).
+    trailer: Vec<u8>,
     /// Reusable receive buffer (reply payloads).
     rx_buf: Vec<u8>,
     /// Reusable decoded logits.
@@ -87,7 +104,32 @@ impl<'a> EdgeClient<'a> {
         // (§Perf log — this showed up as bimodal latencies).
         let writer = ThrottledWriter::with_burst(stream, uplink, 2048);
         let session = Session::new(exe, model)?;
-        Ok(Self { session, reader, writer, controller, rx_buf: Vec::new(), logits: Vec::new() })
+        Ok(Self {
+            session,
+            reader,
+            writer,
+            controller,
+            tenant: None,
+            trailer: Vec::new(),
+            rx_buf: Vec::new(),
+            logits: Vec::new(),
+        })
+    }
+
+    /// Set (or clear) this edge's explicit tenant identity. With a
+    /// tenant, every request carries a wire trailer the cloud's fair
+    /// admission scopes budgets by; without one, frames are bit-
+    /// identical to the pre-tenant format.
+    pub fn set_tenant(&mut self, tenant: Option<u32>) {
+        self.tenant = tenant;
+        self.trailer.clear();
+        if let Some(t) = tenant {
+            proto::append_tenant_trailer(t, &mut self.trailer);
+        }
+    }
+
+    pub fn tenant(&self) -> Option<u32> {
+        self.tenant
     }
 
     /// Serve one request end-to-end; blocks for the cloud reply.
@@ -97,28 +139,33 @@ impl<'a> EdgeClient<'a> {
     pub fn infer(&mut self, sample: &Sample) -> Result<EdgeResult> {
         let mut bd = Breakdown::default();
         let mut sheds = 0usize;
+        let mut paced_sheds = 0usize;
+        let mut hintless_sheds = 0usize;
         let mut replanned = false;
+        let mut slept = 0.0f64;
         loop {
             let decision = self.controller.plan().decision;
             let req = self.session.encode_request(sample, decision, &mut bd)?;
 
             // Transmit through the paced socket and await the reply.
+            // With an explicit tenant, the trailer rides behind the
+            // payload (no staging copy); without one, these are the
+            // exact pre-tenant frames.
             let t2 = Instant::now();
             let sent = match req {
-                EncodedRequest::Features { .. } => proto::write_frame_raw(
+                EncodedRequest::Features { .. } => proto::write_frame_vec(
                     &mut self.writer,
                     proto::KIND_FEATURES,
-                    self.session.wire(),
+                    &[self.session.wire(), &self.trailer],
                 )?,
                 EncodedRequest::Image { hw } => {
                     let mut head = [0u8; 4];
                     head[..2].copy_from_slice(&self.session.model_id().to_le_bytes());
                     head[2..].copy_from_slice(&hw.to_le_bytes());
-                    proto::write_frame_parts(
+                    proto::write_frame_vec(
                         &mut self.writer,
                         proto::KIND_IMAGE,
-                        &head,
-                        self.session.wire(),
+                        &[&head, self.session.wire(), &self.trailer],
                     )?
                 }
             };
@@ -168,10 +215,38 @@ impl<'a> EdgeClient<'a> {
                     let before = decision;
                     self.controller.on_busy(&t);
                     replanned = true;
-                    if sheds > MAX_BUSY_RETRIES {
-                        return Err(anyhow!(
-                            "cloud shed the request {sheds} times (last plan {before:?})"
-                        ));
+                    // Tenant-scoped retry pacing: a backoff hint means
+                    // "your fair share refills in this long" — sleep
+                    // it off (bounded per retry and in total) and the
+                    // retry budget stretches accordingly. Hint-less
+                    // refusals keep the legacy fixed retry count with
+                    // no sleep, bit-identical to the pre-tenant edge.
+                    // The two budgets are tracked separately: a single
+                    // hint-less shed arriving after several paced ones
+                    // (the cloud's fairness flipping to the global
+                    // path mid-episode) must not abort a request whose
+                    // hint-less budget is untouched.
+                    let backoff = self.controller.advised_backoff();
+                    if backoff > 0.0 {
+                        paced_sheds += 1;
+                        if paced_sheds > MAX_PACED_RETRIES || slept >= MAX_PACED_SLEEP_TOTAL {
+                            return Err(anyhow!(
+                                "cloud shed the request {sheds} times despite pacing \
+                                 (slept {slept:.3}s, last plan {before:?})"
+                            ));
+                        }
+                        let nap = backoff
+                            .min(MAX_SINGLE_SLEEP)
+                            .min(MAX_PACED_SLEEP_TOTAL - slept);
+                        std::thread::sleep(std::time::Duration::from_secs_f64(nap));
+                        slept += nap;
+                    } else {
+                        hintless_sheds += 1;
+                        if hintless_sheds > MAX_BUSY_RETRIES {
+                            return Err(anyhow!(
+                                "cloud shed the request {sheds} times (last plan {before:?})"
+                            ));
+                        }
                     }
                     continue;
                 }
@@ -270,6 +345,17 @@ impl<'a> EdgeClient<'a> {
                 ),
                 ("cloud_queue_wait_ms", Json::num(load.queue_wait * 1e3)),
                 ("cloud_utilization", Json::num(load.utilization)),
+                (
+                    "tenant",
+                    match self.tenant {
+                        Some(t) => Json::num(t as f64),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "advised_backoff_ms",
+                    Json::num(self.controller.advised_backoff() * 1e3),
+                ),
             ]),
         );
         Ok(Json::Obj(obj).to_string())

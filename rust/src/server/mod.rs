@@ -3,7 +3,13 @@
 //!
 //! * [`proto`] — length-prefixed wire protocol shared by both ends;
 //!   raw zero-copy read/write over caller-owned buffers plus a typed
-//!   [`proto::Frame`] wrapper;
+//!   [`proto::Frame`] wrapper; requests may carry a tenant trailer and
+//!   telemetry blocks a per-tenant backoff hint;
+//! * [`admission`] — deficit-weighted per-tenant fair admission: when
+//!   the global budget trips, capacity is water-filled across active
+//!   tenants (idle tenants' slack redistributes) and enforced with
+//!   per-tenant token buckets, so one aggressive edge cannot starve
+//!   the polite ones;
 //! * [`cloud`] — the cloud server: a threadpool worker per connection,
 //!   pooled per-connection scratch; feature frames are dequantized
 //!   natively on the connection worker and finished through the
@@ -18,9 +24,11 @@
 //!   re-decouples as its bandwidth estimate *or* the cloud's reported
 //!   load drifts (`coordinator::control::ControlPlane`).
 
+pub mod admission;
 pub mod cloud;
 pub mod edge;
 pub mod proto;
 
+pub use admission::{FairAdmission, FairDecision};
 pub use cloud::{AdmissionConfig, CloudServer, ServeConfig};
 pub use edge::EdgeClient;

@@ -114,24 +114,30 @@ pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<RecvFrame
     Ok(RecvFrame::Data(kind[0]))
 }
 
-/// Write one frame whose payload is `head` followed by `body` (lets the
-/// Image path prepend its 4-byte header without assembling a payload).
-pub fn write_frame_parts(w: &mut impl Write, kind: u8, head: &[u8], body: &[u8]) -> Result<usize> {
-    let payload_len = head.len() + body.len();
+/// Write one frame whose payload is the concatenation of `parts` — no
+/// staging buffer, whatever the part count (the Image path prepends a
+/// 4-byte header, a tenant-scoped edge appends a trailer).
+pub fn write_frame_vec(w: &mut impl Write, kind: u8, parts: &[&[u8]]) -> Result<usize> {
+    let payload_len: usize = parts.iter().map(|p| p.len()).sum();
     if payload_len + 1 > MAX_FRAME {
         return Err(anyhow!("frame too large: {payload_len} bytes"));
     }
     let len = (payload_len + 1) as u32;
     w.write_all(&len.to_le_bytes())?;
     w.write_all(&[kind])?;
-    if !head.is_empty() {
-        w.write_all(head)?;
-    }
-    if !body.is_empty() {
-        w.write_all(body)?;
+    for p in parts {
+        if !p.is_empty() {
+            w.write_all(p)?;
+        }
     }
     w.flush()?;
     Ok(4 + 1 + payload_len)
+}
+
+/// Write one frame whose payload is `head` followed by `body` (lets the
+/// Image path prepend its 4-byte header without assembling a payload).
+pub fn write_frame_parts(w: &mut impl Write, kind: u8, head: &[u8], body: &[u8]) -> Result<usize> {
+    write_frame_vec(w, kind, &[head, body])
 }
 
 /// Write one frame from a borrowed payload (no clone, no staging Vec).
@@ -144,17 +150,71 @@ pub fn write_frame_raw(w: &mut impl Write, kind: u8, payload: &[u8]) -> Result<u
 /// telemetry by accident *and* fail to length-check.
 pub const TELEMETRY_MAGIC: u8 = 0xC7;
 
+/// Three-byte magic closing a tenant trailer ("J", "T", then a byte
+/// outside the printable range). The trailer is parsed from the *end*
+/// of a request payload, so it needs its own framing rather than an
+/// offset from the front: the Image payload's deflate stream is not
+/// self-delimiting, and the trailer must be findable without decoding
+/// the body it rides behind. Three magic bytes plus a validated length
+/// byte push the odds of a pre-tenant payload masquerading as a
+/// trailer below ~2⁻²⁴ per frame — and the Features path eliminates
+/// even that by cross-checking the codec header's declared length
+/// (`feature::frame_len`) before looking for a trailer at all.
+pub const TENANT_MAGIC: [u8; 3] = [0x4A, 0x54, 0xA9];
+
+/// Byte length of the current tenant-trailer field set (just the
+/// tenant id today; future writers may append fields and bump the
+/// declared length — readers take the prefix they know).
+const TENANT_FIELDS_LEN: usize = 4;
+
+/// Total wire bytes [`append_tenant_trailer`] adds.
+pub const TENANT_TRAILER_LEN: usize = TENANT_FIELDS_LEN + 4;
+
+/// Append a tenant trailer to a request payload:
+/// `[fields: len bytes][len u8][0x4A][0x54][0xA9]`, where the fields
+/// are currently `tenant u32 LE`. A request without a trailer is
+/// exactly the pre-tenant wire format, so a zero-config edge ships
+/// bit-identical frames; the cloud then scopes the request to an
+/// implicit per-connection tenant.
+pub fn append_tenant_trailer(tenant: u32, buf: &mut Vec<u8>) {
+    buf.extend_from_slice(&tenant.to_le_bytes());
+    buf.push(TENANT_FIELDS_LEN as u8);
+    buf.extend_from_slice(&TENANT_MAGIC);
+}
+
+/// Split a request payload into `(body_len, tenant)`: when the payload
+/// ends with a well-formed tenant trailer, `body_len` is the payload
+/// length without it and the tenant id is returned; otherwise the whole
+/// payload is body. New-format senders always append a real trailer,
+/// which — being parsed from the absolute end — wins unambiguously over
+/// any trailer-looking bytes inside the body.
+pub fn split_tenant_trailer(payload: &[u8]) -> (usize, Option<u32>) {
+    let n = payload.len();
+    if n < TENANT_TRAILER_LEN || payload[n - 3..] != TENANT_MAGIC {
+        return (n, None);
+    }
+    let len = payload[n - 4] as usize;
+    if len < TENANT_FIELDS_LEN || len + 4 > n {
+        return (n, None);
+    }
+    let fields = &payload[n - 4 - len..n - 4];
+    let tenant = u32::from_le_bytes(fields[..4].try_into().unwrap());
+    (n - 4 - len, Some(tenant))
+}
+
 /// Compact cloud-load block piggybacked on every `Logits` reply and
 /// carried as the whole payload of a `Busy` shed. This is the signal
 /// half of the §III-E closed loop: the edge fuses it with its own
 /// bandwidth estimate and re-solves the decoupling ILP when either
 /// drifts.
 ///
-/// Wire layout: `[0xC7][len u8][fields: len bytes]` where the current
-/// fields are `queue_wait_p95_ms f32 | utilization f32 |
-/// batch_occupancy f32 | flags u8 (bit 0 = shedding) | sheds u32`, all
-/// LE. The explicit length makes the block self-describing: readers
-/// skip fields they don't know, writers may append new ones, and a
+/// Wire layout: `[0xC7][len u8][fields: len bytes]` where the fields
+/// are `queue_wait_p95_ms f32 | utilization f32 | batch_occupancy f32
+/// | flags u8 (bit 0 = shedding) | sheds u32 | tenant_backoff_ms f32`,
+/// all LE. The explicit length makes the block self-describing:
+/// readers skip fields they don't know, accept blocks shorter than the
+/// current set (a pre-tenant writer's 17-byte block parses with the
+/// new fields at their defaults), writers may append new ones, and a
 /// logits frame without any block stays exactly the pre-telemetry
 /// format.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -172,28 +232,39 @@ pub struct CloudTelemetry {
     pub shedding: bool,
     /// Total requests shed since the server started.
     pub sheds: u32,
+    /// Per-tenant backoff hint, milliseconds: on a `Busy` shed, how
+    /// long *this* tenant should pace its next attempt (≈ the time
+    /// until its fair-share admission credit refills). 0 means no
+    /// hint — the legacy immediate-retry contract.
+    pub tenant_backoff_ms: f32,
 }
 
-/// Byte length of the current telemetry field set (excluding the
-/// 2-byte magic+len header).
+/// Byte length of the pre-tenant telemetry field set (excluding the
+/// 2-byte magic+len header) — the minimum a well-formed block carries.
 const TELEMETRY_FIELDS_LEN: usize = 4 + 4 + 4 + 1 + 4;
+
+/// Byte length of the full current field set (adds the per-tenant
+/// backoff hint).
+const TELEMETRY_FIELDS_LEN_FULL: usize = TELEMETRY_FIELDS_LEN + 4;
 
 impl CloudTelemetry {
     /// Append the block to `buf` (magic + length + fields).
     pub fn encode_into(&self, buf: &mut Vec<u8>) {
         buf.push(TELEMETRY_MAGIC);
-        buf.push(TELEMETRY_FIELDS_LEN as u8);
+        buf.push(TELEMETRY_FIELDS_LEN_FULL as u8);
         buf.extend_from_slice(&self.queue_wait_p95_ms.to_le_bytes());
         buf.extend_from_slice(&self.utilization.to_le_bytes());
         buf.extend_from_slice(&self.batch_occupancy.to_le_bytes());
         buf.push(self.shedding as u8);
         buf.extend_from_slice(&self.sheds.to_le_bytes());
+        buf.extend_from_slice(&self.tenant_backoff_ms.to_le_bytes());
     }
 
     /// Decode a block from the front of `bytes`; returns the telemetry
     /// and the total bytes consumed (header + declared length), or
     /// `None` when `bytes` does not start with a well-formed block.
-    /// Unknown trailing fields inside the declared length are skipped.
+    /// Unknown trailing fields inside the declared length are skipped;
+    /// fields a shorter (older) block omits decode to their defaults.
     pub fn decode(bytes: &[u8]) -> Option<(CloudTelemetry, usize)> {
         if bytes.len() < 2 || bytes[0] != TELEMETRY_MAGIC {
             return None;
@@ -211,6 +282,7 @@ impl CloudTelemetry {
                 batch_occupancy: f32_at(8),
                 shedding: f[12] != 0,
                 sheds: u32::from_le_bytes(f[13..17].try_into().unwrap()),
+                tenant_backoff_ms: if len >= TELEMETRY_FIELDS_LEN_FULL { f32_at(17) } else { 0.0 },
             },
             2 + len,
         ))
@@ -337,7 +409,7 @@ impl Frame {
             Frame::Probe(b) => write_frame_raw(w, KIND_PROBE, b),
             Frame::ProbeAck => write_frame_raw(w, KIND_PROBE_ACK, &[]),
             Frame::Busy(t) => {
-                let mut scratch = Vec::with_capacity(2 + TELEMETRY_FIELDS_LEN);
+                let mut scratch = Vec::with_capacity(2 + TELEMETRY_FIELDS_LEN_FULL);
                 t.encode_into(&mut scratch);
                 write_frame_raw(w, KIND_BUSY, &scratch)
             }
@@ -418,6 +490,7 @@ mod tests {
             batch_occupancy: 3.25,
             shedding: true,
             sheds: 42,
+            tenant_backoff_ms: 7.5,
         }
     }
 
@@ -457,6 +530,82 @@ mod tests {
         assert!(CloudTelemetry::decode(&buf[..buf.len() - 1]).is_none());
         assert!(CloudTelemetry::decode(&[0x00, 17]).is_none());
         assert!(CloudTelemetry::decode(&[]).is_none());
+    }
+
+    #[test]
+    fn pre_tenant_telemetry_block_still_decodes() {
+        // A 17-byte block is exactly what a pre-tenant writer emits:
+        // it must parse with the tenant fields at their defaults and
+        // consume exactly its declared length.
+        let t = telemetry();
+        let mut old = Vec::new();
+        old.push(TELEMETRY_MAGIC);
+        old.push(TELEMETRY_FIELDS_LEN as u8);
+        old.extend_from_slice(&t.queue_wait_p95_ms.to_le_bytes());
+        old.extend_from_slice(&t.utilization.to_le_bytes());
+        old.extend_from_slice(&t.batch_occupancy.to_le_bytes());
+        old.push(t.shedding as u8);
+        old.extend_from_slice(&t.sheds.to_le_bytes());
+        let (back, consumed) = CloudTelemetry::decode(&old).unwrap();
+        assert_eq!(consumed, old.len());
+        assert_eq!(back, CloudTelemetry { tenant_backoff_ms: 0.0, ..t });
+        // And the typed Busy path accepts the old block too.
+        let mut framed = Vec::new();
+        write_frame_raw(&mut framed, KIND_BUSY, &old).unwrap();
+        let f = Frame::read_from(&mut &framed[..]).unwrap();
+        assert_eq!(f, Frame::Busy(CloudTelemetry { tenant_backoff_ms: 0.0, ..t }));
+    }
+
+    #[test]
+    fn tenant_trailer_roundtrips_and_absent_is_pre_tenant() {
+        for (body, tenant) in
+            [(vec![], 0u32), (vec![1, 2, 3], 7), (vec![0xA9; 40], u32::MAX), (vec![0x4A], 1)]
+        {
+            let mut p = body.clone();
+            append_tenant_trailer(tenant, &mut p);
+            assert_eq!(split_tenant_trailer(&p), (body.len(), Some(tenant)), "body {body:?}");
+            // Stripping yields exactly the pre-tenant payload.
+            assert_eq!(&p[..body.len()], &body[..]);
+        }
+        // No trailer ⇒ the whole payload is body, no tenant.
+        assert_eq!(split_tenant_trailer(&[1, 2, 3, 4, 5, 6, 7, 8]), (8, None));
+        assert_eq!(split_tenant_trailer(&[]), (0, None));
+        // Magic present but the declared length is impossible: not a
+        // trailer (too-short payload, or len below the known fields).
+        assert_eq!(split_tenant_trailer(&[9, 0x4A, 0x54, 0xA9]), (4, None));
+        let mut bad = vec![0u8; 6];
+        bad.extend_from_slice(&[3, 0x4A, 0x54, 0xA9]); // len 3 < TENANT_FIELDS_LEN
+        assert_eq!(split_tenant_trailer(&bad), (10, None));
+        let mut deep = vec![0u8; 4];
+        deep.extend_from_slice(&[200, 0x4A, 0x54, 0xA9]); // len 200 > payload
+        assert_eq!(split_tenant_trailer(&deep), (8, None));
+        // A truncated magic is body, not a trailer.
+        let mut cut = vec![0u8; 5];
+        cut.extend_from_slice(&[4, 0x4A, 0xA9]);
+        assert_eq!(split_tenant_trailer(&cut), (8, None));
+    }
+
+    #[test]
+    fn prop_tenant_trailer_exact_on_random_payloads() {
+        use crate::util::prop;
+        prop::check(
+            "tenant trailer splits exactly on arbitrary bodies",
+            prop::pair(prop::bytes(0, 512), prop::u64_in(0, u32::MAX as u64)),
+            |(body, tenant)| {
+                let tenant = *tenant as u32;
+                let mut p = body.clone();
+                append_tenant_trailer(tenant, &mut p);
+                let (n, t) = split_tenant_trailer(&p);
+                // A future longer trailer must also strip exactly.
+                let mut p2 = body.clone();
+                p2.extend_from_slice(&tenant.to_le_bytes());
+                p2.extend_from_slice(&[0xEE, 0xFF]); // unknown future fields
+                p2.push(6);
+                p2.extend_from_slice(&TENANT_MAGIC);
+                let (n2, t2) = split_tenant_trailer(&p2);
+                n == body.len() && t == Some(tenant) && n2 == body.len() && t2 == Some(tenant)
+            },
+        );
     }
 
     #[test]

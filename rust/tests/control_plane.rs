@@ -141,6 +141,7 @@ fn busy_sheds_walk_the_cut_edgeward_monotonically() {
         batch_occupancy: 4.0,
         shedding: true,
         sheds: 1,
+        ..CloudTelemetry::default()
     };
     let mut depth = cut_depth(ctrl.plan().decision);
     for _ in 0..6 {
@@ -202,7 +203,7 @@ fn e2e_shed_retry_and_recovery_on_sim_backend() {
         utilization: 0.97,
         batch_occupancy: 4.0,
         shedding: false, // budgets must trip on the numbers alone
-        sheds: 0,
+        ..CloudTelemetry::default()
     }));
     let r = edge.infer(&sample(2)).unwrap();
     assert!(r.sheds >= 1, "the overloaded server never shed");

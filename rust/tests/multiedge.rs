@@ -1,0 +1,363 @@
+//! Multi-edge fairness, artifact-free: three tenants over real TCP on
+//! the sim backend, one flooding at many times the others' rate while
+//! the server is held over budget (injected overload). Asserts the
+//! fair-admission contract:
+//!
+//! 1. **Fairness on** — the polite tenants' shed rate stays below the
+//!    flooder's, each polite tenant retains ≥ 80% of its fair
+//!    throughput share (its own demand, since it is under an equal
+//!    split), flooder refusals carry a positive backoff hint, and the
+//!    admitted logits stay bit-identical to the serial reference even
+//!    with tenant trailers on the wire;
+//! 2. **Fairness off, or a single tenant** — the admission decisions
+//!    are exactly the global-budget path's: while over budget every
+//!    sheddable request is refused, with no backoff hint;
+//! 3. **Backoff pacing** — an `EdgeClient` that receives `Busy` frames
+//!    with a backoff hint sleeps the hint off between edge-ward
+//!    retries (tenant-scoped pacing) instead of hammering the server.
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jalad::compression::{feature, quant};
+use jalad::coordinator::{ControlPlane, DecisionEngine};
+use jalad::network::throttle::RateHandle;
+use jalad::runtime::sim::sim_manifest;
+use jalad::runtime::{Executor, ExecutorPool};
+use jalad::server::proto::{self, CloudTelemetry, RecvFrame};
+use jalad::server::{AdmissionConfig, CloudServer, EdgeClient, ServeConfig};
+use jalad::util::json::Json;
+
+const FANIN: usize = 8;
+
+/// One tenant-tagged Features wire frame (stage < N so it is
+/// sheddable) plus the serial-path logits it must produce when served.
+fn tagged_feature_case(
+    reference: &Executor,
+    stage: usize,
+    c: u8,
+    seed: usize,
+    tenant: Option<u32>,
+) -> (Vec<u8>, Vec<u32>) {
+    let m = reference.manifest().model("simnet").unwrap();
+    let elems = m.stages[stage - 1].out_elems;
+    let xs: Vec<f32> = (0..elems)
+        .map(|j| {
+            let h = ((j + 1) as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(seed as u64 * 0x2545_F491_4F6C_DD1D);
+            ((h >> 42) & 0x3FFF) as f32 / 1638.4 - 2.0
+        })
+        .collect();
+    let q = quant::quantize(&xs, c);
+    let mut wire = feature::encode(&q, stage as u16, 0);
+    if let Some(t) = tenant {
+        proto::append_tenant_trailer(t, &mut wire);
+    }
+    let mut tail = vec![quant::dequantize(&q)];
+    reference.run_tail_batch("simnet", stage + 1, &mut tail).unwrap();
+    (wire, tail[0].iter().map(|v| v.to_bits()).collect())
+}
+
+#[derive(Debug, Default, Clone)]
+struct ClientTally {
+    sent: usize,
+    admitted: usize,
+    sheds: usize,
+    /// Largest backoff hint seen on a Busy refusal, ms.
+    max_backoff_ms: f32,
+}
+
+/// Drive one paced client until `until`, counting outcomes only after
+/// `count_from` (the fairness governor needs a rate-estimation warmup).
+fn run_client(
+    addr: std::net::SocketAddr,
+    wire: &[u8],
+    expected_bits: &[u32],
+    gap: Duration,
+    count_from: Instant,
+    until: Instant,
+) -> ClientTally {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut rx = Vec::new();
+    let mut tally = ClientTally::default();
+    while Instant::now() < until {
+        proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, wire).unwrap();
+        let kind = match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+            RecvFrame::Data(k) => k,
+            other => panic!("unexpected reply {other:?}"),
+        };
+        let counted = Instant::now() >= count_from;
+        if counted {
+            tally.sent += 1;
+        }
+        match kind {
+            proto::KIND_LOGITS => {
+                let mut logits = Vec::new();
+                proto::parse_logits_into(&rx, &mut logits).unwrap();
+                let bits: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits, expected_bits, "admitted logits diverged from serial");
+                if counted {
+                    tally.admitted += 1;
+                }
+            }
+            proto::KIND_BUSY => {
+                let (t, _) = CloudTelemetry::decode(&rx).expect("busy telemetry");
+                if counted {
+                    tally.sheds += 1;
+                    tally.max_backoff_ms = tally.max_backoff_ms.max(t.tenant_backoff_ms);
+                }
+            }
+            k => panic!("unexpected reply kind {k}"),
+        }
+        std::thread::sleep(gap);
+    }
+    tally
+}
+
+fn overloaded_server(fair: bool, tenant_budget: f64) -> (Arc<CloudServer>, std::net::SocketAddr) {
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, FANIN);
+    let server = Arc::new(CloudServer::with_pool(
+        pool,
+        ServeConfig {
+            workers: 6,
+            admission: AdmissionConfig {
+                utilization_budget: 0.9,
+                refresh: Duration::ZERO,
+                fair,
+                tenant_budget,
+                ..AdmissionConfig::default()
+            },
+            ..ServeConfig::default()
+        },
+    ));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+    // Hold the server over budget for the whole scenario: who sheds is
+    // then purely the admission policy under test.
+    server.inject_load(Some(CloudTelemetry {
+        queue_wait_p95_ms: 50.0,
+        utilization: 0.97,
+        batch_occupancy: 4.0,
+        ..CloudTelemetry::default()
+    }));
+    (server, addr)
+}
+
+/// The headline scenario: tenants 1 and 2 polite (~50 req/s), tenant 3
+/// flooding (~10–20× that), global budget 180 req/s water-filled.
+#[test]
+fn flooding_tenant_cannot_starve_polite_tenants() {
+    let (server, addr) = overloaded_server(true, 180.0);
+    let reference = Executor::sim_with(sim_manifest(), FANIN);
+
+    let start = Instant::now();
+    let count_from = start + Duration::from_millis(700);
+    let until = start + Duration::from_millis(1700);
+    let handles: Vec<_> = (0..3)
+        .map(|t| {
+            let tenant = (t + 1) as u32;
+            let (wire, bits) = tagged_feature_case(&reference, 2, 4, 500 + t, Some(tenant));
+            // Polite: one request per 20 ms. Flooder: per 1 ms.
+            let gap = if t < 2 { Duration::from_millis(20) } else { Duration::from_millis(1) };
+            std::thread::spawn(move || run_client(addr, &wire, &bits, gap, count_from, until))
+        })
+        .collect();
+    let tallies: Vec<ClientTally> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let (polite_a, polite_b, flood) = (&tallies[0], &tallies[1], &tallies[2]);
+
+    let rate = |t: &ClientTally| t.sheds as f64 / t.sent.max(1) as f64;
+    for (name, p) in [("polite A", polite_a), ("polite B", polite_b)] {
+        assert!(p.sent > 20, "{name} barely ran: {p:?}");
+        // Fair throughput share retention: a tenant under an equal
+        // split's fair share must keep ≥ 80% of its own demand.
+        let retention = p.admitted as f64 / p.sent.max(1) as f64;
+        assert!(retention >= 0.8, "{name} retained only {retention:.2} of its share: {p:?}");
+        assert!(
+            rate(p) < rate(flood),
+            "{name} shed rate {:.2} is not below the flooder's {:.2}",
+            rate(p),
+            rate(flood)
+        );
+    }
+    assert!(
+        rate(flood) > 0.15,
+        "the flooder was never meaningfully paced (shed rate {:.2}, {flood:?})",
+        rate(flood)
+    );
+    assert!(
+        flood.max_backoff_ms > 0.0,
+        "fair sheds must carry a backoff hint: {flood:?}"
+    );
+
+    // The stats endpoint reports the same story per tenant.
+    let mut s = TcpStream::connect(addr).unwrap();
+    proto::Frame::Stats.write_to(&mut s).unwrap();
+    let proto::Frame::StatsReply(b) = proto::Frame::read_from(&mut s).unwrap() else {
+        panic!("no stats reply")
+    };
+    let j = Json::parse(&String::from_utf8_lossy(&b)).unwrap();
+    assert_eq!(j.get("fair_admission").and_then(|v| v.as_u64()), Some(1));
+    let tenants = j.get("tenants").and_then(|v| v.as_arr()).expect("tenants array");
+    let by_label = |label: &str| {
+        tenants
+            .iter()
+            .find(|t| t.get("tenant").and_then(|v| v.as_str()) == Some(label))
+            .unwrap_or_else(|| panic!("tenant {label} missing from stats: {j:?}"))
+    };
+    let flood_stats = by_label("t:3");
+    let polite_stats = by_label("t:1");
+    let num = |o: &Json, k: &str| o.get(k).and_then(|v| v.as_u64()).unwrap();
+    assert!(num(flood_stats, "sheds") > num(polite_stats, "sheds"));
+    assert!(num(polite_stats, "admitted") > 0);
+    assert!(num(polite_stats, "bytes_rx") > 0);
+
+    CloudServer::request_shutdown(addr);
+    drop(server);
+}
+
+/// With fairness off — or with every edge under one tenant — the
+/// decisions are the global-budget path's, exactly: over budget, every
+/// sheddable request is refused, hint-less.
+#[test]
+fn fairness_off_or_single_tenant_matches_global_budget_path() {
+    for (fair, tenants) in [(false, [1u32, 2, 3]), (true, [7, 7, 7])] {
+        let (server, addr) = overloaded_server(fair, 180.0);
+        let reference = Executor::sim_with(sim_manifest(), FANIN);
+        let start = Instant::now();
+        let until = start + Duration::from_millis(400);
+        let handles: Vec<_> = (0..3)
+            .map(|t| {
+                let (wire, bits) =
+                    tagged_feature_case(&reference, 2, 4, 600 + t, Some(tenants[t]));
+                let gap = if t < 2 { Duration::from_millis(20) } else { Duration::from_millis(2) };
+                std::thread::spawn(move || run_client(addr, &wire, &bits, gap, start, until))
+            })
+            .collect();
+        for (t, h) in handles.into_iter().enumerate() {
+            let tally = h.join().unwrap();
+            assert!(tally.sent > 0);
+            assert_eq!(
+                tally.admitted, 0,
+                "fair={fair} tenant set {tenants:?}: the global path sheds every \
+                 sheddable request while over budget, client {t} got {tally:?}"
+            );
+            assert_eq!(tally.sheds, tally.sent);
+            assert_eq!(
+                tally.max_backoff_ms, 0.0,
+                "global sheds are hint-less (client {t}: {tally:?})"
+            );
+        }
+        CloudServer::request_shutdown(addr);
+        drop(server);
+    }
+}
+
+/// A tenant-less (pre-tenant wire format) client against the fair
+/// server behaves exactly like today too: implicit per-connection
+/// tenants, same logits, trailer-less frames accepted unchanged.
+#[test]
+fn pre_tenant_frames_serve_unchanged_on_a_fair_server() {
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, FANIN);
+    let server = Arc::new(CloudServer::with_pool(
+        pool,
+        ServeConfig {
+            admission: AdmissionConfig { fair: true, ..AdmissionConfig::default() },
+            ..ServeConfig::default()
+        },
+    ));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+    let reference = Executor::sim_with(sim_manifest(), FANIN);
+    let (wire, bits) = tagged_feature_case(&reference, 2, 4, 900, None);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut rx = Vec::new();
+    for _ in 0..4 {
+        proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &wire).unwrap();
+        match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+            RecvFrame::Data(k) => assert_eq!(k, proto::KIND_LOGITS),
+            other => panic!("unexpected reply {other:?}"),
+        }
+        let mut logits = Vec::new();
+        proto::parse_logits_into(&rx, &mut logits).unwrap();
+        assert_eq!(logits.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(), bits);
+    }
+    // The implicit tenant shows up in per-tenant stats as conn:<id>.
+    let mut s = TcpStream::connect(addr).unwrap();
+    proto::Frame::Stats.write_to(&mut s).unwrap();
+    let proto::Frame::StatsReply(b) = proto::Frame::read_from(&mut s).unwrap() else {
+        panic!("no stats reply")
+    };
+    let text = String::from_utf8_lossy(&b);
+    assert!(text.contains("\"conn:"), "implicit tenant missing from stats: {text}");
+    CloudServer::request_shutdown(addr);
+}
+
+/// `EdgeClient` honors the per-tenant backoff hint: a mini cloud that
+/// refuses twice with a 40 ms hint forces the edge to sleep ≈80 ms
+/// inside one `infer()` before the third attempt is served.
+#[test]
+fn edge_client_paces_retries_by_backoff_hint() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut buf = Vec::new();
+        let mut data_seen = 0usize;
+        let mut scratch = Vec::new();
+        loop {
+            match proto::read_frame_into(&mut reader, &mut buf) {
+                Ok(RecvFrame::Data(k)) if k == proto::KIND_FEATURES || k == proto::KIND_IMAGE => {
+                    data_seen += 1;
+                    if data_seen <= 2 {
+                        let t = CloudTelemetry {
+                            utilization: 0.99,
+                            shedding: true,
+                            sheds: data_seen as u32,
+                            tenant_backoff_ms: 40.0,
+                            ..CloudTelemetry::default()
+                        };
+                        let mut payload = Vec::new();
+                        t.encode_into(&mut payload);
+                        proto::write_frame_raw(&mut writer, proto::KIND_BUSY, &payload).unwrap();
+                    } else {
+                        proto::write_logits_frame(&mut writer, &[0.25f32; 16], &mut scratch)
+                            .unwrap();
+                    }
+                }
+                Ok(RecvFrame::Data(_)) | Ok(RecvFrame::Malformed { .. }) => {}
+                _ => return data_seen,
+            }
+        }
+    });
+
+    let exe = Executor::sim_with(sim_manifest(), FANIN);
+    let ctrl = ControlPlane::new(DecisionEngine::sim_default(0.10).unwrap(), 50_000.0);
+    let uplink = RateHandle::new(1_000_000);
+    let mut edge = EdgeClient::connect(&exe, "simnet", addr, uplink, ctrl).unwrap();
+    edge.set_tenant(Some(42));
+    assert_eq!(edge.tenant(), Some(42));
+
+    let shape = sim_manifest().model("simnet").unwrap().input_shape.clone();
+    let sample = jalad::data::gen::Sample {
+        image: jalad::data::gen::sample_image_shaped(3, 77, &shape),
+        label: 3,
+    };
+    let t0 = Instant::now();
+    let r = edge.infer(&sample).unwrap();
+    let elapsed = t0.elapsed();
+    assert_eq!(r.sheds, 2, "both refusals must be absorbed in one infer()");
+    assert!(
+        elapsed >= Duration::from_millis(60),
+        "the edge never paced itself (elapsed {elapsed:?}, expected ≈80 ms of backoff)"
+    );
+    assert!(edge.controller.sheds_observed() >= 2);
+    drop(edge);
+    let served = server.join().unwrap();
+    assert_eq!(served, 3, "exactly two sheds and one served attempt");
+}

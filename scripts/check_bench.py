@@ -1,0 +1,196 @@
+#!/usr/bin/env python3
+"""Validate a bench JSON and gate its headline metrics against a baseline.
+
+Usage:
+    check_bench.py <bench> <json>                      # schema check only
+    check_bench.py <bench> <json> --compare <baseline> # + regression gate
+    check_bench.py <bench> <json> --update-baselines <baseline>
+
+<bench> is one of: pipeline | adaptive | multiedge.
+
+The schema checks replicate (and replace) the inline validators that
+used to live in scripts/verify.sh; verify.sh keeps a grep fallback for
+python3-less machines.
+
+The regression gate compares *tracked headline metrics* — chosen to be
+machine-normalized (speedup ratios, shed/retention fractions, p95
+ratios) rather than absolute latencies — and fails when one regresses
+more than REGRESSION_TOLERANCE against the committed baseline.
+`--update-baselines` rewrites the baseline file from the current run
+(for intentional changes; commit the result).
+"""
+
+import argparse
+import json
+import sys
+
+REGRESSION_TOLERANCE = 0.15
+
+
+# --------------------------------------------------------------------------
+# Per-bench schemas (raise AssertionError on malformed output).
+# --------------------------------------------------------------------------
+
+def check_pipeline(doc):
+    ab = doc.get("server_concurrency_ab")
+    assert isinstance(ab, list) and ab, "server_concurrency_ab missing/empty"
+    modes = {row.get("mode") for row in ab if "req_per_sec" in row}
+    assert {"serialized", "sharded_batched"} <= modes, f"missing A/B arms: {modes}"
+    assert "concurrency_speedup_8conn" in doc, "speedup field missing"
+    return f"speedup_8conn={doc['concurrency_speedup_8conn']:.2f}x"
+
+
+def check_adaptive(doc):
+    phases = doc.get("scenario")
+    assert isinstance(phases, list) and len(phases) == 3, "scenario must have 3 phases"
+    names = [p.get("phase") for p in phases]
+    assert names == ["baseline", "spike", "recovered"], f"phases: {names}"
+    for p in phases:
+        for k in ("requests", "p50_ms", "p95_ms", "final_cut_depth", "sheds"):
+            assert k in p, f"phase {p.get('phase')}: missing {k}"
+    assert doc.get("resolves", 0) >= 1, "the loop never re-solved"
+    assert doc.get("sheds_observed", 0) >= 1, "the spike never shed"
+    assert doc.get("shed_rate_spike", 0) > 0, "spike shed rate is zero"
+    base, spike, rec = phases
+    assert spike["final_cut_depth"] > base["final_cut_depth"], \
+        "spike did not move the cut edge-ward"
+    assert rec["final_cut_depth"] < spike["final_cut_depth"], \
+        "recovery did not move the cut back"
+    for k in ("p95_before_ms", "p95_spike_ms", "p95_after_ms"):
+        assert k in doc, f"missing {k}"
+    return (f"resolves={doc['resolves']}, shed_rate={doc['shed_rate_spike']:.2f}, "
+            f"depths {base['final_cut_depth']}->{spike['final_cut_depth']}"
+            f"->{rec['final_cut_depth']}")
+
+
+def check_multiedge(doc):
+    assert doc.get("tenants") == 3, "scenario is defined for 3 tenants"
+    for arm in ("fair", "global"):
+        a = doc.get(arm)
+        assert isinstance(a, dict), f"missing arm {arm}"
+        per_tenant = a.get("per_tenant")
+        assert isinstance(per_tenant, list) and len(per_tenant) == 3, \
+            f"{arm}: per_tenant must list 3 tenants"
+        for t in per_tenant:
+            for k in ("tenant", "role", "sent", "admitted", "sheds",
+                      "shed_rate", "throughput_share", "served_p95_ms"):
+                assert k in t, f"{arm}/{t.get('tenant')}: missing {k}"
+            assert t["sent"] > 0, f"{arm}/{t.get('tenant')}: client never ran"
+        for k in ("polite_retention", "polite_shed_rate", "flood_shed_rate",
+                  "total_admitted"):
+            assert k in a, f"{arm}: missing {k}"
+    fair = doc["fair"]
+    assert fair["polite_shed_rate"] < fair["flood_shed_rate"], \
+        "fair admission let polite tenants shed at the flooder's rate"
+    assert fair["polite_retention"] > 0.5, \
+        f"polite retention collapsed: {fair['polite_retention']:.2f}"
+    # The global arm is the pre-tenant path: over budget it sheds every
+    # sheddable request, whoever sent it.
+    assert doc["global"]["total_admitted"] == 0, \
+        "global-budget arm admitted work while over budget"
+    assert "fair_polite_retention" in doc and "fair_flood_shed_rate" in doc, \
+        "headline metrics missing"
+    return (f"polite retention={fair['polite_retention']:.2f}, "
+            f"flood shed={fair['flood_shed_rate']:.2f}, "
+            f"gain={doc.get('fairness_polite_throughput_gain', 0):.1f}x")
+
+
+# --------------------------------------------------------------------------
+# Tracked headline metrics: name -> (extractor, direction).
+# direction "higher" = regression when it drops; "lower" = when it grows.
+# All are ratios/fractions so a committed baseline is meaningful across
+# machines (absolute latencies are not).
+# --------------------------------------------------------------------------
+
+TRACKED = {
+    "pipeline": {
+        "concurrency_speedup_8conn":
+            (lambda d: float(d["concurrency_speedup_8conn"]), "higher"),
+    },
+    "adaptive": {
+        "spike_p95_ratio":
+            (lambda d: float(d["p95_spike_ms"]) / max(float(d["p95_before_ms"]), 1e-9),
+             "lower"),
+    },
+    "multiedge": {
+        "fair_polite_retention":
+            (lambda d: float(d["fair_polite_retention"]), "higher"),
+        "fair_flood_shed_rate":
+            (lambda d: float(d["fair_flood_shed_rate"]), "higher"),
+    },
+}
+
+SCHEMAS = {
+    "pipeline": check_pipeline,
+    "adaptive": check_adaptive,
+    "multiedge": check_multiedge,
+}
+
+
+def tracked_metrics(bench, doc):
+    return {name: fn(doc) for name, (fn, _) in TRACKED[bench].items()}
+
+
+def compare(bench, doc, baseline_path):
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    failures = []
+    for name, (fn, direction) in TRACKED[bench].items():
+        if name not in baseline:
+            print(f"check_bench: {name}: no baseline recorded, skipping gate")
+            continue
+        base, cur = float(baseline[name]), fn(doc)
+        if direction == "higher":
+            limit = base * (1.0 - REGRESSION_TOLERANCE)
+            regressed = cur < limit
+        else:
+            limit = base * (1.0 + REGRESSION_TOLERANCE)
+            regressed = cur > limit
+        status = "REGRESSED" if regressed else "ok"
+        print(f"check_bench: {name}: current={cur:.3f} baseline={base:.3f} "
+              f"limit={limit:.3f} ({direction} is better) .. {status}")
+        if regressed:
+            failures.append(name)
+    if failures:
+        print(f"check_bench: REGRESSION in {bench}: {', '.join(failures)} "
+              f"(>{REGRESSION_TOLERANCE:.0%} vs bench_baselines/; if intentional, "
+              f"rerun with --update-baselines and commit)", file=sys.stderr)
+        return False
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("bench", choices=sorted(SCHEMAS))
+    ap.add_argument("json_path")
+    ap.add_argument("--compare", metavar="BASELINE",
+                    help="fail when a tracked metric regresses vs this baseline")
+    ap.add_argument("--update-baselines", metavar="BASELINE",
+                    help="write the current tracked metrics to this baseline file")
+    args = ap.parse_args()
+
+    with open(args.json_path) as f:
+        doc = json.load(f)
+
+    try:
+        summary = SCHEMAS[args.bench](doc)
+    except AssertionError as e:
+        print(f"check_bench: {args.json_path} malformed: {e}", file=sys.stderr)
+        return 1
+    print(f"check_bench: {args.json_path} well-formed ({summary})")
+
+    if args.update_baselines:
+        with open(args.update_baselines, "w") as f:
+            json.dump(tracked_metrics(args.bench, doc), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"check_bench: wrote {args.update_baselines}")
+        return 0
+
+    if args.compare and not compare(args.bench, doc, args.compare):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,12 +3,14 @@
 #
 #   scripts/verify.sh           # full gate
 #   scripts/verify.sh --smoke   # + bench smoke: runs the serving
-#                               # concurrency A/B a few iterations and
-#                               # checks BENCH_pipeline.json is emitted
-#                               # and well-formed, then runs the
-#                               # control-plane closed-loop scenario and
-#                               # validates BENCH_adaptive.json (re-solve
-#                               # count, shed rate, per-phase p95)
+#                               # concurrency A/B, the control-plane
+#                               # closed-loop scenario and the
+#                               # multi-edge fairness scenario briefly;
+#                               # each BENCH_*.json is validated by
+#                               # scripts/check_bench.py and its
+#                               # headline metrics gated against
+#                               # bench_baselines/ (>15% regression
+#                               # fails).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,6 +21,12 @@ for arg in "$@"; do
     *) echo "verify.sh: unknown argument $arg" >&2; exit 2 ;;
   esac
 done
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "verify: rust toolchain not installed (cargo not found on PATH)." >&2
+  echo "verify: install via https://rustup.rs or your distro package, then re-run." >&2
+  exit 1
+fi
 
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== cargo fmt --check =="
@@ -36,81 +44,43 @@ cargo test -q
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
-if [ "$SMOKE" = 1 ]; then
-  echo "== bench smoke: pipeline_hotpath --smoke =="
-  rm -f rust/BENCH_pipeline.json BENCH_pipeline.json
-  cargo bench --bench pipeline_hotpath -- --smoke
+# Run one bench in smoke mode and validate/gate its JSON.
+#   smoke_bench <cargo-bench-name> <check_bench schema name> <json basename> <grep fallback terms...>
+smoke_bench() {
+  local bench="$1" schema="$2" json="$3"
+  shift 3
+  echo "== bench smoke: $bench --smoke =="
+  rm -f "rust/$json" "$json"
+  cargo bench --bench "$bench" -- --smoke
   # cargo bench runs with the package dir as cwd; accept either layout.
-  BENCH_JSON=""
-  for f in rust/BENCH_pipeline.json BENCH_pipeline.json; do
-    [ -f "$f" ] && BENCH_JSON="$f" && break
+  local found=""
+  for f in "rust/$json" "$json"; do
+    [ -f "$f" ] && found="$f" && break
   done
-  if [ -z "$BENCH_JSON" ]; then
-    echo "verify: BENCH_pipeline.json was not emitted" >&2
+  if [ -z "$found" ]; then
+    echo "verify: $json was not emitted" >&2
     exit 1
   fi
   if command -v python3 >/dev/null 2>&1; then
-    python3 - "$BENCH_JSON" <<'EOF'
-import json, sys
-doc = json.load(open(sys.argv[1]))
-ab = doc.get("server_concurrency_ab")
-assert isinstance(ab, list) and ab, "server_concurrency_ab missing/empty"
-modes = {row.get("mode") for row in ab if "req_per_sec" in row}
-assert {"serialized", "sharded_batched"} <= modes, f"missing A/B arms: {modes}"
-assert "concurrency_speedup_8conn" in doc, "speedup field missing"
-print(f"verify: {sys.argv[1]} well-formed "
-      f"(speedup_8conn={doc['concurrency_speedup_8conn']:.2f}x)")
-EOF
+    python3 scripts/check_bench.py "$schema" "$found" \
+      --compare "bench_baselines/$json"
   else
-    # No python3: at least require both A/B arms to appear in the JSON.
-    grep -q '"server_concurrency_ab"' "$BENCH_JSON"
-    grep -q '"serialized"' "$BENCH_JSON"
-    grep -q '"sharded_batched"' "$BENCH_JSON"
-    echo "verify: $BENCH_JSON emitted (python3 absent; grep-checked)"
+    # No python3: at least require the headline fields to appear.
+    for term in "$@"; do
+      grep -q "$term" "$found"
+    done
+    echo "verify: $found emitted (python3 absent; grep-checked, regression gate skipped)"
   fi
+}
 
-  echo "== bench smoke: control_plane --smoke =="
-  rm -f rust/BENCH_adaptive.json BENCH_adaptive.json
-  cargo bench --bench control_plane -- --smoke
-  ADAPTIVE_JSON=""
-  for f in rust/BENCH_adaptive.json BENCH_adaptive.json; do
-    [ -f "$f" ] && ADAPTIVE_JSON="$f" && break
-  done
-  if [ -z "$ADAPTIVE_JSON" ]; then
-    echo "verify: BENCH_adaptive.json was not emitted" >&2
-    exit 1
-  fi
-  if command -v python3 >/dev/null 2>&1; then
-    python3 - "$ADAPTIVE_JSON" <<'EOF'
-import json, sys
-doc = json.load(open(sys.argv[1]))
-phases = doc.get("scenario")
-assert isinstance(phases, list) and len(phases) == 3, "scenario must have 3 phases"
-names = [p.get("phase") for p in phases]
-assert names == ["baseline", "spike", "recovered"], f"phases: {names}"
-for p in phases:
-    for k in ("requests", "p50_ms", "p95_ms", "final_cut_depth", "sheds"):
-        assert k in p, f"phase {p.get('phase')}: missing {k}"
-assert doc.get("resolves", 0) >= 1, "the loop never re-solved"
-assert doc.get("sheds_observed", 0) >= 1, "the spike never shed"
-assert doc.get("shed_rate_spike", 0) > 0, "spike shed rate is zero"
-base, spike, rec = phases
-assert spike["final_cut_depth"] > base["final_cut_depth"], \
-    "spike did not move the cut edge-ward"
-assert rec["final_cut_depth"] < spike["final_cut_depth"], \
-    "recovery did not move the cut back"
-for k in ("p95_before_ms", "p95_spike_ms", "p95_after_ms"):
-    assert k in doc, f"missing {k}"
-print(f"verify: {sys.argv[1]} well-formed "
-      f"(resolves={doc['resolves']}, shed_rate={doc['shed_rate_spike']:.2f}, "
-      f"depths {base['final_cut_depth']}→{spike['final_cut_depth']}→{rec['final_cut_depth']})")
-EOF
-  else
-    grep -q '"scenario"' "$ADAPTIVE_JSON"
-    grep -q '"spike"' "$ADAPTIVE_JSON"
-    grep -q '"sheds_observed"' "$ADAPTIVE_JSON"
-    echo "verify: $ADAPTIVE_JSON emitted (python3 absent; grep-checked)"
-  fi
+if [ "$SMOKE" = 1 ]; then
+  smoke_bench pipeline_hotpath pipeline BENCH_pipeline.json \
+    '"server_concurrency_ab"' '"serialized"' '"sharded_batched"' \
+    '"concurrency_speedup_8conn"'
+  smoke_bench control_plane adaptive BENCH_adaptive.json \
+    '"scenario"' '"spike"' '"sheds_observed"'
+  smoke_bench multiedge multiedge BENCH_multiedge.json \
+    '"fair_polite_retention"' '"flood_shed_rate"' '"per_tenant"'
 fi
 
 echo "verify: OK"
