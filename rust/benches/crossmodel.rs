@@ -1,0 +1,241 @@
+//! Cross-model batch coalescing scenario bench — a heterogeneous fleet
+//! sharing one cloud, measured end-to-end on the sim backend (real
+//! loopback TCP, real feature frames, bit-exactness asserted inline).
+//!
+//! Eight connections each drive a *different* model whose cloud tail is
+//! signature-compatible with the others' (`sim_manifest_fleet`). The
+//! same traffic runs twice:
+//!
+//! 1. **xmodel_on** — signature-keyed coalescing: mixed-model tails
+//!    gather into shared batches;
+//! 2. **xmodel_off** — the pre-signature `(model, tail-start)` keying:
+//!    with one model per connection every request degenerates to
+//!    bypass, which is exactly the mixed-fleet regression this PR
+//!    removes.
+//!
+//! A third phase mixes two models whose tails match only up to a
+//! padded leading geometry (fleet0 vs padnet at stage 3) to exercise
+//! the pad-and-stack path and report its waste.
+//!
+//! Every reply is compared bit-for-bit against a solo-execution
+//! reference — the bench *is* a correctness test under load; a
+//! divergence panics. Emits `BENCH_crossmodel.json`
+//! (`mixed_speedup_8conn`, occupancy, pad-waste) — `scripts/verify.sh
+//! --smoke crossmodel` runs this briefly and gates the headline
+//! metrics against `bench_baselines/`.
+//!
+//! Run: `cargo bench --bench crossmodel` (`-- --smoke` for CI).
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use jalad::compression::{feature, quant};
+use jalad::runtime::sim::sim_manifest_fleet;
+use jalad::runtime::{BatchConfig, Executor, ExecutorPool};
+use jalad::server::proto::{self, RecvFrame};
+use jalad::server::{CloudServer, ServeConfig};
+use jalad::util::bench::Bencher;
+use jalad::util::json::Json;
+
+/// Fleet models sharing the exact stage-2 tail signature (padnet rides
+/// along in the manifest for the padded phase).
+const FLEET: usize = 8;
+const CONNS: usize = 8;
+
+struct Case {
+    wire: Vec<u8>,
+    expected_bits: Vec<u32>,
+}
+
+/// Wire frame + solo-execution expected logits for one (model, stage)
+/// feature request — the server must reproduce the solo bits whatever
+/// batch its tail lands in.
+fn case(reference: &Executor, model_id: u16, stage: usize, c: u8, seed: usize) -> Case {
+    let m = &reference.manifest().models[model_id as usize];
+    let elems = m.stages[stage - 1].out_elems;
+    let name = m.name.clone();
+    let xs: Vec<f32> = (0..elems)
+        .map(|j| {
+            let h = ((j + 1) as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(seed as u64 * 0x2545_F491_4F6C_DD1D);
+            ((h >> 42) & 0x3FFF) as f32 / 1638.4 - 2.0
+        })
+        .collect();
+    let q = quant::quantize(&xs, c);
+    let wire = feature::encode(&q, stage as u16, model_id);
+    let mut tail = vec![quant::dequantize(&q)];
+    reference.run_tail_batch(&name, stage + 1, &mut tail).unwrap();
+    Case { wire, expected_bits: tail[0].iter().map(|v| v.to_bits()).collect() }
+}
+
+/// Drive closed-loop clients (`cases[i]` per connection), asserting
+/// every reply's bits; returns requests/second.
+fn drive(addr: std::net::SocketAddr, cases: &[Case], per: usize) -> f64 {
+    let t0 = Instant::now();
+    let handles: Vec<_> = cases
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let wire = c.wire.clone();
+            let expected = c.expected_bits.clone();
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_nodelay(true).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut rx = Vec::new();
+                let mut logits = Vec::new();
+                for k in 0..per {
+                    proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &wire).unwrap();
+                    match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+                        RecvFrame::Data(kind) => assert_eq!(
+                            kind,
+                            proto::KIND_LOGITS,
+                            "conn {i} req {k}: unexpected reply kind"
+                        ),
+                        other => panic!("conn {i} req {k}: unexpected reply {other:?}"),
+                    }
+                    proto::parse_logits_into(&rx, &mut logits).unwrap();
+                    let bits: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(bits, expected, "conn {i} req {k}: logits != solo execution");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (cases.len() * per) as f64 / t0.elapsed().as_secs_f64()
+}
+
+struct ArmOut {
+    rps: f64,
+    batches: u64,
+    batched: u64,
+    bypassed: u64,
+    mean_occupancy: f64,
+    xmodel_batches: u64,
+    padded_samples: u64,
+    pad_waste: f64,
+    signature_classes: usize,
+}
+
+fn run_arm(xmodel: bool, cases: &[Case], per: usize, fanin: usize) -> ArmOut {
+    let pool = ExecutorPool::new_sim_with(sim_manifest_fleet(FLEET), 2, fanin);
+    let server = Arc::new(CloudServer::with_pool(
+        pool,
+        ServeConfig {
+            workers: CONNS,
+            batch: BatchConfig { max_batch: 4, xmodel, ..BatchConfig::default() },
+            ..ServeConfig::default()
+        },
+    ));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").expect("bind");
+    assert_eq!(server.batch_engine().xmodel_active(), xmodel, "probe must pass on sim");
+    let rps = drive(addr, cases, per);
+    let bm = server.batch_metrics();
+    let (batches, batched, bypassed, _) = bm.snapshot();
+    let out = ArmOut {
+        rps,
+        batches,
+        batched,
+        bypassed,
+        mean_occupancy: bm.mean_occupancy(),
+        xmodel_batches: bm.xmodel_batches.load(std::sync::atomic::Ordering::Relaxed),
+        padded_samples: bm.padded_samples.load(std::sync::atomic::Ordering::Relaxed),
+        pad_waste: bm.pad_waste(),
+        signature_classes: server.batch_engine().signature_stats().len(),
+    };
+    CloudServer::request_shutdown(addr);
+    out
+}
+
+fn arm_json(mode: &str, a: &ArmOut) -> Json {
+    Json::obj(vec![
+        ("mode", Json::str(mode)),
+        ("connections", Json::num(CONNS as f64)),
+        ("req_per_sec", Json::num(a.rps)),
+        ("batches", Json::num(a.batches as f64)),
+        ("batched_requests", Json::num(a.batched as f64)),
+        ("batch_bypassed", Json::num(a.bypassed as f64)),
+        ("mean_occupancy", Json::num(a.mean_occupancy)),
+        ("xmodel_batches", Json::num(a.xmodel_batches as f64)),
+        ("signature_classes", Json::num(a.signature_classes as f64)),
+    ])
+}
+
+fn main() {
+    let smoke = Bencher::smoke();
+    // Fan-in sets per-request tail compute; big enough that scheduling
+    // and tap amortization, not syscalls, dominate.
+    let fanin = if smoke { 64 } else { 192 };
+    let per = if smoke { 30 } else { 150 };
+
+    let reference = Executor::sim_with(sim_manifest_fleet(FLEET), fanin);
+
+    // Phase 1+2: one distinct fleet model per connection, stage-1 cut
+    // (tails from stage 2 share one exact signature class).
+    let mixed: Vec<Case> = (0..CONNS)
+        .map(|i| case(&reference, (i % FLEET) as u16, 1, [2u8, 4, 8][i % 3], 100 + i))
+        .collect();
+    let on = run_arm(true, &mixed, per, fanin);
+    let off = run_arm(false, &mixed, per, fanin);
+    let speedup = on.rps / off.rps.max(1e-9);
+    println!(
+        "crossmodel/mixed: xmodel_on {:.1} req/s (occ {:.2}, {} xmodel batches) vs \
+         xmodel_off {:.1} req/s ({} bypassed) -> {speedup:.2}x at {CONNS} connections",
+        on.rps, on.mean_occupancy, on.xmodel_batches, off.rps, off.bypassed
+    );
+
+    // Phase 3: padded suffix mix — fleet0 (2048-elem lead) and padnet
+    // (1152) at the stage-2 cut share only the padded stage-3 class.
+    let padnet = FLEET as u16; // appended after the fleet models
+    let padded: Vec<Case> = (0..CONNS)
+        .map(|i| {
+            let model = if i % 2 == 0 { 0 } else { padnet };
+            case(&reference, model, 2, 4, 200 + i)
+        })
+        .collect();
+    let pad = run_arm(true, &padded, per, fanin);
+    println!(
+        "crossmodel/padded: {:.1} req/s, {} padded samples, pad waste {:.3}",
+        pad.rps, pad.padded_samples, pad.pad_waste
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("crossmodel")),
+        ("fleet_models", Json::num(FLEET as f64)),
+        ("connections", Json::num(CONNS as f64)),
+        ("pad_waste_max", Json::num(BatchConfig::default().pad_waste_max)),
+        (
+            "arms",
+            Json::arr(vec![
+                arm_json("xmodel_on", &on),
+                arm_json("xmodel_off", &off),
+                arm_json("padded", &pad),
+            ]),
+        ),
+        ("mixed_speedup_8conn", Json::num(speedup)),
+        ("mixed_occupancy", Json::num(on.mean_occupancy)),
+        (
+            "bypass_fraction_off",
+            Json::num(off.bypassed as f64 / (off.batched + off.bypassed).max(1) as f64),
+        ),
+        (
+            "pad",
+            Json::obj(vec![
+                ("req_per_sec", Json::num(pad.rps)),
+                ("padded_samples", Json::num(pad.padded_samples as f64)),
+                ("pad_waste_fraction", Json::num(pad.pad_waste)),
+                ("xmodel_batches", Json::num(pad.xmodel_batches as f64)),
+            ]),
+        ),
+        // Every reply was bit-compared against solo execution inline; a
+        // divergence would have panicked before this line.
+        ("bit_identical", Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_crossmodel.json", doc.to_pretty()).expect("write BENCH_crossmodel.json");
+    println!("wrote BENCH_crossmodel.json (mixed speedup {speedup:.2}x)");
+}

@@ -41,6 +41,16 @@ fn main() {
     .opt("gather-us", "1000", "serve-cloud: micro-batch gather window ceiling, microseconds")
     .opt("gather-min-us", "100", "serve-cloud: adaptive gather window floor, microseconds")
     .opt(
+        "xmodel-batch",
+        "on",
+        "serve-cloud: coalesce signature-compatible tails across models (on|off)",
+    )
+    .opt(
+        "pad-waste-max",
+        "0.25",
+        "serve-cloud: max padded-waste fraction for mixed-geometry batches (0 = exact geometry only)",
+    )
+    .opt(
         "admission-queue-ms",
         "0",
         "serve-cloud: shed (Busy) when windowed queue-wait p95 exceeds this, ms (0 = off)",
@@ -146,6 +156,15 @@ fn run(command: &str, args: &Args) -> Result<()> {
                 ExecutorPool::new_pjrt(Manifest::load(&dir)?, shards)?
             };
             let admission_util = args.get_f64("admission-util");
+            let xmodel = match args.get("xmodel-batch") {
+                "on" | "true" | "1" => true,
+                "off" | "false" | "0" => false,
+                other => return Err(anyhow!("--xmodel-batch must be on|off, got {other:?}")),
+            };
+            let pad_waste_max = args.get_f64("pad-waste-max");
+            if !(0.0..=1.0).contains(&pad_waste_max) {
+                return Err(anyhow!("--pad-waste-max must be in 0..=1, got {pad_waste_max}"));
+            }
             let cfg = ServeConfig {
                 workers: args.get_usize("workers"),
                 batch: BatchConfig {
@@ -158,6 +177,9 @@ fn run(command: &str, args: &Args) -> Result<()> {
                     ),
                     adaptive_gather: !args.get_flag("no-adaptive-gather"),
                     enabled: !args.get_flag("no-batch"),
+                    xmodel,
+                    pad_waste_max,
+                    ..BatchConfig::default()
                 },
                 admission: jalad::server::AdmissionConfig {
                     queue_p95_budget: std::time::Duration::from_millis(
@@ -185,7 +207,13 @@ fn run(command: &str, args: &Args) -> Result<()> {
                 args.get_usize("max-batch"),
                 args.get_usize("gather-min-us"),
                 args.get_usize("gather-us"),
-                if args.get_flag("no-batch") { ", batching OFF" } else { "" },
+                if args.get_flag("no-batch") {
+                    ", batching OFF"
+                } else if !xmodel {
+                    ", cross-model batching OFF"
+                } else {
+                    ""
+                },
                 if admission_util > 0.0 || args.get_usize("admission-queue-ms") > 0 {
                     ", admission ON"
                 } else {

@@ -354,6 +354,21 @@ pub struct BatchMetrics {
     /// had already taken its share of the open batch's slots (the
     /// refused request starts its own batch instead of waiting).
     pub tenant_capped: AtomicU64,
+    /// Executed batches that mixed requests from ≥2 distinct models —
+    /// the cross-model (signature-keyed) coalescing actually earning
+    /// its keep on heterogeneous-fleet traffic.
+    pub xmodel_batches: AtomicU64,
+    /// Batch members whose leading activation was smaller than their
+    /// batch's padded leading geometry (pad-and-stack members).
+    pub padded_samples: AtomicU64,
+    /// Leading-geometry elements the pad-and-stack path stacked
+    /// (`B × max_lead`, summed over padded batches)…
+    pub pad_stacked_elems: AtomicU64,
+    /// …and the subset of those that were padding. The ratio is the
+    /// pad-waste gauge ([`BatchMetrics::pad_waste`]); the engine's
+    /// `pad_waste_max` budget bounds it per batch, so the cumulative
+    /// gauge can never exceed the budget either.
+    pub pad_wasted_elems: AtomicU64,
 }
 
 impl BatchMetrics {
@@ -377,6 +392,29 @@ impl BatchMetrics {
 
     pub fn record_tenant_cap(&self) {
         self.tenant_capped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_xmodel_batch(&self) {
+        self.xmodel_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account one padded batch: `padded` members rode a padded slot,
+    /// `wasted` of the `stacked` leading elements were padding.
+    pub fn record_padding(&self, padded: u64, wasted: u64, stacked: u64) {
+        self.padded_samples.fetch_add(padded, Ordering::Relaxed);
+        self.pad_wasted_elems.fetch_add(wasted, Ordering::Relaxed);
+        self.pad_stacked_elems.fetch_add(stacked, Ordering::Relaxed);
+    }
+
+    /// Cumulative pad-waste fraction over padded batches: wasted /
+    /// stacked leading elements (0 when nothing ever padded).
+    pub fn pad_waste(&self) -> f64 {
+        let stacked = self.pad_stacked_elems.load(Ordering::Relaxed);
+        if stacked == 0 {
+            0.0
+        } else {
+            self.pad_wasted_elems.load(Ordering::Relaxed) as f64 / stacked as f64
+        }
     }
 
     /// Mean requests per executed batch (0 when none ran).
@@ -582,6 +620,22 @@ mod tests {
         assert_eq!(m.gather_window_us.load(Ordering::Relaxed), 250);
         m.record_deadline_clamp();
         assert_eq!(m.deadline_clamped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn xmodel_and_padding_counters() {
+        let m = BatchMetrics::default();
+        assert_eq!(m.pad_waste(), 0.0, "no padding yet");
+        m.record_xmodel_batch();
+        // A 4-slot batch padded to 2048-elem leads holding two
+        // 1152-elem members: 2 padded samples, 1792 of 8192 wasted.
+        m.record_padding(2, 1792, 8192);
+        assert_eq!(m.xmodel_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(m.padded_samples.load(Ordering::Relaxed), 2);
+        assert!((m.pad_waste() - 1792.0 / 8192.0).abs() < 1e-12);
+        // A second padded batch accumulates into the same gauge.
+        m.record_padding(1, 896, 4096);
+        assert!((m.pad_waste() - (1792.0 + 896.0) / (8192.0 + 4096.0)).abs() < 1e-12);
     }
 
     #[test]

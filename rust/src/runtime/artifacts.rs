@@ -32,10 +32,77 @@ pub struct ModelManifest {
     pub stages: Vec<StageManifest>,
 }
 
+/// Structural geometry signature of a model tail `from..=N` — what the
+/// batch engine keys coalescing on instead of model identity.
+///
+/// Two tails with **equal** signatures compute the same function on the
+/// sim backend (each stage's kernel is fully determined by its index
+/// and flat in/out element counts), so requests from *different models*
+/// whose tails match stage-for-stage can gather into one batched
+/// program and still scatter per-sample bit-identical logits.
+/// [`TailSignature::padded`] erases the leading geometry: tails that
+/// match everywhere except the tail-start activation size share a
+/// *padded* class — they can stack into one batch whose leading storage
+/// is padded to the largest member (the pad-and-stack path), at a waste
+/// the engine budgets with `pad_waste_max`.
+///
+/// The stage **index** is part of every per-stage entry deliberately:
+/// a one-stage tail over `[1,16]` at depth 4 and a two-stage tail
+/// ending in the same `[1,16]` head are different functions, so equal
+/// out-shapes must never coalesce across tail-start depths.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TailSignature {
+    /// Element type of every activation buffer in the tail. Always
+    /// `"f32"` today; in the signature so a future mixed-precision
+    /// export can never coalesce across dtypes by accident.
+    pub dtype: &'static str,
+    /// Flat element count of the tail-start activation (the leading
+    /// geometry; what the pad-and-stack path pads).
+    pub lead_elems: usize,
+    /// One `(stage index, in_elems, out_elems)` triple per tail stage.
+    /// Empty for the identity tail (`from = N + 1`), whose geometry is
+    /// `lead_elems` alone.
+    pub stages: Vec<(usize, usize, usize)>,
+}
+
+impl TailSignature {
+    /// The signature with the leading geometry erased — the coalescing
+    /// class of the pad-and-stack path. Tails equal under this key
+    /// differ (at most) in how large their tail-start activation is;
+    /// everything downstream of the first stage is identical.
+    pub fn padded(&self) -> TailSignature {
+        let mut s = self.clone();
+        s.lead_elems = 0;
+        if let Some(first) = s.stages.first_mut() {
+            first.1 = 0;
+        }
+        s
+    }
+}
+
 impl ModelManifest {
     /// Number of decoupling points N.
     pub fn num_stages(&self) -> usize {
         self.stages.len()
+    }
+
+    /// The [`TailSignature`] of stages `from..=N` (1-based). `from`
+    /// past the last stage yields the identity tail: the activation
+    /// already is the logits, and its geometry is the class-count.
+    pub fn tail_signature(&self, from: usize) -> TailSignature {
+        let stages: Vec<(usize, usize, usize)> = self
+            .stages
+            .iter()
+            .skip(from.saturating_sub(1))
+            .map(|s| {
+                (s.index, s.in_shape.iter().product(), s.out_shape.iter().product())
+            })
+            .collect();
+        let lead_elems = stages
+            .first()
+            .map(|&(_, n_in, _)| n_in)
+            .unwrap_or_else(|| self.stages.last().map(|s| s.out_elems).unwrap_or(0));
+        TailSignature { dtype: "f32", lead_elems, stages }
     }
 
     /// Raw f32 feature bytes at stage `i` (1-based), the paper's
@@ -205,6 +272,33 @@ mod tests {
         assert_eq!(m.codecs.dequant[&vec![1usize, 4, 4, 8]], "dq.hlo.txt");
         assert_eq!(m.model_id("m"), Some(0));
         assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn tail_signatures_encode_depth_and_lead_geometry() {
+        let fleet = crate::runtime::sim::sim_manifest_fleet(3);
+        let a = fleet.model("fleet0").unwrap();
+        let b = fleet.model("fleet1").unwrap();
+        let pad = fleet.model("padnet").unwrap();
+        // Different edge halves, identical cloud tails: exact equality
+        // from stage 2 onward.
+        assert_ne!(a.tail_signature(1), b.tail_signature(1), "stage-1 geometries differ");
+        assert_eq!(a.tail_signature(2), b.tail_signature(2));
+        assert_eq!(a.tail_signature(4), b.tail_signature(4));
+        // Same out shape, different tail-start depth: never equal, even
+        // padded (the per-stage indices disagree).
+        assert_ne!(a.tail_signature(3), a.tail_signature(4));
+        assert_ne!(a.tail_signature(3).padded(), a.tail_signature(4).padded());
+        // padnet's stage-3 tail matches fleet0's only up to the padded
+        // leading geometry.
+        assert_ne!(a.tail_signature(3), pad.tail_signature(3));
+        assert_eq!(a.tail_signature(3).padded(), pad.tail_signature(3).padded());
+        assert!(a.tail_signature(3).lead_elems > pad.tail_signature(3).lead_elems);
+        // Identity tails: no stages, geometry = class count.
+        let id = a.tail_signature(a.num_stages() + 1);
+        assert!(id.stages.is_empty());
+        assert_eq!(id.lead_elems, a.num_classes);
+        assert_eq!(id, b.tail_signature(b.num_stages() + 1));
     }
 
     #[test]

@@ -2,14 +2,32 @@
 //!
 //! Under load, many connections ask the cloud for the same work shape:
 //! "finish `model` from stage `i`". The [`BatchEngine`] coalesces
-//! concurrent requests with the same `(model, tail-start)` key into one
-//! executor acquisition: the first arriver becomes the batch **leader**
-//! and waits a short gather window (or until the batch fills); later
-//! arrivers join as **followers** and park until the leader scatters
-//! their logits back. The quantization width `c` is *not* part of the
-//! key — dequantization already happened natively on the connection
-//! worker, so by the time a request reaches the engine it is plain
-//! f32 activations and requests of any `c` batch together.
+//! concurrent requests whose tails share a **geometry signature** into
+//! one executor acquisition: the first arriver becomes the batch
+//! **leader** and waits a short gather window (or until the batch
+//! fills); later arrivers join as **followers** and park until the
+//! leader scatters their logits back. The quantization width `c` is
+//! *not* part of the key — dequantization already happened natively on
+//! the connection worker, so by the time a request reaches the engine
+//! it is plain f32 activations and requests of any `c` batch together.
+//!
+//! Keying is **structural, not identity-based**: batches key on a
+//! [`TailSignature`] class (tail-start geometry, per-stage shapes,
+//! dtype) rather than on `(model, tail-start)`, so a mixed fleet whose
+//! heterogeneous models share a cloud tail still fills batches — the
+//! leader runs the gathered mixed-model set as one batched program
+//! ([`Executor::run_tail_batch_multi`](super::executor::Executor::run_tail_batch_multi)),
+//! per-sample bit-identical to solo execution, and scatters logits back
+//! per request. Tails whose signatures differ only in the tail-start
+//! activation size share a **padded** class: they pad-and-stack into
+//! one batch whose leading storage is sized to the largest member,
+//! guarded by [`BatchConfig::pad_waste_max`] so padding never exceeds
+//! the waste budget. Incompatible signatures (including equal
+//! out-shapes at different tail depths) never share a batch, and
+//! before cross-model coalescing activates the engine *probes* the
+//! pool ([`ExecutorPool::probe_xmodel_compat`]) — a backend that
+//! cannot reproduce solo bits in a mixed batch falls back to the
+//! pre-signature identity keying.
 //!
 //! Latency contract: a request that observes **no other request with
 //! the same key in flight** bypasses the queue entirely and runs
@@ -46,11 +64,13 @@
 //! parking forever.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::artifacts::{Manifest, TailSignature};
 use super::pool::ExecutorPool;
 use crate::metrics::BatchMetrics;
 
@@ -86,6 +106,21 @@ pub struct BatchConfig {
     /// single tenant in flight the cap is `max_batch`, so enabling it
     /// changes nothing until a second tenant shows up.
     pub tenant_fair: bool,
+    /// Coalesce shape-compatible tails **across models**: batches key
+    /// on a structural [`TailSignature`] class instead of `(model,
+    /// tail-start)` identity, so a heterogeneous fleet sharing a cloud
+    /// tail still fills batches. Activation additionally requires a
+    /// batch-capable pool and a passed compatibility probe
+    /// ([`ExecutorPool::probe_xmodel_compat`]); `false` restores the
+    /// identity keying exactly.
+    pub xmodel: bool,
+    /// Pad-and-stack waste budget for cross-model batches whose
+    /// members' *leading* geometry differs: a join is refused when the
+    /// batch's padded leading storage would exceed this wasted
+    /// fraction. `0.0` disables the padded path entirely — only
+    /// exact-geometry tails share a class, and a padded candidate
+    /// bypasses instead of batching.
+    pub pad_waste_max: f64,
 }
 
 impl Default for BatchConfig {
@@ -101,15 +136,167 @@ impl Default for BatchConfig {
             adaptive_gather: true,
             enabled: true,
             tenant_fair: false,
+            xmodel: true,
+            pad_waste_max: 0.25,
         }
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-struct BatchKey {
-    model: u16,
-    /// First tail stage (1-based); fixes the input geometry.
-    from: u16,
+/// Batch keys are interned signature-class ids (indices into the
+/// engine's [`SigTable`]).
+type ClassId = u32;
+
+/// One coalescing class: the `(model, tail-start)` routes whose tails
+/// share a signature, plus lifetime serving counters (the stats
+/// endpoint's per-signature observables).
+struct SigClass {
+    /// Member routes as `(model_id, from)`.
+    members: Vec<(u16, u16)>,
+    /// Each member's leading geometry, parallel to `members`.
+    leads: Vec<usize>,
+    /// Smallest / largest leading geometry among members — these differ
+    /// only for padded classes.
+    lead_min: usize,
+    lead_max: usize,
+    requests: AtomicU64,
+    batches: AtomicU64,
+}
+
+impl SigClass {
+    fn new() -> Self {
+        Self {
+            members: Vec::new(),
+            leads: Vec::new(),
+            lead_min: usize::MAX,
+            lead_max: 0,
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Route → class table, derived once from the pool's manifest.
+struct SigTable {
+    /// Class id per model per tail start (index `from - 1`; `from`
+    /// ranges `1..=N+1`, the last being the identity tail).
+    route: Vec<Vec<ClassId>>,
+    classes: Vec<SigClass>,
+}
+
+impl SigTable {
+    /// `xmodel = false` keys every route to its own class — the
+    /// pre-signature `(model, tail-start)` identity keying, bit for
+    /// bit. `padded` erases the leading geometry from the interning
+    /// key so pad-and-stack classes form.
+    fn build(manifest: &Manifest, xmodel: bool, padded: bool) -> Self {
+        let mut classes: Vec<SigClass> = Vec::new();
+        let mut interned: HashMap<TailSignature, ClassId> = HashMap::new();
+        let mut route = Vec::with_capacity(manifest.models.len());
+        for (mi, m) in manifest.models.iter().enumerate() {
+            let mut per_model = Vec::with_capacity(m.num_stages() + 1);
+            for from in 1..=m.num_stages() + 1 {
+                let sig = m.tail_signature(from);
+                let lead = sig.lead_elems;
+                let id = if xmodel {
+                    let key = if padded { sig.padded() } else { sig };
+                    *interned.entry(key).or_insert_with(|| {
+                        classes.push(SigClass::new());
+                        (classes.len() - 1) as ClassId
+                    })
+                } else {
+                    classes.push(SigClass::new());
+                    (classes.len() - 1) as ClassId
+                };
+                let c = &mut classes[id as usize];
+                c.members.push((mi as u16, from as u16));
+                c.leads.push(lead);
+                c.lead_min = c.lead_min.min(lead);
+                c.lead_max = c.lead_max.max(lead);
+                per_model.push(id);
+            }
+            route.push(per_model);
+        }
+        Self { route, classes }
+    }
+
+    fn class_of(&self, model: u16, from: usize) -> Option<ClassId> {
+        self.route.get(model as usize)?.get(from.checked_sub(1)?).copied()
+    }
+
+    /// Compatibility-probe pairs: one pair from an exact-geometry
+    /// class (uniform leads) *and* one pair with differing leads from
+    /// a padded class, when each exists — a backend must prove the
+    /// pad-and-stack execution path bit-exact too, not just the
+    /// uniform one. Empty for single-model manifests with no shared
+    /// class.
+    fn probe_pairs(&self) -> Vec<((u16, usize), (u16, usize))> {
+        let pair = |a: (u16, u16), b: (u16, u16)| ((a.0, a.1 as usize), (b.0, b.1 as usize));
+        let mut out = Vec::new();
+        if let Some(c) = self
+            .classes
+            .iter()
+            .find(|c| c.members.len() >= 2 && c.lead_min == c.lead_max)
+        {
+            out.push(pair(c.members[0], c.members[1]));
+        }
+        if let Some(c) = self.classes.iter().find(|c| c.lead_min != c.lead_max) {
+            if let Some(j) = c.leads.iter().position(|&l| l != c.leads[0]) {
+                out.push(pair(c.members[0], c.members[j]));
+            }
+        }
+        out
+    }
+}
+
+/// In-flight census of one signature class: per tenant, per leading
+/// geometry. The lead breakdown exists for the gathering leader's
+/// early-fire check — a member whose lead the pad-waste guard would
+/// refuse can never seat in the leader's batch, so the leader must not
+/// sleep out its window waiting for it.
+#[derive(Default)]
+struct ClassCensus {
+    /// tenant → (lead_elems → in-flight count).
+    tenants: HashMap<u64, HashMap<usize, usize>>,
+}
+
+impl ClassCensus {
+    fn add(&mut self, tenant: u64, lead: usize) {
+        *self.tenants.entry(tenant).or_default().entry(lead).or_insert(0) += 1;
+    }
+
+    fn remove(&mut self, tenant: u64, lead: usize) {
+        if let Some(leads) = self.tenants.get_mut(&tenant) {
+            if let Some(c) = leads.get_mut(&lead) {
+                *c -= 1;
+                if *c == 0 {
+                    leads.remove(&lead);
+                }
+            }
+            if leads.is_empty() {
+                self.tenants.remove(&tenant);
+            }
+        }
+    }
+
+    fn total(&self) -> usize {
+        self.tenants.values().map(|leads| leads.values().sum::<usize>()).sum()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+}
+
+/// Point-in-time serving counters of one signature class (stats
+/// endpoint row).
+#[derive(Debug, Clone)]
+pub struct SignatureStat {
+    /// Member routes rendered `model@from`.
+    pub members: Vec<String>,
+    pub lead_min: usize,
+    pub lead_max: usize,
+    pub requests: u64,
+    pub batches: u64,
 }
 
 #[derive(Default)]
@@ -118,6 +305,10 @@ struct CellState {
     /// Tenant of each member, parallel to `inputs` (the tenant-aware
     /// dequeue's per-batch share accounting).
     tenants: Vec<u64>,
+    /// `(model_id, from)` of each member, parallel to `inputs` — a
+    /// signature class may gather tails from several models, and the
+    /// leader needs every member's route to execute the mixed batch.
+    routes: Vec<(u16, u16)>,
     outputs: Vec<Option<Vec<f32>>>,
     /// No more joins (leader is draining, or the batch filled).
     closed: bool,
@@ -152,11 +343,17 @@ struct BatchCell {
 }
 
 impl BatchCell {
-    fn with_first(input: Vec<f32>, tenant: u64, deadline: Option<Instant>) -> Self {
+    fn with_first(
+        input: Vec<f32>,
+        tenant: u64,
+        route: (u16, u16),
+        deadline: Option<Instant>,
+    ) -> Self {
         Self {
             state: Mutex::new(CellState {
                 inputs: vec![input],
                 tenants: vec![tenant],
+                routes: vec![route],
                 min_deadline: deadline,
                 ..CellState::default()
             }),
@@ -193,16 +390,28 @@ pub struct BatchEngine {
     /// artifacts) gains nothing from coalescing and loses the shard
     /// parallelism, so the engine passes everything through.
     coalesce: bool,
-    /// Open/draining cells per key, arrival order. Usually one cell;
-    /// the tenant-aware dequeue may open a second when a tenant hits
-    /// its slot cap on the first (its leader runs concurrently).
-    pending: Mutex<HashMap<BatchKey, Vec<Arc<BatchCell>>>>,
-    /// Requests currently inside the engine, **per key and tenant** —
-    /// the sum is the zero-latency-bypass census (per-key so traffic
-    /// with no shape-mates never waits a gather window it cannot
-    /// fill), and the distinct-tenant count sets the per-batch slot
-    /// cap when `cfg.tenant_fair` is on.
-    key_counts: Mutex<HashMap<BatchKey, HashMap<u64, usize>>>,
+    /// Cross-model coalescing active: `cfg.xmodel`, gated on
+    /// `coalesce` and on the pool passing the signature compatibility
+    /// probe at construction. Off, the signature table degenerates to
+    /// one class per `(model, tail-start)` — identity keying, bit for
+    /// bit.
+    xmodel: bool,
+    /// Route → signature-class table: the batch key space.
+    sigs: SigTable,
+    /// Open/draining cells per signature class, arrival order. Usually
+    /// one cell; the tenant-aware dequeue or the pad-waste guard may
+    /// open a second when a join is refused on the first (its leader
+    /// runs concurrently).
+    pending: Mutex<HashMap<ClassId, Vec<Arc<BatchCell>>>>,
+    /// Requests currently inside the engine, **per signature class,
+    /// tenant and leading geometry** — the total is the
+    /// zero-latency-bypass census (per-class so traffic with no
+    /// signature-mates never waits a gather window it cannot fill),
+    /// the distinct-tenant count sets the per-batch slot cap when
+    /// `cfg.tenant_fair` is on, and the per-lead counts let a
+    /// gathering leader ignore members the pad-waste guard would
+    /// refuse anyway.
+    key_counts: Mutex<HashMap<ClassId, ClassCensus>>,
     /// Per-tenant queue-wait sink (the cloud server's registry);
     /// `None` outside a serving context.
     tenants: Option<Arc<crate::metrics::TenantRegistry>>,
@@ -231,16 +440,77 @@ impl BatchEngine {
         tenants: Option<Arc<crate::metrics::TenantRegistry>>,
     ) -> Arc<Self> {
         let coalesce = cfg.enabled && cfg.max_batch > 1 && pool.batch_capable();
+        let mut xmodel = cfg.xmodel && coalesce;
+        let mut sigs = SigTable::build(pool.manifest(), xmodel, cfg.pad_waste_max > 0.0);
+        if xmodel {
+            // Trust nothing about the backend's mixed-batch behavior:
+            // for every shared-class shape that could go live — an
+            // exact-geometry pair and, when padded classes exist, a
+            // differing-lead pair (the pad-and-stack path) — execute
+            // the probe and compare against solo bits. A failed (or
+            // erroring) probe falls back to identity keying — slower,
+            // never wrong. Single-model manifests have no shared class
+            // and skip the probe entirely.
+            for (a, b) in sigs.probe_pairs() {
+                if !pool.probe_xmodel_compat(a, b) {
+                    crate::log_warn!(
+                        "batch",
+                        "cross-model compatibility probe failed for {a:?} vs {b:?}; \
+                         falling back to identity batch keying"
+                    );
+                    xmodel = false;
+                    sigs = SigTable::build(pool.manifest(), false, false);
+                    break;
+                }
+            }
+        }
         Arc::new(Self {
             pool,
             cfg,
             coalesce,
+            xmodel,
+            sigs,
             pending: Mutex::new(HashMap::new()),
             key_counts: Mutex::new(HashMap::new()),
             tenants,
             occupancy_ewma: std::sync::atomic::AtomicU64::new(1.0f64.to_bits()),
             metrics: BatchMetrics::default(),
         })
+    }
+
+    /// Whether cross-model (signature-keyed) coalescing is live:
+    /// requires `cfg.xmodel`, a batch-capable pool, and a passed
+    /// compatibility probe.
+    pub fn xmodel_active(&self) -> bool {
+        self.xmodel
+    }
+
+    /// Per-signature-class serving counters, one row per class that
+    /// has seen traffic (the stats endpoint's per-signature report).
+    pub fn signature_stats(&self) -> Vec<SignatureStat> {
+        let models = &self.pool.manifest().models;
+        self.sigs
+            .classes
+            .iter()
+            .filter(|c| c.requests.load(Ordering::Relaxed) > 0)
+            .map(|c| SignatureStat {
+                members: c
+                    .members
+                    .iter()
+                    .map(|&(mi, from)| {
+                        let name = models
+                            .get(mi as usize)
+                            .map(|m| m.name.as_str())
+                            .unwrap_or("?");
+                        format!("{name}@{from}")
+                    })
+                    .collect(),
+                lead_min: c.lead_min,
+                lead_max: c.lead_max,
+                requests: c.requests.load(Ordering::Relaxed),
+                batches: c.batches.load(Ordering::Relaxed),
+            })
+            .collect()
     }
 
     /// Record one request's queue wait globally and, when a registry
@@ -343,29 +613,33 @@ impl BatchEngine {
             return self.run_single(affinity, model_id, from, input, tenant);
         }
 
-        let key = BatchKey { model: model_id, from: from as u16 };
-        // Per-key in-flight census, decremented on every exit path.
-        // The decrement also wakes any leader gathering on this key —
+        // Route → signature class. A route outside the manifest (bad
+        // model id, `from = 0`, absurd depth) has no class: run it
+        // single so the executor reports the precise error — exactly
+        // what the identity-keyed engine did.
+        let Some(key) = self.sigs.class_of(model_id, from) else {
+            self.metrics.record_bypass();
+            return self.run_single(affinity, model_id, from, input, tenant);
+        };
+        self.sigs.classes[key as usize].requests.fetch_add(1, Ordering::Relaxed);
+        // Per-class in-flight census, decremented on every exit path.
+        // The decrement also wakes any leader gathering on this class —
         // its early-fire check compares batch size against the census,
         // so a departing peer (e.g. a bypasser that was never going to
         // join) must not leave it sleeping out the window.
         struct KeyGuard<'a> {
             engine: &'a BatchEngine,
-            key: BatchKey,
+            key: ClassId,
             tenant: u64,
+            lead: usize,
         }
         impl Drop for KeyGuard<'_> {
             fn drop(&mut self) {
                 {
                     let mut counts = self.engine.key_counts.lock().unwrap();
-                    if let Some(per_tenant) = counts.get_mut(&self.key) {
-                        if let Some(c) = per_tenant.get_mut(&self.tenant) {
-                            *c -= 1;
-                            if *c == 0 {
-                                per_tenant.remove(&self.tenant);
-                            }
-                        }
-                        if per_tenant.is_empty() {
+                    if let Some(census) = counts.get_mut(&self.key) {
+                        census.remove(self.tenant, self.lead);
+                        if census.is_empty() {
                             counts.remove(&self.key);
                         }
                     }
@@ -390,14 +664,15 @@ impl BatchEngine {
                 }
             }
         }
+        let in_len = input.len();
         let peers = {
             let mut counts = self.key_counts.lock().unwrap();
-            let per_tenant = counts.entry(key).or_default();
-            let prev: usize = per_tenant.values().sum();
-            *per_tenant.entry(tenant).or_insert(0) += 1;
+            let census = counts.entry(key).or_default();
+            let prev = census.total();
+            census.add(tenant, in_len);
             prev
         };
-        let _guard = KeyGuard { engine: self, key, tenant };
+        let _guard = KeyGuard { engine: self, key, tenant, lead: in_len };
 
         // No shape-mate in flight: the direct path. No queue, no
         // window — single-request latency is untouched, and mixed-key
@@ -450,8 +725,18 @@ impl BatchEngine {
                     }
                     continue;
                 }
+                if !pad_admits(&st.inputs, in_len, self.cfg.pad_waste_max) {
+                    // Pad-and-stack guard: seating this member would
+                    // push the batch's padded leading storage past the
+                    // waste budget — gather in a fresh batch instead.
+                    // (Members of an exact-keyed class all share one
+                    // leading geometry, so the waste there is always
+                    // zero and this never trips.)
+                    continue;
+                }
                 st.inputs.push(input.take().expect("input consumed once"));
                 st.tenants.push(tenant);
+                st.routes.push((model_id, from as u16));
                 st.absorb_deadline(deadline);
                 let slot = st.inputs.len() - 1;
                 let full = st.inputs.len() >= self.cfg.max_batch;
@@ -480,6 +765,7 @@ impl BatchEngine {
                     let cell = Arc::new(BatchCell::with_first(
                         input.take().expect("input once"),
                         tenant,
+                        (model_id, from as u16),
                         deadline,
                     ));
                     cells.push(Arc::clone(&cell));
@@ -489,7 +775,7 @@ impl BatchEngine {
         };
 
         match role {
-            Role::Leader(cell) => self.lead(cell, key, model_id, from, enqueued, tenant),
+            Role::Leader(cell) => self.lead(cell, key, enqueued, tenant),
             Role::Follower(cell, slot) => self.follow(cell, slot, enqueued, tenant),
         }
     }
@@ -502,9 +788,7 @@ impl BatchEngine {
     fn lead(
         &self,
         cell: Arc<BatchCell>,
-        key: BatchKey,
-        model_id: u16,
-        from: usize,
+        key: ClassId,
         enqueued: Instant,
         tenant: u64,
     ) -> Result<Vec<f32>> {
@@ -519,16 +803,19 @@ impl BatchEngine {
                     break;
                 }
                 // Fire early once everyone who *could* join has: the
-                // per-key census counts every same-key request inside
-                // the engine (including this leader), capped per tenant
+                // per-class census counts every same-class request
+                // inside the engine (including this leader), excluding
+                // members whose leading geometry the pad-waste guard
+                // would refuse for *this* batch and capping per tenant
                 // when tenant fairness is on — a flooder's requests
-                // beyond its slot cap can never seat in this batch, so
-                // a leader must not sleep out the window waiting for
-                // them. (Cell→counts lock order; counts is never held
-                // while acquiring a cell, so this cannot deadlock. The
-                // check is a latency heuristic: firing "early" only
-                // means a late joiner starts its own batch.)
-                if st.inputs.len() >= self.key_seatable(&key) {
+                // beyond its slot cap, or a lead that cannot pad into
+                // this batch, can never seat here, so a leader must
+                // not sleep out the window waiting for them.
+                // (Cell→counts lock order; counts is never held while
+                // acquiring a cell, so this cannot deadlock. The check
+                // is a latency heuristic: firing "early" only means a
+                // late joiner starts its own batch.)
+                if st.inputs.len() >= self.key_seatable(&key, &st.inputs) {
                     break;
                 }
                 // Deadline-ordered firing: the most urgent member, not
@@ -560,18 +847,40 @@ impl BatchEngine {
                 }
             }
         }
-        let mut inputs = {
+        let (mut inputs, routes) = {
             let mut st = cell.state.lock().unwrap();
             st.closed = true;
             st.exec_start = Some(Instant::now());
-            std::mem::take(&mut st.inputs)
+            (std::mem::take(&mut st.inputs), std::mem::take(&mut st.routes))
         };
 
         let mut guard = FailBatchGuard { cell: Arc::clone(&cell), armed: true };
         self.metrics.record_batch(inputs.len());
+        self.sigs.classes[key as usize].batches.fetch_add(1, Ordering::Relaxed);
+        // Cross-model + padding observability: how often signature
+        // keying actually mixed models, and how much leading storage
+        // the pad-and-stack path wasted doing it.
+        if routes.iter().any(|r| r.0 != routes[0].0) {
+            self.metrics.record_xmodel_batch();
+        }
+        let max_lead = inputs.iter().map(Vec::len).max().unwrap_or(0);
+        let padded = inputs.iter().filter(|v| v.len() < max_lead).count();
+        if padded > 0 {
+            let sum_lead: usize = inputs.iter().map(Vec::len).sum();
+            let stacked = inputs.len() * max_lead;
+            self.metrics.record_padding(padded as u64, (stacked - sum_lead) as u64, stacked as u64);
+        }
         self.note_occupancy(inputs.len());
         self.record_queue_wait(tenant, enqueued.elapsed().as_secs_f64());
-        let result = self.run_batch(None, model_id, from, &mut inputs);
+        let result = if routes.iter().all(|&r| r == routes[0]) {
+            // Homogeneous batch: the single-model path.
+            let (model_id, from) = (routes[0].0, routes[0].1 as usize);
+            self.run_batch(None, model_id, from, &mut inputs)
+        } else {
+            let rs: Vec<(u16, usize)> =
+                routes.iter().map(|&(m, f)| (m, f as usize)).collect();
+            self.run_batch_multi(&rs, &mut inputs)
+        };
 
         let mut st = cell.state.lock().unwrap();
         let mine = match result {
@@ -621,25 +930,43 @@ impl BatchEngine {
             .ok_or_else(|| anyhow!("batch result slot {slot} missing"))
     }
 
-    /// Same-key requests currently inside the engine that could still
-    /// seat in one batch: the full census without tenant fairness, or
-    /// each tenant's count clamped to its slot cap with it — the bound
-    /// a gathering leader compares its batch size against. (Identical
-    /// to the raw census when `tenant_fair` is off or one tenant is in
-    /// flight, so the pre-tenant early-fire behavior is unchanged.)
-    fn key_seatable(&self, key: &BatchKey) -> usize {
+    /// Same-class requests currently inside the engine that could
+    /// still seat in the leader's batch (whose gathered inputs are
+    /// `gathered`): members whose leading geometry the pad-waste guard
+    /// would refuse are excluded, and with tenant fairness on each
+    /// tenant's count is clamped to its slot cap — the bound a
+    /// gathering leader compares its batch size against. (Identical to
+    /// the raw census for an exact-geometry class with `tenant_fair`
+    /// off, so the pre-signature early-fire behavior is unchanged.
+    /// Still a latency heuristic — composition changes as members
+    /// join — but one that never leaves a leader sleeping a window for
+    /// a member that structurally cannot seat.)
+    fn key_seatable(&self, key: &ClassId, gathered: &[Vec<f32>]) -> usize {
         let counts = self.key_counts.lock().unwrap();
-        let Some(m) = counts.get(key) else { return 0 };
-        if !self.cfg.tenant_fair {
-            return m.values().sum();
-        }
-        let cap = (self.cfg.max_batch / m.len().max(1)).max(1);
-        m.values().map(|&c| c.min(cap)).sum()
+        let Some(census) = counts.get(key) else { return 0 };
+        let budget = self.cfg.pad_waste_max;
+        let cap = if self.cfg.tenant_fair {
+            (self.cfg.max_batch / census.tenants.len().max(1)).max(1)
+        } else {
+            usize::MAX
+        };
+        census
+            .tenants
+            .values()
+            .map(|leads| {
+                let eligible: usize = leads
+                    .iter()
+                    .filter(|&(&lead, _)| pad_admits(gathered, lead, budget))
+                    .map(|(_, &c)| c)
+                    .sum();
+                eligible.min(cap)
+            })
+            .sum()
     }
 
-    /// Distinct tenants with same-key requests inside the engine.
-    fn key_tenants(&self, key: &BatchKey) -> usize {
-        self.key_counts.lock().unwrap().get(key).map(|m| m.len()).unwrap_or(0)
+    /// Distinct tenants with same-class requests inside the engine.
+    fn key_tenants(&self, key: &ClassId) -> usize {
+        self.key_counts.lock().unwrap().get(key).map(|c| c.tenants.len()).unwrap_or(0)
     }
 
     /// Bypass path: one request straight through its affinity shard.
@@ -695,6 +1022,29 @@ impl BatchEngine {
         };
         Ok(())
     }
+
+    /// One least-busy shard acquisition for a whole **mixed-model**
+    /// batch: the executor runs it as one batched program, per-sample
+    /// bit-identical to solo execution.
+    fn run_batch_multi(&self, routes: &[(u16, usize)], batch: &mut [Vec<f32>]) -> Result<()> {
+        self.pool.run_on_least_busy(|e| e.run_tail_batch_multi(routes, batch))?;
+        Ok(())
+    }
+}
+
+/// Would seating a member with `len` leading elements keep the batch's
+/// pad-and-stack waste within `budget`? Waste is the fraction of the
+/// stacked leading storage (`B × max_lead`) that is padding. Members
+/// of an exact-geometry batch all share one lead, so their waste is
+/// always 0 and any budget (including 0) admits them.
+fn pad_admits(members: &[Vec<f32>], len: usize, budget: f64) -> bool {
+    let max = members.iter().map(Vec::len).max().unwrap_or(0).max(len);
+    if max == 0 {
+        return true;
+    }
+    let stacked = (members.len() + 1) * max;
+    let sum: usize = members.iter().map(Vec::len).sum::<usize>() + len;
+    (stacked - sum) as f64 <= budget * stacked as f64 + 1e-9
 }
 
 #[cfg(test)]
@@ -888,6 +1238,7 @@ mod tests {
             min_gather: Duration::from_secs(2),
             adaptive_gather: false,
             enabled: true,
+            ..BatchConfig::default()
         });
         let m = sim_manifest();
         let elems = m.model("simnet").unwrap().stages[1].out_elems;

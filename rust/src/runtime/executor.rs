@@ -315,6 +315,107 @@ impl Executor {
         Ok(t0.elapsed().as_secs_f64())
     }
 
+    /// [`Executor::run_tail_batch`] over a **mixed-model** sample set:
+    /// `routes[i] = (model_id, from)` names sample `i`'s tail. The
+    /// engine only builds such batches from tails whose
+    /// [`TailSignature`](super::artifacts::TailSignature)s share a
+    /// coalescing class, but the executor re-validates structurally —
+    /// every lockstep position must agree on stage index and output
+    /// geometry (the stage kernel is fully determined by those plus the
+    /// sample's own input length) — and errors out rather than compute
+    /// something silently wrong.
+    ///
+    /// Sim backend: one batched program — stage-major over the whole
+    /// mixed batch, the padded kernel grouping samples by leading
+    /// length where geometries differ; per-sample results are
+    /// bit-identical to running each sample's own tail alone. PJRT:
+    /// batch-1 programs back to back per sample (the pool reports
+    /// `batch_capable = false` there, so the engine never builds mixed
+    /// batches for it; this arm exists for API completeness).
+    pub fn run_tail_batch_multi(
+        &self,
+        routes: &[(u16, usize)],
+        batch: &mut [Vec<f32>],
+    ) -> Result<f64> {
+        if routes.len() != batch.len() {
+            return Err(anyhow!(
+                "mixed tail batch: {} routes for {} samples",
+                routes.len(),
+                batch.len()
+            ));
+        }
+        let models = &self.manifest.models;
+        let by_id = |model_id: u16| {
+            models.get(model_id as usize).ok_or_else(|| anyhow!("bad model id {model_id}"))
+        };
+        let Some(&first) = routes.first() else { return Ok(0.0) };
+        if routes.iter().all(|&r| r == first) {
+            // Homogeneous batch: the single-model path (fast, and the
+            // same code lone requests take).
+            return self.run_tail_batch(&by_id(first.0)?.name, first.1, batch);
+        }
+        // Resolve each sample's remaining stage list and validate its
+        // own leading geometry before any compute.
+        let mut tails: Vec<&[super::artifacts::StageManifest]> = Vec::with_capacity(routes.len());
+        for (s, &(model_id, from)) in routes.iter().enumerate() {
+            let m = by_id(model_id)?;
+            if from == 0 {
+                return Err(anyhow!("tail stages are 1-based; from=0 is the whole model"));
+            }
+            let tail = if from > m.num_stages() { &[][..] } else { &m.stages[from - 1..] };
+            if let Some(stage) = tail.first() {
+                let expect: usize = stage.in_shape.iter().product();
+                if batch[s].len() != expect {
+                    return Err(anyhow!(
+                        "{} tail from stage {from}: sample {s} has {} elements, expected {expect}",
+                        m.name,
+                        batch[s].len()
+                    ));
+                }
+            }
+            tails.push(tail);
+        }
+        let steps = tails[0].len();
+        if tails.iter().any(|t| t.len() != steps) {
+            return Err(anyhow!("mixed tail batch: members have different tail depths"));
+        }
+        let t0 = Instant::now();
+        match &self.backend {
+            Backend::Sim(sim) => {
+                let mut stacked = self.tail_scratch.lock().unwrap();
+                for step in 0..steps {
+                    let rep = &tails[0][step];
+                    for (s, tail) in tails.iter().enumerate() {
+                        let stage = &tail[step];
+                        if stage.index != rep.index || stage.out_elems != rep.out_elems {
+                            return Err(anyhow!(
+                                "mixed tail batch: sample {s} stage {} ({} elems out) is not \
+                                 signature-compatible with stage {} ({} elems out)",
+                                stage.index,
+                                stage.out_elems,
+                                rep.index,
+                                rep.out_elems
+                            ));
+                        }
+                        // Keep cached_count parity with solo execution:
+                        // each member's own artifact counts as warmed.
+                        sim.warm(&stage.artifact);
+                    }
+                    sim.stage_batch_padded_into(rep, batch, &mut stacked)?;
+                }
+            }
+            Backend::Pjrt(_) => {
+                for (s, &(model_id, from)) in routes.iter().enumerate() {
+                    let mut one = [std::mem::take(&mut batch[s])];
+                    self.run_tail_batch(&by_id(model_id)?.name, from, &mut one)?;
+                    let [out] = one;
+                    batch[s] = out;
+                }
+            }
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
     /// Quantize via the exported L1 Pallas kernel: (x[n], c) → Quantized.
     pub fn run_quant(&self, x: &Tensor, c: u8) -> Result<Quantized> {
         let n = x.len();
@@ -460,6 +561,15 @@ impl SharedExecutor {
     /// One lock acquisition for a whole micro-batch tail.
     pub fn run_tail_batch(&self, model: &str, from: usize, batch: &mut [Vec<f32>]) -> Result<f64> {
         self.with(|e| e.run_tail_batch(model, from, batch))
+    }
+
+    /// One lock acquisition for a whole mixed-model micro-batch tail.
+    pub fn run_tail_batch_multi(
+        &self,
+        routes: &[(u16, usize)],
+        batch: &mut [Vec<f32>],
+    ) -> Result<f64> {
+        self.with(|e| e.run_tail_batch_multi(routes, batch))
     }
 
     pub fn manifest_clone(&self) -> Manifest {
@@ -640,6 +750,73 @@ mod tests {
                 "sample {bi} diverged from serial"
             );
         }
+    }
+
+    #[test]
+    fn sim_mixed_model_tail_batch_bit_identical_to_solo() {
+        use crate::runtime::sim::sim_manifest_fleet;
+        let exe = Executor::sim_with(sim_manifest_fleet(3), 16);
+        let mk = |model: &str, from: usize, seed: usize| -> Vec<f32> {
+            let m = exe.manifest().model(model).unwrap();
+            let n: usize = m.stages[from - 1].in_shape.iter().product();
+            (0..n)
+                .map(|i| {
+                    let h = ((i + seed * 4099) as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                    ((h >> 44) & 0xFFF) as f32 / 409.6
+                })
+                .collect()
+        };
+        // Exact-signature mix (fleet0/fleet1/fleet2 tails from stage 2)
+        // plus a padded mix (fleet0 vs padnet from stage 3).
+        for routes in [
+            vec![(0u16, 2usize), (1, 2), (2, 2), (0, 2)],
+            vec![(0u16, 3usize), (3, 3), (0, 3), (3, 3)],
+        ] {
+            let inputs: Vec<Vec<f32>> = routes
+                .iter()
+                .enumerate()
+                .map(|(s, &(mid, from))| {
+                    mk(&exe.manifest().models[mid as usize].name.clone(), from, s + 7)
+                })
+                .collect();
+            let solos: Vec<Vec<f32>> = routes
+                .iter()
+                .zip(&inputs)
+                .map(|(&(mid, from), x)| {
+                    let name = exe.manifest().models[mid as usize].name.clone();
+                    let mut one = vec![x.clone()];
+                    exe.run_tail_batch(&name, from, &mut one).unwrap();
+                    one.pop().unwrap()
+                })
+                .collect();
+            let mut batch = inputs;
+            exe.run_tail_batch_multi(&routes, &mut batch).unwrap();
+            for (s, (mixed, solo)) in batch.iter().zip(&solos).enumerate() {
+                assert_eq!(mixed.len(), solo.len());
+                assert!(
+                    mixed.iter().zip(solo).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "routes {routes:?} sample {s}: mixed batch diverged from solo"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sim_mixed_tail_batch_rejects_incompatible_structure() {
+        use crate::runtime::sim::sim_manifest_fleet;
+        let exe = Executor::sim_with(sim_manifest_fleet(2), 8);
+        let n3: usize = exe.manifest().models[0].stages[2].in_shape.iter().product();
+        let n4: usize = exe.manifest().models[0].stages[3].in_shape.iter().product();
+        // Different tail depths (same head out-shape!) must be refused.
+        let mut batch = vec![vec![0.1f32; n3], vec![0.1f32; n4]];
+        assert!(exe.run_tail_batch_multi(&[(0, 3), (0, 4)], &mut batch).is_err());
+        // Bad sample length against its own model's lead geometry.
+        let mut batch = vec![vec![0.1f32; n3], vec![0.1f32; 5]];
+        assert!(exe.run_tail_batch_multi(&[(0, 3), (1, 3)], &mut batch).is_err());
+        // Route/batch arity mismatch and bad model id.
+        let mut batch = vec![vec![0.1f32; n3]];
+        assert!(exe.run_tail_batch_multi(&[(0, 3), (1, 3)], &mut batch).is_err());
+        assert!(exe.run_tail_batch_multi(&[(42, 3)], &mut batch).is_err());
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //!   executors (one backend instance each), affinity-addressed, with
 //!   per-shard utilization counters;
 //! * [`batch`] — [`batch::BatchEngine`]: coalesces concurrent
-//!   same-shape tail requests into one executor acquisition behind a
+//!   signature-compatible tail requests (across models — keying is
+//!   structural, with a pad-and-stack path for matching suffixes
+//!   behind a waste budget) into one executor acquisition behind a
 //!   bounded gather window; lone requests bypass with zero added
 //!   latency.
 //!
@@ -29,8 +31,8 @@ pub mod pool;
 pub mod sim;
 pub mod tensor;
 
-pub use artifacts::{CodecArtifacts, Manifest, ModelManifest, StageManifest};
-pub use batch::{BatchConfig, BatchEngine};
+pub use artifacts::{CodecArtifacts, Manifest, ModelManifest, StageManifest, TailSignature};
+pub use batch::{BatchConfig, BatchEngine, SignatureStat};
 pub use executor::{Executor, SharedExecutor, StageOutput};
 pub use pool::{ExecutorPool, ShardStats};
 pub use tensor::Tensor;

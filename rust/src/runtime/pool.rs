@@ -171,6 +171,54 @@ impl ExecutorPool {
         out
     }
 
+    /// Per-signature compatibility probe: verify — by *executing*, not
+    /// assuming — that this pool's backend serves a mixed-model batch
+    /// of the two tail routes bit-identically to running each solo. The
+    /// batch engine calls this once at construction with a pair of
+    /// routes that share a signature class before enabling cross-model
+    /// coalescing; any error or bit divergence answers `false` and the
+    /// engine falls back to identity keying. Non-batch-capable pools
+    /// (PJRT on batch-1 artifacts) answer `false` without running —
+    /// they never coalesce at all.
+    ///
+    /// The probe runs on shard 0 and warms the artifacts it touches,
+    /// exactly as the first real request to each route would.
+    pub fn probe_xmodel_compat(&self, a: (u16, usize), b: (u16, usize)) -> bool {
+        if !self.batch_capable {
+            return false;
+        }
+        let lead = |route: (u16, usize)| -> Option<Vec<f32>> {
+            let m = self.manifest.models.get(route.0 as usize)?;
+            let n: usize = match m.stages.get(route.1.wrapping_sub(1)) {
+                Some(s) => s.in_shape.iter().product(),
+                None if route.1 == m.num_stages() + 1 => m.num_classes,
+                None => return None,
+            };
+            Some(
+                (0..n)
+                    .map(|i| {
+                        let h = ((i + 1 + route.0 as usize * 63) as u64)
+                            .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                        ((h >> 44) & 0xFFF) as f32 / 409.6 - 2.0
+                    })
+                    .collect(),
+            )
+        };
+        let (Some(xa), Some(xb)) = (lead(a), lead(b)) else { return false };
+        let solo = |route: (u16, usize), x: &[f32]| -> Option<Vec<f32>> {
+            let mut one = vec![x.to_vec()];
+            self.run_on(0, |e| e.run_tail_batch_multi(&[route], &mut one)).ok()?;
+            one.pop()
+        };
+        let (Some(sa), Some(sb)) = (solo(a, &xa), solo(b, &xb)) else { return false };
+        let mut mixed = vec![xa, xb];
+        if self.run_on(0, |e| e.run_tail_batch_multi(&[a, b], &mut mixed)).is_err() {
+            return false;
+        }
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+        bits(&mixed[0]) == bits(&sa) && bits(&mixed[1]) == bits(&sb)
+    }
+
     /// Callers currently holding or queued on any shard's lock — the
     /// "work in flight right now" signal (admission control uses it to
     /// distinguish a stalled window from an idle one).
@@ -282,6 +330,19 @@ mod tests {
         assert_eq!(total, 96);
         let used = stats.iter().filter(|s| s.runs > 0).count();
         assert!(used >= 2, "least-busy routing never left shard 0: {stats:?}");
+    }
+
+    #[test]
+    fn xmodel_probe_accepts_compatible_and_rejects_incompatible_routes() {
+        let pool = ExecutorPool::new_sim_with(crate::runtime::sim::sim_manifest_fleet(2), 2, 8);
+        // Shared-signature pair (exact) and padded pair: both verify.
+        assert!(pool.probe_xmodel_compat((0, 2), (1, 2)));
+        assert!(pool.probe_xmodel_compat((0, 3), (2, 3)), "padnet padded pair");
+        // Structurally incompatible (different depths) or bogus routes:
+        // the probe must answer false, not panic.
+        assert!(!pool.probe_xmodel_compat((0, 2), (0, 3)));
+        assert!(!pool.probe_xmodel_compat((0, 2), (99, 2)));
+        assert!(!pool.probe_xmodel_compat((0, 0), (1, 0)));
     }
 
     #[test]

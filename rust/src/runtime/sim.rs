@@ -187,6 +187,79 @@ impl SimBackend {
         Ok(())
     }
 
+    /// [`SimBackend::stage_batch_into`] over a batch whose samples may
+    /// have **heterogeneous lengths** — the padded leading geometry of
+    /// a cross-model batch, where every member shares the stage's index
+    /// and output geometry but tail-start activations differ in size.
+    /// Samples are grouped by length and each group runs the batched
+    /// kernel (taps depend on `n_in`, so amortization happens within a
+    /// length group); per-sample results stay **bit-identical** to
+    /// [`SimBackend::stage_into`] — each sample's accumulator sees the
+    /// same addends in the same `k` order, then the same finalize.
+    pub fn stage_batch_padded_into(
+        &self,
+        stage: &StageManifest,
+        samples: &mut [Vec<f32>],
+        stacked: &mut Vec<f32>,
+    ) -> Result<()> {
+        let b = samples.len();
+        if b == 0 {
+            return Ok(());
+        }
+        let n0 = samples[0].len();
+        if samples.iter().all(|s| s.len() == n0) {
+            // Uniform batch: the plain stacked kernel, no grouping cost.
+            return self.stage_batch_into(stage, samples, stacked);
+        }
+        let mut lens: Vec<usize> = samples.iter().map(Vec::len).collect();
+        lens.sort_unstable();
+        lens.dedup();
+        if lens.first() == Some(&0) {
+            return Err(anyhow!("sim padded batch stage {}: empty sample", stage.index));
+        }
+        // Member indices per length group, computed once — the tap
+        // loops below touch only their group's samples instead of
+        // re-testing every sample's length per tap.
+        let groups: Vec<(usize, Vec<usize>)> = lens
+            .iter()
+            .map(|&n_in| {
+                let idxs = samples
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.len() == n_in)
+                    .map(|(s, _)| s)
+                    .collect();
+                (n_in, idxs)
+            })
+            .collect();
+        let n_out: usize = stage.out_shape.iter().product();
+        self.warm(&stage.artifact);
+        let inv = 1.0f32 / self.fanin as f32;
+        let sseed = stage_seed(stage);
+        stacked.clear();
+        stacked.resize(b * n_out, 0.0);
+        for (n_in, members) in &groups {
+            for j in 0..n_out {
+                let jbase = out_base(sseed, j);
+                for k in 0..self.fanin {
+                    let (idx, w) = tap(jbase, k, *n_in);
+                    // One tap derivation per length group, one fused
+                    // multiply-add per member of that group.
+                    for &s in members {
+                        stacked[s * n_out + j] += samples[s][idx] * w;
+                    }
+                }
+            }
+        }
+        for (s, sample) in samples.iter_mut().enumerate() {
+            sample.clear();
+            sample.extend(
+                stacked[s * n_out..(s + 1) * n_out].iter().map(|&acc| finalize(acc, inv)),
+            );
+        }
+        Ok(())
+    }
+
     /// Run stages `from..=to` (1-based, inclusive) of `model` over a
     /// flat buffer, ping-ponging between `cur` and `tmp`; the final
     /// activation ends in `cur`. Both buffers keep their capacity, so a
@@ -220,47 +293,115 @@ impl SimBackend {
     }
 }
 
-/// A synthetic manifest for the sim backend: one model (`simnet`, four
-/// stages, 16 classes) with internally consistent shapes and codec
-/// entries for every stage geometry. Mirrors what `make artifacts`
-/// exports, minus the artifact files nobody reads in sim mode.
-pub fn sim_manifest() -> Manifest {
-    let specs: [(&str, Vec<usize>, Vec<usize>); 4] = [
-        ("conv1", vec![1, 16, 16, 3], vec![1, 16, 16, 16]),
-        ("conv2", vec![1, 16, 16, 16], vec![1, 8, 8, 32]),
-        ("conv3", vec![1, 8, 8, 32], vec![1, 4, 4, 64]),
-        ("head", vec![1, 4, 4, 64], vec![1, 16]),
-    ];
+/// Build one sim model from `(stage name, in_shape, out_shape)` specs,
+/// registering its quant/dequant codec geometries as it goes.
+fn sim_model(
+    name: &str,
+    specs: &[(&str, Vec<usize>, Vec<usize>)],
+    quant: &mut std::collections::BTreeMap<usize, String>,
+    dequant: &mut std::collections::BTreeMap<Vec<usize>, String>,
+) -> ModelManifest {
     let mut stages = Vec::new();
-    let mut quant = std::collections::BTreeMap::new();
-    let mut dequant = std::collections::BTreeMap::new();
-    for (idx, (name, in_shape, out_shape)) in specs.into_iter().enumerate() {
+    for (idx, (stage_name, in_shape, out_shape)) in specs.iter().enumerate() {
         let out_elems: usize = out_shape.iter().product();
         quant.insert(out_elems, format!("sim_quant_{out_elems}.hlo.txt"));
         dequant.insert(out_shape.clone(), format!("sim_dequant_{out_elems}.hlo.txt"));
         stages.push(StageManifest {
             index: idx,
-            name: name.to_string(),
-            artifact: format!("simnet_stage_{idx:02}.hlo.txt"),
-            in_shape,
-            out_shape,
+            name: stage_name.to_string(),
+            artifact: format!("{name}_stage_{idx:02}.hlo.txt"),
+            in_shape: in_shape.clone(),
+            out_shape: out_shape.clone(),
             out_elems,
             // Rough pseudo-conv cost, only consumed by the ILP tables.
             fmacs_scaled: (out_elems * DEFAULT_FANIN) as u64,
         });
     }
+    let num_classes: usize = specs.last().map(|(_, _, o)| o.iter().product()).unwrap_or(0);
+    ModelManifest {
+        name: name.to_string(),
+        input_shape: specs.first().map(|(_, i, _)| i.clone()).unwrap_or_default(),
+        num_classes,
+        full_artifact: format!("{name}_full.hlo.txt"),
+        stages,
+    }
+}
+
+/// A synthetic manifest for the sim backend: one model (`simnet`, four
+/// stages, 16 classes) with internally consistent shapes and codec
+/// entries for every stage geometry. Mirrors what `make artifacts`
+/// exports, minus the artifact files nobody reads in sim mode.
+pub fn sim_manifest() -> Manifest {
+    let mut quant = std::collections::BTreeMap::new();
+    let mut dequant = std::collections::BTreeMap::new();
+    let model = sim_model(
+        "simnet",
+        &[
+            ("conv1", vec![1, 16, 16, 3], vec![1, 16, 16, 16]),
+            ("conv2", vec![1, 16, 16, 16], vec![1, 8, 8, 32]),
+            ("conv3", vec![1, 8, 8, 32], vec![1, 4, 4, 64]),
+            ("head", vec![1, 4, 4, 64], vec![1, 16]),
+        ],
+        &mut quant,
+        &mut dequant,
+    );
     Manifest {
         dir: PathBuf::from("sim"),
         c_max: 8,
         num_classes: 16,
         source_digest: "sim-backend".to_string(),
-        models: vec![ModelManifest {
-            name: "simnet".to_string(),
-            input_shape: vec![1, 16, 16, 3],
-            num_classes: 16,
-            full_artifact: "simnet_full.hlo.txt".to_string(),
-            stages,
-        }],
+        models: vec![model],
+        codecs: CodecArtifacts { quant, dequant },
+    }
+}
+
+/// A synthetic **mixed-fleet** manifest: `fleet0..fleet{n-1}` are
+/// heterogeneous edge halves (each stage-1 input geometry differs)
+/// sharing one cloud tail — their tails from stage 2 onward have
+/// *identical* [`TailSignature`](super::artifacts::TailSignature)s, the
+/// cross-model coalescing case — plus `padnet`, whose stage-3 tail
+/// matches the fleet's only **up to the padded leading geometry**
+/// (smaller stage-3 input, same suffix): the pad-and-stack case.
+/// `fleet0` is geometry-identical to [`sim_manifest`]'s `simnet`, so
+/// solo references computed against either agree bit-for-bit.
+pub fn sim_manifest_fleet(n: usize) -> Manifest {
+    let mut quant = std::collections::BTreeMap::new();
+    let mut dequant = std::collections::BTreeMap::new();
+    // Per-model edge geometry: distinct stage-1 channel counts, all
+    // converging on the shared [1,16,16,16] stage-1 output.
+    let channels = [3usize, 4, 6, 8, 12, 16, 24, 32];
+    let mut models = Vec::new();
+    for i in 0..n.max(1) {
+        let ch = channels[i % channels.len()] + 32 * (i / channels.len());
+        models.push(sim_model(
+            &format!("fleet{i}"),
+            &[
+                ("conv1", vec![1, 16, 16, ch], vec![1, 16, 16, 16]),
+                ("conv2", vec![1, 16, 16, 16], vec![1, 8, 8, 32]),
+                ("conv3", vec![1, 8, 8, 32], vec![1, 4, 4, 64]),
+                ("head", vec![1, 4, 4, 64], vec![1, 16]),
+            ],
+            &mut quant,
+            &mut dequant,
+        ));
+    }
+    models.push(sim_model(
+        "padnet",
+        &[
+            ("conv1", vec![1, 16, 16, 3], vec![1, 16, 16, 8]),
+            ("conv2", vec![1, 16, 16, 8], vec![1, 6, 6, 32]),
+            ("conv3", vec![1, 6, 6, 32], vec![1, 4, 4, 64]),
+            ("head", vec![1, 4, 4, 64], vec![1, 16]),
+        ],
+        &mut quant,
+        &mut dequant,
+    ));
+    Manifest {
+        dir: PathBuf::from("sim"),
+        c_max: 8,
+        num_classes: 16,
+        source_digest: "sim-backend-fleet".to_string(),
+        models,
         codecs: CodecArtifacts { quant, dequant },
     }
 }
@@ -356,6 +497,89 @@ mod tests {
                 batched.iter().zip(single).all(|(a, b)| a.to_bits() == b.to_bits()),
                 "sample {s}: batched kernel diverged from single-sample kernel"
             );
+        }
+    }
+
+    #[test]
+    fn padded_batch_kernel_bit_identical_per_length_group() {
+        // One stage geometry, samples of two different input lengths
+        // (the padded leading geometry of a cross-model batch): every
+        // sample must match its own single-sample kernel bit-for-bit.
+        let m = sim_manifest_fleet(2);
+        let stage = &m.model("fleet0").unwrap().stages[2]; // conv3: 2048 -> 1024
+        let pad_stage = &m.model("padnet").unwrap().stages[2]; // conv3: 1152 -> 1024
+        assert_eq!(stage.out_elems, pad_stage.out_elems);
+        let sim = SimBackend::new(16);
+        let lens = [2048usize, 1152, 2048, 1152, 1152];
+        let mut samples: Vec<Vec<f32>> = lens
+            .iter()
+            .enumerate()
+            .map(|(s, &n)| {
+                (0..n)
+                    .map(|i| {
+                        let h = ((i + s * 131) as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                        ((h >> 40) & 0xFFFF) as f32 / 3276.8 - 5.0
+                    })
+                    .collect()
+            })
+            .collect();
+        let singles: Vec<Vec<f32>> = samples
+            .iter()
+            .map(|x| {
+                let mut out = Vec::new();
+                sim.stage_into(stage, x, &mut out).unwrap();
+                out
+            })
+            .collect();
+        let mut stacked = Vec::new();
+        sim.stage_batch_padded_into(stage, &mut samples, &mut stacked).unwrap();
+        for (s, (batched, single)) in samples.iter().zip(&singles).enumerate() {
+            assert_eq!(batched.len(), single.len());
+            assert!(
+                batched.iter().zip(single).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "sample {s} (len {}): padded kernel diverged from single-sample kernel",
+                lens[s]
+            );
+        }
+        // Uniform batches route through the plain stacked kernel and
+        // agree with it exactly.
+        let mut uniform: Vec<Vec<f32>> = (0..3).map(|_| samples_seed(stage, 9)).collect();
+        let mut uniform2 = uniform.clone();
+        let mut st2 = Vec::new();
+        sim.stage_batch_padded_into(stage, &mut uniform, &mut stacked).unwrap();
+        sim.stage_batch_into(stage, &mut uniform2, &mut st2).unwrap();
+        assert_eq!(uniform, uniform2);
+    }
+
+    fn samples_seed(stage: &StageManifest, seed: usize) -> Vec<f32> {
+        let n: usize = stage.in_shape.iter().product();
+        (0..n)
+            .map(|i| {
+                let h = ((i + seed * 977) as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                ((h >> 44) & 0xFFF) as f32 / 409.6
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fleet_manifest_shapes_chain_and_share_tails() {
+        let m = sim_manifest_fleet(4);
+        assert_eq!(m.models.len(), 5, "4 fleet models + padnet");
+        for model in &m.models {
+            assert_eq!(model.input_shape, model.stages[0].in_shape);
+            for w in model.stages.windows(2) {
+                assert_eq!(w[0].out_shape, w[1].in_shape, "model {}", model.name);
+            }
+            for s in &model.stages {
+                assert!(m.codecs.quant.contains_key(&s.out_elems));
+                assert!(m.codecs.dequant.contains_key(&s.out_shape));
+            }
+        }
+        // fleet0 is geometry-identical to the single-model simnet.
+        let simnet = sim_manifest();
+        let (a, b) = (m.model("fleet0").unwrap(), simnet.model("simnet").unwrap());
+        for (sa, sb) in a.stages.iter().zip(&b.stages) {
+            assert_eq!((sa.in_shape.clone(), sa.out_shape.clone()), (sb.in_shape.clone(), sb.out_shape.clone()));
         }
     }
 

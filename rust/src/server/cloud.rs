@@ -19,8 +19,10 @@
 //! control traffic (Stats/Shutdown) can never starve behind data
 //! connections. Compute is an [`ExecutorPool`] of independently-locked
 //! executors — the connection id is the shard affinity — and
-//! concurrent same-shape tails coalesce in the [`BatchEngine`] (one
-//! lock acquisition per batch; lone requests bypass the queue).
+//! concurrent signature-compatible tails — across models, when their
+//! tail geometries match (pad-and-stack for matching suffixes, within
+//! a waste budget) — coalesce in the [`BatchEngine`] (one lock
+//! acquisition per batch; lone requests bypass the queue).
 //! Counters are atomics with an explicit taxonomy (data requests vs
 //! control frames vs malformed input — see [`Counters`]); the
 //! service-time and queue-wait histograms sit behind their own
@@ -462,6 +464,12 @@ impl CloudServer {
         self.engine.pool()
     }
 
+    /// The batch engine itself (cross-model/signature observables —
+    /// `xmodel_active`, per-signature stats — for benches and tests).
+    pub fn batch_engine(&self) -> &Arc<BatchEngine> {
+        &self.engine
+    }
+
     /// The current cloud telemetry snapshot (what the next reply will
     /// piggyback).
     pub fn telemetry(&self) -> CloudTelemetry {
@@ -840,6 +848,43 @@ impl CloudServer {
             (
                 "deadline_clamped",
                 Json::num(bm.deadline_clamped.load(std::sync::atomic::Ordering::Relaxed) as f64),
+            ),
+            // Cross-model batching observables: whether signature
+            // keying is live, how often batches actually mixed models,
+            // what the pad-and-stack path wasted, and the per-signature
+            // route census (classes that saw traffic only).
+            ("xmodel_active", Json::num(self.engine.xmodel_active() as u8 as f64)),
+            (
+                "xmodel_batches",
+                Json::num(bm.xmodel_batches.load(std::sync::atomic::Ordering::Relaxed) as f64),
+            ),
+            (
+                "padded_samples",
+                Json::num(bm.padded_samples.load(std::sync::atomic::Ordering::Relaxed) as f64),
+            ),
+            ("pad_waste", Json::num(bm.pad_waste())),
+            (
+                "signatures",
+                Json::arr(
+                    self.engine
+                        .signature_stats()
+                        .into_iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                (
+                                    "members",
+                                    Json::arr(
+                                        s.members.iter().map(|m| Json::str(m)).collect(),
+                                    ),
+                                ),
+                                ("lead_min", Json::num(s.lead_min as f64)),
+                                ("lead_max", Json::num(s.lead_max as f64)),
+                                ("requests", Json::num(s.requests as f64)),
+                                ("batches", Json::num(s.batches as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
             ),
             // Multi-edge fairness observables: per-tenant admission
             // outcomes + the tenant-aware dequeue's cap events.

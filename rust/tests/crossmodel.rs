@@ -1,0 +1,350 @@
+//! Cross-model batch coalescing, artifact-free: a mixed fleet of sim
+//! models sharing one cloud tail, driven concurrently through the
+//! [`BatchEngine`]. Asserts the signature-keying contract end to end:
+//!
+//! 1. **Bit identity** — whatever mixes into a batch, every request's
+//!    logits are bit-for-bit equal to running its own tail alone;
+//! 2. **Signature edge cases** — equal out-shapes at different
+//!    tail-start depths never coalesce; padded candidates bypass when
+//!    the waste budget is 0; tenant caps hold across models sharing a
+//!    signature;
+//! 3. **Exactness of the fallback** — `xmodel: false` restores the
+//!    identity keying (mixed traffic degenerates to bypass).
+
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use jalad::runtime::sim::sim_manifest_fleet;
+use jalad::runtime::{BatchConfig, BatchEngine, Executor, ExecutorPool};
+
+const FANIN: usize = 8;
+
+fn engine(shards: usize, cfg: BatchConfig) -> Arc<BatchEngine> {
+    BatchEngine::new(ExecutorPool::new_sim_with(sim_manifest_fleet(4), shards, FANIN), cfg)
+}
+
+/// Deterministic lead activation for `model`'s tail starting at `from`.
+fn activation(manifest: &jalad::runtime::Manifest, model_id: u16, from: usize, seed: usize) -> Vec<f32> {
+    let m = &manifest.models[model_id as usize];
+    let elems: usize = m.stages[from - 1].in_shape.iter().product();
+    (0..elems)
+        .map(|i| {
+            let h = ((i + 1 + seed * 7919) as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            ((h >> 44) & 0xFFF) as f32 / 409.6 - 2.0
+        })
+        .collect()
+}
+
+/// Solo reference: the same tail on a lone executor, no engine.
+fn solo(model_id: u16, from: usize, input: &[f32]) -> Vec<f32> {
+    let exe = Executor::sim_with(sim_manifest_fleet(4), FANIN);
+    let name = exe.manifest().models[model_id as usize].name.clone();
+    let mut one = vec![input.to_vec()];
+    exe.run_tail_batch(&name, from, &mut one).unwrap();
+    one.pop().unwrap()
+}
+
+fn assert_bits(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    assert!(
+        got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "{ctx}: logits diverged from solo execution"
+    );
+}
+
+#[test]
+fn mixed_models_coalesce_bit_identical() {
+    // 8 threads, 4 distinct models, all cutting at stage 1 (tails from
+    // stage 2 share an exact signature). With a long fixed window and a
+    // barrier start, cross-model batches must form — and every reply
+    // must still match its own solo run exactly. Batch formation is
+    // timing-dependent (a lone first arrival legitimately bypasses), so
+    // the cross-model observation retries a few bursts; the bit
+    // identity holds on every attempt.
+    let manifest = sim_manifest_fleet(4);
+    let mut xmodel_total = 0u64;
+    for _attempt in 0..3 {
+        let eng = engine(4, BatchConfig {
+            max_batch: 4,
+            gather_window: Duration::from_millis(50),
+            min_gather: Duration::from_millis(50),
+            adaptive_gather: false,
+            ..BatchConfig::default()
+        });
+        assert!(eng.xmodel_active(), "fleet manifest must pass the probe");
+        let start = Arc::new(Barrier::new(8));
+        let handles: Vec<_> = (0..8u16)
+            .map(|t| {
+                let eng = Arc::clone(&eng);
+                let start = Arc::clone(&start);
+                let model_id = t % 4;
+                let input = activation(&manifest, model_id, 2, t as usize);
+                std::thread::spawn(move || {
+                    start.wait();
+                    let out = eng.infer_tail(t as usize, model_id, 2, input.clone()).unwrap();
+                    (model_id, input, out)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (model_id, input, out) = h.join().unwrap();
+            assert_bits(&out, &solo(model_id, 2, &input), &format!("model {model_id}"));
+        }
+        let (_, batched, bypassed, _) = eng.metrics.snapshot();
+        assert_eq!(batched + bypassed, 8, "every request served exactly once");
+        xmodel_total +=
+            eng.metrics.xmodel_batches.load(std::sync::atomic::Ordering::Relaxed);
+        // The per-signature stats must agree that one class carried
+        // all four models' stage-2 tails.
+        let sig = eng
+            .signature_stats()
+            .into_iter()
+            .find(|s| s.requests > 0)
+            .expect("a signature class saw traffic");
+        assert!(sig.members.len() >= 4, "stage-2 tails of 4+ routes share a class: {sig:?}");
+        if xmodel_total >= 1 {
+            break;
+        }
+    }
+    assert!(xmodel_total >= 1, "8 shared-signature requests never formed a mixed batch");
+}
+
+#[test]
+fn same_out_shape_different_depth_never_coalesces() {
+    // Tails from stage 3 (two stages) and stage 4 (one stage) both end
+    // in the same [1,16] head — but they are different functions, and
+    // with one request in flight per depth each must bypass instead of
+    // waiting on (or worse, joining) the other. The 250 ms window would
+    // show up as elapsed time if they ever gathered.
+    let manifest = sim_manifest_fleet(4);
+    let eng = engine(2, BatchConfig {
+        max_batch: 4,
+        gather_window: Duration::from_millis(250),
+        min_gather: Duration::from_millis(250),
+        adaptive_gather: false,
+        ..BatchConfig::default()
+    });
+    let t0 = std::time::Instant::now();
+    let start = Arc::new(Barrier::new(2));
+    let handles: Vec<_> = [3usize, 4]
+        .into_iter()
+        .map(|from| {
+            let eng = Arc::clone(&eng);
+            let start = Arc::clone(&start);
+            let input = activation(&manifest, 0, from, from);
+            std::thread::spawn(move || {
+                start.wait();
+                let out = eng.infer_tail(from, 0, from, input.clone()).unwrap();
+                (from, input, out)
+            })
+        })
+        .collect();
+    // Measure elapsed as soon as the requests are done — the solo
+    // reference runs below are not part of what the window bound
+    // asserts.
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let elapsed = t0.elapsed();
+    for (from, input, out) in results {
+        assert_bits(&out, &solo(0, from, &input), &format!("from {from}"));
+    }
+    let (batches, _, bypassed, _) = eng.metrics.snapshot();
+    assert_eq!(batches, 0, "different tail depths must never share a batch");
+    assert_eq!(bypassed, 2);
+    assert!(
+        elapsed < Duration::from_millis(200),
+        "a depth-mismatched request waited out a gather window ({elapsed:?})"
+    );
+}
+
+#[test]
+fn padded_mix_coalesces_within_budget_and_stays_exact() {
+    // fleet0 and padnet share the stage-3 suffix but not its leading
+    // geometry (2048 vs 1152 elements): with a 0.25 waste budget a
+    // 50/50 mix pads and stacks (waste ≈ 0.22), bit-identically.
+    let manifest = sim_manifest_fleet(4);
+    let padnet: u16 = 4; // 4 fleet models, then padnet
+    let mut padded_total = 0u64;
+    for _attempt in 0..3 {
+        let eng = engine(4, BatchConfig {
+            max_batch: 4,
+            gather_window: Duration::from_millis(50),
+            min_gather: Duration::from_millis(50),
+            adaptive_gather: false,
+            pad_waste_max: 0.25,
+            ..BatchConfig::default()
+        });
+        let start = Arc::new(Barrier::new(8));
+        let handles: Vec<_> = (0..8u16)
+            .map(|t| {
+                let eng = Arc::clone(&eng);
+                let start = Arc::clone(&start);
+                let model_id = if t % 2 == 0 { 0 } else { padnet };
+                let input = activation(&manifest, model_id, 3, 100 + t as usize);
+                std::thread::spawn(move || {
+                    start.wait();
+                    let out = eng.infer_tail(t as usize, model_id, 3, input.clone()).unwrap();
+                    (model_id, input, out)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (model_id, input, out) = h.join().unwrap();
+            assert_bits(&out, &solo(model_id, 3, &input), &format!("model {model_id}"));
+        }
+        let (_, batched, bypassed, _) = eng.metrics.snapshot();
+        assert_eq!(batched + bypassed, 8);
+        // The per-batch guard bounds every batch at 0.25, so the
+        // cumulative gauge can never exceed it either.
+        assert!(eng.metrics.pad_waste() <= 0.25 + 1e-9, "waste {}", eng.metrics.pad_waste());
+        padded_total +=
+            eng.metrics.padded_samples.load(std::sync::atomic::Ordering::Relaxed);
+        if padded_total >= 1 {
+            break;
+        }
+    }
+    assert!(padded_total >= 1, "a 50/50 padded mix never stacked a padded batch");
+}
+
+#[test]
+fn pad_waste_budget_zero_bypasses_padded_candidates() {
+    // Same 50/50 fleet0/padnet stage-3 traffic, but with the padding
+    // budget at 0 the two leading geometries are distinct classes:
+    // nothing may pad, so with one request per geometry in flight both
+    // bypass untouched.
+    let manifest = sim_manifest_fleet(4);
+    let eng = engine(2, BatchConfig {
+        max_batch: 4,
+        gather_window: Duration::from_millis(250),
+        min_gather: Duration::from_millis(250),
+        adaptive_gather: false,
+        pad_waste_max: 0.0,
+        ..BatchConfig::default()
+    });
+    let t0 = std::time::Instant::now();
+    let start = Arc::new(Barrier::new(2));
+    let handles: Vec<_> = [0u16, 4]
+        .into_iter()
+        .map(|model_id| {
+            let eng = Arc::clone(&eng);
+            let start = Arc::clone(&start);
+            let input = activation(&manifest, model_id, 3, 200 + model_id as usize);
+            std::thread::spawn(move || {
+                start.wait();
+                let out =
+                    eng.infer_tail(model_id as usize, model_id, 3, input.clone()).unwrap();
+                (model_id, input, out)
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let elapsed = t0.elapsed();
+    for (model_id, input, out) in results {
+        assert_bits(&out, &solo(model_id, 3, &input), &format!("model {model_id}"));
+    }
+    let (batches, _, bypassed, _) = eng.metrics.snapshot();
+    assert_eq!(batches, 0, "pad-waste-max 0 must not stack mixed leading geometries");
+    assert_eq!(bypassed, 2);
+    assert_eq!(eng.metrics.padded_samples.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert!(
+        elapsed < Duration::from_millis(200),
+        "a padded candidate waited out a gather window under a zero budget ({elapsed:?})"
+    );
+}
+
+#[test]
+fn tenant_cap_holds_across_models_sharing_a_signature() {
+    // Tenant fairness on; tenant 100 floods stage-2 tails through
+    // fleet1 while tenant 200 sends the same signature through fleet0.
+    // The per-(signature, tenant) cap is what must hold: the flooder
+    // cannot fill a batch the other tenant's requests are gathering
+    // into, even though the two tenants arrive under different models.
+    let manifest = sim_manifest_fleet(4);
+    let mut capped_total = 0u64;
+    for _attempt in 0..3 {
+        let eng = engine(4, BatchConfig {
+            max_batch: 4,
+            gather_window: Duration::from_millis(50),
+            min_gather: Duration::from_millis(50),
+            adaptive_gather: false,
+            tenant_fair: true,
+            ..BatchConfig::default()
+        });
+        let start = Arc::new(Barrier::new(8));
+        let handles: Vec<_> = (0..8u16)
+            .map(|t| {
+                let eng = Arc::clone(&eng);
+                let start = Arc::clone(&start);
+                let (model_id, tenant) = if t < 6 { (1u16, 100u64) } else { (0u16, 200u64) };
+                let input = activation(&manifest, model_id, 2, 300 + t as usize);
+                std::thread::spawn(move || {
+                    start.wait();
+                    let out = eng
+                        .infer_tail_for(t as usize, model_id, 2, input.clone(), None, tenant)
+                        .unwrap();
+                    (model_id, input, out)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (model_id, input, out) = h.join().unwrap();
+            assert_bits(&out, &solo(model_id, 2, &input), &format!("model {model_id}"));
+        }
+        let (_, batched, bypassed, max_occ) = eng.metrics.snapshot();
+        assert_eq!(batched + bypassed, 8, "every request served exactly once");
+        assert!(max_occ <= 4);
+        capped_total +=
+            eng.metrics.tenant_capped.load(std::sync::atomic::Ordering::Relaxed);
+        if capped_total >= 1 {
+            break;
+        }
+    }
+    assert!(
+        capped_total >= 1,
+        "6 same-tenant joins against a cross-model cap of 2 never hit the cap in 3 bursts"
+    );
+}
+
+#[test]
+fn xmodel_off_restores_identity_keying() {
+    // The same shared-signature burst with `xmodel: false`: models
+    // never mix (each (model, from) is its own class again), so with
+    // one request per model in flight everything bypasses.
+    let manifest = sim_manifest_fleet(4);
+    let eng = engine(4, BatchConfig {
+        max_batch: 4,
+        gather_window: Duration::from_millis(250),
+        min_gather: Duration::from_millis(250),
+        adaptive_gather: false,
+        xmodel: false,
+        ..BatchConfig::default()
+    });
+    assert!(!eng.xmodel_active());
+    let t0 = std::time::Instant::now();
+    let start = Arc::new(Barrier::new(4));
+    let handles: Vec<_> = (0..4u16)
+        .map(|model_id| {
+            let eng = Arc::clone(&eng);
+            let start = Arc::clone(&start);
+            let input = activation(&manifest, model_id, 2, 400 + model_id as usize);
+            std::thread::spawn(move || {
+                start.wait();
+                let out =
+                    eng.infer_tail(model_id as usize, model_id, 2, input.clone()).unwrap();
+                (model_id, input, out)
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let elapsed = t0.elapsed();
+    for (model_id, input, out) in results {
+        assert_bits(&out, &solo(model_id, 2, &input), &format!("model {model_id}"));
+    }
+    let (batches, _, bypassed, _) = eng.metrics.snapshot();
+    assert_eq!(batches, 0, "identity keying must not mix models");
+    assert_eq!(bypassed, 4);
+    assert_eq!(eng.metrics.xmodel_batches.load(std::sync::atomic::Ordering::Relaxed), 0);
+    assert!(
+        elapsed < Duration::from_millis(200),
+        "identity-keyed traffic waited a window ({elapsed:?})"
+    );
+}

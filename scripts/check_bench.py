@@ -6,7 +6,7 @@ Usage:
     check_bench.py <bench> <json> --compare <baseline> # + regression gate
     check_bench.py <bench> <json> --update-baselines <baseline>
 
-<bench> is one of: pipeline | adaptive | multiedge.
+<bench> is one of: pipeline | adaptive | multiedge | crossmodel.
 
 The schema checks replicate (and replace) the inline validators that
 used to live in scripts/verify.sh; verify.sh keeps a grep fallback for
@@ -95,6 +95,41 @@ def check_multiedge(doc):
             f"gain={doc.get('fairness_polite_throughput_gain', 0):.1f}x")
 
 
+def check_crossmodel(doc):
+    assert doc.get("fleet_models", 0) >= 2, "needs a multi-model fleet"
+    arms = doc.get("arms")
+    assert isinstance(arms, list) and arms, "arms missing/empty"
+    by_mode = {a.get("mode"): a for a in arms if a.get("mode") is not None}
+    assert {"xmodel_on", "xmodel_off", "padded"} <= set(by_mode), \
+        f"missing arms: {sorted(by_mode)}"
+    for mode, a in by_mode.items():
+        for k in ("req_per_sec", "batches", "batched_requests", "batch_bypassed",
+                  "mean_occupancy", "xmodel_batches"):
+            assert k in a, f"{mode}: missing {k}"
+    assert doc.get("bit_identical") is True, \
+        "mixed batches were not verified bit-identical to solo execution"
+    assert by_mode["xmodel_on"]["xmodel_batches"] > 0, \
+        "signature keying never actually mixed models"
+    # The regression this bench guards: identity keying degenerates
+    # mixed-fleet traffic to bypass.
+    assert by_mode["xmodel_off"]["xmodel_batches"] == 0, \
+        "identity-keyed arm mixed models"
+    pad = doc.get("pad")
+    assert isinstance(pad, dict), "missing pad section"
+    for k in ("req_per_sec", "padded_samples", "pad_waste_fraction", "xmodel_batches"):
+        assert k in pad, f"pad: missing {k}"
+    assert pad["padded_samples"] > 0, "the padded phase never stacked a padded batch"
+    assert "pad_waste_max" in doc, "pad_waste_max missing (the waste bound needs it)"
+    budget = doc["pad_waste_max"]
+    assert 0.0 <= pad["pad_waste_fraction"] <= budget + 1e-9, \
+        f"pad waste {pad['pad_waste_fraction']:.3f} exceeded the {budget} budget"
+    for k in ("mixed_speedup_8conn", "mixed_occupancy", "bypass_fraction_off"):
+        assert k in doc, f"missing {k}"
+    return (f"mixed speedup={doc['mixed_speedup_8conn']:.2f}x, "
+            f"occupancy={doc['mixed_occupancy']:.2f}, "
+            f"pad_waste={pad['pad_waste_fraction']:.3f}")
+
+
 # --------------------------------------------------------------------------
 # Tracked headline metrics: name -> (extractor, direction).
 # direction "higher" = regression when it drops; "lower" = when it grows.
@@ -118,12 +153,23 @@ TRACKED = {
         "fair_flood_shed_rate":
             (lambda d: float(d["fair_flood_shed_rate"]), "higher"),
     },
+    # pad_waste_fraction is deliberately NOT tracked here: the engine's
+    # pad_admits guard hard-caps it at pad_waste_max per batch (and the
+    # schema asserts the bound), so a baseline gate on it could never
+    # fire — the schema assertion is the real check.
+    "crossmodel": {
+        "mixed_speedup_8conn":
+            (lambda d: float(d["mixed_speedup_8conn"]), "higher"),
+        "mixed_occupancy":
+            (lambda d: float(d["mixed_occupancy"]), "higher"),
+    },
 }
 
 SCHEMAS = {
     "pipeline": check_pipeline,
     "adaptive": check_adaptive,
     "multiedge": check_multiedge,
+    "crossmodel": check_crossmodel,
 }
 
 
@@ -132,8 +178,19 @@ def tracked_metrics(bench, doc):
 
 
 def compare(bench, doc, baseline_path):
-    with open(baseline_path) as f:
-        baseline = json.load(f)
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        # Fail closed, not with a traceback: a missing baseline file is
+        # a wiring error (typo, rename, suite added without committing
+        # its baseline), and silently skipping it would leave the
+        # regression gate green while guarding nothing. (A metric
+        # missing from an *existing* baseline still skips per-metric
+        # below — that is the intentional incremental-adoption path.)
+        print(f"check_bench: baseline {baseline_path} not found — commit one "
+              f"(--update-baselines) or fix the path", file=sys.stderr)
+        return False
     failures = []
     for name, (fn, direction) in TRACKED[bench].items():
         if name not in baseline:

@@ -1,26 +1,47 @@
 #!/usr/bin/env bash
 # Tier-1 verification: format, build, test, lint. Run from anywhere.
 #
-#   scripts/verify.sh           # full gate
-#   scripts/verify.sh --smoke   # + bench smoke: runs the serving
-#                               # concurrency A/B, the control-plane
-#                               # closed-loop scenario and the
-#                               # multi-edge fairness scenario briefly;
-#                               # each BENCH_*.json is validated by
-#                               # scripts/check_bench.py and its
-#                               # headline metrics gated against
-#                               # bench_baselines/ (>15% regression
-#                               # fails).
+#   scripts/verify.sh                  # full gate
+#   scripts/verify.sh --smoke          # full gate + every bench smoke
+#   scripts/verify.sh --smoke SUITE…   # ONLY the named bench smoke(s)
+#                                      # (pipeline|adaptive|multiedge|
+#                                      # crossmodel) — no build/test/
+#                                      # clippy pass; cargo bench builds
+#                                      # what it needs. This is what the
+#                                      # CI bench matrix fans out over,
+#                                      # and what you want locally when
+#                                      # only one suite changed.
+#   scripts/verify.sh --full SUITE…    # same, but the full (non-smoke)
+#                                      # bench run — what the nightly
+#                                      # workflow fans out over, so the
+#                                      # suite → (bench, schema, json)
+#                                      # mapping lives only here.
+#
+# Each bench run validates its BENCH_*.json with
+# scripts/check_bench.py and gates the headline metrics against
+# bench_baselines/ (>15% regression fails).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 SMOKE=0
+FULL=0
+SUITES=()
 for arg in "$@"; do
   case "$arg" in
     --smoke) SMOKE=1 ;;
+    --full) FULL=1 ;;
+    pipeline|adaptive|multiedge|crossmodel) SUITES+=("$arg") ;;
     *) echo "verify.sh: unknown argument $arg" >&2; exit 2 ;;
   esac
 done
+if [ "$SMOKE" = 1 ] && [ "$FULL" = 1 ]; then
+  echo "verify.sh: --smoke and --full are mutually exclusive" >&2
+  exit 2
+fi
+if [ "${#SUITES[@]}" -gt 0 ] && [ "$SMOKE" = 0 ] && [ "$FULL" = 0 ]; then
+  echo "verify.sh: a suite filter needs --smoke or --full" >&2
+  exit 2
+fi
 
 if ! command -v cargo >/dev/null 2>&1; then
   echo "verify: rust toolchain not installed (cargo not found on PATH)." >&2
@@ -28,30 +49,19 @@ if ! command -v cargo >/dev/null 2>&1; then
   exit 1
 fi
 
-if cargo fmt --version >/dev/null 2>&1; then
-  echo "== cargo fmt --check =="
-  cargo fmt --all --check
-else
-  echo "== cargo fmt --check == (rustfmt not installed; skipped)"
-fi
-
-echo "== cargo build --release =="
-cargo build --release
-
-echo "== cargo test -q =="
-cargo test -q
-
-echo "== cargo clippy --all-targets -- -D warnings =="
-cargo clippy --all-targets -- -D warnings
-
-# Run one bench in smoke mode and validate/gate its JSON.
+# Run one bench (smoke unless --full) and validate/gate its JSON.
 #   smoke_bench <cargo-bench-name> <check_bench schema name> <json basename> <grep fallback terms...>
 smoke_bench() {
   local bench="$1" schema="$2" json="$3"
   shift 3
-  echo "== bench smoke: $bench --smoke =="
   rm -f "rust/$json" "$json"
-  cargo bench --bench "$bench" -- --smoke
+  if [ "$FULL" = 1 ]; then
+    echo "== bench full: $bench =="
+    cargo bench --bench "$bench"
+  else
+    echo "== bench smoke: $bench --smoke =="
+    cargo bench --bench "$bench" -- --smoke
+  fi
   # cargo bench runs with the package dir as cwd; accept either layout.
   local found=""
   for f in "rust/$json" "$json"; do
@@ -73,14 +83,57 @@ smoke_bench() {
   fi
 }
 
-if [ "$SMOKE" = 1 ]; then
-  smoke_bench pipeline_hotpath pipeline BENCH_pipeline.json \
-    '"server_concurrency_ab"' '"serialized"' '"sharded_batched"' \
-    '"concurrency_speedup_8conn"'
-  smoke_bench control_plane adaptive BENCH_adaptive.json \
-    '"scenario"' '"spike"' '"sheds_observed"'
-  smoke_bench multiedge multiedge BENCH_multiedge.json \
-    '"fair_polite_retention"' '"flood_shed_rate"' '"per_tenant"'
+# Suite name -> smoke_bench invocation (the CI matrix fans out over
+# these names; the grep terms are the python3-less fallback).
+run_suite() {
+  case "$1" in
+    pipeline)
+      smoke_bench pipeline_hotpath pipeline BENCH_pipeline.json \
+        '"server_concurrency_ab"' '"serialized"' '"sharded_batched"' \
+        '"concurrency_speedup_8conn"' ;;
+    adaptive)
+      smoke_bench control_plane adaptive BENCH_adaptive.json \
+        '"scenario"' '"spike"' '"sheds_observed"' ;;
+    multiedge)
+      smoke_bench multiedge multiedge BENCH_multiedge.json \
+        '"fair_polite_retention"' '"flood_shed_rate"' '"per_tenant"' ;;
+    crossmodel)
+      smoke_bench crossmodel crossmodel BENCH_crossmodel.json \
+        '"mixed_speedup_8conn"' '"xmodel_on"' '"xmodel_off"' \
+        '"pad_waste_fraction"' '"bit_identical"' ;;
+    *) echo "verify.sh: unknown suite $1" >&2; exit 2 ;;
+  esac
+}
+
+if [ "${#SUITES[@]}" -gt 0 ]; then
+  # Suite-filtered run: just the named bench(es).
+  for s in "${SUITES[@]}"; do
+    run_suite "$s"
+  done
+  echo "verify: OK (bench $([ "$FULL" = 1 ] && echo full || echo smoke): ${SUITES[*]})"
+  exit 0
+fi
+
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "== cargo fmt --check =="
+  cargo fmt --all --check
+else
+  echo "== cargo fmt --check == (rustfmt not installed; skipped)"
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo clippy --all-targets -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+if [ "$SMOKE" = 1 ] || [ "$FULL" = 1 ]; then
+  for s in pipeline adaptive multiedge crossmodel; do
+    run_suite "$s"
+  done
 fi
 
 echo "verify: OK"
