@@ -1,0 +1,729 @@
+//! Fleet-scale load bench for the event-driven cloud server — the
+//! C10K scenario the epoll transport exists for.
+//!
+//! One client thread multiplexes thousands of simulated edges over the
+//! same `util::reactor` the server uses, generating **open-loop**
+//! arrivals (requests fire on their Poisson schedule whether or not
+//! earlier ones completed — closed-loop clients would hide queueing
+//! collapse by slowing down with the server):
+//!
+//! * **scaling** — a fixed aggregate offered rate spread over
+//!   8 → 5000 connections (heavy-tailed Pareto per-edge rates, ~10%
+//!   of edges behind paced slow links); sustained req/s and open-loop
+//!   p50/p99 (measured from *scheduled* arrival, so queueing delay
+//!   counts) per connection-count row;
+//! * **low_fanin_ab** — 8 blocking closed-loop clients against the
+//!   epoll and threads transports; their req/s ratio is the "no
+//!   regression at interactive fan-in" gate;
+//! * **flash_crowd** — polite tenants plus a flood tenant that
+//!   multiplies its rate 20× mid-run while the cloud is pushed over
+//!   budget; fair admission must shed the flood, not the polite;
+//! * **diurnal** — a sinusoidal rate cycle; offered vs served per time
+//!   bucket shows the server tracking the swing.
+//!
+//! Emits `BENCH_c10k.json`; `scripts/verify.sh --smoke` runs this
+//! briefly (smaller fleet, shorter windows) and `check_bench.py c10k`
+//! gates the shape + headline metrics against `bench_baselines/`.
+//!
+//! Run: `cargo bench --bench c10k` (`-- --smoke` for CI). Off Linux
+//! the reactor does not exist; the bench emits a stub document with
+//! `io_available: false`.
+
+fn main() {
+    #[cfg(target_os = "linux")]
+    {
+        linux::run();
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let doc = jalad::util::json::Json::obj(vec![
+            ("io_available", jalad::util::json::Json::num(0.0)),
+        ]);
+        std::fs::write("BENCH_c10k.json", doc.to_pretty()).expect("write BENCH_c10k.json");
+        println!("no epoll on this host; wrote stub BENCH_c10k.json");
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod linux {
+    use std::collections::{BinaryHeap, VecDeque};
+    use std::cmp::Reverse;
+    use std::io::{BufReader, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use jalad::compression::{feature, quant};
+    use jalad::runtime::sim::sim_manifest;
+    use jalad::runtime::{Executor, ExecutorPool};
+    use jalad::server::proto::{self, Assembled, CloudTelemetry, FrameAssembler, RecvFrame};
+    use jalad::server::{AdmissionConfig, CloudServer, IoModel, ServeConfig};
+    use jalad::util::bench::Bencher;
+    use jalad::util::json::Json;
+    use jalad::util::reactor::{raise_nofile_limit, Interest, Reactor};
+    use jalad::util::rng::XorShift64Star;
+    use jalad::util::stats;
+
+    /// Admitted-rate budget for the flash-crowd arm (same figure the
+    /// multiedge bench gates fairness with).
+    const BUDGET_RPS: f64 = 180.0;
+
+    /// Paced "slow link" uplink rate, bytes/second (a ~1–2 KB frame
+    /// takes tens of ms to dribble out — the slow-loris-shaped client
+    /// the incremental assembler must tolerate at scale).
+    const SLOW_LINK_BPS: f64 = 32.0 * 1024.0;
+
+    fn spawn_server(io: IoModel, admission: AdmissionConfig) -> (Arc<CloudServer>, SocketAddr) {
+        let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, 8);
+        let server = Arc::new(CloudServer::with_pool(
+            pool,
+            ServeConfig { workers: 8, io, admission, ..ServeConfig::default() },
+        ));
+        let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").expect("bind");
+        (server, addr)
+    }
+
+    /// A complete Features request frame (header + entropy-coded
+    /// stage-2 payload + tenant trailer), ready to copy into a send
+    /// buffer verbatim.
+    fn request_frame(reference: &Executor, seed: usize, tenant: u32) -> Vec<u8> {
+        let m = reference.manifest().model("simnet").unwrap();
+        let elems = m.stages[1].out_elems;
+        let xs: Vec<f32> = (0..elems)
+            .map(|j| {
+                let h = ((j + 1) as u64)
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add(seed as u64 * 0x2545_F491_4F6C_DD1D);
+                ((h >> 42) & 0x3FFF) as f32 / 1638.4 - 2.0
+            })
+            .collect();
+        let q = quant::quantize(&xs, 4);
+        let mut payload = feature::encode(&q, 2, 0);
+        proto::append_tenant_trailer(tenant, &mut payload);
+        let mut wire = Vec::new();
+        proto::write_frame_raw(&mut wire, proto::KIND_FEATURES, &payload).unwrap();
+        wire
+    }
+
+    /// Token-bucket pacing for a slow-link edge.
+    struct Pacer {
+        rate: f64,
+        burst: f64,
+        budget: f64,
+        last: Instant,
+    }
+
+    struct Edge {
+        stream: TcpStream,
+        asm: FrameAssembler,
+        rx: Vec<u8>,
+        /// Pre-encoded request frame, copied per send.
+        frame: Vec<u8>,
+        out: Vec<u8>,
+        out_pos: usize,
+        /// Scheduled-arrival stamps of in-flight requests (the server
+        /// replies in order per connection).
+        pending: VecDeque<Instant>,
+        /// Base Poisson rate, requests/second.
+        rate: f64,
+        paced: Option<Pacer>,
+        /// 0 = polite/default, 1 = flood (flash-crowd arm).
+        class: usize,
+        dead: bool,
+    }
+
+    impl Edge {
+        fn queue_request(&mut self, sched: Instant) {
+            let frame = std::mem::take(&mut self.frame);
+            self.out.extend_from_slice(&frame);
+            self.frame = frame;
+            self.pending.push_back(sched);
+        }
+
+        fn has_backlog(&self) -> bool {
+            self.out_pos < self.out.len()
+        }
+
+        /// Push queued bytes at the socket (bounded by the pacer);
+        /// returns false when the connection died.
+        fn flush(&mut self, now: Instant) -> bool {
+            if !self.has_backlog() {
+                self.out.clear();
+                self.out_pos = 0;
+                return true;
+            }
+            let mut allow = self.out.len() - self.out_pos;
+            if let Some(p) = &mut self.paced {
+                let dt = now.duration_since(p.last).as_secs_f64();
+                p.last = now;
+                p.budget = (p.budget + p.rate * dt).min(p.burst);
+                allow = allow.min(p.budget as usize);
+            }
+            while allow > 0 {
+                match self.stream.write(&self.out[self.out_pos..self.out_pos + allow]) {
+                    Ok(0) => return false,
+                    Ok(n) => {
+                        self.out_pos += n;
+                        allow -= n;
+                        if let Some(p) = &mut self.paced {
+                            p.budget -= n as f64;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(_) => return false,
+                }
+            }
+            if !self.has_backlog() {
+                self.out.clear();
+                self.out_pos = 0;
+            }
+            true
+        }
+    }
+
+    /// Per-class outcome counts over the class measurement window.
+    #[derive(Debug, Default, Clone)]
+    struct ClassTally {
+        sent: usize,
+        served: usize,
+        busy: usize,
+        errors: usize,
+    }
+
+    impl ClassTally {
+        fn shed_rate(&self) -> f64 {
+            self.busy as f64 / (self.served + self.busy + self.errors).max(1) as f64
+        }
+
+        fn retention(&self) -> f64 {
+            self.served as f64 / (self.served + self.busy + self.errors).max(1) as f64
+        }
+    }
+
+    struct FleetCfg {
+        conns: usize,
+        /// Arrival generation runs this long (seconds).
+        duration: f64,
+        /// Measurement starts here (seconds into the run).
+        warmup: f64,
+        aggregate_rps: f64,
+        /// Heavy-tailed (Pareto α=1.5) per-edge rates; uniform when off.
+        pareto: bool,
+        /// Fraction of edges behind a paced slow link.
+        slow_frac: f64,
+        /// Sinusoidal rate modulation amplitude (0 = flat).
+        diurnal_amp: f64,
+        buckets: usize,
+        /// Flash crowd: (flood edge fraction, rate multiplier,
+        /// window start, window end) — class tallies are scoped to the
+        /// window, and the server is pushed over budget inside it.
+        flash: Option<(f64, f64, f64, f64)>,
+        /// Post-arrival drain allowance (seconds).
+        grace: f64,
+    }
+
+    #[derive(Debug)]
+    struct FleetOut {
+        connected: usize,
+        sent: usize,
+        served: usize,
+        busy: usize,
+        errors: usize,
+        dead: usize,
+        lat_ms: Vec<f64>,
+        /// (offered, served) per time bucket.
+        buckets: Vec<(usize, usize)>,
+        class: Vec<ClassTally>,
+        measure_secs: f64,
+    }
+
+    /// Drain one edge's replies; classify each against its scheduled
+    /// stamp. Returns false when the connection died.
+    fn drain_replies(
+        e: &mut Edge,
+        start: Instant,
+        cfg: &FleetCfg,
+        class_win: (f64, f64),
+        out: &mut FleetOut,
+    ) -> bool {
+        loop {
+            match e.asm.poll_frame(&mut e.stream, &mut e.rx) {
+                Ok(Assembled::NeedMore) => return true,
+                Ok(Assembled::Frame(RecvFrame::Data(kind))) => {
+                    let sched = match e.pending.pop_front() {
+                        Some(s) => s,
+                        None => return false, // reply with no request: broken stream
+                    };
+                    let now = Instant::now();
+                    let t = sched.duration_since(start).as_secs_f64();
+                    let in_measure = t >= cfg.warmup && t < cfg.duration;
+                    let in_class_win = t >= class_win.0 && t < class_win.1;
+                    let bucket = ((t / cfg.duration) * cfg.buckets as f64) as usize;
+                    match kind {
+                        proto::KIND_LOGITS => {
+                            if in_measure {
+                                out.served += 1;
+                                out.lat_ms
+                                    .push(now.duration_since(sched).as_secs_f64() * 1e3);
+                                if let Some(b) = out.buckets.get_mut(bucket.min(cfg.buckets - 1))
+                                {
+                                    b.1 += 1;
+                                }
+                            }
+                            if in_class_win {
+                                out.class[e.class].served += 1;
+                            }
+                        }
+                        proto::KIND_BUSY => {
+                            if in_measure {
+                                out.busy += 1;
+                            }
+                            if in_class_win {
+                                out.class[e.class].busy += 1;
+                            }
+                        }
+                        _ => {
+                            if in_measure {
+                                out.errors += 1;
+                            }
+                            if in_class_win {
+                                out.class[e.class].errors += 1;
+                            }
+                        }
+                    }
+                }
+                Ok(Assembled::Frame(_)) => return false, // Eof / malformed
+                Err(_) => return false,
+            }
+        }
+    }
+
+    /// Run one open-loop fleet scenario against `addr`.
+    fn run_fleet(server: &Arc<CloudServer>, addr: SocketAddr, cfg: &FleetCfg) -> FleetOut {
+        let reference = Executor::sim_with(sim_manifest(), 8);
+        let reactor = Reactor::new().expect("client reactor");
+        let mut rng = XorShift64Star::new(0xC10C);
+
+        // Per-edge Poisson rates: heavy-tailed (clamped Pareto) or
+        // uniform, normalized to the aggregate offered rate.
+        let mut weights: Vec<f64> = (0..cfg.conns)
+            .map(|_| {
+                if cfg.pareto {
+                    // Pareto(α=1.5): w = u^(-1/α), clamped so one edge
+                    // can't be the entire offered load.
+                    rng.next_f64().powf(-1.0 / 1.5).min(50.0)
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        let wsum: f64 = weights.iter().sum();
+        for w in &mut weights {
+            *w *= cfg.aggregate_rps / wsum;
+        }
+
+        let (flood_frac, flood_mult, flash_lo, flash_hi) =
+            cfg.flash.unwrap_or((0.0, 1.0, cfg.warmup, cfg.duration));
+        let flood_count = (cfg.conns as f64 * flood_frac) as usize;
+        let class_win = (flash_lo, flash_hi);
+
+        // Connect the fleet in batches (the listener's backlog is
+        // finite) with a little patience per socket.
+        let mut edges: Vec<Edge> = Vec::with_capacity(cfg.conns);
+        for i in 0..cfg.conns {
+            let stream = {
+                let mut tries = 0;
+                loop {
+                    match TcpStream::connect(addr) {
+                        Ok(s) => break s,
+                        Err(_) if tries < 50 => {
+                            tries += 1;
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(e) => panic!("connect edge {i}: {e}"),
+                    }
+                }
+            };
+            stream.set_nodelay(true).unwrap();
+            stream.set_nonblocking(true).unwrap();
+            reactor.register(stream.as_raw_fd(), i as u64, Interest::READ).unwrap();
+            let class = usize::from(i < flood_count);
+            let tenant = if class == 1 { 9999 } else { 1 + (i % 3) as u32 };
+            let paced = if rng.next_f64() < cfg.slow_frac {
+                Some(Pacer {
+                    rate: SLOW_LINK_BPS,
+                    burst: 4096.0,
+                    budget: 4096.0,
+                    last: Instant::now(),
+                })
+            } else {
+                None
+            };
+            edges.push(Edge {
+                stream,
+                asm: FrameAssembler::new(),
+                rx: Vec::new(),
+                frame: request_frame(&reference, i, tenant),
+                out: Vec::new(),
+                out_pos: 0,
+                pending: VecDeque::new(),
+                rate: weights[i],
+                paced,
+                class,
+                dead: false,
+            });
+            if i % 64 == 63 {
+                // Let the server's acceptor keep up with the batch.
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+
+        let mut out = FleetOut {
+            connected: edges.len(),
+            sent: 0,
+            served: 0,
+            busy: 0,
+            errors: 0,
+            dead: 0,
+            lat_ms: Vec::new(),
+            buckets: vec![(0, 0); cfg.buckets],
+            class: vec![ClassTally::default(); 2],
+            measure_secs: cfg.duration - cfg.warmup,
+        };
+
+        // Arrival schedule: a min-heap of (due_micros, edge index).
+        let start = Instant::now();
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        for (i, e) in edges.iter().enumerate() {
+            // Random phase so the fleet doesn't fire in lockstep.
+            let due = rng.next_f64() / e.rate.max(1e-6);
+            heap.push(Reverse(((due * 1e6) as u64, i)));
+        }
+
+        let mut events = Vec::new();
+        let mut flash_on = false;
+        loop {
+            let now = Instant::now();
+            let t = now.duration_since(start).as_secs_f64();
+            if t >= cfg.duration + cfg.grace
+                || (t >= cfg.duration && edges.iter().all(|e| e.dead || e.pending.is_empty()))
+            {
+                break;
+            }
+
+            // Flash-crowd window: push the cloud over budget on entry,
+            // restore live telemetry on exit.
+            if cfg.flash.is_some() {
+                let inside = t >= flash_lo && t < flash_hi;
+                if inside != flash_on {
+                    flash_on = inside;
+                    server.inject_load(inside.then_some(CloudTelemetry {
+                        queue_wait_p95_ms: 50.0,
+                        utilization: 0.97,
+                        batch_occupancy: 4.0,
+                        ..CloudTelemetry::default()
+                    }));
+                }
+            }
+
+            // Fire every due arrival (open loop: scheduled time is the
+            // latency clock, regardless of socket backpressure).
+            while let Some(&Reverse((due_us, i))) = heap.peek() {
+                let due = due_us as f64 / 1e6;
+                if due > t {
+                    break;
+                }
+                heap.pop();
+                let e = &mut edges[i];
+                if !e.dead {
+                    let sched = start + Duration::from_secs_f64(due);
+                    e.queue_request(sched);
+                    if due >= cfg.warmup && due < cfg.duration {
+                        out.sent += 1;
+                        let b = ((due / cfg.duration) * cfg.buckets as f64) as usize;
+                        out.buckets[b.min(cfg.buckets - 1)].0 += 1;
+                    }
+                    if due >= class_win.0 && due < class_win.1 {
+                        out.class[e.class].sent += 1;
+                    }
+                }
+                // Next arrival for this edge under the current
+                // modulation (diurnal sinusoid and/or flash multiplier).
+                let mut rate = edges[i].rate;
+                if cfg.diurnal_amp > 0.0 {
+                    let phase = 2.0 * std::f64::consts::PI * due / cfg.duration;
+                    rate *= 1.0 + cfg.diurnal_amp * phase.sin();
+                }
+                if edges[i].class == 1 && due >= flash_lo && due < flash_hi {
+                    rate *= flood_mult;
+                }
+                let gap = -rng.next_f64().ln() / rate.max(1e-6);
+                let next = due + gap;
+                if next < cfg.duration {
+                    heap.push(Reverse(((next * 1e6) as u64, i)));
+                }
+            }
+
+            // Write-side: push backlogged bytes (paced for slow links).
+            for e in &mut edges {
+                if !e.dead && e.has_backlog() && !e.flush(now) {
+                    e.dead = true;
+                    out.dead += 1;
+                    let _ = reactor.deregister(e.stream.as_raw_fd());
+                }
+            }
+
+            // Read-side: wait briefly, drain whoever has replies.
+            let timeout = Duration::from_millis(2);
+            if reactor.wait(&mut events, Some(timeout)).is_err() {
+                break;
+            }
+            for ev in &events {
+                let i = ev.token as usize;
+                let e = &mut edges[i];
+                if e.dead {
+                    continue;
+                }
+                if (ev.readable || ev.hangup)
+                    && !drain_replies(e, start, cfg, class_win, &mut out)
+                {
+                    e.dead = true;
+                    out.dead += 1;
+                    let _ = reactor.deregister(e.stream.as_raw_fd());
+                }
+            }
+        }
+        out
+    }
+
+    /// Closed-loop blocking client for the low-fan-in A/B arm.
+    fn closed_loop_rps(addr: SocketAddr, clients: usize, warmup: f64, measure: f64) -> f64 {
+        let reference = Executor::sim_with(sim_manifest(), 8);
+        let start = Instant::now();
+        let count_from = start + Duration::from_secs_f64(warmup);
+        let until = count_from + Duration::from_secs_f64(measure);
+        let handles: Vec<_> = (0..clients)
+            .map(|i| {
+                let wire = request_frame(&reference, i, 1 + i as u32);
+                std::thread::spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    stream.set_nodelay(true).unwrap();
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    let mut served = 0usize;
+                    loop {
+                        let now = Instant::now();
+                        if now >= until {
+                            return served;
+                        }
+                        stream.write_all(&wire).unwrap();
+                        let mut rx = Vec::new();
+                        match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+                            RecvFrame::Data(k) if k == proto::KIND_LOGITS => {
+                                if now >= count_from {
+                                    served += 1;
+                                }
+                            }
+                            RecvFrame::Data(_) => {}
+                            other => panic!("unexpected reply {other:?}"),
+                        }
+                    }
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        total as f64 / measure
+    }
+
+    pub fn run() {
+        let smoke = Bencher::smoke();
+        let conn_steps: &[usize] = if smoke { &[8, 64, 256] } else { &[8, 64, 512, 2048, 5000] };
+        let target_conns = *conn_steps.last().unwrap();
+        // Two fds per connection (client + server end) plus headroom.
+        let granted = raise_nofile_limit(4 * target_conns as u64 + 256);
+        let fd_cap = ((granted.saturating_sub(256)) / 4) as usize;
+        if fd_cap < target_conns {
+            println!("nofile soft limit {granted}: capping fleet at {fd_cap} connections");
+        }
+        let (dur, warm, grace) = if smoke { (1.6, 0.4, 1.0) } else { (4.0, 1.0, 2.0) };
+        let aggregate = if smoke { 300.0 } else { 600.0 };
+
+        // --- scaling: fixed offered load over a growing fleet -------
+        let (server, addr) = spawn_server(IoModel::Epoll, AdmissionConfig::default());
+        let mut scaling = Vec::new();
+        let mut max_conns_sustained = 0usize;
+        for &want in conn_steps {
+            let conns = want.min(fd_cap.max(8));
+            let cfg = FleetCfg {
+                conns,
+                duration: dur,
+                warmup: warm,
+                aggregate_rps: aggregate,
+                pareto: true,
+                slow_frac: 0.10,
+                diurnal_amp: 0.0,
+                buckets: 4,
+                flash: None,
+                grace,
+            };
+            let o = run_fleet(&server, addr, &cfg);
+            let rps = o.served as f64 / o.measure_secs;
+            let (p50, p99) = if o.lat_ms.is_empty() {
+                (0.0, 0.0)
+            } else {
+                (stats::percentile(&o.lat_ms, 50.0), stats::percentile(&o.lat_ms, 99.0))
+            };
+            if o.served > 0 {
+                max_conns_sustained = max_conns_sustained.max(o.connected);
+            }
+            println!(
+                "scaling/{conns}conn: offered {aggregate:.0} rps, served {rps:.1} rps, \
+                 p50 {p50:.2} ms, p99 {p99:.2} ms, busy {}, errors {}, dead {}",
+                o.busy, o.errors, o.dead
+            );
+            scaling.push(Json::obj(vec![
+                ("conns", Json::num(o.connected as f64)),
+                ("offered_rps", Json::num(aggregate)),
+                ("req_per_sec", Json::num(rps)),
+                ("served", Json::num(o.served as f64)),
+                ("p50_ms", Json::num(p50)),
+                ("p99_ms", Json::num(p99)),
+                ("busy", Json::num(o.busy as f64)),
+                ("errors", Json::num(o.errors as f64)),
+                ("dead", Json::num(o.dead as f64)),
+            ]));
+        }
+        CloudServer::request_shutdown(addr);
+
+        // --- low fan-in A/B: epoll vs threads at 8 connections ------
+        let (ab_warm, ab_measure) = if smoke { (0.3, 0.8) } else { (0.5, 2.0) };
+        let (_s1, addr1) = spawn_server(IoModel::Epoll, AdmissionConfig::default());
+        let epoll_rps = closed_loop_rps(addr1, 8, ab_warm, ab_measure);
+        CloudServer::request_shutdown(addr1);
+        let (_s2, addr2) = spawn_server(IoModel::Threads, AdmissionConfig::default());
+        let threads_rps = closed_loop_rps(addr2, 8, ab_warm, ab_measure);
+        CloudServer::request_shutdown(addr2);
+        let ratio = epoll_rps / threads_rps.max(1e-9);
+        println!(
+            "low_fanin_ab: epoll {epoll_rps:.1} rps vs threads {threads_rps:.1} rps \
+             (ratio {ratio:.3})"
+        );
+
+        // --- flash crowd under fair admission -----------------------
+        let admission = AdmissionConfig {
+            utilization_budget: 0.9,
+            refresh: Duration::ZERO,
+            fair: true,
+            tenant_budget: BUDGET_RPS,
+            ..AdmissionConfig::default()
+        };
+        let (fserver, faddr) = spawn_server(IoModel::Epoll, admission);
+        let fcfg = FleetCfg {
+            conns: if smoke { 48 } else { 96 },
+            duration: dur,
+            warmup: warm,
+            aggregate_rps: 160.0,
+            pareto: false,
+            slow_frac: 0.0,
+            diurnal_amp: 0.0,
+            buckets: 4,
+            // A quarter of the fleet floods at 20× for the middle
+            // third of the run.
+            flash: Some((0.25, 20.0, dur / 3.0, 2.0 * dur / 3.0)),
+            grace,
+        };
+        let fo = run_fleet(&fserver, faddr, &fcfg);
+        CloudServer::request_shutdown(faddr);
+        let polite = &fo.class[0];
+        let flood = &fo.class[1];
+        println!(
+            "flash_crowd: polite shed {:.2} (retention {:.2}), flood shed {:.2} \
+             [{} polite / {} flood requests in window]",
+            polite.shed_rate(),
+            polite.retention(),
+            flood.shed_rate(),
+            polite.sent,
+            flood.sent
+        );
+
+        // --- diurnal cycle ------------------------------------------
+        let (dserver, daddr) = spawn_server(IoModel::Epoll, AdmissionConfig::default());
+        let dcfg = FleetCfg {
+            conns: if smoke { 64 } else { 256 },
+            duration: if smoke { 2.0 } else { 4.0 },
+            warmup: 0.0,
+            aggregate_rps: aggregate,
+            pareto: true,
+            slow_frac: 0.05,
+            diurnal_amp: 0.6,
+            buckets: 8,
+            flash: None,
+            grace,
+        };
+        let dout = run_fleet(&dserver, daddr, &dcfg);
+        CloudServer::request_shutdown(daddr);
+        let offered: Vec<usize> = dout.buckets.iter().map(|b| b.0).collect();
+        let peak = *offered.iter().max().unwrap_or(&0) as f64;
+        let trough = *offered.iter().min().unwrap_or(&0) as f64;
+        let swing = peak / trough.max(1.0);
+        println!("diurnal: offered per bucket {offered:?} (peak/trough {swing:.2})");
+
+        let doc = Json::obj(vec![
+            ("io_available", Json::num(1.0)),
+            ("smoke", Json::num(if smoke { 1.0 } else { 0.0 })),
+            ("target_conns", Json::num(target_conns.min(fd_cap.max(8)) as f64)),
+            ("max_conns_sustained", Json::num(max_conns_sustained as f64)),
+            ("scaling", Json::arr(scaling)),
+            (
+                "low_fanin_ab",
+                Json::obj(vec![
+                    ("clients", Json::num(8.0)),
+                    ("epoll_rps", Json::num(epoll_rps)),
+                    ("threads_rps", Json::num(threads_rps)),
+                    ("epoll_vs_threads", Json::num(ratio)),
+                ]),
+            ),
+            (
+                "flash_crowd",
+                Json::obj(vec![
+                    ("budget_rps", Json::num(BUDGET_RPS)),
+                    ("polite_sent", Json::num(polite.sent as f64)),
+                    ("flood_sent", Json::num(flood.sent as f64)),
+                    ("polite_shed_rate", Json::num(polite.shed_rate())),
+                    ("flood_shed_rate", Json::num(flood.shed_rate())),
+                    ("polite_retention", Json::num(polite.retention())),
+                    (
+                        "flood_over_polite_shed",
+                        Json::num(flood.shed_rate() / polite.shed_rate().max(1e-6)),
+                    ),
+                ]),
+            ),
+            (
+                "diurnal",
+                Json::obj(vec![
+                    (
+                        "buckets",
+                        Json::arr(
+                            dout.buckets
+                                .iter()
+                                .map(|&(o, s)| {
+                                    Json::obj(vec![
+                                        ("offered", Json::num(o as f64)),
+                                        ("served", Json::num(s as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("peak_trough_ratio", Json::num(swing)),
+                ]),
+            ),
+        ]);
+        std::fs::write("BENCH_c10k.json", doc.to_pretty()).expect("write BENCH_c10k.json");
+        println!(
+            "wrote BENCH_c10k.json ({} conns sustained, epoll/threads {ratio:.3})",
+            max_conns_sustained
+        );
+    }
+}

@@ -18,7 +18,7 @@ use jalad::network::SimChannel;
 use jalad::predictor::Tables;
 use jalad::profiler::{measure_stages, DeviceModel, LatencyTables};
 use jalad::runtime::{BatchConfig, Executor, ExecutorPool, Manifest};
-use jalad::server::{CloudServer, ServeConfig};
+use jalad::server::{CloudServer, IoModel, ServeConfig};
 use jalad::util::cli::Args;
 
 fn main() {
@@ -74,6 +74,16 @@ fn main() {
         "tenant",
         "",
         "infer --connect: explicit tenant id sent with every request (empty = per-connection)",
+    )
+    .opt(
+        "io",
+        "auto",
+        "serve-cloud: socket transport — epoll reactor or blocking threads (threads|epoll|auto)",
+    )
+    .opt(
+        "max-conns",
+        "16384",
+        "serve-cloud: refuse (Busy) connections past this many concurrently assigned",
     )
     .flag(
         "fair-admission",
@@ -198,12 +208,21 @@ fn run(command: &str, args: &Args) -> Result<()> {
                     ..jalad::server::AdmissionConfig::default()
                 },
                 pin_shards: args.get_flag("pin-shards"),
+                io: IoModel::parse(args.get("io"))?,
+                max_conns: args.get_usize("max-conns").max(1),
             };
+            let io = cfg.io;
             let server = Arc::new(CloudServer::with_pool(pool, cfg));
             let (addr, handle) = Arc::clone(&server).spawn(args.get("addr"))?;
             println!(
-                "cloud server on {addr}: {shards} shard(s), max batch {}, gather {}..{} µs{}{}{}{} \
+                "cloud server on {addr}: {shards} shard(s), {} transport, max {} conns, \
+                 max batch {}, gather {}..{} µs{}{}{}{} \
                  (Ctrl-C or a Shutdown frame stops it)",
+                match io {
+                    IoModel::Epoll => "epoll",
+                    IoModel::Threads => "threads",
+                },
+                args.get_usize("max-conns").max(1),
                 args.get_usize("max-batch"),
                 args.get_usize("gather-min-us"),
                 args.get_usize("gather-us"),

@@ -126,7 +126,10 @@ impl Histogram {
 /// data requests that were well-framed but failed in handling;
 /// `sheds` counts data requests admission control refused with a
 /// `Busy` frame (they are *also* counted in `requests` — a shed is a
-/// data request the server chose not to serve, not a protocol event).
+/// data request the server chose not to serve, not a protocol event);
+/// `conn_sheds` counts whole connections refused at the accept
+/// boundary by the `max_conns` guard (counted in `connections`, never
+/// in `requests` — no frame of theirs was ever read).
 #[derive(Debug, Default)]
 pub struct Counters {
     pub requests: AtomicU64,
@@ -138,6 +141,7 @@ pub struct Counters {
     pub probe_bytes: AtomicU64,
     pub malformed: AtomicU64,
     pub sheds: AtomicU64,
+    pub conn_sheds: AtomicU64,
 }
 
 impl Counters {
@@ -170,6 +174,12 @@ impl Counters {
     }
     pub fn sheds(&self) -> u64 {
         self.sheds.load(Ordering::Relaxed)
+    }
+    pub fn inc_conn_sheds(&self) {
+        self.conn_sheds.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn conn_sheds(&self) -> u64 {
+        self.conn_sheds.load(Ordering::Relaxed)
     }
     pub fn connections(&self) -> u64 {
         self.connections.load(Ordering::Relaxed)

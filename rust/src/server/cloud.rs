@@ -13,11 +13,29 @@
 //! * `Image` — the cloud-only path: decode the PNG-like image, run the
 //!   full model on the connection's affinity shard.
 //!
-//! Concurrency model: the accept loop hands each connection to a fixed
-//! [`ThreadPool`]; when every pooled lane is parked on a long-lived
-//! connection, further connections run on dedicated overflow threads so
-//! control traffic (Stats/Shutdown) can never starve behind data
-//! connections. Compute is an [`ExecutorPool`] of independently-locked
+//! Concurrency model — two selectable transports over one shared
+//! frame-handling core ([`CloudServer::process_frame`], so their
+//! observable behavior is identical by construction):
+//!
+//! * [`IoModel::Threads`] — the accept loop hands each connection to a
+//!   fixed [`ThreadPool`]; when every pooled lane is parked on a
+//!   long-lived connection, further connections run on dedicated
+//!   overflow threads so control traffic (Stats/Shutdown) can never
+//!   starve behind data connections;
+//! * [`IoModel::Epoll`] (default on Linux) — one reactor thread
+//!   multiplexes every connection over nonblocking sockets
+//!   ([`server::epoll`](crate::server::epoll)), assembling frames
+//!   incrementally and dispatching only *complete* data requests to
+//!   the worker pool; the workers do pure compute, never block on a
+//!   socket, and the thread count no longer bounds the connection
+//!   count — 10K+ idle or slow connections cost one fd + one
+//!   assembler each.
+//!
+//! Either way, past `max_conns` assigned connections the acceptor
+//! answers with a `Busy` frame (telemetry attached, `conn_sheds`
+//! counted) and closes — admission control at the accept boundary,
+//! replacing any unbounded thread growth. Compute is an
+//! [`ExecutorPool`] of independently-locked
 //! executors — the connection id is the shard affinity — and
 //! concurrent signature-compatible tails — across models, when their
 //! tail geometries match (pad-and-stack for matching suffixes, within
@@ -69,6 +87,44 @@ use crate::util::threadpool::ThreadPool;
 
 /// Default connection-worker count (the pooled serving lanes).
 pub const DEFAULT_WORKERS: usize = 16;
+
+/// Default cap on concurrently-assigned connections (the accept
+/// guard). Generous — the epoll transport holds an idle connection for
+/// one fd + one assembler — but finite, so a connection flood degrades
+/// into polite `Busy` refusals instead of fd exhaustion.
+pub const DEFAULT_MAX_CONNS: usize = 16 * 1024;
+
+/// Which transport moves bytes between sockets and the frame core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoModel {
+    /// Blocking sockets, one (pooled) thread per connection.
+    Threads,
+    /// One nonblocking reactor thread multiplexes every connection;
+    /// the worker pool only runs compute. Linux only.
+    Epoll,
+}
+
+impl IoModel {
+    /// The default for this host: the reactor where the syscalls
+    /// exist, the portable thread-per-connection transport elsewhere.
+    pub fn default_for_host() -> Self {
+        if crate::util::reactor::Reactor::available() {
+            IoModel::Epoll
+        } else {
+            IoModel::Threads
+        }
+    }
+
+    /// Parse a `--io` CLI value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "threads" => Ok(IoModel::Threads),
+            "epoll" => Ok(IoModel::Epoll),
+            "auto" => Ok(Self::default_for_host()),
+            other => Err(anyhow!("unknown io model {other:?} (want threads|epoll|auto)")),
+        }
+    }
+}
 
 /// Shard-aware admission control (§III-E consumed cloud-side): when
 /// the compute spine is over budget, new data requests are refused
@@ -143,8 +199,16 @@ pub struct ServeConfig {
     /// Pin each connection worker to the core its affinity shard maps
     /// to (best-effort `sched_setaffinity`; no-op off Linux). Shard
     /// affinity is connection-stable, so this keeps one shard's work
-    /// on one core's cache hierarchy.
+    /// on one core's cache hierarchy. Threads transport only: under
+    /// the reactor, workers take requests from every connection and a
+    /// per-connection pin would be meaningless.
     pub pin_shards: bool,
+    /// Socket transport (see [`IoModel`]).
+    pub io: IoModel,
+    /// Accept guard: past this many assigned connections, new arrivals
+    /// get a `Busy` frame and a close instead of a thread or a
+    /// reactor slot.
+    pub max_conns: usize,
 }
 
 impl Default for ServeConfig {
@@ -154,6 +218,8 @@ impl Default for ServeConfig {
             batch: BatchConfig::default(),
             admission: AdmissionConfig::default(),
             pin_shards: false,
+            io: IoModel::default_for_host(),
+            max_conns: DEFAULT_MAX_CONNS,
         }
     }
 }
@@ -340,6 +406,17 @@ impl LoadMonitor {
     }
 }
 
+/// What the transport should do with the connection after
+/// [`CloudServer::process_frame`] returns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum FrameAction {
+    /// Keep reading frames.
+    Continue,
+    /// Flush any pending reply bytes, then close the connection
+    /// (clean EOF, unrecoverable framing violation, or Shutdown).
+    Close,
+}
+
 /// Outcome of an admitted-or-shed data request.
 enum Served {
     /// Logits are in the scratch's float buffer.
@@ -374,7 +451,7 @@ fn tenant_label(key: u64) -> String {
 pub struct CloudServer {
     engine: Arc<BatchEngine>,
     manifest: Manifest,
-    cfg: ServeConfig,
+    pub(crate) cfg: ServeConfig,
     monitor: LoadMonitor,
     /// Per-tenant admitted/shed/bytes/queue-wait counters (explicit
     /// wire tenants and implicit per-connection tenants alike).
@@ -389,17 +466,19 @@ pub struct CloudServer {
     /// `counters.requests` over this, not tracked separately (one
     /// counter cannot desynchronize from itself).
     started: Instant,
-    stop: Arc<AtomicBool>,
-    scratch_pool: Arc<BufPool>,
-    workers: ThreadPool,
+    pub(crate) stop: Arc<AtomicBool>,
+    pub(crate) scratch_pool: Arc<BufPool>,
+    pub(crate) workers: ThreadPool,
     worker_count: usize,
-    /// Connections currently assigned (queued or serving). When this
-    /// reaches `worker_count`, new connections overflow to dedicated
-    /// threads so control frames (Stats/Shutdown) can never starve
-    /// behind long-lived data connections parked on every worker.
-    active_conns: Arc<AtomicUsize>,
+    /// Connections currently assigned (queued or serving). Under the
+    /// threads transport, reaching `worker_count` sends new
+    /// connections to dedicated overflow threads so control frames
+    /// (Stats/Shutdown) can never starve behind long-lived data
+    /// connections parked on every worker; under either transport,
+    /// reaching `cfg.max_conns` refuses them at accept.
+    pub(crate) active_conns: Arc<AtomicUsize>,
     /// Monotonic connection ids — the shard affinity.
-    conn_seq: Arc<AtomicUsize>,
+    pub(crate) conn_seq: Arc<AtomicUsize>,
 }
 
 impl CloudServer {
@@ -491,50 +570,96 @@ impl CloudServer {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let me = Arc::clone(&self);
-        let handle = std::thread::spawn(move || {
-            for conn in listener.incoming() {
-                if me.stop.load(Ordering::Relaxed) {
-                    break;
-                }
-                match conn {
-                    Ok(stream) => {
-                        me.counters.inc_connections();
-                        let me2 = Arc::clone(&me);
-                        let conn_id = me.conn_seq.fetch_add(1, Ordering::Relaxed);
-                        let assigned =
-                            me.active_conns.fetch_add(1, Ordering::SeqCst);
-                        let job = move || {
-                            // Decrement on all exits, including panics
-                            // (a leak here would push every later
-                            // connection onto overflow threads).
-                            struct Dec(Arc<AtomicUsize>);
-                            impl Drop for Dec {
-                                fn drop(&mut self) {
-                                    self.0.fetch_sub(1, Ordering::SeqCst);
-                                }
-                            }
-                            let _dec = Dec(Arc::clone(&me2.active_conns));
-                            if let Err(e) = me2.serve_conn(stream, conn_id) {
-                                crate::log_debug!("cloud", "connection ended: {e:#}");
-                            }
-                        };
-                        if assigned < me.worker_count {
-                            me.workers.submit(job);
-                        } else {
-                            // All pooled lanes are parked on long-lived
-                            // connections: overflow to a dedicated
-                            // thread so this connection (possibly a
-                            // Stats/Shutdown control frame) is served.
-                            std::thread::spawn(job);
-                        }
-                    }
-                    Err(e) => {
-                        crate::log_warn!("cloud", "accept error: {e}");
-                    }
+        let handle = std::thread::spawn(move || match me.cfg.io {
+            IoModel::Epoll => {
+                // `epoll::serve` can only fail while setting the
+                // reactor up (before any connection is accepted), so
+                // falling back to the blocking transport is safe.
+                if let Err(e) = super::epoll::serve(&me, &listener) {
+                    crate::log_warn!(
+                        "cloud",
+                        "epoll reactor unavailable ({e:#}); using blocking accept loop"
+                    );
+                    Self::accept_loop_threads(&me, &listener);
                 }
             }
+            IoModel::Threads => Self::accept_loop_threads(&me, &listener),
         });
         Ok((local, handle))
+    }
+
+    /// The blocking transport: accept, then serve the whole connection
+    /// on one (pooled or overflow) thread.
+    fn accept_loop_threads(me: &Arc<Self>, listener: &TcpListener) {
+        // The epoll fallback path may have left the listener
+        // nonblocking; this loop needs `accept` to park.
+        listener.set_nonblocking(false).ok();
+        for conn in listener.incoming() {
+            if me.stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match conn {
+                Ok(stream) => {
+                    me.counters.inc_connections();
+                    let assigned = me.active_conns.fetch_add(1, Ordering::SeqCst);
+                    if assigned >= me.cfg.max_conns {
+                        me.active_conns.fetch_sub(1, Ordering::SeqCst);
+                        me.refuse_connection(stream);
+                        continue;
+                    }
+                    let me2 = Arc::clone(me);
+                    let conn_id = me.conn_seq.fetch_add(1, Ordering::Relaxed);
+                    let job = move || {
+                        // Decrement on all exits, including panics (a
+                        // leak here would eat into `max_conns` and
+                        // push every later connection onto overflow
+                        // threads).
+                        struct Dec(Arc<AtomicUsize>);
+                        impl Drop for Dec {
+                            fn drop(&mut self) {
+                                self.0.fetch_sub(1, Ordering::SeqCst);
+                            }
+                        }
+                        let _dec = Dec(Arc::clone(&me2.active_conns));
+                        if let Err(e) = me2.serve_conn(stream, conn_id) {
+                            crate::log_debug!("cloud", "connection ended: {e:#}");
+                        }
+                    };
+                    if assigned < me.worker_count {
+                        me.workers.submit(job);
+                    } else {
+                        // All pooled lanes are parked on long-lived
+                        // connections: overflow to a dedicated thread
+                        // (bounded by `max_conns`) so this connection
+                        // (possibly a Stats/Shutdown control frame) is
+                        // served.
+                        std::thread::spawn(job);
+                    }
+                }
+                Err(e) => {
+                    crate::log_warn!("cloud", "accept error: {e}");
+                }
+            }
+        }
+    }
+
+    /// Accept-boundary shed: the connection count is at `max_conns`,
+    /// so answer with a `Busy` frame carrying the current telemetry
+    /// (shedding forced on — the edge re-decouples off it exactly like
+    /// a per-request shed) and close. No thread, no reactor slot, no
+    /// scratch is spent on the refused connection.
+    pub(crate) fn refuse_connection(&self, mut stream: TcpStream) {
+        self.counters.inc_conn_sheds();
+        let mut t = self.telemetry();
+        t.shedding = true;
+        t.sheds = self.counters.sheds() as u32;
+        let mut wire = Vec::with_capacity(64);
+        t.encode_into(&mut wire);
+        stream.set_nodelay(true).ok();
+        // Best-effort: the reply races the peer's own timeout; if the
+        // kernel can't take ~30 bytes the connection just closes.
+        stream.set_nonblocking(false).ok();
+        let _ = proto::write_frame_raw(&mut stream, proto::KIND_BUSY, &wire);
     }
 
     fn serve_conn(&self, stream: TcpStream, conn_id: usize) -> Result<()> {
@@ -566,120 +691,143 @@ impl CloudServer {
                 Ok(r) => r,
                 Err(_) => return Ok(()), // peer closed mid-frame
             };
-            let kind = match recv {
-                RecvFrame::Data(k) => k,
-                RecvFrame::Eof => return Ok(()),
-                RecvFrame::Malformed { reason, resync } => {
-                    self.counters.inc_malformed();
-                    proto::write_frame_raw(&mut writer, proto::KIND_ERROR, reason.as_bytes())?;
-                    if resync {
-                        continue; // stream still framed; keep serving
-                    }
-                    return Ok(()); // length prefix unusable; close
-                }
-            };
-            let t0 = Instant::now();
-            let sc = &mut *scratch;
-            match kind {
-                proto::KIND_FEATURES => {
-                    // Tenant identity rides an optional trailer; the
-                    // body left after stripping it is exactly the
-                    // pre-tenant frame (absent trailer ⇒ implicit
-                    // per-connection tenant, nothing stripped). The
-                    // codec header declares the frame's exact length,
-                    // so a trailer is looked for only in bytes beyond
-                    // it — a pre-tenant frame whose entropy payload
-                    // happens to end in trailer-looking bytes can
-                    // never be misread.
-                    let raw_len = sc.frame.len();
-                    let (body_len, wire_tenant) = match feature::frame_len(&sc.frame) {
-                        Some(flen) if sc.frame.len() <= flen => (sc.frame.len(), None),
-                        _ => proto::split_tenant_trailer(&sc.frame),
-                    };
-                    sc.frame.truncate(body_len);
-                    let tenant = tenant_key(conn_id, wire_tenant);
-                    let tc = self.tenant_counters(&mut tenant_memo, tenant);
-                    tc.add_bytes(raw_len as u64);
-                    self.note_data_request(raw_len);
-                    if self.cfg.admission.fair {
-                        self.fairness.note_arrival(tenant, t0);
-                    }
-                    let telemetry = self.telemetry();
-                    let deadline = self.request_deadline(t0);
-                    let result =
-                        self.handle_features(conn_id, sc, telemetry.shedding, deadline, tenant);
-                    self.reply_data(&mut writer, sc, t0, telemetry, result, &tc)?;
-                }
-                proto::KIND_IMAGE => {
-                    let raw_len = sc.frame.len();
-                    let (body_len, wire_tenant) = proto::split_tenant_trailer(&sc.frame);
-                    sc.frame.truncate(body_len);
-                    let tenant = tenant_key(conn_id, wire_tenant);
-                    let tc = self.tenant_counters(&mut tenant_memo, tenant);
-                    tc.add_bytes(raw_len as u64);
-                    self.note_data_request(raw_len);
-                    if self.cfg.admission.fair {
-                        self.fairness.note_arrival(tenant, t0);
-                    }
-                    let telemetry = self.telemetry();
-                    // Full-model work is the most expensive thing
-                    // admission can refuse; shed before decoding.
-                    let shed = if telemetry.shedding {
-                        match self.fair_decision(tenant, t0) {
-                            FairDecision::Admit => None,
-                            FairDecision::Shed { backoff } => {
-                                Some(backoff.as_secs_f64() as f32 * 1e3)
-                            }
-                            FairDecision::Global => Some(0.0),
-                        }
-                    } else {
-                        None
-                    };
-                    let result = match shed {
-                        Some(backoff_ms) => Ok(Served::Shed { backoff_ms }),
-                        None if sc.frame.len() < 4 => Err(anyhow!("short image frame")),
-                        None => {
-                            let model_id = u16::from_le_bytes([sc.frame[0], sc.frame[1]]);
-                            let Scratch { frame, floats, .. } = sc;
-                            self.handle_image(conn_id, model_id, &frame[4..], floats)
-                                .map(|()| Served::Logits)
-                        }
-                    };
-                    self.reply_data(&mut writer, sc, t0, telemetry, result, &tc)?;
-                }
-                proto::KIND_STATS => {
-                    self.counters.inc_control();
-                    let json = self.stats_json();
-                    proto::write_frame_raw(&mut writer, proto::KIND_STATS_REPLY, json.as_bytes())?;
-                }
-                proto::KIND_PROBE => {
-                    // Bandwidth probe: acknowledge immediately; the edge
-                    // times the (throttled) upload of the padding. Probe
-                    // padding is accounted separately from data ingress
-                    // so req/bytes rates stay honest.
-                    self.counters.inc_control();
-                    self.counters.add_probe_bytes(sc.frame.len() as u64);
-                    proto::write_frame_raw(&mut writer, proto::KIND_PROBE_ACK, &[])?;
-                }
-                proto::KIND_SHUTDOWN => {
-                    self.counters.inc_control();
-                    self.stop.store(true, Ordering::Relaxed);
-                    // The accept loop unblocks on the next connection
-                    // (`request_shutdown` makes one).
-                    return Ok(());
-                }
-                other => {
-                    // Framed correctly but nonsensical here (e.g. a
-                    // Logits frame sent *to* the server).
-                    self.counters.inc_malformed();
-                    proto::write_frame_raw(
-                        &mut writer,
-                        proto::KIND_ERROR,
-                        format!("unexpected frame kind {other}").as_bytes(),
-                    )?;
-                }
+            match self.process_frame(recv, conn_id, &mut scratch, &mut tenant_memo, &mut writer)? {
+                FrameAction::Continue => {}
+                FrameAction::Close => return Ok(()),
             }
         }
+    }
+
+    /// Handle one received frame: the transport-independent core both
+    /// the blocking and the epoll server drive. The payload (for
+    /// `Data`) is in `sc.frame`; replies go to `writer` — a blocking
+    /// socket under [`IoModel::Threads`], an
+    /// [`Outbox`](crate::server::proto::Outbox) or a detached reply
+    /// buffer under [`IoModel::Epoll`]. Keeping every counter bump,
+    /// admission decision and reply byte in here is what makes the two
+    /// transports behaviorally identical by construction.
+    pub(crate) fn process_frame(
+        &self,
+        recv: RecvFrame,
+        conn_id: usize,
+        sc: &mut Scratch,
+        tenant_memo: &mut Option<(u64, Arc<TenantCounters>)>,
+        writer: &mut impl std::io::Write,
+    ) -> Result<FrameAction> {
+        let kind = match recv {
+            RecvFrame::Data(k) => k,
+            RecvFrame::Eof => return Ok(FrameAction::Close),
+            RecvFrame::Malformed { reason, resync } => {
+                self.counters.inc_malformed();
+                proto::write_frame_raw(writer, proto::KIND_ERROR, reason.as_bytes())?;
+                if resync {
+                    return Ok(FrameAction::Continue); // stream still framed; keep serving
+                }
+                return Ok(FrameAction::Close); // length prefix unusable; close
+            }
+        };
+        let t0 = Instant::now();
+        match kind {
+            proto::KIND_FEATURES => {
+                // Tenant identity rides an optional trailer; the
+                // body left after stripping it is exactly the
+                // pre-tenant frame (absent trailer ⇒ implicit
+                // per-connection tenant, nothing stripped). The
+                // codec header declares the frame's exact length,
+                // so a trailer is looked for only in bytes beyond
+                // it — a pre-tenant frame whose entropy payload
+                // happens to end in trailer-looking bytes can
+                // never be misread.
+                let raw_len = sc.frame.len();
+                let (body_len, wire_tenant) = match feature::frame_len(&sc.frame) {
+                    Some(flen) if sc.frame.len() <= flen => (sc.frame.len(), None),
+                    _ => proto::split_tenant_trailer(&sc.frame),
+                };
+                sc.frame.truncate(body_len);
+                let tenant = tenant_key(conn_id, wire_tenant);
+                let tc = self.tenant_counters(tenant_memo, tenant);
+                tc.add_bytes(raw_len as u64);
+                self.note_data_request(raw_len);
+                if self.cfg.admission.fair {
+                    self.fairness.note_arrival(tenant, t0);
+                }
+                let telemetry = self.telemetry();
+                let deadline = self.request_deadline(t0);
+                let result =
+                    self.handle_features(conn_id, sc, telemetry.shedding, deadline, tenant);
+                self.reply_data(writer, sc, t0, telemetry, result, &tc)?;
+            }
+            proto::KIND_IMAGE => {
+                let raw_len = sc.frame.len();
+                let (body_len, wire_tenant) = proto::split_tenant_trailer(&sc.frame);
+                sc.frame.truncate(body_len);
+                let tenant = tenant_key(conn_id, wire_tenant);
+                let tc = self.tenant_counters(tenant_memo, tenant);
+                tc.add_bytes(raw_len as u64);
+                self.note_data_request(raw_len);
+                if self.cfg.admission.fair {
+                    self.fairness.note_arrival(tenant, t0);
+                }
+                let telemetry = self.telemetry();
+                // Full-model work is the most expensive thing
+                // admission can refuse; shed before decoding.
+                let shed = if telemetry.shedding {
+                    match self.fair_decision(tenant, t0) {
+                        FairDecision::Admit => None,
+                        FairDecision::Shed { backoff } => {
+                            Some(backoff.as_secs_f64() as f32 * 1e3)
+                        }
+                        FairDecision::Global => Some(0.0),
+                    }
+                } else {
+                    None
+                };
+                let result = match shed {
+                    Some(backoff_ms) => Ok(Served::Shed { backoff_ms }),
+                    None if sc.frame.len() < 4 => Err(anyhow!("short image frame")),
+                    None => {
+                        let model_id = u16::from_le_bytes([sc.frame[0], sc.frame[1]]);
+                        let Scratch { frame, floats, .. } = sc;
+                        self.handle_image(conn_id, model_id, &frame[4..], floats)
+                            .map(|()| Served::Logits)
+                    }
+                };
+                self.reply_data(writer, sc, t0, telemetry, result, &tc)?;
+            }
+            proto::KIND_STATS => {
+                self.counters.inc_control();
+                let json = self.stats_json();
+                proto::write_frame_raw(writer, proto::KIND_STATS_REPLY, json.as_bytes())?;
+            }
+            proto::KIND_PROBE => {
+                // Bandwidth probe: acknowledge immediately; the edge
+                // times the (throttled) upload of the padding. Probe
+                // padding is accounted separately from data ingress
+                // so req/bytes rates stay honest.
+                self.counters.inc_control();
+                self.counters.add_probe_bytes(sc.frame.len() as u64);
+                proto::write_frame_raw(writer, proto::KIND_PROBE_ACK, &[])?;
+            }
+            proto::KIND_SHUTDOWN => {
+                self.counters.inc_control();
+                self.stop.store(true, Ordering::Relaxed);
+                // The accept loop unblocks on the next connection
+                // (`request_shutdown` makes one); the reactor notices
+                // on its next wait tick.
+                return Ok(FrameAction::Close);
+            }
+            other => {
+                // Framed correctly but nonsensical here (e.g. a
+                // Logits frame sent *to* the server).
+                self.counters.inc_malformed();
+                proto::write_frame_raw(
+                    writer,
+                    proto::KIND_ERROR,
+                    format!("unexpected frame kind {other}").as_bytes(),
+                )?;
+            }
+        }
+        Ok(FrameAction::Continue)
     }
 
     /// This connection's tenant counters, through a one-entry memo:
@@ -814,6 +962,7 @@ impl CloudServer {
             ("malformed", Json::num(self.counters.malformed_count() as f64)),
             ("compiled", Json::num(pool.cached_count() as f64)),
             ("connections", Json::num(self.counters.connections() as f64)),
+            ("conn_sheds", Json::num(self.counters.conn_sheds() as f64)),
             ("pool_hits", Json::num(ps.hits as f64)),
             ("pool_misses", Json::num(ps.misses as f64)),
             (

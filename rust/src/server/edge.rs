@@ -52,7 +52,28 @@ pub const MAX_BUSY_RETRIES: usize = 4;
 /// total time slept so a hostile hint can't wedge a caller either.
 pub const MAX_PACED_RETRIES: usize = 16;
 const MAX_PACED_SLEEP_TOTAL: f64 = 1.0; // seconds per request
-const MAX_SINGLE_SLEEP: f64 = 0.25; // seconds per retry
+const MAX_SINGLE_SLEEP: f64 = 0.25; // seconds per retry (pre-jitter)
+
+/// Additive jitter on paced retry sleeps, as a fraction of the hinted
+/// backoff: each nap is stretched by up to this much so a fleet of
+/// edges shed in the same admission window doesn't retry in the same
+/// window too (synchronized retries re-create the very overload the
+/// backoff hint is draining). Additive-only — a nap is never *shorter*
+/// than the hint, so the cloud's "your share refills in this long"
+/// contract holds.
+pub const BACKOFF_JITTER_FRAC: f64 = 0.5;
+
+/// How long a blocked `connect` may hang before the edge gives up. A
+/// cloud refusing at the accept boundary answers fast (Busy or RST);
+/// only a black-holed address leaves the edge in SYN retry — bound it
+/// well under the paper's end-to-end latency scale instead of the
+/// kernel's minutes-long default.
+pub const CONNECT_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(5);
+
+/// Per-process seed counter so concurrently-built edge clients jitter
+/// independently (golden-ratio stride keeps seeds well spread).
+static JITTER_SEED: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(0x9E37_79B9_7F4A_7C15);
 
 pub struct EdgeClient<'a> {
     session: Session<'a>,
@@ -71,6 +92,9 @@ pub struct EdgeClient<'a> {
     rx_buf: Vec<u8>,
     /// Reusable decoded logits.
     logits: Vec<f32>,
+    /// Private jitter stream for paced retry sleeps (never part of the
+    /// deterministic data-generation streams).
+    jitter: crate::util::rng::XorShift64Star,
 }
 
 /// One served request's outcome on the edge side.
@@ -96,7 +120,8 @@ impl<'a> EdgeClient<'a> {
         uplink: RateHandle,
         controller: ControlPlane,
     ) -> Result<Self> {
-        let stream = TcpStream::connect(addr)?;
+        // Bounded connect: see [`CONNECT_TIMEOUT`].
+        let stream = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)?;
         stream.set_nodelay(true)?;
         let reader = BufReader::new(stream.try_clone()?);
         // Small burst: feature frames are a few KB, so a default 64 KiB
@@ -104,6 +129,9 @@ impl<'a> EdgeClient<'a> {
         // (§Perf log — this showed up as bimodal latencies).
         let writer = ThrottledWriter::with_burst(stream, uplink, 2048);
         let session = Session::new(exe, model)?;
+        let seed = JITTER_SEED
+            .fetch_add(0x9E37_79B9_7F4A_7C15, std::sync::atomic::Ordering::Relaxed)
+            ^ u64::from(addr.port());
         Ok(Self {
             session,
             reader,
@@ -113,6 +141,7 @@ impl<'a> EdgeClient<'a> {
             trailer: Vec::new(),
             rx_buf: Vec::new(),
             logits: Vec::new(),
+            jitter: crate::util::rng::XorShift64Star::new(seed),
         })
     }
 
@@ -235,8 +264,14 @@ impl<'a> EdgeClient<'a> {
                                  (slept {slept:.3}s, last plan {before:?})"
                             ));
                         }
-                        let nap = backoff
-                            .min(MAX_SINGLE_SLEEP)
+                        // Jitter de-synchronizes a fleet that was all
+                        // shed in the same window; applied before the
+                        // caps so the per-retry and total budgets
+                        // still hold exactly.
+                        let jittered = backoff
+                            * (1.0 + BACKOFF_JITTER_FRAC * self.jitter.next_f64());
+                        let nap = jittered
+                            .min(MAX_SINGLE_SLEEP * (1.0 + BACKOFF_JITTER_FRAC))
                             .min(MAX_PACED_SLEEP_TOTAL - slept);
                         std::thread::sleep(std::time::Duration::from_secs_f64(nap));
                         slept += nap;

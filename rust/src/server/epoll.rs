@@ -1,0 +1,484 @@
+//! The event-driven cloud transport: one reactor thread multiplexes
+//! every connection over nonblocking sockets.
+//!
+//! Layout of the machine:
+//!
+//! * the reactor thread owns all connection state (a slab indexed by
+//!   epoll token — no locks around it) and does all socket I/O:
+//!   accepting, incremental frame assembly
+//!   ([`FrameAssembler`](crate::server::proto::FrameAssembler)) and
+//!   buffered partial writes ([`Outbox`](crate::server::proto::Outbox));
+//! * complete **data** frames (Features/Image — the kinds that run
+//!   inference) are dispatched to the shared worker pool; the worker
+//!   runs the same [`CloudServer::process_frame`] core as the blocking
+//!   transport against the connection's scratch and writes the reply
+//!   into a detached buffer, then posts a completion and wakes the
+//!   reactor (`eventfd`). Workers never touch a socket;
+//! * control frames (Stats/Probe/Shutdown), malformed input and EOF
+//!   are handled inline on the reactor thread — they are cheap and
+//!   must stay responsive even when every worker is busy;
+//! * one data request is in flight per connection at a time, and the
+//!   connection's read interest is dropped while it computes — exactly
+//!   the sequential request/reply semantics a blocking connection
+//!   worker has, so ordering-sensitive behavior (per-tenant counters,
+//!   admission arrival order per connection, reply order) is
+//!   preserved. Level-triggered registration makes the pause safe: any
+//!   bytes the kernel already buffered are re-announced when read
+//!   interest returns.
+//!
+//! Per-connection cost while idle is one fd, one assembler and one
+//! pooled scratch — the worker count no longer bounds the connection
+//! count, which is what lets the C10K bench hold thousands of slow
+//! edges against the same worker pool the blocking transport uses for
+//! sixteen.
+//!
+//! `serve` can only fail during setup (reactor creation, listener
+//! registration) — before any connection is accepted — so
+//! [`CloudServer::spawn`] can fall back to the blocking transport on
+//! error without double-serving anyone.
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use std::collections::VecDeque;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::sync::atomic::Ordering;
+    use std::sync::{Arc, Mutex};
+    use std::time::Duration;
+
+    use anyhow::{Context, Result};
+
+    use crate::metrics::TenantCounters;
+    use crate::server::cloud::{CloudServer, FrameAction};
+    use crate::server::proto::{self, Assembled, FrameAssembler, Outbox, RecvFrame};
+    use crate::util::pool::PooledScratch;
+    use crate::util::reactor::{Interest, Reactor};
+
+    /// Token for the listening socket (`u64::MAX` is the reactor's
+    /// internal wake token; connection tokens are slab indices).
+    const LISTENER_TOKEN: u64 = u64::MAX - 1;
+
+    /// How long `wait` may sleep between bookkeeping passes; bounds
+    /// shutdown-notice latency when no fd ever becomes ready.
+    const WAIT_TICK: Duration = Duration::from_millis(100);
+
+    /// Per-connection state. Everything here is owned by the reactor
+    /// thread; compute borrows `scratch`/`tenant_memo`/`reply` by move
+    /// (through a [`Completion`]) while `busy`.
+    struct Conn {
+        stream: TcpStream,
+        assembler: FrameAssembler,
+        outbox: Outbox,
+        /// Checked out of the server's pool at accept; `None` exactly
+        /// while a compute job holds it.
+        scratch: Option<PooledScratch>,
+        /// The same one-entry tenant memo a blocking connection worker
+        /// keeps on its stack.
+        tenant_memo: Option<(u64, Arc<TenantCounters>)>,
+        /// Recycled reply buffer (travels with the compute job).
+        reply: Vec<u8>,
+        conn_id: usize,
+        /// A data frame is at a worker; reads are paused.
+        busy: bool,
+        /// Drain the outbox, then close (EOF/Shutdown/unframeable).
+        close_after_flush: bool,
+        /// Interest currently armed in the reactor (re-armed only on
+        /// change — `epoll_ctl` per state change, not per event).
+        interest: Interest,
+    }
+
+    /// What a compute job hands back to the reactor.
+    struct Completion {
+        slot: usize,
+        scratch: Option<PooledScratch>,
+        memo: Option<(u64, Arc<TenantCounters>)>,
+        reply: Vec<u8>,
+        action: FrameAction,
+    }
+
+    /// Completion mailbox: workers push, the reactor drains. The wake
+    /// makes a park-free handoff — a completion posted while the
+    /// reactor sleeps in `epoll_wait` unparks it immediately.
+    struct DoneQueue {
+        q: Mutex<VecDeque<Completion>>,
+        reactor: Arc<Reactor>,
+    }
+
+    impl DoneQueue {
+        fn push(&self, c: Completion) {
+            self.q.lock().unwrap().push_back(c);
+            self.reactor.wake();
+        }
+
+        fn pop(&self) -> Option<Completion> {
+            self.q.lock().unwrap().pop_front()
+        }
+    }
+
+    /// A dispatched data request. Runs `process_frame` on a pool
+    /// worker; the `Drop` impl posts the completion even if the
+    /// handler panics (the pool's `catch_unwind` keeps the worker
+    /// alive, and the connection must never stay `busy` forever).
+    struct ComputeJob {
+        server: Arc<CloudServer>,
+        done: Arc<DoneQueue>,
+        slot: usize,
+        conn_id: usize,
+        kind: u8,
+        scratch: Option<PooledScratch>,
+        memo: Option<(u64, Arc<TenantCounters>)>,
+        reply: Vec<u8>,
+        action: FrameAction,
+        finished: bool,
+    }
+
+    impl ComputeJob {
+        fn run(&mut self) {
+            let sc = self.scratch.as_mut().expect("compute job owns the scratch");
+            let mut reply = std::mem::take(&mut self.reply);
+            let res = self.server.process_frame(
+                RecvFrame::Data(self.kind),
+                self.conn_id,
+                sc,
+                &mut self.memo,
+                &mut reply,
+            );
+            self.reply = reply;
+            self.action = match res {
+                Ok(a) => a,
+                Err(e) => {
+                    // A Vec writer cannot fail, so this is unreachable
+                    // in practice; mirror the blocking transport's
+                    // write-error behavior anyway: drop the connection
+                    // without emitting a possibly-partial reply.
+                    crate::log_debug!("cloud", "request failed: {e:#}");
+                    self.reply.clear();
+                    FrameAction::Close
+                }
+            };
+            self.finished = true;
+        }
+    }
+
+    impl Drop for ComputeJob {
+        fn drop(&mut self) {
+            if !self.finished {
+                // Unwinding out of `run`: never ship a partial reply
+                // (the blocking transport's panicking worker likewise
+                // drops its connection mid-stream, frame-aligned).
+                self.reply.clear();
+                self.action = FrameAction::Close;
+            }
+            self.done.push(Completion {
+                slot: self.slot,
+                scratch: self.scratch.take(),
+                memo: self.memo.take(),
+                reply: std::mem::take(&mut self.reply),
+                action: self.action,
+            });
+        }
+    }
+
+    struct State {
+        conns: Vec<Option<Conn>>,
+        free: Vec<usize>,
+    }
+
+    impl State {
+        fn alloc(&mut self, conn: Conn) -> usize {
+            match self.free.pop() {
+                Some(slot) => {
+                    self.conns[slot] = Some(conn);
+                    slot
+                }
+                None => {
+                    self.conns.push(Some(conn));
+                    self.conns.len() - 1
+                }
+            }
+        }
+    }
+
+    /// Run the event loop on the calling thread until a Shutdown frame
+    /// stops the server. Errors only during setup.
+    pub(crate) fn serve(server: &Arc<CloudServer>, listener: &TcpListener) -> Result<()> {
+        let reactor = Arc::new(Reactor::new().context("epoll reactor")?);
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        reactor
+            .register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)
+            .context("register listener")?;
+        let done = Arc::new(DoneQueue {
+            q: Mutex::new(VecDeque::new()),
+            reactor: Arc::clone(&reactor),
+        });
+        let mut state = State { conns: Vec::new(), free: Vec::new() };
+        let mut events = Vec::new();
+        loop {
+            if server.stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            if let Err(e) = reactor.wait(&mut events, Some(WAIT_TICK)) {
+                // Should not happen on a healthy epoll fd; don't spin.
+                crate::log_warn!("cloud", "reactor wait failed: {e}");
+                std::thread::sleep(WAIT_TICK);
+                continue;
+            }
+            while let Some(c) = done.pop() {
+                complete(server, &reactor, &done, &mut state, c);
+            }
+            for &ev in &events {
+                if ev.token == LISTENER_TOKEN {
+                    accept_ready(server, &reactor, &mut state, listener);
+                    continue;
+                }
+                let slot = ev.token as usize;
+                let busy = match state.conns.get(slot).and_then(Option::as_ref) {
+                    Some(conn) => conn.busy,
+                    None => continue, // closed earlier in this batch
+                };
+                // While busy nothing is armed but ERR/HUP can still
+                // fire; the completion path will observe the dead
+                // socket when it flushes.
+                if busy {
+                    continue;
+                }
+                if (ev.readable || ev.hangup)
+                    && !drive_read(server, &done, &mut state, slot)
+                {
+                    close(server, &reactor, &mut state, slot);
+                    continue;
+                }
+                settle(server, &reactor, &mut state, slot);
+            }
+        }
+    }
+
+    /// Accept every pending connection (level-triggered: stop at
+    /// `WouldBlock`). Admission (`max_conns`), connection counters and
+    /// conn-id assignment match the blocking accept loop exactly.
+    fn accept_ready(
+        server: &Arc<CloudServer>,
+        reactor: &Reactor,
+        state: &mut State,
+        listener: &TcpListener,
+    ) {
+        loop {
+            let stream = match listener.accept() {
+                Ok((stream, _)) => stream,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Transient accept failures (EMFILE under fd
+                    // pressure, aborted handshakes) must not kill the
+                    // loop; the listener stays registered.
+                    crate::log_warn!("cloud", "accept error: {e}");
+                    return;
+                }
+            };
+            server.counters.inc_connections();
+            let assigned = server.active_conns.fetch_add(1, Ordering::SeqCst);
+            if assigned >= server.cfg.max_conns {
+                server.active_conns.fetch_sub(1, Ordering::SeqCst);
+                server.refuse_connection(stream);
+                continue;
+            }
+            stream.set_nodelay(true).ok();
+            if stream.set_nonblocking(true).is_err() {
+                server.active_conns.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            let conn_id = server.conn_seq.fetch_add(1, Ordering::Relaxed);
+            let conn = Conn {
+                stream,
+                assembler: FrameAssembler::new(),
+                outbox: Outbox::new(),
+                scratch: Some(server.scratch_pool.get()),
+                tenant_memo: None,
+                reply: Vec::new(),
+                conn_id,
+                busy: false,
+                close_after_flush: false,
+                interest: Interest::READ,
+            };
+            let slot = state.alloc(conn);
+            let fd = state.conns[slot].as_ref().unwrap().stream.as_raw_fd();
+            if reactor.register(fd, slot as u64, Interest::READ).is_err() {
+                state.conns[slot] = None;
+                state.free.push(slot);
+                server.active_conns.fetch_sub(1, Ordering::SeqCst);
+            }
+            // Any bytes the client already sent surface on the next
+            // wait (level-triggered), so no eager read is needed.
+        }
+    }
+
+    /// Assemble and handle frames until the socket runs dry, a data
+    /// frame goes to compute, or the connection is marked for close.
+    /// Returns `false` when the connection died (I/O error or
+    /// truncated frame) and must be dropped without a flush.
+    fn drive_read(
+        server: &Arc<CloudServer>,
+        done: &Arc<DoneQueue>,
+        state: &mut State,
+        slot: usize,
+    ) -> bool {
+        loop {
+            let conn = state.conns[slot].as_mut().expect("drive_read on a live slot");
+            if conn.busy || conn.close_after_flush {
+                return true;
+            }
+            let recv = {
+                let sc = conn.scratch.as_mut().expect("scratch present while not busy");
+                match conn.assembler.poll_frame(&mut conn.stream, &mut sc.frame) {
+                    Ok(Assembled::NeedMore) => return true,
+                    Ok(Assembled::Frame(f)) => f,
+                    Err(_) => return false, // peer closed mid-frame
+                }
+            };
+            match recv {
+                RecvFrame::Data(kind)
+                    if kind == proto::KIND_FEATURES || kind == proto::KIND_IMAGE =>
+                {
+                    conn.busy = true;
+                    let job = ComputeJob {
+                        server: Arc::clone(server),
+                        done: Arc::clone(done),
+                        slot,
+                        conn_id: conn.conn_id,
+                        kind,
+                        scratch: conn.scratch.take(),
+                        memo: conn.tenant_memo.take(),
+                        reply: std::mem::take(&mut conn.reply),
+                        action: FrameAction::Close,
+                        finished: false,
+                    };
+                    server.workers.submit(move || {
+                        let mut job = job;
+                        job.run();
+                    });
+                    return true;
+                }
+                other => {
+                    // Control traffic, EOF and malformed input run
+                    // inline: cheap, and must not queue behind compute.
+                    let sc = conn.scratch.as_mut().unwrap();
+                    match server.process_frame(
+                        other,
+                        conn.conn_id,
+                        sc,
+                        &mut conn.tenant_memo,
+                        &mut conn.outbox,
+                    ) {
+                        Ok(FrameAction::Continue) => {}
+                        Ok(FrameAction::Close) => {
+                            conn.close_after_flush = true;
+                            return true;
+                        }
+                        Err(_) => return false, // Outbox writes can't fail; defensive
+                    }
+                }
+            }
+        }
+    }
+
+    /// Apply one compute completion: restore the connection's borrowed
+    /// state, queue the reply, resume reading.
+    fn complete(
+        server: &Arc<CloudServer>,
+        reactor: &Reactor,
+        done: &Arc<DoneQueue>,
+        state: &mut State,
+        c: Completion,
+    ) {
+        let Some(conn) = state.conns.get_mut(c.slot).and_then(Option::as_mut) else {
+            return; // connection vanished (cannot normally happen: busy conns aren't closed)
+        };
+        conn.busy = false;
+        conn.scratch = c.scratch;
+        conn.tenant_memo = c.memo;
+        let mut reply = c.reply;
+        match c.action {
+            FrameAction::Continue => {
+                conn.outbox.push(&reply);
+                reply.clear();
+                conn.reply = reply;
+                // More frames may already be buffered (pipelined
+                // client); serve them now rather than waiting for the
+                // next readiness event.
+                if !drive_read(server, done, state, c.slot) {
+                    close(server, reactor, state, c.slot);
+                    return;
+                }
+            }
+            FrameAction::Close => {
+                conn.close_after_flush = true;
+            }
+        }
+        settle(server, reactor, state, c.slot);
+    }
+
+    /// Flush pending reply bytes and reconcile the armed interest with
+    /// the connection's state; closes the connection when the outbox
+    /// drains after a close-after-flush, or on a write error.
+    fn settle(server: &Arc<CloudServer>, reactor: &Reactor, state: &mut State, slot: usize) {
+        let Some(conn) = state.conns.get_mut(slot).and_then(Option::as_mut) else {
+            return;
+        };
+        match conn.outbox.flush_to(&mut conn.stream) {
+            Ok(true) if conn.close_after_flush && !conn.busy => {
+                close(server, reactor, state, slot);
+                return;
+            }
+            Ok(_) => {}
+            Err(_) => {
+                if !conn.busy {
+                    close(server, reactor, state, slot);
+                }
+                return;
+            }
+        }
+        let conn = state.conns[slot].as_mut().unwrap();
+        let want = Interest {
+            readable: !conn.busy && !conn.close_after_flush,
+            writable: !conn.outbox.is_empty(),
+        };
+        if want != conn.interest {
+            if reactor.rearm(conn.stream.as_raw_fd(), slot as u64, want).is_err() && !conn.busy {
+                close(server, reactor, state, slot);
+                return;
+            }
+            if let Some(conn) = state.conns[slot].as_mut() {
+                conn.interest = want;
+            }
+        }
+    }
+
+    /// Drop a connection: unregister, close the socket, recycle the
+    /// slot. The scratch returns to the pool with the `Conn`.
+    fn close(server: &Arc<CloudServer>, reactor: &Reactor, state: &mut State, slot: usize) {
+        if let Some(conn) = state.conns[slot].take() {
+            let _ = reactor.deregister(conn.stream.as_raw_fd());
+            drop(conn);
+            state.free.push(slot);
+            server.active_conns.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod imp {
+    use std::net::TcpListener;
+    use std::sync::Arc;
+
+    use anyhow::{anyhow, Result};
+
+    use crate::server::cloud::CloudServer;
+
+    /// Stub: the reactor needs `epoll`; `CloudServer::spawn` falls back
+    /// to the blocking transport when this errors.
+    pub(crate) fn serve(_server: &Arc<CloudServer>, _listener: &TcpListener) -> Result<()> {
+        Err(anyhow!("epoll transport requires Linux"))
+    }
+}
+
+pub(crate) use imp::serve;

@@ -10,14 +10,23 @@
 //!   tenants (idle tenants' slack redistributes) and enforced with
 //!   per-tenant token buckets, so one aggressive edge cannot starve
 //!   the polite ones;
-//! * [`cloud`] — the cloud server: a threadpool worker per connection,
-//!   pooled per-connection scratch; feature frames are dequantized
-//!   natively on the connection worker and finished through the
-//!   sharded, micro-batched inference engine
+//! * [`cloud`] — the cloud server: pooled per-connection scratch;
+//!   feature frames are dequantized natively on a connection worker
+//!   and finished through the sharded, micro-batched inference engine
 //!   (`runtime::{ExecutorPool, BatchEngine}`); image frames run the
 //!   full model on the connection's affinity shard; shard-aware
 //!   admission control sheds over-budget work with `Busy` frames and
 //!   every logits reply piggybacks a compact load-telemetry block;
+//!   past `max_conns`, whole connections are refused at accept;
+//! * [`epoll`] — the event-driven transport (default on Linux): one
+//!   reactor thread (`util::reactor`, raw `epoll`/`eventfd`)
+//!   multiplexes every connection over nonblocking sockets, assembling
+//!   frames incrementally (`proto::FrameAssembler`) and buffering
+//!   partial writes (`proto::Outbox`); complete data requests are
+//!   dispatched to the worker pool, which therefore does only compute.
+//!   `--io threads` selects the blocking thread-per-connection
+//!   transport instead; both drive the same frame core, so behavior is
+//!   identical — only scalability differs;
 //! * [`edge`] — the edge client: drives the shared
 //!   `coordinator::session::Session` (head stages, quantize,
 //!   entropy-code), ships frames through the throttled socket, and
@@ -27,8 +36,9 @@
 pub mod admission;
 pub mod cloud;
 pub mod edge;
+pub mod epoll;
 pub mod proto;
 
 pub use admission::{FairAdmission, FairDecision};
-pub use cloud::{AdmissionConfig, CloudServer, ServeConfig};
+pub use cloud::{AdmissionConfig, CloudServer, IoModel, ServeConfig};
 pub use edge::EdgeClient;

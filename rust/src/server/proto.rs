@@ -114,6 +114,229 @@ pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<RecvFrame
     Ok(RecvFrame::Data(kind[0]))
 }
 
+/// Outcome of one [`FrameAssembler::poll_frame`] call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Assembled {
+    /// A complete frame, with exactly the semantics of
+    /// [`read_frame_into`]'s return (payload in the caller's buffer
+    /// for `Data`).
+    Frame(RecvFrame),
+    /// The transport ran dry mid-frame (`WouldBlock`); progress is
+    /// saved — call again when the fd is readable.
+    NeedMore,
+}
+
+/// Incremental, resumable reader of the wire framing — the same
+/// protocol as [`read_frame_into`], restated as a state machine over a
+/// *nonblocking* transport. `ErrorKind::WouldBlock` pauses the frame
+/// (header progress is kept internally, payload progress in the
+/// caller's buffer) instead of erroring, so one reactor thread can
+/// interleave thousands of half-received frames.
+///
+/// Guarantees the reactor leans on:
+/// * never reads past the current frame's end (pausing a connection
+///   mid-stream cannot swallow the next frame's bytes);
+/// * every call either makes progress, returns a frame, or reports
+///   `NeedMore` after the transport returned `WouldBlock` — a caller
+///   that only polls on readiness cannot busy-loop;
+/// * malformed input surfaces exactly like the blocking reader:
+///   unknown kind consumes its payload and resyncs, a bad length
+///   prefix is sticky ([`RecvFrame::Malformed`] with `resync: false`
+///   from then on — the stream can no longer be framed).
+#[derive(Debug, Default)]
+pub struct FrameAssembler {
+    /// The 5 header bytes (`len u32 LE` + `kind`) as received so far.
+    head: [u8; 5],
+    head_got: usize,
+    state: AsmState,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+enum AsmState {
+    /// Collecting the header; `head_got` bytes so far.
+    #[default]
+    Head,
+    /// Header complete; collecting `want` payload bytes into the
+    /// caller's buffer.
+    Payload { kind: u8, want: usize },
+    /// An unrecoverable length-prefix violation was seen; the stream
+    /// cannot be re-framed.
+    Broken(&'static str),
+}
+
+impl FrameAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// At a frame boundary with nothing buffered? (Used to distinguish
+    /// an idle connection from one that died mid-frame.)
+    pub fn is_idle(&self) -> bool {
+        matches!(self.state, AsmState::Head) && self.head_got == 0
+    }
+
+    /// Drive the assembler over whatever `r` has right now. `buf` is
+    /// the frame's payload accumulator — the caller passes the same
+    /// (per-connection) buffer until a frame completes; like
+    /// [`read_frame_into`] it is cleared at each frame start and holds
+    /// the full payload when `Frame(Data(_))` returns.
+    pub fn poll_frame(&mut self, r: &mut impl Read, buf: &mut Vec<u8>) -> Result<Assembled> {
+        loop {
+            match self.state {
+                AsmState::Broken(reason) => {
+                    return Ok(Assembled::Frame(RecvFrame::Malformed { reason, resync: false }))
+                }
+                AsmState::Head => {
+                    // Length first: a bad prefix must be rejected as
+                    // soon as its 4 bytes are in, before demanding a
+                    // kind byte that may never come (exactly when
+                    // `read_frame_into` rejects it).
+                    while self.head_got < 4 {
+                        match r.read(&mut self.head[self.head_got..4]) {
+                            Ok(0) if self.head_got == 0 => {
+                                return Ok(Assembled::Frame(RecvFrame::Eof))
+                            }
+                            Ok(0) => return Err(anyhow!("connection closed mid-frame")),
+                            Ok(n) => self.head_got += n,
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                return Ok(Assembled::NeedMore)
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                            Err(e) => return Err(e.into()),
+                        }
+                    }
+                    let len = u32::from_le_bytes(self.head[..4].try_into().unwrap()) as usize;
+                    if len == 0 || len > MAX_FRAME {
+                        self.state = AsmState::Broken("bad frame length");
+                        continue;
+                    }
+                    while self.head_got < 5 {
+                        match r.read(&mut self.head[4..5]) {
+                            Ok(0) => return Err(anyhow!("connection closed mid-frame")),
+                            Ok(n) => self.head_got += n,
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                return Ok(Assembled::NeedMore)
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                            Err(e) => return Err(e.into()),
+                        }
+                    }
+                    buf.clear();
+                    self.state = AsmState::Payload { kind: self.head[4], want: len - 1 };
+                }
+                AsmState::Payload { kind, want } => {
+                    if buf.len() < want {
+                        // `take` + `read_to_end` appends straight into the
+                        // reused capacity and — per its contract — keeps
+                        // the bytes already appended when it errors, so a
+                        // WouldBlock pause loses nothing and never reads
+                        // past the frame boundary.
+                        match r.by_ref().take((want - buf.len()) as u64).read_to_end(buf) {
+                            Ok(_) if buf.len() < want => {
+                                return Err(anyhow!("connection closed mid-frame"))
+                            }
+                            Ok(_) => {}
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                return Ok(Assembled::NeedMore)
+                            }
+                            Err(e) => return Err(e.into()),
+                        }
+                    }
+                    self.state = AsmState::Head;
+                    self.head_got = 0;
+                    if !(KIND_FEATURES..=KIND_BUSY).contains(&kind) {
+                        return Ok(Assembled::Frame(RecvFrame::Malformed {
+                            reason: "unknown frame kind",
+                            resync: true,
+                        }));
+                    }
+                    return Ok(Assembled::Frame(RecvFrame::Data(kind)));
+                }
+            }
+        }
+    }
+}
+
+/// Buffered partial writes for a nonblocking socket: reply bytes are
+/// staged here (it implements `Write`, so the reply builders target it
+/// directly), then [`Outbox::flush_to`] moves as much as the kernel
+/// will take and keeps the rest for the next writability event. The
+/// threadpool transport never needs this — its sockets block — but the
+/// reactor must never park its one thread in `write_all`.
+#[derive(Debug, Default)]
+pub struct Outbox {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already written to the socket.
+    pos: usize,
+}
+
+/// Compact the outbox once the flushed prefix passes this (keeps one
+/// slow reader from pinning every reply it ever drained).
+const OUTBOX_COMPACT_BYTES: usize = 64 * 1024;
+
+impl Outbox {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Nothing left to write?
+    pub fn is_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    /// Bytes still awaiting the socket.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Queue reply bytes (no I/O — call [`Outbox::flush_to`] after).
+    pub fn push(&mut self, bytes: &[u8]) {
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > OUTBOX_COMPACT_BYTES {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Write as much as `w` accepts right now. `Ok(true)` when the
+    /// outbox drained, `Ok(false)` when the socket pushed back
+    /// (`WouldBlock` — re-arm for writability); genuine I/O failures
+    /// are errors.
+    pub fn flush_to(&mut self, w: &mut impl Write) -> std::io::Result<bool> {
+        while self.pos < self.buf.len() {
+            match w.write(&self.buf[self.pos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "socket accepted no bytes",
+                    ))
+                }
+                Ok(n) => self.pos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        self.buf.clear();
+        self.pos = 0;
+        Ok(true)
+    }
+}
+
+impl Write for Outbox {
+    fn write(&mut self, bytes: &[u8]) -> std::io::Result<usize> {
+        self.push(bytes);
+        Ok(bytes.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
 /// Write one frame whose payload is the concatenation of `parts` — no
 /// staging buffer, whatever the part count (the Image path prepends a
 /// 4-byte header, a tenant-scoped edge appends a trailer).
@@ -738,5 +961,188 @@ mod tests {
         assert_eq!(read_frame_into(&mut r, &mut buf).unwrap(), RecvFrame::Data(KIND_FEATURES));
         assert_eq!(buf, vec![2; 10]);
         assert_eq!(buf.capacity(), cap, "second read must reuse the first read's buffer");
+    }
+
+    /// Serves a byte stream in scripted chunk sizes with a `WouldBlock`
+    /// between consecutive chunks — a deterministic stand-in for a
+    /// nonblocking socket whose peer dribbles data.
+    struct Trickle<'a> {
+        data: &'a [u8],
+        pos: usize,
+        chunk: usize,
+        /// Alternates: next read yields data (false) or WouldBlock (true).
+        starve: bool,
+    }
+
+    impl<'a> Trickle<'a> {
+        fn new(data: &'a [u8], chunk: usize) -> Self {
+            Self { data, pos: 0, chunk, starve: false }
+        }
+    }
+
+    impl Read for Trickle<'_> {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos < self.data.len() && self.starve {
+                self.starve = false;
+                return Err(std::io::ErrorKind::WouldBlock.into());
+            }
+            self.starve = true;
+            let n = self.chunk.min(out.len()).min(self.data.len() - self.pos);
+            out[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    /// Run the assembler over a trickled stream until EOF, collecting
+    /// every completed frame (with its payload for `Data`).
+    fn assemble_all(stream: &[u8], chunk: usize) -> Vec<(RecvFrame, Vec<u8>)> {
+        let mut r = Trickle::new(stream, chunk);
+        let mut asm = FrameAssembler::new();
+        let mut buf = Vec::new();
+        let mut out = Vec::new();
+        loop {
+            match asm.poll_frame(&mut r, &mut buf).unwrap() {
+                Assembled::NeedMore => continue,
+                Assembled::Frame(RecvFrame::Eof) => {
+                    out.push((RecvFrame::Eof, Vec::new()));
+                    return out;
+                }
+                Assembled::Frame(f) => {
+                    let payload =
+                        if matches!(f, RecvFrame::Data(_)) { buf.clone() } else { Vec::new() };
+                    let stop = matches!(f, RecvFrame::Malformed { resync: false, .. });
+                    out.push((f, payload));
+                    if stop {
+                        return out;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn assembler_matches_blocking_reader_at_any_chunk_size() {
+        let mut stream = Vec::new();
+        Frame::Features(vec![9u8; 300]).write_to(&mut stream).unwrap();
+        Frame::Stats.write_to(&mut stream).unwrap();
+        Frame::Logits(vec![1.0, -2.0]).write_to(&mut stream).unwrap();
+
+        // Reference: the blocking reader over the same bytes.
+        let mut r = &stream[..];
+        let mut buf = Vec::new();
+        let mut want = Vec::new();
+        loop {
+            let f = read_frame_into(&mut r, &mut buf).unwrap();
+            let eof = f == RecvFrame::Eof;
+            let payload = if matches!(f, RecvFrame::Data(_)) { buf.clone() } else { Vec::new() };
+            want.push((f, payload));
+            if eof {
+                break;
+            }
+        }
+
+        for chunk in [1, 2, 3, 4, 5, 7, 64, 4096] {
+            assert_eq!(assemble_all(&stream, chunk), want, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn assembler_reports_unknown_kind_and_resyncs() {
+        let mut stream = Vec::new();
+        write_frame_raw(&mut stream, 200, &[1, 2, 3]).unwrap();
+        Frame::Stats.write_to(&mut stream).unwrap();
+        let frames = assemble_all(&stream, 1);
+        assert_eq!(
+            frames[0].0,
+            RecvFrame::Malformed { reason: "unknown frame kind", resync: true }
+        );
+        assert_eq!(frames[1].0, RecvFrame::Data(KIND_STATS));
+        assert_eq!(frames[2].0, RecvFrame::Eof);
+    }
+
+    #[test]
+    fn assembler_bad_length_is_sticky() {
+        let mut stream = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        stream.extend_from_slice(&[0u8; 32]);
+        let mut r = Trickle::new(&stream, 2);
+        let mut asm = FrameAssembler::new();
+        let mut buf = Vec::new();
+        let bad = RecvFrame::Malformed { reason: "bad frame length", resync: false };
+        let mut seen = 0;
+        while seen < 2 {
+            match asm.poll_frame(&mut r, &mut buf).unwrap() {
+                Assembled::NeedMore => continue,
+                Assembled::Frame(f) => {
+                    assert_eq!(f, bad, "a bad length prefix must be sticky");
+                    seen += 1;
+                }
+            }
+        }
+        assert!(!asm.is_idle());
+    }
+
+    #[test]
+    fn assembler_mid_frame_disconnect_is_an_error() {
+        let mut stream = Vec::new();
+        Frame::Features(vec![5u8; 100]).write_to(&mut stream).unwrap();
+        for cut in [1, 4, 5, 50] {
+            let mut r = Trickle::new(&stream[..cut], 3);
+            let mut asm = FrameAssembler::new();
+            let mut buf = Vec::new();
+            let err = loop {
+                match asm.poll_frame(&mut r, &mut buf) {
+                    Ok(Assembled::NeedMore) => continue,
+                    Ok(Assembled::Frame(f)) => panic!("cut={cut}: unexpected frame {f:?}"),
+                    Err(e) => break e,
+                }
+            };
+            assert!(err.to_string().contains("mid-frame"), "cut={cut}: {err}");
+            assert!(!asm.is_idle(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn outbox_resumes_partial_writes() {
+        struct Throttle {
+            sink: Vec<u8>,
+            accept: usize,
+            starve: bool,
+        }
+        impl Write for Throttle {
+            fn write(&mut self, bytes: &[u8]) -> std::io::Result<usize> {
+                if self.starve {
+                    self.starve = false;
+                    return Err(std::io::ErrorKind::WouldBlock.into());
+                }
+                self.starve = true;
+                let n = self.accept.min(bytes.len());
+                self.sink.extend_from_slice(&bytes[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+
+        let mut frame = Vec::new();
+        write_frame_raw(&mut frame, KIND_LOGITS, &[7u8; 90]).unwrap();
+        let mut outbox = Outbox::new();
+        // Reply builders write straight into the outbox via `Write`.
+        write_frame_raw(&mut outbox, KIND_LOGITS, &[7u8; 90]).unwrap();
+        outbox.push(&frame);
+        assert_eq!(outbox.pending(), 2 * frame.len());
+
+        let mut w = Throttle { sink: Vec::new(), accept: 7, starve: false };
+        let mut rounds = 0;
+        while !outbox.flush_to(&mut w).unwrap() {
+            rounds += 1;
+            assert!(rounds < 1000, "flush_to must make progress");
+        }
+        assert!(outbox.is_empty());
+        assert_eq!(outbox.pending(), 0);
+        let mut both = frame.clone();
+        both.extend_from_slice(&frame);
+        assert_eq!(w.sink, both, "bytes must arrive unreordered and complete");
     }
 }

@@ -13,6 +13,7 @@ pub mod logging;
 pub mod once_map;
 pub mod pool;
 pub mod prop;
+pub mod reactor;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;

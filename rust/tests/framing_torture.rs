@@ -1,0 +1,405 @@
+//! Partial-frame torture for the wire protocol — the adversarial I/O
+//! shapes the event-driven transport must survive, because a
+//! readiness-driven server sees frames in whatever fragments the
+//! kernel delivers:
+//!
+//! * byte-at-a-time slow-loris delivery (assembler-level and over a
+//!   real TCP connection to the epoll server);
+//! * a split at **every** byte boundary, including each of the five
+//!   header bytes;
+//! * mid-frame disconnects (must surface as an error, and must leave
+//!   a live server serving other connections);
+//! * malformed input (absurd length, unknown kind) still classified
+//!   exactly as the blocking reader classifies it;
+//! * no busy-looping: a reader that is not ready costs one `read`
+//!   call per poll, never a spin.
+//!
+//! The epoll and threads transports are also A/B'd on the same frame
+//! bytes: the replies must be byte-identical, which is the contract
+//! that lets `--io` stay a pure performance knob.
+
+use std::collections::VecDeque;
+use std::io::{self, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use jalad::compression::{feature, quant};
+use jalad::runtime::sim::sim_manifest;
+use jalad::runtime::{Executor, ExecutorPool};
+use jalad::server::proto::{self, Assembled, FrameAssembler, RecvFrame, MAX_FRAME};
+use jalad::server::{CloudServer, IoModel, ServeConfig};
+use jalad::util::reactor::Reactor;
+
+/// Scripted reader: each entry is `Some(n)` (serve up to `n` bytes)
+/// or `None` (raise `WouldBlock`); exhausted data reads as EOF.
+struct Script {
+    data: Vec<u8>,
+    pos: usize,
+    steps: VecDeque<Option<usize>>,
+    reads: usize,
+}
+
+impl Script {
+    fn new(data: Vec<u8>, steps: Vec<Option<usize>>) -> Self {
+        Script { data, pos: 0, steps: steps.into(), reads: 0 }
+    }
+}
+
+impl Read for Script {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        self.reads += 1;
+        match self.steps.pop_front() {
+            Some(None) => Err(io::ErrorKind::WouldBlock.into()),
+            Some(Some(n)) => {
+                let take = n.min(buf.len()).min(self.data.len() - self.pos);
+                buf[..take].copy_from_slice(&self.data[self.pos..self.pos + take]);
+                self.pos += take;
+                Ok(take)
+            }
+            // Script exhausted: serve the rest, then EOF.
+            None => {
+                let take = buf.len().min(self.data.len() - self.pos);
+                buf[..take].copy_from_slice(&self.data[self.pos..self.pos + take]);
+                self.pos += take;
+                Ok(take)
+            }
+        }
+    }
+}
+
+/// Drive the assembler over a scripted reader until EOF, collecting
+/// every classified frame.
+fn assemble_stream(r: &mut Script) -> Vec<(RecvFrame, Vec<u8>)> {
+    let mut asm = FrameAssembler::new();
+    let mut buf = Vec::new();
+    let mut out = Vec::new();
+    loop {
+        match asm.poll_frame(r, &mut buf).expect("clean stream") {
+            Assembled::NeedMore => continue,
+            Assembled::Frame(RecvFrame::Eof) => return out,
+            Assembled::Frame(f) => out.push((f, buf.clone())),
+        }
+    }
+}
+
+fn test_frames() -> Vec<(u8, Vec<u8>)> {
+    let mut tenant = vec![0x11, 0x22, 0x33];
+    proto::append_tenant_trailer(7, &mut tenant);
+    vec![
+        (proto::KIND_FEATURES, vec![0xAA; 7]),
+        (proto::KIND_STATS, vec![]),
+        (proto::KIND_FEATURES, tenant),
+        (proto::KIND_LOGITS, (0u8..32).collect()),
+    ]
+}
+
+fn wire_of(frames: &[(u8, Vec<u8>)]) -> Vec<u8> {
+    let mut wire = Vec::new();
+    for (kind, payload) in frames {
+        proto::write_frame_raw(&mut wire, *kind, payload).unwrap();
+    }
+    wire
+}
+
+#[test]
+fn split_at_every_byte_boundary_reassembles_exactly() {
+    let frames = test_frames();
+    let wire = wire_of(&frames);
+    // Every split point — which covers each of the 5 header bytes of
+    // the first frame and every later frame's header via the stream.
+    for cut in 0..=wire.len() {
+        let mut r = Script::new(
+            wire.clone(),
+            vec![Some(cut), None, Some(wire.len() - cut), None],
+        );
+        let got = assemble_stream(&mut r);
+        assert_eq!(got.len(), frames.len(), "split at {cut}: frame count");
+        for (i, ((kind, payload), (frame, bytes))) in frames.iter().zip(&got).enumerate() {
+            assert_eq!(*frame, RecvFrame::Data(*kind), "split at {cut}, frame {i}");
+            assert_eq!(bytes, payload, "split at {cut}, frame {i}: payload bytes");
+        }
+    }
+}
+
+#[test]
+fn byte_at_a_time_stream_reassembles_exactly() {
+    let frames = test_frames();
+    let wire = wire_of(&frames);
+    // One byte per readiness event, a WouldBlock between every byte —
+    // the pathological slow-loris shape.
+    let mut steps = Vec::with_capacity(wire.len() * 2);
+    for _ in 0..wire.len() {
+        steps.push(Some(1));
+        steps.push(None);
+    }
+    let mut r = Script::new(wire, steps);
+    let got = assemble_stream(&mut r);
+    assert_eq!(got.len(), frames.len());
+    for ((kind, payload), (frame, bytes)) in frames.iter().zip(&got) {
+        assert_eq!(*frame, RecvFrame::Data(*kind));
+        assert_eq!(bytes, payload);
+    }
+}
+
+#[test]
+fn assembler_classifies_malformed_like_the_blocking_reader() {
+    // Unknown kind: consumed, resynchronizable, next frame intact.
+    let mut wire = Vec::new();
+    proto::write_frame_raw(&mut wire, 0xEE, &[1, 2, 3]).unwrap();
+    proto::write_frame_raw(&mut wire, proto::KIND_STATS, &[]).unwrap();
+    let mut r = Script::new(wire, vec![Some(3), None]);
+    let got = assemble_stream(&mut r);
+    assert!(
+        matches!(got[0].0, RecvFrame::Malformed { resync: true, .. }),
+        "unknown kind: {:?}",
+        got[0].0
+    );
+    assert_eq!(got[1].0, RecvFrame::Data(proto::KIND_STATS));
+
+    // Absurd length: unrecoverable and sticky, however often polled.
+    let mut wire = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+    wire.extend_from_slice(&[0u8; 16]);
+    let mut asm = FrameAssembler::new();
+    let mut buf = Vec::new();
+    let mut r = Script::new(wire, vec![Some(2), None]);
+    for round in 0..3 {
+        loop {
+            match asm.poll_frame(&mut r, &mut buf).unwrap() {
+                Assembled::NeedMore => continue,
+                Assembled::Frame(f) => {
+                    assert!(
+                        matches!(f, RecvFrame::Malformed { resync: false, .. }),
+                        "round {round}: {f:?}"
+                    );
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_frame_disconnect_is_an_error_not_a_frame() {
+    let wire = wire_of(&test_frames());
+    // Cut inside the length word, on the kind byte, and mid-payload.
+    for cut in [1usize, 3, 4, 5, 9] {
+        let mut asm = FrameAssembler::new();
+        let mut buf = Vec::new();
+        let mut r = Script::new(wire[..cut].to_vec(), vec![Some(cut), None]);
+        let err = loop {
+            match asm.poll_frame(&mut r, &mut buf) {
+                Ok(Assembled::NeedMore) => continue,
+                Ok(Assembled::Frame(f)) => panic!("cut at {cut}: produced {f:?}"),
+                Err(e) => break e,
+            }
+        };
+        assert!(
+            err.to_string().contains("mid-frame"),
+            "cut at {cut}: unexpected error {err}"
+        );
+    }
+}
+
+#[test]
+fn unready_reader_costs_one_read_per_poll() {
+    let mut asm = FrameAssembler::new();
+    let mut buf = Vec::new();
+    let mut r = Script::new(vec![0u8; 0], (0..64).map(|_| None).collect());
+    for polls in 1..=32usize {
+        assert_eq!(asm.poll_frame(&mut r, &mut buf).unwrap(), Assembled::NeedMore);
+        assert_eq!(r.reads, polls, "assembler spun on an unready reader");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Live-server torture: the same shapes over real TCP.
+// ---------------------------------------------------------------------
+
+fn spawn(io: IoModel) -> (Arc<CloudServer>, std::net::SocketAddr) {
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, 8);
+    let server = Arc::new(CloudServer::with_pool(
+        pool,
+        ServeConfig { workers: 4, io, ..ServeConfig::default() },
+    ));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+    (server, addr)
+}
+
+/// A stage-2 features request plus its serial-path expected logits.
+fn feature_case(reference: &Executor, seed: usize) -> (Vec<u8>, Vec<u32>) {
+    let m = reference.manifest().model("simnet").unwrap();
+    let xs: Vec<f32> = (0..m.stages[1].out_elems)
+        .map(|j| {
+            let h = ((j + 1) as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(seed as u64 * 0x2545_F491_4F6C_DD1D);
+            ((h >> 42) & 0x3FFF) as f32 / 1638.4 - 2.0
+        })
+        .collect();
+    let q = quant::quantize(&xs, 4);
+    let wire = feature::encode(&q, 2, 0);
+    let mut tail = vec![quant::dequantize(&q)];
+    reference.run_tail_batch("simnet", 3, &mut tail).unwrap();
+    (wire, tail[0].iter().map(|v| v.to_bits()).collect())
+}
+
+#[test]
+fn slow_loris_byte_at_a_time_over_tcp_is_served() {
+    if !Reactor::available() {
+        return; // epoll transport is Linux-only
+    }
+    let (_server, addr) = spawn(IoModel::Epoll);
+    let reference = Executor::sim_with(sim_manifest(), 8);
+    let (payload, expected) = feature_case(&reference, 41);
+    let mut frame = Vec::new();
+    proto::write_frame_raw(&mut frame, proto::KIND_FEATURES, &payload).unwrap();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    for (i, b) in frame.iter().enumerate() {
+        stream.write_all(std::slice::from_ref(b)).unwrap();
+        if i % 16 == 0 {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let mut rx = Vec::new();
+    match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+        RecvFrame::Data(k) => assert_eq!(k, proto::KIND_LOGITS),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    let mut logits = Vec::new();
+    proto::parse_logits_into(&rx, &mut logits).unwrap();
+    let bits: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(bits, expected, "trickled frame decoded differently");
+    CloudServer::request_shutdown(addr);
+}
+
+#[test]
+fn mid_frame_disconnect_leaves_the_server_serving() {
+    if !Reactor::available() {
+        return;
+    }
+    let (_server, addr) = spawn(IoModel::Epoll);
+    // Three half-open casualties: header only, partial length word,
+    // header plus a sliver of a claimed 100-byte payload.
+    for cut in [[101u8, 0, 0, 0, 1].as_slice(), &[101, 0], &[101, 0, 0, 0, 1, 9, 9, 9]] {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(cut).unwrap();
+        drop(s); // mid-frame disconnect
+    }
+    std::thread::sleep(Duration::from_millis(50));
+
+    // The server must still answer a healthy connection correctly.
+    let reference = Executor::sim_with(sim_manifest(), 8);
+    let (payload, expected) = feature_case(&reference, 42);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &payload).unwrap();
+    let mut rx = Vec::new();
+    match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+        RecvFrame::Data(k) => assert_eq!(k, proto::KIND_LOGITS),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    let mut logits = Vec::new();
+    proto::parse_logits_into(&rx, &mut logits).unwrap();
+    let bits: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(bits, expected);
+    CloudServer::request_shutdown(addr);
+}
+
+#[test]
+fn malformed_over_tcp_gets_error_reply_and_connection_survives_resync() {
+    if !Reactor::available() {
+        return;
+    }
+    let (_server, addr) = spawn(IoModel::Epoll);
+    let reference = Executor::sim_with(sim_manifest(), 8);
+    let (payload, _) = feature_case(&reference, 43);
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut rx = Vec::new();
+    // Unknown kind: server replies Error and resyncs the stream.
+    proto::write_frame_raw(&mut stream, 0xEE, &[1, 2, 3]).unwrap();
+    match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+        RecvFrame::Data(k) => assert_eq!(k, proto::KIND_ERROR),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    // Same connection still serves valid traffic afterwards.
+    proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &payload).unwrap();
+    match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+        RecvFrame::Data(k) => assert_eq!(k, proto::KIND_LOGITS),
+        other => panic!("unexpected reply {other:?}"),
+    }
+
+    // An absurd length is unrecoverable: Error reply, then close.
+    let mut bad = TcpStream::connect(addr).unwrap();
+    let mut bad_reader = BufReader::new(bad.try_clone().unwrap());
+    bad.write_all(&((MAX_FRAME + 1) as u32).to_le_bytes()).unwrap();
+    bad.write_all(&[1]).unwrap();
+    match proto::read_frame_into(&mut bad_reader, &mut rx).unwrap() {
+        RecvFrame::Data(k) => assert_eq!(k, proto::KIND_ERROR),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    match proto::read_frame_into(&mut bad_reader, &mut rx).unwrap() {
+        RecvFrame::Eof => {}
+        other => panic!("expected close after unrecoverable frame, got {other:?}"),
+    }
+    CloudServer::request_shutdown(addr);
+}
+
+/// The `--io` knob is a pure performance choice: both transports must
+/// reply with bit-identical logits (and the same piggybacked-telemetry
+/// framing) for identical request bytes. The telemetry *values* are
+/// live load samples, so the comparison is on the decoded logits.
+#[test]
+fn epoll_and_threads_transports_reply_bit_identically() {
+    if !Reactor::available() {
+        return;
+    }
+    let reference = Executor::sim_with(sim_manifest(), 8);
+    let cases: Vec<(Vec<u8>, Vec<u32>)> =
+        (0..4).map(|k| feature_case(&reference, 500 + k)).collect();
+
+    let ask = |io: IoModel| -> Vec<Vec<u32>> {
+        let (_server, addr) = spawn(io);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut replies = Vec::new();
+        for (payload, _) in &cases {
+            let mut with_tenant = payload.clone();
+            proto::append_tenant_trailer(3, &mut with_tenant);
+            proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &with_tenant).unwrap();
+            let mut rx = Vec::new();
+            match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+                RecvFrame::Data(k) => assert_eq!(k, proto::KIND_LOGITS),
+                other => panic!("unexpected reply {other:?}"),
+            }
+            let mut logits = Vec::new();
+            let telemetry = proto::parse_logits_telemetry_into(&rx, &mut logits).unwrap();
+            assert!(telemetry.is_some(), "{io:?}: reply lost the telemetry piggyback");
+            replies.push(logits.iter().map(|v| v.to_bits()).collect());
+        }
+        // Control traffic must round-trip on both transports too.
+        proto::write_frame_raw(&mut stream, proto::KIND_PROBE, &[7; 32]).unwrap();
+        let mut rx = Vec::new();
+        match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+            RecvFrame::Data(k) => {
+                assert_eq!(k, proto::KIND_PROBE_ACK);
+                assert!(rx.is_empty(), "probe ack should be empty");
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+        CloudServer::request_shutdown(addr);
+        replies
+    };
+
+    let epoll = ask(IoModel::Epoll);
+    let threads = ask(IoModel::Threads);
+    assert_eq!(epoll, threads, "transports disagree on decoded logits");
+    for ((_, expected), bits) in cases.iter().zip(&epoll) {
+        assert_eq!(bits, expected, "reply diverged from the serial path");
+    }
+}

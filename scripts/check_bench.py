@@ -6,7 +6,7 @@ Usage:
     check_bench.py <bench> <json> --compare <baseline> # + regression gate
     check_bench.py <bench> <json> --update-baselines <baseline>
 
-<bench> is one of: pipeline | adaptive | multiedge | crossmodel.
+<bench> is one of: pipeline | adaptive | multiedge | crossmodel | c10k.
 
 The schema checks replicate (and replace) the inline validators that
 used to live in scripts/verify.sh; verify.sh keeps a grep fallback for
@@ -130,6 +130,51 @@ def check_crossmodel(doc):
             f"pad_waste={pad['pad_waste_fraction']:.3f}")
 
 
+def check_c10k(doc):
+    if not doc.get("io_available", True):
+        # Non-Linux host: the epoll reactor doesn't exist, the bench
+        # emits a stub document, and there is nothing to gate.
+        return "io_available=false (no epoll on this host)"
+    scaling = doc.get("scaling")
+    assert isinstance(scaling, list) and scaling, "scaling missing/empty"
+    conns = [row.get("conns") for row in scaling]
+    assert conns == sorted(conns), f"scaling rows out of order: {conns}"
+    for row in scaling:
+        for k in ("conns", "offered_rps", "req_per_sec", "served",
+                  "p50_ms", "p99_ms", "busy", "errors"):
+            assert k in row, f"scaling/{row.get('conns')}: missing {k}"
+        assert row["served"] > 0, f"{row['conns']} conns: nothing served"
+    assert scaling[-1]["conns"] == doc.get("target_conns"), \
+        "largest scaling row does not reach target_conns"
+    assert doc.get("max_conns_sustained", 0) >= doc["target_conns"], \
+        (f"only {doc.get('max_conns_sustained')} of {doc['target_conns']} "
+         f"connections sustained")
+    ab = doc.get("low_fanin_ab")
+    assert isinstance(ab, dict), "low_fanin_ab missing"
+    for k in ("epoll_rps", "threads_rps", "epoll_vs_threads"):
+        assert k in ab, f"low_fanin_ab: missing {k}"
+    assert ab["epoll_rps"] > 0 and ab["threads_rps"] > 0, "an A/B arm served nothing"
+    fc = doc.get("flash_crowd")
+    assert isinstance(fc, dict), "flash_crowd missing"
+    for k in ("polite_shed_rate", "flood_shed_rate", "polite_retention",
+              "polite_sent", "flood_sent"):
+        assert k in fc, f"flash_crowd: missing {k}"
+    assert fc["polite_sent"] > 0 and fc["flood_sent"] > 0, "flash arm sent nothing"
+    assert fc["flood_shed_rate"] > fc["polite_shed_rate"], \
+        "admission shed the polite tenants at the flooder's rate"
+    di = doc.get("diurnal")
+    assert isinstance(di, dict), "diurnal missing"
+    buckets = di.get("buckets")
+    assert isinstance(buckets, list) and len(buckets) >= 4, "diurnal needs >=4 buckets"
+    for b in buckets:
+        assert "offered" in b and "served" in b, "diurnal bucket malformed"
+    assert di.get("peak_trough_ratio", 0) > 1.5, \
+        "diurnal cycle never actually swung the offered rate"
+    return (f"{doc['max_conns_sustained']} conns sustained, "
+            f"epoll/threads={ab['epoll_vs_threads']:.2f}, "
+            f"flood shed={fc['flood_shed_rate']:.2f}")
+
+
 # --------------------------------------------------------------------------
 # Tracked headline metrics: name -> (extractor, direction).
 # direction "higher" = regression when it drops; "lower" = when it grows.
@@ -163,6 +208,16 @@ TRACKED = {
         "mixed_occupancy":
             (lambda d: float(d["mixed_occupancy"]), "higher"),
     },
+    # Stub documents from hosts without epoll report inf so the gate
+    # can never false-fail there (the schema already waves them through).
+    "c10k": {
+        "epoll_vs_threads":
+            (lambda d: float(d["low_fanin_ab"]["epoll_vs_threads"])
+             if d.get("io_available", True) else float("inf"), "higher"),
+        "flash_polite_retention":
+            (lambda d: float(d["flash_crowd"]["polite_retention"])
+             if d.get("io_available", True) else float("inf"), "higher"),
+    },
 }
 
 SCHEMAS = {
@@ -170,6 +225,7 @@ SCHEMAS = {
     "adaptive": check_adaptive,
     "multiedge": check_multiedge,
     "crossmodel": check_crossmodel,
+    "c10k": check_c10k,
 }
 
 

@@ -5,7 +5,7 @@
 #   scripts/verify.sh --smoke          # full gate + every bench smoke
 #   scripts/verify.sh --smoke SUITE…   # ONLY the named bench smoke(s)
 #                                      # (pipeline|adaptive|multiedge|
-#                                      # crossmodel) — no build/test/
+#                                      # crossmodel|c10k) — no build/test/
 #                                      # clippy pass; cargo bench builds
 #                                      # what it needs. This is what the
 #                                      # CI bench matrix fans out over,
@@ -30,7 +30,7 @@ for arg in "$@"; do
   case "$arg" in
     --smoke) SMOKE=1 ;;
     --full) FULL=1 ;;
-    pipeline|adaptive|multiedge|crossmodel) SUITES+=("$arg") ;;
+    pipeline|adaptive|multiedge|crossmodel|c10k) SUITES+=("$arg") ;;
     *) echo "verify.sh: unknown argument $arg" >&2; exit 2 ;;
   esac
 done
@@ -101,6 +101,10 @@ run_suite() {
       smoke_bench crossmodel crossmodel BENCH_crossmodel.json \
         '"mixed_speedup_8conn"' '"xmodel_on"' '"xmodel_off"' \
         '"pad_waste_fraction"' '"bit_identical"' ;;
+    c10k)
+      smoke_bench c10k c10k BENCH_c10k.json \
+        '"scaling"' '"epoll_vs_threads"' '"flood_shed_rate"' \
+        '"peak_trough_ratio"' ;;
     *) echo "verify.sh: unknown suite $1" >&2; exit 2 ;;
   esac
 }
@@ -131,7 +135,7 @@ echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
 if [ "$SMOKE" = 1 ] || [ "$FULL" = 1 ]; then
-  for s in pipeline adaptive multiedge crossmodel; do
+  for s in pipeline adaptive multiedge crossmodel c10k; do
     run_suite "$s"
   done
 fi
