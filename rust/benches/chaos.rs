@@ -1,0 +1,284 @@
+//! Chaos bench — scripted, seeded faults against the real edge ↔ cloud
+//! stack (sim backend, loopback TCP), measuring what the resilience
+//! machinery actually delivers:
+//!
+//! 1. **corruption** — 25% per-write uplink corruption under CRC-
+//!    checked framing: availability, bit-identity of every served
+//!    reply against the fault-free full-model reference, and the
+//!    latency cost of reject-and-resend;
+//! 2. **blackout** — a write-swallowing outage trips the per-request
+//!    deadline, the circuit breaker opens and serves locally, and
+//!    `recovery_ms` measures blackout-end → first cloud-served reply;
+//! 3. **quarantine** — a scripted shard panic is quarantined, routed
+//!    around and re-admitted while serving continues.
+//!
+//! Headlines: `availability` (served / issued, across every phase —
+//! the gate pins this at 1.0), `served_bit_identity`, `recovery_ms`.
+//!
+//! Emits `BENCH_chaos.json`; `scripts/verify.sh --smoke` runs this
+//! briefly and `scripts/check_bench.py` validates the shape and gates
+//! the headlines.
+//!
+//! Run: `cargo bench --bench chaos` (`-- --smoke` for CI).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jalad::coordinator::{ControlPlane, DecisionEngine};
+use jalad::network::throttle::RateHandle;
+use jalad::runtime::sim::sim_manifest;
+use jalad::runtime::{Executor, ExecutorPool};
+use jalad::server::{BreakerConfig, CloudServer, EdgeClient, ServeConfig};
+use jalad::util::bench::Bencher;
+use jalad::util::fault::FaultPlan;
+use jalad::util::json::Json;
+use jalad::util::stats;
+
+const FANIN: usize = 8;
+
+fn plane(bw: f64) -> ControlPlane {
+    ControlPlane::new(DecisionEngine::sim_default(0.10).unwrap(), bw)
+}
+
+fn sample(id: usize, shape: &[usize]) -> jalad::data::gen::Sample {
+    jalad::data::gen::Sample {
+        image: jalad::data::gen::sample_image_shaped(id % 16, id, shape),
+        label: id % 16,
+    }
+}
+
+fn sim_server() -> (Arc<CloudServer>, std::net::SocketAddr) {
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, FANIN);
+    let server = Arc::new(CloudServer::with_pool(pool, ServeConfig::default()));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").expect("bind");
+    (server, addr)
+}
+
+fn percentiles_ms(latencies: &[f64]) -> (f64, f64) {
+    let ms: Vec<f64> = latencies.iter().map(|s| s * 1e3).collect();
+    (stats::percentile(&ms, 50.0), stats::percentile(&ms, 95.0))
+}
+
+fn main() {
+    let smoke = Bencher::smoke();
+    let n_corrupt = if smoke { 30 } else { 120 };
+    let blackout_ms: u64 = if smoke { 900 } else { 2_000 };
+
+    let manifest = sim_manifest();
+    let shape = manifest.model("simnet").unwrap().input_shape.clone();
+    let mut issued = 0usize;
+    let mut served = 0usize;
+
+    // ---- Phase 1: corruption, bit-identity oracle ----
+    // At the idle 50 KB/s plan every request is CloudOnly (lossless
+    // PNG + full model on the same deterministic sim backend) and
+    // failover runs the same full model locally, so every served reply
+    // must be bit-identical to `run_full` regardless of the path.
+    let exe = Executor::sim_with(manifest.clone(), FANIN);
+    let (corrupt_server, corrupt_addr) = sim_server();
+    let mut edge = EdgeClient::connect(
+        &exe,
+        "simnet",
+        corrupt_addr,
+        RateHandle::new(200_000),
+        plane(50_000.0),
+    )
+    .expect("edge connect");
+    edge.set_checked(true);
+    edge.set_request_timeout(Duration::from_secs(5)).expect("deadline");
+    edge.set_breaker_config(BreakerConfig {
+        failure_threshold: 1_000, // keep the plan pinned at CloudOnly
+        ..BreakerConfig::default()
+    });
+    edge.set_fault_plan(Some(FaultPlan::parse_arc("seed=42,corrupt=0.25").expect("plan")));
+
+    let mut bit_identity = true;
+    let mut corrupt_locals = 0usize;
+    let mut corrupt_lat = Vec::with_capacity(n_corrupt);
+    for id in 0..n_corrupt {
+        let s = sample(id, &shape);
+        let reference: Vec<u32> = exe
+            .run_full("simnet", &s.image)
+            .expect("reference")
+            .tensor
+            .data()
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        issued += 1;
+        let t0 = Instant::now();
+        match edge.infer(&s) {
+            Ok(r) => {
+                served += 1;
+                corrupt_locals += r.served_locally as usize;
+                let got: Vec<u32> =
+                    edge.last_logits().iter().map(|v| v.to_bits()).collect();
+                bit_identity &= got == reference;
+            }
+            Err(e) => eprintln!("corruption phase: request {id} failed: {e:#}"),
+        }
+        corrupt_lat.push(t0.elapsed().as_secs_f64());
+    }
+    let (corrupt_p50, corrupt_p95) = percentiles_ms(&corrupt_lat);
+    drop(edge);
+    drop(corrupt_server);
+    CloudServer::request_shutdown(corrupt_addr);
+
+    // ---- Phase 2: blackout, breaker failover, recovery ----
+    let (blackout_server, blackout_addr) = sim_server();
+    let mut edge = EdgeClient::connect(
+        &exe,
+        "simnet",
+        blackout_addr,
+        RateHandle::new(1_000_000),
+        plane(50_000.0),
+    )
+    .expect("edge connect");
+    edge.set_request_timeout(Duration::from_millis(200)).expect("deadline");
+    edge.set_breaker_config(BreakerConfig {
+        failure_threshold: 2,
+        cooldown: Duration::from_millis(100),
+        probe_successes: 1,
+    });
+    for id in 0..5 {
+        issued += 1;
+        if edge.infer(&sample(id, &shape)).is_ok() {
+            served += 1;
+        }
+    }
+    edge.set_fault_plan(Some(
+        FaultPlan::parse_arc(&format!("seed=7,blackout-at-ms=0,blackout-ms={blackout_ms}"))
+            .expect("plan"),
+    ));
+    let blackout_start = Instant::now();
+    let blackout_end = blackout_start + Duration::from_millis(blackout_ms);
+    let mut blackout_locals = 0usize;
+    while Instant::now() < blackout_end - Duration::from_millis(300) {
+        issued += 1;
+        match edge.infer(&sample(100, &shape)) {
+            Ok(r) => {
+                served += 1;
+                blackout_locals += r.served_locally as usize;
+            }
+            Err(e) => eprintln!("blackout phase: request failed: {e:#}"),
+        }
+    }
+    // Recovery: blackout-end → first cloud-served reply. Stays at the
+    // sentinel -1 if cloud serving never resumes (the gate rejects it).
+    let mut recovery_ms = -1.0f64;
+    let recovery_deadline = Instant::now() + Duration::from_secs(20);
+    while Instant::now() < recovery_deadline {
+        issued += 1;
+        match edge.infer(&sample(101, &shape)) {
+            Ok(r) => {
+                served += 1;
+                if !r.served_locally {
+                    let since_end = Instant::now()
+                        .saturating_duration_since(blackout_end)
+                        .as_secs_f64();
+                    recovery_ms = since_end * 1e3;
+                    break;
+                }
+            }
+            Err(e) => eprintln!("recovery phase: request failed: {e:#}"),
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let breaker_opens = edge.controller.breaker_opens();
+    let breaker_recloses = edge.controller.breaker_recloses();
+    let local_serves = edge.controller.local_serves();
+    let overruns = edge.breaker().overrun_count();
+    drop(edge);
+    drop(blackout_server);
+    CloudServer::request_shutdown(blackout_addr);
+
+    // ---- Phase 3: poisoned shard quarantine + readmission ----
+    let pool = ExecutorPool::new_sim_with(manifest.clone(), 2, FANIN);
+    pool.set_exec_faults(Some(
+        FaultPlan::parse_arc("seed=3,panic-shard=0,panic-count=1").expect("plan"),
+    ));
+    let quarantine_server = Arc::new(CloudServer::with_pool(pool, ServeConfig::default()));
+    let (q_addr, _h) = Arc::clone(&quarantine_server).spawn("127.0.0.1:0").expect("bind");
+    let mut edge = EdgeClient::connect(
+        &exe,
+        "simnet",
+        q_addr,
+        RateHandle::new(1_000_000),
+        plane(50_000.0),
+    )
+    .expect("edge connect");
+    edge.set_request_timeout(Duration::from_secs(5)).expect("deadline");
+    for id in 0..20 {
+        issued += 1;
+        if edge.infer(&sample(id, &shape)).is_ok() {
+            served += 1;
+        }
+    }
+    let (mut quarantined, mut readmitted, mut shard_panics) = (0u64, 0u64, 0u64);
+    let q_deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < q_deadline {
+        if let Ok(stats_doc) = edge.stats() {
+            if let Ok(j) = Json::parse(&stats_doc) {
+                quarantined = j.get("quarantined").and_then(|v| v.as_u64()).unwrap_or(0);
+                readmitted = j.get("readmitted").and_then(|v| v.as_u64()).unwrap_or(0);
+                shard_panics = j.get("shard_panics").and_then(|v| v.as_u64()).unwrap_or(0);
+                if quarantined >= 1 && readmitted >= 1 {
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    drop(edge);
+    drop(quarantine_server);
+    CloudServer::request_shutdown(q_addr);
+
+    let availability = served as f64 / issued.max(1) as f64;
+    println!(
+        "corruption: {n_corrupt} requests, {corrupt_locals} failovers, \
+         p50 {corrupt_p50:.2} ms p95 {corrupt_p95:.2} ms, bit identity {bit_identity}"
+    );
+    println!(
+        "blackout: {blackout_locals} local serves through the outage, \
+         {breaker_opens} opens / {breaker_recloses} recloses / {overruns} overruns, \
+         recovery {recovery_ms:.0} ms"
+    );
+    println!("quarantine: {quarantined} quarantined, {readmitted} readmitted, {shard_panics} panics");
+    println!("availability: {served}/{issued} = {availability:.4}");
+
+    let doc = Json::obj(vec![
+        ("availability", Json::num(availability)),
+        ("served_bit_identity", Json::Bool(bit_identity)),
+        ("recovery_ms", Json::num(recovery_ms)),
+        (
+            "corruption",
+            Json::obj(vec![
+                ("requests", Json::num(n_corrupt as f64)),
+                ("local_serves", Json::num(corrupt_locals as f64)),
+                ("p50_ms", Json::num(corrupt_p50)),
+                ("p95_ms", Json::num(corrupt_p95)),
+            ]),
+        ),
+        (
+            "blackout",
+            Json::obj(vec![
+                ("blackout_ms", Json::num(blackout_ms as f64)),
+                ("local_serves", Json::num(blackout_locals as f64)),
+                ("breaker_opens", Json::num(breaker_opens as f64)),
+                ("breaker_recloses", Json::num(breaker_recloses as f64)),
+                ("deadline_overruns", Json::num(overruns as f64)),
+                ("edge_local_serves_total", Json::num(local_serves as f64)),
+            ]),
+        ),
+        (
+            "quarantine",
+            Json::obj(vec![
+                ("quarantined", Json::num(quarantined as f64)),
+                ("readmitted", Json::num(readmitted as f64)),
+                ("shard_panics", Json::num(shard_panics as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_chaos.json", doc.to_pretty()).expect("write BENCH_chaos.json");
+    println!("wrote BENCH_chaos.json");
+}

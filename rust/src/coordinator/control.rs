@@ -73,6 +73,11 @@ pub struct ControlPlane {
     /// paces its shed retries with this instead of hammering an
     /// overloaded server.
     advised_backoff: f64,
+    /// Circuit-breaker transitions this plane has reacted to, and the
+    /// requests it served fully on-edge while the breaker was open.
+    breaker_opens: u64,
+    breaker_recloses: u64,
+    local_serves: u64,
 }
 
 impl ControlPlane {
@@ -94,6 +99,9 @@ impl ControlPlane {
             plan_changes: 0,
             sheds_observed: 0,
             advised_backoff: 0.0,
+            breaker_opens: 0,
+            breaker_recloses: 0,
+            local_serves: 0,
         }
     }
 
@@ -208,6 +216,58 @@ impl ControlPlane {
         self.resolves += 1;
         self.acked_load = self.load;
         &self.current
+    }
+
+    /// The cloud path's circuit breaker tripped open: park the plan at
+    /// the deepest feasible cut (the `i=N` full-local configuration —
+    /// Edgent's always-available fallback) so the session machinery
+    /// keeps describing what the edge actually runs while the cloud is
+    /// unreachable. Counted separately from load-driven re-solves.
+    pub fn on_breaker_open(&mut self) -> &Plan {
+        self.breaker_opens += 1;
+        let n = self.engine.num_stages();
+        if let Some(forced) = self.engine.decide_edgeward(self.bandwidth(), self.load, n) {
+            self.note_change(&forced);
+            self.current = forced;
+            self.resolves += 1;
+            self.acked_load = self.load;
+        }
+        &self.current
+    }
+
+    /// The breaker re-closed (a half-open probe succeeded): re-solve
+    /// unconstrained so the cut walks back cloud-ward exactly as far as
+    /// the current bandwidth/load signals justify — recovery is a
+    /// re-solve, not a blind restore of the pre-outage plan.
+    pub fn on_breaker_close(&mut self) -> &Plan {
+        self.breaker_recloses += 1;
+        let plan = self.engine.decide_with_load(self.bandwidth(), self.load);
+        self.note_change(&plan);
+        self.current = plan;
+        self.resolves += 1;
+        self.acked_load = self.load;
+        &self.current
+    }
+
+    /// Breaker open events reacted to.
+    pub fn breaker_opens(&self) -> u64 {
+        self.breaker_opens
+    }
+
+    /// Breaker reclose events reacted to.
+    pub fn breaker_recloses(&self) -> u64 {
+        self.breaker_recloses
+    }
+
+    /// Requests served fully on-edge while the breaker was open.
+    pub fn local_serves(&self) -> u64 {
+        self.local_serves
+    }
+
+    /// Count one full-local serve (the transport calls this on every
+    /// request it answers without the cloud).
+    pub fn note_local_serve(&mut self) {
+        self.local_serves += 1;
     }
 
     /// Force a re-solve at an externally known bandwidth (tests,
@@ -407,6 +467,32 @@ mod tests {
         }
         assert!(depth >= 1, "busy never left cloud-only");
         assert!(c.sheds_observed() >= 1);
+    }
+
+    #[test]
+    fn breaker_open_forces_full_local_and_close_walks_back() {
+        let mut c = controller();
+        // Drive the estimator to a fast link so the steady-state plan
+        // is cloud-only.
+        for _ in 0..40 {
+            c.observe_transfer(10_000_000, 0.1);
+        }
+        assert_eq!(cut_depth(c.plan().decision), 0, "fast link should upload");
+        let n = c.engine.num_stages();
+
+        let open = c.on_breaker_open().clone();
+        assert_eq!(cut_depth(open.decision), n, "open must park at the i=N cut");
+        assert_eq!(c.breaker_opens(), 1);
+
+        c.note_local_serve();
+        c.note_local_serve();
+        assert_eq!(c.local_serves(), 2);
+
+        // Reclose re-solves from the live signals: the fast link is
+        // still fast, so the cut walks all the way back cloud-ward.
+        let closed = c.on_breaker_close().clone();
+        assert_eq!(cut_depth(closed.decision), 0, "reclose must walk the cut cloud-ward");
+        assert_eq!(c.breaker_recloses(), 1);
     }
 
     #[test]

@@ -85,6 +85,40 @@ fn main() {
         "16384",
         "serve-cloud: refuse (Busy) connections past this many concurrently assigned",
     )
+    .opt(
+        "idle-timeout-s",
+        "300",
+        "serve-cloud: reap connections with no frame progress for this long, s (0 = never; epoll transport)",
+    )
+    .opt(
+        "watchdog-ms",
+        "0",
+        "serve-cloud: quarantine a shard whose single run exceeds this, ms (0 = off)",
+    )
+    .opt(
+        "fault-plan",
+        "",
+        "deterministic fault spec, e.g. seed=7,corrupt=0.05,stall-p=0.1,stall-ms=200 (see util::fault)",
+    )
+    .opt(
+        "request-timeout-ms",
+        "30000",
+        "infer --connect: per-request transport deadline, ms (0 = none); overruns feed the breaker",
+    )
+    .opt(
+        "breaker-failures",
+        "3",
+        "infer --connect: consecutive cloud faults that open the circuit breaker",
+    )
+    .opt(
+        "breaker-cooldown-ms",
+        "1000",
+        "infer --connect: how long the breaker stays open before a half-open probe, ms",
+    )
+    .flag(
+        "checked",
+        "infer --connect: CRC-checked data frames (uplink corruption is detected and re-sent)",
+    )
     .flag(
         "fair-admission",
         "serve-cloud: per-tenant fair admission + tenant-aware batching when over budget",
@@ -210,7 +244,16 @@ fn run(command: &str, args: &Args) -> Result<()> {
                 pin_shards: args.get_flag("pin-shards"),
                 io: IoModel::parse(args.get("io"))?,
                 max_conns: args.get_usize("max-conns").max(1),
+                idle_timeout: std::time::Duration::from_secs(
+                    args.get_usize("idle-timeout-s") as u64,
+                ),
+                watchdog_ms: args.get_usize("watchdog-ms") as u64,
             };
+            if !args.get("fault-plan").is_empty() {
+                let plan = jalad::util::fault::FaultPlan::parse_arc(args.get("fault-plan"))
+                    .map_err(|e| anyhow!("--fault-plan: {e}"))?;
+                pool.set_exec_faults(Some(plan));
+            }
             let io = cfg.io;
             let server = Arc::new(CloudServer::with_pool(pool, cfg));
             let (addr, handle) = Arc::clone(&server).spawn(args.get("addr"))?;
@@ -266,6 +309,25 @@ fn run(command: &str, args: &Args) -> Result<()> {
             let controller = AdaptationController::new(eng, args.get_f64("bw"));
             let rate = jalad::network::throttle::RateHandle::new(args.get_f64("bw") as u64);
             let mut edge = jalad::server::EdgeClient::connect(&exe, &model, addr, rate, controller)?;
+            edge.set_request_timeout(std::time::Duration::from_millis(
+                args.get_usize("request-timeout-ms") as u64,
+            ))?;
+            edge.set_breaker_config(jalad::server::BreakerConfig {
+                failure_threshold: args.get_usize("breaker-failures") as u32,
+                cooldown: std::time::Duration::from_millis(
+                    args.get_usize("breaker-cooldown-ms") as u64,
+                ),
+                ..Default::default()
+            });
+            if !args.get("fault-plan").is_empty() {
+                edge.set_fault_plan(Some(
+                    jalad::util::fault::FaultPlan::parse_arc(args.get("fault-plan"))
+                        .map_err(|e| anyhow!("--fault-plan: {e}"))?,
+                ));
+            }
+            if args.get_flag("checked") {
+                edge.set_checked(true);
+            }
             if !args.get("tenant").is_empty() {
                 let t: u32 = args
                     .get("tenant")
@@ -285,7 +347,13 @@ fn run(command: &str, args: &Args) -> Result<()> {
                 let r = edge.infer(&s)?;
                 correct += r.correct as usize;
                 sheds += r.sheds;
-                println!("req {id:3}  {:?}  sheds {}  {}", r.decision, r.sheds, r.breakdown.summary());
+                println!(
+                    "req {id:3}  {:?}  sheds {}  {}{}",
+                    r.decision,
+                    r.sheds,
+                    r.breakdown.summary(),
+                    if r.served_locally { "  [local]" } else { "" }
+                );
             }
             println!("accuracy {}/{n}, {} sheds absorbed", correct, sheds);
             println!("stats: {}", edge.stats()?);

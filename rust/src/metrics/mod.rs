@@ -142,6 +142,10 @@ pub struct Counters {
     pub malformed: AtomicU64,
     pub sheds: AtomicU64,
     pub conn_sheds: AtomicU64,
+    /// Connections the reactor closed for making no frame progress
+    /// within the idle timeout (slow-loris defense; counted in
+    /// `connections` too — they were accepted).
+    pub idle_reaped: AtomicU64,
 }
 
 impl Counters {
@@ -180,6 +184,12 @@ impl Counters {
     }
     pub fn conn_sheds(&self) -> u64 {
         self.conn_sheds.load(Ordering::Relaxed)
+    }
+    pub fn inc_idle_reaped(&self) {
+        self.idle_reaped.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn idle_reaped(&self) -> u64 {
+        self.idle_reaped.load(Ordering::Relaxed)
     }
     pub fn connections(&self) -> u64 {
         self.connections.load(Ordering::Relaxed)

@@ -526,8 +526,16 @@ impl SharedExecutor {
     }
 
     /// Run `f` with exclusive access to the executor.
+    ///
+    /// Poison-tolerant: a panic inside one closure (a poisoned shard
+    /// under fault injection, or a backend bug) must not condemn the
+    /// lane forever — the executor holds no partially-mutated rust
+    /// state across a panic (XLA handles are created and destroyed
+    /// within a single call), so clearing the poison is sound, and the
+    /// pool's quarantine machinery decides whether the lane keeps
+    /// serving.
     pub fn with<R>(&self, f: impl FnOnce(&Executor) -> R) -> R {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         f(&g)
     }
 

@@ -34,5 +34,5 @@ pub mod tensor;
 pub use artifacts::{CodecArtifacts, Manifest, ModelManifest, StageManifest, TailSignature};
 pub use batch::{BatchConfig, BatchEngine, SignatureStat};
 pub use executor::{Executor, SharedExecutor, StageOutput};
-pub use pool::{ExecutorPool, ShardStats};
+pub use pool::{ExecutorPool, HealthStats, ShardStats};
 pub use tensor::Tensor;

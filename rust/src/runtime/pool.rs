@@ -15,14 +15,15 @@
 //! utilization report — the observable that tells an operator whether
 //! the shard count, not the transport, is the throughput ceiling.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::artifacts::Manifest;
 use super::executor::{Executor, SharedExecutor};
+use crate::util::fault::FaultPlan;
 
 struct Shard {
     exe: Arc<SharedExecutor>,
@@ -32,6 +33,9 @@ struct Shard {
     busy_ns: AtomicU64,
     /// Callers currently holding (or queued on) this shard's lock.
     active: AtomicU64,
+    /// Routed around while true (panicked, or tripped the latency
+    /// watchdog); a background probe re-admits it.
+    quarantined: AtomicBool,
 }
 
 /// Point-in-time utilization of one shard.
@@ -39,14 +43,53 @@ struct Shard {
 pub struct ShardStats {
     pub runs: u64,
     pub busy_seconds: f64,
+    pub quarantined: bool,
 }
 
+/// Pool-lifetime self-healing counters (stats JSON: `quarantined` /
+/// `readmitted` and friends).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HealthStats {
+    /// Shards currently routed around.
+    pub quarantined_now: usize,
+    /// Quarantine events since the pool was built.
+    pub quarantined: u64,
+    /// Successful re-admissions after a background probe.
+    pub readmitted: u64,
+    /// Quarantines caused by the latency watchdog (subset).
+    pub watchdog_trips: u64,
+    /// Quarantines caused by a shard panic (subset).
+    pub panics: u64,
+}
+
+/// Shared mutable health state, split from the pool so detached probe
+/// threads can outlive (or be outlived by) the pool itself.
+#[derive(Default)]
+struct Health {
+    quarantined_now: AtomicUsize,
+    quarantined: AtomicU64,
+    readmitted: AtomicU64,
+    watchdog_trips: AtomicU64,
+    panics: AtomicU64,
+}
+
+/// How long a quarantined shard rests before each re-admission probe.
+const PROBE_COOLDOWN: Duration = Duration::from_millis(200);
+
 pub struct ExecutorPool {
-    shards: Vec<Shard>,
+    shards: Vec<Arc<Shard>>,
     manifest: Manifest,
     /// Whether this backend executes a stacked batch better than
     /// serially (see [`ExecutorPool::batch_capable`]).
     batch_capable: bool,
+    health: Arc<Health>,
+    /// Latency watchdog threshold in ms; 0 disables it. A run that
+    /// holds a shard longer than this quarantines the shard.
+    watchdog_ms: AtomicU64,
+    /// Deterministic chaos hook (slow/panicking shard). The flag keeps
+    /// the no-faults hot path to one relaxed atomic load.
+    faults_on: AtomicBool,
+    faults: Mutex<Option<Arc<FaultPlan>>>,
 }
 
 impl ExecutorPool {
@@ -99,16 +142,43 @@ impl ExecutorPool {
         Arc::new(Self {
             shards: exes
                 .into_iter()
-                .map(|exe| Shard {
-                    exe,
-                    runs: AtomicU64::new(0),
-                    busy_ns: AtomicU64::new(0),
-                    active: AtomicU64::new(0),
+                .map(|exe| {
+                    Arc::new(Shard {
+                        exe,
+                        runs: AtomicU64::new(0),
+                        busy_ns: AtomicU64::new(0),
+                        active: AtomicU64::new(0),
+                        quarantined: AtomicBool::new(false),
+                    })
                 })
                 .collect(),
             manifest,
             batch_capable,
+            health: Arc::new(Health::default()),
+            watchdog_ms: AtomicU64::new(0),
+            faults_on: AtomicBool::new(false),
+            faults: Mutex::new(None),
         })
+    }
+
+    /// Arm (or disarm, ms = 0) the per-run latency watchdog.
+    pub fn set_watchdog_ms(&self, ms: u64) {
+        self.watchdog_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Install the executor-level chaos hook (`slow-shard` /
+    /// `panic-shard` in a fault plan). `None` removes it.
+    pub fn set_exec_faults(&self, plan: Option<Arc<FaultPlan>>) {
+        let on = plan.is_some();
+        *self.faults.lock().unwrap_or_else(|e| e.into_inner()) = plan;
+        self.faults_on.store(on, Ordering::Release);
+    }
+
+    fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        if !self.faults_on.load(Ordering::Acquire) {
+            return None;
+        }
+        self.faults.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     pub fn shard_count(&self) -> usize {
@@ -131,8 +201,26 @@ impl ExecutorPool {
 
     /// Run `f` with exclusive access to the shard `affinity` maps to,
     /// recording the hold time in that shard's utilization counters.
+    /// Quarantined shards are routed around (next healthy shard, so a
+    /// connection's affinity stays stable while the fleet is healthy);
+    /// with every shard quarantined the affinity shard serves anyway —
+    /// degraded beats unavailable.
     pub fn run_on<R>(&self, affinity: usize, f: impl FnOnce(&Executor) -> R) -> R {
-        self.run_on_shard(affinity % self.shards.len(), f)
+        self.run_on_shard(self.route(affinity % self.shards.len()), f)
+    }
+
+    /// First non-quarantined shard at or after `idx` (wrapping); `idx`
+    /// itself when none is healthy. One relaxed load when nothing is
+    /// quarantined.
+    fn route(&self, idx: usize) -> usize {
+        if self.health.quarantined_now.load(Ordering::Relaxed) == 0 {
+            return idx;
+        }
+        let n = self.shards.len();
+        (0..n)
+            .map(|k| (idx + k) % n)
+            .find(|&i| !self.shards[i].quarantined.load(Ordering::Relaxed))
+            .unwrap_or(idx)
     }
 
     /// Run `f` on the shard with the fewest callers in flight (ties
@@ -140,10 +228,12 @@ impl ExecutorPool {
     /// this so concurrent batches spread across shards instead of
     /// piling onto one connection's affinity shard.
     pub fn run_on_least_busy<R>(&self, f: impl FnOnce(&Executor) -> R) -> R {
+        let healthy_only = self.health.quarantined_now.load(Ordering::Relaxed) > 0;
         let idx = self
             .shards
             .iter()
             .enumerate()
+            .filter(|(_, s)| !healthy_only || !s.quarantined.load(Ordering::Relaxed))
             .min_by_key(|(_, s)| {
                 (s.active.load(Ordering::Relaxed), s.busy_ns.load(Ordering::Relaxed))
             })
@@ -164,11 +254,92 @@ impl ExecutorPool {
         let shard = &self.shards[idx];
         shard.active.fetch_add(1, Ordering::SeqCst);
         let _active = ActiveGuard(&shard.active);
+        let plan = self.fault_plan();
         let t0 = Instant::now();
-        let out = shard.exe.with(f);
-        shard.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        // A panic — scripted by the fault hook or organic from the
+        // backend — quarantines the shard, then resumes unwinding so
+        // callers (batch-leader guards, the epoll completion Drop) see
+        // exactly the panic they already handle. `SharedExecutor::with`
+        // clears mutex poison, so the shard stays probe-able.
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let Some(p) = &plan {
+                p.before_shard_run(idx);
+            }
+            shard.exe.with(f)
+        }));
+        let held = t0.elapsed();
+        shard.busy_ns.fetch_add(held.as_nanos() as u64, Ordering::Relaxed);
         shard.runs.fetch_add(1, Ordering::Relaxed);
-        out
+        match out {
+            Ok(r) => {
+                let watchdog = self.watchdog_ms.load(Ordering::Relaxed);
+                if watchdog > 0 && held > Duration::from_millis(watchdog) {
+                    self.health.watchdog_trips.fetch_add(1, Ordering::Relaxed);
+                    self.quarantine(idx);
+                }
+                r
+            }
+            Err(payload) => {
+                self.health.panics.fetch_add(1, Ordering::Relaxed);
+                self.quarantine(idx);
+                std::panic::resume_unwind(payload)
+            }
+        }
+    }
+
+    /// Quarantine shard `idx` (idempotent) and detach a probe thread
+    /// that re-admits it once a trial run survives. In-flight work on
+    /// the shard drains naturally — the probe queues on the same lock,
+    /// so re-admission cannot overtake a still-running request.
+    fn quarantine(&self, idx: usize) {
+        let shard = &self.shards[idx];
+        if shard
+            .quarantined
+            .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+            .is_err()
+        {
+            return; // already quarantined; its probe thread is running
+        }
+        self.health.quarantined.fetch_add(1, Ordering::Relaxed);
+        self.health.quarantined_now.fetch_add(1, Ordering::SeqCst);
+        let shard = Arc::clone(shard);
+        let health = Arc::clone(&self.health);
+        let plan = self.fault_plan();
+        let watchdog = self.watchdog_ms.load(Ordering::Relaxed);
+        std::thread::Builder::new()
+            .name(format!("shard-probe-{idx}"))
+            .spawn(move || loop {
+                std::thread::sleep(PROBE_COOLDOWN);
+                let t0 = Instant::now();
+                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    if let Some(p) = &plan {
+                        p.before_shard_run(idx);
+                    }
+                    // Acquiring the lock is the probe: it drains any
+                    // in-flight holder and proves the lane responds.
+                    shard.exe.with(|_| ());
+                }))
+                .is_ok()
+                    && (watchdog == 0 || t0.elapsed() <= Duration::from_millis(watchdog));
+                if ok {
+                    shard.quarantined.store(false, Ordering::SeqCst);
+                    health.quarantined_now.fetch_sub(1, Ordering::SeqCst);
+                    health.readmitted.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            })
+            .expect("spawn shard probe thread");
+    }
+
+    /// Current self-healing counters.
+    pub fn health_stats(&self) -> HealthStats {
+        HealthStats {
+            quarantined_now: self.health.quarantined_now.load(Ordering::SeqCst),
+            quarantined: self.health.quarantined.load(Ordering::Relaxed),
+            readmitted: self.health.readmitted.load(Ordering::Relaxed),
+            watchdog_trips: self.health.watchdog_trips.load(Ordering::Relaxed),
+            panics: self.health.panics.load(Ordering::Relaxed),
+        }
     }
 
     /// Per-signature compatibility probe: verify — by *executing*, not
@@ -243,6 +414,7 @@ impl ExecutorPool {
             .map(|s| ShardStats {
                 runs: s.runs.load(Ordering::Relaxed),
                 busy_seconds: s.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+                quarantined: s.quarantined.load(Ordering::Relaxed),
             })
             .collect()
     }
@@ -351,5 +523,107 @@ mod tests {
         let pool = ExecutorPool::from_shared(exe);
         assert_eq!(pool.shard_count(), 1);
         assert_eq!(pool.manifest().models.len(), 1);
+    }
+
+    /// Block until `cond` holds or ~3 s pass (probe threads pace
+    /// themselves on `PROBE_COOLDOWN`, so health transitions are
+    /// eventually-consistent).
+    fn wait_for(mut cond: impl FnMut() -> bool) -> bool {
+        for _ in 0..300 {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        false
+    }
+
+    #[test]
+    fn panicking_shard_is_quarantined_routed_around_and_readmitted() {
+        let pool = ExecutorPool::new_sim_with(sim_manifest(), 3, 4);
+        pool.set_exec_faults(Some(FaultPlan::parse_arc("panic-shard=1,panic-count=1").unwrap()));
+
+        // The scripted panic fires on the first run routed to shard 1
+        // and must propagate to the caller.
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_on(1, |_| ());
+        }));
+        assert!(hit.is_err(), "scripted panic must unwind to the caller");
+        let h = pool.health_stats();
+        assert_eq!((h.panics, h.quarantined, h.quarantined_now), (1, 1, 1));
+        assert!(pool.shard_stats()[1].quarantined);
+
+        // Affinity 1 now routes to the next healthy shard (2), and the
+        // quarantined shard takes no traffic.
+        let before = pool.shard_stats();
+        for _ in 0..4 {
+            pool.run_on(1, |_| ());
+        }
+        let after = pool.shard_stats();
+        assert_eq!(after[1].runs, before[1].runs, "quarantined shard must take no traffic");
+        assert_eq!(after[2].runs, before[2].runs + 4);
+
+        // The panic budget is spent, so the background probe readmits.
+        assert!(
+            wait_for(|| pool.health_stats().quarantined_now == 0),
+            "shard must be readmitted once the probe survives: {:?}",
+            pool.health_stats()
+        );
+        assert_eq!(pool.health_stats().readmitted, 1);
+        assert!(!pool.shard_stats()[1].quarantined);
+        // And affinity routing is back to normal.
+        let before = pool.shard_stats();
+        pool.run_on(1, |_| ());
+        assert_eq!(pool.shard_stats()[1].runs, before[1].runs + 1);
+    }
+
+    #[test]
+    fn watchdog_quarantines_slow_shard_and_probe_keeps_it_out() {
+        let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, 4);
+        pool.set_watchdog_ms(40);
+        pool.set_exec_faults(Some(FaultPlan::parse_arc("slow-shard=0,slow-ms=120").unwrap()));
+
+        // The run completes (slow, not broken) but trips the watchdog.
+        pool.run_on(0, |_| ());
+        let h = pool.health_stats();
+        assert_eq!((h.watchdog_trips, h.quarantined_now), (1, 1));
+
+        // The shard is still slow, so probes keep failing: after a few
+        // cooldowns it must remain quarantined and unrouted.
+        std::thread::sleep(Duration::from_millis(500));
+        assert_eq!(pool.health_stats().quarantined_now, 1);
+        assert_eq!(pool.health_stats().readmitted, 0);
+        let before = pool.shard_stats();
+        pool.run_on(0, |_| ());
+        assert_eq!(pool.shard_stats()[1].runs, before[1].runs + 1);
+    }
+
+    #[test]
+    fn all_quarantined_still_serves() {
+        let pool = ExecutorPool::new_sim_with(sim_manifest(), 1, 4);
+        pool.set_exec_faults(Some(FaultPlan::parse_arc("panic-shard=0,panic-count=1").unwrap()));
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run_on(0, |_| ())));
+        assert_eq!(pool.health_stats().quarantined_now, 1);
+        // Degraded beats unavailable: the only shard serves anyway.
+        let shape = pool.manifest().model("simnet").unwrap().input_shape.clone();
+        let x = crate::data::gen::sample_image_shaped(0, 5, &shape);
+        pool.run_on(0, |e| e.run_full("simnet", &x).unwrap());
+        assert!(wait_for(|| pool.health_stats().readmitted == 1));
+    }
+
+    #[test]
+    fn least_busy_skips_quarantined_shards() {
+        let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, 4);
+        pool.set_exec_faults(Some(FaultPlan::parse_arc("slow-shard=0,slow-ms=60").unwrap()));
+        pool.set_watchdog_ms(20);
+        pool.run_on(0, |_| ()); // trips the watchdog on shard 0
+        pool.set_exec_faults(None);
+        let before = pool.shard_stats();
+        for _ in 0..3 {
+            pool.run_on_least_busy(|_| ());
+        }
+        let after = pool.shard_stats();
+        assert_eq!(after[0].runs, before[0].runs, "least-busy must skip the quarantined shard");
+        assert_eq!(after[1].runs, before[1].runs + 3);
     }
 }

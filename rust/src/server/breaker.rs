@@ -1,0 +1,334 @@
+//! Circuit breaker guarding the edge → cloud path.
+//!
+//! Classic three-state machine, deterministic and clock-injectable so
+//! the transition table is unit-testable without sleeping:
+//!
+//! * **Closed** — requests flow to the cloud. Consecutive transport
+//!   failures (io errors, timeouts, malformed replies) or per-request
+//!   deadline overruns increment a strike counter; at
+//!   `failure_threshold` the breaker opens.
+//! * **Open** — the cloud path is skipped entirely (the edge serves
+//!   full-local at the `i=N` cut). After `cooldown` the next
+//!   `should_attempt` admits exactly one probe request (half-open).
+//! * **Half-open** — probe outcomes decide: `probe_successes`
+//!   consecutive successes reclose; any failure reopens and restarts
+//!   the cooldown.
+//!
+//! A success in Closed resets the strike counter. Time is passed in by
+//! the caller (`Instant::now()` in production, a scripted clock in
+//! tests), so there is no hidden global state.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Consecutive failures in Closed that trip the breaker.
+    pub failure_threshold: u32,
+    /// How long Open lasts before a half-open probe is admitted.
+    pub cooldown: Duration,
+    /// Consecutive half-open successes required to reclose.
+    pub probe_successes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self {
+            failure_threshold: 3,
+            cooldown: Duration::from_secs(1),
+            probe_successes: 1,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    strikes: u32,
+    probe_ok: u32,
+    opened_at: Option<Instant>,
+    /// True while the single half-open probe slot is checked out.
+    probe_inflight: bool,
+    // Lifetime counters for stats.
+    opened: u64,
+    half_opens: u64,
+    reclosed: u64,
+    overruns: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        Self {
+            cfg: BreakerConfig {
+                failure_threshold: cfg.failure_threshold.max(1),
+                cooldown: cfg.cooldown,
+                probe_successes: cfg.probe_successes.max(1),
+            },
+            state: BreakerState::Closed,
+            strikes: 0,
+            probe_ok: 0,
+            opened_at: None,
+            probe_inflight: false,
+            opened: 0,
+            half_opens: 0,
+            reclosed: 0,
+            overruns: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    pub fn config(&self) -> BreakerConfig {
+        self.cfg
+    }
+
+    /// May the caller attempt the cloud path right now?
+    ///
+    /// Closed → always. Open → only once the cooldown has elapsed, and
+    /// then only one probe at a time (the slot is released by the
+    /// probe's `record_success`/`record_failure`). The transition to
+    /// HalfOpen happens here, when the probe is admitted.
+    pub fn should_attempt(&mut self, now: Instant) -> bool {
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::HalfOpen => {
+                if self.probe_inflight {
+                    false
+                } else {
+                    self.probe_inflight = true;
+                    true
+                }
+            }
+            BreakerState::Open => {
+                let due = self
+                    .opened_at
+                    .map(|t| now.duration_since(t) >= self.cfg.cooldown)
+                    .unwrap_or(true);
+                if due {
+                    self.state = BreakerState::HalfOpen;
+                    self.half_opens += 1;
+                    self.probe_ok = 0;
+                    self.probe_inflight = true;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a successful cloud round-trip (made after `should_attempt`
+    /// returned true). Returns true when this success reclosed the
+    /// breaker — the caller's cue to walk the cut back cloud-ward.
+    pub fn record_success(&mut self, _now: Instant) -> bool {
+        match self.state {
+            BreakerState::Closed => {
+                self.strikes = 0;
+                false
+            }
+            BreakerState::HalfOpen => {
+                self.probe_inflight = false;
+                self.probe_ok += 1;
+                if self.probe_ok >= self.cfg.probe_successes {
+                    self.state = BreakerState::Closed;
+                    self.strikes = 0;
+                    self.opened_at = None;
+                    self.reclosed += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+            // A success can't arrive in Open: should_attempt refused.
+            BreakerState::Open => false,
+        }
+    }
+
+    /// Record a failed cloud round-trip. Returns true when this failure
+    /// opened (or reopened) the breaker.
+    pub fn record_failure(&mut self, now: Instant) -> bool {
+        match self.state {
+            BreakerState::Closed => {
+                self.strikes += 1;
+                if self.strikes >= self.cfg.failure_threshold {
+                    self.trip(now);
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                self.probe_inflight = false;
+                self.trip(now);
+                true
+            }
+            BreakerState::Open => false,
+        }
+    }
+
+    /// Record that a request exceeded its deadline. Counts as a failure
+    /// *and* is tracked separately (deadline overruns are the breaker's
+    /// reason to exist — a hung cloud produces only these).
+    pub fn record_overrun(&mut self, now: Instant) -> bool {
+        self.overruns += 1;
+        self.record_failure(now)
+    }
+
+    fn trip(&mut self, now: Instant) {
+        self.state = BreakerState::Open;
+        self.opened_at = Some(now);
+        self.strikes = 0;
+        self.probe_ok = 0;
+        self.opened += 1;
+    }
+
+    pub fn opened_count(&self) -> u64 {
+        self.opened
+    }
+
+    pub fn half_open_count(&self) -> u64 {
+        self.half_opens
+    }
+
+    pub fn reclosed_count(&self) -> u64 {
+        self.reclosed
+    }
+
+    pub fn overrun_count(&self) -> u64 {
+        self.overruns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(threshold: u32, cooldown_ms: u64, probes: u32) -> CircuitBreaker {
+        CircuitBreaker::new(BreakerConfig {
+            failure_threshold: threshold,
+            cooldown: Duration::from_millis(cooldown_ms),
+            probe_successes: probes,
+        })
+    }
+
+    #[test]
+    fn transition_table() {
+        let t0 = Instant::now();
+        let mut b = mk(3, 100, 1);
+        assert_eq!(b.state(), BreakerState::Closed);
+
+        // Two failures: still closed (threshold 3).
+        assert!(!b.record_failure(t0));
+        assert!(!b.record_failure(t0));
+        assert_eq!(b.state(), BreakerState::Closed);
+
+        // A success resets the strike counter.
+        b.record_success(t0);
+        assert!(!b.record_failure(t0));
+        assert!(!b.record_failure(t0));
+        assert_eq!(b.state(), BreakerState::Closed);
+
+        // Third consecutive failure trips it.
+        assert!(b.record_failure(t0));
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.opened_count(), 1);
+
+        // Open: attempts refused until the cooldown elapses.
+        assert!(!b.should_attempt(t0 + Duration::from_millis(50)));
+        assert_eq!(b.state(), BreakerState::Open);
+
+        // Cooldown elapsed: one probe admitted, state is HalfOpen.
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.should_attempt(t1));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(b.half_open_count(), 1);
+
+        // Probe success recloses.
+        assert!(b.record_success(t1));
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.reclosed_count(), 1);
+    }
+
+    #[test]
+    fn half_open_failure_reopens_and_restarts_cooldown() {
+        let t0 = Instant::now();
+        let mut b = mk(1, 100, 1);
+        assert!(b.record_failure(t0));
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.should_attempt(t1));
+        assert!(b.record_failure(t1)); // probe failed → reopen
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.opened_count(), 2);
+        // The cooldown restarted at t1, not t0.
+        assert!(!b.should_attempt(t1 + Duration::from_millis(99)));
+        assert!(b.should_attempt(t1 + Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn probe_pacing_single_slot() {
+        let t0 = Instant::now();
+        let mut b = mk(1, 0, 1);
+        b.record_failure(t0);
+        assert!(b.should_attempt(t0)); // cooldown 0 → immediate probe
+        // While the probe is in flight, no second attempt is admitted.
+        assert!(!b.should_attempt(t0));
+        assert!(!b.should_attempt(t0 + Duration::from_secs(10)));
+        // Probe resolves → slot released.
+        b.record_success(t0);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.should_attempt(t0));
+    }
+
+    #[test]
+    fn multi_probe_reclose() {
+        let t0 = Instant::now();
+        let mut b = mk(1, 0, 2);
+        b.record_failure(t0);
+        assert!(b.should_attempt(t0));
+        assert!(!b.record_success(t0)); // 1/2 — still half-open
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(b.should_attempt(t0)); // next probe admitted
+        assert!(b.record_success(t0)); // 2/2 — reclosed
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn overruns_count_separately_and_trip() {
+        let t0 = Instant::now();
+        let mut b = mk(2, 100, 1);
+        assert!(!b.record_overrun(t0));
+        assert!(b.record_overrun(t0));
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.overrun_count(), 2);
+        assert_eq!(b.opened_count(), 1);
+    }
+
+    #[test]
+    fn closed_success_is_cheap_noop() {
+        let t0 = Instant::now();
+        let mut b = mk(3, 100, 1);
+        for _ in 0..10 {
+            assert!(b.should_attempt(t0));
+            assert!(!b.record_success(t0));
+        }
+        assert_eq!(b.opened_count(), 0);
+    }
+
+    #[test]
+    fn zero_thresholds_are_clamped() {
+        let t0 = Instant::now();
+        let mut b = mk(0, 0, 0);
+        assert!(b.record_failure(t0), "threshold clamps to 1");
+        assert!(b.should_attempt(t0));
+        assert!(b.record_success(t0), "probe count clamps to 1");
+    }
+}

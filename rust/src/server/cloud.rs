@@ -209,7 +209,20 @@ pub struct ServeConfig {
     /// get a `Busy` frame and a close instead of a thread or a
     /// reactor slot.
     pub max_conns: usize,
+    /// Reactor-transport idle reaper: a connection with no frame
+    /// progress for this long is deregistered and closed (counted as
+    /// `idle_reaped`). `Duration::ZERO` disables reaping. The threads
+    /// transport ignores it — a blocked thread is that transport's
+    /// cost model, and `max_conns` still bounds it.
+    pub idle_timeout: Duration,
+    /// Per-run shard latency watchdog, ms (0 = off): a tail/full run
+    /// that holds its shard longer than this quarantines the shard
+    /// (see `ExecutorPool::set_watchdog_ms`).
+    pub watchdog_ms: u64,
 }
+
+/// Default reactor idle timeout (`--idle-timeout-s`).
+pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(300);
 
 impl Default for ServeConfig {
     fn default() -> Self {
@@ -220,6 +233,8 @@ impl Default for ServeConfig {
             pin_shards: false,
             io: IoModel::default_for_host(),
             max_conns: DEFAULT_MAX_CONNS,
+            idle_timeout: DEFAULT_IDLE_TIMEOUT,
+            watchdog_ms: 0,
         }
     }
 }
@@ -509,6 +524,7 @@ impl CloudServer {
         // monopolize gather windows.
         let mut batch_cfg = cfg.batch;
         batch_cfg.tenant_fair = batch_cfg.tenant_fair || cfg.admission.fair;
+        pool.set_watchdog_ms(cfg.watchdog_ms);
         Self {
             engine: BatchEngine::with_tenants(pool, batch_cfg, Some(Arc::clone(&tenants))),
             manifest,
@@ -714,7 +730,7 @@ impl CloudServer {
         tenant_memo: &mut Option<(u64, Arc<TenantCounters>)>,
         writer: &mut impl std::io::Write,
     ) -> Result<FrameAction> {
-        let kind = match recv {
+        let mut kind = match recv {
             RecvFrame::Data(k) => k,
             RecvFrame::Eof => return Ok(FrameAction::Close),
             RecvFrame::Malformed { reason, resync } => {
@@ -726,6 +742,29 @@ impl CloudServer {
                 return Ok(FrameAction::Close); // length prefix unusable; close
             }
         };
+        if kind == proto::KIND_CHECKED {
+            // Integrity envelope: verify the CRC and serve the inner
+            // frame exactly as if it had arrived bare. A mismatch means
+            // the uplink corrupted bytes in flight — the frame is
+            // refused loudly (the edge re-sends) instead of letting the
+            // entropy codec decode garbage into a wrong-but-served
+            // prediction. The stream itself is still aligned.
+            match proto::unwrap_checked(&sc.frame) {
+                Ok((inner, off)) => {
+                    sc.frame.drain(..off);
+                    kind = inner;
+                }
+                Err(_) => {
+                    self.counters.inc_malformed();
+                    proto::write_frame_raw(
+                        writer,
+                        proto::KIND_ERROR,
+                        proto::INTEGRITY_REJECT,
+                    )?;
+                    return Ok(FrameAction::Continue);
+                }
+            }
+        }
         let t0 = Instant::now();
         match kind {
             proto::KIND_FEATURES => {
@@ -946,9 +985,11 @@ impl CloudServer {
                 Json::obj(vec![
                     ("runs", Json::num(s.runs as f64)),
                     ("busy_ms", Json::num(s.busy_seconds * 1e3)),
+                    ("quarantined", Json::num(s.quarantined as u8 as f64)),
                 ])
             })
             .collect();
+        let health = pool.health_stats();
         let telemetry = self.telemetry();
         Json::obj(vec![
             // Data-request taxonomy (see metrics::Counters): `requests`
@@ -963,6 +1004,14 @@ impl CloudServer {
             ("compiled", Json::num(pool.cached_count() as f64)),
             ("connections", Json::num(self.counters.connections() as f64)),
             ("conn_sheds", Json::num(self.counters.conn_sheds() as f64)),
+            ("idle_reaped", Json::num(self.counters.idle_reaped() as f64)),
+            // Shard self-healing: quarantine events, successful
+            // re-admissions, and what tripped them.
+            ("quarantined", Json::num(health.quarantined as f64)),
+            ("quarantined_now", Json::num(health.quarantined_now as f64)),
+            ("readmitted", Json::num(health.readmitted as f64)),
+            ("watchdog_trips", Json::num(health.watchdog_trips as f64)),
+            ("shard_panics", Json::num(health.panics as f64)),
             ("pool_hits", Json::num(ps.hits as f64)),
             ("pool_misses", Json::num(ps.misses as f64)),
             (

@@ -18,10 +18,22 @@
 //! and the transport uses the raw `proto` functions over the session's
 //! wire buffer plus a reusable receive buffer, so a steady-state request
 //! performs no heap allocations in the codec + proto hops.
+//!
+//! The cloud path is additionally guarded by a
+//! [`CircuitBreaker`](crate::server::breaker::CircuitBreaker):
+//! transport faults and per-request deadline overruns open it, an open
+//! breaker pins the plan at the full-local `i = N` cut (every request
+//! is answered on the edge — availability never drops to zero), and
+//! half-open probes walk the cut cloud-ward again once the cloud
+//! recovers. Optional CRC-checked framing
+//! ([`EdgeClient::set_checked`]) turns silent uplink corruption into a
+//! loud reject-and-resend, and [`EdgeClient::set_fault_plan`] injects
+//! deterministic faults for chaos testing.
 
 use std::io::BufReader;
-use std::net::TcpStream;
-use std::time::Instant;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -32,7 +44,9 @@ use crate::ilp::Decision;
 use crate::metrics::Breakdown;
 use crate::network::throttle::{RateHandle, ThrottledWriter};
 use crate::runtime::Executor;
+use crate::server::breaker::{BreakerConfig, CircuitBreaker};
 use crate::server::proto::{self, Frame, RecvFrame};
+use crate::util::fault::{FaultPlan, FaultyStream};
 use crate::util::json::Json;
 
 /// Transfers below this size are RTT/compute-dominated and excluded
@@ -70,15 +84,103 @@ pub const BACKOFF_JITTER_FRAC: f64 = 0.5;
 /// kernel's minutes-long default.
 pub const CONNECT_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(5);
 
+/// Default per-request transport deadline: applied as `SO_RCVTIMEO` /
+/// `SO_SNDTIMEO` on the cloud socket so a stalled or black-holed cloud
+/// surfaces as a timed-out attempt (which feeds the circuit breaker as
+/// a deadline overrun) instead of a wedged caller. Override with
+/// [`EdgeClient::set_request_timeout`]; `Duration::ZERO` disables the
+/// deadline entirely (the pre-breaker blocking behavior).
+pub const DEFAULT_REQUEST_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Bounded re-sends after the cloud rejects a checked frame with
+/// [`proto::INTEGRITY_REJECT`] (the uplink damaged the bytes in
+/// flight). Each re-send re-encodes and re-rolls the uplink's fault
+/// dice, so transient corruption clears in one or two attempts; a link
+/// corrupting *every* frame exhausts this budget and feeds the breaker
+/// instead of spinning.
+pub const MAX_INTEGRITY_RESENDS: usize = 2;
+
 /// Per-process seed counter so concurrently-built edge clients jitter
 /// independently (golden-ratio stride keeps seeds well spread).
 static JITTER_SEED: std::sync::atomic::AtomicU64 =
     std::sync::atomic::AtomicU64::new(0x9E37_79B9_7F4A_7C15);
 
+/// The live cloud connection: a buffered reader over one half of the
+/// socket and the throttled (and optionally fault-injected) writer over
+/// the other. Dropped whole on any transport failure — a socket that
+/// timed out mid-frame has undefined framing state, so failover always
+/// reconnects rather than resuming.
+struct Transport {
+    reader: BufReader<TcpStream>,
+    writer: ThrottledWriter<FaultyStream<TcpStream>>,
+}
+
+/// How one cloud attempt failed, which decides what happens next.
+enum CloudFailure {
+    /// Connection-level fault (reset, EOF, malformed reply, reconnect
+    /// refusal, persistent integrity rejection): feeds the breaker as
+    /// a failure and the request degrades to local serving.
+    Transport(anyhow::Error),
+    /// The per-request deadline fired: feeds the breaker as an overrun
+    /// (counted separately) and degrades to local serving.
+    Overrun(anyhow::Error),
+    /// Semantic refusal a retry or a local answer must not mask
+    /// (admission-shed budget exhausted, cloud-reported errors):
+    /// propagates to the caller unchanged.
+    Fatal(anyhow::Error),
+}
+
+impl CloudFailure {
+    fn into_err(self) -> anyhow::Error {
+        match self {
+            CloudFailure::Transport(e) | CloudFailure::Overrun(e) | CloudFailure::Fatal(e) => e,
+        }
+    }
+}
+
+/// Classify a failed socket operation: deadline expiries
+/// (`SO_RCVTIMEO`/`SO_SNDTIMEO` surface as `WouldBlock` or `TimedOut`
+/// depending on platform) are overruns, everything else a transport
+/// fault.
+fn net_failure(e: anyhow::Error) -> CloudFailure {
+    let timed_out = e
+        .root_cause()
+        .downcast_ref::<std::io::Error>()
+        .map(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+            )
+        })
+        .unwrap_or(false);
+    if timed_out {
+        CloudFailure::Overrun(e.context("request deadline exceeded"))
+    } else {
+        CloudFailure::Transport(e)
+    }
+}
+
 pub struct EdgeClient<'a> {
     session: Session<'a>,
-    reader: BufReader<TcpStream>,
-    writer: ThrottledWriter<TcpStream>,
+    /// Cloud endpoint, kept for failover reconnects.
+    addr: SocketAddr,
+    /// Uplink pacing handle, kept so a reconnected socket is throttled
+    /// identically to the first one.
+    uplink: RateHandle,
+    /// `None` between a transport failure and the next cloud attempt.
+    transport: Option<Transport>,
+    /// Circuit breaker over the cloud path: consecutive transport
+    /// failures / deadline overruns open it, and while it is open
+    /// requests are served fully locally at the `i = N` cut.
+    breaker: CircuitBreaker,
+    request_timeout: Duration,
+    /// Uplink fault injection (chaos testing); wrapped around every
+    /// (re)connected socket.
+    faults: Option<Arc<FaultPlan>>,
+    /// Wrap data frames in the CRC-checked envelope so a corrupted
+    /// uplink is detected and re-sent instead of silently decoded.
+    /// Off by default: the legacy wire format stays bit-identical.
+    checked: bool,
     pub controller: ControlPlane,
     /// Explicit tenant identity: appended to every request as a wire
     /// trailer so the cloud scopes admission to this tenant across
@@ -110,6 +212,9 @@ pub struct EdgeResult {
     /// `Busy` sheds absorbed (and retried edge-ward) serving this
     /// request.
     pub sheds: usize,
+    /// The cloud path was down (breaker open or the attempt failed)
+    /// and this reply was computed entirely on the edge.
+    pub served_locally: bool,
 }
 
 impl<'a> EdgeClient<'a> {
@@ -120,29 +225,107 @@ impl<'a> EdgeClient<'a> {
         uplink: RateHandle,
         controller: ControlPlane,
     ) -> Result<Self> {
-        // Bounded connect: see [`CONNECT_TIMEOUT`].
-        let stream = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)?;
-        stream.set_nodelay(true)?;
-        let reader = BufReader::new(stream.try_clone()?);
-        // Small burst: feature frames are a few KB, so a default 64 KiB
-        // bucket would swallow whole frames and defeat the throttle
-        // (§Perf log — this showed up as bimodal latencies).
-        let writer = ThrottledWriter::with_burst(stream, uplink, 2048);
         let session = Session::new(exe, model)?;
         let seed = JITTER_SEED
             .fetch_add(0x9E37_79B9_7F4A_7C15, std::sync::atomic::Ordering::Relaxed)
             ^ u64::from(addr.port());
-        Ok(Self {
+        let mut client = Self {
             session,
-            reader,
-            writer,
+            addr,
+            uplink,
+            transport: None,
+            breaker: CircuitBreaker::new(BreakerConfig::default()),
+            request_timeout: DEFAULT_REQUEST_TIMEOUT,
+            faults: None,
+            checked: false,
             controller,
             tenant: None,
             trailer: Vec::new(),
             rx_buf: Vec::new(),
             logits: Vec::new(),
             jitter: crate::util::rng::XorShift64Star::new(seed),
-        })
+        };
+        // An unreachable cloud at construction is still a hard error —
+        // failover covers a cloud that *was* there and went away, not a
+        // misconfigured address.
+        client.transport = Some(client.open_transport()?);
+        Ok(client)
+    }
+
+    /// Dial the cloud and assemble the reader/writer pair with the
+    /// current deadline, throttle and fault plan. Used at construction
+    /// and for every failover reconnect.
+    fn open_transport(&self) -> Result<Transport> {
+        // Bounded connect: see [`CONNECT_TIMEOUT`].
+        let stream = TcpStream::connect_timeout(&self.addr, CONNECT_TIMEOUT)?;
+        stream.set_nodelay(true)?;
+        let deadline = (!self.request_timeout.is_zero()).then_some(self.request_timeout);
+        stream.set_read_timeout(deadline)?;
+        stream.set_write_timeout(deadline)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        // Small burst: feature frames are a few KB, so a default 64 KiB
+        // bucket would swallow whole frames and defeat the throttle
+        // (§Perf log — this showed up as bimodal latencies).
+        let writer = ThrottledWriter::with_burst(
+            FaultyStream::new(stream, self.faults.clone()),
+            self.uplink.clone(),
+            2048,
+        );
+        Ok(Transport { reader, writer })
+    }
+
+    fn ensure_transport(&mut self) -> Result<()> {
+        if self.transport.is_none() {
+            self.transport = Some(self.open_transport()?);
+        }
+        Ok(())
+    }
+
+    /// Set the per-request transport deadline (read *and* write) on
+    /// the cloud socket; `Duration::ZERO` disables it. Applies to the
+    /// live connection immediately and to every reconnect after.
+    pub fn set_request_timeout(&mut self, timeout: Duration) -> Result<()> {
+        self.request_timeout = timeout;
+        if let Some(tr) = &self.transport {
+            let deadline = (!timeout.is_zero()).then_some(timeout);
+            tr.reader.get_ref().set_read_timeout(deadline)?;
+            tr.reader.get_ref().set_write_timeout(deadline)?;
+        }
+        Ok(())
+    }
+
+    pub fn request_timeout(&self) -> Duration {
+        self.request_timeout
+    }
+
+    /// Replace the breaker with one built from `cfg` (state resets to
+    /// Closed). Call before traffic, not mid-episode.
+    pub fn set_breaker_config(&mut self, cfg: BreakerConfig) {
+        self.breaker = CircuitBreaker::new(cfg);
+    }
+
+    pub fn breaker(&self) -> &CircuitBreaker {
+        &self.breaker
+    }
+
+    /// Install (or clear) an uplink fault plan. The current connection
+    /// is dropped so the next attempt rewraps the socket — fault
+    /// injection always covers whole connections, never half of one.
+    pub fn set_fault_plan(&mut self, plan: Option<Arc<FaultPlan>>) {
+        self.faults = plan;
+        self.transport = None;
+    }
+
+    /// Wrap data frames in the CRC-checked envelope (see
+    /// [`proto::write_checked_frame_vec`]). Off by default.
+    pub fn set_checked(&mut self, on: bool) {
+        self.checked = on;
+    }
+
+    /// The logits of the most recent reply (cloud-decoded or locally
+    /// computed) — chaos tests bit-compare these across runs.
+    pub fn last_logits(&self) -> &[f32] {
+        &self.logits
     }
 
     /// Set (or clear) this edge's explicit tenant identity. With a
@@ -161,43 +344,116 @@ impl<'a> EdgeClient<'a> {
         self.tenant
     }
 
-    /// Serve one request end-to-end; blocks for the cloud reply.
-    /// `Busy` sheds are absorbed here: the control plane shifts the
-    /// cut edge-ward and the request is re-encoded and resent, up to
-    /// [`MAX_BUSY_RETRIES`] times.
+    /// Serve one request end-to-end. The cloud path is guarded by the
+    /// circuit breaker: transport faults and deadline overruns feed
+    /// it, and while it is open the control plane is pinned at the
+    /// full-local `i = N` cut and replies are computed on the edge
+    /// until a half-open probe succeeds. `Busy` sheds are absorbed
+    /// inside the cloud attempt exactly as before — admission pressure
+    /// is not a fault, and shed-budget exhaustion still surfaces as an
+    /// error rather than being masked by a local answer the cloud was
+    /// explicitly refusing to compute.
     pub fn infer(&mut self, sample: &Sample) -> Result<EdgeResult> {
         let mut bd = Breakdown::default();
         let mut sheds = 0usize;
+        let mut replanned = false;
+        if self.breaker.should_attempt(Instant::now()) {
+            match self.try_cloud(sample, &mut bd, &mut sheds, &mut replanned) {
+                Ok(result) => {
+                    if self.breaker.record_success(Instant::now()) {
+                        // Reclosed: walk the cut cloud-ward again by
+                        // re-solving at the current estimates.
+                        self.controller.on_breaker_close();
+                    }
+                    return Ok(result);
+                }
+                Err(CloudFailure::Fatal(e)) => return Err(e),
+                Err(fail) => {
+                    // The socket's framing state after a fault is
+                    // unknown; drop it so the next attempt reconnects.
+                    self.transport = None;
+                    let now = Instant::now();
+                    let opened = match fail {
+                        CloudFailure::Overrun(ref e) => {
+                            crate::log_warn!("edge", "cloud deadline overrun: {e:#}");
+                            self.breaker.record_overrun(now)
+                        }
+                        CloudFailure::Transport(ref e) => {
+                            crate::log_warn!("edge", "cloud transport fault: {e:#}");
+                            self.breaker.record_failure(now)
+                        }
+                        CloudFailure::Fatal(_) => unreachable!("handled above"),
+                    };
+                    if opened {
+                        self.controller.on_breaker_open();
+                    }
+                }
+            }
+        }
+        self.infer_local(sample, bd, sheds, replanned)
+    }
+
+    /// Full-local service at the `i = N` cut: the whole model runs on
+    /// the edge executor and the reply never touches the wire. This is
+    /// the availability floor the breaker degrades to.
+    fn infer_local(
+        &mut self,
+        sample: &Sample,
+        mut bd: Breakdown,
+        sheds: usize,
+        replanned: bool,
+    ) -> Result<EdgeResult> {
+        self.controller.note_local_serve();
+        let t0 = Instant::now();
+        let out = self
+            .session
+            .executor()
+            .run_full(self.session.model(), &sample.image)?;
+        bd.edge_compute += t0.elapsed().as_secs_f64();
+        self.logits.clear();
+        self.logits.extend_from_slice(out.tensor.data());
+        let prediction = out.tensor.argmax();
+        Ok(EdgeResult {
+            prediction,
+            correct: prediction == sample.label,
+            decision: self.controller.plan().decision,
+            breakdown: bd,
+            replanned,
+            sheds,
+            served_locally: true,
+        })
+    }
+
+    /// One guarded cloud attempt: reconnect if the previous transport
+    /// died, then the encode → transmit → reply loop with `Busy`-shed
+    /// retries and bounded integrity re-sends.
+    fn try_cloud(
+        &mut self,
+        sample: &Sample,
+        bd: &mut Breakdown,
+        sheds: &mut usize,
+        replanned: &mut bool,
+    ) -> std::result::Result<EdgeResult, CloudFailure> {
         let mut paced_sheds = 0usize;
         let mut hintless_sheds = 0usize;
-        let mut replanned = false;
+        let mut integrity_resends = 0usize;
         let mut slept = 0.0f64;
+        if self.transport.is_none() {
+            self.transport = Some(self.open_transport().map_err(CloudFailure::Transport)?);
+        }
         loop {
             let decision = self.controller.plan().decision;
-            let req = self.session.encode_request(sample, decision, &mut bd)?;
+            let req = self
+                .session
+                .encode_request(sample, decision, bd)
+                .map_err(CloudFailure::Fatal)?;
 
             // Transmit through the paced socket and await the reply.
             // With an explicit tenant, the trailer rides behind the
             // payload (no staging copy); without one, these are the
             // exact pre-tenant frames.
             let t2 = Instant::now();
-            let sent = match req {
-                EncodedRequest::Features { .. } => proto::write_frame_vec(
-                    &mut self.writer,
-                    proto::KIND_FEATURES,
-                    &[self.session.wire(), &self.trailer],
-                )?,
-                EncodedRequest::Image { hw } => {
-                    let mut head = [0u8; 4];
-                    head[..2].copy_from_slice(&self.session.model_id().to_le_bytes());
-                    head[2..].copy_from_slice(&hw.to_le_bytes());
-                    proto::write_frame_vec(
-                        &mut self.writer,
-                        proto::KIND_IMAGE,
-                        &[&head, self.session.wire(), &self.trailer],
-                    )?
-                }
-            };
+            let sent = self.send_request(&req).map_err(net_failure)?;
             // Across retries the breakdown accumulates edge compute
             // and counts the bytes of every attempt — the shed
             // attempts were really paid for.
@@ -216,7 +472,7 @@ impl<'a> EdgeClient<'a> {
             // those in collapsed the estimate and sent the controller
             // into pathological early cuts (§Perf log).
             if sent >= MIN_ESTIMATE_BYTES {
-                replanned |= self
+                *replanned |= self
                     .controller
                     .observe_transfer(sent, t2.elapsed().as_secs_f64().max(1e-9))
                     .is_some();
@@ -227,9 +483,10 @@ impl<'a> EdgeClient<'a> {
                     // The reply's piggybacked telemetry is the load
                     // half of the closed loop.
                     let telemetry =
-                        proto::parse_logits_telemetry_into(&self.rx_buf, &mut self.logits)?;
+                        proto::parse_logits_telemetry_into(&self.rx_buf, &mut self.logits)
+                            .map_err(CloudFailure::Transport)?;
                     if let Some(t) = telemetry {
-                        replanned |= self.controller.observe_telemetry(&t).is_some();
+                        *replanned |= self.controller.observe_telemetry(&t).is_some();
                     }
                 }
                 proto::KIND_BUSY => {
@@ -237,13 +494,13 @@ impl<'a> EdgeClient<'a> {
                     // cut edge-ward, retry under the new plan. A
                     // telemetry-less (or garbled) refusal still counts
                     // — the shed itself is the signal.
-                    sheds += 1;
+                    *sheds += 1;
                     let t = proto::CloudTelemetry::decode(&self.rx_buf)
                         .map(|(t, _)| t)
                         .unwrap_or_default();
                     let before = decision;
                     self.controller.on_busy(&t);
-                    replanned = true;
+                    *replanned = true;
                     // Tenant-scoped retry pacing: a backoff hint means
                     // "your fair share refills in this long" — sleep
                     // it off (bounded per retry and in total) and the
@@ -259,10 +516,11 @@ impl<'a> EdgeClient<'a> {
                     if backoff > 0.0 {
                         paced_sheds += 1;
                         if paced_sheds > MAX_PACED_RETRIES || slept >= MAX_PACED_SLEEP_TOTAL {
-                            return Err(anyhow!(
-                                "cloud shed the request {sheds} times despite pacing \
-                                 (slept {slept:.3}s, last plan {before:?})"
-                            ));
+                            return Err(CloudFailure::Fatal(anyhow!(
+                                "cloud shed the request {} times despite pacing \
+                                 (slept {slept:.3}s, last plan {before:?})",
+                                *sheds
+                            )));
                         }
                         // Jitter de-synchronizes a fleet that was all
                         // shed in the same window; applied before the
@@ -278,20 +536,39 @@ impl<'a> EdgeClient<'a> {
                     } else {
                         hintless_sheds += 1;
                         if hintless_sheds > MAX_BUSY_RETRIES {
-                            return Err(anyhow!(
-                                "cloud shed the request {sheds} times (last plan {before:?})"
-                            ));
+                            return Err(CloudFailure::Fatal(anyhow!(
+                                "cloud shed the request {} times (last plan {before:?})",
+                                *sheds
+                            )));
                         }
                     }
                     continue;
                 }
                 proto::KIND_ERROR => {
-                    return Err(anyhow!(
-                        "cloud error: {}",
-                        String::from_utf8_lossy(&self.rx_buf)
-                    ))
+                    // An error reply usually means the uplink damaged
+                    // the request in flight (a CRC integrity reject,
+                    // an unframeable kind byte): the stream is still
+                    // aligned, so re-encode and re-send a bounded
+                    // number of times — each re-send re-rolls the
+                    // uplink's fault dice. A *persisting* rejection
+                    // (semantic or a link corrupting every frame)
+                    // fails the attempt toward the breaker instead: a
+                    // cloud that cannot serve this edge is, for
+                    // availability purposes, down.
+                    integrity_resends += 1;
+                    if integrity_resends > MAX_INTEGRITY_RESENDS {
+                        return Err(CloudFailure::Transport(anyhow!(
+                            "cloud rejected the request {integrity_resends} times: {}",
+                            String::from_utf8_lossy(&self.rx_buf)
+                        )));
+                    }
+                    continue;
                 }
-                k => return Err(anyhow!("unexpected reply kind {k}")),
+                k => {
+                    // A kind we never expect mid-conversation means
+                    // the framing desynchronized — transport-level.
+                    return Err(CloudFailure::Transport(anyhow!("unexpected reply kind {k}")));
+                }
             }
 
             let prediction = self
@@ -306,20 +583,62 @@ impl<'a> EdgeClient<'a> {
                 prediction,
                 correct: prediction == sample.label,
                 decision,
-                breakdown: bd,
-                replanned,
-                sheds,
+                breakdown: *bd,
+                replanned: *replanned,
+                sheds: *sheds,
+                served_locally: false,
             });
         }
     }
 
+    /// Ship one encoded request through the live transport, optionally
+    /// inside the CRC-checked envelope.
+    fn send_request(&mut self, req: &EncodedRequest) -> Result<usize> {
+        let tr = self
+            .transport
+            .as_mut()
+            .expect("transport present during a cloud attempt");
+        match req {
+            EncodedRequest::Features { .. } => {
+                let parts = [self.session.wire(), &self.trailer[..]];
+                if self.checked {
+                    proto::write_checked_frame_vec(&mut tr.writer, proto::KIND_FEATURES, &parts)
+                } else {
+                    proto::write_frame_vec(&mut tr.writer, proto::KIND_FEATURES, &parts)
+                }
+            }
+            EncodedRequest::Image { hw } => {
+                let mut head = [0u8; 4];
+                head[..2].copy_from_slice(&self.session.model_id().to_le_bytes());
+                head[2..].copy_from_slice(&hw.to_le_bytes());
+                let parts = [&head[..], self.session.wire(), &self.trailer[..]];
+                if self.checked {
+                    proto::write_checked_frame_vec(&mut tr.writer, proto::KIND_IMAGE, &parts)
+                } else {
+                    proto::write_frame_vec(&mut tr.writer, proto::KIND_IMAGE, &parts)
+                }
+            }
+        }
+    }
+
     /// Read one reply frame into the reusable receive buffer; returns
-    /// its kind.
-    fn read_reply(&mut self) -> Result<u8> {
-        match proto::read_frame_into(&mut self.reader, &mut self.rx_buf)? {
-            RecvFrame::Data(k) => Ok(k),
-            RecvFrame::Eof => Err(anyhow!("cloud closed the connection")),
-            RecvFrame::Malformed { reason, .. } => Err(anyhow!("malformed reply: {reason}")),
+    /// its kind. Failures are classified for the breaker: EOF and
+    /// malformed framing are transport faults, a deadline expiry an
+    /// overrun.
+    fn read_reply(&mut self) -> std::result::Result<u8, CloudFailure> {
+        let tr = match self.transport.as_mut() {
+            Some(tr) => tr,
+            None => return Err(CloudFailure::Transport(anyhow!("not connected"))),
+        };
+        match proto::read_frame_into(&mut tr.reader, &mut self.rx_buf) {
+            Ok(RecvFrame::Data(k)) => Ok(k),
+            Ok(RecvFrame::Eof) => {
+                Err(CloudFailure::Transport(anyhow!("cloud closed the connection")))
+            }
+            Ok(RecvFrame::Malformed { reason, .. }) => {
+                Err(CloudFailure::Transport(anyhow!("malformed reply: {reason}")))
+            }
+            Err(e) => Err(net_failure(e)),
         }
     }
 
@@ -329,9 +648,13 @@ impl<'a> EdgeClient<'a> {
     /// too small to estimate from (e.g. logits-only cuts); returns
     /// whether the probe triggered a re-decoupling.
     pub fn probe_bandwidth(&mut self, bytes: usize) -> Result<bool> {
+        self.ensure_transport()?;
         let t0 = Instant::now();
-        let sent = Frame::Probe(vec![0xAB; bytes]).write_to(&mut self.writer)?;
-        match self.read_reply()? {
+        let sent = {
+            let tr = self.transport.as_mut().expect("transport just ensured");
+            Frame::Probe(vec![0xAB; bytes]).write_to(&mut tr.writer)?
+        };
+        match self.read_reply().map_err(CloudFailure::into_err)? {
             proto::KIND_PROBE_ACK => {}
             k => return Err(anyhow!("unexpected probe reply {k}")),
         }
@@ -346,8 +669,12 @@ impl<'a> EdgeClient<'a> {
     /// fused bandwidth/load estimates alongside the cloud's per-shard
     /// stats).
     pub fn stats(&mut self) -> Result<String> {
-        Frame::Stats.write_to(&mut self.writer)?;
-        let cloud = match self.read_reply()? {
+        self.ensure_transport()?;
+        {
+            let tr = self.transport.as_mut().expect("transport just ensured");
+            Frame::Stats.write_to(&mut tr.writer)?;
+        }
+        let cloud = match self.read_reply().map_err(CloudFailure::into_err)? {
             proto::KIND_STATS_REPLY => String::from_utf8_lossy(&self.rx_buf).into_owned(),
             k => return Err(anyhow!("unexpected reply {k}")),
         };
@@ -390,6 +717,26 @@ impl<'a> EdgeClient<'a> {
                 (
                     "advised_backoff_ms",
                     Json::num(self.controller.advised_backoff() * 1e3),
+                ),
+                (
+                    "breaker_state",
+                    Json::str(match self.breaker.state() {
+                        crate::server::breaker::BreakerState::Closed => "closed",
+                        crate::server::breaker::BreakerState::Open => "open",
+                        crate::server::breaker::BreakerState::HalfOpen => "half_open",
+                    }),
+                ),
+                (
+                    "breaker_opens",
+                    Json::num(self.controller.breaker_opens() as f64),
+                ),
+                (
+                    "breaker_recloses",
+                    Json::num(self.controller.breaker_recloses() as f64),
+                ),
+                (
+                    "local_serves",
+                    Json::num(self.controller.local_serves() as f64),
                 ),
             ]),
         );

@@ -44,7 +44,7 @@ mod imp {
     use std::os::unix::io::AsRawFd;
     use std::sync::atomic::Ordering;
     use std::sync::{Arc, Mutex};
-    use std::time::Duration;
+    use std::time::{Duration, Instant};
 
     use anyhow::{Context, Result};
 
@@ -85,6 +85,12 @@ mod imp {
         /// Interest currently armed in the reactor (re-armed only on
         /// change — `epoll_ctl` per state change, not per event).
         interest: Interest,
+        /// Last time this connection completed a frame (or finished a
+        /// compute). The idle reaper closes connections whose
+        /// `last_progress` ages past `cfg.idle_timeout` — dribbling
+        /// bytes without ever completing a frame (slow loris) does NOT
+        /// refresh it.
+        last_progress: Instant,
     }
 
     /// What a compute job hands back to the reactor.
@@ -213,9 +219,25 @@ mod imp {
         });
         let mut state = State { conns: Vec::new(), free: Vec::new() };
         let mut events = Vec::new();
+        // Idle reaper cadence: frequent enough that sub-second test
+        // timeouts fire promptly, bounded at 1 Hz so an idle server
+        // does no per-tick scanning beyond the epoll wait itself.
+        let idle_timeout = server.cfg.idle_timeout;
+        let sweep_every = if idle_timeout.is_zero() {
+            None
+        } else {
+            Some(idle_timeout.min(Duration::from_secs(1)))
+        };
+        let mut last_sweep = Instant::now();
         loop {
             if server.stop.load(Ordering::Relaxed) {
                 return Ok(());
+            }
+            if let Some(every) = sweep_every {
+                if last_sweep.elapsed() >= every {
+                    last_sweep = Instant::now();
+                    reap_idle(server, &reactor, &mut state, idle_timeout);
+                }
             }
             if let Err(e) = reactor.wait(&mut events, Some(WAIT_TICK)) {
                 // Should not happen on a healthy epoll fd; don't spin.
@@ -249,6 +271,29 @@ mod imp {
                     continue;
                 }
                 settle(server, &reactor, &mut state, slot);
+            }
+        }
+    }
+
+    /// Close connections that have made no frame progress for
+    /// `timeout` (slow-loris defense). Busy connections are exempt —
+    /// their socket state is owned by the worker until completion, and
+    /// compute time is not idleness.
+    fn reap_idle(
+        server: &Arc<CloudServer>,
+        reactor: &Reactor,
+        state: &mut State,
+        timeout: Duration,
+    ) {
+        let now = Instant::now();
+        for slot in 0..state.conns.len() {
+            let stale = match state.conns[slot].as_ref() {
+                Some(c) => !c.busy && now.duration_since(c.last_progress) >= timeout,
+                None => false,
+            };
+            if stale {
+                server.counters.inc_idle_reaped();
+                close(server, reactor, state, slot);
             }
         }
     }
@@ -299,6 +344,7 @@ mod imp {
                 busy: false,
                 close_after_flush: false,
                 interest: Interest::READ,
+                last_progress: Instant::now(),
             };
             let slot = state.alloc(conn);
             let fd = state.conns[slot].as_ref().unwrap().stream.as_raw_fd();
@@ -335,9 +381,12 @@ mod imp {
                     Err(_) => return false, // peer closed mid-frame
                 }
             };
+            conn.last_progress = Instant::now();
             match recv {
                 RecvFrame::Data(kind)
-                    if kind == proto::KIND_FEATURES || kind == proto::KIND_IMAGE =>
+                    if kind == proto::KIND_FEATURES
+                        || kind == proto::KIND_IMAGE
+                        || kind == proto::KIND_CHECKED =>
                 {
                     conn.busy = true;
                     let job = ComputeJob {
@@ -394,6 +443,7 @@ mod imp {
             return; // connection vanished (cannot normally happen: busy conns aren't closed)
         };
         conn.busy = false;
+        conn.last_progress = Instant::now();
         conn.scratch = c.scratch;
         conn.tenant_memo = c.memo;
         let mut reply = c.reply;

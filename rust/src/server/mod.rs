@@ -34,11 +34,13 @@
 //!   load drifts (`coordinator::control::ControlPlane`).
 
 pub mod admission;
+pub mod breaker;
 pub mod cloud;
 pub mod edge;
 pub mod epoll;
 pub mod proto;
 
 pub use admission::{FairAdmission, FairDecision};
+pub use breaker::{BreakerConfig, BreakerState, CircuitBreaker};
 pub use cloud::{AdmissionConfig, CloudServer, IoModel, ServeConfig};
 pub use edge::EdgeClient;

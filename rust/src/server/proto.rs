@@ -47,6 +47,14 @@ pub const KIND_ERROR: u8 = 7;
 pub const KIND_PROBE: u8 = 8;
 pub const KIND_PROBE_ACK: u8 = 9;
 pub const KIND_BUSY: u8 = 10;
+/// Integrity envelope: `[crc32 u32 LE][inner kind u8][inner payload]`.
+/// An edge running under a lossy uplink (or a fault plan) wraps its
+/// requests so silent byte corruption is *detected* at the cloud — the
+/// entropy codecs happily decode flipped bits into valid-but-wrong
+/// values — and answered with an `Error` frame the edge can retry,
+/// instead of a wrong prediction. Opt-in per connection; an unwrapped
+/// frame is served exactly as before.
+pub const KIND_CHECKED: u8 = 11;
 
 /// Hard cap on frame size. Our largest legitimate payload is a VGG
 /// stage-1 feature map (224·224·64 values) bit-packed at c=16 ≈ 6.4 MB;
@@ -108,7 +116,7 @@ pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<RecvFrame
     if (got as u64) < want {
         return Err(anyhow!("connection closed mid-frame"));
     }
-    if !(KIND_FEATURES..=KIND_BUSY).contains(&kind[0]) {
+    if !(KIND_FEATURES..=KIND_CHECKED).contains(&kind[0]) {
         return Ok(RecvFrame::Malformed { reason: "unknown frame kind", resync: true });
     }
     Ok(RecvFrame::Data(kind[0]))
@@ -244,7 +252,7 @@ impl FrameAssembler {
                     }
                     self.state = AsmState::Head;
                     self.head_got = 0;
-                    if !(KIND_FEATURES..=KIND_BUSY).contains(&kind) {
+                    if !(KIND_FEATURES..=KIND_CHECKED).contains(&kind) {
                         return Ok(Assembled::Frame(RecvFrame::Malformed {
                             reason: "unknown frame kind",
                             resync: true,
@@ -366,6 +374,112 @@ pub fn write_frame_parts(w: &mut impl Write, kind: u8, head: &[u8], body: &[u8])
 /// Write one frame from a borrowed payload (no clone, no staging Vec).
 pub fn write_frame_raw(w: &mut impl Write, kind: u8, payload: &[u8]) -> Result<usize> {
     write_frame_parts(w, kind, &[], payload)
+}
+
+/// CRC-32 (IEEE 802.3, the zlib polynomial), table-driven and built at
+/// compile time — the vendor set has no checksum crate.
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// Incremental CRC-32 over scattered byte slices.
+#[derive(Debug, Clone, Copy)]
+pub struct Crc32(u32);
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Self(0xFFFF_FFFF)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.0;
+        for &b in bytes {
+            c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.0 = c;
+    }
+
+    pub fn finish(&self) -> u32 {
+        !self.0
+    }
+}
+
+/// One-shot CRC-32 of a contiguous slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+/// Bytes [`write_checked_frame_vec`] prepends to the inner payload
+/// (`crc32 u32 LE` + inner kind).
+pub const CHECKED_HEAD_LEN: usize = 5;
+
+/// Error-frame payload the cloud answers a failed [`unwrap_checked`]
+/// with. The edge matches this exact message to tell "your bytes
+/// arrived damaged, send them again" apart from semantic errors that
+/// a re-send can never fix.
+pub const INTEGRITY_REJECT: &[u8] = b"checked frame integrity failure";
+
+/// Write an integrity-wrapped frame: the inner frame's kind and payload
+/// (as scattered `parts`) are shipped under [`KIND_CHECKED`] with a
+/// CRC-32 over `[inner kind][inner payload]` leading the envelope. No
+/// staging buffer — the CRC streams over the same borrowed parts the
+/// socket write does.
+pub fn write_checked_frame_vec(w: &mut impl Write, inner_kind: u8, parts: &[&[u8]]) -> Result<usize> {
+    let mut c = Crc32::new();
+    c.update(&[inner_kind]);
+    for p in parts {
+        c.update(p);
+    }
+    let mut head = [0u8; CHECKED_HEAD_LEN];
+    head[..4].copy_from_slice(&c.finish().to_le_bytes());
+    head[4] = inner_kind;
+    let mut all: Vec<&[u8]> = Vec::with_capacity(parts.len() + 1);
+    all.push(&head);
+    all.extend_from_slice(parts);
+    write_frame_vec(w, KIND_CHECKED, &all)
+}
+
+/// Verify and open a [`KIND_CHECKED`] payload. Returns the inner kind
+/// and the offset where the inner payload starts; a CRC mismatch, a
+/// short envelope, or a nested/unknown inner kind is an `Err` (the
+/// server answers it with an `Error` frame — the stream itself is still
+/// aligned, so the connection survives and the edge retries).
+pub fn unwrap_checked(payload: &[u8]) -> Result<(u8, usize)> {
+    if payload.len() < CHECKED_HEAD_LEN {
+        return Err(anyhow!("short checked frame"));
+    }
+    let want = u32::from_le_bytes(payload[..4].try_into().unwrap());
+    let got = crc32(&payload[4..]);
+    if want != got {
+        return Err(anyhow!("checked frame integrity failure"));
+    }
+    let kind = payload[4];
+    if !(KIND_FEATURES..=KIND_BUSY).contains(&kind) {
+        return Err(anyhow!("checked frame wraps unknown kind {kind}"));
+    }
+    Ok((kind, CHECKED_HEAD_LEN))
 }
 
 /// Marker byte opening a [`CloudTelemetry`] block. Chosen outside the
@@ -676,6 +790,10 @@ impl Frame {
                     Frame::Busy(t)
                 }
             }
+            KIND_CHECKED => {
+                let (inner, off) = unwrap_checked(&payload)?;
+                return Frame::parse(inner, payload[off..].to_vec());
+            }
             k => return Err(anyhow!("unknown frame kind {k}")),
         })
     }
@@ -861,6 +979,55 @@ mod tests {
         let mut corrupt = bare.clone();
         corrupt.extend_from_slice(&[1, 2, 3]);
         assert!(parse_logits_telemetry_into(&corrupt, &mut legacy).is_err());
+    }
+
+    #[test]
+    fn crc32_golden() {
+        // The canonical IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // Incremental over scattered slices matches one-shot.
+        let mut c = Crc32::new();
+        c.update(b"1234");
+        c.update(b"");
+        c.update(b"56789");
+        assert_eq!(c.finish(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn checked_frame_roundtrips_and_detects_corruption() {
+        let body = vec![7u8; 120];
+        let mut framed = Vec::new();
+        write_checked_frame_vec(&mut framed, KIND_FEATURES, &[&body[..40], &body[40..]]).unwrap();
+
+        let mut raw = Vec::new();
+        let mut r = &framed[..];
+        assert_eq!(read_frame_into(&mut r, &mut raw).unwrap(), RecvFrame::Data(KIND_CHECKED));
+        let (kind, off) = unwrap_checked(&raw).unwrap();
+        assert_eq!(kind, KIND_FEATURES);
+        assert_eq!(&raw[off..], &body[..]);
+
+        // The typed reader unwraps transparently.
+        let f = Frame::read_from(&mut &framed[..]).unwrap();
+        assert_eq!(f, Frame::Features(body.clone()));
+
+        // Any single flipped payload byte fails the CRC, loudly.
+        for at in [5, 9, 20, framed.len() - 1] {
+            let mut bad = framed.clone();
+            bad[at] ^= 0xA5;
+            let mut raw = Vec::new();
+            let got = read_frame_into(&mut &bad[..], &mut raw).unwrap();
+            assert_eq!(got, RecvFrame::Data(KIND_CHECKED), "at={at}");
+            assert!(unwrap_checked(&raw).is_err(), "flip at {at} must fail the CRC");
+        }
+
+        // Short and nested envelopes are rejected.
+        assert!(unwrap_checked(&[1, 2, 3]).is_err());
+        let mut nested = Vec::new();
+        write_checked_frame_vec(&mut nested, KIND_CHECKED, &[&[0u8; 8]]).unwrap();
+        let mut raw = Vec::new();
+        read_frame_into(&mut &nested[..], &mut raw).unwrap();
+        assert!(unwrap_checked(&raw).is_err(), "nesting is not a thing");
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] is parsed from a compact `key=value,...` spec
+//! (`--fault-plan`), seeds an xorshift64* stream, and hands out
+//! [`FaultInjector`]s that wrap byte streams ([`FaultyStream`]) or hook
+//! executor shards. Every fault decision is drawn from the seeded RNG
+//! or from wall-clock offsets fixed in the spec, so a chaos run with
+//! the same seed and schedule reproduces the same fault sequence.
+//!
+//! Zero-cost when off: every call site holds an `Option<Arc<FaultPlan>>`
+//! and the `None` path is a branch on a niche-optimized pointer.
+//!
+//! Supported spec keys (all optional; unknown keys are an error):
+//!
+//! | key              | meaning                                             |
+//! |------------------|-----------------------------------------------------|
+//! | `seed=N`         | RNG seed (default 1)                                |
+//! | `corrupt=P`      | flip one byte per write with probability P          |
+//! | `truncate=P`     | short-write (half the buffer) with probability P    |
+//! | `reset=P`        | fail a write with `ConnectionReset` with prob. P    |
+//! | `stall-p=P`      | sleep before a write with probability P             |
+//! | `stall-ms=N`     | stall duration (default 200)                        |
+//! | `blackout-at-ms=N` | blackout window start, relative to plan creation  |
+//! | `blackout-ms=N`  | blackout duration — writes are silently swallowed   |
+//! | `slow-shard=I`   | executor hook: shard I sleeps `slow-ms` per run      |
+//! | `slow-ms=N`      | slow-shard delay (default 100)                      |
+//! | `panic-shard=I`  | executor hook: shard I panics `panic-count` times   |
+//! | `panic-count=N`  | number of scripted panics (default 1)               |
+
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::rng::XorShift64Star;
+
+/// Parsed, immutable fault schedule. Shared via `Arc`; the mutable RNG
+/// state lives behind a mutex so one plan can serve several streams
+/// while staying reproducible (decision order is then the arrival
+/// order, which deterministic tests keep single-threaded).
+#[derive(Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub corrupt_p: f64,
+    pub truncate_p: f64,
+    pub reset_p: f64,
+    pub stall_p: f64,
+    pub stall: Duration,
+    pub blackout_at: Option<Duration>,
+    pub blackout: Duration,
+    pub slow_shard: Option<usize>,
+    pub slow: Duration,
+    pub panic_shard: Option<usize>,
+    pub panic_count: u64,
+    rng: Mutex<XorShift64Star>,
+    born: Instant,
+    panics_left: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse a `key=value,...` spec. Empty string → all-off plan.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut seed = 1u64;
+        let mut corrupt_p = 0.0;
+        let mut truncate_p = 0.0;
+        let mut reset_p = 0.0;
+        let mut stall_p = 0.0;
+        let mut stall_ms = 200u64;
+        let mut blackout_at_ms: Option<u64> = None;
+        let mut blackout_ms = 0u64;
+        let mut slow_shard: Option<usize> = None;
+        let mut slow_ms = 100u64;
+        let mut panic_shard: Option<usize> = None;
+        let mut panic_count = 1u64;
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault-plan entry `{part}` is not key=value"))?;
+            let int = || v.parse::<u64>().map_err(|_| format!("bad integer in `{part}`"));
+            let prob = || {
+                v.parse::<f64>()
+                    .ok()
+                    .filter(|p| (0.0..=1.0).contains(p))
+                    .ok_or_else(|| format!("bad probability in `{part}`"))
+            };
+            match k {
+                "seed" => seed = int()?,
+                "corrupt" => corrupt_p = prob()?,
+                "truncate" => truncate_p = prob()?,
+                "reset" => reset_p = prob()?,
+                "stall-p" => stall_p = prob()?,
+                "stall-ms" => stall_ms = int()?,
+                "blackout-at-ms" => blackout_at_ms = Some(int()?),
+                "blackout-ms" => blackout_ms = int()?,
+                "slow-shard" => slow_shard = Some(int()? as usize),
+                "slow-ms" => slow_ms = int()?,
+                "panic-shard" => panic_shard = Some(int()? as usize),
+                "panic-count" => panic_count = int()?,
+                _ => return Err(format!("unknown fault-plan key `{k}`")),
+            }
+        }
+        Ok(Self {
+            seed,
+            corrupt_p,
+            truncate_p,
+            reset_p,
+            stall_p,
+            stall: Duration::from_millis(stall_ms),
+            blackout_at: blackout_at_ms.map(Duration::from_millis),
+            blackout: Duration::from_millis(blackout_ms),
+            slow_shard,
+            slow: Duration::from_millis(slow_ms),
+            panic_shard,
+            panic_count,
+            rng: Mutex::new(XorShift64Star::new(seed)),
+            born: Instant::now(),
+            panics_left: AtomicU64::new(panic_count),
+        })
+    }
+
+    pub fn parse_arc(spec: &str) -> Result<Arc<Self>, String> {
+        Self::parse(spec).map(Arc::new)
+    }
+
+    /// True iff any stream-level fault can ever fire.
+    pub fn touches_stream(&self) -> bool {
+        self.corrupt_p > 0.0
+            || self.truncate_p > 0.0
+            || self.reset_p > 0.0
+            || self.stall_p > 0.0
+            || self.blackout_at.is_some()
+    }
+
+    fn roll(&self, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+        rng.next_f64() <= p
+    }
+
+    fn pick(&self, n: u64) -> u64 {
+        let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+        rng.below(n.max(1))
+    }
+
+    /// Is the wall clock currently inside the scripted blackout window?
+    pub fn in_blackout(&self) -> bool {
+        match self.blackout_at {
+            None => false,
+            Some(at) => {
+                let t = self.born.elapsed();
+                t >= at && t < at + self.blackout
+            }
+        }
+    }
+
+    /// Executor hook, called with the shard index before a run. Sleeps
+    /// for a scripted slow shard; panics for a scripted poisoned shard
+    /// until its panic budget is spent (so readmission probes can
+    /// eventually succeed).
+    pub fn before_shard_run(&self, shard: usize) {
+        if self.slow_shard == Some(shard) {
+            std::thread::sleep(self.slow);
+        }
+        if self.panic_shard == Some(shard) {
+            let left = self.panics_left.load(Ordering::Relaxed);
+            if left > 0
+                && self
+                    .panics_left
+                    .compare_exchange(left, left - 1, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+            {
+                panic!("fault-plan: scripted panic on shard {shard}");
+            }
+        }
+    }
+
+    /// Scripted panics not yet fired (0 = shard behaves again).
+    pub fn panics_remaining(&self) -> u64 {
+        self.panics_left.load(Ordering::Relaxed)
+    }
+}
+
+/// Wraps any `Read + Write` stream and applies the plan's stream faults
+/// to *writes* (the direction under test: edge uplink or cloud reply).
+/// Reads pass through untouched — read-side failures surface naturally
+/// as timeouts/EOF once writes are swallowed or the peer resets.
+pub struct FaultyStream<S> {
+    inner: S,
+    plan: Option<Arc<FaultPlan>>,
+}
+
+impl<S> FaultyStream<S> {
+    pub fn new(inner: S, plan: Option<Arc<FaultPlan>>) -> Self {
+        // An all-off plan is dropped up front so the hot path is a
+        // single `None` check.
+        let plan = plan.filter(|p| p.touches_stream());
+        Self { inner, plan }
+    }
+
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    pub fn get_mut(&mut self) -> &mut S {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: Read> Read for FaultyStream<S> {
+    #[inline]
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        self.inner.read(buf)
+    }
+}
+
+impl<S: Write> Write for FaultyStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let plan = match &self.plan {
+            None => return self.inner.write(buf),
+            Some(p) => p,
+        };
+        if plan.in_blackout() {
+            // Swallow silently: bytes vanish on the wire, so the peer
+            // sees a stall and the caller's read timeout has to fire —
+            // the failure mode a breaker must detect, not an error the
+            // caller could handle locally.
+            return Ok(buf.len());
+        }
+        if plan.roll(plan.stall_p) {
+            std::thread::sleep(plan.stall);
+        }
+        if plan.roll(plan.reset_p) {
+            return Err(io::Error::new(io::ErrorKind::ConnectionReset, "fault-plan: scripted reset"));
+        }
+        if plan.roll(plan.truncate_p) && buf.len() > 1 {
+            let half = buf.len() / 2;
+            return self.inner.write(&buf[..half]);
+        }
+        if plan.roll(plan.corrupt_p) && !buf.is_empty() {
+            let mut copy = buf.to_vec();
+            let at = plan.pick(copy.len() as u64) as usize;
+            copy[at] ^= 0xA5;
+            return self.inner.write(&copy).map(|n| n.min(buf.len()));
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        if let Some(plan) = &self.plan {
+            if plan.in_blackout() {
+                return Ok(());
+            }
+        }
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse(
+            "seed=42,corrupt=0.05,stall-p=0.02,stall-ms=200,reset=0.01,\
+             blackout-at-ms=1000,blackout-ms=2000,slow-shard=1,slow-ms=100,\
+             panic-shard=2,panic-count=3",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 42);
+        assert!((p.corrupt_p - 0.05).abs() < 1e-12);
+        assert_eq!(p.stall, Duration::from_millis(200));
+        assert_eq!(p.blackout_at, Some(Duration::from_millis(1000)));
+        assert_eq!(p.blackout, Duration::from_millis(2000));
+        assert_eq!(p.slow_shard, Some(1));
+        assert_eq!(p.panic_shard, Some(2));
+        assert_eq!(p.panic_count, 3);
+        assert!(p.touches_stream());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("corrupt=1.5").is_err());
+        assert!(FaultPlan::parse("frobnicate=1").is_err());
+        assert!(FaultPlan::parse("corrupt").is_err());
+        assert!(FaultPlan::parse("stall-ms=abc").is_err());
+    }
+
+    #[test]
+    fn empty_spec_is_all_off() {
+        let p = FaultPlan::parse("").unwrap();
+        assert!(!p.touches_stream());
+        assert!(!p.in_blackout());
+    }
+
+    #[test]
+    fn corruption_is_deterministic() {
+        let run = |seed: u64| -> Vec<u8> {
+            let plan = FaultPlan::parse_arc(&format!("seed={seed},corrupt=0.5")).unwrap();
+            let mut s = FaultyStream::new(Vec::<u8>::new(), Some(plan));
+            for i in 0..32u8 {
+                s.write_all(&[i; 8]).unwrap();
+            }
+            s.into_inner()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+        // With corrupt=0.5 over 32 writes, some byte must differ from
+        // the clean stream.
+        let clean: Vec<u8> = (0..32u8).flat_map(|i| [i; 8]).collect();
+        assert_ne!(run(7), clean);
+        assert_eq!(run(7).len(), clean.len());
+    }
+
+    #[test]
+    fn blackout_swallows_writes() {
+        let plan = FaultPlan::parse_arc("blackout-at-ms=0,blackout-ms=60000").unwrap();
+        assert!(plan.in_blackout());
+        let mut s = FaultyStream::new(Vec::<u8>::new(), Some(plan));
+        s.write_all(b"hello").unwrap();
+        assert!(s.get_ref().is_empty(), "blackout must swallow bytes");
+    }
+
+    #[test]
+    fn scripted_panic_budget_is_finite() {
+        let plan = FaultPlan::parse("panic-shard=0,panic-count=2").unwrap();
+        for _ in 0..2 {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                plan.before_shard_run(0)
+            }));
+            assert!(r.is_err());
+        }
+        assert_eq!(plan.panics_remaining(), 0);
+        plan.before_shard_run(0); // budget spent → no panic
+        plan.before_shard_run(1); // other shards never panic
+    }
+
+    #[test]
+    fn off_plan_is_dropped_by_stream() {
+        let plan = FaultPlan::parse_arc("panic-shard=3").unwrap();
+        let s = FaultyStream::new(Vec::<u8>::new(), Some(plan));
+        assert!(s.plan.is_none(), "executor-only plan must not tax the stream");
+    }
+}

@@ -1,0 +1,349 @@
+//! Chaos suite: scripted, seeded faults against the real edge ↔ cloud
+//! stack (sim backend, loopback TCP) — artifact-free, always run.
+//!
+//! 1. **Corrupted uplink** — 25% per-write corruption under CRC-checked
+//!    framing: every served reply must be bit-identical to the
+//!    fault-free full-model reference (damaged frames are rejected and
+//!    re-sent, never silently decoded), and availability stays 100%.
+//! 2. **Blackout failover** — a 2 s write-swallowing blackout trips the
+//!    per-request deadline, the circuit breaker opens, requests degrade
+//!    to full-local serving (availability never drops), and half-open
+//!    probes reclose the breaker within a bounded recovery window.
+//! 3. **Poisoned shard** — a scripted shard panic is quarantined,
+//!    routed around, and re-admitted by the background probe while the
+//!    edge keeps serving.
+//! 4. **Hung cloud** — an accept-then-stall cloud trips the deadline
+//!    (never wedges the caller) and the open breaker short-circuits
+//!    subsequent requests to local serving.
+//! 5. **Slow loris** (Linux/epoll) — a connection dribbling half a
+//!    frame header is reaped by the idle sweeper and counted.
+//!
+//! Everything here is driven by [`jalad::util::fault::FaultPlan`]
+//! specs with pinned seeds: same spec, same byte stream, same outcome.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jalad::coordinator::{ControlPlane, DecisionEngine};
+use jalad::ilp::Decision;
+use jalad::network::throttle::RateHandle;
+use jalad::runtime::sim::sim_manifest;
+use jalad::runtime::{Executor, ExecutorPool};
+use jalad::server::proto;
+use jalad::server::{BreakerConfig, BreakerState, CloudServer, EdgeClient, ServeConfig};
+use jalad::util::fault::FaultPlan;
+use jalad::util::json::Json;
+
+const FANIN: usize = 8;
+
+fn plane(bw: f64) -> ControlPlane {
+    ControlPlane::new(DecisionEngine::sim_default(0.10).unwrap(), bw)
+}
+
+fn sample(id: usize, shape: &[usize]) -> jalad::data::gen::Sample {
+    jalad::data::gen::Sample {
+        image: jalad::data::gen::sample_image_shaped(id % 16, id, shape),
+        label: id % 16,
+    }
+}
+
+fn sim_server(cfg: ServeConfig) -> (Arc<CloudServer>, std::net::SocketAddr) {
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, FANIN);
+    let server = Arc::new(CloudServer::with_pool(pool, cfg));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+    (server, addr)
+}
+
+/// Scripted 25% per-write uplink corruption under CRC-checked framing.
+/// The bit-identity oracle: at the idle 50 KB/s plan every request is
+/// `CloudOnly` (the PNG upload is lossless, the cloud runs the full
+/// model on the same deterministic sim backend) and local failover runs
+/// the same full model on the same image — so *every* served reply must
+/// be bit-identical to `run_full`, no matter which path served it.
+#[test]
+fn corrupted_uplink_serves_bit_identical_replies() {
+    let manifest = sim_manifest();
+    let (_server, addr) = sim_server(ServeConfig::default());
+    let exe = Executor::sim_with(manifest.clone(), FANIN);
+    let shape = manifest.model("simnet").unwrap().input_shape.clone();
+
+    let n = 60usize;
+    let reference: Vec<Vec<u32>> = (0..n)
+        .map(|id| {
+            exe.run_full("simnet", &sample(id, &shape).image)
+                .unwrap()
+                .tensor
+                .data()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        })
+        .collect();
+
+    let mut edge =
+        EdgeClient::connect(&exe, "simnet", addr, RateHandle::new(200_000), plane(50_000.0))
+            .unwrap();
+    edge.set_checked(true);
+    edge.set_request_timeout(Duration::from_secs(5)).unwrap();
+    // A breaker that effectively never opens: a rare framing desync
+    // serves one request locally and the next attempt reconnects. The
+    // plan must stay CloudOnly for the oracle above to hold, and
+    // `on_breaker_open` would force the i = N cut.
+    edge.set_breaker_config(BreakerConfig {
+        failure_threshold: 1_000,
+        ..BreakerConfig::default()
+    });
+    edge.set_fault_plan(Some(FaultPlan::parse_arc("seed=42,corrupt=0.25").unwrap()));
+
+    let mut locals = 0usize;
+    for id in 0..n {
+        // Availability under corruption: never an Err.
+        let r = edge.infer(&sample(id, &shape)).unwrap();
+        locals += r.served_locally as usize;
+        if !r.served_locally {
+            assert_eq!(r.decision, Decision::CloudOnly, "oracle needs the CloudOnly plan");
+        }
+        let got: Vec<u32> = edge.last_logits().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(
+            got, reference[id],
+            "request {id} served a reply that is not bit-identical to fault-free \
+             (served_locally={})",
+            r.served_locally
+        );
+    }
+
+    // The faults really fired: the cloud refused damaged frames.
+    let stats = edge.stats().unwrap();
+    let j = Json::parse(&stats).unwrap();
+    let malformed = j.get("malformed").and_then(|v| v.as_u64()).unwrap_or(0);
+    assert!(
+        malformed >= 1,
+        "25% corruption over {n} requests never tripped the CRC (locals={locals}): {stats}"
+    );
+    CloudServer::request_shutdown(addr);
+}
+
+/// A 2 s uplink blackout: writes are swallowed so every cloud attempt
+/// times out at the 200 ms deadline; the breaker opens after two
+/// overruns and requests keep being answered locally (availability
+/// 100% through the outage). Once the blackout lapses a half-open
+/// probe recloses the breaker and cloud serving resumes, bounded.
+#[test]
+fn blackout_fails_over_locally_and_recloses_breaker() {
+    let manifest = sim_manifest();
+    let (_server, addr) = sim_server(ServeConfig::default());
+    let exe = Executor::sim_with(manifest.clone(), FANIN);
+    let shape = manifest.model("simnet").unwrap().input_shape.clone();
+
+    let mut edge =
+        EdgeClient::connect(&exe, "simnet", addr, RateHandle::new(1_000_000), plane(50_000.0))
+            .unwrap();
+    edge.set_request_timeout(Duration::from_millis(200)).unwrap();
+    edge.set_breaker_config(BreakerConfig {
+        failure_threshold: 2,
+        cooldown: Duration::from_millis(100),
+        probe_successes: 1,
+    });
+
+    for id in 0..5 {
+        let r = edge.infer(&sample(id, &shape)).unwrap();
+        assert!(!r.served_locally, "healthy cloud must serve request {id}");
+    }
+
+    edge.set_fault_plan(Some(
+        FaultPlan::parse_arc("seed=7,blackout-at-ms=0,blackout-ms=2000").unwrap(),
+    ));
+    let blackout_start = Instant::now();
+    let mut local_seen = 0usize;
+    while blackout_start.elapsed() < Duration::from_millis(1500) {
+        // Availability through the outage: never an Err, and once the
+        // breaker opens these short-circuit to fast local serves.
+        let r = edge.infer(&sample(100, &shape)).unwrap();
+        local_seen += r.served_locally as usize;
+    }
+    assert!(local_seen >= 3, "the breaker never degraded to local serving");
+    assert!(edge.controller.breaker_opens() >= 1, "breaker never opened");
+    assert!(edge.controller.local_serves() >= 3);
+    assert!(edge.breaker().overrun_count() >= 2, "deadline overruns were not counted");
+
+    // Recovery: bounded time from blackout end to the first cloud-
+    // served reply (the reclosing half-open probe).
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut recovered_at = None;
+    while Instant::now() < deadline {
+        let r = edge.infer(&sample(101, &shape)).unwrap();
+        if !r.served_locally {
+            recovered_at = Some(blackout_start.elapsed());
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let recovered_at = recovered_at.expect("cloud serving never resumed after the blackout");
+    assert!(edge.controller.breaker_recloses() >= 1, "breaker never reclosed");
+    assert_eq!(edge.breaker().state(), BreakerState::Closed);
+    assert!(
+        recovered_at < Duration::from_secs(12),
+        "recovery took {recovered_at:?} from blackout start"
+    );
+    CloudServer::request_shutdown(addr);
+}
+
+/// A scripted one-shot shard panic behind real TCP: the request that
+/// hits it fails over locally, the shard is quarantined and routed
+/// around, the background probe re-admits it (the panic budget is
+/// spent), and the stats JSON records the whole episode.
+#[test]
+fn poisoned_shard_is_quarantined_and_serving_continues() {
+    let manifest = sim_manifest();
+    let pool = ExecutorPool::new_sim_with(manifest.clone(), 2, FANIN);
+    pool.set_exec_faults(Some(
+        FaultPlan::parse_arc("seed=3,panic-shard=0,panic-count=1").unwrap(),
+    ));
+    let server = Arc::new(CloudServer::with_pool(pool, ServeConfig::default()));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+
+    let exe = Executor::sim_with(manifest.clone(), FANIN);
+    let shape = manifest.model("simnet").unwrap().input_shape.clone();
+    let mut edge =
+        EdgeClient::connect(&exe, "simnet", addr, RateHandle::new(1_000_000), plane(50_000.0))
+            .unwrap();
+    edge.set_request_timeout(Duration::from_secs(5)).unwrap();
+
+    // Availability across the poisoned window: every request answered.
+    for id in 0..30 {
+        edge.infer(&sample(id, &shape)).unwrap();
+    }
+
+    // The health counters settle to quarantined ≥ 1, readmitted ≥ 1,
+    // quarantined_now = 0 — the shard came back.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = edge.stats().unwrap();
+        let j = Json::parse(&stats).unwrap();
+        let quarantined = j.get("quarantined").and_then(|v| v.as_u64()).unwrap_or(0);
+        let readmitted = j.get("readmitted").and_then(|v| v.as_u64()).unwrap_or(0);
+        if quarantined >= 1 && readmitted >= 1 {
+            assert_eq!(
+                j.get("quarantined_now").and_then(|v| v.as_u64()),
+                Some(0),
+                "stats: {stats}"
+            );
+            assert!(
+                j.get("shard_panics").and_then(|v| v.as_u64()).unwrap_or(0) >= 1,
+                "stats: {stats}"
+            );
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "shard was never quarantined + readmitted: {stats}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    CloudServer::request_shutdown(addr);
+}
+
+/// An accept-then-stall "cloud": the per-request deadline fires instead
+/// of wedging the caller, the breaker opens on the first overrun, and
+/// every subsequent request short-circuits to a fast local serve.
+#[test]
+fn hung_cloud_trips_deadline_and_serves_locally() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // Hold accepted sockets open forever (never read, never write);
+    // the thread leaks with the process, which is the point.
+    std::thread::spawn(move || {
+        let mut held = Vec::new();
+        while let Ok((s, _)) = listener.accept() {
+            held.push(s);
+            if held.len() >= 64 {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+    });
+
+    let manifest = sim_manifest();
+    let exe = Executor::sim_with(manifest.clone(), FANIN);
+    let shape = manifest.model("simnet").unwrap().input_shape.clone();
+    let mut edge =
+        EdgeClient::connect(&exe, "simnet", addr, RateHandle::new(1_000_000), plane(50_000.0))
+            .unwrap();
+    edge.set_request_timeout(Duration::from_millis(150)).unwrap();
+    edge.set_breaker_config(BreakerConfig {
+        failure_threshold: 1,
+        cooldown: Duration::from_secs(30),
+        probe_successes: 1,
+    });
+
+    let t0 = Instant::now();
+    let r = edge.infer(&sample(0, &shape)).unwrap();
+    assert!(r.served_locally, "a hung cloud must degrade to local serving");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "deadline never fired (took {:?})",
+        t0.elapsed()
+    );
+    assert!(edge.breaker().overrun_count() >= 1);
+    assert_eq!(edge.breaker().state(), BreakerState::Open);
+    assert!(edge.controller.breaker_opens() >= 1);
+
+    // With the breaker open and a 30 s cooldown, these never touch the
+    // socket: 19 requests in well under the single-attempt deadline.
+    let t1 = Instant::now();
+    for id in 1..20 {
+        let r = edge.infer(&sample(id, &shape)).unwrap();
+        assert!(r.served_locally);
+    }
+    assert!(
+        t1.elapsed() < Duration::from_secs(2),
+        "open breaker did not short-circuit ({:?})",
+        t1.elapsed()
+    );
+    assert_eq!(edge.controller.local_serves(), 20);
+}
+
+/// Slow loris against the epoll reactor: a connection that sends half a
+/// length prefix and stalls is closed by the idle sweeper within a few
+/// sweep periods and shows up in `idle_reaped`.
+#[cfg(target_os = "linux")]
+#[test]
+fn idle_connections_are_reaped() {
+    use std::io::{Read, Write};
+
+    let (_server, addr) = sim_server(ServeConfig {
+        io: jalad::server::IoModel::Epoll,
+        idle_timeout: Duration::from_millis(300),
+        ..ServeConfig::default()
+    });
+
+    let mut loris = std::net::TcpStream::connect(addr).unwrap();
+    loris.write_all(&[0x10, 0x00]).unwrap(); // half a length prefix, then silence
+    loris.set_read_timeout(Some(Duration::from_secs(8))).unwrap();
+    let t0 = Instant::now();
+    let mut buf = [0u8; 16];
+    // EOF (clean close) or a reset both mean the server dropped us;
+    // only our own 8 s read timeout would mean it never did.
+    match loris.read(&mut buf) {
+        Ok(0) | Err(_) => {}
+        Ok(n) => panic!("unexpected {n} bytes from the server"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(6),
+        "idle connection survived {:?} (timeout was 300 ms)",
+        t0.elapsed()
+    );
+
+    // A fresh, active connection fetches the counter.
+    let mut c = std::net::TcpStream::connect(addr).unwrap();
+    proto::Frame::Stats.write_to(&mut c).unwrap();
+    let proto::Frame::StatsReply(b) = proto::Frame::read_from(&mut c).unwrap() else {
+        panic!("no stats reply")
+    };
+    let j = Json::parse(&String::from_utf8_lossy(&b)).unwrap();
+    assert!(
+        j.get("idle_reaped").and_then(|v| v.as_u64()).unwrap_or(0) >= 1,
+        "idle_reaped missing or zero: {}",
+        String::from_utf8_lossy(&b)
+    );
+    CloudServer::request_shutdown(addr);
+}

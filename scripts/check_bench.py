@@ -6,7 +6,7 @@ Usage:
     check_bench.py <bench> <json> --compare <baseline> # + regression gate
     check_bench.py <bench> <json> --update-baselines <baseline>
 
-<bench> is one of: pipeline | adaptive | multiedge | crossmodel | c10k.
+<bench> is one of: pipeline | adaptive | multiedge | crossmodel | c10k | chaos.
 
 The schema checks replicate (and replace) the inline validators that
 used to live in scripts/verify.sh; verify.sh keeps a grep fallback for
@@ -175,6 +175,42 @@ def check_c10k(doc):
             f"flood shed={fc['flood_shed_rate']:.2f}")
 
 
+def check_chaos(doc):
+    for k in ("availability", "served_bit_identity", "recovery_ms",
+              "corruption", "blackout", "quarantine"):
+        assert k in doc, f"missing {k}"
+    # The contract: every request is answered (cloud or local failover)
+    # and every answered request carries the fault-free full-model bits.
+    assert doc["availability"] >= 1.0 - 1e-9, \
+        f"availability {doc['availability']:.4f} < 1.0 — requests were dropped"
+    assert doc["served_bit_identity"] is True, \
+        "a served reply differed from the fault-free reference bits"
+    # -1 is the bench's "cloud serving never resumed" sentinel.
+    assert doc["recovery_ms"] >= 0.0, \
+        "cloud serving never resumed after the blackout"
+    assert doc["recovery_ms"] < 15_000.0, \
+        f"recovery took {doc['recovery_ms']:.0f} ms (> 15 s bound)"
+    co = doc["corruption"]
+    for k in ("requests", "local_serves", "p50_ms", "p95_ms"):
+        assert k in co, f"corruption: missing {k}"
+    assert co["requests"] > 0, "corruption phase issued nothing"
+    bl = doc["blackout"]
+    for k in ("blackout_ms", "local_serves", "breaker_opens",
+              "breaker_recloses", "deadline_overruns"):
+        assert k in bl, f"blackout: missing {k}"
+    assert bl["breaker_opens"] >= 1, "the blackout never opened the breaker"
+    assert bl["breaker_recloses"] >= 1, "the breaker never re-closed"
+    assert bl["local_serves"] >= 1, "no request was served locally during the outage"
+    qu = doc["quarantine"]
+    for k in ("quarantined", "readmitted", "shard_panics"):
+        assert k in qu, f"quarantine: missing {k}"
+    assert qu["quarantined"] >= 1, "the poisoned shard was never quarantined"
+    assert qu["readmitted"] >= 1, "the quarantined shard was never re-admitted"
+    return (f"availability={doc['availability']:.3f}, "
+            f"recovery={doc['recovery_ms']:.0f}ms, "
+            f"opens={bl['breaker_opens']}, quarantined={qu['quarantined']}")
+
+
 # --------------------------------------------------------------------------
 # Tracked headline metrics: name -> (extractor, direction).
 # direction "higher" = regression when it drops; "lower" = when it grows.
@@ -218,6 +254,12 @@ TRACKED = {
             (lambda d: float(d["flash_crowd"]["polite_retention"])
              if d.get("io_available", True) else float("inf"), "higher"),
     },
+    # recovery_ms is NOT tracked: it is wall-clock (breaker cooldown +
+    # probe pacing), so the schema's hard 15 s bound is the real gate and
+    # a cross-machine ratio baseline would be noise.
+    "chaos": {
+        "availability": (lambda d: float(d["availability"]), "higher"),
+    },
 }
 
 SCHEMAS = {
@@ -226,6 +268,7 @@ SCHEMAS = {
     "multiedge": check_multiedge,
     "crossmodel": check_crossmodel,
     "c10k": check_c10k,
+    "chaos": check_chaos,
 }
 
 

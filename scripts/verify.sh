@@ -5,7 +5,8 @@
 #   scripts/verify.sh --smoke          # full gate + every bench smoke
 #   scripts/verify.sh --smoke SUITE…   # ONLY the named bench smoke(s)
 #                                      # (pipeline|adaptive|multiedge|
-#                                      # crossmodel|c10k) — no build/test/
+#                                      # crossmodel|c10k|chaos) — no build/
+#                                      # test/
 #                                      # clippy pass; cargo bench builds
 #                                      # what it needs. This is what the
 #                                      # CI bench matrix fans out over,
@@ -30,7 +31,7 @@ for arg in "$@"; do
   case "$arg" in
     --smoke) SMOKE=1 ;;
     --full) FULL=1 ;;
-    pipeline|adaptive|multiedge|crossmodel|c10k) SUITES+=("$arg") ;;
+    pipeline|adaptive|multiedge|crossmodel|c10k|chaos) SUITES+=("$arg") ;;
     *) echo "verify.sh: unknown argument $arg" >&2; exit 2 ;;
   esac
 done
@@ -105,6 +106,10 @@ run_suite() {
       smoke_bench c10k c10k BENCH_c10k.json \
         '"scaling"' '"epoll_vs_threads"' '"flood_shed_rate"' \
         '"peak_trough_ratio"' ;;
+    chaos)
+      smoke_bench chaos chaos BENCH_chaos.json \
+        '"availability"' '"served_bit_identity"' '"recovery_ms"' \
+        '"quarantine"' ;;
     *) echo "verify.sh: unknown suite $1" >&2; exit 2 ;;
   esac
 }
@@ -135,7 +140,7 @@ echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
 if [ "$SMOKE" = 1 ] || [ "$FULL" = 1 ]; then
-  for s in pipeline adaptive multiedge crossmodel c10k; do
+  for s in pipeline adaptive multiedge crossmodel c10k chaos; do
     run_suite "$s"
   done
 fi
