@@ -139,6 +139,7 @@ fn main() {
         failure_threshold: 2,
         cooldown: Duration::from_millis(100),
         probe_successes: 1,
+        cooldown_jitter: 0.0,
     });
     for id in 0..5 {
         issued += 1;

@@ -1,0 +1,298 @@
+//! Logits-cache scenario bench — skewed feature traffic against the
+//! real cloud server (sim backend, loopback TCP, bit-exactness asserted
+//! inline on every reply).
+//!
+//! Eight closed-loop connections draw requests from a shared Zipf(1.1)
+//! popularity law over 64 distinct feature frames — the re-submission
+//! skew the cache exists for (retry storms, shared prompts, periodic
+//! sensors). The identical schedule runs twice:
+//!
+//! 1. **cache_off** — `cache_bytes = 0`, the pre-cache server: every
+//!    request decodes, dequantizes and executes its tail;
+//! 2. **cache_on** — a 64 MB content-addressed cache: repeat frames are
+//!    answered from the keyed logits without touching the executor.
+//!
+//! A third arm releases 8 threads through a barrier onto the *same
+//! fresh key* with a deliberately slow shard, proving in-flight dedup:
+//! one leader executes, the rest park and reuse its result
+//! (`inflight_coalesced > 0`) instead of stampeding the executor.
+//!
+//! Every reply in every arm is compared bit-for-bit against a
+//! solo-execution reference — a hit that served stale or truncated
+//! logits panics the bench. Emits `BENCH_cache.json`
+//! (`zipf_speedup_8conn`, `hit_rate`, `coalesce_rate`,
+//! `bytes_saved_frac`) — `scripts/verify.sh --smoke cache` runs this
+//! briefly and gates the headline metric against `bench_baselines/`.
+//!
+//! Run: `cargo bench --bench logits_cache` (`-- --smoke` for CI).
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use jalad::compression::{feature, quant};
+use jalad::runtime::sim::sim_manifest;
+use jalad::runtime::{Executor, ExecutorPool};
+use jalad::server::proto::{self, RecvFrame};
+use jalad::server::{CloudServer, ServeConfig};
+use jalad::util::bench::Bencher;
+use jalad::util::fault::FaultPlan;
+use jalad::util::json::Json;
+use jalad::util::rng::XorShift64Star;
+
+const CONNS: usize = 8;
+const KEYS: usize = 64;
+const ZIPF_S: f64 = 1.1;
+const CACHE_BYTES: usize = 64 << 20;
+
+struct Case {
+    wire: Vec<u8>,
+    expected_bits: Vec<u32>,
+}
+
+/// Wire frame + solo-execution expected logits for one distinct
+/// feature request. Whatever path serves it — executor, cache hit, or
+/// a coalesced wait — the reply must reproduce these bits.
+fn case(reference: &Executor, stage: usize, c: u8, seed: usize) -> Case {
+    let m = reference.manifest().model("simnet").unwrap();
+    let elems = m.stages[stage - 1].out_elems;
+    let xs: Vec<f32> = (0..elems)
+        .map(|j| {
+            let h = ((j + 1) as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(seed as u64 * 0x2545_F491_4F6C_DD1D);
+            ((h >> 42) & 0x3FFF) as f32 / 1638.4 - 2.0
+        })
+        .collect();
+    let q = quant::quantize(&xs, c);
+    let wire = feature::encode(&q, stage as u16, 0);
+    let mut tail = vec![quant::dequantize(&q)];
+    reference.run_tail_batch("simnet", stage + 1, &mut tail).unwrap();
+    Case { wire, expected_bits: tail[0].iter().map(|v| v.to_bits()).collect() }
+}
+
+/// Zipf(s) schedules over `KEYS` ranks, one per connection — computed
+/// once so the cache-off and cache-on arms replay byte-identical
+/// traffic. Rank k (0-based) has weight `1 / (k+1)^s`.
+fn zipf_schedules(per: usize) -> Vec<Vec<usize>> {
+    let weights: Vec<f64> = (0..KEYS).map(|k| 1.0 / ((k + 1) as f64).powf(ZIPF_S)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(KEYS);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    (0..CONNS)
+        .map(|conn| {
+            let mut rng = XorShift64Star::new(0xB5AD_4ECE_DA1C_E2A9 ^ (conn as u64 + 1) << 17);
+            (0..per)
+                .map(|_| {
+                    let u = rng.next_f64();
+                    cdf.iter().position(|&c| u <= c).unwrap_or(KEYS - 1)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Drive the per-connection schedules closed-loop, asserting every
+/// reply's bits against the drawn case; returns requests/second.
+fn drive(addr: std::net::SocketAddr, cases: &Arc<Vec<Case>>, schedules: &[Vec<usize>]) -> f64 {
+    let t0 = Instant::now();
+    let handles: Vec<_> = schedules
+        .iter()
+        .enumerate()
+        .map(|(i, sched)| {
+            let cases = Arc::clone(cases);
+            let sched = sched.clone();
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_nodelay(true).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut rx = Vec::new();
+                let mut logits = Vec::new();
+                for (k, &key) in sched.iter().enumerate() {
+                    let c = &cases[key];
+                    proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &c.wire).unwrap();
+                    match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+                        RecvFrame::Data(kind) => assert_eq!(
+                            kind,
+                            proto::KIND_LOGITS,
+                            "conn {i} req {k}: unexpected reply kind"
+                        ),
+                        other => panic!("conn {i} req {k}: unexpected reply {other:?}"),
+                    }
+                    proto::parse_logits_into(&rx, &mut logits).unwrap();
+                    let bits: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(bits, c.expected_bits, "conn {i} req {k}: logits != solo execution");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let n: usize = schedules.iter().map(|s| s.len()).sum();
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
+struct ArmOut {
+    rps: f64,
+    hits: u64,
+    misses: u64,
+    coalesced: u64,
+    bytes_saved: u64,
+    evictions: u64,
+}
+
+fn run_arm(
+    cache_bytes: usize,
+    cases: &Arc<Vec<Case>>,
+    schedules: &[Vec<usize>],
+    fanin: usize,
+) -> ArmOut {
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, fanin);
+    let server = Arc::new(CloudServer::with_pool(
+        pool,
+        ServeConfig { workers: CONNS, cache_bytes, ..ServeConfig::default() },
+    ));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").expect("bind");
+    let rps = drive(addr, cases, schedules);
+    let cs = server.cache().map(|c| c.stats()).unwrap_or_default();
+    CloudServer::request_shutdown(addr);
+    ArmOut {
+        rps,
+        hits: cs.hits,
+        misses: cs.misses,
+        coalesced: cs.inflight_coalesced,
+        bytes_saved: cs.bytes_saved,
+        evictions: cs.evictions,
+    }
+}
+
+/// Stampede arm: per round, 8 threads barrier-release onto one frame
+/// the cache has never seen, against a single deliberately slow shard —
+/// the leader's tail takes long enough that the other 7 must either
+/// park behind it (coalesced) or hit the just-published entry.
+fn run_stampede(reference: &Executor, rounds: usize, fanin: usize) -> (u64, u64, usize) {
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 1, fanin);
+    pool.set_exec_faults(Some(FaultPlan::parse_arc("seed=5,slow-shard=0,slow-ms=25").unwrap()));
+    let server = Arc::new(CloudServer::with_pool(
+        pool,
+        ServeConfig { workers: CONNS, cache_bytes: CACHE_BYTES, ..ServeConfig::default() },
+    ));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").expect("bind");
+
+    let fresh: Arc<Vec<Case>> =
+        Arc::new((0..rounds).map(|r| case(reference, 1, 4, 90_000 + r)).collect());
+    let barrier = Arc::new(Barrier::new(CONNS));
+    let handles: Vec<_> = (0..CONNS)
+        .map(|i| {
+            let fresh = Arc::clone(&fresh);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_nodelay(true).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut rx = Vec::new();
+                let mut logits = Vec::new();
+                for (r, c) in fresh.iter().enumerate() {
+                    barrier.wait();
+                    proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &c.wire).unwrap();
+                    match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+                        RecvFrame::Data(proto::KIND_LOGITS) => {}
+                        other => panic!("conn {i} round {r}: unexpected reply {other:?}"),
+                    }
+                    proto::parse_logits_into(&rx, &mut logits).unwrap();
+                    let bits: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(bits, c.expected_bits, "conn {i} round {r}: coalesced reply wrong");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let cs = server.cache().map(|c| c.stats()).unwrap_or_default();
+    // One executor run per round: leader misses, everyone else reuses.
+    assert_eq!(cs.misses as usize, rounds, "stampede leaked extra executor runs");
+    CloudServer::request_shutdown(addr);
+    (cs.inflight_coalesced, cs.hits, rounds * CONNS)
+}
+
+fn main() {
+    let smoke = Bencher::smoke();
+    let fanin = if smoke { 64 } else { 192 };
+    let per = if smoke { 60 } else { 400 };
+    let rounds = if smoke { 10 } else { 40 };
+
+    let reference = Executor::sim_with(sim_manifest(), fanin);
+    let cases: Arc<Vec<Case>> =
+        Arc::new((0..KEYS).map(|k| case(&reference, 1, [2u8, 4, 8][k % 3], 1_000 + k)).collect());
+    let schedules = zipf_schedules(per);
+    // Denominator for bytes_saved_frac: the feature-frame bytes the
+    // cache accounts per hit (`scratch.frame.len()`), summed over the
+    // whole schedule.
+    let sent_bytes: u64 = schedules.iter().flatten().map(|&k| cases[k].wire.len() as u64).sum();
+
+    let off = run_arm(0, &cases, &schedules, fanin);
+    let on = run_arm(CACHE_BYTES, &cases, &schedules, fanin);
+    assert_eq!(off.hits + off.misses, 0, "disabled cache must never count traffic");
+    let speedup = on.rps / off.rps.max(1e-9);
+    let hit_rate = on.hits as f64 / (on.hits + on.misses).max(1) as f64;
+    let bytes_saved_frac = on.bytes_saved as f64 / sent_bytes.max(1) as f64;
+    println!(
+        "cache/zipf: on {:.1} req/s (hit rate {:.3}, {} coalesced) vs off {:.1} req/s \
+         -> {speedup:.2}x at {CONNS} connections",
+        on.rps, hit_rate, on.coalesced, off.rps
+    );
+
+    let (coalesced, dup_hits, dup_total) = run_stampede(&reference, rounds, fanin);
+    let coalesce_rate = coalesced as f64 / dup_total.max(1) as f64;
+    println!(
+        "cache/stampede: {rounds} rounds x {CONNS} threads -> {coalesced} coalesced, \
+         {dup_hits} hits, coalesce rate {coalesce_rate:.3}"
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("logits_cache")),
+        ("connections", Json::num(CONNS as f64)),
+        ("distinct_keys", Json::num(KEYS as f64)),
+        ("zipf_exponent", Json::num(ZIPF_S)),
+        ("cache_bytes", Json::num(CACHE_BYTES as f64)),
+        (
+            "arms",
+            Json::arr(vec![
+                Json::obj(vec![
+                    ("mode", Json::str("cache_off")),
+                    ("req_per_sec", Json::num(off.rps)),
+                ]),
+                Json::obj(vec![
+                    ("mode", Json::str("cache_on")),
+                    ("req_per_sec", Json::num(on.rps)),
+                    ("hits", Json::num(on.hits as f64)),
+                    ("misses", Json::num(on.misses as f64)),
+                    ("inflight_coalesced", Json::num(on.coalesced as f64)),
+                    ("evictions", Json::num(on.evictions as f64)),
+                ]),
+                Json::obj(vec![
+                    ("mode", Json::str("stampede")),
+                    ("rounds", Json::num(rounds as f64)),
+                    ("inflight_coalesced", Json::num(coalesced as f64)),
+                    ("hits", Json::num(dup_hits as f64)),
+                ]),
+            ]),
+        ),
+        ("zipf_speedup_8conn", Json::num(speedup)),
+        ("hit_rate", Json::num(hit_rate)),
+        ("coalesce_rate", Json::num(coalesce_rate)),
+        ("bytes_saved_frac", Json::num(bytes_saved_frac)),
+        // Every reply in every arm was bit-compared against solo
+        // execution inline; a divergence would have panicked already.
+        ("bit_identical", Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_cache.json", doc.to_pretty()).expect("write BENCH_cache.json");
+    println!("wrote BENCH_cache.json (zipf speedup {speedup:.2}x, hit rate {hit_rate:.3})");
+}

@@ -96,6 +96,16 @@ fn main() {
         "serve-cloud: quarantine a shard whose single run exceeds this, ms (0 = off)",
     )
     .opt(
+        "cache-bytes",
+        "0",
+        "serve-cloud: content-addressed logits cache budget, bytes (0 = off)",
+    )
+    .opt(
+        "cache-hit-cost",
+        "0.1",
+        "serve-cloud: fraction of a fair-admission credit a cached hit costs (rest is refunded)",
+    )
+    .opt(
         "fault-plan",
         "",
         "deterministic fault spec, e.g. seed=7,corrupt=0.05,stall-p=0.1,stall-ms=200 (see util::fault)",
@@ -209,6 +219,10 @@ fn run(command: &str, args: &Args) -> Result<()> {
             if !(0.0..=1.0).contains(&pad_waste_max) {
                 return Err(anyhow!("--pad-waste-max must be in 0..=1, got {pad_waste_max}"));
             }
+            let cache_hit_cost = args.get_f64("cache-hit-cost");
+            if !(0.0..=1.0).contains(&cache_hit_cost) {
+                return Err(anyhow!("--cache-hit-cost must be in 0..=1, got {cache_hit_cost}"));
+            }
             let cfg = ServeConfig {
                 workers: args.get_usize("workers"),
                 batch: BatchConfig {
@@ -248,6 +262,8 @@ fn run(command: &str, args: &Args) -> Result<()> {
                     args.get_usize("idle-timeout-s") as u64,
                 ),
                 watchdog_ms: args.get_usize("watchdog-ms") as u64,
+                cache_bytes: args.get_usize("cache-bytes"),
+                cache_hit_cost,
             };
             if !args.get("fault-plan").is_empty() {
                 let plan = jalad::util::fault::FaultPlan::parse_arc(args.get("fault-plan"))
@@ -259,7 +275,7 @@ fn run(command: &str, args: &Args) -> Result<()> {
             let (addr, handle) = Arc::clone(&server).spawn(args.get("addr"))?;
             println!(
                 "cloud server on {addr}: {shards} shard(s), {} transport, max {} conns, \
-                 max batch {}, gather {}..{} µs{}{}{}{} \
+                 max batch {}, gather {}..{} µs{}{}{}{}{} \
                  (Ctrl-C or a Shutdown frame stops it)",
                 match io {
                     IoModel::Epoll => "epoll",
@@ -282,6 +298,7 @@ fn run(command: &str, args: &Args) -> Result<()> {
                     ""
                 },
                 if args.get_flag("fair-admission") { ", fair admission ON" } else { "" },
+                if args.get_usize("cache-bytes") > 0 { ", logits cache ON" } else { "" },
                 if args.get_flag("pin-shards") { ", shard pinning ON" } else { "" },
             );
             handle.join().ok();

@@ -285,6 +285,10 @@ pub struct TenantCounters {
     pub admitted: AtomicU64,
     pub sheds: AtomicU64,
     pub bytes: AtomicU64,
+    /// Admitted requests served from the logits cache (a subset of
+    /// `admitted`): the accounting FairAdmission discounts, surfaced
+    /// per tenant so a hot-key tenant's cheap traffic is visible.
+    pub cache_hits: AtomicU64,
     /// Seconds from enqueue to execution start for this tenant's
     /// requests (bounded ring, same retention as the global histogram).
     pub queue_wait: SharedHistogram,
@@ -299,6 +303,12 @@ impl TenantCounters {
     }
     pub fn add_bytes(&self, n: u64) {
         self.bytes.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn inc_cache_hits(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
     }
     /// (admitted, sheds, bytes).
     pub fn snapshot(&self) -> (u64, u64, u64) {
@@ -455,6 +465,88 @@ impl BatchMetrics {
             self.bypassed.load(Ordering::Relaxed),
             self.max_occupancy.load(Ordering::Relaxed),
         )
+    }
+}
+
+/// Logits-cache observables (see `server::cache::LogitsCache`). All
+/// relaxed atomics bumped from connection workers; `snapshot` is the
+/// stats-endpoint view. The taxonomy: a request that consults the
+/// cache is exactly one of `hits` or `misses`; `inflight_coalesced`
+/// counts requests that additionally *parked* behind an identical
+/// in-flight miss (their eventual retrieval is counted in `hits`), so
+/// coalesced ≤ hits and hits + misses = cache-consulting requests.
+#[derive(Debug, Default)]
+pub struct CacheMetrics {
+    /// Requests answered from the cache (decode, dequantize and the
+    /// executor all skipped).
+    pub hits: AtomicU64,
+    /// Requests that had to execute the tail (and, on success,
+    /// published their logits).
+    pub misses: AtomicU64,
+    /// Requests that parked behind an identical in-flight miss instead
+    /// of executing their own tail.
+    pub inflight_coalesced: AtomicU64,
+    /// Entries evicted to respect the byte budget.
+    pub evictions: AtomicU64,
+    /// Request payload bytes whose decode + execute was skipped
+    /// (summed frame bytes of `hits`).
+    pub bytes_saved: AtomicU64,
+    /// Logits bytes served out of the cache (entry size × hits).
+    pub hit_bytes: AtomicU64,
+}
+
+/// Point-in-time copy of [`CacheMetrics`] plus occupancy gauges.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inflight_coalesced: u64,
+    pub evictions: u64,
+    pub bytes_saved: u64,
+    pub hit_bytes: u64,
+    /// Live entries across every segment.
+    pub entries: u64,
+    /// Charged bytes across every segment (≤ the configured budget).
+    pub bytes: u64,
+}
+
+impl CacheMetrics {
+    pub fn record_hit(&self, req_bytes: u64, logits_bytes: u64) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.bytes_saved.fetch_add(req_bytes, Ordering::Relaxed);
+        self.hit_bytes.fetch_add(logits_bytes, Ordering::Relaxed);
+    }
+    pub fn record_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn record_coalesced(&self) {
+        self.inflight_coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn record_eviction(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+    pub fn coalesced(&self) -> u64 {
+        self.inflight_coalesced.load(Ordering::Relaxed)
+    }
+    /// Counter snapshot with the occupancy gauges supplied by the
+    /// owning cache (the metrics struct itself has no segment view).
+    pub fn snapshot(&self, entries: u64, bytes: u64) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inflight_coalesced: self.inflight_coalesced.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes_saved: self.bytes_saved.load(Ordering::Relaxed),
+            hit_bytes: self.hit_bytes.load(Ordering::Relaxed),
+            entries,
+            bytes,
+        }
     }
 }
 
@@ -693,6 +785,22 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(reg.get(9).snapshot().0, 2000);
+    }
+
+    #[test]
+    fn cache_metrics_taxonomy() {
+        let m = CacheMetrics::default();
+        m.record_miss();
+        m.record_coalesced();
+        m.record_hit(512, 40);
+        m.record_hit(512, 40);
+        m.record_eviction();
+        let s = m.snapshot(3, 1234);
+        assert_eq!((s.hits, s.misses, s.inflight_coalesced, s.evictions), (2, 1, 1, 1));
+        assert_eq!(s.bytes_saved, 1024);
+        assert_eq!(s.hit_bytes, 80);
+        assert_eq!((s.entries, s.bytes), (3, 1234));
+        assert!(s.inflight_coalesced <= s.hits, "coalesced parks resolve as hits");
     }
 
     #[test]

@@ -24,6 +24,7 @@ use anyhow::Result;
 use super::artifacts::Manifest;
 use super::executor::{Executor, SharedExecutor};
 use crate::util::fault::FaultPlan;
+use crate::util::rng::XorShift64Star;
 
 struct Shard {
     exe: Arc<SharedExecutor>,
@@ -73,8 +74,15 @@ struct Health {
     panics: AtomicU64,
 }
 
-/// How long a quarantined shard rests before each re-admission probe.
+/// How long a quarantined shard rests before each re-admission probe
+/// (nominal; each nap is multiplied by a ±50% jitter draw so a mass
+/// quarantine — every shard tripped by one overload spike — does not
+/// re-probe in lockstep and re-create the spike).
 const PROBE_COOLDOWN: Duration = Duration::from_millis(200);
+
+/// Canary-probe jitter fraction: each probe nap is drawn uniformly
+/// from `PROBE_COOLDOWN × (1±this)`.
+const PROBE_JITTER: f64 = 0.5;
 
 pub struct ExecutorPool {
     shards: Vec<Arc<Shard>>,
@@ -308,24 +316,35 @@ impl ExecutorPool {
         let watchdog = self.watchdog_ms.load(Ordering::Relaxed);
         std::thread::Builder::new()
             .name(format!("shard-probe-{idx}"))
-            .spawn(move || loop {
-                std::thread::sleep(PROBE_COOLDOWN);
-                let t0 = Instant::now();
-                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    if let Some(p) = &plan {
-                        p.before_shard_run(idx);
+            .spawn(move || {
+                // Desynchronise canary probes: a correlated fault that
+                // quarantines several shards at once must not have them
+                // all hammer the executor on the same 200 ms beat. Each
+                // probe thread draws its naps from a private XorShift
+                // stream seeded off the shard index.
+                let mut rng =
+                    XorShift64Star::new(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(idx as u64 + 1));
+                loop {
+                    let nap = PROBE_COOLDOWN
+                        .mul_f64(1.0 + PROBE_JITTER * (2.0 * rng.next_f64() - 1.0));
+                    std::thread::sleep(nap);
+                    let t0 = Instant::now();
+                    let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        if let Some(p) = &plan {
+                            p.before_shard_run(idx);
+                        }
+                        // Acquiring the lock is the probe: it drains any
+                        // in-flight holder and proves the lane responds.
+                        shard.exe.with(|_| ());
+                    }))
+                    .is_ok()
+                        && (watchdog == 0 || t0.elapsed() <= Duration::from_millis(watchdog));
+                    if ok {
+                        shard.quarantined.store(false, Ordering::SeqCst);
+                        health.quarantined_now.fetch_sub(1, Ordering::SeqCst);
+                        health.readmitted.fetch_add(1, Ordering::Relaxed);
+                        return;
                     }
-                    // Acquiring the lock is the probe: it drains any
-                    // in-flight holder and proves the lane responds.
-                    shard.exe.with(|_| ());
-                }))
-                .is_ok()
-                    && (watchdog == 0 || t0.elapsed() <= Duration::from_millis(watchdog));
-                if ok {
-                    shard.quarantined.store(false, Ordering::SeqCst);
-                    health.quarantined_now.fetch_sub(1, Ordering::SeqCst);
-                    health.readmitted.fetch_add(1, Ordering::Relaxed);
-                    return;
                 }
             })
             .expect("spawn shard probe thread");

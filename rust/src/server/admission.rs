@@ -264,6 +264,23 @@ impl FairAdmission {
             }
         }
     }
+
+    /// Return part of a spent admission credit to `tenant` — the
+    /// cached-hit discount: a request answered from the logits cache
+    /// never touched the executor, so it should not count a full
+    /// request against the tenant's fair share. Capped at the bucket's
+    /// burst so refunds cannot mint unbounded credit; a no-op for
+    /// unknown (pruned) tenants.
+    pub fn refund(&self, tenant: u64, amount: f64) {
+        if !(amount > 0.0) {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        if let Some(entry) = st.tenants.get_mut(&tenant) {
+            let cap = entry.burst();
+            entry.tokens = (entry.tokens + amount).min(cap);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -389,6 +406,50 @@ mod tests {
         let allocs = fa.allocations();
         let live: f64 = allocs.iter().filter(|(k, _)| *k != 3).map(|(_, a)| a).sum();
         assert!(live > 89.0, "live tenants should hold ~the whole budget, got {live}");
+    }
+
+    #[test]
+    fn refund_restores_credit_up_to_the_burst_cap() {
+        let fa = FairAdmission::new(100.0);
+        let t0 = Instant::now();
+        // Two active tenants so fairness applies; both at 100/s demand.
+        for ms in 0..1000u64 {
+            let now = t0 + Duration::from_millis(ms);
+            if ms % 10 == 0 {
+                fa.note_arrival(1, now);
+                fa.note_arrival(2, now);
+            }
+        }
+        let now = t0 + Duration::from_millis(1001);
+        // Drain tenant 1's bucket dry.
+        let mut spent = 0;
+        while matches!(fa.decide(1, now), FairDecision::Admit) {
+            spent += 1;
+            assert!(spent < 1000, "bucket never drained");
+        }
+        assert!(matches!(fa.decide(1, now), FairDecision::Shed { .. }));
+        // A 90% refund (cache-hit discount at cost 0.1, repeated) puts
+        // credit back without advancing the clock.
+        fa.refund(1, 0.9);
+        fa.refund(1, 0.9);
+        assert!(
+            matches!(fa.decide(1, now), FairDecision::Admit),
+            "refunded credit must admit again"
+        );
+        // Refunds are capped at the burst: a huge refund cannot mint a
+        // burst larger than the bucket allows.
+        fa.refund(2, 1e9);
+        let mut admits = 0;
+        while matches!(fa.decide(2, now), FairDecision::Admit) {
+            admits += 1;
+            assert!(admits < 1000, "refund minted unbounded credit");
+        }
+        // Burst = max(alloc * 0.25s, 2 tokens); alloc ≈ 50/s here, so
+        // the cap is ≈ 12.5 tokens — well under the 1e9 refunded.
+        assert!(admits <= 64, "refund escaped the burst cap: {admits} admits");
+        // Unknown tenants are a no-op, not a panic or an insert.
+        fa.refund(99, 1.0);
+        assert_eq!(fa.allocations().iter().filter(|(k, _)| *k == 99).count(), 0);
     }
 
     #[test]

@@ -20,6 +20,13 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::rng::XorShift64Star;
+
+/// Per-process seed counter so concurrently-built breakers draw
+/// independent jitter streams (golden-ratio stride spreads the seeds).
+static BREAKER_SEED: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(0xC2B2_AE3D_27D4_EB4F);
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BreakerState {
     Closed,
@@ -35,6 +42,13 @@ pub struct BreakerConfig {
     pub cooldown: Duration,
     /// Consecutive half-open successes required to reclose.
     pub probe_successes: u32,
+    /// Multiplicative jitter on each Open cooldown, as a fraction: a
+    /// trip at jitter `j` draws its cooldown uniformly from
+    /// `cooldown × (1±j)`. A fleet of edges tripped by the same cloud
+    /// outage would otherwise all probe in the same instant and
+    /// re-create the overload they are backing off from. 0 disables
+    /// (exact cooldowns — what the deterministic tests use).
+    pub cooldown_jitter: f64,
 }
 
 impl Default for BreakerConfig {
@@ -43,6 +57,7 @@ impl Default for BreakerConfig {
             failure_threshold: 3,
             cooldown: Duration::from_secs(1),
             probe_successes: 1,
+            cooldown_jitter: 0.5,
         }
     }
 }
@@ -54,6 +69,12 @@ pub struct CircuitBreaker {
     strikes: u32,
     probe_ok: u32,
     opened_at: Option<Instant>,
+    /// The jittered cooldown drawn at the most recent trip (equals
+    /// `cfg.cooldown` exactly when `cooldown_jitter` is 0).
+    current_cooldown: Duration,
+    /// Private jitter stream; never consulted when jitter is 0, so
+    /// zero-jitter breakers stay bit-deterministic.
+    jitter: XorShift64Star,
     /// True while the single half-open probe slot is checked out.
     probe_inflight: bool,
     // Lifetime counters for stats.
@@ -65,16 +86,21 @@ pub struct CircuitBreaker {
 
 impl CircuitBreaker {
     pub fn new(cfg: BreakerConfig) -> Self {
+        let seed = BREAKER_SEED
+            .fetch_add(0x9E37_79B9_7F4A_7C15, std::sync::atomic::Ordering::Relaxed);
         Self {
             cfg: BreakerConfig {
                 failure_threshold: cfg.failure_threshold.max(1),
                 cooldown: cfg.cooldown,
                 probe_successes: cfg.probe_successes.max(1),
+                cooldown_jitter: cfg.cooldown_jitter.clamp(0.0, 1.0),
             },
             state: BreakerState::Closed,
             strikes: 0,
             probe_ok: 0,
             opened_at: None,
+            current_cooldown: cfg.cooldown,
+            jitter: XorShift64Star::new(seed),
             probe_inflight: false,
             opened: 0,
             half_opens: 0,
@@ -111,7 +137,7 @@ impl CircuitBreaker {
             BreakerState::Open => {
                 let due = self
                     .opened_at
-                    .map(|t| now.duration_since(t) >= self.cfg.cooldown)
+                    .map(|t| now.duration_since(t) >= self.current_cooldown)
                     .unwrap_or(true);
                 if due {
                     self.state = BreakerState::HalfOpen;
@@ -186,9 +212,22 @@ impl CircuitBreaker {
     fn trip(&mut self, now: Instant) {
         self.state = BreakerState::Open;
         self.opened_at = Some(now);
+        // Each trip draws a fresh jittered cooldown in
+        // `cooldown × (1±jitter)`: edges tripped together probe apart.
+        self.current_cooldown = if self.cfg.cooldown_jitter > 0.0 {
+            let spread = self.cfg.cooldown_jitter * (2.0 * self.jitter.next_f64() - 1.0);
+            self.cfg.cooldown.mul_f64((1.0 + spread).max(0.0))
+        } else {
+            self.cfg.cooldown
+        };
         self.strikes = 0;
         self.probe_ok = 0;
         self.opened += 1;
+    }
+
+    /// The cooldown drawn at the most recent trip (jitter included).
+    pub fn current_cooldown(&self) -> Duration {
+        self.current_cooldown
     }
 
     pub fn opened_count(&self) -> u64 {
@@ -213,10 +252,12 @@ mod tests {
     use super::*;
 
     fn mk(threshold: u32, cooldown_ms: u64, probes: u32) -> CircuitBreaker {
+        // Jitter 0: these tests assert exact cooldown boundaries.
         CircuitBreaker::new(BreakerConfig {
             failure_threshold: threshold,
             cooldown: Duration::from_millis(cooldown_ms),
             probe_successes: probes,
+            cooldown_jitter: 0.0,
         })
     }
 
@@ -321,6 +362,56 @@ mod tests {
             assert!(!b.record_success(t0));
         }
         assert_eq!(b.opened_count(), 0);
+    }
+
+    #[test]
+    fn jittered_cooldowns_spread_within_the_band() {
+        let mut b = CircuitBreaker::new(BreakerConfig {
+            failure_threshold: 1,
+            cooldown: Duration::from_millis(1000),
+            probe_successes: 1,
+            cooldown_jitter: 0.5,
+        });
+        let t0 = Instant::now();
+        let mut seen = Vec::new();
+        let mut t = t0;
+        for _ in 0..50 {
+            assert!(b.record_failure(t), "threshold 1 trips on every failure");
+            let cd = b.current_cooldown();
+            assert!(
+                cd > Duration::from_millis(500) && cd <= Duration::from_millis(1500),
+                "jittered cooldown {cd:?} escaped the ±50% band"
+            );
+            seen.push(cd);
+            // Walk past the drawn cooldown so the probe is admitted,
+            // then fail it to re-trip with a fresh draw.
+            t += cd;
+            assert!(b.should_attempt(t));
+        }
+        let min = seen.iter().min().unwrap();
+        let max = seen.iter().max().unwrap();
+        assert!(
+            *max > *min,
+            "50 trips drew identical cooldowns — jitter is not being applied"
+        );
+        // And the spread is real, not one-nanosecond noise: the band is
+        // 1000 ms wide, 50 uniform draws should cover most of it.
+        assert!(
+            *max - *min > Duration::from_millis(300),
+            "jitter spread {:?} is implausibly narrow",
+            *max - *min
+        );
+    }
+
+    #[test]
+    fn zero_jitter_is_exact() {
+        let mut b = mk(1, 100, 1);
+        let t0 = Instant::now();
+        for _ in 0..5 {
+            assert!(b.record_failure(t0));
+            assert_eq!(b.current_cooldown(), Duration::from_millis(100));
+            assert!(b.should_attempt(t0 + Duration::from_millis(100)));
+        }
     }
 
     #[test]

@@ -1,0 +1,528 @@
+//! Content-addressed logits cache with in-flight dedup.
+//!
+//! At fleet scale identical requests recur constantly — the same
+//! image re-sent after a `Busy`, retries after a breaker trip, popular
+//! inputs under a Zipf-shaped demand curve — and every one of them
+//! pays dequantize + tail execution. The quantized feature frame is a
+//! *canonical* encoding of the request: its fixed header carries
+//! `(model, stage i, c, lo, hi, n, payload length)` and the payload is
+//! the entropy-coded activation, so two byte-identical frames are
+//! guaranteed byte-identical logits (the tail is deterministic), and
+//! two requests that differ anywhere differ in the frame. That makes
+//! the 128-bit content hash of the frame ([`util::hash`]) a sound
+//! cache key — no parsing into a structured key, no canonicalization
+//! pass.
+//!
+//! Shape:
+//!
+//! * **Sharded store** — N independently-locked segments (the
+//!   `ExecutorPool` idiom: contention splits by key, no global lock),
+//!   each a segmented LRU (probation → protected on re-reference, so
+//!   one streaming scan of cold keys cannot flush the hot set) bounded
+//!   by a per-segment slice of the byte budget.
+//! * **In-flight table** — the `util::once_map::OnceMap` pattern
+//!   specialized for serving: the first miss on a key becomes the
+//!   *leader* (computes the tail), concurrent identical misses park on
+//!   a condvar and re-check the store once the leader publishes — N
+//!   simultaneous identical requests cost exactly one tail execution.
+//!   The leader's guard releases the key on **every** exit (error,
+//!   shed, panic — it is a `Drop`), so a failed leader never wedges
+//!   followers: the next waiter simply becomes the new leader.
+//!
+//! What is deliberately *not* cached: errors and `Busy` sheds (the
+//! leader only publishes served logits), and frames that failed CRC or
+//! geometry validation never reach the cache at all.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::compression::feature;
+use crate::metrics::{CacheMetrics, CacheStats};
+use crate::util::hash::{hash128, Hash128};
+
+/// Per-entry bookkeeping overhead charged against the byte budget on
+/// top of the logits themselves (map slot, queue stamps, `Arc`).
+const ENTRY_OVERHEAD: usize = 96;
+
+/// Fraction of a segment's budget the protected (re-referenced) LRU
+/// space may hold; beyond it, protected LRU entries demote back to
+/// probation rather than evicting straight out.
+const PROTECTED_FRAC: f64 = 0.8;
+
+/// Compact the lazy LRU queues when stale stamps outnumber live
+/// entries by this factor (each re-reference appends a fresh stamp and
+/// strands the old one; compaction rebuilds recency order from the
+/// live map).
+const COMPACT_FACTOR: usize = 8;
+
+struct Entry {
+    logits: Arc<Vec<f32>>,
+    charged: usize,
+    /// Stamp of this entry's newest position in its recency queue;
+    /// older queue positions for the same key are stale and skipped.
+    stamp: u64,
+    protected: bool,
+}
+
+#[derive(Default)]
+struct Segment {
+    map: HashMap<Hash128, Entry>,
+    /// Charged bytes across `map`.
+    bytes: usize,
+    protected_bytes: usize,
+    /// Monotonic recency clock for the lazy queues.
+    tick: u64,
+    /// Recency queues, oldest first, with lazy invalidation: a popped
+    /// `(key, stamp)` is live only if the map still holds that key at
+    /// that stamp in that state.
+    probation: VecDeque<(Hash128, u64)>,
+    protected: VecDeque<(Hash128, u64)>,
+}
+
+impl Segment {
+    fn touch(&mut self, key: Hash128, budget: usize) -> Option<Arc<Vec<f32>>> {
+        let e = self.map.get_mut(&key)?;
+        self.tick += 1;
+        e.stamp = self.tick;
+        if !e.protected {
+            e.protected = true;
+            self.protected_bytes += e.charged;
+        }
+        let logits = Arc::clone(&e.logits);
+        self.protected.push_back((key, self.tick));
+        // Keep the protected space a bounded fraction of the segment:
+        // demote its LRU tail to probation so scans of the probation
+        // side still find victims before touching the hot set.
+        let cap = (budget as f64 * PROTECTED_FRAC) as usize;
+        while self.protected_bytes > cap {
+            let Some((k, s)) = self.protected.pop_front() else { break };
+            let Some(d) = self.map.get_mut(&k) else { continue };
+            if d.stamp != s || !d.protected {
+                continue; // stale queue position
+            }
+            d.protected = false;
+            self.protected_bytes -= d.charged;
+            self.probation.push_back((k, s));
+        }
+        self.maybe_compact();
+        Some(logits)
+    }
+
+    fn insert(&mut self, key: Hash128, logits: Arc<Vec<f32>>, metrics: &CacheMetrics, budget: usize) {
+        if self.map.contains_key(&key) {
+            return; // racing leader already published
+        }
+        let charged = logits.len() * std::mem::size_of::<f32>() + ENTRY_OVERHEAD;
+        if charged > budget {
+            return; // larger than the whole segment: not cacheable
+        }
+        self.tick += 1;
+        self.map.insert(key, Entry { logits, charged, stamp: self.tick, protected: false });
+        self.probation.push_back((key, self.tick));
+        self.bytes += charged;
+        while self.bytes > budget {
+            if !self.evict_one(metrics) {
+                break; // only the just-inserted entry remains
+            }
+        }
+        self.maybe_compact();
+    }
+
+    /// Evict exactly one live entry: probation LRU first, then the
+    /// protected LRU. Returns false when nothing evictable remains.
+    fn evict_one(&mut self, metrics: &CacheMetrics) -> bool {
+        loop {
+            let from_probation = !self.probation.is_empty();
+            let Some((k, s)) = (if from_probation {
+                self.probation.pop_front()
+            } else {
+                self.protected.pop_front()
+            }) else {
+                return false;
+            };
+            let live = match self.map.get(&k) {
+                Some(e) => e.stamp == s && e.protected != from_probation,
+                None => false,
+            };
+            if !live {
+                continue;
+            }
+            let e = self.map.remove(&k).unwrap();
+            self.bytes -= e.charged;
+            if e.protected {
+                self.protected_bytes -= e.charged;
+            }
+            metrics.record_eviction();
+            return true;
+        }
+    }
+
+    /// Rebuild the queues from the live map when lazy stamps dominate
+    /// (bounds queue memory at O(live entries) amortized).
+    fn maybe_compact(&mut self) {
+        let queued = self.probation.len() + self.protected.len();
+        if queued <= COMPACT_FACTOR * self.map.len() + 64 {
+            return;
+        }
+        let mut live: Vec<(Hash128, u64, bool)> =
+            self.map.iter().map(|(k, e)| (*k, e.stamp, e.protected)).collect();
+        live.sort_unstable_by_key(|&(_, stamp, _)| stamp);
+        self.probation.clear();
+        self.protected.clear();
+        for (k, s, protected) in live {
+            if protected {
+                self.protected.push_back((k, s));
+            } else {
+                self.probation.push_back((k, s));
+            }
+        }
+    }
+}
+
+/// Outcome of [`LogitsCache::lead_or_wait`].
+#[must_use]
+pub enum LeadOrWait<'a> {
+    /// This request is the leader for its key: compute the tail, then
+    /// [`LogitsCache::publish`] on success (or just drop the guard on
+    /// failure — the key is released either way).
+    Lead(InflightGuard<'a>),
+    /// An identical request was already in flight; this one parked
+    /// until the leader finished. Re-check the store (a published
+    /// result is a hit; a failed leader means lead again).
+    Waited,
+}
+
+/// Leadership over one in-flight key. Dropping it — on any path,
+/// including unwind — removes the key from the in-flight table and
+/// wakes every parked follower.
+pub struct InflightGuard<'a> {
+    cache: &'a LogitsCache,
+    key: Hash128,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        let mut building = self.cache.inflight.lock().unwrap();
+        building.remove(&self.key);
+        drop(building);
+        self.cache.inflight_cv.notify_all();
+    }
+}
+
+/// Sharded, byte-bounded, content-addressed logits store with
+/// in-flight dedup. See the module docs for shape and guarantees.
+pub struct LogitsCache {
+    segments: Vec<Mutex<Segment>>,
+    /// Per-segment byte budget (total budget / segment count).
+    segment_budget: usize,
+    /// Keys currently being computed by a leader. Value is a unit —
+    /// presence is the claim; followers wait on `inflight_cv`.
+    inflight: Mutex<std::collections::HashSet<Hash128>>,
+    inflight_cv: Condvar,
+    metrics: CacheMetrics,
+}
+
+/// Default segment count: enough to keep 8–16 connection workers off
+/// each other's locks, small enough that a per-segment budget slice
+/// still holds many entries.
+const SEGMENTS: usize = 8;
+
+impl LogitsCache {
+    /// A cache bounded at `total_bytes` (the `--cache-bytes` knob; the
+    /// caller handles `0 = disabled` by not constructing one).
+    pub fn new(total_bytes: usize) -> Arc<Self> {
+        Self::with_segments(total_bytes, SEGMENTS)
+    }
+
+    pub fn with_segments(total_bytes: usize, segments: usize) -> Arc<Self> {
+        let segments = segments.max(1);
+        Arc::new(Self {
+            segments: (0..segments).map(|_| Mutex::new(Segment::default())).collect(),
+            segment_budget: (total_bytes / segments).max(1),
+            inflight: Mutex::new(std::collections::HashSet::new()),
+            inflight_cv: Condvar::new(),
+            metrics: CacheMetrics::default(),
+        })
+    }
+
+    /// Derive the cache key for a feature frame, validating while
+    /// hashing: the frame must carry a well-formed fixed header whose
+    /// declared length matches the bytes exactly (the same check the
+    /// tenant-trailer split already performs), and the digest covers
+    /// every byte — header *and* entropy payload — so the key is
+    /// exactly the `(model, i, c, lo, hi, n, payload)` identity.
+    /// `None` means "not keyable": the frame proceeds down the normal
+    /// decode path and fails (or serves) there, uncached.
+    ///
+    /// One pass over a buffer the transport just wrote (cache-hot);
+    /// on a hit it *replaces* the decode + dequantize passes rather
+    /// than adding to them.
+    pub fn key_for(frame: &[u8]) -> Option<Hash128> {
+        if feature::frame_len(frame)? != frame.len() {
+            return None;
+        }
+        Some(hash128(frame))
+    }
+
+    /// Store lookup. A hit bumps recency (probation → protected),
+    /// records `req_bytes` as saved work, and returns the logits.
+    pub fn get(&self, key: Hash128, req_bytes: usize) -> Option<Arc<Vec<f32>>> {
+        let logits = self.segment(key).lock().unwrap().touch(key, self.segment_budget)?;
+        self.metrics
+            .record_hit(req_bytes as u64, (logits.len() * std::mem::size_of::<f32>()) as u64);
+        Some(logits)
+    }
+
+    /// Claim or follow the in-flight computation for `key`. Call after
+    /// a [`get`](Self::get) miss:
+    ///
+    /// * [`LeadOrWait::Lead`] — no identical request in flight; this
+    ///   one computes (counted as a miss) and publishes.
+    /// * [`LeadOrWait::Waited`] — parked behind a leader until it
+    ///   finished (counted as coalesced); loop back to `get`.
+    pub fn lead_or_wait(&self, key: Hash128) -> LeadOrWait<'_> {
+        let mut building = self.inflight.lock().unwrap();
+        if building.insert(key) {
+            self.metrics.record_miss();
+            return LeadOrWait::Lead(InflightGuard { cache: self, key });
+        }
+        self.metrics.record_coalesced();
+        while building.contains(&key) {
+            building = self.inflight_cv.wait(building).unwrap();
+        }
+        LeadOrWait::Waited
+    }
+
+    /// Publish a leader's logits and release its key: the entry is
+    /// inserted *before* followers wake, so their store re-check hits.
+    pub fn publish(&self, lead: InflightGuard<'_>, logits: &[f32]) {
+        let key = lead.key;
+        self.segment(key).lock().unwrap().insert(
+            key,
+            Arc::new(logits.to_vec()),
+            &self.metrics,
+            self.segment_budget,
+        );
+        drop(lead); // releases the in-flight claim + notifies
+    }
+
+    fn segment(&self, key: Hash128) -> &Mutex<Segment> {
+        &self.segments[(key.lo as usize) % self.segments.len()]
+    }
+
+    pub fn metrics(&self) -> &CacheMetrics {
+        &self.metrics
+    }
+
+    /// Counters + live occupancy (entries, charged bytes across all
+    /// segments).
+    pub fn stats(&self) -> CacheStats {
+        let (mut entries, mut bytes) = (0u64, 0u64);
+        for seg in &self.segments {
+            let s = seg.lock().unwrap();
+            entries += s.map.len() as u64;
+            bytes += s.bytes as u64;
+        }
+        self.metrics.snapshot(entries, bytes)
+    }
+
+    /// Charged bytes across all segments (tests assert the bound).
+    pub fn bytes(&self) -> usize {
+        self.segments.iter().map(|s| s.lock().unwrap().bytes).sum()
+    }
+
+    /// Live entries across all segments.
+    pub fn entries(&self) -> usize {
+        self.segments.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    /// The byte budget a single segment is held to (total / segments).
+    pub fn segment_budget(&self) -> usize {
+        self.segment_budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn key(i: u64) -> Hash128 {
+        // Distinct, well-spread keys without crafting frames.
+        crate::util::hash::hash128(&i.to_le_bytes())
+    }
+
+    fn logits(n: usize, seed: f32) -> Vec<f32> {
+        (0..n).map(|i| seed + i as f32).collect()
+    }
+
+    fn lead(cache: &LogitsCache, k: Hash128) -> InflightGuard<'_> {
+        match cache.lead_or_wait(k) {
+            LeadOrWait::Lead(g) => g,
+            LeadOrWait::Waited => panic!("unexpected in-flight claim"),
+        }
+    }
+
+    #[test]
+    fn miss_publish_hit_roundtrip() {
+        let cache = LogitsCache::with_segments(1 << 20, 4);
+        let k = key(1);
+        assert!(cache.get(k, 100).is_none());
+        let g = lead(&cache, k);
+        cache.publish(g, &logits(10, 0.5));
+        let got = cache.get(k, 100).expect("published entry must hit");
+        assert_eq!(*got, logits(10, 0.5));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.bytes_saved, 100);
+        assert_eq!(s.hit_bytes, 40);
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn dropped_leader_releases_the_key_without_caching() {
+        let cache = LogitsCache::with_segments(1 << 20, 4);
+        let k = key(2);
+        drop(lead(&cache, k)); // leader failed (error / shed path)
+        assert!(cache.get(k, 0).is_none(), "a failed leader must not populate");
+        // The key is free again: the next request leads immediately.
+        let g = lead(&cache, k);
+        cache.publish(g, &logits(4, 1.0));
+        assert!(cache.get(k, 0).is_some());
+    }
+
+    #[test]
+    fn concurrent_identical_misses_build_exactly_once() {
+        let cache = LogitsCache::with_segments(1 << 20, 4);
+        let k = key(3);
+        let built = Arc::new(AtomicU64::new(0));
+        let n = 8;
+        let barrier = Arc::new(std::sync::Barrier::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let cache = Arc::clone(&cache);
+                let built = Arc::clone(&built);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    loop {
+                        if let Some(v) = cache.get(k, 10) {
+                            return (*v).clone();
+                        }
+                        match cache.lead_or_wait(k) {
+                            LeadOrWait::Lead(g) => {
+                                // Linger so every follower really parks.
+                                std::thread::sleep(std::time::Duration::from_millis(100));
+                                built.fetch_add(1, Ordering::SeqCst);
+                                let out = logits(6, 7.0);
+                                cache.publish(g, &out);
+                                return out;
+                            }
+                            LeadOrWait::Waited => continue,
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), logits(6, 7.0), "every caller sees the same value");
+        }
+        assert_eq!(built.load(Ordering::SeqCst), 1, "N identical misses must build once");
+        let s = cache.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.inflight_coalesced, (n - 1) as u64);
+    }
+
+    #[test]
+    fn eviction_respects_the_byte_bound() {
+        // One segment so the bound is exercised exactly.
+        let budget = 10 * (100 * 4 + ENTRY_OVERHEAD);
+        let cache = LogitsCache::with_segments(budget, 1);
+        for i in 0..100 {
+            let g = lead(&cache, key(i));
+            cache.publish(g, &logits(100, i as f32));
+            assert!(
+                cache.bytes() <= budget,
+                "byte bound violated after insert {i}: {} > {budget}",
+                cache.bytes()
+            );
+        }
+        let s = cache.stats();
+        assert!(s.evictions >= 90, "90 of 100 equal-sized entries must have evicted");
+        assert_eq!(s.entries as usize, cache.entries());
+        assert!(cache.entries() <= 10);
+    }
+
+    #[test]
+    fn hot_entries_survive_a_cold_scan() {
+        // Segmented LRU: a hot (re-referenced → protected) entry must
+        // outlive a long scan of one-shot keys through probation.
+        let budget = 20 * (50 * 4 + ENTRY_OVERHEAD);
+        let cache = LogitsCache::with_segments(budget, 1);
+        let hot = key(1000);
+        let g = lead(&cache, hot);
+        cache.publish(g, &logits(50, 9.0));
+        assert!(cache.get(hot, 0).is_some(), "promote to protected");
+        for i in 0..200 {
+            let g = lead(&cache, key(i));
+            cache.publish(g, &logits(50, i as f32));
+            // Re-reference every few inserts, like real hot traffic.
+            if i % 5 == 0 {
+                assert!(cache.get(hot, 0).is_some(), "hot key flushed by cold scan at {i}");
+            }
+        }
+        assert!(cache.get(hot, 0).is_some(), "hot key must survive the scan");
+        assert!(cache.bytes() <= budget);
+    }
+
+    #[test]
+    fn oversized_values_are_not_cached() {
+        let cache = LogitsCache::with_segments(256, 1);
+        let k = key(5);
+        let g = lead(&cache, k);
+        cache.publish(g, &logits(1000, 0.0)); // 4000 B > 256 B budget
+        assert!(cache.get(k, 0).is_none());
+        assert_eq!(cache.bytes(), 0);
+    }
+
+    #[test]
+    fn key_for_requires_a_valid_exact_length_frame() {
+        // A real frame keyed; truncated/extended/corrupt-magic not.
+        let q = crate::compression::quant::quantize(&[0.1f32, 0.7, -0.3, 0.9], 4);
+        let frame = feature::encode(&q, 1, 0);
+        let k = LogitsCache::key_for(&frame).expect("valid frame must key");
+        assert_eq!(Some(k), LogitsCache::key_for(&frame), "key must be deterministic");
+        assert!(LogitsCache::key_for(&frame[..frame.len() - 1]).is_none(), "truncated");
+        let mut longer = frame.clone();
+        longer.push(0);
+        assert!(LogitsCache::key_for(&longer).is_none(), "trailing bytes");
+        let mut bad = frame.clone();
+        bad[0] ^= 0xFF;
+        assert!(LogitsCache::key_for(&bad).is_none(), "bad magic");
+        let mut payload_flip = frame.clone();
+        *payload_flip.last_mut().unwrap() ^= 0x01;
+        assert_ne!(
+            LogitsCache::key_for(&payload_flip),
+            Some(k),
+            "payload bytes are part of the identity"
+        );
+    }
+
+    #[test]
+    fn lazy_queues_stay_bounded_under_rereference() {
+        let cache = LogitsCache::with_segments(1 << 20, 1);
+        let k = key(6);
+        let g = lead(&cache, k);
+        cache.publish(g, &logits(10, 0.0));
+        for _ in 0..10_000 {
+            cache.get(k, 0).unwrap();
+        }
+        let seg = cache.segments[0].lock().unwrap();
+        assert!(
+            seg.probation.len() + seg.protected.len() <= COMPACT_FACTOR * seg.map.len() + 64 + 1,
+            "compaction never ran: {} stamps for {} entries",
+            seg.probation.len() + seg.protected.len(),
+            seg.map.len()
+        );
+    }
+}

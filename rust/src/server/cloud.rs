@@ -80,6 +80,7 @@ use crate::compression::quant;
 use crate::metrics::{BatchMetrics, Counters, SharedHistogram, TenantCounters, TenantRegistry};
 use crate::runtime::{BatchConfig, BatchEngine, ExecutorPool, Manifest, SharedExecutor};
 use crate::server::admission::{FairAdmission, FairDecision};
+use crate::server::cache::{LeadOrWait, LogitsCache};
 use crate::server::proto::{self, CloudTelemetry, RecvFrame};
 use crate::util::json::Json;
 use crate::util::pool::{BufPool, Scratch};
@@ -219,6 +220,15 @@ pub struct ServeConfig {
     /// that holds its shard longer than this quarantines the shard
     /// (see `ExecutorPool::set_watchdog_ms`).
     pub watchdog_ms: u64,
+    /// Content-addressed logits cache budget, bytes (`--cache-bytes`).
+    /// 0 (the default) disables the cache entirely — no hashing, no
+    /// lookup, bit-identical to the pre-cache server.
+    pub cache_bytes: usize,
+    /// Under fair admission, the fraction of an admission credit a
+    /// cached hit ends up costing — a hit never touched the executor,
+    /// so the rest of the spent credit is refunded to the tenant
+    /// (`--cache-hit-cost`). 1.0 means hits cost as much as misses.
+    pub cache_hit_cost: f64,
 }
 
 /// Default reactor idle timeout (`--idle-timeout-s`).
@@ -235,6 +245,8 @@ impl Default for ServeConfig {
             max_conns: DEFAULT_MAX_CONNS,
             idle_timeout: DEFAULT_IDLE_TIMEOUT,
             watchdog_ms: 0,
+            cache_bytes: 0,
+            cache_hit_cost: 0.1,
         }
     }
 }
@@ -434,8 +446,11 @@ pub(crate) enum FrameAction {
 
 /// Outcome of an admitted-or-shed data request.
 enum Served {
-    /// Logits are in the scratch's float buffer.
-    Logits,
+    /// Logits are in the scratch's float buffer. `cached` marks a
+    /// logits-cache hit (skipped decode, dequantize and the executor) —
+    /// the reply bytes are identical either way, only the per-tenant
+    /// accounting differs.
+    Logits { cached: bool },
     /// Admission control refused; reply `Busy` with telemetry carrying
     /// the shed tenant's backoff hint (0 = no hint, the global-budget
     /// immediate-retry contract).
@@ -474,6 +489,9 @@ pub struct CloudServer {
     /// Deficit-weighted fair-share governor (consulted only when
     /// `admission.fair` and the global budget trips).
     fairness: FairAdmission,
+    /// Content-addressed logits cache (`None` when `cache_bytes` is 0
+    /// — the disabled path never hashes a frame).
+    cache: Option<Arc<LogitsCache>>,
     pub counters: Arc<Counters>,
     /// Per-request service time (frame read → reply written), seconds.
     pub service_hist: Arc<SharedHistogram>,
@@ -529,6 +547,7 @@ impl CloudServer {
             engine: BatchEngine::with_tenants(pool, batch_cfg, Some(Arc::clone(&tenants))),
             manifest,
             fairness: FairAdmission::new(cfg.admission.tenant_budget),
+            cache: if cfg.cache_bytes > 0 { Some(LogitsCache::new(cfg.cache_bytes)) } else { None },
             tenants,
             cfg,
             monitor,
@@ -563,6 +582,12 @@ impl CloudServer {
     /// `xmodel_active`, per-signature stats — for benches and tests).
     pub fn batch_engine(&self) -> &Arc<BatchEngine> {
         &self.engine
+    }
+
+    /// The logits cache, when `cache_bytes` enabled one (tests assert
+    /// its counters and byte bound directly).
+    pub fn cache(&self) -> Option<&Arc<LogitsCache>> {
+        self.cache.as_ref()
     }
 
     /// The current cloud telemetry snapshot (what the next reply will
@@ -828,7 +853,7 @@ impl CloudServer {
                         let model_id = u16::from_le_bytes([sc.frame[0], sc.frame[1]]);
                         let Scratch { frame, floats, .. } = sc;
                         self.handle_image(conn_id, model_id, &frame[4..], floats)
-                            .map(|()| Served::Logits)
+                            .map(|()| Served::Logits { cached: false })
                     }
                 };
                 self.reply_data(writer, sc, t0, telemetry, result, &tc)?;
@@ -931,10 +956,13 @@ impl CloudServer {
         tenant: &TenantCounters,
     ) -> Result<()> {
         match result {
-            Ok(Served::Logits) => {
+            Ok(Served::Logits { cached }) => {
                 proto::write_logits_frame_with(writer, &sc.floats, Some(&telemetry), &mut sc.wire)?;
                 self.service_hist.record(t0.elapsed().as_secs_f64());
                 tenant.inc_admitted();
+                if cached {
+                    tenant.inc_cache_hits();
+                }
                 if self.cfg.admission.fair {
                     // Completions are the auto budget's capacity signal.
                     self.fairness.note_served(Instant::now());
@@ -1084,6 +1112,24 @@ impl CloudServer {
                         .collect(),
                 ),
             ),
+            // Logits-cache observables: taxonomy counters + live
+            // occupancy. Disabled (`cache_bytes = 0`) reports zeros
+            // with `enabled = 0`, so dashboards need no special case.
+            ("cache", {
+                let cs = self.cache.as_ref().map(|c| c.stats()).unwrap_or_default();
+                Json::obj(vec![
+                    ("enabled", Json::num(self.cache.is_some() as u8 as f64)),
+                    ("capacity_bytes", Json::num(self.cfg.cache_bytes as f64)),
+                    ("hits", Json::num(cs.hits as f64)),
+                    ("misses", Json::num(cs.misses as f64)),
+                    ("inflight_coalesced", Json::num(cs.inflight_coalesced as f64)),
+                    ("evictions", Json::num(cs.evictions as f64)),
+                    ("bytes_saved", Json::num(cs.bytes_saved as f64)),
+                    ("hit_bytes", Json::num(cs.hit_bytes as f64)),
+                    ("entries", Json::num(cs.entries as f64)),
+                    ("bytes", Json::num(cs.bytes as f64)),
+                ])
+            }),
             // Multi-edge fairness observables: per-tenant admission
             // outcomes + the tenant-aware dequeue's cap events.
             ("fair_admission", Json::num(self.cfg.admission.fair as u8 as f64)),
@@ -1101,6 +1147,7 @@ impl CloudServer {
                     Json::obj(vec![
                         ("tenant", Json::str(&tenant_label(key))),
                         ("admitted", Json::num(admitted as f64)),
+                        ("cache_hits", Json::num(tc.cache_hits() as f64)),
                         ("sheds", Json::num(sheds as f64)),
                         ("bytes_rx", Json::num(bytes as f64)),
                         ("queue_wait_p95_ms", Json::num(qw95)),
@@ -1134,6 +1181,7 @@ impl CloudServer {
         // Shed off the fixed header alone — refusing work must not pay
         // the entropy decode. Unpeekable frames fall through and fail
         // in the full decode with a precise error.
+        let mut fair_charged = false;
         if shedding {
             if let Some((model, stage)) = feature::peek_route(&scratch.frame) {
                 let sheddable = match self.manifest.models.get(model as usize) {
@@ -1148,7 +1196,7 @@ impl CloudServer {
                     // active tenant) this is the pre-tenant global
                     // shed, hint-less.
                     match self.fair_decision(tenant, Instant::now()) {
-                        FairDecision::Admit => {}
+                        FairDecision::Admit => fair_charged = true,
                         FairDecision::Shed { backoff } => {
                             return Ok(Served::Shed {
                                 backoff_ms: backoff.as_secs_f64() as f32 * 1e3,
@@ -1159,6 +1207,62 @@ impl CloudServer {
                 }
             }
         }
+        // Cache consult: between admission (a shed above never reaches
+        // here, so `Busy` outcomes are never cached) and the decode +
+        // dequantize below (a hit skips both, and the executor). The
+        // key is the content hash of the exact frame bytes — derivable
+        // only when the declared frame length matches exactly, the
+        // same validation the tenant-trailer split performed.
+        if let Some(cache) = &self.cache {
+            if let Some(key) = LogitsCache::key_for(&scratch.frame) {
+                let req_bytes = scratch.frame.len();
+                loop {
+                    if let Some(hit) = cache.get(key, req_bytes) {
+                        scratch.floats.clear();
+                        scratch.floats.extend_from_slice(&hit);
+                        if fair_charged {
+                            // The hit cost no executor time: refund all
+                            // but `cache_hit_cost` of the admission
+                            // credit the shed-check spent.
+                            self.fairness
+                                .refund(tenant, (1.0 - self.cfg.cache_hit_cost).clamp(0.0, 1.0));
+                        }
+                        return Ok(Served::Logits { cached: true });
+                    }
+                    match cache.lead_or_wait(key) {
+                        LeadOrWait::Lead(guard) => {
+                            let r = self.features_tail(conn_id, scratch, deadline, tenant);
+                            if r.is_ok() {
+                                // Publish before the guard releases so
+                                // woken followers' store re-check hits.
+                                cache.publish(guard, &scratch.floats);
+                            }
+                            // On error the guard drops here: the key is
+                            // released, nothing is cached, and a parked
+                            // follower leads (and fails) on its own.
+                            return r.map(|()| Served::Logits { cached: false });
+                        }
+                        // A leader finished (or failed) while we
+                        // parked: loop back to the store check.
+                        LeadOrWait::Waited => continue,
+                    }
+                }
+            }
+        }
+        self.features_tail(conn_id, scratch, deadline, tenant)
+            .map(|()| Served::Logits { cached: false })
+    }
+
+    /// The uncached feature-serving tail: full decode, native
+    /// dequantize, batched tail inference. Logits land in
+    /// `scratch.floats`.
+    fn features_tail(
+        &self,
+        conn_id: usize,
+        scratch: &mut Scratch,
+        deadline: Option<Instant>,
+        tenant: u64,
+    ) -> Result<()> {
         let (model_id, from) = {
             let Scratch { frame, values, floats, codec, .. } = scratch;
             let h = feature::decode_into(frame, codec, values).map_err(anyhow::Error::new)?;
@@ -1191,7 +1295,7 @@ impl CloudServer {
         let out =
             self.engine.infer_tail_for(conn_id, model_id, from, activation, deadline, tenant)?;
         scratch.restore_floats(out);
-        Ok(Served::Logits)
+        Ok(())
     }
 
     fn handle_image(

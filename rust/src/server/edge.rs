@@ -106,12 +106,13 @@ static JITTER_SEED: std::sync::atomic::AtomicU64 =
     std::sync::atomic::AtomicU64::new(0x9E37_79B9_7F4A_7C15);
 
 /// The live cloud connection: a buffered reader over one half of the
-/// socket and the throttled (and optionally fault-injected) writer over
-/// the other. Dropped whole on any transport failure — a socket that
-/// timed out mid-frame has undefined framing state, so failover always
-/// reconnects rather than resuming.
+/// socket and the throttled writer over the other — both halves
+/// optionally fault-injected (uplink faults fire on the writer,
+/// `dl-*` downlink faults on the reader). Dropped whole on any
+/// transport failure — a socket that timed out mid-frame has undefined
+/// framing state, so failover always reconnects rather than resuming.
 struct Transport {
-    reader: BufReader<TcpStream>,
+    reader: BufReader<FaultyStream<TcpStream>>,
     writer: ThrottledWriter<FaultyStream<TcpStream>>,
 }
 
@@ -174,8 +175,9 @@ pub struct EdgeClient<'a> {
     /// requests are served fully locally at the `i = N` cut.
     breaker: CircuitBreaker,
     request_timeout: Duration,
-    /// Uplink fault injection (chaos testing); wrapped around every
-    /// (re)connected socket.
+    /// Fault injection (chaos testing); wrapped around both halves of
+    /// every (re)connected socket — uplink faults fire on writes,
+    /// `dl-*` downlink faults on reads.
     faults: Option<Arc<FaultPlan>>,
     /// Wrap data frames in the CRC-checked envelope so a corrupted
     /// uplink is detected and re-sent instead of silently decoded.
@@ -262,7 +264,7 @@ impl<'a> EdgeClient<'a> {
         let deadline = (!self.request_timeout.is_zero()).then_some(self.request_timeout);
         stream.set_read_timeout(deadline)?;
         stream.set_write_timeout(deadline)?;
-        let reader = BufReader::new(stream.try_clone()?);
+        let reader = BufReader::new(FaultyStream::new(stream.try_clone()?, self.faults.clone()));
         // Small burst: feature frames are a few KB, so a default 64 KiB
         // bucket would swallow whole frames and defeat the throttle
         // (§Perf log — this showed up as bimodal latencies).
@@ -288,8 +290,8 @@ impl<'a> EdgeClient<'a> {
         self.request_timeout = timeout;
         if let Some(tr) = &self.transport {
             let deadline = (!timeout.is_zero()).then_some(timeout);
-            tr.reader.get_ref().set_read_timeout(deadline)?;
-            tr.reader.get_ref().set_write_timeout(deadline)?;
+            tr.reader.get_ref().get_ref().set_read_timeout(deadline)?;
+            tr.reader.get_ref().get_ref().set_write_timeout(deadline)?;
         }
         Ok(())
     }
@@ -308,9 +310,10 @@ impl<'a> EdgeClient<'a> {
         &self.breaker
     }
 
-    /// Install (or clear) an uplink fault plan. The current connection
-    /// is dropped so the next attempt rewraps the socket — fault
-    /// injection always covers whole connections, never half of one.
+    /// Install (or clear) a fault plan (uplink write faults and `dl-*`
+    /// downlink read faults). The current connection is dropped so the
+    /// next attempt rewraps the socket — fault injection always covers
+    /// whole connections, never half of one.
     pub fn set_fault_plan(&mut self, plan: Option<Arc<FaultPlan>>) {
         self.faults = plan;
         self.transport = None;

@@ -18,6 +18,12 @@
 //!   admission control sheds over-budget work with `Busy` frames and
 //!   every logits reply piggybacks a compact load-telemetry block;
 //!   past `max_conns`, whole connections are refused at accept;
+//! * [`cache`] — content-addressed logits cache (`--cache-bytes`):
+//!   repeat feature frames are answered from a sharded, byte-bounded
+//!   segmented-LRU store keyed on the frame's 128-bit content hash,
+//!   and concurrent identical misses coalesce onto one tail execution
+//!   through an in-flight dedup table; cached hits charge fair
+//!   admission at a discount (`--cache-hit-cost`);
 //! * [`epoll`] — the event-driven transport (default on Linux): one
 //!   reactor thread (`util::reactor`, raw `epoll`/`eventfd`)
 //!   multiplexes every connection over nonblocking sockets, assembling
@@ -35,6 +41,7 @@
 
 pub mod admission;
 pub mod breaker;
+pub mod cache;
 pub mod cloud;
 pub mod edge;
 pub mod epoll;
@@ -42,5 +49,6 @@ pub mod proto;
 
 pub use admission::{FairAdmission, FairDecision};
 pub use breaker::{BreakerConfig, BreakerState, CircuitBreaker};
+pub use cache::LogitsCache;
 pub use cloud::{AdmissionConfig, CloudServer, IoModel, ServeConfig};
 pub use edge::EdgeClient;

@@ -20,6 +20,8 @@
 //! | `reset=P`        | fail a write with `ConnectionReset` with prob. P    |
 //! | `stall-p=P`      | sleep before a write with probability P             |
 //! | `stall-ms=N`     | stall duration (default 200)                        |
+//! | `dl-corrupt=P`   | flip one byte per *read* with probability P         |
+//! | `dl-stall-p=P`   | sleep before a read with probability P              |
 //! | `blackout-at-ms=N` | blackout window start, relative to plan creation  |
 //! | `blackout-ms=N`  | blackout duration — writes are silently swallowed   |
 //! | `slow-shard=I`   | executor hook: shard I sleeps `slow-ms` per run      |
@@ -46,6 +48,11 @@ pub struct FaultPlan {
     pub reset_p: f64,
     pub stall_p: f64,
     pub stall: Duration,
+    /// Downlink faults, applied by the *reading* half of a wrapped
+    /// stream (the edge's reply path): the uplink keys above only ever
+    /// touch writes, so a downlink scenario needs its own knobs.
+    pub dl_corrupt_p: f64,
+    pub dl_stall_p: f64,
     pub blackout_at: Option<Duration>,
     pub blackout: Duration,
     pub slow_shard: Option<usize>,
@@ -66,6 +73,8 @@ impl FaultPlan {
         let mut reset_p = 0.0;
         let mut stall_p = 0.0;
         let mut stall_ms = 200u64;
+        let mut dl_corrupt_p = 0.0;
+        let mut dl_stall_p = 0.0;
         let mut blackout_at_ms: Option<u64> = None;
         let mut blackout_ms = 0u64;
         let mut slow_shard: Option<usize> = None;
@@ -90,6 +99,8 @@ impl FaultPlan {
                 "reset" => reset_p = prob()?,
                 "stall-p" => stall_p = prob()?,
                 "stall-ms" => stall_ms = int()?,
+                "dl-corrupt" => dl_corrupt_p = prob()?,
+                "dl-stall-p" => dl_stall_p = prob()?,
                 "blackout-at-ms" => blackout_at_ms = Some(int()?),
                 "blackout-ms" => blackout_ms = int()?,
                 "slow-shard" => slow_shard = Some(int()? as usize),
@@ -106,6 +117,8 @@ impl FaultPlan {
             reset_p,
             stall_p,
             stall: Duration::from_millis(stall_ms),
+            dl_corrupt_p,
+            dl_stall_p,
             blackout_at: blackout_at_ms.map(Duration::from_millis),
             blackout: Duration::from_millis(blackout_ms),
             slow_shard,
@@ -128,6 +141,8 @@ impl FaultPlan {
             || self.truncate_p > 0.0
             || self.reset_p > 0.0
             || self.stall_p > 0.0
+            || self.dl_corrupt_p > 0.0
+            || self.dl_stall_p > 0.0
             || self.blackout_at.is_some()
     }
 
@@ -182,10 +197,11 @@ impl FaultPlan {
     }
 }
 
-/// Wraps any `Read + Write` stream and applies the plan's stream faults
-/// to *writes* (the direction under test: edge uplink or cloud reply).
-/// Reads pass through untouched — read-side failures surface naturally
-/// as timeouts/EOF once writes are swallowed or the peer resets.
+/// Wraps any `Read + Write` stream and applies the plan's stream
+/// faults. Uplink keys (`corrupt`, `truncate`, `reset`, `stall-p`,
+/// blackouts) hit *writes*; the `dl-*` keys hit *reads* — wrapping the
+/// edge's reading half models a downlink that mangles the cloud's
+/// replies in flight, without also perturbing the uplink under test.
 pub struct FaultyStream<S> {
     inner: S,
     plan: Option<Arc<FaultPlan>>,
@@ -215,7 +231,21 @@ impl<S> FaultyStream<S> {
 impl<S: Read> Read for FaultyStream<S> {
     #[inline]
     fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
-        self.inner.read(buf)
+        let plan = match &self.plan {
+            None => return self.inner.read(buf),
+            Some(p) => p,
+        };
+        if plan.roll(plan.dl_stall_p) {
+            std::thread::sleep(plan.stall);
+        }
+        let n = self.inner.read(buf)?;
+        // Corrupt *after* the read: one byte of what actually arrived
+        // flips, exactly mirroring the uplink `corrupt` fault.
+        if n > 0 && plan.roll(plan.dl_corrupt_p) {
+            let at = plan.pick(n as u64) as usize;
+            buf[at] ^= 0xA5;
+        }
+        Ok(n)
     }
 }
 
@@ -316,6 +346,66 @@ mod tests {
         let clean: Vec<u8> = (0..32u8).flat_map(|i| [i; 8]).collect();
         assert_ne!(run(7), clean);
         assert_eq!(run(7).len(), clean.len());
+    }
+
+    #[test]
+    fn downlink_corruption_hits_reads_not_writes() {
+        let plan = FaultPlan::parse_arc("seed=5,dl-corrupt=1.0").unwrap();
+        assert!(plan.touches_stream(), "dl faults must keep the wrapper installed");
+        let clean: Vec<u8> = (0..64u8).collect();
+        let mut s = FaultyStream::new(std::io::Cursor::new(clean.clone()), Some(plan));
+        let mut got = vec![0u8; 64];
+        let mut off = 0;
+        while off < 64 {
+            let n = s.read(&mut got[off..]).unwrap();
+            assert!(n > 0);
+            off += n;
+        }
+        assert_ne!(got, clean, "dl-corrupt=1.0 must flip a byte per read");
+        // XOR 0xA5 twice restores: exactly one byte differs per read.
+        let diffs = got.iter().zip(&clean).filter(|(a, b)| a != b).count();
+        assert!(diffs >= 1);
+        for (a, b) in got.iter().zip(&clean) {
+            if a != b {
+                assert_eq!(*a ^ 0xA5, *b, "corruption must be the scripted XOR");
+            }
+        }
+    }
+
+    #[test]
+    fn downlink_corruption_is_deterministic() {
+        let run = |seed: u64| -> Vec<u8> {
+            let plan = FaultPlan::parse_arc(&format!("seed={seed},dl-corrupt=0.5")).unwrap();
+            let data: Vec<u8> = (0..128u8).collect();
+            let mut s = FaultyStream::new(std::io::Cursor::new(data), Some(plan));
+            let mut out = vec![0u8; 128];
+            let mut off = 0;
+            while off < 128 {
+                let n = s.read(&mut out[off..]).unwrap();
+                if n == 0 {
+                    break;
+                }
+                off += n;
+            }
+            out
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+
+    #[test]
+    fn uplink_only_plan_leaves_reads_alone() {
+        let plan = FaultPlan::parse_arc("seed=3,corrupt=1.0").unwrap();
+        let clean: Vec<u8> = (0..32u8).collect();
+        let mut s = FaultyStream::new(std::io::Cursor::new(clean.clone()), Some(plan));
+        let mut got = vec![0u8; 32];
+        let mut off = 0;
+        while off < 32 {
+            let n = s.read(&mut got[off..]).unwrap();
+            assert!(n > 0);
+            off += n;
+        }
+        assert_eq!(got, clean, "uplink corrupt must never touch the read path");
     }
 
     #[test]

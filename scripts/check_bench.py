@@ -6,7 +6,8 @@ Usage:
     check_bench.py <bench> <json> --compare <baseline> # + regression gate
     check_bench.py <bench> <json> --update-baselines <baseline>
 
-<bench> is one of: pipeline | adaptive | multiedge | crossmodel | c10k | chaos.
+<bench> is one of: pipeline | adaptive | multiedge | crossmodel | c10k |
+chaos | cache.
 
 The schema checks replicate (and replace) the inline validators that
 used to live in scripts/verify.sh; verify.sh keeps a grep fallback for
@@ -175,6 +176,33 @@ def check_c10k(doc):
             f"flood shed={fc['flood_shed_rate']:.2f}")
 
 
+def check_cache(doc):
+    arms = doc.get("arms")
+    assert isinstance(arms, list) and arms, "arms missing/empty"
+    by_mode = {a.get("mode"): a for a in arms if a.get("mode") is not None}
+    assert {"cache_off", "cache_on", "stampede"} <= set(by_mode), \
+        f"missing arms: {sorted(by_mode)}"
+    for mode in ("cache_off", "cache_on"):
+        assert by_mode[mode].get("req_per_sec", 0) > 0, f"{mode}: nothing served"
+    on = by_mode["cache_on"]
+    for k in ("hits", "misses", "inflight_coalesced", "evictions"):
+        assert k in on, f"cache_on: missing {k}"
+    st = by_mode["stampede"]
+    for k in ("rounds", "inflight_coalesced", "hits"):
+        assert k in st, f"stampede: missing {k}"
+    for k in ("zipf_speedup_8conn", "hit_rate", "coalesce_rate", "bytes_saved_frac"):
+        assert k in doc, f"missing {k}"
+    # The cache's raison d'être on Zipf traffic: repeats must actually
+    # hit, and the stampede arm must actually coalesce.
+    assert doc["hit_rate"] > 0, "Zipf traffic never hit the cache"
+    assert doc["coalesce_rate"] > 0, "the stampede never parked a follower"
+    assert doc.get("bit_identical") is True, \
+        "cached replies were not verified bit-identical to solo execution"
+    return (f"zipf speedup={doc['zipf_speedup_8conn']:.2f}x, "
+            f"hit rate={doc['hit_rate']:.3f}, "
+            f"coalesce rate={doc['coalesce_rate']:.3f}")
+
+
 def check_chaos(doc):
     for k in ("availability", "served_bit_identity", "recovery_ms",
               "corruption", "blackout", "quarantine"):
@@ -260,6 +288,13 @@ TRACKED = {
     "chaos": {
         "availability": (lambda d: float(d["availability"]), "higher"),
     },
+    # hit_rate / coalesce_rate are schema-asserted > 0 but not gated:
+    # both are fixed by the scripted Zipf schedule, so a ratio baseline
+    # would only re-test the schedule. The speedup is the claim.
+    "cache": {
+        "zipf_speedup_8conn":
+            (lambda d: float(d["zipf_speedup_8conn"]), "higher"),
+    },
 }
 
 SCHEMAS = {
@@ -269,6 +304,7 @@ SCHEMAS = {
     "crossmodel": check_crossmodel,
     "c10k": check_c10k,
     "chaos": check_chaos,
+    "cache": check_cache,
 }
 
 

@@ -5,7 +5,8 @@
 #   scripts/verify.sh --smoke          # full gate + every bench smoke
 #   scripts/verify.sh --smoke SUITE…   # ONLY the named bench smoke(s)
 #                                      # (pipeline|adaptive|multiedge|
-#                                      # crossmodel|c10k|chaos) — no build/
+#                                      # crossmodel|c10k|chaos|cache) — no
+#                                      # build/
 #                                      # test/
 #                                      # clippy pass; cargo bench builds
 #                                      # what it needs. This is what the
@@ -31,7 +32,7 @@ for arg in "$@"; do
   case "$arg" in
     --smoke) SMOKE=1 ;;
     --full) FULL=1 ;;
-    pipeline|adaptive|multiedge|crossmodel|c10k|chaos) SUITES+=("$arg") ;;
+    pipeline|adaptive|multiedge|crossmodel|c10k|chaos|cache) SUITES+=("$arg") ;;
     *) echo "verify.sh: unknown argument $arg" >&2; exit 2 ;;
   esac
 done
@@ -110,6 +111,10 @@ run_suite() {
       smoke_bench chaos chaos BENCH_chaos.json \
         '"availability"' '"served_bit_identity"' '"recovery_ms"' \
         '"quarantine"' ;;
+    cache)
+      smoke_bench logits_cache cache BENCH_cache.json \
+        '"zipf_speedup_8conn"' '"hit_rate"' '"coalesce_rate"' \
+        '"bit_identical"' ;;
     *) echo "verify.sh: unknown suite $1" >&2; exit 2 ;;
   esac
 }
@@ -140,7 +145,7 @@ echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
 if [ "$SMOKE" = 1 ] || [ "$FULL" = 1 ]; then
-  for s in pipeline adaptive multiedge crossmodel c10k chaos; do
+  for s in pipeline adaptive multiedge crossmodel c10k chaos cache; do
     run_suite "$s"
   done
 fi
