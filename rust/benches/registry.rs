@@ -1,0 +1,345 @@
+//! Registry scenario bench — artifact distribution and fleet hot-swap
+//! against a real `RegistryServer` (loopback TCP, every byte verified).
+//!
+//! Four arms, every reply checked inline:
+//!
+//! 1. **cold fetch** — fresh cache + client per iteration: manifest
+//!    signature check, then every chunk downloaded and hash-verified.
+//! 2. **warm fetch** — the same chunk set out of a warmed
+//!    [`ArtifactCache`]: no registry round-trips, just keyed lookups.
+//!    `warm_fetch_speedup` (cold p50 / warm p50) is the TRACKED
+//!    headline: it is the latency the cache removes from every edge
+//!    that re-plans onto a model it already holds.
+//! 3. **hot-swap under load** — closed-loop workers hammer
+//!    `HotSwap::model_for` while v1→v2 cuts over mid-run; every reply
+//!    must bit-match exactly one version (`bit_identical`), none may
+//!    drop (`dropped == 0`), and `cutover_gap_ms` measures the largest
+//!    completion gap across the swap against the steady-state p95 —
+//!    the "zero-downtime" number. Rollback then restores v1.
+//! 4. **tamper storm** — the registry serves flipped bytes in every
+//!    chunk and manifest; the edge must reject 100% of them
+//!    (`tamper_reject_rate == 1.0`, `executed_tampered == 0`).
+//!
+//! Emits `BENCH_registry.json`; `scripts/verify.sh --smoke registry`
+//! runs this briefly and gates the headline against `bench_baselines/`.
+//!
+//! Run: `cargo bench --bench registry` (`-- --smoke` for CI).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use jalad::data::gen::sample_image_shaped;
+use jalad::runtime::sim::{sim_manifest, sim_manifest_v2};
+use jalad::runtime::Executor;
+use jalad::server::fetch::ModelVersion;
+use jalad::server::{ArtifactCache, HotSwap, RegistryClient, RegistryServer};
+use jalad::util::bench::Bencher;
+use jalad::util::json::Json;
+use jalad::util::sign::SigKey;
+use jalad::util::stats;
+
+const MODEL: &str = "simnet";
+const FANIN: usize = 8;
+
+fn client(addr: std::net::SocketAddr, key: &SigKey, cache: &Arc<ArtifactCache>) -> RegistryClient {
+    RegistryClient::connect(addr, key.clone(), Arc::clone(cache)).expect("connect to registry")
+}
+
+fn logit_bits(exe: &Executor, shape: &[usize], id: usize) -> Vec<u32> {
+    let x = sample_image_shaped(id % 16, id, shape);
+    exe.run_full(MODEL, &x).unwrap().tensor.data().iter().map(|v| v.to_bits()).collect()
+}
+
+struct SwapResult {
+    requests: usize,
+    dropped: usize,
+    served_v1: usize,
+    served_v2: usize,
+    steady_p95_ms: f64,
+    cutover_gap_ms: f64,
+    rollback_ok: bool,
+}
+
+/// Closed-loop workers against a live `HotSwap`; cut-over fires midway.
+/// Every reply is bit-compared against both versions' references —
+/// matching exactly one is success, anything else is a drop.
+fn run_swap(
+    v1: Arc<ModelVersion>,
+    v2: Arc<ModelVersion>,
+    workers: usize,
+    reqs_per_worker: usize,
+) -> SwapResult {
+    let shape = sim_manifest().model(MODEL).unwrap().input_shape.clone();
+    let local_v1 = Executor::sim_with(sim_manifest(), FANIN);
+    let local_v2 = Executor::sim_with(sim_manifest_v2(), FANIN);
+    const SAMPLES: usize = 8;
+    let want_v1: Vec<Vec<u32>> = (0..SAMPLES).map(|i| logit_bits(&local_v1, &shape, i)).collect();
+    let want_v2: Vec<Vec<u32>> = (0..SAMPLES).map(|i| logit_bits(&local_v2, &shape, i)).collect();
+    assert!(
+        (0..SAMPLES).all(|i| want_v1[i] != want_v2[i]),
+        "versions must differ bit-wise or the swap proof is vacuous"
+    );
+
+    let swap = HotSwap::new(v1);
+    swap.stage(v2);
+    let served_v1 = Arc::new(AtomicUsize::new(0));
+    let served_v2 = Arc::new(AtomicUsize::new(0));
+    let dropped = Arc::new(AtomicUsize::new(0));
+    let stamps: Arc<Mutex<Vec<Duration>>> = Arc::new(Mutex::new(Vec::new()));
+    // Two barriers pin the cut-over to the midpoint of every worker's
+    // run: the swap happens strictly after each worker's first half and
+    // strictly before its second, so both versions always carry live
+    // traffic regardless of how fast the sim executes.
+    let before_cut = Arc::new(Barrier::new(workers + 1));
+    let after_cut = Arc::new(Barrier::new(workers + 1));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..workers)
+        .map(|w| {
+            let swap = Arc::clone(&swap);
+            let shape = shape.clone();
+            let (want_v1, want_v2) = (want_v1.clone(), want_v2.clone());
+            let (served_v1, served_v2, dropped) =
+                (Arc::clone(&served_v1), Arc::clone(&served_v2), Arc::clone(&dropped));
+            let stamps = Arc::clone(&stamps);
+            let (before_cut, after_cut) = (Arc::clone(&before_cut), Arc::clone(&after_cut));
+            std::thread::spawn(move || {
+                for r in 0..reqs_per_worker {
+                    if r == reqs_per_worker / 2 {
+                        before_cut.wait();
+                        after_cut.wait();
+                    }
+                    let id = (w + r) % SAMPLES;
+                    let mv = swap.model_for(None);
+                    let x = sample_image_shaped(id % 16, id, &shape);
+                    let ok = match mv.exe.run_full(MODEL, &x) {
+                        Ok(out) => {
+                            let bits: Vec<u32> =
+                                out.tensor.data().iter().map(|v| v.to_bits()).collect();
+                            let (want, other) = if mv.version == "v1" {
+                                (&want_v1[id], &want_v2[id])
+                            } else {
+                                (&want_v2[id], &want_v1[id])
+                            };
+                            &bits == want && &bits != other
+                        }
+                        Err(_) => false,
+                    };
+                    if ok {
+                        if mv.version == "v1" {
+                            served_v1.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            served_v2.fetch_add(1, Ordering::Relaxed);
+                        }
+                    } else {
+                        dropped.fetch_add(1, Ordering::Relaxed);
+                    }
+                    stamps.lock().unwrap().push(t0.elapsed());
+                }
+            })
+        })
+        .collect();
+
+    // Cut over at the midpoint, between the barriers.
+    before_cut.wait();
+    let cut_at = t0.elapsed();
+    swap.cut_over("v2").expect("cut over to staged v2");
+    after_cut.wait();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let rollback_ok = swap.rollback().is_ok() && swap.active_version() == "v1";
+
+    // Gap analysis: inter-completion gaps, globally ordered. The gap
+    // spanning the cut-over instant is the service interruption the
+    // swap caused (if any); steady p95 is the comparison floor.
+    let mut at: Vec<Duration> = std::mem::take(&mut *stamps.lock().unwrap());
+    at.sort();
+    let gaps_ms: Vec<f64> =
+        at.windows(2).map(|w| (w[1] - w[0]).as_secs_f64() * 1e3).collect();
+    let steady_p95_ms = if gaps_ms.is_empty() { 0.0 } else { stats::percentile(&gaps_ms, 95.0) };
+    let cutover_gap_ms = at
+        .windows(2)
+        .find(|w| w[0] <= cut_at && cut_at <= w[1])
+        .map(|w| (w[1] - w[0]).as_secs_f64() * 1e3)
+        .unwrap_or(0.0);
+
+    SwapResult {
+        requests: workers * reqs_per_worker,
+        dropped: dropped.load(Ordering::Relaxed),
+        served_v1: served_v1.load(Ordering::Relaxed),
+        served_v2: served_v2.load(Ordering::Relaxed),
+        steady_p95_ms,
+        cutover_gap_ms,
+        rollback_ok,
+    }
+}
+
+fn main() {
+    let smoke = Bencher::smoke();
+    let key = SigKey::from_seed(424242);
+    let reg = RegistryServer::new(key.clone());
+    reg.publish("v1", &sim_manifest()).unwrap();
+    reg.publish("v2", &sim_manifest_v2()).unwrap();
+    reg.activate("v1").unwrap();
+    let (addr, handle) = Arc::clone(&reg).spawn("127.0.0.1:0").unwrap();
+
+    // Chunk inventory (off one untimed probe fetch).
+    let probe_cache = ArtifactCache::new(64 << 20);
+    let mut probe = client(addr, &key, &probe_cache);
+    let chunks = probe.fetch_manifest(None).unwrap().chunks;
+
+    // --- Arm 1: cold fetch (fresh cache + client each iteration) ---
+    let cold_iters = if smoke { 5 } else { 30 };
+    let mut cold_ms = Vec::with_capacity(cold_iters);
+    for _ in 0..cold_iters {
+        let cache = ArtifactCache::new(64 << 20);
+        let mut rc = client(addr, &key, &cache);
+        let t0 = Instant::now();
+        let fetched = rc.fetch_manifest(None).unwrap();
+        for c in &fetched.chunks {
+            let data = rc.fetch_chunk(c.hash).unwrap();
+            assert_eq!(data.len(), c.bytes);
+        }
+        cold_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    // --- Arm 2: warm fetch (shared warmed cache, no round-trips) ---
+    let warm_cache = ArtifactCache::new(64 << 20);
+    let mut warm_client = client(addr, &key, &warm_cache);
+    for c in &chunks {
+        warm_client.fetch_chunk(c.hash).unwrap(); // warm it
+    }
+    let warm_iters = if smoke { 20 } else { 200 };
+    let mut warm_ms = Vec::with_capacity(warm_iters);
+    for _ in 0..warm_iters {
+        let t0 = Instant::now();
+        for c in &chunks {
+            let data = warm_client.fetch_chunk(c.hash).unwrap();
+            assert_eq!(data.len(), c.bytes);
+        }
+        warm_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let warm_stats = warm_cache.stats();
+    let hit_rate =
+        warm_stats.hits as f64 / (warm_stats.hits + warm_stats.downloads).max(1) as f64;
+
+    let cold_p50 = stats::percentile(&cold_ms, 50.0);
+    let cold_p95 = stats::percentile(&cold_ms, 95.0);
+    let warm_p50 = stats::percentile(&warm_ms, 50.0);
+    let warm_p95 = stats::percentile(&warm_ms, 95.0);
+    let warm_fetch_speedup = cold_p50 / warm_p50.max(1e-9);
+    println!(
+        "registry/fetch: cold p50 {cold_p50:.3} ms, warm p50 {warm_p50:.4} ms \
+         -> {warm_fetch_speedup:.1}x (hit rate {hit_rate:.3})"
+    );
+
+    // --- Arm 3: hot-swap under live traffic ---
+    let swap_cache = ArtifactCache::new(64 << 20);
+    let mut swap_client = client(addr, &key, &swap_cache);
+    let v1 = swap_client.fetch_model(Some("v1"), FANIN).unwrap();
+    let v2 = swap_client.fetch_model(Some("v2"), FANIN).unwrap();
+    let sw = run_swap(v1, v2, if smoke { 2 } else { 4 }, if smoke { 60 } else { 400 });
+    assert_eq!(sw.dropped, 0, "hot-swap dropped or mis-served {} request(s)", sw.dropped);
+    assert!(sw.served_v2 > 0, "cut-over never took effect");
+    assert!(sw.rollback_ok, "rollback must restore v1");
+    println!(
+        "registry/swap: {} reqs, v1 {} / v2 {}, dropped {}, cutover gap {:.3} ms \
+         (steady p95 {:.3} ms), rollback ok",
+        sw.requests, sw.served_v1, sw.served_v2, sw.dropped, sw.cutover_gap_ms, sw.steady_p95_ms
+    );
+
+    // --- Arm 4: tamper storm ---
+    let mut attempts = 0usize;
+    let mut rejected = 0usize;
+    let mut executed_tampered = 0usize;
+    reg.set_corrupt_chunks(true);
+    let tamper_cache = ArtifactCache::new(64 << 20);
+    let mut tamper_client = client(addr, &key, &tamper_cache);
+    let rounds = if smoke { 2 } else { 10 };
+    for _ in 0..rounds {
+        for c in &chunks {
+            attempts += 1;
+            match tamper_client.fetch_chunk(c.hash) {
+                Err(_) => rejected += 1,
+                Ok(_) => executed_tampered += 1,
+            }
+        }
+    }
+    reg.set_corrupt_chunks(false);
+    reg.set_corrupt_manifests(true);
+    for _ in 0..rounds {
+        attempts += 1;
+        match tamper_client.fetch_manifest(None) {
+            Err(_) => rejected += 1,
+            Ok(_) => executed_tampered += 1,
+        }
+    }
+    reg.set_corrupt_manifests(false);
+    let tamper_reject_rate = rejected as f64 / attempts.max(1) as f64;
+    assert_eq!(executed_tampered, 0, "a tampered artifact or manifest was accepted");
+    assert_eq!(tamper_cache.entries(), 0, "tampered bytes leaked into the cache");
+    println!(
+        "registry/tamper: {attempts} tampered serves, {rejected} rejected \
+         (rate {tamper_reject_rate:.3}), 0 executed"
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("registry")),
+        ("smoke", Json::Bool(smoke)),
+        ("versions", Json::num(2.0)),
+        ("chunks", Json::num(chunks.len() as f64)),
+        (
+            "cold",
+            Json::obj(vec![
+                ("iters", Json::num(cold_iters as f64)),
+                ("fetch_ms_p50", Json::num(cold_p50)),
+                ("fetch_ms_p95", Json::num(cold_p95)),
+            ]),
+        ),
+        (
+            "warm",
+            Json::obj(vec![
+                ("iters", Json::num(warm_iters as f64)),
+                ("fetch_ms_p50", Json::num(warm_p50)),
+                ("fetch_ms_p95", Json::num(warm_p95)),
+                ("hit_rate", Json::num(hit_rate)),
+            ]),
+        ),
+        ("warm_fetch_speedup", Json::num(warm_fetch_speedup)),
+        (
+            "swap",
+            Json::obj(vec![
+                ("requests", Json::num(sw.requests as f64)),
+                ("dropped", Json::num(sw.dropped as f64)),
+                ("served_v1", Json::num(sw.served_v1 as f64)),
+                ("served_v2", Json::num(sw.served_v2 as f64)),
+                ("cutover_gap_ms", Json::num(sw.cutover_gap_ms)),
+                ("steady_p95_ms", Json::num(sw.steady_p95_ms)),
+                // Every reply was bit-compared against both versions
+                // inline; a mismatch counted as dropped and the
+                // assert above already failed the bench.
+                ("bit_identical", Json::Bool(true)),
+                ("rollback_ok", Json::Bool(sw.rollback_ok)),
+            ]),
+        ),
+        (
+            "tamper",
+            Json::obj(vec![
+                ("attempts", Json::num(attempts as f64)),
+                ("rejected", Json::num(rejected as f64)),
+                ("tamper_reject_rate", Json::num(tamper_reject_rate)),
+                ("executed_tampered", Json::num(executed_tampered as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_registry.json", doc.to_pretty()).expect("write BENCH_registry.json");
+    println!(
+        "wrote BENCH_registry.json (warm fetch speedup {warm_fetch_speedup:.1}x, \
+         cutover gap {:.3} ms, tamper reject rate {tamper_reject_rate:.3})",
+        sw.cutover_gap_ms
+    );
+
+    RegistryServer::request_shutdown(addr);
+    handle.join().ok();
+}

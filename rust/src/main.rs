@@ -4,7 +4,9 @@
 //! jalad calibrate --model vgg16            # build A_i(c)/S_i(c) tables
 //! jalad decide --model vgg16 --bw 300000   # print the ILP plan
 //! jalad serve-cloud --addr 127.0.0.1:7878  # run the cloud server
+//! jalad serve-registry --addr 127.0.0.1:7979   # signed-manifest model registry
 //! jalad infer --model resnet50 --bw 125000 --requests 20
+//! jalad infer --connect --sim --registry 127.0.0.1:7979   # model fetched+verified from the registry
 //! jalad profile --model vgg16              # per-stage wall clocks
 //! ```
 
@@ -111,6 +113,26 @@ fn main() {
         "deterministic fault spec, e.g. seed=7,corrupt=0.05,stall-p=0.1,stall-ms=200 (see util::fault)",
     )
     .opt(
+        "registry",
+        "",
+        "infer --connect --sim: fetch the model from this registry address instead of the baked-in manifest",
+    )
+    .opt(
+        "pin-version",
+        "",
+        "infer --connect --sim: pin to this registry version instead of the fleet active",
+    )
+    .opt(
+        "artifact-cache-bytes",
+        "67108864",
+        "edge artifact cache budget, bytes (hash-keyed, LRU)",
+    )
+    .opt(
+        "sign-seed",
+        "42",
+        "serve-registry / --registry: shared manifest-signing secret seed",
+    )
+    .opt(
         "request-timeout-ms",
         "30000",
         "infer --connect: per-request transport deadline, ms (0 = none); overruns feed the breaker",
@@ -143,7 +165,7 @@ fn main() {
 
     let command = args.positional().first().cloned().unwrap_or_else(|| {
         eprintln!("{}", args.usage());
-        eprintln!("COMMANDS: calibrate | decide | serve-cloud | infer | profile");
+        eprintln!("COMMANDS: calibrate | decide | serve-cloud | serve-registry | infer | profile");
         std::process::exit(2);
     });
 
@@ -303,6 +325,25 @@ fn run(command: &str, args: &Args) -> Result<()> {
             );
             handle.join().ok();
         }
+        "serve-registry" => {
+            // Stand up the model-distribution control plane with the
+            // two sim versions published (v1 active, v2 staged for
+            // rollout) — enough to drive a full fetch/verify/hot-swap
+            // cycle against `infer --connect --sim --registry`.
+            let key = jalad::util::sign::SigKey::from_seed(args.get_usize("sign-seed") as u64);
+            let reg = jalad::server::RegistryServer::new(key);
+            reg.publish("v1", &jalad::runtime::sim::sim_manifest())?;
+            reg.publish("v2", &jalad::runtime::sim::sim_manifest_v2())?;
+            reg.activate("v1")?;
+            let (addr, handle) = Arc::clone(&reg).spawn(args.get("addr"))?;
+            println!(
+                "model registry on {addr}: versions {:?}, active {:?} \
+                 (a Shutdown frame stops it)",
+                reg.versions(),
+                reg.active_version().unwrap_or_default()
+            );
+            handle.join().ok();
+        }
         "infer" if args.get_flag("connect") => {
             // Remote mode: a real EdgeClient over TCP against --addr,
             // with an optional explicit tenant identity — the client
@@ -313,7 +354,31 @@ fn run(command: &str, args: &Args) -> Result<()> {
                 .parse()
                 .map_err(|e| anyhow!("--addr {}: {e}", args.get("addr")))?;
             let sim = args.get_flag("sim");
-            let exe = if sim {
+            let exe = if sim && !args.get("registry").is_empty() {
+                // Registry mode: the manifest arrives signed, every
+                // chunk arrives content-verified, and only then does an
+                // executor exist — nothing unverified can run.
+                let cache = jalad::server::ArtifactCache::new(
+                    args.get_usize("artifact-cache-bytes").max(1),
+                );
+                let key =
+                    jalad::util::sign::SigKey::from_seed(args.get_usize("sign-seed") as u64);
+                let mut rc =
+                    jalad::server::RegistryClient::connect(args.get("registry"), key, cache)?;
+                let pin = args.get("pin-version");
+                let fetched =
+                    rc.fetch_manifest(if pin.is_empty() { None } else { Some(pin) })?;
+                for c in &fetched.chunks {
+                    rc.fetch_chunk(c.hash)?;
+                }
+                println!(
+                    "registry: verified manifest {:?} and {} chunk(s) ({} bytes cached)",
+                    fetched.version,
+                    fetched.chunks.len(),
+                    rc.cache().bytes()
+                );
+                Executor::sim_with(fetched.manifest, 8)
+            } else if sim {
                 Executor::sim_with(jalad::runtime::sim::sim_manifest(), 8)
             } else {
                 Executor::new(Manifest::load(&dir)?)?
@@ -405,7 +470,7 @@ fn run(command: &str, args: &Args) -> Result<()> {
         }
         other => {
             return Err(anyhow!(
-                "unknown command {other:?} (calibrate|decide|serve-cloud|infer|profile)"
+                "unknown command {other:?} (calibrate|decide|serve-cloud|serve-registry|infer|profile)"
             ))
         }
     }

@@ -145,7 +145,19 @@ impl Manifest {
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
         let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        Self::from_json(dir, &j)
+    }
 
+    /// Assemble a [`Manifest`] from an already-parsed JSON document.
+    ///
+    /// This is the same structural contract `manifest.json` follows,
+    /// factored out of [`Manifest::load`] so a manifest that arrived
+    /// over the wire (the registry path, where the bytes were
+    /// signature-verified first) assembles through the identical code
+    /// as one read off disk. `dir` is where relative `artifact` file
+    /// names resolve; for registry-assembled manifests it names the
+    /// artifact cache root rather than a build output.
+    pub fn from_json(dir: PathBuf, j: &Json) -> Result<Self> {
         let mut models = Vec::new();
         for m in j.get("models").and_then(Json::as_arr).unwrap_or(&[]) {
             let mut stages = Vec::new();

@@ -355,6 +355,37 @@ pub fn sim_manifest() -> Manifest {
     }
 }
 
+/// The "retrained" successor to [`sim_manifest`] for hot-swap tests:
+/// the *same* `simnet` serving contract (input `[1,16,16,3]`, 16
+/// classes) with wider internal stages. The sim backend's stage kernel
+/// is a pure function of stage index and flat in/out element counts,
+/// so widening the hidden shapes is what makes v2's logits genuinely
+/// differ bit-wise from v1's — renaming stages alone would not (and a
+/// swap test built on renames would assert nothing).
+pub fn sim_manifest_v2() -> Manifest {
+    let mut quant = std::collections::BTreeMap::new();
+    let mut dequant = std::collections::BTreeMap::new();
+    let model = sim_model(
+        "simnet",
+        &[
+            ("conv1", vec![1, 16, 16, 3], vec![1, 16, 16, 24]),
+            ("conv2", vec![1, 16, 16, 24], vec![1, 8, 8, 48]),
+            ("conv3", vec![1, 8, 8, 48], vec![1, 4, 4, 96]),
+            ("head", vec![1, 4, 4, 96], vec![1, 16]),
+        ],
+        &mut quant,
+        &mut dequant,
+    );
+    Manifest {
+        dir: PathBuf::from("sim"),
+        c_max: 8,
+        num_classes: 16,
+        source_digest: "sim-backend-v2".to_string(),
+        models: vec![model],
+        codecs: CodecArtifacts { quant, dequant },
+    }
+}
+
 /// A synthetic **mixed-fleet** manifest: `fleet0..fleet{n-1}` are
 /// heterogeneous edge halves (each stage-1 input geometry differs)
 /// sharing one cloud tail — their tails from stage 2 onward have

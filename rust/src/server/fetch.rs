@@ -1,0 +1,739 @@
+//! Edge-side registry consumption: hash-keyed artifact cache with
+//! in-flight dedup, verify-on-receipt chunk fetch, and per-request
+//! atomic hot-swap between model versions.
+//!
+//! Trust boundary: everything that arrives from the registry is
+//! checked *before* it can influence execution. The manifest's
+//! detached signature is verified over the exact wire bytes prior to
+//! JSON parsing (`util::sign`); every chunk body is re-hashed while
+//! being copied into its owned buffer ([`HashingReader`] — the digest
+//! rides the copy, there is no unhashed path into the cache) and must
+//! equal the *requested* [`Hash128`], which itself came out of a
+//! verified manifest. A mismatch anywhere is counted, surfaced, and
+//! the bytes are dropped — never cached, never executed.
+//!
+//! [`ArtifactCache`] reuses the in-flight-dedup idiom from
+//! `server::cache` (`lead_or_wait` / guard / publish-before-release):
+//! when N fetchers want the same chunk, one downloads and N−1 park on
+//! a condvar and reuse the published entry — the registry sees exactly
+//! one request. Unlike the logits cache, keys here are already content
+//! hashes, so the store is a flat LRU (byte-bounded, stamp-based)
+//! rather than a segmented one: an edge holds tens of artifacts, not
+//! hundreds of thousands of replies, and an O(n) eviction scan over
+//! that is noise.
+//!
+//! [`HotSwap`] is the fleet-rollout contract: versions *stage* (warm,
+//! invisible) behind the active one, [`HotSwap::model_for`] hands out
+//! one `Arc<ModelVersion>` that the caller holds for the whole request
+//! — so a cut-over mid-request cannot mix versions within a reply —
+//! and per-tenant pins override the fleet default. Applying a
+//! [`KIND_VERSION`] announce can only *select among already-staged,
+//! already-verified versions*, which is why the announce frame itself
+//! needs no signature: an attacker who forges one can at worst pick a
+//! version the operator published and the edge verified.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{BufReader, Read};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::executor::{Executor, SharedExecutor};
+use crate::util::hash::{Hash128, HashingReader};
+use crate::util::json::Json;
+use crate::util::sign::{SigKey, Signature};
+
+use super::proto::{
+    self, RecvFrame, KIND_CHUNK, KIND_CHUNK_REQ, KIND_ERROR, KIND_MANIFEST, KIND_MANIFEST_REQ,
+    KIND_SUBSCRIBE, KIND_VERSION,
+};
+
+/// Accounting charge per cache entry beyond the payload itself (key,
+/// stamp, map slot) — same order as `server::cache`'s constant.
+const ENTRY_OVERHEAD: usize = 96;
+
+struct Entry {
+    data: Arc<Vec<u8>>,
+    /// Lazy LRU stamp: bumped from a shared clock on every hit.
+    stamp: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<Hash128, Entry>,
+    clock: u64,
+    bytes: usize,
+}
+
+/// Counter snapshot (see [`ArtifactCache::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArtifactCacheStats {
+    pub hits: u64,
+    pub downloads: u64,
+    pub coalesced: u64,
+    pub evictions: u64,
+    pub rejected_oversize: u64,
+    pub bytes: u64,
+    pub entries: u64,
+}
+
+/// Byte-bounded, hash-keyed LRU store for artifact chunks, shared by
+/// every [`RegistryClient`] on an edge.
+pub struct ArtifactCache {
+    budget: usize,
+    inner: Mutex<Inner>,
+    inflight: Mutex<HashSet<Hash128>>,
+    cv: Condvar,
+    hits: AtomicU64,
+    downloads: AtomicU64,
+    coalesced: AtomicU64,
+    evictions: AtomicU64,
+    rejected_oversize: AtomicU64,
+}
+
+/// Held by the one fetcher that owns an in-flight download. Dropping
+/// it — on success *after* [`ArtifactCache::publish`] stored the
+/// entry, or on any error/panic path — releases the key and wakes
+/// every parked follower (so a failed lead never strands them; one
+/// follower becomes the new lead).
+pub struct InflightGuard<'a> {
+    cache: &'a ArtifactCache,
+    key: Hash128,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.cache.inflight.lock().unwrap().remove(&self.key);
+        self.cache.cv.notify_all();
+    }
+}
+
+pub enum LeadOrWait<'a> {
+    /// You fetch; everyone else is parked behind you.
+    Lead(InflightGuard<'a>),
+    /// A lead finished (or failed) while you waited — re-check the
+    /// cache and retry.
+    Waited,
+}
+
+impl ArtifactCache {
+    pub fn new(budget_bytes: usize) -> Arc<Self> {
+        Arc::new(Self {
+            budget: budget_bytes,
+            inner: Mutex::new(Inner::default()),
+            inflight: Mutex::new(HashSet::new()),
+            cv: Condvar::new(),
+            hits: AtomicU64::new(0),
+            downloads: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            rejected_oversize: AtomicU64::new(0),
+        })
+    }
+
+    pub fn get(&self, key: Hash128) -> Option<Arc<Vec<u8>>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        let entry = inner.map.get_mut(&key)?;
+        entry.stamp = clock;
+        let data = Arc::clone(&entry.data);
+        drop(inner);
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(data)
+    }
+
+    /// Claim the in-flight slot for `key`, or park until the current
+    /// holder releases it. Callers loop `get → lead_or_wait → (Lead:
+    /// download + publish | Waited: continue)`.
+    pub fn lead_or_wait(&self, key: Hash128) -> LeadOrWait<'_> {
+        let mut inflight = self.inflight.lock().unwrap();
+        if inflight.insert(key) {
+            return LeadOrWait::Lead(InflightGuard { cache: self, key });
+        }
+        self.coalesced.fetch_add(1, Ordering::Relaxed);
+        while inflight.contains(&key) {
+            inflight = self.cv.wait(inflight).unwrap();
+        }
+        LeadOrWait::Waited
+    }
+
+    /// Store a verified download and release the lead. The entry is
+    /// inserted *before* the guard drops, so a follower woken by the
+    /// release finds it on re-check. An entry that alone exceeds the
+    /// whole budget is handed back uncached (the byte bound is an
+    /// invariant, not a soft target).
+    pub fn publish(&self, lead: InflightGuard<'_>, data: Vec<u8>) -> Arc<Vec<u8>> {
+        let key = lead.key;
+        let data = Arc::new(data);
+        let cost = data.len() + ENTRY_OVERHEAD;
+        self.downloads.fetch_add(1, Ordering::Relaxed);
+        if cost > self.budget {
+            self.rejected_oversize.fetch_add(1, Ordering::Relaxed);
+            return data; // guard drops here: key released, waiters retry
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let stamp = inner.clock;
+        if let Some(old) = inner.map.insert(key, Entry { data: Arc::clone(&data), stamp }) {
+            // Benign double-publish (lead raced a direct insert): the
+            // bytes are content-addressed, so old == new.
+            inner.bytes -= old.data.len() + ENTRY_OVERHEAD;
+        }
+        inner.bytes += cost;
+        while inner.bytes > self.budget {
+            // The just-inserted entry carries the freshest stamp, so
+            // the min-scan can never pick it while others remain.
+            let victim = *inner.map.iter().min_by_key(|(_, e)| e.stamp).unwrap().0;
+            let gone = inner.map.remove(&victim).unwrap();
+            inner.bytes -= gone.data.len() + ENTRY_OVERHEAD;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        drop(inner);
+        drop(lead);
+        data
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn entries(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn stats(&self) -> ArtifactCacheStats {
+        let (bytes, entries) = {
+            let inner = self.inner.lock().unwrap();
+            (inner.bytes as u64, inner.map.len() as u64)
+        };
+        ArtifactCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            downloads: self.downloads.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            rejected_oversize: self.rejected_oversize.load(Ordering::Relaxed),
+            bytes,
+            entries,
+        }
+    }
+}
+
+/// One chunk a verified manifest says exists: where it belongs and
+/// what its content address is.
+#[derive(Debug, Clone)]
+pub struct ChunkRef {
+    pub model: String,
+    pub stage: usize,
+    pub hash: Hash128,
+    pub bytes: usize,
+}
+
+/// A signature-verified manifest, assembled and ready to fetch.
+pub struct FetchedManifest {
+    pub version: String,
+    pub manifest: Manifest,
+    pub chunks: Vec<ChunkRef>,
+}
+
+/// Counter snapshot (see [`RegistryClient::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    pub manifests_verified: u64,
+    pub manifest_rejects: u64,
+    pub chunks_verified: u64,
+    pub chunk_rejects: u64,
+}
+
+fn hash_from_hex(s: &str) -> Option<Hash128> {
+    if s.len() != 32 {
+        return None;
+    }
+    let hi = u64::from_str_radix(&s[..16], 16).ok()?;
+    let lo = u64::from_str_radix(&s[16..], 16).ok()?;
+    Some(Hash128 { hi, lo })
+}
+
+/// One edge's connection to the registry. Request/reply over the frame
+/// protocol; all verification happens here, on this side of the trust
+/// boundary.
+pub struct RegistryClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    key: SigKey,
+    cache: Arc<ArtifactCache>,
+    buf: Vec<u8>,
+    manifests_verified: u64,
+    manifest_rejects: u64,
+    chunks_verified: u64,
+    chunk_rejects: u64,
+}
+
+impl RegistryClient {
+    pub fn connect(addr: impl ToSocketAddrs, key: SigKey, cache: Arc<ArtifactCache>) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connecting to registry")?;
+        let writer = stream.try_clone()?;
+        Ok(Self {
+            reader: BufReader::new(stream),
+            writer,
+            key,
+            cache,
+            buf: Vec::new(),
+            manifests_verified: 0,
+            manifest_rejects: 0,
+            chunks_verified: 0,
+            chunk_rejects: 0,
+        })
+    }
+
+    pub fn stats(&self) -> ClientStats {
+        ClientStats {
+            manifests_verified: self.manifests_verified,
+            manifest_rejects: self.manifest_rejects,
+            chunks_verified: self.chunks_verified,
+            chunk_rejects: self.chunk_rejects,
+        }
+    }
+
+    pub fn cache(&self) -> &Arc<ArtifactCache> {
+        &self.cache
+    }
+
+    fn recv(&mut self) -> Result<u8> {
+        match proto::read_frame_into(&mut self.reader, &mut self.buf)? {
+            RecvFrame::Data(k) => Ok(k),
+            RecvFrame::Malformed { reason, .. } => {
+                Err(anyhow!("registry sent a malformed frame: {reason}"))
+            }
+            RecvFrame::Eof => Err(anyhow!("registry closed the connection")),
+        }
+    }
+
+    /// Fetch + verify the manifest for `version` (`None` = whatever is
+    /// active fleet-wide). The signature is checked over the exact
+    /// wire bytes **before** any parsing; a bad tag rejects the whole
+    /// document.
+    pub fn fetch_manifest(&mut self, version: Option<&str>) -> Result<FetchedManifest> {
+        proto::write_frame_vec(
+            &mut self.writer,
+            KIND_MANIFEST_REQ,
+            &[version.unwrap_or("").as_bytes()],
+        )?;
+        let kind = self.recv()?;
+        if kind == KIND_ERROR {
+            return Err(anyhow!("registry: {}", String::from_utf8_lossy(&self.buf)));
+        }
+        if kind != KIND_MANIFEST {
+            return Err(anyhow!("expected manifest frame, got kind {kind}"));
+        }
+        let sig = Signature::from_wire(&self.buf)
+            .ok_or_else(|| anyhow!("manifest frame shorter than its signature"))?;
+        let verified = self.key.verify(&self.buf[Signature::WIRE_LEN..], sig);
+        if !verified {
+            self.manifest_rejects += 1;
+            return Err(anyhow!(
+                "manifest signature verification failed — refusing to parse or execute"
+            ));
+        }
+        let doc = {
+            let text = std::str::from_utf8(&self.buf[Signature::WIRE_LEN..])
+                .context("signed manifest is not UTF-8")?;
+            Json::parse(text).map_err(|e| anyhow!("signed manifest JSON: {e}"))?
+        };
+        let version = doc
+            .get("version")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("signed manifest has no version field"))?
+            .to_string();
+        let manifest = Manifest::from_json(PathBuf::from("registry"), &doc)?;
+        let mut chunks = Vec::new();
+        for m in doc.get("models").and_then(Json::as_arr).unwrap_or(&[]) {
+            let model = m.get("name").and_then(Json::as_str).unwrap_or_default().to_string();
+            for s in m.get("stages").and_then(Json::as_arr).unwrap_or(&[]) {
+                let hex = s
+                    .get("chunk")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("manifest stage missing chunk hash"))?;
+                let hash = hash_from_hex(hex)
+                    .ok_or_else(|| anyhow!("manifest chunk hash {hex:?} is not 32 hex chars"))?;
+                chunks.push(ChunkRef {
+                    model: model.clone(),
+                    stage: s.get("index").and_then(Json::as_u64).unwrap_or(0) as usize,
+                    hash,
+                    bytes: s.get("chunk_bytes").and_then(Json::as_u64).unwrap_or(0) as usize,
+                });
+            }
+        }
+        self.manifests_verified += 1;
+        Ok(FetchedManifest { version, manifest, chunks })
+    }
+
+    /// Fetch one chunk by content address: cache-first, in-flight
+    /// deduped, hash-verified on receipt.
+    pub fn fetch_chunk(&mut self, hash: Hash128) -> Result<Arc<Vec<u8>>> {
+        loop {
+            if let Some(data) = self.cache.get(hash) {
+                return Ok(data);
+            }
+            let cache = Arc::clone(&self.cache);
+            match cache.lead_or_wait(hash) {
+                LeadOrWait::Lead(guard) => {
+                    // An error drops `guard` → parked followers wake,
+                    // re-miss, and one of them becomes the new lead.
+                    let data = self.download_verified(hash)?;
+                    return Ok(cache.publish(guard, data));
+                }
+                LeadOrWait::Waited => continue,
+            }
+        }
+    }
+
+    fn download_verified(&mut self, hash: Hash128) -> Result<Vec<u8>> {
+        proto::write_frame_vec(
+            &mut self.writer,
+            KIND_CHUNK_REQ,
+            &[&hash.hi.to_le_bytes(), &hash.lo.to_le_bytes()],
+        )?;
+        let kind = self.recv()?;
+        if kind == KIND_ERROR {
+            return Err(anyhow!("registry: {}", String::from_utf8_lossy(&self.buf)));
+        }
+        if kind != KIND_CHUNK {
+            return Err(anyhow!("expected chunk frame, got kind {kind}"));
+        }
+        if self.buf.len() < 16 {
+            self.chunk_rejects += 1;
+            return Err(anyhow!("chunk frame shorter than its hash header"));
+        }
+        // The body is copied into its owned buffer *through* the
+        // hashing reader, so the digest covers exactly the bytes kept.
+        let (data, digest) = {
+            let mut hr = HashingReader::new(std::io::Cursor::new(&self.buf[16..]));
+            let mut data = Vec::with_capacity(self.buf.len() - 16);
+            hr.read_to_end(&mut data)?;
+            (data, hr.digest())
+        };
+        // Verification is against the hash *we asked for* (out of the
+        // signed manifest) — the frame's echoed header is routing, not
+        // trust, and a server lying in either place is caught here.
+        if digest != hash {
+            self.chunk_rejects += 1;
+            return Err(anyhow!(
+                "chunk {} failed content verification (got {}) — dropped, not cached",
+                hash.to_hex(),
+                digest.to_hex()
+            ));
+        }
+        self.chunks_verified += 1;
+        Ok(data)
+    }
+
+    /// Fetch, verify, and assemble a complete executable model
+    /// version: manifest first (signature gate), then every chunk it
+    /// references (hash gate), then an executor over the assembled
+    /// [`Manifest`] — the same structure a local artifact dir yields.
+    pub fn fetch_model(&mut self, version: Option<&str>, fanin: usize) -> Result<Arc<ModelVersion>> {
+        let fetched = self.fetch_manifest(version)?;
+        for c in &fetched.chunks {
+            let data = self.fetch_chunk(c.hash)?;
+            if data.len() != c.bytes {
+                return Err(anyhow!(
+                    "chunk {} for {}/stage{}: manifest says {} bytes, got {}",
+                    c.hash.to_hex(),
+                    c.model,
+                    c.stage,
+                    c.bytes,
+                    data.len()
+                ));
+            }
+        }
+        let exe = SharedExecutor::from_executor(Executor::sim_with(fetched.manifest.clone(), fanin));
+        Ok(Arc::new(ModelVersion { version: fetched.version, manifest: fetched.manifest, exe }))
+    }
+}
+
+/// A fully fetched, verified, executable model version.
+pub struct ModelVersion {
+    pub version: String,
+    pub manifest: Manifest,
+    pub exe: SharedExecutor,
+}
+
+struct SwapState {
+    active: String,
+    previous: Option<String>,
+}
+
+/// Counter snapshot (see [`HotSwap::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SwapStats {
+    pub cutovers: u64,
+    pub rollbacks: u64,
+    pub announces_applied: u64,
+    pub announces_ignored: u64,
+}
+
+/// Edge-side version control: staged versions, one active pointer,
+/// per-tenant pins. Cut-over is atomic **per request** because
+/// [`HotSwap::model_for`] returns one `Arc<ModelVersion>` the caller
+/// holds end-to-end — flipping the active pointer mid-request cannot
+/// retarget a request that already resolved its version.
+pub struct HotSwap {
+    versions: Mutex<HashMap<String, Arc<ModelVersion>>>,
+    state: Mutex<SwapState>,
+    pins: Mutex<HashMap<u32, String>>,
+    cutovers: AtomicU64,
+    rollbacks: AtomicU64,
+    announces_applied: AtomicU64,
+    announces_ignored: AtomicU64,
+}
+
+impl HotSwap {
+    pub fn new(initial: Arc<ModelVersion>) -> Arc<Self> {
+        let mut versions = HashMap::new();
+        let active = initial.version.clone();
+        versions.insert(active.clone(), initial);
+        Arc::new(Self {
+            versions: Mutex::new(versions),
+            state: Mutex::new(SwapState { active, previous: None }),
+            pins: Mutex::new(HashMap::new()),
+            cutovers: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+            announces_applied: AtomicU64::new(0),
+            announces_ignored: AtomicU64::new(0),
+        })
+    }
+
+    /// Warm a version behind the active one: fetchable, pinnable,
+    /// invisible to unpinned traffic until [`Self::cut_over`].
+    pub fn stage(&self, mv: Arc<ModelVersion>) {
+        self.versions.lock().unwrap().insert(mv.version.clone(), mv);
+    }
+
+    pub fn staged_versions(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.versions.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Resolve the version this request executes on: the tenant's pin
+    /// if set, the fleet active otherwise. The returned `Arc` **is**
+    /// the atomicity: hold it for the whole request.
+    pub fn model_for(&self, tenant: Option<u32>) -> Arc<ModelVersion> {
+        let name = tenant
+            .and_then(|t| self.pins.lock().unwrap().get(&t).cloned())
+            .unwrap_or_else(|| self.state.lock().unwrap().active.clone());
+        let versions = self.versions.lock().unwrap();
+        versions
+            .get(&name)
+            // A pin to a version that was never staged falls back to
+            // active rather than failing the request.
+            .or_else(|| {
+                let state = self.state.lock().unwrap();
+                versions.get(&state.active)
+            })
+            .cloned()
+            .expect("active version always staged")
+    }
+
+    pub fn cut_over(&self, version: &str) -> Result<()> {
+        if !self.versions.lock().unwrap().contains_key(version) {
+            return Err(anyhow!("cannot cut over to unstaged version {version:?}"));
+        }
+        let mut state = self.state.lock().unwrap();
+        if state.active == version {
+            return Ok(());
+        }
+        state.previous = Some(std::mem::replace(&mut state.active, version.to_string()));
+        drop(state);
+        self.cutovers.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Swap active and previous — the local half of one-frame rollback.
+    pub fn rollback(&self) -> Result<()> {
+        let mut state = self.state.lock().unwrap();
+        let prev = state
+            .previous
+            .take()
+            .ok_or_else(|| anyhow!("no previous version to roll back to"))?;
+        state.previous = Some(std::mem::replace(&mut state.active, prev));
+        drop(state);
+        self.rollbacks.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Apply a registry [`KIND_VERSION`] announce. Only flips among
+    /// already-staged (hence already-verified) versions; an announce
+    /// naming anything else is counted and ignored.
+    pub fn apply_announce(&self, version: &str) -> bool {
+        if version.is_empty() || !self.versions.lock().unwrap().contains_key(version) {
+            self.announces_ignored.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let mut state = self.state.lock().unwrap();
+        if state.active != version {
+            state.previous = Some(std::mem::replace(&mut state.active, version.to_string()));
+        }
+        drop(state);
+        self.announces_applied.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    pub fn pin(&self, tenant: u32, version: &str) -> Result<()> {
+        if !self.versions.lock().unwrap().contains_key(version) {
+            return Err(anyhow!("cannot pin tenant {tenant} to unstaged version {version:?}"));
+        }
+        self.pins.lock().unwrap().insert(tenant, version.to_string());
+        Ok(())
+    }
+
+    pub fn unpin(&self, tenant: u32) {
+        self.pins.lock().unwrap().remove(&tenant);
+    }
+
+    pub fn active_version(&self) -> String {
+        self.state.lock().unwrap().active.clone()
+    }
+
+    pub fn stats(&self) -> SwapStats {
+        SwapStats {
+            cutovers: self.cutovers.load(Ordering::Relaxed),
+            rollbacks: self.rollbacks.load(Ordering::Relaxed),
+            announces_applied: self.announces_applied.load(Ordering::Relaxed),
+            announces_ignored: self.announces_ignored.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Subscribe to the registry's version announcements and apply each to
+/// `swap`. Runs until the registry closes the connection. The thread
+/// sends [`KIND_SUBSCRIBE`] once, then drains [`KIND_VERSION`] pushes;
+/// see [`HotSwap::apply_announce`] for why these frames are safe to
+/// act on unsigned.
+pub fn subscribe_announcements(
+    addr: impl ToSocketAddrs,
+    swap: Arc<HotSwap>,
+) -> Result<std::thread::JoinHandle<()>> {
+    let stream = TcpStream::connect(addr).context("connecting to registry for subscribe")?;
+    let mut writer = stream.try_clone()?;
+    proto::write_frame_vec(&mut writer, KIND_SUBSCRIBE, &[&[]])?;
+    Ok(std::thread::spawn(move || {
+        let mut reader = BufReader::new(stream);
+        let mut buf = Vec::new();
+        loop {
+            match proto::read_frame_into(&mut reader, &mut buf) {
+                Ok(RecvFrame::Data(KIND_VERSION)) => {
+                    let version = String::from_utf8_lossy(&buf).to_string();
+                    swap.apply_announce(&version);
+                }
+                Ok(RecvFrame::Data(_)) | Ok(RecvFrame::Malformed { .. }) => continue,
+                Ok(RecvFrame::Eof) | Err(_) => return,
+            }
+        }
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hash::hash128;
+
+    fn h(n: u8) -> Hash128 {
+        hash128(&[n])
+    }
+
+    #[test]
+    fn cache_lru_eviction_honors_byte_budget() {
+        // Budget fits ~3 entries of 100 payload bytes (+96 overhead).
+        let cache = ArtifactCache::new(3 * (100 + 96));
+        for n in 0..5u8 {
+            match cache.lead_or_wait(h(n)) {
+                LeadOrWait::Lead(g) => {
+                    cache.publish(g, vec![n; 100]);
+                }
+                LeadOrWait::Waited => unreachable!("single thread"),
+            }
+            assert!(cache.bytes() <= cache.budget(), "after insert {n}");
+        }
+        let s = cache.stats();
+        assert_eq!(s.downloads, 5);
+        assert_eq!(s.evictions, 2);
+        assert_eq!(cache.entries(), 3);
+        // Oldest two evicted; survivors intact and bit-correct.
+        assert!(cache.get(h(0)).is_none());
+        assert!(cache.get(h(1)).is_none());
+        for n in 2..5u8 {
+            assert_eq!(cache.get(h(n)).unwrap().as_slice(), &[n; 100][..]);
+        }
+    }
+
+    #[test]
+    fn cache_hit_refreshes_lru_position() {
+        let cache = ArtifactCache::new(3 * (10 + 96));
+        for n in 0..3u8 {
+            if let LeadOrWait::Lead(g) = cache.lead_or_wait(h(n)) {
+                cache.publish(g, vec![n; 10]);
+            }
+        }
+        // Touch the oldest; the next insert must evict h(1), not h(0).
+        assert!(cache.get(h(0)).is_some());
+        if let LeadOrWait::Lead(g) = cache.lead_or_wait(h(3)) {
+            cache.publish(g, vec![3; 10]);
+        }
+        assert!(cache.get(h(0)).is_some());
+        assert!(cache.get(h(1)).is_none());
+    }
+
+    #[test]
+    fn cache_rejects_oversize_entries_instead_of_blowing_the_budget() {
+        let cache = ArtifactCache::new(64);
+        if let LeadOrWait::Lead(g) = cache.lead_or_wait(h(1)) {
+            let data = cache.publish(g, vec![7; 1000]);
+            assert_eq!(data.len(), 1000, "caller still gets the bytes");
+        }
+        assert_eq!(cache.entries(), 0);
+        assert_eq!(cache.bytes(), 0);
+        assert_eq!(cache.stats().rejected_oversize, 1);
+        // And the in-flight key was released.
+        assert!(matches!(cache.lead_or_wait(h(1)), LeadOrWait::Lead(_)));
+    }
+
+    #[test]
+    fn failed_lead_releases_followers() {
+        let cache = ArtifactCache::new(1 << 20);
+        let key = h(9);
+        let guard = match cache.lead_or_wait(key) {
+            LeadOrWait::Lead(g) => g,
+            LeadOrWait::Waited => unreachable!(),
+        };
+        let c2 = Arc::clone(&cache);
+        let follower = std::thread::spawn(move || match c2.lead_or_wait(key) {
+            LeadOrWait::Lead(g) => {
+                c2.publish(g, vec![1, 2, 3]);
+                true
+            }
+            LeadOrWait::Waited => c2.get(key).is_some(),
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        drop(guard); // the lead "failed" — no publish
+        assert!(follower.join().unwrap(), "follower must recover, as new lead or via cache");
+    }
+
+    #[test]
+    fn hex_hash_roundtrip() {
+        let orig = hash128(b"some chunk");
+        assert_eq!(hash_from_hex(&orig.to_hex()), Some(orig));
+        assert_eq!(hash_from_hex("xyz"), None);
+        assert_eq!(hash_from_hex(&"f".repeat(31)), None);
+        assert_eq!(hash_from_hex(&"g".repeat(32)), None);
+    }
+}

@@ -37,7 +37,16 @@
 //!   `coordinator::session::Session` (head stages, quantize,
 //!   entropy-code), ships frames through the throttled socket, and
 //!   re-decouples as its bandwidth estimate *or* the cloud's reported
-//!   load drifts (`coordinator::control::ControlPlane`).
+//!   load drifts (`coordinator::control::ControlPlane`);
+//! * [`registry`] — the model-distribution control plane: stage
+//!   artifacts as content-addressed chunks under a **signed manifest**
+//!   (`util::sign`), versions published/activated/rolled back with
+//!   version announces pushed to subscribed edges;
+//! * [`fetch`] — the edge side of distribution: byte-bounded
+//!   hash-keyed [`fetch::ArtifactCache`] with in-flight dedup,
+//!   signature- and hash-verified fetch ([`fetch::RegistryClient`]),
+//!   and per-request-atomic version [`fetch::HotSwap`] with per-tenant
+//!   pins.
 
 pub mod admission;
 pub mod breaker;
@@ -45,10 +54,14 @@ pub mod cache;
 pub mod cloud;
 pub mod edge;
 pub mod epoll;
+pub mod fetch;
 pub mod proto;
+pub mod registry;
 
 pub use admission::{FairAdmission, FairDecision};
 pub use breaker::{BreakerConfig, BreakerState, CircuitBreaker};
 pub use cache::LogitsCache;
 pub use cloud::{AdmissionConfig, CloudServer, IoModel, ServeConfig};
 pub use edge::EdgeClient;
+pub use fetch::{ArtifactCache, HotSwap, ModelVersion, RegistryClient};
+pub use registry::RegistryServer;

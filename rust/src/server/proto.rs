@@ -55,6 +55,27 @@ pub const KIND_BUSY: u8 = 10;
 /// instead of a wrong prediction. Opt-in per connection; an unwrapped
 /// frame is served exactly as before.
 pub const KIND_CHECKED: u8 = 11;
+/// Registry control plane (see `server::registry`). Request a signed
+/// manifest: payload is a UTF-8 version name, empty = active version.
+pub const KIND_MANIFEST_REQ: u8 = 12;
+/// Signed manifest reply: `[sig hi u64 LE][sig lo u64 LE][manifest JSON]`.
+/// The detached signature covers exactly the JSON bytes; the edge
+/// verifies it *before* parsing, and parses nothing unsigned.
+pub const KIND_MANIFEST: u8 = 13;
+/// Request a content-addressed chunk: `[hash hi u64 LE][hash lo u64 LE]`.
+pub const KIND_CHUNK_REQ: u8 = 14;
+/// Chunk reply: `[hash hi u64 LE][hash lo u64 LE][chunk bytes]`. The
+/// edge re-hashes the bytes while reading and rejects on mismatch with
+/// the *requested* hash — the echoed header is routing, not trust.
+pub const KIND_CHUNK: u8 = 15;
+/// Subscribe to version announcements (empty payload). The registry
+/// answers with the active version immediately and pushes a
+/// [`KIND_VERSION`] frame on every activate/rollback thereafter.
+pub const KIND_SUBSCRIBE: u8 = 16;
+/// Version announcement: payload is the active version name (UTF-8).
+/// One of these is the entire rollback path: edges that subscribed
+/// flip their active pointer on receipt.
+pub const KIND_VERSION: u8 = 17;
 
 /// Hard cap on frame size. Our largest legitimate payload is a VGG
 /// stage-1 feature map (224·224·64 values) bit-packed at c=16 ≈ 6.4 MB;
@@ -116,7 +137,7 @@ pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> Result<RecvFrame
     if (got as u64) < want {
         return Err(anyhow!("connection closed mid-frame"));
     }
-    if !(KIND_FEATURES..=KIND_CHECKED).contains(&kind[0]) {
+    if !(KIND_FEATURES..=KIND_VERSION).contains(&kind[0]) {
         return Ok(RecvFrame::Malformed { reason: "unknown frame kind", resync: true });
     }
     Ok(RecvFrame::Data(kind[0]))
@@ -252,7 +273,7 @@ impl FrameAssembler {
                     }
                     self.state = AsmState::Head;
                     self.head_got = 0;
-                    if !(KIND_FEATURES..=KIND_CHECKED).contains(&kind) {
+                    if !(KIND_FEATURES..=KIND_VERSION).contains(&kind) {
                         return Ok(Assembled::Frame(RecvFrame::Malformed {
                             reason: "unknown frame kind",
                             resync: true,
@@ -1311,5 +1332,49 @@ mod tests {
         let mut both = frame.clone();
         both.extend_from_slice(&frame);
         assert_eq!(w.sink, both, "bytes must arrive unreordered and complete");
+    }
+
+    #[test]
+    fn registry_kinds_pass_framing() {
+        // The registry frames ride the same `[len][kind][payload]`
+        // transport; both receive paths (blocking and incremental) must
+        // accept kinds 12..=17, and the byte just past the range must
+        // still resync as malformed.
+        for kind in [
+            KIND_MANIFEST_REQ,
+            KIND_MANIFEST,
+            KIND_CHUNK_REQ,
+            KIND_CHUNK,
+            KIND_SUBSCRIBE,
+            KIND_VERSION,
+        ] {
+            let mut buf = Vec::new();
+            write_frame_vec(&mut buf, kind, &[b"payload"]).unwrap();
+
+            let mut r = std::io::Cursor::new(buf.clone());
+            let mut raw = Vec::new();
+            assert_eq!(read_frame_into(&mut r, &mut raw).unwrap(), RecvFrame::Data(kind));
+            assert_eq!(raw, b"payload");
+
+            let mut asm = FrameAssembler::new();
+            let mut src = std::io::Cursor::new(buf.clone());
+            let mut abuf = Vec::new();
+            match asm.poll_frame(&mut src, &mut abuf).unwrap() {
+                Assembled::Frame(RecvFrame::Data(k)) => {
+                    assert_eq!(k, kind);
+                    assert_eq!(abuf, b"payload");
+                }
+                other => panic!("assembler rejected registry kind {kind}: {other:?}"),
+            }
+        }
+
+        let mut buf = Vec::new();
+        write_frame_vec(&mut buf, KIND_VERSION + 1, &[b"x"]).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        let mut raw = Vec::new();
+        assert_eq!(
+            read_frame_into(&mut r, &mut raw).unwrap(),
+            RecvFrame::Malformed { reason: "unknown frame kind", resync: true }
+        );
     }
 }

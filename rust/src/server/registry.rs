@@ -1,0 +1,567 @@
+//! Cloud-side model registry: content-addressed artifact distribution
+//! with signed manifests and fleet-wide version control.
+//!
+//! The registry is the *delivery* half of JALAD's decoupling: the ILP
+//! picks a cut, but an edge can only execute its half if it holds the
+//! stage artifacts for that model version. Models here are published as
+//! a **signed manifest** — the same JSON structure
+//! [`Manifest::from_json`] parses off disk, annotated per stage with
+//! the [`Hash128`] content address and byte length of that stage's
+//! artifact chunk — plus the chunks themselves, stored and served by
+//! hash. Identity is content: two versions whose stage descriptors
+//! match share chunks, and a chunk that arrives with the wrong bytes
+//! can always be detected by re-hashing (the edge does, in
+//! `server::fetch`).
+//!
+//! Trust: the manifest JSON is signed with the fleet's shared
+//! [`SigKey`] (`util::sign`) and shipped with the detached tag; an
+//! edge verifies the tag over the exact bytes before parsing anything.
+//! Chunks need no signature of their own — their hash *is* in the
+//! signed manifest, so a verified manifest transitively authenticates
+//! every chunk an edge will accept.
+//!
+//! Version control is deliberately tiny: `publish` registers a
+//! version, `activate` makes it the fleet default and pushes a
+//! [`KIND_VERSION`] announce to every subscribed edge, and `rollback`
+//! swaps back to the previous active — one control frame, no data
+//! movement (the old version's chunks are still content-addressed and
+//! cached edge-side).
+//!
+//! The transport is the frame protocol from `server::proto` (kinds
+//! 12..=17) over its own listener, thread-per-connection: the registry
+//! is a low-rate control plane — a fleet fetches a model once per
+//! rollout, not per request — so the epoll reactor would be
+//! over-engineering here.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::artifacts::{Manifest, StageManifest};
+use crate::util::hash::{hash128, Hash128, Hasher128};
+use crate::util::json::Json;
+use crate::util::sign::{SigKey, Signature};
+
+use super::proto::{
+    self, RecvFrame, KIND_CHUNK, KIND_CHUNK_REQ, KIND_MANIFEST, KIND_MANIFEST_REQ,
+    KIND_SHUTDOWN, KIND_SUBSCRIBE, KIND_VERSION,
+};
+
+/// Deterministic pseudo-artifact bytes for a stage.
+///
+/// The sim backend executes from manifest geometry alone, so there is
+/// no compiled program file to ship; what the registry serves instead
+/// is a reproducible byte string derived from the full stage
+/// descriptor — a readable header naming the stage plus a hash-chained
+/// filler scaled to the stage's activation size. This keeps the whole
+/// distribution path honest end-to-end (real bytes, real hashes, real
+/// cache pressure) and swaps cleanly for `std::fs::read(artifact)`
+/// once the PJRT side exports real programs.
+pub fn artifact_chunk_bytes(model: &str, stage: &StageManifest) -> Vec<u8> {
+    let header = format!(
+        "jalad-artifact v1 model={model} stage={} name={} artifact={} in={:?} out={:?} elems={}\n",
+        stage.index, stage.name, stage.artifact, stage.in_shape, stage.out_shape, stage.out_elems
+    );
+    let mut bytes = header.into_bytes();
+    let target = bytes.len() + stage.out_elems.max(64);
+    let mut state = hash128(&bytes);
+    while bytes.len() < target {
+        let mut h = Hasher128::new();
+        h.write(&state.hi.to_le_bytes());
+        h.write(&state.lo.to_le_bytes());
+        state = h.finish();
+        bytes.extend_from_slice(&state.hi.to_le_bytes());
+        bytes.extend_from_slice(&state.lo.to_le_bytes());
+    }
+    bytes.truncate(target);
+    bytes
+}
+
+/// Serialize a runtime [`Manifest`] into the registry's signed-manifest
+/// JSON: the exact structure [`Manifest::from_json`] parses, plus a
+/// `version` field and per-stage `chunk` (hex hash) / `chunk_bytes`
+/// annotations the edge's fetch planner reads. `Json::Obj` is a
+/// `BTreeMap`, so serialization is key-sorted and byte-deterministic —
+/// a requirement for signing.
+pub fn manifest_to_json(version: &str, m: &Manifest, chunk_of: impl Fn(&str, &StageManifest) -> (Hash128, usize)) -> Json {
+    let models = m
+        .models
+        .iter()
+        .map(|model| {
+            let stages = model
+                .stages
+                .iter()
+                .map(|s| {
+                    let (h, len) = chunk_of(&model.name, s);
+                    Json::obj(vec![
+                        ("index", Json::num(s.index as f64)),
+                        ("name", Json::str(&s.name)),
+                        ("artifact", Json::str(&s.artifact)),
+                        ("in_shape", shape_json(&s.in_shape)),
+                        ("out_shape", shape_json(&s.out_shape)),
+                        ("out_elems", Json::num(s.out_elems as f64)),
+                        ("fmacs_scaled", Json::num(s.fmacs_scaled as f64)),
+                        ("chunk", Json::str(&h.to_hex())),
+                        ("chunk_bytes", Json::num(len as f64)),
+                    ])
+                })
+                .collect::<Vec<_>>();
+            Json::obj(vec![
+                ("name", Json::str(&model.name)),
+                ("input_shape", shape_json(&model.input_shape)),
+                ("num_classes", Json::num(model.num_classes as f64)),
+                ("full_artifact", Json::str(&model.full_artifact)),
+                ("stages", Json::arr(stages)),
+            ])
+        })
+        .collect::<Vec<_>>();
+
+    let quant = m
+        .codecs
+        .quant
+        .iter()
+        .map(|(elems, artifact)| {
+            Json::obj(vec![
+                ("elems", Json::num(*elems as f64)),
+                ("artifact", Json::str(artifact)),
+            ])
+        })
+        .collect::<Vec<_>>();
+    let dequant = m
+        .codecs
+        .dequant
+        .iter()
+        .map(|(shape, artifact)| {
+            Json::obj(vec![
+                ("shape", shape_json(shape)),
+                ("artifact", Json::str(artifact)),
+            ])
+        })
+        .collect::<Vec<_>>();
+
+    Json::obj(vec![
+        ("version", Json::str(version)),
+        ("c_max", Json::num(m.c_max as f64)),
+        ("num_classes", Json::num(m.num_classes as f64)),
+        ("source_digest", Json::str(&m.source_digest)),
+        ("models", Json::arr(models)),
+        ("codecs", Json::obj(vec![("quant", Json::arr(quant)), ("dequant", Json::arr(dequant))])),
+    ])
+}
+
+fn shape_json(shape: &[usize]) -> Json {
+    Json::arr(shape.iter().map(|&d| Json::num(d as f64)))
+}
+
+/// A published version: the exact signed JSON bytes (what goes on the
+/// wire, what the signature covers) and the detached tag.
+struct SignedManifest {
+    json: Arc<Vec<u8>>,
+    sig: Signature,
+}
+
+#[derive(Default)]
+struct Store {
+    versions: BTreeMap<String, SignedManifest>,
+    chunks: HashMap<Hash128, Arc<Vec<u8>>>,
+    active: Option<String>,
+    previous: Option<String>,
+}
+
+/// Counter snapshot (see [`RegistryServer::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    pub manifests_served: u64,
+    pub chunks_served: u64,
+    pub unknown_manifest: u64,
+    pub unknown_chunk: u64,
+    pub bad_frames: u64,
+    pub activations: u64,
+    pub rollbacks: u64,
+    pub subscribers: u64,
+}
+
+pub struct RegistryServer {
+    key: SigKey,
+    store: Mutex<Store>,
+    /// Write halves of subscribed edge connections; pruned on write
+    /// failure. A subscriber stream is *also* being read by its
+    /// connection thread — announces are the only server-push frames.
+    subscribers: Mutex<Vec<TcpStream>>,
+    manifests_served: AtomicU64,
+    chunks_served: AtomicU64,
+    unknown_manifest: AtomicU64,
+    unknown_chunk: AtomicU64,
+    bad_frames: AtomicU64,
+    activations: AtomicU64,
+    rollbacks: AtomicU64,
+    /// Test/bench hooks: flip one byte in every served chunk body /
+    /// manifest JSON (the signature and hashes stay computed over the
+    /// true bytes, so a verifying edge must reject everything).
+    corrupt_chunks: AtomicBool,
+    corrupt_manifests: AtomicBool,
+    /// Test hook: hold each chunk reply this long, so concurrent
+    /// fetchers of one hash observably coalesce edge-side.
+    serve_delay_ms: AtomicU64,
+    stop: AtomicBool,
+}
+
+impl RegistryServer {
+    pub fn new(key: SigKey) -> Arc<Self> {
+        Arc::new(Self {
+            key,
+            store: Mutex::new(Store::default()),
+            subscribers: Mutex::new(Vec::new()),
+            manifests_served: AtomicU64::new(0),
+            chunks_served: AtomicU64::new(0),
+            unknown_manifest: AtomicU64::new(0),
+            unknown_chunk: AtomicU64::new(0),
+            bad_frames: AtomicU64::new(0),
+            activations: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+            corrupt_chunks: AtomicBool::new(false),
+            corrupt_manifests: AtomicBool::new(false),
+            serve_delay_ms: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        })
+    }
+
+    /// Register `manifest` under `version`: chunk every stage artifact,
+    /// build + sign the manifest JSON. Publishing does **not** activate
+    /// — a version warms invisible until [`Self::activate`].
+    pub fn publish(&self, version: &str, manifest: &Manifest) -> Result<()> {
+        let mut chunk_index: HashMap<(String, usize), (Hash128, usize)> = HashMap::new();
+        let mut chunks: Vec<(Hash128, Vec<u8>)> = Vec::new();
+        for model in &manifest.models {
+            for stage in &model.stages {
+                let bytes = artifact_chunk_bytes(&model.name, stage);
+                let h = hash128(&bytes);
+                chunk_index.insert((model.name.clone(), stage.index), (h, bytes.len()));
+                chunks.push((h, bytes));
+            }
+        }
+        let doc = manifest_to_json(version, manifest, |model, stage| {
+            chunk_index[&(model.to_string(), stage.index)]
+        });
+        let json = doc.to_string().into_bytes();
+        let sig = self.key.sign(&json);
+
+        let mut store = self.store.lock().unwrap();
+        if store.versions.contains_key(version) {
+            return Err(anyhow!("version {version:?} already published"));
+        }
+        for (h, bytes) in chunks {
+            // Content-addressed: same descriptor → same hash → shared.
+            store.chunks.entry(h).or_insert_with(|| Arc::new(bytes));
+        }
+        store.versions.insert(version.to_string(), SignedManifest { json: Arc::new(json), sig });
+        Ok(())
+    }
+
+    /// Make `version` the fleet default and announce it to every
+    /// subscriber. The outgoing active becomes the rollback target.
+    pub fn activate(&self, version: &str) -> Result<()> {
+        let announce = {
+            let mut store = self.store.lock().unwrap();
+            if !store.versions.contains_key(version) {
+                return Err(anyhow!("cannot activate unpublished version {version:?}"));
+            }
+            if store.active.as_deref() == Some(version) {
+                return Ok(());
+            }
+            store.previous = store.active.take();
+            store.active = Some(version.to_string());
+            version.to_string()
+        };
+        self.activations.fetch_add(1, Ordering::Relaxed);
+        self.announce(&announce);
+        Ok(())
+    }
+
+    /// Swap active and previous — the one-frame rollback. The entire
+    /// fleet-visible effect is a single [`KIND_VERSION`] announce.
+    pub fn rollback(&self) -> Result<()> {
+        let announce = {
+            let mut store = self.store.lock().unwrap();
+            let prev = store
+                .previous
+                .take()
+                .ok_or_else(|| anyhow!("no previous version to roll back to"))?;
+            store.previous = store.active.replace(prev.clone());
+            prev
+        };
+        self.rollbacks.fetch_add(1, Ordering::Relaxed);
+        self.announce(&announce);
+        Ok(())
+    }
+
+    fn announce(&self, version: &str) {
+        let mut subs = self.subscribers.lock().unwrap();
+        subs.retain_mut(|s| {
+            proto::write_frame_vec(s, KIND_VERSION, &[version.as_bytes()]).is_ok()
+        });
+    }
+
+    pub fn active_version(&self) -> Option<String> {
+        self.store.lock().unwrap().active.clone()
+    }
+
+    pub fn versions(&self) -> Vec<String> {
+        self.store.lock().unwrap().versions.keys().cloned().collect()
+    }
+
+    /// The true stored bytes for a chunk — what a correct fetch must
+    /// reproduce bit-for-bit (tests compare against this).
+    pub fn chunk(&self, hash: Hash128) -> Option<Arc<Vec<u8>>> {
+        self.store.lock().unwrap().chunks.get(&hash).cloned()
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        RegistryStats {
+            manifests_served: self.manifests_served.load(Ordering::Relaxed),
+            chunks_served: self.chunks_served.load(Ordering::Relaxed),
+            unknown_manifest: self.unknown_manifest.load(Ordering::Relaxed),
+            unknown_chunk: self.unknown_chunk.load(Ordering::Relaxed),
+            bad_frames: self.bad_frames.load(Ordering::Relaxed),
+            activations: self.activations.load(Ordering::Relaxed),
+            rollbacks: self.rollbacks.load(Ordering::Relaxed),
+            subscribers: self.subscribers.lock().unwrap().len() as u64,
+        }
+    }
+
+    pub fn set_corrupt_chunks(&self, on: bool) {
+        self.corrupt_chunks.store(on, Ordering::Relaxed);
+    }
+
+    pub fn set_corrupt_manifests(&self, on: bool) {
+        self.corrupt_manifests.store(on, Ordering::Relaxed);
+    }
+
+    pub fn set_serve_delay_ms(&self, ms: u64) {
+        self.serve_delay_ms.store(ms, Ordering::Relaxed);
+    }
+
+    pub fn spawn(self: Arc<Self>, addr: &str) -> Result<(SocketAddr, std::thread::JoinHandle<()>)> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let me = Arc::clone(&self);
+        let handle = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if me.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let me = Arc::clone(&me);
+                std::thread::spawn(move || me.serve_conn(stream));
+            }
+        });
+        Ok((local, handle))
+    }
+
+    /// Unblock and stop the accept loop (mirrors `CloudServer`).
+    pub fn request_shutdown(addr: SocketAddr) {
+        if let Ok(mut s) = TcpStream::connect(addr) {
+            let _ = proto::write_frame_vec(&mut s, KIND_SHUTDOWN, &[&[]]);
+        }
+        let _ = TcpStream::connect(addr);
+    }
+
+    fn serve_conn(self: Arc<Self>, stream: TcpStream) {
+        let Ok(mut writer) = stream.try_clone() else { return };
+        let mut reader = BufReader::new(stream);
+        let mut buf = Vec::new();
+        loop {
+            match proto::read_frame_into(&mut reader, &mut buf) {
+                Ok(RecvFrame::Data(kind)) => {
+                    if kind == KIND_SHUTDOWN {
+                        self.stop.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                    if self.handle(kind, &buf, &mut writer).is_err() {
+                        return;
+                    }
+                }
+                Ok(RecvFrame::Malformed { reason, resync }) => {
+                    self.bad_frames.fetch_add(1, Ordering::Relaxed);
+                    let _ = proto::Frame::Error(format!("registry: {reason}")).write_to(&mut writer);
+                    if !resync {
+                        return;
+                    }
+                }
+                Ok(RecvFrame::Eof) | Err(_) => return,
+            }
+        }
+    }
+
+    fn handle(&self, kind: u8, payload: &[u8], w: &mut TcpStream) -> Result<()> {
+        match kind {
+            KIND_MANIFEST_REQ => {
+                let version = std::str::from_utf8(payload).unwrap_or_default().to_string();
+                let found = {
+                    let store = self.store.lock().unwrap();
+                    let name = if version.is_empty() { store.active.clone() } else { Some(version.clone()) };
+                    name.and_then(|n| store.versions.get(&n).map(|sm| (sm.sig, Arc::clone(&sm.json))))
+                };
+                match found {
+                    Some((sig, json)) => {
+                        self.manifests_served.fetch_add(1, Ordering::Relaxed);
+                        if self.corrupt_manifests.load(Ordering::Relaxed) {
+                            let mut bad = (*json).clone();
+                            if let Some(b) = bad.last_mut() {
+                                *b ^= 0x01;
+                            }
+                            proto::write_frame_vec(w, KIND_MANIFEST, &[&sig.to_wire(), &bad])?;
+                        } else {
+                            proto::write_frame_vec(w, KIND_MANIFEST, &[&sig.to_wire(), &json])?;
+                        }
+                    }
+                    None => {
+                        self.unknown_manifest.fetch_add(1, Ordering::Relaxed);
+                        proto::Frame::Error(format!("registry: no manifest for {version:?}"))
+                            .write_to(w)?;
+                    }
+                }
+            }
+            KIND_CHUNK_REQ => {
+                if payload.len() != 16 {
+                    self.bad_frames.fetch_add(1, Ordering::Relaxed);
+                    proto::Frame::Error("registry: chunk request must be 16 bytes".into())
+                        .write_to(w)?;
+                    return Ok(());
+                }
+                let hash = Hash128 {
+                    hi: u64::from_le_bytes(payload[..8].try_into().unwrap()),
+                    lo: u64::from_le_bytes(payload[8..16].try_into().unwrap()),
+                };
+                let found = self.store.lock().unwrap().chunks.get(&hash).cloned();
+                match found {
+                    Some(bytes) => {
+                        let delay = self.serve_delay_ms.load(Ordering::Relaxed);
+                        if delay > 0 {
+                            std::thread::sleep(std::time::Duration::from_millis(delay));
+                        }
+                        self.chunks_served.fetch_add(1, Ordering::Relaxed);
+                        if self.corrupt_chunks.load(Ordering::Relaxed) {
+                            let mut bad = (*bytes).clone();
+                            if let Some(b) = bad.first_mut() {
+                                *b ^= 0x01;
+                            }
+                            proto::write_frame_vec(
+                                w,
+                                KIND_CHUNK,
+                                &[&hash.hi.to_le_bytes(), &hash.lo.to_le_bytes(), &bad],
+                            )?;
+                        } else {
+                            proto::write_frame_vec(
+                                w,
+                                KIND_CHUNK,
+                                &[&hash.hi.to_le_bytes(), &hash.lo.to_le_bytes(), &bytes],
+                            )?;
+                        }
+                    }
+                    None => {
+                        self.unknown_chunk.fetch_add(1, Ordering::Relaxed);
+                        proto::Frame::Error(format!("registry: unknown chunk {}", hash.to_hex()))
+                            .write_to(w)?;
+                    }
+                }
+            }
+            KIND_SUBSCRIBE => {
+                // Answer with the current active immediately, then keep
+                // the write half for future announces.
+                let active = self.active_version().unwrap_or_default();
+                proto::write_frame_vec(w, KIND_VERSION, &[active.as_bytes()])?;
+                if let Ok(push) = w.try_clone() {
+                    self.subscribers.lock().unwrap().push(push);
+                }
+            }
+            other => {
+                self.bad_frames.fetch_add(1, Ordering::Relaxed);
+                proto::Frame::Error(format!("registry: unexpected frame kind {other}"))
+                    .write_to(w)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sim::sim_manifest;
+
+    #[test]
+    fn chunk_bytes_are_deterministic_and_descriptor_sensitive() {
+        let m = sim_manifest();
+        let model = &m.models[0];
+        let a = artifact_chunk_bytes(&model.name, &model.stages[0]);
+        let b = artifact_chunk_bytes(&model.name, &model.stages[0]);
+        assert_eq!(a, b, "same descriptor must yield identical bytes");
+        let c = artifact_chunk_bytes(&model.name, &model.stages[1]);
+        assert_ne!(hash128(&a), hash128(&c), "different stages must not collide");
+        assert_ne!(
+            hash128(&a),
+            hash128(&artifact_chunk_bytes("othermodel", &model.stages[0])),
+            "model name is part of chunk identity"
+        );
+        assert!(a.len() >= model.stages[0].out_elems);
+    }
+
+    #[test]
+    fn publish_signs_a_parseable_manifest() {
+        let key = SigKey::from_seed(5);
+        let reg = RegistryServer::new(key.clone());
+        reg.publish("v1", &sim_manifest()).unwrap();
+        assert!(reg.publish("v1", &sim_manifest()).is_err(), "republish must be rejected");
+
+        let store = reg.store.lock().unwrap();
+        let sm = &store.versions["v1"];
+        assert!(key.verify(&sm.json, sm.sig));
+        let doc = Json::parse(std::str::from_utf8(&sm.json).unwrap()).unwrap();
+        let parsed =
+            Manifest::from_json(std::path::PathBuf::from("registry"), &doc).unwrap();
+        assert_eq!(parsed.models.len(), sim_manifest().models.len());
+        // Every advertised chunk hash resolves in the store and matches
+        // its bytes — the content-address invariant.
+        for model in doc.get("models").and_then(Json::as_arr).unwrap() {
+            for stage in model.get("stages").and_then(Json::as_arr).unwrap() {
+                let hex = stage.get("chunk").and_then(Json::as_str).unwrap();
+                let len = stage.get("chunk_bytes").and_then(Json::as_u64).unwrap() as usize;
+                let (h, bytes) = store
+                    .chunks
+                    .iter()
+                    .find(|(h, _)| h.to_hex() == hex)
+                    .map(|(h, b)| (*h, Arc::clone(b)))
+                    .expect("advertised chunk missing from store");
+                assert_eq!(bytes.len(), len);
+                assert_eq!(hash128(&bytes), h);
+            }
+        }
+    }
+
+    #[test]
+    fn activate_and_rollback_swap_the_active_pointer() {
+        let reg = RegistryServer::new(SigKey::from_seed(1));
+        reg.publish("v1", &sim_manifest()).unwrap();
+        reg.publish("v2", &crate::runtime::sim::sim_manifest_v2()).unwrap();
+        assert!(reg.activate("v9").is_err(), "unpublished version must not activate");
+        assert!(reg.rollback().is_err(), "nothing to roll back to yet");
+
+        reg.activate("v1").unwrap();
+        assert_eq!(reg.active_version().as_deref(), Some("v1"));
+        reg.activate("v2").unwrap();
+        assert_eq!(reg.active_version().as_deref(), Some("v2"));
+        reg.rollback().unwrap();
+        assert_eq!(reg.active_version().as_deref(), Some("v1"));
+        // Rollback is a swap, not a pop: rolling "back" again returns
+        // to v2 (previous now holds it).
+        reg.rollback().unwrap();
+        assert_eq!(reg.active_version().as_deref(), Some("v2"));
+        let s = reg.stats();
+        assert_eq!((s.activations, s.rollbacks), (2, 2));
+    }
+}

@@ -17,5 +17,6 @@ pub mod pool;
 pub mod prop;
 pub mod reactor;
 pub mod rng;
+pub mod sign;
 pub mod stats;
 pub mod threadpool;

@@ -1,0 +1,372 @@
+//! Registry contract, artifact-free (sim backend, loopback TCP):
+//!
+//! 1. **Fetch-assemble-execute bit-identity** — a model fetched from
+//!    the registry (signed manifest + content-addressed chunks)
+//!    executes bit-for-bit like one built from the local baked-in
+//!    manifest, and every fetched chunk byte-equals the server's
+//!    stored bytes.
+//! 2. **Tamper rejection before execution** — a flipped byte in any
+//!    served chunk or in the manifest JSON is rejected at the edge
+//!    (hash / signature gate), counted in client stats, and pollutes
+//!    neither the artifact cache nor an executor.
+//! 3. **Concurrent fetch downloads exactly once** — 8 clients racing
+//!    for one chunk through a shared cache cost the registry one
+//!    chunk request; everyone gets the right bytes.
+//! 4. **Eviction honors the byte budget end-to-end** — a cache too
+//!    small for a whole model stays under budget while the full fetch
+//!    still completes and verifies; evicted chunks re-fetch correctly.
+//! 5. **Hot-swap under live traffic** — with workers hammering
+//!    `HotSwap::model_for`, a v1→v2 cut-over mid-traffic drops no
+//!    request and every reply bit-matches exactly one of the two
+//!    versions; per-tenant pins hold; a registry announce (subscribe
+//!    channel) flips the edge's active version, and rollback restores
+//!    it — one control frame each way.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use jalad::data::gen::sample_image_shaped;
+use jalad::runtime::sim::{sim_manifest, sim_manifest_v2};
+use jalad::runtime::{Executor, Manifest};
+use jalad::server::fetch::{subscribe_announcements, ModelVersion};
+use jalad::server::{ArtifactCache, HotSwap, RegistryClient, RegistryServer};
+use jalad::util::sign::SigKey;
+
+const MODEL: &str = "simnet";
+const FANIN: usize = 8;
+
+fn spawn_registry(
+    key: &SigKey,
+    versions: &[(&str, Manifest)],
+    active: &str,
+) -> (Arc<RegistryServer>, std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let reg = RegistryServer::new(key.clone());
+    for (name, m) in versions {
+        reg.publish(name, m).unwrap();
+    }
+    reg.activate(active).unwrap();
+    let (addr, handle) = Arc::clone(&reg).spawn("127.0.0.1:0").unwrap();
+    (reg, addr, handle)
+}
+
+fn client(addr: std::net::SocketAddr, key: &SigKey, cache: &Arc<ArtifactCache>) -> RegistryClient {
+    RegistryClient::connect(addr, key.clone(), Arc::clone(cache)).unwrap()
+}
+
+/// Logits bit pattern for sample `id` on `exe`.
+fn logit_bits(exe: &Executor, shape: &[usize], id: usize) -> Vec<u32> {
+    let x = sample_image_shaped(id % 16, id, shape);
+    exe.run_full(MODEL, &x).unwrap().tensor.data().iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn fetch_assemble_execute_bit_identical_to_local() {
+    let key = SigKey::from_seed(71);
+    let (reg, addr, handle) = spawn_registry(&key, &[("v1", sim_manifest())], "v1");
+    let cache = ArtifactCache::new(8 << 20);
+    let mut rc = client(addr, &key, &cache);
+
+    // `None` resolves the active version server-side.
+    let fetched = rc.fetch_manifest(None).unwrap();
+    assert_eq!(fetched.version, "v1");
+    assert!(!fetched.chunks.is_empty());
+    for c in &fetched.chunks {
+        let got = rc.fetch_chunk(c.hash).unwrap();
+        let stored = reg.chunk(c.hash).expect("server must hold every advertised chunk");
+        assert_eq!(&*got, &*stored, "fetched chunk must byte-equal the registry's copy");
+        assert_eq!(got.len(), c.bytes);
+    }
+    let stats = rc.stats();
+    assert_eq!(stats.manifests_verified, 1);
+    assert_eq!(stats.chunks_verified as usize, fetched.chunks.len());
+    assert_eq!((stats.manifest_rejects, stats.chunk_rejects), (0, 0));
+
+    // The assembled manifest drives the executor bit-identically to
+    // the local baked-in one.
+    let local = Executor::sim_with(sim_manifest(), FANIN);
+    let remote = Executor::sim_with(fetched.manifest.clone(), FANIN);
+    let shape = local.manifest().model(MODEL).unwrap().input_shape.clone();
+    for id in 0..16 {
+        assert_eq!(
+            logit_bits(&remote, &shape, id),
+            logit_bits(&local, &shape, id),
+            "sample {id}: registry-assembled executor diverged from local"
+        );
+    }
+
+    RegistryServer::request_shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn tampered_chunks_and_manifests_are_rejected_before_execution() {
+    let key = SigKey::from_seed(72);
+    let (reg, addr, handle) = spawn_registry(&key, &[("v1", sim_manifest())], "v1");
+    let cache = ArtifactCache::new(8 << 20);
+    let mut rc = client(addr, &key, &cache);
+
+    // A clean manifest first, so we know real chunk hashes.
+    let fetched = rc.fetch_manifest(None).unwrap();
+
+    // Every chunk the tampering registry serves must be rejected: not
+    // returned, not cached, counted.
+    reg.set_corrupt_chunks(true);
+    for c in &fetched.chunks {
+        let err = rc.fetch_chunk(c.hash).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("content verification"),
+            "wrong rejection reason: {err:#}"
+        );
+    }
+    assert_eq!(rc.stats().chunk_rejects as usize, fetched.chunks.len());
+    assert_eq!(cache.entries(), 0, "tampered bytes must never enter the cache");
+    assert_eq!(cache.stats().downloads, 0);
+
+    // Tampered manifest: the signature gate fires before any parsing,
+    // so nothing about the document is trusted — or assembled.
+    reg.set_corrupt_chunks(false);
+    reg.set_corrupt_manifests(true);
+    let err = rc.fetch_manifest(None).unwrap_err();
+    assert!(format!("{err:#}").contains("signature"), "wrong rejection reason: {err:#}");
+    assert_eq!(rc.stats().manifest_rejects, 1);
+
+    // An edge keyed differently (wrong fleet secret) rejects even an
+    // untampered manifest.
+    reg.set_corrupt_manifests(false);
+    let mut stranger = RegistryClient::connect(
+        addr,
+        SigKey::from_seed(9999),
+        ArtifactCache::new(1 << 20),
+    )
+    .unwrap();
+    assert!(stranger.fetch_manifest(None).is_err());
+    assert_eq!(stranger.stats().manifest_rejects, 1);
+
+    // The honest path still works afterwards.
+    let clean = rc.fetch_model(None, FANIN).unwrap();
+    assert_eq!(clean.version, "v1");
+
+    RegistryServer::request_shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn concurrent_fetch_of_one_chunk_downloads_exactly_once() {
+    let key = SigKey::from_seed(73);
+    let (reg, addr, handle) = spawn_registry(&key, &[("v1", sim_manifest())], "v1");
+    // Slow chunk service so the racers demonstrably overlap.
+    reg.set_serve_delay_ms(150);
+
+    let cache = ArtifactCache::new(8 << 20);
+    let mut probe = client(addr, &key, &cache);
+    let target = probe.fetch_manifest(None).unwrap().chunks[0].clone();
+    let expected = reg.chunk(target.hash).unwrap();
+
+    let served_before = reg.stats().chunks_served;
+    let barrier = Arc::new(std::sync::Barrier::new(8));
+    let workers: Vec<_> = (0..8)
+        .map(|_| {
+            let mut rc = client(addr, &key, &cache);
+            let barrier = Arc::clone(&barrier);
+            let hash = target.hash;
+            std::thread::spawn(move || {
+                barrier.wait();
+                rc.fetch_chunk(hash).unwrap()
+            })
+        })
+        .collect();
+    for w in workers {
+        assert_eq!(&*w.join().unwrap(), &*expected, "every racer gets the true bytes");
+    }
+
+    assert_eq!(
+        reg.stats().chunks_served - served_before,
+        1,
+        "8 concurrent fetchers must cost the registry exactly one download"
+    );
+    let cs = cache.stats();
+    assert_eq!(cs.downloads, 1);
+    assert!(cs.coalesced >= 1, "someone must have parked behind the lead");
+    // Every non-lead ends on a cache hit (after parking or directly).
+    assert_eq!(cs.hits, 7);
+
+    RegistryServer::request_shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn eviction_honors_byte_budget_end_to_end() {
+    let key = SigKey::from_seed(74);
+    let (reg, addr, handle) = spawn_registry(&key, &[("v1", sim_manifest())], "v1");
+
+    // Size the budget off the real chunk inventory: big enough for the
+    // largest chunk, far too small for all of them at once.
+    let cache_probe = ArtifactCache::new(8 << 20);
+    let mut probe = client(addr, &key, &cache_probe);
+    let fetched = probe.fetch_manifest(None).unwrap();
+    let largest = fetched.chunks.iter().map(|c| c.bytes).max().unwrap();
+    let total: usize = fetched.chunks.iter().map(|c| c.bytes).sum();
+    let budget = (largest + 200).max(total / 2);
+    assert!(budget < total, "budget must force eviction for this test to bite");
+
+    let cache = ArtifactCache::new(budget);
+    let mut rc = client(addr, &key, &cache);
+    let model = rc.fetch_model(None, FANIN).unwrap();
+    assert_eq!(model.version, "v1");
+    let s = cache.stats();
+    assert!(s.bytes as usize <= budget, "cache exceeded its budget: {} > {budget}", s.bytes);
+    assert!(s.evictions > 0, "an undersized cache must have evicted");
+    assert_eq!(s.rejected_oversize, 0, "budget was sized to fit every single chunk");
+
+    // Evicted chunks re-fetch from the registry and still verify.
+    let served_before = reg.stats().chunks_served;
+    for c in &fetched.chunks {
+        let got = rc.fetch_chunk(c.hash).unwrap();
+        assert_eq!(&*got, &*reg.chunk(c.hash).unwrap());
+    }
+    assert!(
+        reg.stats().chunks_served > served_before,
+        "at least one evicted chunk must have been re-downloaded"
+    );
+    assert!(cache.stats().bytes as usize <= budget);
+
+    RegistryServer::request_shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn hot_swap_under_live_traffic_is_atomic_per_request() {
+    let key = SigKey::from_seed(75);
+    let (reg, addr, handle) =
+        spawn_registry(&key, &[("v1", sim_manifest()), ("v2", sim_manifest_v2())], "v1");
+
+    let cache = ArtifactCache::new(16 << 20);
+    let mut rc = client(addr, &key, &cache);
+    let v1: Arc<ModelVersion> = rc.fetch_model(Some("v1"), FANIN).unwrap();
+    let v2: Arc<ModelVersion> = rc.fetch_model(Some("v2"), FANIN).unwrap();
+    assert_eq!((v1.version.as_str(), v2.version.as_str()), ("v1", "v2"));
+
+    // Reference bit patterns per sample, per version — computed from
+    // *locally built* executors so the comparison is independent of
+    // the fetch path under test.
+    const SAMPLES: usize = 12;
+    let shape = sim_manifest().model(MODEL).unwrap().input_shape.clone();
+    let local_v1 = Executor::sim_with(sim_manifest(), FANIN);
+    let local_v2 = Executor::sim_with(sim_manifest_v2(), FANIN);
+    let want_v1: Vec<Vec<u32>> = (0..SAMPLES).map(|i| logit_bits(&local_v1, &shape, i)).collect();
+    let want_v2: Vec<Vec<u32>> = (0..SAMPLES).map(|i| logit_bits(&local_v2, &shape, i)).collect();
+    // Guard against a vacuous test: the versions must actually differ.
+    assert!(
+        (0..SAMPLES).all(|i| want_v1[i] != want_v2[i]),
+        "v1 and v2 logits must differ bit-wise on every sample"
+    );
+
+    // v2 warms behind the active v1: staged, fetchable, invisible.
+    let swap = HotSwap::new(Arc::clone(&v1));
+    swap.stage(Arc::clone(&v2));
+    assert_eq!(swap.active_version(), "v1");
+    swap.pin(7, "v1").unwrap();
+
+    // Live traffic across the cut-over. Every reply must bit-match
+    // exactly one version; none may error or drop.
+    let served_v1 = Arc::new(AtomicUsize::new(0));
+    let served_v2 = Arc::new(AtomicUsize::new(0));
+    let bad = Arc::new(AtomicUsize::new(0));
+    const WORKERS: usize = 4;
+    const REQS: usize = 120;
+    // Two barriers pin the cut-over to the midpoint of every worker's
+    // run: the swap happens strictly after each worker's first half
+    // (all v1) and strictly before its second half (all v2) — no
+    // timing race, and both versions are guaranteed live traffic.
+    let before_cut = Arc::new(Barrier::new(WORKERS + 1));
+    let after_cut = Arc::new(Barrier::new(WORKERS + 1));
+    let workers: Vec<_> = (0..WORKERS)
+        .map(|w| {
+            let swap = Arc::clone(&swap);
+            let shape = shape.clone();
+            let (want_v1, want_v2) = (want_v1.clone(), want_v2.clone());
+            let (served_v1, served_v2, bad) =
+                (Arc::clone(&served_v1), Arc::clone(&served_v2), Arc::clone(&bad));
+            let (before_cut, after_cut) = (Arc::clone(&before_cut), Arc::clone(&after_cut));
+            std::thread::spawn(move || {
+                for r in 0..REQS {
+                    if r == REQS / 2 {
+                        before_cut.wait();
+                        after_cut.wait();
+                    }
+                    let id = (w + r) % SAMPLES;
+                    // One Arc, held end-to-end: the request's version.
+                    let mv = swap.model_for(None);
+                    let x = sample_image_shaped(id % 16, id, &shape);
+                    let bits: Vec<u32> = match mv.exe.run_full(MODEL, &x) {
+                        Ok(out) => out.tensor.data().iter().map(|v| v.to_bits()).collect(),
+                        Err(_) => {
+                            bad.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                    };
+                    // "Exactly one": matching the version the request
+                    // resolved to, and not the other (they differ on
+                    // every sample by the guard above).
+                    let want = if mv.version == "v1" { &want_v1[id] } else { &want_v2[id] };
+                    let other = if mv.version == "v1" { &want_v2[id] } else { &want_v1[id] };
+                    if &bits == want && &bits != other {
+                        if mv.version == "v1" {
+                            served_v1.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            served_v2.fetch_add(1, Ordering::Relaxed);
+                        }
+                    } else {
+                        bad.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // Cut over at the midpoint, between the barriers.
+    before_cut.wait();
+    swap.cut_over("v2").unwrap();
+    assert_eq!(swap.active_version(), "v2");
+    // The pinned tenant stays on v1 regardless of the fleet default.
+    assert_eq!(swap.model_for(Some(7)).version, "v1");
+    after_cut.wait();
+    for w in workers {
+        w.join().unwrap();
+    }
+    let (n1, n2, nbad) =
+        (served_v1.load(Ordering::Relaxed), served_v2.load(Ordering::Relaxed), bad.load(Ordering::Relaxed));
+    assert_eq!(nbad, 0, "no reply may error or mix versions");
+    assert_eq!(n1 + n2, WORKERS * REQS, "zero-downtime: every request served");
+    // The barriers make the split exact: first halves on v1, second
+    // halves on v2.
+    assert_eq!(n1, WORKERS * REQS / 2, "pre-cut traffic must all serve v1");
+    assert_eq!(n2, WORKERS * REQS / 2, "post-cut traffic must all serve v2");
+
+    // Local rollback restores v1 atomically.
+    swap.rollback().unwrap();
+    assert_eq!(swap.active_version(), "v1");
+    assert_eq!(swap.model_for(None).version, "v1");
+
+    // Fleet path: a registry announce is one frame each way. Activate
+    // v2 → subscribed edge flips; rollback → edge flips back.
+    let sub = subscribe_announcements(addr, Arc::clone(&swap)).unwrap();
+    let wait_active = |want: &str| {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while swap.active_version() != want {
+            assert!(Instant::now() < deadline, "edge never reached version {want:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    };
+    wait_active("v1"); // the subscribe handshake announces the current active
+    reg.activate("v2").unwrap();
+    wait_active("v2");
+    reg.rollback().unwrap();
+    wait_active("v1");
+    assert!(swap.stats().announces_applied >= 2);
+
+    RegistryServer::request_shutdown(addr);
+    handle.join().unwrap();
+    sub.join().unwrap();
+}

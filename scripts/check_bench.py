@@ -7,7 +7,7 @@ Usage:
     check_bench.py <bench> <json> --update-baselines <baseline>
 
 <bench> is one of: pipeline | adaptive | multiedge | crossmodel | c10k |
-chaos | cache.
+chaos | cache | registry.
 
 The schema checks replicate (and replace) the inline validators that
 used to live in scripts/verify.sh; verify.sh keeps a grep fallback for
@@ -203,6 +203,43 @@ def check_cache(doc):
             f"coalesce rate={doc['coalesce_rate']:.3f}")
 
 
+def check_registry(doc):
+    for k in ("cold", "warm", "swap", "tamper", "warm_fetch_speedup", "chunks"):
+        assert k in doc, f"missing {k}"
+    assert doc["chunks"] > 0, "the manifest advertised no chunks"
+    cold, warm = doc["cold"], doc["warm"]
+    for sec, name in ((cold, "cold"), (warm, "warm")):
+        for k in ("iters", "fetch_ms_p50", "fetch_ms_p95"):
+            assert k in sec, f"{name}: missing {k}"
+        assert sec["iters"] > 0, f"{name}: no iterations ran"
+    assert "hit_rate" in warm, "warm: missing hit_rate"
+    assert warm["hit_rate"] > 0, "the warm arm never hit the artifact cache"
+    sw = doc["swap"]
+    for k in ("requests", "dropped", "served_v1", "served_v2", "cutover_gap_ms",
+              "steady_p95_ms", "bit_identical", "rollback_ok"):
+        assert k in sw, f"swap: missing {k}"
+    # The zero-downtime contract: no request drops or serves torn bytes
+    # across the cut-over, the new version actually takes traffic, and
+    # rollback restores the old one.
+    assert sw["requests"] > 0, "the swap arm issued nothing"
+    assert sw["dropped"] == 0, f"hot-swap dropped {sw['dropped']} request(s)"
+    assert sw["served_v2"] > 0, "the cut-over never took effect"
+    assert sw["bit_identical"] is True, \
+        "a reply did not bit-match exactly one model version"
+    assert sw["rollback_ok"] is True, "rollback did not restore the old version"
+    ta = doc["tamper"]
+    for k in ("attempts", "rejected", "tamper_reject_rate", "executed_tampered"):
+        assert k in ta, f"tamper: missing {k}"
+    assert ta["attempts"] > 0, "the tamper arm attempted nothing"
+    assert ta["tamper_reject_rate"] >= 1.0 - 1e-9, \
+        f"only {ta['tamper_reject_rate']:.3f} of tampered serves were rejected"
+    assert ta["executed_tampered"] == 0, \
+        "a tampered artifact or manifest reached execution"
+    return (f"warm speedup={doc['warm_fetch_speedup']:.1f}x, "
+            f"cutover gap={sw['cutover_gap_ms']:.2f}ms, "
+            f"tamper reject={ta['tamper_reject_rate']:.3f}")
+
+
 def check_chaos(doc):
     for k in ("availability", "served_bit_identity", "recovery_ms",
               "corruption", "blackout", "quarantine"):
@@ -295,6 +332,13 @@ TRACKED = {
         "zipf_speedup_8conn":
             (lambda d: float(d["zipf_speedup_8conn"]), "higher"),
     },
+    # cutover_gap_ms / tamper_reject_rate are schema-asserted hard
+    # bounds (0 drops, 100% reject), not ratios to trend — the speedup
+    # is the only machine-normalized headline worth a baseline.
+    "registry": {
+        "warm_fetch_speedup":
+            (lambda d: float(d["warm_fetch_speedup"]), "higher"),
+    },
 }
 
 SCHEMAS = {
@@ -305,6 +349,7 @@ SCHEMAS = {
     "c10k": check_c10k,
     "chaos": check_chaos,
     "cache": check_cache,
+    "registry": check_registry,
 }
 
 

@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Assert the bench suite list is identical everywhere it is spelled.
+
+The suite -> (bench, schema, json) mapping is defined once, in
+scripts/verify.sh's run_suite. But the suite *list* is necessarily
+repeated: verify.sh's argument filter and full-run loop, ci.yml's
+bench-smoke matrix, and nightly.yml's full-bench loop. A suite added
+to one spot but not the others fails silently — the matrix just never
+fans out over it, or the nightly never runs it — so this script makes
+drift a hard CI error (the `tools` job runs it on every PR).
+
+Also cross-checks that every suite has a check_bench.py schema, a
+tracked-metric entry, and a committed baseline file, so a new suite
+cannot land half-wired.
+
+Exit 0 when everything agrees; prints every mismatch and exits 1
+otherwise.
+"""
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def read(rel):
+    with open(os.path.join(ROOT, rel)) as f:
+        return f.read()
+
+
+def one_match(pattern, text, where):
+    found = re.findall(pattern, text, re.MULTILINE)
+    if len(found) != 1:
+        raise SystemExit(
+            f"check_suites: expected exactly one match for {pattern!r} in "
+            f"{where}, found {len(found)} — the parser drifted from the file"
+        )
+    return found[0]
+
+
+def verify_sh_lists(text):
+    """The three spellings inside scripts/verify.sh itself."""
+    arg_filter = one_match(
+        r"^\s*([a-z0-9|]+)\) SUITES\+=", text, "verify.sh arg filter"
+    ).split("|")
+    # run_suite's case labels sit alone on their line: `    registry)`.
+    case_labels = re.findall(r"^\s{4}([a-z0-9]+)\)\s*$", text, re.MULTILINE)
+    full_loop = one_match(
+        r"^\s*for s in ([a-z0-9 ]+); do", text, "verify.sh full-run loop"
+    ).split()
+    return {
+        "verify.sh arg filter": arg_filter,
+        "verify.sh run_suite cases": case_labels,
+        "verify.sh bench loop": full_loop,
+    }
+
+
+def ci_matrix(text):
+    row = one_match(r"^\s*suite: \[([a-z0-9, ]+)\]", text, "ci.yml matrix")
+    return [s.strip() for s in row.split(",")]
+
+
+def nightly_loop(text):
+    row = one_match(
+        r"^\s*for suite in ([a-z0-9 ]+); do", text, "nightly.yml loop"
+    )
+    return row.split()
+
+
+def main():
+    lists = verify_sh_lists(read("scripts/verify.sh"))
+    lists["ci.yml bench-smoke matrix"] = ci_matrix(read(".github/workflows/ci.yml"))
+    lists["nightly.yml bench loop"] = nightly_loop(read(".github/workflows/nightly.yml"))
+
+    reference_name = "verify.sh run_suite cases"
+    reference = lists[reference_name]
+    ok = True
+    if len(set(reference)) != len(reference):
+        print(f"check_suites: duplicate suite in {reference_name}: {reference}")
+        ok = False
+    for name, suites in lists.items():
+        if name == reference_name:
+            continue
+        if suites != reference:
+            print(
+                f"check_suites: {name} disagrees with {reference_name}:\n"
+                f"  {name}: {suites}\n"
+                f"  {reference_name}: {reference}"
+            )
+            ok = False
+
+    # Every suite must be fully wired: schema, tracked metric, baseline.
+    sys.dont_write_bytecode = True  # no __pycache__ litter in scripts/
+    sys.path.insert(0, os.path.join(ROOT, "scripts"))
+    import check_bench
+
+    for suite in reference:
+        if suite not in check_bench.SCHEMAS:
+            print(f"check_suites: suite {suite!r} has no check_bench.py schema")
+            ok = False
+        if not check_bench.TRACKED.get(suite):
+            print(f"check_suites: suite {suite!r} tracks no headline metric")
+            ok = False
+        baseline = f"bench_baselines/BENCH_{suite}.json"
+        if not os.path.exists(os.path.join(ROOT, baseline)):
+            print(f"check_suites: suite {suite!r} is missing {baseline}")
+            ok = False
+    for suite in sorted(set(check_bench.SCHEMAS) - set(reference)):
+        print(
+            f"check_suites: check_bench.py knows {suite!r} but no suite "
+            f"runs it — dead schema or missing verify.sh wiring"
+        )
+        ok = False
+
+    if not ok:
+        return 1
+    print(
+        f"check_suites: OK — {len(reference)} suites consistent across "
+        f"{len(lists)} spellings: {' '.join(reference)}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

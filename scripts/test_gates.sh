@@ -1,0 +1,76 @@
+#!/usr/bin/env bash
+# Self-test for the CI gates themselves: prove that check_bench.py
+# passes good output, fails malformed output, fails regressions, fails
+# closed on a missing baseline, and that --update-baselines round-trips
+# into a green --compare. Runs against committed fixtures under
+# scripts/testdata/ — no cargo, no network, seconds of wall clock.
+#
+# The point: a gate that cannot fail is indistinguishable from a gate
+# that passes. Every mutation CI relies on to catch regressions is
+# exercised here on both sides.
+#
+#   scripts/test_gates.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+TD=scripts/testdata
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+
+fail() { echo "test_gates: FAIL: $*" >&2; exit 1; }
+
+echo "== syntax: bash -n on the shell gates =="
+bash -n scripts/verify.sh
+bash -n scripts/test_gates.sh
+
+echo "== syntax: py_compile on the python gates =="
+python3 -m py_compile scripts/check_bench.py scripts/check_suites.py
+rm -rf scripts/__pycache__  # py_compile's output; only the exit code matters
+
+echo "== pass path: good JSON clears the schema =="
+python3 scripts/check_bench.py registry "$TD/BENCH_registry_good.json" \
+  || fail "good registry JSON was rejected"
+
+echo "== fail path: malformed JSON is rejected =="
+if python3 scripts/check_bench.py registry "$TD/BENCH_registry_malformed.json" \
+    2>/dev/null; then
+  fail "malformed registry JSON (dropped requests, tampered exec) passed"
+fi
+
+echo "== fail path: truncated JSON is rejected =="
+head -c 40 "$TD/BENCH_registry_good.json" > "$TMP/truncated.json"
+if python3 scripts/check_bench.py registry "$TMP/truncated.json" 2>/dev/null; then
+  fail "truncated JSON passed"
+fi
+
+echo "== compare path: committed baseline gates the good run green =="
+python3 scripts/check_bench.py registry "$TD/BENCH_registry_good.json" \
+  --compare bench_baselines/BENCH_registry.json \
+  || fail "good run regressed against the committed baseline"
+
+echo "== regression path: inflated baseline must fail the gate =="
+if python3 scripts/check_bench.py registry "$TD/BENCH_registry_good.json" \
+    --compare "$TD/registry_regressed_baseline.json" 2>/dev/null; then
+  fail "a >15% regression passed the --compare gate"
+fi
+
+echo "== fail-closed path: missing baseline file must fail =="
+if python3 scripts/check_bench.py registry "$TD/BENCH_registry_good.json" \
+    --compare "$TMP/no_such_baseline.json" 2>/dev/null; then
+  fail "a missing baseline file passed --compare (gate guarded nothing)"
+fi
+
+echo "== update path: --update-baselines round-trips into green --compare =="
+python3 scripts/check_bench.py registry "$TD/BENCH_registry_good.json" \
+  --update-baselines "$TMP/rebase.json" \
+  || fail "--update-baselines failed on good output"
+grep -q '"warm_fetch_speedup"' "$TMP/rebase.json" \
+  || fail "updated baseline is missing the tracked metric"
+python3 scripts/check_bench.py registry "$TD/BENCH_registry_good.json" \
+  --compare "$TMP/rebase.json" \
+  || fail "a run compared against its own fresh baseline regressed"
+
+echo "== drift check: suite lists agree across verify.sh / ci.yml / nightly.yml =="
+python3 scripts/check_suites.py
+
+echo "test_gates: OK"

@@ -5,7 +5,8 @@
 #   scripts/verify.sh --smoke          # full gate + every bench smoke
 #   scripts/verify.sh --smoke SUITE…   # ONLY the named bench smoke(s)
 #                                      # (pipeline|adaptive|multiedge|
-#                                      # crossmodel|c10k|chaos|cache) — no
+#                                      # crossmodel|c10k|chaos|cache|
+#                                      # registry) — no
 #                                      # build/
 #                                      # test/
 #                                      # clippy pass; cargo bench builds
@@ -32,7 +33,7 @@ for arg in "$@"; do
   case "$arg" in
     --smoke) SMOKE=1 ;;
     --full) FULL=1 ;;
-    pipeline|adaptive|multiedge|crossmodel|c10k|chaos|cache) SUITES+=("$arg") ;;
+    pipeline|adaptive|multiedge|crossmodel|c10k|chaos|cache|registry) SUITES+=("$arg") ;;
     *) echo "verify.sh: unknown argument $arg" >&2; exit 2 ;;
   esac
 done
@@ -115,6 +116,10 @@ run_suite() {
       smoke_bench logits_cache cache BENCH_cache.json \
         '"zipf_speedup_8conn"' '"hit_rate"' '"coalesce_rate"' \
         '"bit_identical"' ;;
+    registry)
+      smoke_bench registry registry BENCH_registry.json \
+        '"warm_fetch_speedup"' '"cutover_gap_ms"' '"tamper_reject_rate"' \
+        '"rollback_ok"' ;;
     *) echo "verify.sh: unknown suite $1" >&2; exit 2 ;;
   esac
 }
@@ -145,7 +150,7 @@ echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
 if [ "$SMOKE" = 1 ] || [ "$FULL" = 1 ]; then
-  for s in pipeline adaptive multiedge crossmodel c10k chaos cache; do
+  for s in pipeline adaptive multiedge crossmodel c10k chaos cache registry; do
     run_suite "$s"
   done
 fi
