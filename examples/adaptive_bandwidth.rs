@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use jalad::coordinator::{AdaptationController, DecisionEngine, Scale};
+use jalad::coordinator::{ControlPlane, DecisionEngine, Scale};
 use jalad::network::throttle::RateHandle;
 use jalad::network::BandwidthTrace;
 use jalad::predictor::Tables;
@@ -78,7 +78,7 @@ fn main() -> Result<()> {
         });
     }
 
-    let controller = AdaptationController::new(engine, initial_bw);
+    let controller = ControlPlane::new(engine, initial_bw);
     let mut edge = EdgeClient::connect(&edge_exe, &model, addr, rate.clone(), controller)?;
 
     println!(

@@ -67,7 +67,7 @@ fn main() -> Result<()> {
         println!(
             "   BW {:>9.0} B/s → {:?}  predicted {:.2} ms, {:.0} B on wire",
             bw,
-            plan.decision,
+            plan.decision(),
             plan.latency * 1e3,
             plan.tx_bytes
         );
@@ -81,7 +81,7 @@ fn main() -> Result<()> {
     let n = 12;
     for id in 0..n {
         let s = jalad::data::gen::sample_image(9500 + id, 32);
-        let r = pipe.run(&s, plan.decision, &mut channel)?;
+        let r = pipe.run(&s, plan.decision(), &mut channel)?;
         correct += r.correct as usize;
         println!(
             "   req {id:2}  pred={} label={}  {}",

@@ -192,7 +192,7 @@ fn fig7(exe: &Executor, dir: &str) -> Result<()> {
                 model.into(),
                 format!("{da:.2}"),
                 format!("{:.1} ms", plan.latency * 1e3),
-                format!("{:?}", plan.decision),
+                format!("{:?}", plan.decision()),
                 format!("{:.3}", plan.acc_drop),
             ]);
         }
@@ -225,7 +225,7 @@ fn fig8(exe: &Executor, dir: &str) -> Result<()> {
             format!("{:.1}", plan.latency * 1e3),
             format!("{:.1}", png * 1e3),
             format!("{:.1}", origin * 1e3),
-            format!("{:?}", plan.decision),
+            format!("{:?}", plan.decision()),
         ]);
     }
     print_table(

@@ -47,7 +47,7 @@ fn speedup_row(e: &DecisionEngine, bw: f64) -> (String, String, f64) {
     let origin = e.cloud_only_latency(e.image_raw_bytes(), bw);
     (
         format!("{:.1}x/{:.1}x", png / jalad, origin / jalad),
-        format!("{:?}", plan.decision),
+        format!("{:?}", plan.decision()),
         jalad,
     )
 }

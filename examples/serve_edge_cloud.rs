@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use jalad::coordinator::{AdaptationController, DecisionEngine, Scale};
+use jalad::coordinator::{ControlPlane, DecisionEngine, Scale};
 use jalad::ilp::Decision;
 use jalad::metrics::Histogram;
 use jalad::network::throttle::RateHandle;
@@ -56,7 +56,7 @@ fn main() -> Result<()> {
         let engine = DecisionEngine::new(model, tables, latency, Scale::Measured, da)?;
 
         // --- JALAD over the socket ---
-        let controller = AdaptationController::new(engine, bw);
+        let controller = ControlPlane::new(engine, bw);
         let rate = RateHandle::new(bw as u64);
         let mut edge =
             EdgeClient::connect(&edge_exe, model, addr, rate.clone(), controller)?;
@@ -89,7 +89,7 @@ fn main() -> Result<()> {
             Scale::Measured,
             da,
         )?;
-        let mut ctrl2 = AdaptationController::new(engine2, bw);
+        let mut ctrl2 = ControlPlane::new(engine2, bw);
         ctrl2.resolve_at(f64::MAX); // force CloudOnly = PNG2Cloud
         let mut edge2 = EdgeClient::connect(&edge_exe, model, addr, rate, ctrl2)?;
         for id in 0..2 {
@@ -133,7 +133,7 @@ fn main() -> Result<()> {
     );
 
     let stats_json = {
-        let mut ctrl = AdaptationController::new(
+        let mut ctrl = ControlPlane::new(
             DecisionEngine::new(
                 "tinyconv",
                 Tables::load_or_build(&edge_exe, "tinyconv", &dir)?,

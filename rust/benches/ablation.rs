@@ -107,7 +107,7 @@ fn main() {
     for bw_kb in [50.0, 100.0, 300.0, 1000.0] {
         let bw = bw_kb * 1000.0;
         let adaptive = engine.decide(bw).latency;
-        let frozen_lat = match frozen.decision {
+        let frozen_lat = match frozen.decision() {
             Decision::CloudOnly => engine.cloud_only_latency(engine.image_png_bytes(), bw),
             Decision::Cut { i, c } => {
                 engine.latency.t_edge[i - 1]

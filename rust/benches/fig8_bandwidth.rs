@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo bench --bench fig8_bandwidth`
 
-use jalad::coordinator::{AdaptationController, DecisionEngine, Scale};
+use jalad::coordinator::{ControlPlane, DecisionEngine, Scale};
 use jalad::network::{BandwidthTrace, SimChannel};
 use jalad::predictor::Tables;
 use jalad::profiler::{DeviceModel, LatencyTables};
@@ -39,7 +39,7 @@ fn main() {
             format!("{:.1}", plan.latency * 1e3),
             format!("{:.1}", png * 1e3),
             format!("{:.1}", origin * 1e3),
-            format!("{:?}", plan.decision),
+            format!("{:?}", plan.decision()),
         ]);
     }
     print_table(
@@ -50,7 +50,7 @@ fn main() {
 
     // --- trace-driven adaptive run over the simulated channel ---
     let trace = BandwidthTrace::step(100_000.0, 1_500_000.0, 5.0, 60.0);
-    let mut controller = AdaptationController::new(engine, trace.at(0.0));
+    let mut controller = ControlPlane::new(engine, trace.at(0.0));
     let mut channel = SimChannel::new(trace, 0.0);
     let mut total_latency = 0.0;
     let mut replans = 0u32;

@@ -35,7 +35,7 @@ fn main() {
             let plan = engine.decide(BW);
             let png = engine.cloud_only_latency(engine.image_png_bytes(), BW);
             let origin = engine.cloud_only_latency(engine.image_raw_bytes(), BW);
-            let cut = match plan.decision {
+            let cut = match plan.decision() {
                 Decision::CloudOnly => "cloud-only".to_string(),
                 Decision::Cut { i, c } => format!("cut@{i},c={c}"),
             };

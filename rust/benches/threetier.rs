@@ -1,0 +1,293 @@
+//! Three-tier bench — the device → edge → cloud chain on the
+//! weak-device / slow-uplink profile, against the best two-tier
+//! (device ↔ cloud direct) deployment of the same hardware:
+//!
+//! 1. **predicted** — the multi-cut ILP's latency for the three-tier
+//!    topology vs the single-cut ILP on the thin direct uplink, both
+//!    on the `weak-phone` device class (4× stage cost, 400 KB/s
+//!    uplink). `speedup` is the paper's pitch for inserting an edge
+//!    box: deterministic, machine-independent.
+//! 2. **measured** — the same two deployments served for real over
+//!    loopback TCP with rate-throttled hops (device uplink at the
+//!    profile's 400 KB/s; edge → cloud at 2 MB/s): p50/p95 per arm.
+//! 3. **outage** — the middle tier is shut down under load; a device
+//!    with the cloud as its fallback endpoint keeps serving.
+//!    `recovery_ms` is shutdown → first fallback-served reply; the
+//!    degraded chain is the surviving device↔cloud pair.
+//!
+//! Headlines: `availability` (served / issued across every phase —
+//! the gate pins this at 1.0), `predicted.speedup`, `recovery_ms`.
+//!
+//! Emits `BENCH_threetier.json`; `scripts/verify.sh --smoke` runs this
+//! briefly and `scripts/check_bench.py` validates the shape and gates
+//! the headlines.
+//!
+//! Run: `cargo bench --bench threetier` (`-- --smoke` for CI).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jalad::coordinator::{ControlPlane, DecisionEngine};
+use jalad::ilp::MultiHopInstance;
+use jalad::network::throttle::RateHandle;
+use jalad::runtime::sim::sim_manifest;
+use jalad::runtime::{DeviceClass, Executor, ExecutorPool};
+use jalad::server::{CloudServer, EdgeClient, EdgeTier, ServeConfig, TierForwarder};
+use jalad::util::bench::Bencher;
+use jalad::util::json::Json;
+use jalad::util::stats;
+
+/// Edge boxes and the cloud run the calibrated profile.
+const EDGE_FANIN: usize = 8;
+/// Edge → cloud backhaul: wired, an order faster than the uplink.
+const BACKHAUL_BPS: f64 = 2_000_000.0;
+
+fn plane(bw: f64) -> ControlPlane {
+    ControlPlane::new(DecisionEngine::sim_default(0.10).unwrap(), bw)
+}
+
+fn sample(id: usize, shape: &[usize]) -> jalad::data::gen::Sample {
+    jalad::data::gen::Sample {
+        image: jalad::data::gen::sample_image_shaped(id % 16, id, shape),
+        label: id % 16,
+    }
+}
+
+fn sim_server() -> (Arc<CloudServer>, std::net::SocketAddr) {
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, EDGE_FANIN);
+    let server = Arc::new(CloudServer::with_pool(pool, ServeConfig::default()));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").expect("bind");
+    (server, addr)
+}
+
+/// A middle tier relaying toward `upstream` over the backhaul.
+fn tier_server(
+    upstream: std::net::SocketAddr,
+) -> (Arc<EdgeTier>, Arc<CloudServer>, std::net::SocketAddr) {
+    let exe: &'static Executor =
+        Box::leak(Box::new(Executor::sim_with(sim_manifest(), EDGE_FANIN)));
+    let client = EdgeClient::connect(
+        exe,
+        "simnet",
+        upstream,
+        RateHandle::new(BACKHAUL_BPS as u64),
+        plane(BACKHAUL_BPS),
+    )
+    .expect("tier connect");
+    let tier = Arc::new(EdgeTier::new(exe, client));
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, EDGE_FANIN);
+    let mut srv = CloudServer::with_pool(pool, ServeConfig::default());
+    srv.set_forwarder(Arc::clone(&tier) as Arc<dyn TierForwarder>);
+    let server = Arc::new(srv);
+    tier.attach(&server);
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").expect("bind");
+    (tier, server, addr)
+}
+
+fn percentiles_ms(latencies: &[f64]) -> (f64, f64) {
+    let ms: Vec<f64> = latencies.iter().map(|s| s * 1e3).collect();
+    (stats::percentile(&ms, 50.0), stats::percentile(&ms, 95.0))
+}
+
+fn main() {
+    let smoke = Bencher::smoke();
+    let n_arm = if smoke { 40 } else { 150 };
+    let n_outage = if smoke { 15 } else { 40 };
+
+    let dev = DeviceClass::by_name("weak-phone").expect("profile");
+    let manifest = sim_manifest();
+    let shape = manifest.model("simnet").unwrap().input_shape.clone();
+    let mut issued = 0usize;
+    let mut served = 0usize;
+
+    // ---- Phase 1: predicted latencies (deterministic ILP) ----
+    // Two-tier comparator: the weak device talks to the cloud over its
+    // thin uplink, paying its own 4× stage cost for any on-device cut.
+    let eng = DecisionEngine::sim_default(0.10).expect("engine");
+    let mut direct = eng.instance(dev.uplink_bps);
+    for t in &mut direct.t_edge {
+        *t *= dev.tier_scale;
+    }
+    let two = direct.solve();
+    // Three-tier: the same device one short hop from an edge box at
+    // calibrated speed, backhaul to the same cloud.
+    let three_inst = MultiHopInstance::three_tier(
+        eng.instance(BACKHAUL_BPS),
+        dev.uplink_bps,
+        BACKHAUL_BPS,
+        dev.tier_scale,
+        1.0,
+    );
+    let three = three_inst.solve();
+    let predicted_speedup = two.latency / three.latency.max(1e-12);
+    println!(
+        "predicted ({}): two-tier {:.2} ms {:?} vs three-tier {:.2} ms {:?} — {:.2}x",
+        dev.name,
+        two.latency * 1e3,
+        two.cuts,
+        three.latency * 1e3,
+        three.cuts,
+        predicted_speedup
+    );
+
+    // ---- Phase 2a: measured three-tier arm ----
+    let exe = Executor::sim_with(manifest.clone(), dev.fanin);
+    let (_cloud3, cloud3_addr) = sim_server();
+    let (tier, _edge_srv, edge_addr) = tier_server(cloud3_addr);
+    let mut device = EdgeClient::connect(
+        &exe,
+        "simnet",
+        edge_addr,
+        RateHandle::new(dev.uplink_bps as u64),
+        plane(dev.uplink_bps),
+    )
+    .expect("device connect");
+    device.set_request_timeout(Duration::from_secs(5)).expect("deadline");
+    let mut three_lat = Vec::with_capacity(n_arm);
+    for id in 0..n_arm {
+        issued += 1;
+        let t0 = Instant::now();
+        match device.infer(&sample(id, &shape)) {
+            Ok(_) => served += 1,
+            Err(e) => eprintln!("three-tier arm: request {id} failed: {e:#}"),
+        }
+        three_lat.push(t0.elapsed().as_secs_f64());
+    }
+    let (three_p50, three_p95) = percentiles_ms(&three_lat);
+    let (forwarded, passthrough, span_runs, _locals, _sheds) = tier.counters();
+    drop(device);
+    CloudServer::request_shutdown(edge_addr);
+    CloudServer::request_shutdown(cloud3_addr);
+
+    // ---- Phase 2b: measured two-tier arm (same device, direct) ----
+    let (_cloud2, cloud2_addr) = sim_server();
+    let mut device = EdgeClient::connect(
+        &exe,
+        "simnet",
+        cloud2_addr,
+        RateHandle::new(dev.uplink_bps as u64),
+        plane(dev.uplink_bps),
+    )
+    .expect("device connect");
+    device.set_request_timeout(Duration::from_secs(5)).expect("deadline");
+    let mut two_lat = Vec::with_capacity(n_arm);
+    for id in 0..n_arm {
+        issued += 1;
+        let t0 = Instant::now();
+        match device.infer(&sample(id, &shape)) {
+            Ok(_) => served += 1,
+            Err(e) => eprintln!("two-tier arm: request {id} failed: {e:#}"),
+        }
+        two_lat.push(t0.elapsed().as_secs_f64());
+    }
+    let (two_p50, two_p95) = percentiles_ms(&two_lat);
+    drop(device);
+    CloudServer::request_shutdown(cloud2_addr);
+
+    // ---- Phase 3: tier outage, fallback recovery ----
+    let (_cloudo, cloudo_addr) = sim_server();
+    let (_tier_o, _edge_srv_o, edge_o_addr) = tier_server(cloudo_addr);
+    let mut device = EdgeClient::connect(
+        &exe,
+        "simnet",
+        edge_o_addr,
+        RateHandle::new(dev.uplink_bps as u64),
+        plane(dev.uplink_bps),
+    )
+    .expect("device connect");
+    device.set_request_timeout(Duration::from_secs(5)).expect("deadline");
+    device.set_fallback_addr(Some(cloudo_addr));
+    for id in 0..5 {
+        issued += 1;
+        if device.infer(&sample(id, &shape)).is_ok() {
+            served += 1;
+        }
+    }
+    CloudServer::request_shutdown(edge_o_addr);
+    let outage_start = Instant::now();
+    // Recovery: shutdown → first served reply over the degraded
+    // device↔cloud pair. Stays at the sentinel -1 if serving never
+    // resumes (the gate rejects it).
+    let mut recovery_ms = -1.0f64;
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while Instant::now() < deadline {
+        issued += 1;
+        match device.infer(&sample(200, &shape)) {
+            Ok(_) => {
+                served += 1;
+                recovery_ms = outage_start.elapsed().as_secs_f64() * 1e3;
+                break;
+            }
+            Err(e) => eprintln!("outage phase: request failed: {e:#}"),
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let mut outage_serves = 0usize;
+    for id in 0..n_outage {
+        issued += 1;
+        match device.infer(&sample(id, &shape)) {
+            Ok(_) => {
+                served += 1;
+                outage_serves += 1;
+            }
+            Err(e) => eprintln!("outage phase: request {id} failed: {e:#}"),
+        }
+    }
+    let fallback_serves = device.fallback_serves();
+    drop(device);
+    CloudServer::request_shutdown(cloudo_addr);
+
+    let availability = served as f64 / issued.max(1) as f64;
+    println!(
+        "three-tier: p50 {three_p50:.2} ms p95 {three_p95:.2} ms \
+         ({forwarded} forwarded, {passthrough} passthrough, {span_runs} span runs)"
+    );
+    println!("two-tier:   p50 {two_p50:.2} ms p95 {two_p95:.2} ms");
+    println!(
+        "outage: recovery {recovery_ms:.0} ms, {outage_serves} served through, \
+         {fallback_serves} fallback serves"
+    );
+    println!("availability: {served}/{issued} = {availability:.4}");
+
+    let doc = Json::obj(vec![
+        ("availability", Json::num(availability)),
+        ("recovery_ms", Json::num(recovery_ms)),
+        (
+            "predicted",
+            Json::obj(vec![
+                ("device_class", Json::Str(dev.name.to_string())),
+                ("two_tier_ms", Json::num(two.latency * 1e3)),
+                ("three_tier_ms", Json::num(three.latency * 1e3)),
+                ("speedup", Json::num(predicted_speedup)),
+            ]),
+        ),
+        (
+            "three_tier",
+            Json::obj(vec![
+                ("requests", Json::num(n_arm as f64)),
+                ("p50_ms", Json::num(three_p50)),
+                ("p95_ms", Json::num(three_p95)),
+                ("forwarded", Json::num(forwarded as f64)),
+                ("passthrough", Json::num(passthrough as f64)),
+                ("span_runs", Json::num(span_runs as f64)),
+            ]),
+        ),
+        (
+            "two_tier",
+            Json::obj(vec![
+                ("requests", Json::num(n_arm as f64)),
+                ("p50_ms", Json::num(two_p50)),
+                ("p95_ms", Json::num(two_p95)),
+            ]),
+        ),
+        (
+            "outage",
+            Json::obj(vec![
+                ("served_through", Json::num(outage_serves as f64)),
+                ("fallback_serves", Json::num(fallback_serves as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_threetier.json", doc.to_pretty()).expect("write BENCH_threetier.json");
+    println!("wrote BENCH_threetier.json");
+}

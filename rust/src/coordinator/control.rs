@@ -30,14 +30,9 @@
 //! trace-replay tests drive it directly.
 
 use crate::coordinator::decision::DecisionEngine;
-use crate::ilp::jalad::Plan;
-use crate::ilp::{CloudLoad, Decision};
+use crate::ilp::{CloudLoad, Decision, Plan};
 use crate::network::BandwidthEstimator;
 use crate::server::proto::CloudTelemetry;
-
-/// Historical name: the bandwidth-only controller this grew out of.
-/// Every call site that compiled against it still does.
-pub type AdaptationController = ControlPlane;
 
 /// How edge-ward a decision is: cloud-only ships everything (depth 0),
 /// a cut after stage `i` keeps `i` stages on the edge.
@@ -193,10 +188,10 @@ impl ControlPlane {
             self.load.queue_wait.max(reported.queue_wait),
             self.load.utilization.max(reported.utilization),
         );
-        let before = cut_depth(self.current.decision);
+        let before = cut_depth(self.current.decision());
         let bw = self.bandwidth();
         let mut plan = self.engine.decide_with_load(bw, self.load);
-        if cut_depth(plan.decision) <= before {
+        if cut_depth(plan.decision()) <= before {
             // The unconstrained optimum refused to move (or would move
             // cloud-ward — the one direction a shed must never take).
             // Force the next-later cut; at the deepest feasible stage,
@@ -291,7 +286,7 @@ impl ControlPlane {
     /// plan when the decision changed.
     fn resolve_now(&mut self) -> Option<&Plan> {
         let plan = self.engine.decide_with_load(self.bandwidth(), self.load);
-        let changed = plan.decision != self.current.decision;
+        let changed = plan.cuts != self.current.cuts;
         self.note_change(&plan);
         self.current = plan;
         self.resolves += 1;
@@ -304,7 +299,7 @@ impl ControlPlane {
     }
 
     fn note_change(&mut self, next: &Plan) {
-        if next.decision != self.current.decision {
+        if next.cuts != self.current.cuts {
             self.plan_changes += 1;
         }
     }
@@ -370,7 +365,7 @@ mod tests {
         // ~73 KB, so "fast" means ≳13 MB/s), then collapse the link.
         let mut c = controller();
         c.resolve_at(1e8);
-        let initial = c.plan().decision;
+        let initial = c.plan().decision();
         assert_eq!(initial, Decision::CloudOnly, "100 MB/s should upload");
         // Collapse to 5 KB/s: EWMA needs a few observations to drift 15%.
         let mut changed = false;
@@ -381,9 +376,9 @@ mod tests {
             }
         }
         assert!(changed, "controller never re-decoupled");
-        assert_ne!(c.plan().decision, initial);
+        assert_ne!(c.plan().decision(), initial);
         // At 5 KB/s the plan must be a deep cut with small wire size.
-        match c.plan().decision {
+        match c.plan().decision() {
             Decision::Cut { i, .. } => assert!(i >= 1),
             Decision::CloudOnly => panic!("cloud-only at 5 KB/s is wrong"),
         }
@@ -395,7 +390,7 @@ mod tests {
         c.resolve_at(5_000.0);
         let deep = c.plan().latency;
         let p = c.resolve_at(1e12).clone();
-        assert_eq!(p.decision, Decision::CloudOnly);
+        assert_eq!(p.decision(), Decision::CloudOnly);
         assert!(p.latency < deep);
     }
 
@@ -419,7 +414,7 @@ mod tests {
     fn load_spike_resolves_and_recovers() {
         let mut c = controller();
         c.resolve_at(1e8);
-        assert_eq!(c.plan().decision, Decision::CloudOnly);
+        assert_eq!(c.plan().decision(), Decision::CloudOnly);
         let base_resolves = c.resolves();
         // A sustained utilization spike must trigger a re-solve within
         // a few replies (EWMA α=0.4 → 2 observations pass 0.10 drift).
@@ -434,14 +429,14 @@ mod tests {
             c.observe_cloud_load(CloudLoad::default());
         }
         assert!(c.cloud_load().utilization < 0.05);
-        assert_eq!(c.plan().decision, Decision::CloudOnly, "idle cloud at 100 MB/s uploads");
+        assert_eq!(c.plan().decision(), Decision::CloudOnly, "idle cloud at 100 MB/s uploads");
     }
 
     #[test]
     fn busy_always_moves_edgeward_until_the_last_stage() {
         let mut c = controller();
         c.resolve_at(1e8);
-        assert_eq!(cut_depth(c.plan().decision), 0, "fast link starts cloud-only");
+        assert_eq!(cut_depth(c.plan().decision()), 0, "fast link starts cloud-only");
         let t = CloudTelemetry {
             queue_wait_p95_ms: 40.0,
             utilization: 0.97,
@@ -455,7 +450,7 @@ mod tests {
         // Repeated sheds must walk the cut strictly edge-ward until it
         // parks at the deepest feasible stage — never oscillate back.
         for k in 0..n + 3 {
-            let next = cut_depth(c.on_busy(&t).decision);
+            let next = cut_depth(c.on_busy(&t).decision());
             assert!(
                 next > depth || (next == depth && next == n) || depth == n,
                 "shed {k}: depth went {depth} → {next}"
@@ -477,11 +472,11 @@ mod tests {
         for _ in 0..40 {
             c.observe_transfer(10_000_000, 0.1);
         }
-        assert_eq!(cut_depth(c.plan().decision), 0, "fast link should upload");
+        assert_eq!(cut_depth(c.plan().decision()), 0, "fast link should upload");
         let n = c.engine.num_stages();
 
         let open = c.on_breaker_open().clone();
-        assert_eq!(cut_depth(open.decision), n, "open must park at the i=N cut");
+        assert_eq!(cut_depth(open.decision()), n, "open must park at the i=N cut");
         assert_eq!(c.breaker_opens(), 1);
 
         c.note_local_serve();
@@ -491,7 +486,7 @@ mod tests {
         // Reclose re-solves from the live signals: the fast link is
         // still fast, so the cut walks all the way back cloud-ward.
         let closed = c.on_breaker_close().clone();
-        assert_eq!(cut_depth(closed.decision), 0, "reclose must walk the cut cloud-ward");
+        assert_eq!(cut_depth(closed.decision()), 0, "reclose must walk the cut cloud-ward");
         assert_eq!(c.breaker_recloses(), 1);
     }
 

@@ -14,8 +14,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::ilp::{CloudLoad, Decision, JaladInstance};
-use crate::ilp::jalad::Plan;
+use crate::ilp::{CloudLoad, Decision, JaladInstance, MultiHopInstance, Plan};
 use crate::models::fullscale_stages;
 use crate::predictor::Tables;
 use crate::profiler::LatencyTables;
@@ -225,10 +224,31 @@ impl DecisionEngine {
         Some(plan)
     }
 
-    /// Translate a plan's `c` from grid index back to a bit-width.
+    /// Solve the three-tier device→edge→cloud instance: two hops with
+    /// their own bandwidths, a device-class compute multiplier on the
+    /// lowest tier and an edge-site multiplier on the middle one.
+    pub fn decide_three_tier(
+        &self,
+        device_bw: f64,
+        edge_bw: f64,
+        load: CloudLoad,
+        device_scale: f64,
+        edge_scale: f64,
+    ) -> Plan {
+        let base = self.instance_with_load(edge_bw, load);
+        let inst = MultiHopInstance::three_tier(base, device_bw, edge_bw, device_scale, edge_scale);
+        let mut plan = inst.solve();
+        self.translate_c(&mut plan);
+        plan
+    }
+
+    /// Translate every cut's `c` from grid index back to a bit-width
+    /// (raw-image cuts have no `c` to translate).
     fn translate_c(&self, plan: &mut Plan) {
-        if let Decision::Cut { i, c } = plan.decision {
-            plan.decision = Decision::Cut { i, c: self.tables.c_grid[c as usize - 1] };
+        for cut in &mut plan.cuts {
+            if cut.i > 0 {
+                cut.c = self.tables.c_grid[cut.c as usize - 1];
+            }
         }
     }
 
@@ -301,7 +321,7 @@ pub(crate) mod tests {
     fn low_bandwidth_cuts_inside_network() {
         let e = engine("vgg16", 0.10);
         let plan = e.decide(300_000.0 / 8.0 * 8.0 * 0.3); // ~paper's 300KBps
-        match plan.decision {
+        match plan.decision() {
             Decision::Cut { i, c } => {
                 assert!(i >= 1);
                 assert!(e.tables.c_grid.contains(&c));
@@ -317,7 +337,7 @@ pub(crate) mod tests {
         // upload the raw PNG images to the cloud".
         let e = engine("vgg16", 0.10);
         let plan = e.decide(1e12);
-        assert_eq!(plan.decision, Decision::CloudOnly);
+        assert_eq!(plan.decision(), Decision::CloudOnly);
     }
 
     #[test]
@@ -353,7 +373,7 @@ pub(crate) mod tests {
             Decision::Cut { i, .. } => i,
         };
         assert!(
-            depth(loaded.decision) >= depth(idle.decision),
+            depth(loaded.decision()) >= depth(idle.decision()),
             "load must never move the cut cloud-ward: {idle:?} → {loaded:?}"
         );
         assert!(loaded.latency >= idle.latency, "load cannot make things faster");
@@ -361,9 +381,9 @@ pub(crate) mod tests {
         // zero-load special case, bit-for-bit.
         assert_eq!(e.decide_with_load(bw, CloudLoad::default()), idle);
         // Forced edge-ward restriction honors min_i and the c grid.
-        if let Decision::Cut { i, .. } = idle.decision {
+        if let Decision::Cut { i, .. } = idle.decision() {
             if let Some(p) = e.decide_edgeward(bw, CloudLoad::default(), i + 1) {
-                match p.decision {
+                match p.decision() {
                     Decision::Cut { i: j, c } => {
                         assert!(j > i);
                         assert!(e.tables.c_grid.contains(&c));
@@ -381,20 +401,20 @@ pub(crate) mod tests {
         assert_eq!(e.num_stages(), 4);
         // Idle at 50 KB/s: the 600 B image upload wins.
         let idle = e.decide(50_000.0);
-        assert_eq!(idle.decision, Decision::CloudOnly, "{idle:?}");
+        assert_eq!(idle.decision(), Decision::CloudOnly, "{idle:?}");
         // A loaded cloud moves the cut strictly edge-ward…
         let spike = e.decide_with_load(50_000.0, CloudLoad::new(0.040, 0.9));
-        match spike.decision {
+        match spike.decision() {
             Decision::Cut { i, .. } => assert!(i >= 2, "{spike:?}"),
             Decision::CloudOnly => panic!("spike must leave cloud-only: {spike:?}"),
         }
         // …and a saturated one parks at the logits-forward cut the
         // admission controller always admits.
         let busy = e.decide_with_load(50_000.0, CloudLoad::new(0.040, 0.97));
-        assert_eq!(busy.decision, Decision::Cut { i: 4, c: 2 }, "{busy:?}");
+        assert_eq!(busy.decision(), Decision::Cut { i: 4, c: 2 }, "{busy:?}");
         // Bandwidth collapse (idle cloud) also ends at the deep cut.
         let slow = e.decide(3_000.0);
-        assert_eq!(slow.decision, Decision::Cut { i: 4, c: 2 }, "{slow:?}");
+        assert_eq!(slow.decision(), Decision::Cut { i: 4, c: 2 }, "{slow:?}");
     }
 
     #[test]

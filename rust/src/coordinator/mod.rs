@@ -23,7 +23,7 @@ pub mod pipeline;
 pub mod router;
 pub mod session;
 
-pub use control::{cut_depth, AdaptationController, ControlPlane};
+pub use control::{cut_depth, ControlPlane};
 pub use baselines::Baseline;
 pub use decision::{DecisionEngine, Scale};
 pub use pipeline::{LocalPipeline, RunResult};

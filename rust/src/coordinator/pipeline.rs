@@ -130,7 +130,7 @@ impl<'a> LocalPipeline<'a> {
         channel: &mut SimChannel,
     ) -> Result<RunResult> {
         let plan = engine.decide(channel.bandwidth_now());
-        self.run(sample, plan.decision, channel)
+        self.run(sample, plan.decision(), channel)
     }
 
     /// Closed-loop run: execute the control plane's current plan, then
@@ -152,7 +152,7 @@ impl<'a> LocalPipeline<'a> {
         sample: &Sample,
         channel: &mut SimChannel,
     ) -> Result<(RunResult, bool)> {
-        let decision = control.plan().decision;
+        let decision = control.plan().decision();
         let result = self.run(sample, decision, channel)?;
         let replanned = result.breakdown.tx_bytes >= crate::server::edge::MIN_ESTIMATE_BYTES
             && control

@@ -62,6 +62,44 @@ pub enum Decision {
     Cut { i: usize, c: u8 },
 }
 
+/// One hop's cut: the payload a tier puts on the wire toward the next
+/// tier up. `i` is how many stages have been completed when the payload
+/// crosses this hop; `c` is the bit-width it was quantized to when that
+/// depth was reached. `i == 0` (with `c == 0`) means the raw compressed
+/// input image — the cloud-only corner of §III-E generalized per hop.
+///
+/// In a multi-hop plan a *passthrough* hop repeats the previous hop's
+/// `(i, c)` verbatim: the tier relays the payload without recomputing
+/// or requantizing, so every hop's cut is self-describing on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cut {
+    /// Stages completed below this hop (0 = raw image).
+    pub i: usize,
+    /// Quantization bit-width of the payload (0 = raw image).
+    pub c: u8,
+}
+
+impl Cut {
+    /// The cloud-only / raw-image cut.
+    pub const IMAGE: Cut = Cut { i: 0, c: 0 };
+
+    pub fn from_decision(d: Decision) -> Cut {
+        match d {
+            Decision::CloudOnly => Cut::IMAGE,
+            Decision::Cut { i, c } => Cut { i, c },
+        }
+    }
+
+    /// The two-tier [`Decision`] this cut encodes.
+    pub fn decision(self) -> Decision {
+        if self.i == 0 {
+            Decision::CloudOnly
+        } else {
+            Decision::Cut { i: self.i, c: self.c }
+        }
+    }
+}
+
 /// One fully-materialized ILP instance.
 #[derive(Debug, Clone)]
 pub struct JaladInstance {
@@ -90,15 +128,51 @@ pub struct JaladInstance {
     pub load: CloudLoad,
 }
 
+/// A solved execution plan: one [`Cut`] per hop, device-side first,
+/// plus the solver's predictions for the whole chain. The historical
+/// two-tier plan is the one-hop special case ([`Plan::two_tier`]); a
+/// three-tier device→edge→cloud plan carries two cuts.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Plan {
-    pub decision: Decision,
+    /// Ordered per-hop cuts (index 0 = the lowest hop, e.g.
+    /// device→edge; last = the hop into the cloud).
+    pub cuts: Vec<Cut>,
     /// Predicted total latency (s).
     pub latency: f64,
     /// Predicted accuracy drop of the chosen plan.
     pub acc_drop: f64,
-    /// Predicted transmitted bytes.
+    /// Predicted transmitted bytes, summed over every hop.
     pub tx_bytes: f64,
+}
+
+impl Plan {
+    /// The historical single-cut constructor: old two-tier call sites
+    /// stay one line.
+    pub fn two_tier(decision: Decision, latency: f64, acc_drop: f64, tx_bytes: f64) -> Plan {
+        Plan { cuts: vec![Cut::from_decision(decision)], latency, acc_drop, tx_bytes }
+    }
+
+    /// What the *lowest* tier does: the first hop's cut as a two-tier
+    /// [`Decision`] (the device-side request path only ever encodes its
+    /// own hop).
+    pub fn decision(&self) -> Decision {
+        self.cuts.first().copied().unwrap_or(Cut::IMAGE).decision()
+    }
+
+    /// Number of hops this plan spans (1 = the classic edge↔cloud pair).
+    pub fn hops(&self) -> usize {
+        self.cuts.len()
+    }
+
+    /// The cut crossing hop `hop` (0-based from the device side).
+    pub fn cut(&self, hop: usize) -> Cut {
+        self.cuts[hop]
+    }
+
+    /// Stages completed before the payload enters the top (cloud) tier.
+    pub fn final_depth(&self) -> usize {
+        self.cuts.last().map(|c| c.i).unwrap_or(0)
+    }
 }
 
 impl JaladInstance {
@@ -183,7 +257,7 @@ impl JaladInstance {
             let (i, c) = self.decode_var(v);
             self.size[i - 1][c as usize - 1]
         };
-        Plan { decision, latency: self.latency_of(v), acc_drop: self.acc_of(v), tx_bytes }
+        Plan::two_tier(decision, self.latency_of(v), self.acc_of(v), tx_bytes)
     }
 
     /// Solve with the cut constrained strictly edge-ward: only `Cut`
@@ -271,7 +345,7 @@ mod tests {
         // (2,c=1): 0.020+0.002+0.003 = 0.025  acc 0.15 > 0.1 infeasible
         // (2,c=2): 0.020+0.004+0.003 = 0.027  acc 0.01 ok   <-- best
         // (3,c=1): 0.030+0.0005 = 0.0305 acc 0.05 ok
-        assert_eq!(plan.decision, Decision::Cut { i: 2, c: 2 });
+        assert_eq!(plan.decision(), Decision::Cut { i: 2, c: 2 });
         assert!((plan.latency - 0.027).abs() < 1e-9, "{}", plan.latency);
     }
 
@@ -281,10 +355,10 @@ mod tests {
         inst.delta_alpha = 0.0;
         // Only acc == 0 options: cloud-only (0.038) and (3,c=2) (0.031).
         let plan = inst.solve();
-        assert_eq!(plan.decision, Decision::Cut { i: 3, c: 2 });
+        assert_eq!(plan.decision(), Decision::Cut { i: 3, c: 2 });
         inst.acc[2][1] = 0.001; // now nothing but cloud-only is lossless
         let plan = inst.solve();
-        assert_eq!(plan.decision, Decision::CloudOnly);
+        assert_eq!(plan.decision(), Decision::CloudOnly);
     }
 
     #[test]
@@ -293,7 +367,7 @@ mod tests {
         inst.bandwidth = 1e9; // transmission free → lowest compute wins
         let plan = inst.solve();
         // cloud-only = t_cloud_full = 8 ms beats any edge compute path.
-        assert_eq!(plan.decision, Decision::CloudOnly);
+        assert_eq!(plan.decision(), Decision::CloudOnly);
     }
 
     #[test]
@@ -341,7 +415,7 @@ mod tests {
         assert_eq!(inst.load.inflation(), 1.0);
         assert!(inst.load.is_idle());
         let plan = inst.solve();
-        assert_eq!(plan.decision, Decision::Cut { i: 2, c: 2 });
+        assert_eq!(plan.decision(), Decision::Cut { i: 2, c: 2 });
         assert!((plan.latency - 0.027).abs() < 1e-9);
     }
 
@@ -359,7 +433,7 @@ mod tests {
             Decision::Cut { i, .. } => i,
         };
         assert!(
-            depth(loaded.decision) > depth(idle.decision),
+            depth(loaded.decision()) > depth(idle.decision()),
             "load must push the cut edge-ward: idle {idle:?} loaded {loaded:?}"
         );
         // The loaded latency estimate includes the queue wait.
@@ -384,12 +458,12 @@ mod tests {
     fn min_cut_constraint_forces_later_cuts() {
         let inst = toy(); // unconstrained optimum: Cut { i: 2, c: 2 }
         let p = inst.solve_min_cut(3).unwrap();
-        match p.decision {
+        match p.decision() {
             Decision::Cut { i, .. } => assert!(i >= 3, "{p:?}"),
             Decision::CloudOnly => panic!("min-cut solve must never pick cloud-only"),
         }
         // Constrained optimum at i ≥ 3: (3,c=1) 0.0305 vs (3,c=2) 0.031.
-        assert_eq!(p.decision, Decision::Cut { i: 3, c: 1 });
+        assert_eq!(p.decision(), Decision::Cut { i: 3, c: 1 });
         // Past the last stage there is nothing to force.
         assert!(inst.solve_min_cut(4).is_none());
         // An infeasible accuracy bound under the restriction is None,

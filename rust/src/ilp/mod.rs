@@ -12,11 +12,17 @@
 //! * [`brute`] — exhaustive oracle used to cross-check the solver in
 //!   tests and property tests;
 //! * [`jalad`] — the paper's concrete formulation built from latency and
-//!   accuracy tables, plus helpers to build instances from predictors.
+//!   accuracy tables, plus helpers to build instances from predictors;
+//! * [`multihop`] — the multi-tier generalization: H hops with per-hop
+//!   bandwidths and per-tier compute rates, solved over ordered cut
+//!   sequences (device → edge → cloud is the H = 2 case; H = 1 is the
+//!   paper's instance, bit-identical).
 
 pub mod brute;
 pub mod jalad;
+pub mod multihop;
 pub mod solver;
 
-pub use jalad::{CloudLoad, Decision, JaladInstance};
+pub use jalad::{CloudLoad, Cut, Decision, JaladInstance, Plan};
+pub use multihop::MultiHopInstance;
 pub use solver::{Ilp01, Solution, SolveStats};

@@ -1,0 +1,385 @@
+//! Multi-tier generalization of the §III-E decoupling ILP.
+//!
+//! The paper picks **one** cut in a two-tier edge↔cloud pipeline. The
+//! DNN-partition survey (arxiv 2304.10020) frames cloud–edge–end
+//! partition as the general problem that two-tier cut specializes, and
+//! Edgent (arxiv 1806.07840) treats device–edge synergy as a tier of
+//! its own. [`MultiHopInstance`] is that generalization: `H` hops with
+//! per-hop bandwidths and per-tier compute rates, solved over ordered
+//! cut sequences.
+//!
+//! A candidate is a sequence `cuts[0..H]` of [`Cut`]s, one per hop,
+//! with non-decreasing depth: `cuts[m].i` stages are complete when the
+//! payload crosses hop `m`. A hop that repeats the previous depth is a
+//! *passthrough* — the tier relays the previous hop's payload verbatim
+//! (same `(i, c)`, no requantization, so quantization error is paid
+//! once per fresh cut, not per hop). A strict depth increase picks a
+//! fresh bit-width for the newly produced activation.
+//!
+//! Latency is the §III-E sum, per tier and per hop, in a fixed
+//! left-associated order chosen so that the one-hop instance with
+//! `tier_scale = [1.0]` reproduces [`JaladInstance`]'s float arithmetic
+//! **bit-for-bit** (`1.0 * x`, `0.0 + x` and `x - 0.0` are exact):
+//!
+//! ```text
+//!   Σ_m  tier_scale[m] · (T_E(i_m) − T_E(i_{m-1}))      tier compute
+//! + Σ_m  S(cut_m) / hop_bandwidth[m]                     hop transfer
+//! + T_C(i_last) · 1/(1−ρ)  +  queue_wait                 cloud + load
+//! ```
+//!
+//! The solve is the same 0-1 ILP shape as the paper's — one variable
+//! per candidate sequence, `Σ x = 1`, accuracy row `≤ Δα` — run through
+//! the exact branch-and-bound [`Ilp01`] solver and property-tested
+//! against the exhaustive scan ([`MultiHopInstance::solve_scan`]).
+
+use super::jalad::{Cut, JaladInstance, Plan};
+use super::solver::Ilp01;
+
+/// An `H`-hop decoupling instance. Tiers are numbered from the device
+/// side: tier `m < H` runs its span at `tier_scale[m]` × the base
+/// instance's edge profile and ships across `hop_bandwidth[m]`; the
+/// top tier is the cloud, costed from the base `t_cloud` tables under
+/// the base [`CloudLoad`](super::CloudLoad).
+#[derive(Debug, Clone)]
+pub struct MultiHopInstance {
+    /// Tables, Δα and cloud load (the base `bandwidth` field is unused
+    /// except by [`MultiHopInstance::two_tier`], which lifts it into
+    /// the single hop).
+    pub base: JaladInstance,
+    /// Per-hop uplink bandwidth, bytes/second, device-side first.
+    pub hop_bandwidth: Vec<f64>,
+    /// Per-tier compute multiplier vs the base edge profile (1.0 = the
+    /// profiled edge; a weak phone might be 4–8×). One per non-cloud
+    /// tier, aligned with `hop_bandwidth`.
+    pub tier_scale: Vec<f64>,
+}
+
+impl MultiHopInstance {
+    /// The paper's two-tier instance lifted into the multi-hop shape:
+    /// one hop at the base bandwidth, compute scale 1. Solves
+    /// bit-identically to `base.solve()`.
+    pub fn two_tier(base: JaladInstance) -> Self {
+        let bw = base.bandwidth;
+        Self { base, hop_bandwidth: vec![bw], tier_scale: vec![1.0] }
+    }
+
+    /// Device → edge → cloud: two hops, two compute tiers below the
+    /// cloud.
+    pub fn three_tier(
+        base: JaladInstance,
+        device_bw: f64,
+        edge_bw: f64,
+        device_scale: f64,
+        edge_scale: f64,
+    ) -> Self {
+        Self {
+            base,
+            hop_bandwidth: vec![device_bw, edge_bw],
+            tier_scale: vec![device_scale, edge_scale],
+        }
+    }
+
+    pub fn hops(&self) -> usize {
+        self.hop_bandwidth.len()
+    }
+
+    /// Cumulative base edge time through stage `i` (0 stages = 0).
+    fn prefix(&self, i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            self.base.t_edge[i - 1]
+        }
+    }
+
+    /// Wire bytes of one hop's payload.
+    fn hop_bytes(&self, cut: Cut) -> f64 {
+        if cut.i == 0 {
+            self.base.image_bytes
+        } else {
+            self.base.size[cut.i - 1][cut.c as usize - 1]
+        }
+    }
+
+    /// Predicted end-to-end latency of a cut sequence (seconds).
+    pub fn latency_of(&self, cuts: &[Cut]) -> f64 {
+        debug_assert_eq!(cuts.len(), self.hops());
+        let infl = self.base.load.inflation();
+        let mut lat = 0.0;
+        let mut prev = 0usize;
+        for (m, cut) in cuts.iter().enumerate() {
+            if cut.i > prev {
+                lat += self.tier_scale[m] * (self.prefix(cut.i) - self.prefix(prev));
+            }
+            lat += self.hop_bytes(*cut) / self.hop_bandwidth[m];
+            prev = cut.i;
+        }
+        if prev == 0 {
+            lat += self.base.t_cloud_full * infl;
+        } else {
+            lat += self.base.t_cloud[prev - 1] * infl;
+        }
+        lat + self.base.load.queue_wait
+    }
+
+    /// Predicted accuracy drop: additive over *fresh* quantization
+    /// events only — a passthrough hop relays already-quantized bytes
+    /// and costs nothing extra.
+    pub fn acc_of(&self, cuts: &[Cut]) -> f64 {
+        let mut acc = 0.0;
+        let mut prev = 0usize;
+        for cut in cuts {
+            if cut.i > prev {
+                acc += self.base.acc[cut.i - 1][cut.c as usize - 1];
+            }
+            prev = cut.i;
+        }
+        acc
+    }
+
+    /// Predicted transmitted bytes, summed over every hop.
+    pub fn tx_of(&self, cuts: &[Cut]) -> f64 {
+        let mut tx = 0.0;
+        for (m, cut) in cuts.iter().enumerate() {
+            debug_assert!(m < self.hops());
+            tx += self.hop_bytes(*cut);
+        }
+        tx
+    }
+
+    /// Materialize the full [`Plan`] for one candidate sequence.
+    pub fn plan_for(&self, cuts: &[Cut]) -> Plan {
+        Plan {
+            cuts: cuts.to_vec(),
+            latency: self.latency_of(cuts),
+            acc_drop: self.acc_of(cuts),
+            tx_bytes: self.tx_of(cuts),
+        }
+    }
+
+    /// Enumerate every valid cut sequence, in a deterministic order
+    /// whose one-hop restriction matches [`JaladInstance`]'s variable
+    /// order (cloud-only first, then `(i, c)` row-major) — that shared
+    /// order is what makes tie-breaking, and therefore the solved plan,
+    /// bit-identical on two-tier instances.
+    pub fn sequences(&self) -> Vec<Vec<Cut>> {
+        let mut out = Vec::new();
+        let mut cur = Vec::with_capacity(self.hops());
+        self.extend_sequences(&mut cur, &mut out);
+        out
+    }
+
+    fn extend_sequences(&self, cur: &mut Vec<Cut>, out: &mut Vec<Vec<Cut>>) {
+        if cur.len() == self.hops() {
+            out.push(cur.clone());
+            return;
+        }
+        let prev = cur.last().copied().unwrap_or(Cut::IMAGE);
+        // Passthrough: relay the previous hop's payload unchanged.
+        cur.push(prev);
+        self.extend_sequences(cur, out);
+        cur.pop();
+        // Strict increase: run more stages here, fresh bit-width.
+        for i in (prev.i + 1)..=self.base.n {
+            for c in 1..=self.base.c_max {
+                cur.push(Cut { i, c });
+                self.extend_sequences(cur, out);
+                cur.pop();
+            }
+        }
+    }
+
+    fn solve_restricted(&self, admissible: impl Fn(&[Cut]) -> bool) -> Option<Plan> {
+        let seqs = self.sequences();
+        let costs: Vec<f64> = seqs.iter().map(|s| self.latency_of(s)).collect();
+        let mut ilp = Ilp01::new(costs);
+        ilp.eq(vec![1.0; seqs.len()], 1.0);
+        ilp.le(seqs.iter().map(|s| self.acc_of(s)).collect(), self.base.delta_alpha);
+        let forbidden: Vec<f64> =
+            seqs.iter().map(|s| if admissible(s) { 0.0 } else { 1.0 }).collect();
+        if forbidden.iter().any(|&f| f > 0.0) {
+            ilp.le(forbidden, 0.0);
+        }
+        let sol = ilp.solve()?;
+        let v = sol
+            .assignment
+            .iter()
+            .position(|&x| x)
+            .expect("selection constraint guarantees one pick");
+        Some(self.plan_for(&seqs[v]))
+    }
+
+    /// Solve the multi-hop 0-1 ILP exactly. The all-passthrough
+    /// cloud-only chain has accuracy drop 0, so a solution always
+    /// exists.
+    pub fn solve(&self) -> Plan {
+        self.solve_restricted(|_| true)
+            .expect("the cloud-only chain makes the multi-hop ILP unconditionally feasible")
+    }
+
+    /// Solve with the *final* depth constrained edge-ward: only
+    /// sequences completing at least `min_i` stages below the cloud are
+    /// admissible (the cloud-ward shed response, mirroring
+    /// [`JaladInstance::solve_min_cut`]). `None` when nothing that deep
+    /// satisfies the accuracy bound.
+    pub fn solve_min_cut(&self, min_i: usize) -> Option<Plan> {
+        if min_i > self.base.n {
+            return None;
+        }
+        self.solve_restricted(|s| s.last().map(|c| c.i).unwrap_or(0) >= min_i)
+    }
+
+    /// Exhaustive reference: scan every sequence (the oracle the ILP
+    /// path is property-tested against).
+    pub fn solve_scan(&self) -> Plan {
+        let seqs = self.sequences();
+        let mut best: Option<&Vec<Cut>> = None;
+        let mut best_lat = f64::INFINITY;
+        for s in &seqs {
+            if self.acc_of(s) <= self.base.delta_alpha + 1e-12 {
+                let l = self.latency_of(s);
+                if l < best_lat {
+                    best_lat = l;
+                    best = Some(s);
+                }
+            }
+        }
+        self.plan_for(best.expect("cloud-only chain is always feasible"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::CloudLoad;
+    use crate::util::rng::XorShift64Star;
+
+    fn random_base(rng: &mut XorShift64Star, n: usize, c_max: u8) -> JaladInstance {
+        JaladInstance {
+            n,
+            c_max,
+            t_edge: (0..n).map(|i| (i + 1) as f64 * 0.002).collect(),
+            t_cloud: (0..n).map(|i| (n - i) as f64 * 0.001).collect(),
+            size: (0..n)
+                .map(|_| (1..=c_max).map(|_| 50.0 + rng.below(10_000) as f64).collect())
+                .collect(),
+            acc: (0..n)
+                .map(|_| (1..=c_max).map(|_| rng.next_f64() * 0.3).collect())
+                .collect(),
+            image_bytes: 3000.0,
+            t_cloud_full: 0.008,
+            bandwidth: 10_000.0 + rng.below(2_000_000) as f64,
+            delta_alpha: rng.next_f64() * 0.2,
+            load: CloudLoad::new(rng.next_f64() * 0.05, rng.next_f64() * 0.95),
+        }
+    }
+
+    #[test]
+    fn one_hop_is_bit_identical_to_the_paper_instance() {
+        // The two-tier lift must not perturb a single float: same cut,
+        // same latency bits, same accuracy bits, same tx bytes — and
+        // the same tie-breaks, across random loaded instances.
+        let mut rng = XorShift64Star::new(0xA11CE);
+        for trial in 0..40 {
+            let n = 2 + rng.below(10) as usize;
+            let c_max = 1 + rng.below(6) as u8;
+            let base = random_base(&mut rng, n, c_max);
+            let old = base.solve();
+            let lifted = MultiHopInstance::two_tier(base.clone()).solve();
+            assert_eq!(lifted, old, "trial {trial}");
+            assert_eq!(lifted.cuts.len(), 1);
+            assert!(lifted.latency.to_bits() == old.latency.to_bits(), "trial {trial}");
+            // min-cut restriction lifts bit-identically too.
+            for min_i in 1..=n + 1 {
+                let a = base.solve_min_cut(min_i);
+                let b = MultiHopInstance::two_tier(base.clone()).solve_min_cut(min_i);
+                assert_eq!(a, b, "trial {trial} min_i {min_i}");
+            }
+        }
+    }
+
+    #[test]
+    fn two_hop_ilp_matches_exhaustive_scan() {
+        let mut rng = XorShift64Star::new(0x3713);
+        for trial in 0..25 {
+            let n = 2 + rng.below(6) as usize;
+            let c_max = 1 + rng.below(4) as u8;
+            let base = random_base(&mut rng, n, c_max);
+            let inst = MultiHopInstance::three_tier(
+                base,
+                5_000.0 + rng.below(500_000) as f64,
+                20_000.0 + rng.below(2_000_000) as f64,
+                1.0 + rng.next_f64() * 8.0,
+                0.5 + rng.next_f64() * 2.0,
+            );
+            let a = inst.solve();
+            let b = inst.solve_scan();
+            assert!(
+                (a.latency - b.latency).abs() < 1e-9,
+                "trial {trial}: ilp {a:?} vs scan {b:?}"
+            );
+            assert!(a.acc_drop <= inst.base.delta_alpha + 1e-12, "trial {trial}: {a:?}");
+        }
+    }
+
+    #[test]
+    fn sequences_are_valid_chains() {
+        let mut rng = XorShift64Star::new(9);
+        let base = random_base(&mut rng, 4, 3);
+        let inst = MultiHopInstance::three_tier(base, 10_000.0, 100_000.0, 4.0, 1.0);
+        let seqs = inst.sequences();
+        assert!(!seqs.is_empty());
+        for s in &seqs {
+            assert_eq!(s.len(), 2);
+            let mut prev = Cut::IMAGE;
+            for cut in s {
+                assert!(cut.i >= prev.i, "depth must be non-decreasing: {s:?}");
+                if cut.i == prev.i {
+                    assert_eq!(cut.c, prev.c, "passthrough must inherit c: {s:?}");
+                } else {
+                    assert!((1..=3).contains(&cut.c), "fresh cut needs an on-grid c: {s:?}");
+                }
+                prev = *cut;
+            }
+        }
+        // Exactly one all-passthrough cloud-only chain exists.
+        let raw = seqs.iter().filter(|s| s.iter().all(|c| *c == Cut::IMAGE)).count();
+        assert_eq!(raw, 1);
+    }
+
+    #[test]
+    fn weak_device_relays_and_strong_edge_computes() {
+        // A phone-class device (8× slower, 10 KB/s uplink) behind a
+        // capable edge site: the optimum ships the raw image on hop 0
+        // and lets the edge tier do the cutting.
+        let mut rng = XorShift64Star::new(0xD0D0);
+        let mut base = random_base(&mut rng, 4, 3);
+        base.delta_alpha = 0.3;
+        // Make features transfer-dominant so some cut beats cloud-only
+        // on the slow second hop.
+        for row in &mut base.size {
+            for b in row.iter_mut() {
+                *b = 400.0;
+            }
+        }
+        base.image_bytes = 2000.0;
+        let inst = MultiHopInstance::three_tier(base, 10_000.0, 30_000.0, 8.0, 1.0);
+        let plan = inst.solve();
+        assert_eq!(plan.hops(), 2);
+        assert_eq!(plan.cut(0).i, 0, "weak device should relay raw: {plan:?}");
+        assert!(plan.cut(1).i >= 1, "edge should cut before the slow uplink: {plan:?}");
+        // And the exhaustive scan agrees.
+        assert_eq!(plan, inst.solve_scan());
+    }
+
+    #[test]
+    fn min_cut_constrains_the_final_depth() {
+        let mut rng = XorShift64Star::new(0xBEE);
+        let base = random_base(&mut rng, 4, 2);
+        let inst = MultiHopInstance::three_tier(base, 50_000.0, 200_000.0, 2.0, 1.0);
+        if let Some(p) = inst.solve_min_cut(3) {
+            assert!(p.final_depth() >= 3, "{p:?}");
+        }
+        assert!(inst.solve_min_cut(5).is_none(), "past the last stage there is nothing to force");
+    }
+}

@@ -4,6 +4,8 @@
 //! jalad calibrate --model vgg16            # build A_i(c)/S_i(c) tables
 //! jalad decide --model vgg16 --bw 300000   # print the ILP plan
 //! jalad serve-cloud --addr 127.0.0.1:7878  # run the cloud server
+//! jalad serve-edge --addr 127.0.0.1:7800 --upstream 127.0.0.1:7878 --sim
+//!                                           # middle tier: device → edge → cloud
 //! jalad serve-registry --addr 127.0.0.1:7979   # signed-manifest model registry
 //! jalad infer --model resnet50 --bw 125000 --requests 20
 //! jalad infer --connect --sim --registry 127.0.0.1:7979   # model fetched+verified from the registry
@@ -14,7 +16,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use jalad::coordinator::{AdaptationController, DecisionEngine, LocalPipeline, Scale};
+use jalad::coordinator::{ControlPlane, DecisionEngine, LocalPipeline, Scale};
 use jalad::ilp::Decision;
 use jalad::network::SimChannel;
 use jalad::predictor::Tables;
@@ -25,147 +27,24 @@ use jalad::util::cli::Args;
 
 fn main() {
     jalad::util::logging::init();
+    // One declared knob table (util::cli) composed from shared groups:
+    // every subcommand accepts the same names with the same defaults,
+    // and adding a knob is a one-line change in the group it belongs to.
     let args = Args::new(
         "jalad",
         "joint accuracy- and latency-aware deep structure decoupling (PADSW'18)",
     )
-    .opt("artifacts", "artifacts", "artifact directory (make artifacts)")
-    .opt("model", "vgg16", "model name (vgg16|vgg19|resnet50|resnet101|tinyconv)")
-    .opt("bw", "125000", "edge-cloud bandwidth, bytes/second")
-    .opt("delta-alpha", "0.10", "accuracy-loss bound Δα")
-    .opt("addr", "127.0.0.1:7878", "cloud server address")
-    .opt("requests", "20", "request count for `infer`")
-    .opt("edge-device", "tegra-x2", "edge device for paper-scale decisions")
-    .opt("cloud-device", "cloud-12T", "cloud device for paper-scale decisions")
-    .opt("shards", "2", "serve-cloud: independent executor shards (PJRT clients)")
-    .opt("workers", "16", "serve-cloud: pooled connection workers")
-    .opt("max-batch", "4", "serve-cloud: max requests coalesced per tail batch")
-    .opt("gather-us", "1000", "serve-cloud: micro-batch gather window ceiling, microseconds")
-    .opt("gather-min-us", "100", "serve-cloud: adaptive gather window floor, microseconds")
-    .opt(
-        "xmodel-batch",
-        "on",
-        "serve-cloud: coalesce signature-compatible tails across models (on|off)",
-    )
-    .opt(
-        "pad-waste-max",
-        "0.25",
-        "serve-cloud: max padded-waste fraction for mixed-geometry batches (0 = exact geometry only)",
-    )
-    .opt(
-        "admission-queue-ms",
-        "0",
-        "serve-cloud: shed (Busy) when windowed queue-wait p95 exceeds this, ms (0 = off)",
-    )
-    .opt(
-        "admission-util",
-        "0",
-        "serve-cloud: shed (Busy) when busiest-shard utilization exceeds this, 0..1 (0 = off)",
-    )
-    .opt(
-        "deadline-ms",
-        "0",
-        "serve-cloud: SLA deadline attached to admitted requests, ms (0 = none)",
-    )
-    .opt(
-        "tenant-budget",
-        "0",
-        "serve-cloud: global admitted req/s under overload, water-filled across tenants (0 = auto)",
-    )
-    .opt(
-        "tenant",
-        "",
-        "infer --connect: explicit tenant id sent with every request (empty = per-connection)",
-    )
-    .opt(
-        "io",
-        "auto",
-        "serve-cloud: socket transport — epoll reactor or blocking threads (threads|epoll|auto)",
-    )
-    .opt(
-        "max-conns",
-        "16384",
-        "serve-cloud: refuse (Busy) connections past this many concurrently assigned",
-    )
-    .opt(
-        "idle-timeout-s",
-        "300",
-        "serve-cloud: reap connections with no frame progress for this long, s (0 = never; epoll transport)",
-    )
-    .opt(
-        "watchdog-ms",
-        "0",
-        "serve-cloud: quarantine a shard whose single run exceeds this, ms (0 = off)",
-    )
-    .opt(
-        "cache-bytes",
-        "0",
-        "serve-cloud: content-addressed logits cache budget, bytes (0 = off)",
-    )
-    .opt(
-        "cache-hit-cost",
-        "0.1",
-        "serve-cloud: fraction of a fair-admission credit a cached hit costs (rest is refunded)",
-    )
-    .opt(
-        "fault-plan",
-        "",
-        "deterministic fault spec, e.g. seed=7,corrupt=0.05,stall-p=0.1,stall-ms=200 (see util::fault)",
-    )
-    .opt(
-        "registry",
-        "",
-        "infer --connect --sim: fetch the model from this registry address instead of the baked-in manifest",
-    )
-    .opt(
-        "pin-version",
-        "",
-        "infer --connect --sim: pin to this registry version instead of the fleet active",
-    )
-    .opt(
-        "artifact-cache-bytes",
-        "67108864",
-        "edge artifact cache budget, bytes (hash-keyed, LRU)",
-    )
-    .opt(
-        "sign-seed",
-        "42",
-        "serve-registry / --registry: shared manifest-signing secret seed",
-    )
-    .opt(
-        "request-timeout-ms",
-        "30000",
-        "infer --connect: per-request transport deadline, ms (0 = none); overruns feed the breaker",
-    )
-    .opt(
-        "breaker-failures",
-        "3",
-        "infer --connect: consecutive cloud faults that open the circuit breaker",
-    )
-    .opt(
-        "breaker-cooldown-ms",
-        "1000",
-        "infer --connect: how long the breaker stays open before a half-open probe, ms",
-    )
-    .flag(
-        "checked",
-        "infer --connect: CRC-checked data frames (uplink corruption is detected and re-sent)",
-    )
-    .flag(
-        "fair-admission",
-        "serve-cloud: per-tenant fair admission + tenant-aware batching when over budget",
-    )
-    .flag("connect", "infer: drive a real EdgeClient against --addr instead of the local pipeline")
-    .flag("no-batch", "serve-cloud: disable micro-batching (serialized tails)")
-    .flag("no-adaptive-gather", "serve-cloud: always wait the full gather window")
-    .flag("pin-shards", "serve-cloud: pin connection workers to their shard's core (Linux)")
-    .flag("sim", "serve-cloud: use the deterministic sim backend (no artifacts)")
-    .flag("paper-scale", "use the paper's analytic FMAC/FLOPS latency model")
+    .with_common_knobs()
+    .with_serve_knobs()
+    .with_edge_knobs()
+    .with_tier_knobs()
     .parse_env();
 
     let command = args.positional().first().cloned().unwrap_or_else(|| {
         eprintln!("{}", args.usage());
-        eprintln!("COMMANDS: calibrate | decide | serve-cloud | serve-registry | infer | profile");
+        eprintln!(
+            "COMMANDS: calibrate | decide | serve-cloud | serve-edge | serve-registry | infer | profile"
+        );
         std::process::exit(2);
     });
 
@@ -194,6 +73,80 @@ fn engine(args: &Args, exe: &Executor) -> Result<DecisionEngine> {
     DecisionEngine::new(model, tables, latency, scale, args.get_f64("delta-alpha"))
 }
 
+/// Assemble a [`ServeConfig`] from the shared serve knob group —
+/// `serve-cloud` and `serve-edge` embed the identical server, so they
+/// share this translation (and its validation) verbatim.
+fn build_serve_config(args: &Args) -> Result<ServeConfig> {
+    let admission_util = args.get_f64("admission-util");
+    let xmodel = match args.get("xmodel-batch") {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => return Err(anyhow!("--xmodel-batch must be on|off, got {other:?}")),
+    };
+    let pad_waste_max = args.get_f64("pad-waste-max");
+    if !(0.0..=1.0).contains(&pad_waste_max) {
+        return Err(anyhow!("--pad-waste-max must be in 0..=1, got {pad_waste_max}"));
+    }
+    let cache_hit_cost = args.get_f64("cache-hit-cost");
+    if !(0.0..=1.0).contains(&cache_hit_cost) {
+        return Err(anyhow!("--cache-hit-cost must be in 0..=1, got {cache_hit_cost}"));
+    }
+    Ok(ServeConfig {
+        workers: args.get_usize("workers"),
+        batch: BatchConfig {
+            max_batch: args.get_usize("max-batch").max(1),
+            gather_window: std::time::Duration::from_micros(args.get_usize("gather-us") as u64),
+            min_gather: std::time::Duration::from_micros(args.get_usize("gather-min-us") as u64),
+            adaptive_gather: !args.get_flag("no-adaptive-gather"),
+            enabled: !args.get_flag("no-batch"),
+            xmodel,
+            pad_waste_max,
+            ..BatchConfig::default()
+        },
+        admission: jalad::server::AdmissionConfig {
+            queue_p95_budget: std::time::Duration::from_millis(
+                args.get_usize("admission-queue-ms") as u64,
+            ),
+            utilization_budget: if admission_util > 0.0 { admission_util } else { f64::INFINITY },
+            deadline: std::time::Duration::from_millis(args.get_usize("deadline-ms") as u64),
+            fair: args.get_flag("fair-admission"),
+            tenant_budget: args.get_f64("tenant-budget"),
+            ..jalad::server::AdmissionConfig::default()
+        },
+        pin_shards: args.get_flag("pin-shards"),
+        io: IoModel::parse(args.get("io"))?,
+        max_conns: args.get_usize("max-conns").max(1),
+        idle_timeout: std::time::Duration::from_secs(args.get_usize("idle-timeout-s") as u64),
+        watchdog_ms: args.get_usize("watchdog-ms") as u64,
+        cache_bytes: args.get_usize("cache-bytes"),
+        cache_hit_cost,
+    })
+}
+
+/// Configure an [`jalad::server::EdgeClient`]'s hop knobs (deadline,
+/// breaker, integrity, faults) from the shared edge knob group — used
+/// by `infer --connect` and by the upstream link `serve-edge` embeds.
+fn apply_edge_knobs(edge: &mut jalad::server::EdgeClient<'_>, args: &Args) -> Result<()> {
+    edge.set_request_timeout(std::time::Duration::from_millis(
+        args.get_usize("request-timeout-ms") as u64,
+    ))?;
+    edge.set_breaker_config(jalad::server::BreakerConfig {
+        failure_threshold: args.get_usize("breaker-failures") as u32,
+        cooldown: std::time::Duration::from_millis(args.get_usize("breaker-cooldown-ms") as u64),
+        ..Default::default()
+    });
+    if !args.get("fault-plan").is_empty() {
+        edge.set_fault_plan(Some(
+            jalad::util::fault::FaultPlan::parse_arc(args.get("fault-plan"))
+                .map_err(|e| anyhow!("--fault-plan: {e}"))?,
+        ));
+    }
+    if args.get_flag("checked") {
+        edge.set_checked(true);
+    }
+    Ok(())
+}
+
 fn run(command: &str, args: &Args) -> Result<()> {
     let dir = args.get("artifacts").to_string();
     match command {
@@ -218,7 +171,7 @@ fn run(command: &str, args: &Args) -> Result<()> {
                 args.get("model"),
                 bw,
                 args.get("delta-alpha"),
-                plan.decision,
+                plan.decision(),
                 plan.latency * 1e3,
                 plan.acc_drop,
                 plan.tx_bytes
@@ -231,68 +184,16 @@ fn run(command: &str, args: &Args) -> Result<()> {
             } else {
                 ExecutorPool::new_pjrt(Manifest::load(&dir)?, shards)?
             };
-            let admission_util = args.get_f64("admission-util");
-            let xmodel = match args.get("xmodel-batch") {
-                "on" | "true" | "1" => true,
-                "off" | "false" | "0" => false,
-                other => return Err(anyhow!("--xmodel-batch must be on|off, got {other:?}")),
-            };
-            let pad_waste_max = args.get_f64("pad-waste-max");
-            if !(0.0..=1.0).contains(&pad_waste_max) {
-                return Err(anyhow!("--pad-waste-max must be in 0..=1, got {pad_waste_max}"));
-            }
-            let cache_hit_cost = args.get_f64("cache-hit-cost");
-            if !(0.0..=1.0).contains(&cache_hit_cost) {
-                return Err(anyhow!("--cache-hit-cost must be in 0..=1, got {cache_hit_cost}"));
-            }
-            let cfg = ServeConfig {
-                workers: args.get_usize("workers"),
-                batch: BatchConfig {
-                    max_batch: args.get_usize("max-batch").max(1),
-                    gather_window: std::time::Duration::from_micros(
-                        args.get_usize("gather-us") as u64,
-                    ),
-                    min_gather: std::time::Duration::from_micros(
-                        args.get_usize("gather-min-us") as u64,
-                    ),
-                    adaptive_gather: !args.get_flag("no-adaptive-gather"),
-                    enabled: !args.get_flag("no-batch"),
-                    xmodel,
-                    pad_waste_max,
-                    ..BatchConfig::default()
-                },
-                admission: jalad::server::AdmissionConfig {
-                    queue_p95_budget: std::time::Duration::from_millis(
-                        args.get_usize("admission-queue-ms") as u64,
-                    ),
-                    utilization_budget: if admission_util > 0.0 {
-                        admission_util
-                    } else {
-                        f64::INFINITY
-                    },
-                    deadline: std::time::Duration::from_millis(
-                        args.get_usize("deadline-ms") as u64,
-                    ),
-                    fair: args.get_flag("fair-admission"),
-                    tenant_budget: args.get_f64("tenant-budget"),
-                    ..jalad::server::AdmissionConfig::default()
-                },
-                pin_shards: args.get_flag("pin-shards"),
-                io: IoModel::parse(args.get("io"))?,
-                max_conns: args.get_usize("max-conns").max(1),
-                idle_timeout: std::time::Duration::from_secs(
-                    args.get_usize("idle-timeout-s") as u64,
-                ),
-                watchdog_ms: args.get_usize("watchdog-ms") as u64,
-                cache_bytes: args.get_usize("cache-bytes"),
-                cache_hit_cost,
-            };
+            let cfg = build_serve_config(args)?;
             if !args.get("fault-plan").is_empty() {
                 let plan = jalad::util::fault::FaultPlan::parse_arc(args.get("fault-plan"))
                     .map_err(|e| anyhow!("--fault-plan: {e}"))?;
                 pool.set_exec_faults(Some(plan));
             }
             let io = cfg.io;
+            let xmodel = cfg.batch.xmodel;
+            let admission_on = cfg.admission.utilization_budget.is_finite()
+                || !cfg.admission.queue_p95_budget.is_zero();
             let server = Arc::new(CloudServer::with_pool(pool, cfg));
             let (addr, handle) = Arc::clone(&server).spawn(args.get("addr"))?;
             println!(
@@ -314,14 +215,62 @@ fn run(command: &str, args: &Args) -> Result<()> {
                 } else {
                     ""
                 },
-                if admission_util > 0.0 || args.get_usize("admission-queue-ms") > 0 {
-                    ", admission ON"
-                } else {
-                    ""
-                },
+                if admission_on { ", admission ON" } else { "" },
                 if args.get_flag("fair-admission") { ", fair admission ON" } else { "" },
                 if args.get_usize("cache-bytes") > 0 { ", logits cache ON" } else { "" },
                 if args.get_flag("pin-shards") { ", shard pinning ON" } else { "" },
+            );
+            handle.join().ok();
+        }
+        "serve-edge" => {
+            // The middle-tier role for three-tier (device → edge →
+            // cloud) topologies: this process embeds the same server
+            // `serve-cloud` runs for the hop below, and every data
+            // frame is offered to an `EdgeTier` that runs this tier's
+            // stage span per its own multi-hop plan, then forwards
+            // through an embedded `EdgeClient` toward --upstream. A
+            // cloud that goes away degrades through the breaker to
+            // local serving (the surviving device↔edge pair); the
+            // upstream must be reachable at start, though.
+            let upstream: std::net::SocketAddr = args
+                .get("upstream")
+                .parse()
+                .map_err(|e| anyhow!("--upstream {}: {e}", args.get("upstream")))?;
+            let sim = args.get_flag("sim");
+            // The tier's forwarder hook is 'static (it outlives every
+            // connection worker), so the upstream client's executor is
+            // leaked once for the process lifetime.
+            let exe: &'static Executor = if sim {
+                Box::leak(Box::new(Executor::sim_with(jalad::runtime::sim::sim_manifest(), 8)))
+            } else {
+                Box::leak(Box::new(Executor::new(Manifest::load(&dir)?)?))
+            };
+            let (eng, model) = if sim {
+                (DecisionEngine::sim_default(args.get_f64("delta-alpha"))?, "simnet".to_string())
+            } else {
+                (engine(args, exe)?, args.get("model").to_string())
+            };
+            let controller = ControlPlane::new(eng, args.get_f64("bw"));
+            let rate = jalad::network::throttle::RateHandle::new(args.get_f64("bw") as u64);
+            let mut client =
+                jalad::server::EdgeClient::connect(exe, &model, upstream, rate, controller)?;
+            apply_edge_knobs(&mut client, args)?;
+            let tier = Arc::new(jalad::server::EdgeTier::new(exe, client));
+            let shards = args.get_usize("shards");
+            let pool = if sim {
+                ExecutorPool::new_sim(jalad::runtime::sim::sim_manifest(), shards)
+            } else {
+                ExecutorPool::new_pjrt(Manifest::load(&dir)?, shards)?
+            };
+            let mut srv = CloudServer::with_pool(pool, build_serve_config(args)?);
+            srv.set_forwarder(Arc::clone(&tier) as Arc<dyn jalad::server::TierForwarder>);
+            let server = Arc::new(srv);
+            tier.attach(&server);
+            let (addr, handle) = Arc::clone(&server).spawn(args.get("addr"))?;
+            println!(
+                "edge tier on {addr} → upstream {upstream}: {shards} local shard(s), \
+                 upstream hop at {:.0} B/s prior (Ctrl-C or a Shutdown frame stops it)",
+                args.get_f64("bw"),
             );
             handle.join().ok();
         }
@@ -354,6 +303,17 @@ fn run(command: &str, args: &Args) -> Result<()> {
                 .parse()
                 .map_err(|e| anyhow!("--addr {}: {e}", args.get("addr")))?;
             let sim = args.get_flag("sim");
+            // A device-class profile plays a weaker device tier: the
+            // sim backend burns that class's per-stage cost, and the
+            // uplink prior is the class's constrained link.
+            let devclass = match jalad::runtime::DeviceClass::by_name(args.get("device-class")) {
+                Some(d) => Some(d),
+                None if args.get("device-class").is_empty() => None,
+                None => {
+                    return Err(anyhow!("unknown --device-class {:?}", args.get("device-class")))
+                }
+            };
+            let fanin = devclass.map(|d| d.fanin).unwrap_or(8);
             let exe = if sim && !args.get("registry").is_empty() {
                 // Registry mode: the manifest arrives signed, every
                 // chunk arrives content-verified, and only then does an
@@ -377,9 +337,9 @@ fn run(command: &str, args: &Args) -> Result<()> {
                     fetched.chunks.len(),
                     rc.cache().bytes()
                 );
-                Executor::sim_with(fetched.manifest, 8)
+                Executor::sim_with(fetched.manifest, fanin)
             } else if sim {
-                Executor::sim_with(jalad::runtime::sim::sim_manifest(), 8)
+                Executor::sim_with(jalad::runtime::sim::sim_manifest(), fanin)
             } else {
                 Executor::new(Manifest::load(&dir)?)?
             };
@@ -388,28 +348,11 @@ fn run(command: &str, args: &Args) -> Result<()> {
             } else {
                 (engine(args, &exe)?, args.get("model").to_string())
             };
-            let controller = AdaptationController::new(eng, args.get_f64("bw"));
-            let rate = jalad::network::throttle::RateHandle::new(args.get_f64("bw") as u64);
+            let bw = devclass.map(|d| d.uplink_bps).unwrap_or_else(|| args.get_f64("bw"));
+            let controller = ControlPlane::new(eng, bw);
+            let rate = jalad::network::throttle::RateHandle::new(bw as u64);
             let mut edge = jalad::server::EdgeClient::connect(&exe, &model, addr, rate, controller)?;
-            edge.set_request_timeout(std::time::Duration::from_millis(
-                args.get_usize("request-timeout-ms") as u64,
-            ))?;
-            edge.set_breaker_config(jalad::server::BreakerConfig {
-                failure_threshold: args.get_usize("breaker-failures") as u32,
-                cooldown: std::time::Duration::from_millis(
-                    args.get_usize("breaker-cooldown-ms") as u64,
-                ),
-                ..Default::default()
-            });
-            if !args.get("fault-plan").is_empty() {
-                edge.set_fault_plan(Some(
-                    jalad::util::fault::FaultPlan::parse_arc(args.get("fault-plan"))
-                        .map_err(|e| anyhow!("--fault-plan: {e}"))?,
-                ));
-            }
-            if args.get_flag("checked") {
-                edge.set_checked(true);
-            }
+            apply_edge_knobs(&mut edge, args)?;
             if !args.get("tenant").is_empty() {
                 let t: u32 = args
                     .get("tenant")
@@ -445,14 +388,14 @@ fn run(command: &str, args: &Args) -> Result<()> {
             let eng = engine(args, &exe)?;
             let model = args.get("model");
             let mut pipe = LocalPipeline::new(&exe, model);
-            let mut controller = AdaptationController::new(eng, args.get_f64("bw"));
+            let mut controller = ControlPlane::new(eng, args.get_f64("bw"));
             let mut channel = SimChannel::constant(args.get_f64("bw"));
             let mut correct = 0usize;
             let n = args.get_usize("requests");
             for id in 0..n {
                 let s = jalad::data::gen::sample_image(9000 + id, 32);
                 let plan = controller.plan().clone();
-                let r = pipe.run(&s, plan.decision, &mut channel)?;
+                let r = pipe.run(&s, plan.decision(), &mut channel)?;
                 correct += r.correct as usize;
                 println!("req {id:3}  {:?}  {}", r.decision, r.breakdown.summary());
             }
@@ -470,7 +413,7 @@ fn run(command: &str, args: &Args) -> Result<()> {
         }
         other => {
             return Err(anyhow!(
-                "unknown command {other:?} (calibrate|decide|serve-cloud|serve-registry|infer|profile)"
+                "unknown command {other:?} (calibrate|decide|serve-cloud|serve-edge|serve-registry|infer|profile)"
             ))
         }
     }

@@ -35,4 +35,5 @@ pub use artifacts::{CodecArtifacts, Manifest, ModelManifest, StageManifest, Tail
 pub use batch::{BatchConfig, BatchEngine, SignatureStat};
 pub use executor::{Executor, SharedExecutor, StageOutput};
 pub use pool::{ExecutorPool, HealthStats, ShardStats};
+pub use sim::{DeviceClass, DEVICE_CLASSES};
 pub use tensor::Tensor;

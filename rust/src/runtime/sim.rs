@@ -30,6 +30,43 @@ use super::artifacts::{CodecArtifacts, Manifest, ModelManifest, StageManifest};
 /// that sets how much CPU a simulated stage burns.
 pub const DEFAULT_FANIN: usize = 64;
 
+/// A named device-tier compute/uplink profile for three-tier sims: the
+/// fleet below an edge site is heterogeneous, and the multi-hop planner
+/// (`ilp::MultiHopInstance`) wants each hop's compute rate and
+/// bandwidth in the same units as the calibrated tables. `tier_scale`
+/// multiplies the profiled per-stage edge latency (2.0 = this device
+/// runs a stage twice as slowly as the calibrated edge device);
+/// `fanin` is the matching sim-backend cost so wall-clock behavior
+/// tracks the plan's model; `uplink_bps` is the device→edge link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceClass {
+    pub name: &'static str,
+    /// Sim-backend fan-in for executors playing this device.
+    pub fanin: usize,
+    /// Per-stage latency multiplier vs the calibrated edge device.
+    pub tier_scale: f64,
+    /// Device→edge uplink, bytes/sec.
+    pub uplink_bps: f64,
+}
+
+impl DeviceClass {
+    /// Look up a profile by name (CLI surface: `--device-class`).
+    pub fn by_name(name: &str) -> Option<&'static DeviceClass> {
+        DEVICE_CLASSES.iter().find(|d| d.name == name)
+    }
+}
+
+/// The stock three-tier fleet: a strong phone close to edge-device
+/// parity, a weak phone at ~4× stage cost on a constrained uplink, and
+/// an embedded sensor node that can barely run head stages at all.
+/// Scales are relative to the calibrated tables, so they compose with
+/// any model's profile.
+pub const DEVICE_CLASSES: &[DeviceClass] = &[
+    DeviceClass { name: "strong-phone", fanin: 96, tier_scale: 1.5, uplink_bps: 2_000_000.0 },
+    DeviceClass { name: "weak-phone", fanin: 256, tier_scale: 4.0, uplink_bps: 400_000.0 },
+    DeviceClass { name: "embedded", fanin: 1024, tier_scale: 16.0, uplink_bps: 120_000.0 },
+];
+
 /// Host-side simulated compute engine. Cheap to construct; holds only
 /// the fan-in knob and the set of "warmed" artifacts (so
 /// `cached_count` parity with the PJRT compile cache holds in stats).

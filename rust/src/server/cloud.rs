@@ -457,6 +457,21 @@ enum Served {
     Shed { backoff_ms: f32 },
 }
 
+/// A middle tier's relay hook: consulted for every data frame
+/// (`Features`/`Image`) before local handling. `Some((kind, payload))`
+/// is the reply the transport writes back verbatim; `None` falls
+/// through to this process's own handlers — which is how a tier
+/// degrades to serving locally when its upstream hop is down. The
+/// payload passed in is the exact frame body (checked envelopes
+/// already stripped), so a passthrough hop preserves request bytes
+/// bit-for-bit.
+pub trait TierForwarder: Send + Sync {
+    fn forward(&self, kind: u8, frame: &[u8], conn_id: usize) -> Option<(u8, Vec<u8>)>;
+    /// This tier's half of the stats document (rendered under the
+    /// `"tier"` key — see [`crate::server::stats`]).
+    fn tier_stats(&self) -> Json;
+}
+
 /// Internal tenant key: explicit wire tenants and implicit
 /// per-connection tenants live in disjoint u64 ranges so a wire tenant
 /// id can never collide with a connection id.
@@ -492,6 +507,10 @@ pub struct CloudServer {
     /// Content-addressed logits cache (`None` when `cache_bytes` is 0
     /// — the disabled path never hashes a frame).
     cache: Option<Arc<LogitsCache>>,
+    /// Middle-tier relay (see [`TierForwarder`]); `None` means this
+    /// process is a terminal tier and every data frame is handled
+    /// locally — the pre-three-tier behavior, bit-identical.
+    forwarder: Option<Arc<dyn TierForwarder>>,
     pub counters: Arc<Counters>,
     /// Per-request service time (frame read → reply written), seconds.
     pub service_hist: Arc<SharedHistogram>,
@@ -548,6 +567,7 @@ impl CloudServer {
             manifest,
             fairness: FairAdmission::new(cfg.admission.tenant_budget),
             cache: if cfg.cache_bytes > 0 { Some(LogitsCache::new(cfg.cache_bytes)) } else { None },
+            forwarder: None,
             tenants,
             cfg,
             monitor,
@@ -594,6 +614,14 @@ impl CloudServer {
     /// piggyback).
     pub fn telemetry(&self) -> CloudTelemetry {
         self.monitor.sample(self.engine.pool(), &self.engine, self.counters.sheds())
+    }
+
+    /// Install the relay that turns this server into a middle tier
+    /// (see [`crate::server::tier::EdgeTier`]): every data frame is
+    /// offered to `fw` before local handling. Call before
+    /// [`CloudServer::spawn`].
+    pub fn set_forwarder(&mut self, fw: Arc<dyn TierForwarder>) {
+        self.forwarder = Some(fw);
     }
 
     /// Override the sampled telemetry with a synthetic snapshot
@@ -791,6 +819,21 @@ impl CloudServer {
             }
         }
         let t0 = Instant::now();
+        // A middle tier consults its relay first: a forwarded reply is
+        // written back verbatim and the local handlers never run.
+        // `None` (upstream down, or the tier chose to absorb the work)
+        // falls through to local handling — same counters, same
+        // replies as a terminal cloud.
+        if matches!(kind, proto::KIND_FEATURES | proto::KIND_IMAGE) {
+            if let Some(fw) = &self.forwarder {
+                if let Some((rk, payload)) = fw.forward(kind, &sc.frame, conn_id) {
+                    self.note_data_request(sc.frame.len());
+                    proto::write_frame_raw(writer, rk, &payload)?;
+                    self.service_hist.record(t0.elapsed().as_secs_f64());
+                    return Ok(FrameAction::Continue);
+                }
+            }
+        }
         match kind {
             proto::KIND_FEATURES => {
                 // Tenant identity rides an optional trailer; the
@@ -988,7 +1031,10 @@ impl CloudServer {
         Ok(())
     }
 
-    fn stats_json(&self) -> String {
+    /// The stats document served on `KIND_STATS`, rendered against
+    /// [`stats::CLOUD_SCHEMA`](crate::server::stats::CLOUD_SCHEMA) —
+    /// key drift is a debug panic, not a silent dashboard break.
+    pub(crate) fn stats_json(&self) -> String {
         let (req, err, bytes, _) = self.counters.snapshot();
         let ps = self.scratch_pool.stats();
         let hist = self.service_hist.snapshot();
@@ -1019,7 +1065,7 @@ impl CloudServer {
             .collect();
         let health = pool.health_stats();
         let telemetry = self.telemetry();
-        Json::obj(vec![
+        crate::server::stats::render(crate::server::stats::CLOUD_SCHEMA, vec![
             // Data-request taxonomy (see metrics::Counters): `requests`
             // counts Features/Image only; probes and stats queries land
             // in control_frames/probe_bytes.
@@ -1117,7 +1163,7 @@ impl CloudServer {
             // with `enabled = 0`, so dashboards need no special case.
             ("cache", {
                 let cs = self.cache.as_ref().map(|c| c.stats()).unwrap_or_default();
-                Json::obj(vec![
+                crate::server::stats::render(crate::server::stats::CACHE_SCHEMA, vec![
                     ("enabled", Json::num(self.cache.is_some() as u8 as f64)),
                     ("capacity_bytes", Json::num(self.cfg.cache_bytes as f64)),
                     ("hits", Json::num(cs.hits as f64)),
@@ -1153,6 +1199,16 @@ impl CloudServer {
                         ("queue_wait_p95_ms", Json::num(qw95)),
                     ])
                 })),
+            ),
+            // Per-tier nesting: a middle tier reports its relay
+            // counters (and its upstream hop's view) here; a terminal
+            // cloud reports the inert same-shaped object.
+            (
+                "tier",
+                match &self.forwarder {
+                    Some(fw) => fw.tier_stats(),
+                    None => crate::server::stats::cloud_tier_stats(),
+                },
             ),
         ])
         .to_string()

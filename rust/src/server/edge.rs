@@ -165,6 +165,14 @@ pub struct EdgeClient<'a> {
     session: Session<'a>,
     /// Cloud endpoint, kept for failover reconnects.
     addr: SocketAddr,
+    /// Secondary endpoint dialed when the primary path is down. In a
+    /// three-tier deployment this is the cloud behind a middle tier:
+    /// when the edge site blacks out, the device↔cloud pair survives.
+    fallback: Option<SocketAddr>,
+    /// Whether the live transport is dialed to the fallback endpoint.
+    on_fallback: bool,
+    /// Requests answered over the fallback endpoint.
+    fallback_serves: u64,
     /// Uplink pacing handle, kept so a reconnected socket is throttled
     /// identically to the first one.
     uplink: RateHandle,
@@ -234,6 +242,9 @@ impl<'a> EdgeClient<'a> {
         let mut client = Self {
             session,
             addr,
+            fallback: None,
+            on_fallback: false,
+            fallback_serves: 0,
             uplink,
             transport: None,
             breaker: CircuitBreaker::new(BreakerConfig::default()),
@@ -258,8 +269,13 @@ impl<'a> EdgeClient<'a> {
     /// current deadline, throttle and fault plan. Used at construction
     /// and for every failover reconnect.
     fn open_transport(&self) -> Result<Transport> {
+        let target = if self.on_fallback {
+            self.fallback.unwrap_or(self.addr)
+        } else {
+            self.addr
+        };
         // Bounded connect: see [`CONNECT_TIMEOUT`].
-        let stream = TcpStream::connect_timeout(&self.addr, CONNECT_TIMEOUT)?;
+        let stream = TcpStream::connect_timeout(&target, CONNECT_TIMEOUT)?;
         stream.set_nodelay(true)?;
         let deadline = (!self.request_timeout.is_zero()).then_some(self.request_timeout);
         stream.set_read_timeout(deadline)?;
@@ -325,6 +341,22 @@ impl<'a> EdgeClient<'a> {
         self.checked = on;
     }
 
+    /// Install (or clear) a secondary endpoint dialed when the primary
+    /// path is down (the attempt failed or the breaker is open). With
+    /// a middle tier in between, this is the device↔cloud pair that
+    /// survives an edge-site blackout. Fallback outcomes never feed
+    /// the primary's breaker, so half-open probes keep testing the
+    /// primary and traffic walks back as soon as it recovers.
+    pub fn set_fallback_addr(&mut self, addr: Option<SocketAddr>) {
+        self.fallback = addr;
+        self.on_fallback = false;
+    }
+
+    /// Requests answered over the fallback endpoint so far.
+    pub fn fallback_serves(&self) -> u64 {
+        self.fallback_serves
+    }
+
     /// The logits of the most recent reply (cloud-decoded or locally
     /// computed) — chaos tests bit-compare these across runs.
     pub fn last_logits(&self) -> &[f32] {
@@ -361,6 +393,13 @@ impl<'a> EdgeClient<'a> {
         let mut sheds = 0usize;
         let mut replanned = false;
         if self.breaker.should_attempt(Instant::now()) {
+            // A half-open probe (or any closed-state attempt) tests
+            // the *primary* path; if a previous request failed over,
+            // re-dial it.
+            if self.on_fallback {
+                self.on_fallback = false;
+                self.transport = None;
+            }
             match self.try_cloud(sample, &mut bd, &mut sheds, &mut replanned) {
                 Ok(result) => {
                     if self.breaker.record_success(Instant::now()) {
@@ -393,6 +432,34 @@ impl<'a> EdgeClient<'a> {
                 }
             }
         }
+        // Primary down (the attempt failed or the breaker is open):
+        // before degrading to a local answer, try the fallback
+        // endpoint — the surviving two-tier pair when the middle tier
+        // blacks out. The breaker tracks the primary path only, so
+        // fallback outcomes feed neither its counters nor the plan
+        // pinning; a hostile fallback can't wedge primary recovery.
+        if self.fallback.is_some() {
+            if !self.on_fallback {
+                self.on_fallback = true;
+                self.transport = None;
+            }
+            match self.try_cloud(sample, &mut bd, &mut sheds, &mut replanned) {
+                Ok(result) => {
+                    self.fallback_serves += 1;
+                    return Ok(result);
+                }
+                Err(CloudFailure::Fatal(e)) => {
+                    self.on_fallback = false;
+                    self.transport = None;
+                    return Err(e);
+                }
+                Err(fail) => {
+                    crate::log_warn!("edge", "fallback path failed: {:#}", fail.into_err());
+                    self.on_fallback = false;
+                    self.transport = None;
+                }
+            }
+        }
         self.infer_local(sample, bd, sheds, replanned)
     }
 
@@ -419,7 +486,7 @@ impl<'a> EdgeClient<'a> {
         Ok(EdgeResult {
             prediction,
             correct: prediction == sample.label,
-            decision: self.controller.plan().decision,
+            decision: self.controller.plan().decision(),
             breakdown: bd,
             replanned,
             sheds,
@@ -445,7 +512,7 @@ impl<'a> EdgeClient<'a> {
             self.transport = Some(self.open_transport().map_err(CloudFailure::Transport)?);
         }
         loop {
-            let decision = self.controller.plan().decision;
+            let decision = self.controller.plan().decision();
             let req = self
                 .session
                 .encode_request(sample, decision, bd)
@@ -645,6 +712,64 @@ impl<'a> EdgeClient<'a> {
         }
     }
 
+    /// Relay a pre-encoded request frame upstream verbatim and return
+    /// the reply's kind, the bytes sent, and the reply payload. This
+    /// is the primitive the middle tier builds on
+    /// ([`crate::server::tier::EdgeTier`]): the breaker guard, checked
+    /// framing, fault plans, pacing and reconnects compose exactly as
+    /// they do for [`EdgeClient::infer`], but the frame bytes are the
+    /// caller's — a passthrough hop preserves them bit-for-bit.
+    /// Transport faults and deadline overruns feed the breaker
+    /// (opening it pins this hop's plan at `i = N` via the control
+    /// plane) and surface as errors; the caller decides how to degrade
+    /// (the tier answers locally).
+    pub fn forward_raw(&mut self, kind: u8, parts: &[&[u8]]) -> Result<(u8, usize, &[u8])> {
+        if !self.breaker.should_attempt(Instant::now()) {
+            return Err(anyhow!("upstream breaker open"));
+        }
+        match self.forward_raw_attempt(kind, parts) {
+            Ok((k, sent)) => {
+                if self.breaker.record_success(Instant::now()) {
+                    self.controller.on_breaker_close();
+                }
+                Ok((k, sent, &self.rx_buf))
+            }
+            Err(fail) => {
+                self.transport = None;
+                let now = Instant::now();
+                let opened = match fail {
+                    CloudFailure::Overrun(_) => self.breaker.record_overrun(now),
+                    _ => self.breaker.record_failure(now),
+                };
+                if opened {
+                    self.controller.on_breaker_open();
+                }
+                Err(fail.into_err())
+            }
+        }
+    }
+
+    fn forward_raw_attempt(
+        &mut self,
+        kind: u8,
+        parts: &[&[u8]],
+    ) -> std::result::Result<(u8, usize), CloudFailure> {
+        if self.transport.is_none() {
+            self.transport = Some(self.open_transport().map_err(CloudFailure::Transport)?);
+        }
+        let sent = {
+            let tr = self.transport.as_mut().expect("transport just ensured");
+            let res = if self.checked {
+                proto::write_checked_frame_vec(&mut tr.writer, kind, parts)
+            } else {
+                proto::write_frame_vec(&mut tr.writer, kind, parts)
+            };
+            res.map_err(net_failure)?
+        };
+        let k = self.read_reply()?;
+        Ok((k, sent))
+    }
+
     /// Active bandwidth probe: upload `bytes` of padding through the
     /// throttled socket and feed the observed throughput to the
     /// adaptation controller. Used when the current plan's frames are
@@ -691,14 +816,22 @@ impl<'a> EdgeClient<'a> {
                 map
             }
         };
-        let (cut_i, cut_c) = match self.controller.plan().decision {
+        obj.insert("edge".to_string(), self.control_stats());
+        Ok(Json::Obj(obj).to_string())
+    }
+
+    /// This client's adaptation counters as the `"edge"` stats object
+    /// ([`EDGE_SCHEMA`](crate::server::stats::EDGE_SCHEMA)) — built
+    /// entirely from local state, no network I/O, so a middle tier can
+    /// nest its upstream hop's view into a stats scrape without
+    /// touching the wire.
+    pub fn control_stats(&self) -> Json {
+        let (cut_i, cut_c) = match self.controller.plan().decision() {
             Decision::CloudOnly => (0usize, 0u8),
             Decision::Cut { i, c } => (i, c),
         };
         let load = self.controller.cloud_load();
-        obj.insert(
-            "edge".to_string(),
-            Json::obj(vec![
+        crate::server::stats::render(crate::server::stats::EDGE_SCHEMA, vec![
                 ("resolves", Json::num(self.controller.resolves() as f64)),
                 ("plan_changes", Json::num(self.controller.plan_changes() as f64)),
                 ("sheds_observed", Json::num(self.controller.sheds_observed() as f64)),
@@ -741,9 +874,8 @@ impl<'a> EdgeClient<'a> {
                     "local_serves",
                     Json::num(self.controller.local_serves() as f64),
                 ),
-            ]),
-        );
-        Ok(Json::Obj(obj).to_string())
+                ("fallback_serves", Json::num(self.fallback_serves as f64)),
+        ])
     }
 }
 

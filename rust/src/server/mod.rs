@@ -38,6 +38,15 @@
 //!   entropy-code), ships frames through the throttled socket, and
 //!   re-decouples as its bandwidth estimate *or* the cloud's reported
 //!   load drifts (`coordinator::control::ControlPlane`);
+//! * [`tier`] — the middle-tier role for three-tier (device → edge →
+//!   cloud) deployments: an [`tier::EdgeTier`] plugs into the cloud
+//!   server's frame core as a [`cloud::TierForwarder`], runs its stage
+//!   span per the multi-hop plan, and relays upstream through an
+//!   embedded [`edge::EdgeClient`] — breaker, checked framing, fault
+//!   plans and local fallback compose per hop;
+//! * [`stats`] — the one stats renderer: declared key schemas for the
+//!   cloud/edge/cache/registry documents, per-tier nesting, and
+//!   debug-time schema enforcement;
 //! * [`registry`] — the model-distribution control plane: stage
 //!   artifacts as content-addressed chunks under a **signed manifest**
 //!   (`util::sign`), versions published/activated/rolled back with
@@ -57,11 +66,14 @@ pub mod epoll;
 pub mod fetch;
 pub mod proto;
 pub mod registry;
+pub mod stats;
+pub mod tier;
 
 pub use admission::{FairAdmission, FairDecision};
 pub use breaker::{BreakerConfig, BreakerState, CircuitBreaker};
 pub use cache::LogitsCache;
-pub use cloud::{AdmissionConfig, CloudServer, IoModel, ServeConfig};
+pub use cloud::{AdmissionConfig, CloudServer, IoModel, ServeConfig, TierForwarder};
 pub use edge::EdgeClient;
+pub use tier::EdgeTier;
 pub use fetch::{ArtifactCache, HotSwap, ModelVersion, RegistryClient};
 pub use registry::RegistryServer;

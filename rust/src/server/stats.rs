@@ -1,0 +1,254 @@
+//! One stats renderer with declared, stable key schemas.
+//!
+//! Stats JSON used to be assembled ad-hoc at four sites (cloud server,
+//! edge client, logits cache, model registry), so adding a counter in
+//! one place silently changed the document shape dashboards scrape.
+//! Every stats document now renders through [`render`] against a
+//! declared schema: the schema constant *is* the wire contract, a key
+//! outside it (or a missing key) is a debug panic at render time, and
+//! the schema-stability tests pin the exact key sets so a drive-by
+//! counter addition fails loudly until the schema (and therefore the
+//! reviewer) sees it.
+//!
+//! Key order in the serialized document is alphabetical regardless of
+//! build order (`Json::Obj` is a `BTreeMap`), so renderers may list
+//! fields in whatever order reads best.
+//!
+//! Three-tier nesting: every cloud-shaped document carries a `"tier"`
+//! object ([`TIER_SCHEMA`]). A terminal cloud renders the inert
+//! [`cloud_tier_stats`] (role `"cloud"`, zero relay counters, null
+//! upstream); a middle tier ([`crate::server::tier::EdgeTier`]) renders
+//! its relay counters and nests its upstream hop's view under
+//! `"upstream"` — one document describes the whole chain below it.
+
+use crate::util::json::Json;
+
+/// Top-level keys of the cloud server's stats document
+/// (`CloudServer::stats_json`, served on `KIND_STATS`).
+pub const CLOUD_SCHEMA: &[&str] = &[
+    "requests",
+    "errors",
+    "bytes_rx",
+    "control_frames",
+    "probe_bytes",
+    "malformed",
+    "compiled",
+    "connections",
+    "conn_sheds",
+    "idle_reaped",
+    "quarantined",
+    "quarantined_now",
+    "readmitted",
+    "watchdog_trips",
+    "shard_panics",
+    "pool_hits",
+    "pool_misses",
+    "req_per_sec",
+    "service_p50_ms",
+    "service_p95_ms",
+    "shard_count",
+    "shards",
+    "batches",
+    "batched_requests",
+    "batch_bypassed",
+    "batch_mean_occupancy",
+    "batch_max_occupancy",
+    "queue_wait_p50_ms",
+    "queue_wait_p95_ms",
+    "sheds",
+    "shedding",
+    "utilization",
+    "queue_wait_window_p95_ms",
+    "gather_window_us",
+    "deadline_clamped",
+    "xmodel_active",
+    "xmodel_batches",
+    "padded_samples",
+    "pad_waste",
+    "signatures",
+    "cache",
+    "fair_admission",
+    "active_tenants",
+    "tenant_capped",
+    "tenants",
+    "tier",
+];
+
+/// Keys of the `"cache"` object nested in the cloud document.
+pub const CACHE_SCHEMA: &[&str] = &[
+    "enabled",
+    "capacity_bytes",
+    "hits",
+    "misses",
+    "inflight_coalesced",
+    "evictions",
+    "bytes_saved",
+    "hit_bytes",
+    "entries",
+    "bytes",
+];
+
+/// Keys of the `"edge"` object `EdgeClient::stats` merges into the
+/// cloud document it fetched.
+pub const EDGE_SCHEMA: &[&str] = &[
+    "resolves",
+    "plan_changes",
+    "sheds_observed",
+    "cut_i",
+    "cut_c",
+    "bandwidth_est",
+    "cloud_queue_wait_ms",
+    "cloud_utilization",
+    "tenant",
+    "advised_backoff_ms",
+    "breaker_state",
+    "breaker_opens",
+    "breaker_recloses",
+    "local_serves",
+    "fallback_serves",
+];
+
+/// Keys of the `"tier"` object: this process's role in the chain plus
+/// its relay counters. A terminal cloud reports the inert shape
+/// ([`cloud_tier_stats`]) so the document schema is identical in
+/// two-tier and three-tier deployments.
+pub const TIER_SCHEMA: &[&str] = &[
+    "role",
+    "forwarded",
+    "passthrough",
+    "span_runs",
+    "local_fallbacks",
+    "upstream_sheds",
+    "cut_i",
+    "cut_c",
+    "upstream",
+];
+
+/// Keys of the registry stats document
+/// ([`registry_stats_json`] over `RegistryStats`).
+pub const REGISTRY_SCHEMA: &[&str] = &[
+    "manifests_served",
+    "chunks_served",
+    "unknown_manifest",
+    "unknown_chunk",
+    "bad_frames",
+    "activations",
+    "rollbacks",
+    "subscribers",
+];
+
+/// Assemble a stats object against its declared schema. Debug builds
+/// panic on a key outside the schema, a duplicate, or a schema key
+/// left unset — the document shape cannot drift from the constant.
+/// Release builds render whatever they were given (stats must never
+/// take a serving process down).
+pub fn render(schema: &'static [&'static str], fields: Vec<(&'static str, Json)>) -> Json {
+    #[cfg(debug_assertions)]
+    {
+        for (k, _) in &fields {
+            assert!(schema.contains(k), "stats key {k:?} is not in the declared schema");
+            assert_eq!(
+                fields.iter().filter(|(f, _)| f == k).count(),
+                1,
+                "stats key {k:?} set more than once"
+            );
+        }
+        for k in schema {
+            assert!(
+                fields.iter().any(|(f, _)| f == k),
+                "declared stats key {k:?} was never set"
+            );
+        }
+    }
+    Json::obj(fields)
+}
+
+/// The `"tier"` object a terminal cloud reports: role `"cloud"`, zero
+/// relay counters, no upstream. Same shape as a middle tier's, so
+/// dashboards need no per-role special case.
+pub fn cloud_tier_stats() -> Json {
+    render(
+        TIER_SCHEMA,
+        vec![
+            ("role", Json::str("cloud")),
+            ("forwarded", Json::num(0.0)),
+            ("passthrough", Json::num(0.0)),
+            ("span_runs", Json::num(0.0)),
+            ("local_fallbacks", Json::num(0.0)),
+            ("upstream_sheds", Json::num(0.0)),
+            ("cut_i", Json::num(0.0)),
+            ("cut_c", Json::num(0.0)),
+            ("upstream", Json::Null),
+        ],
+    )
+}
+
+/// Render a registry counter snapshot against [`REGISTRY_SCHEMA`].
+pub fn registry_stats_json(s: &crate::server::registry::RegistryStats) -> Json {
+    render(
+        REGISTRY_SCHEMA,
+        vec![
+            ("manifests_served", Json::num(s.manifests_served as f64)),
+            ("chunks_served", Json::num(s.chunks_served as f64)),
+            ("unknown_manifest", Json::num(s.unknown_manifest as f64)),
+            ("unknown_chunk", Json::num(s.unknown_chunk as f64)),
+            ("bad_frames", Json::num(s.bad_frames as f64)),
+            ("activations", Json::num(s.activations as f64)),
+            ("rollbacks", Json::num(s.rollbacks as f64)),
+            ("subscribers", Json::num(s.subscribers as f64)),
+        ],
+    )
+}
+
+/// Key set of a rendered object, for schema-stability assertions.
+pub fn keys_of(j: &Json) -> Vec<String> {
+    j.as_obj().map(|m| m.keys().cloned().collect()).unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::sim::sim_manifest;
+    use crate::runtime::ExecutorPool;
+    use crate::server::cloud::{CloudServer, ServeConfig};
+
+    fn sorted(keys: &[&str]) -> Vec<String> {
+        let mut v: Vec<String> = keys.iter().map(|s| s.to_string()).collect();
+        v.sort();
+        v
+    }
+
+    /// The live cloud document's key set is exactly the declared
+    /// schema — adding or dropping a counter without touching
+    /// `CLOUD_SCHEMA` fails here, which is the point.
+    #[test]
+    fn cloud_stats_schema_is_stable() {
+        let pool = ExecutorPool::new_sim_with(sim_manifest(), 1, 8);
+        let srv = CloudServer::with_pool(pool, ServeConfig::default());
+        let doc = Json::parse(&srv.stats_json()).unwrap();
+        assert_eq!(keys_of(&doc), sorted(CLOUD_SCHEMA));
+        assert_eq!(keys_of(doc.get("cache").unwrap()), sorted(CACHE_SCHEMA));
+        assert_eq!(keys_of(doc.get("tier").unwrap()), sorted(TIER_SCHEMA));
+        assert_eq!(doc.path(&["tier", "role"]).unwrap().as_str(), Some("cloud"));
+    }
+
+    #[test]
+    fn registry_stats_schema_is_stable() {
+        let s = crate::server::registry::RegistryStats::default();
+        assert_eq!(keys_of(&registry_stats_json(&s)), sorted(REGISTRY_SCHEMA));
+    }
+
+    #[test]
+    #[should_panic(expected = "not in the declared schema")]
+    #[cfg(debug_assertions)]
+    fn undeclared_key_panics() {
+        render(REGISTRY_SCHEMA, vec![("bogus", Json::num(1.0))]);
+    }
+
+    #[test]
+    #[should_panic(expected = "never set")]
+    #[cfg(debug_assertions)]
+    fn missing_key_panics() {
+        render(TIER_SCHEMA, vec![("role", Json::str("cloud"))]);
+    }
+}

@@ -1,0 +1,318 @@
+//! The middle-tier role: one process that is a server to the hop below
+//! and a client to the hop above.
+//!
+//! `jalad serve-edge` embeds an [`EdgeTier`] into a regular
+//! [`CloudServer`] via the [`TierForwarder`] hook: device connections
+//! terminate on the existing transport (threads or epoll — the frame
+//! core is shared), and every data frame is offered to the tier before
+//! local handling. Per the tier's own multi-hop plan
+//! ([`ControlPlane`](crate::coordinator::ControlPlane) over the
+//! edge→cloud hop) the frame is either:
+//!
+//! * **passed through** — the plan's cut equals the frame's incoming
+//!   stage, so the original bytes are relayed verbatim (a `CloudOnly`
+//!   image chain reaches the cloud bit-for-bit, which is what the
+//!   three-tier e2e oracle asserts);
+//! * **deepened** — the tier decodes the features (or image), runs its
+//!   stage span `from+1..=k` on its own executor, re-quantizes at the
+//!   plan's bit-width, and forwards the later cut (any device tenant
+//!   trailer is re-attached, so fair admission stays per-device);
+//! * **absorbed** — the upstream path is down (breaker open, transport
+//!   fault) or the cloud shed with `Busy`: the tier returns `None` and
+//!   the embedding server's own handlers answer locally — the
+//!   surviving device↔edge pair, bit-identical on the sim backend.
+//!
+//! The upstream link is an embedded [`EdgeClient`], so the breaker,
+//! CRC-checked framing, fault plans and reconnects compose per hop
+//! exactly as they do for a device. Replies re-wrap the piggybacked
+//! telemetry: the cloud's block drives *this* tier's control plane,
+//! and the block sent down carries *this* tier's load (sampled from
+//! the embedding server), so each hop's feedback loop observes the hop
+//! it actually talks to.
+//!
+//! Known headroom: the upstream link is serialized behind one mutex —
+//! fine at edge-site fan-in rates; a connection-pooled upstream is the
+//! obvious next rung.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, Weak};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::compression::{feature, png, quant};
+use crate::coordinator::cut_depth;
+use crate::ilp::Decision;
+use crate::runtime::{Executor, Manifest, Tensor};
+use crate::server::cloud::{CloudServer, TierForwarder};
+use crate::server::edge::{EdgeClient, MIN_ESTIMATE_BYTES};
+use crate::server::proto::{self, CloudTelemetry};
+use crate::util::json::Json;
+use crate::util::pool::Scratch;
+
+/// The upstream half of the tier: the embedded client plus the codec
+/// scratch its span-runs reuse. One mutex serializes both (see module
+/// docs).
+struct TierLink {
+    client: EdgeClient<'static>,
+    exe: &'static Executor,
+    sc: Scratch,
+    logits: Vec<f32>,
+}
+
+pub struct EdgeTier {
+    inner: Mutex<TierLink>,
+    manifest: Manifest,
+    /// The embedding server, attached after construction — the source
+    /// of this tier's own telemetry for downstream replies. `Weak`
+    /// breaks the `CloudServer` ↔ forwarder Arc cycle.
+    local: Mutex<Weak<CloudServer>>,
+    /// Data frames answered through the upstream hop.
+    forwarded: AtomicU64,
+    /// ... of which relayed verbatim (plan cut == incoming stage).
+    passthrough: AtomicU64,
+    /// ... of which deepened by running a local stage span first.
+    span_runs: AtomicU64,
+    /// Frames handed back to the embedding server's local handlers
+    /// (upstream down or errored).
+    local_fallbacks: AtomicU64,
+    /// `Busy` refusals absorbed from upstream (each also deepens the
+    /// tier's plan via `on_busy` — the edge-ward shed direction).
+    upstream_sheds: AtomicU64,
+    /// Packed `(i << 8) | c` of the last plan consulted — lock-free
+    /// for stats.
+    cut_cache: AtomicU64,
+}
+
+impl EdgeTier {
+    /// Build the tier around an already-connected upstream client.
+    /// Both borrows are `'static` because the tier outlives every
+    /// connection worker that may call it; a serve-edge process leaks
+    /// one executor for its lifetime (`Box::leak`) — see `main.rs`.
+    pub fn new(exe: &'static Executor, client: EdgeClient<'static>) -> Self {
+        Self {
+            manifest: exe.manifest().clone(),
+            inner: Mutex::new(TierLink { client, exe, sc: Scratch::new(), logits: Vec::new() }),
+            local: Mutex::new(Weak::new()),
+            forwarded: AtomicU64::new(0),
+            passthrough: AtomicU64::new(0),
+            span_runs: AtomicU64::new(0),
+            local_fallbacks: AtomicU64::new(0),
+            upstream_sheds: AtomicU64::new(0),
+            cut_cache: AtomicU64::new(0),
+        }
+    }
+
+    /// Attach the embedding server (after both Arcs exist) so
+    /// downstream replies carry this tier's own telemetry.
+    pub fn attach(&self, server: &std::sync::Arc<CloudServer>) {
+        *self.local.lock().unwrap() = std::sync::Arc::downgrade(server);
+    }
+
+    /// Mutate the embedded upstream client (breaker config, checked
+    /// framing, fault plan, timeouts) — test and CLI plumbing.
+    pub fn with_client<R>(&self, f: impl FnOnce(&mut EdgeClient<'static>) -> R) -> R {
+        f(&mut self.inner.lock().unwrap().client)
+    }
+
+    /// (forwarded, passthrough, span_runs, local_fallbacks,
+    /// upstream_sheds) counter snapshot.
+    pub fn counters(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.forwarded.load(Ordering::Relaxed),
+            self.passthrough.load(Ordering::Relaxed),
+            self.span_runs.load(Ordering::Relaxed),
+            self.local_fallbacks.load(Ordering::Relaxed),
+            self.upstream_sheds.load(Ordering::Relaxed),
+        )
+    }
+
+    /// One relay attempt. `Ok(Some(reply))` goes to the device
+    /// verbatim; `Ok(None)` and `Err` fall back to local handling (the
+    /// caller maps both; `Err` is also logged and counted).
+    fn relay(&self, link: &mut TierLink, kind: u8, frame: &[u8]) -> Result<Option<(u8, Vec<u8>)>> {
+        let TierLink { client, exe, sc, logits } = link;
+        let plan = client.controller.plan().decision();
+        let k_plan = cut_depth(plan);
+
+        // Route: which model, and how deep has the device already run?
+        let (model_id, from) = match kind {
+            proto::KIND_FEATURES => {
+                let (m, s) =
+                    feature::peek_route(frame).ok_or_else(|| anyhow!("unpeekable frame"))?;
+                (m, s as usize)
+            }
+            proto::KIND_IMAGE => {
+                if frame.len() < 4 {
+                    return Err(anyhow!("short image frame"));
+                }
+                (u16::from_le_bytes([frame[0], frame[1]]), 0)
+            }
+            k => return Err(anyhow!("unforwardable kind {k}")),
+        };
+        let m = self
+            .manifest
+            .models
+            .get(model_id as usize)
+            .ok_or_else(|| anyhow!("bad model id {model_id}"))?;
+        let n = m.num_stages();
+        if from > n {
+            return Err(anyhow!("bad stage {from}"));
+        }
+        // The tier can only deepen a cut, never undo the device's
+        // stages; and never past the last stage.
+        let k_eff = k_plan.clamp(from, n);
+        let c_used = match plan {
+            Decision::Cut { c, .. } if k_eff > from => c,
+            _ => 0,
+        };
+        self.cut_cache
+            .store(((k_eff as u64) << 8) | c_used as u64, Ordering::Relaxed);
+
+        let t0 = Instant::now();
+        let (rk, sent, payload) = if k_eff == from {
+            // Passthrough: the original frame bytes, bit-for-bit.
+            self.passthrough.fetch_add(1, Ordering::Relaxed);
+            let (rk, sent, p) = client.forward_raw(kind, &[frame])?;
+            (rk, sent, p.to_vec())
+        } else {
+            // Deepen: run stages `from+1..=k_eff` here, re-encode at
+            // the plan's bit-width, forward the later cut. The device
+            // tenant trailer (if any) rides along so fair admission
+            // upstream stays scoped per device.
+            self.span_runs.fetch_add(1, Ordering::Relaxed);
+            let (x, wire_tenant) = if kind == proto::KIND_FEATURES {
+                let (body_len, t) = match feature::frame_len(frame) {
+                    Some(flen) if frame.len() <= flen => (frame.len(), None),
+                    _ => proto::split_tenant_trailer(frame),
+                };
+                let h = feature::decode_into(&frame[..body_len], &mut sc.codec, &mut sc.values)
+                    .map_err(anyhow::Error::new)?;
+                if h.model != model_id || h.stage as usize != from || from == 0 {
+                    return Err(anyhow!("inconsistent feature header"));
+                }
+                let stage = &m.stages[from - 1];
+                quant::dequantize_into(&sc.values, h.lo, h.hi, h.c, &mut sc.floats);
+                if sc.floats.len() != stage.out_elems {
+                    return Err(anyhow!(
+                        "stage {from} feature map has {} elements, frame carried {}",
+                        stage.out_elems,
+                        sc.floats.len()
+                    ));
+                }
+                (Tensor::new(stage.out_shape.clone(), sc.floats.clone()), t)
+            } else {
+                let (body_len, t) = proto::split_tenant_trailer(frame);
+                let img = png::decode(&frame[4..body_len]).map_err(anyhow::Error::new)?;
+                let expect: usize = m.input_shape.iter().product();
+                if img.data.len() != expect {
+                    return Err(anyhow!("image has {} bytes, model expects {expect}", img.data.len()));
+                }
+                (crate::data::gen::from_rgb8(&img.data, m.input_shape.clone()), t)
+            };
+            let out = exe.run_stages(&m.name, from + 1, k_eff, &x)?;
+            let (lo, hi) = quant::quantize_into(out.tensor.data(), c_used, &mut sc.values);
+            feature::encode_parts_into(
+                &sc.values,
+                c_used,
+                lo,
+                hi,
+                k_eff as u16,
+                model_id,
+                &mut sc.codec,
+                &mut sc.wire,
+            );
+            if let Some(t) = wire_tenant {
+                proto::append_tenant_trailer(t, &mut sc.wire);
+            }
+            let (rk, sent, p) = client.forward_raw(proto::KIND_FEATURES, &[&sc.wire])?;
+            (rk, sent, p.to_vec())
+        };
+        // Feed this hop's bandwidth estimate exactly as a device does.
+        if sent >= MIN_ESTIMATE_BYTES {
+            client
+                .controller
+                .observe_transfer(sent, t0.elapsed().as_secs_f64().max(1e-9));
+        }
+
+        match rk {
+            proto::KIND_LOGITS => {
+                // The upstream telemetry drives *this* tier's loop; the
+                // hop below gets this tier's own load instead, so each
+                // control plane observes the hop it talks to. The
+                // logits bytes themselves are preserved bit-for-bit.
+                let t_up = proto::parse_logits_telemetry_into(&payload, logits)?;
+                if let Some(t) = t_up {
+                    client.controller.observe_telemetry(&t);
+                }
+                let logits_end = 2 + logits.len() * 4;
+                let mut down = payload[..logits_end].to_vec();
+                match self.local.lock().unwrap().upgrade() {
+                    Some(srv) => srv.telemetry().encode_into(&mut down),
+                    // Unattached (tests driving the tier bare): relay
+                    // the upstream block unchanged.
+                    None => down = payload,
+                }
+                Ok(Some((proto::KIND_LOGITS, down)))
+            }
+            proto::KIND_BUSY => {
+                // Cloud shed: adopt its telemetry, deepen this tier's
+                // cut (the edge absorbs work), and answer the current
+                // request locally.
+                self.upstream_sheds.fetch_add(1, Ordering::Relaxed);
+                let t = CloudTelemetry::decode(&payload).map(|(t, _)| t).unwrap_or_default();
+                client.controller.on_busy(&t);
+                Ok(None)
+            }
+            // A semantic refusal must reach the device unmasked.
+            proto::KIND_ERROR => Ok(Some((proto::KIND_ERROR, payload))),
+            k => Err(anyhow!("unexpected upstream reply kind {k}")),
+        }
+    }
+}
+
+impl TierForwarder for EdgeTier {
+    fn forward(&self, kind: u8, frame: &[u8], _conn_id: usize) -> Option<(u8, Vec<u8>)> {
+        let mut link = self.inner.lock().unwrap();
+        match self.relay(&mut link, kind, frame) {
+            Ok(Some(reply)) => {
+                self.forwarded.fetch_add(1, Ordering::Relaxed);
+                Some(reply)
+            }
+            Ok(None) => {
+                self.local_fallbacks.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Err(e) => {
+                crate::log_debug!("tier", "upstream relay failed, serving locally: {e:#}");
+                self.local_fallbacks.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    fn tier_stats(&self) -> Json {
+        let (fwd, pass, span, local, sheds) = self.counters();
+        let cut = self.cut_cache.load(Ordering::Relaxed);
+        // Never block stats behind a stalled upstream attempt: on
+        // contention the upstream view is simply null this scrape.
+        let upstream = match self.inner.try_lock() {
+            Ok(link) => link.client.control_stats(),
+            Err(_) => Json::Null,
+        };
+        crate::server::stats::render(
+            crate::server::stats::TIER_SCHEMA,
+            vec![
+                ("role", Json::str("edge")),
+                ("forwarded", Json::num(fwd as f64)),
+                ("passthrough", Json::num(pass as f64)),
+                ("span_runs", Json::num(span as f64)),
+                ("local_fallbacks", Json::num(local as f64)),
+                ("upstream_sheds", Json::num(sheds as f64)),
+                ("cut_i", Json::num((cut >> 8) as f64)),
+                ("cut_c", Json::num((cut & 0xFF) as f64)),
+                ("upstream", upstream),
+            ],
+        )
+    }
+}

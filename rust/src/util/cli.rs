@@ -2,6 +2,14 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, positional args, and
 //! auto-generated `--help`. Used by `rust/src/main.rs` and every example.
+//!
+//! The `with_*_knobs` builders below are the one declared knob table
+//! for the `jalad` subcommands: `serve-cloud`, `serve-edge`,
+//! `serve-registry` and `infer` all compose the same groups, so a knob
+//! has one name, one default and one help string no matter which
+//! subcommand reads it — adding a flag is a one-line change here, and
+//! the `--help` coverage test pins that every accepted option is
+//! documented.
 
 use std::collections::BTreeMap;
 
@@ -145,6 +153,183 @@ impl Args {
             std::process::exit(2);
         })
     }
+
+    /// Names of every declared option and flag, in declaration order —
+    /// the `--help` coverage test iterates these against [`usage`].
+    ///
+    /// [`usage`]: Args::usage
+    pub fn declared(&self) -> Vec<&'static str> {
+        self.specs.iter().map(|s| s.name).collect()
+    }
+
+    // ---- the shared jalad knob table ------------------------------
+    //
+    // Each group is declared once and composed per subcommand; a knob
+    // that two subcommands read (e.g. `--bw` for `infer`'s uplink and
+    // `serve-edge`'s upstream hop) therefore cannot drift in name,
+    // default, or help text.
+
+    /// Knobs every subcommand reads: artifacts, model/plan selection,
+    /// link bandwidth, server address, fault injection.
+    pub fn with_common_knobs(self) -> Self {
+        self.opt("artifacts", "artifacts", "artifact directory (make artifacts)")
+            .opt("model", "vgg16", "model name (vgg16|vgg19|resnet50|resnet101|tinyconv)")
+            .opt("bw", "125000", "bandwidth of this process's upstream hop, bytes/second")
+            .opt("delta-alpha", "0.10", "accuracy-loss bound Δα")
+            .opt("addr", "127.0.0.1:7878", "address this process serves on / connects to")
+            .opt("edge-device", "tegra-x2", "edge device for paper-scale decisions")
+            .opt("cloud-device", "cloud-12T", "cloud device for paper-scale decisions")
+            .opt(
+                "fault-plan",
+                "",
+                "deterministic fault spec, e.g. seed=7,corrupt=0.05,stall-p=0.1,stall-ms=200 (see util::fault)",
+            )
+            .flag("sim", "use the deterministic sim backend (no artifacts)")
+            .flag("paper-scale", "use the paper's analytic FMAC/FLOPS latency model")
+    }
+
+    /// Knobs for the server role (`serve-cloud` and `serve-edge`, which
+    /// embeds the same server for the hop below it).
+    pub fn with_serve_knobs(self) -> Self {
+        self.opt("shards", "2", "serve: independent executor shards (PJRT clients)")
+            .opt("workers", "16", "serve: pooled connection workers")
+            .opt("max-batch", "4", "serve: max requests coalesced per tail batch")
+            .opt("gather-us", "1000", "serve: micro-batch gather window ceiling, microseconds")
+            .opt("gather-min-us", "100", "serve: adaptive gather window floor, microseconds")
+            .opt(
+                "xmodel-batch",
+                "on",
+                "serve: coalesce signature-compatible tails across models (on|off)",
+            )
+            .opt(
+                "pad-waste-max",
+                "0.25",
+                "serve: max padded-waste fraction for mixed-geometry batches (0 = exact geometry only)",
+            )
+            .opt(
+                "admission-queue-ms",
+                "0",
+                "serve: shed (Busy) when windowed queue-wait p95 exceeds this, ms (0 = off)",
+            )
+            .opt(
+                "admission-util",
+                "0",
+                "serve: shed (Busy) when busiest-shard utilization exceeds this, 0..1 (0 = off)",
+            )
+            .opt(
+                "deadline-ms",
+                "0",
+                "serve: SLA deadline attached to admitted requests, ms (0 = none)",
+            )
+            .opt(
+                "tenant-budget",
+                "0",
+                "serve: global admitted req/s under overload, water-filled across tenants (0 = auto)",
+            )
+            .opt(
+                "io",
+                "auto",
+                "serve: socket transport — epoll reactor or blocking threads (threads|epoll|auto)",
+            )
+            .opt(
+                "max-conns",
+                "16384",
+                "serve: refuse (Busy) connections past this many concurrently assigned",
+            )
+            .opt(
+                "idle-timeout-s",
+                "300",
+                "serve: reap connections with no frame progress for this long, s (0 = never; epoll transport)",
+            )
+            .opt(
+                "watchdog-ms",
+                "0",
+                "serve: quarantine a shard whose single run exceeds this, ms (0 = off)",
+            )
+            .opt(
+                "cache-bytes",
+                "0",
+                "serve: content-addressed logits cache budget, bytes (0 = off)",
+            )
+            .opt(
+                "cache-hit-cost",
+                "0.1",
+                "serve: fraction of a fair-admission credit a cached hit costs (rest is refunded)",
+            )
+            .flag(
+                "fair-admission",
+                "serve: per-tenant fair admission + tenant-aware batching when over budget",
+            )
+            .flag("no-batch", "serve: disable micro-batching (serialized tails)")
+            .flag("no-adaptive-gather", "serve: always wait the full gather window")
+            .flag("pin-shards", "serve: pin connection workers to their shard's core (Linux)")
+    }
+
+    /// Knobs for the client half of a hop (`infer --connect` and the
+    /// upstream link `serve-edge` embeds): request pacing, breaker,
+    /// integrity, registry-backed model fetch.
+    pub fn with_edge_knobs(self) -> Self {
+        self.opt("requests", "20", "request count for `infer`")
+            .opt(
+                "tenant",
+                "",
+                "explicit tenant id sent with every request (empty = per-connection)",
+            )
+            .opt(
+                "request-timeout-ms",
+                "30000",
+                "per-request upstream transport deadline, ms (0 = none); overruns feed the breaker",
+            )
+            .opt(
+                "breaker-failures",
+                "3",
+                "consecutive upstream faults that open the circuit breaker",
+            )
+            .opt(
+                "breaker-cooldown-ms",
+                "1000",
+                "how long the breaker stays open before a half-open probe, ms",
+            )
+            .opt(
+                "registry",
+                "",
+                "fetch the model from this registry address instead of the baked-in manifest (--sim)",
+            )
+            .opt(
+                "pin-version",
+                "",
+                "pin to this registry version instead of the fleet active (--sim --registry)",
+            )
+            .opt(
+                "artifact-cache-bytes",
+                "67108864",
+                "edge artifact cache budget, bytes (hash-keyed, LRU)",
+            )
+            .opt(
+                "sign-seed",
+                "42",
+                "serve-registry / --registry: shared manifest-signing secret seed",
+            )
+            .opt(
+                "device-class",
+                "",
+                "three-tier sim device profile (strong-phone|weak-phone|embedded; empty = calibrated edge)",
+            )
+            .flag(
+                "checked",
+                "CRC-checked data frames on the upstream hop (corruption detected and re-sent)",
+            )
+            .flag("connect", "infer: drive a real EdgeClient against --addr instead of the local pipeline")
+    }
+
+    /// Knobs only the middle tier reads (`serve-edge`).
+    pub fn with_tier_knobs(self) -> Self {
+        self.opt(
+            "upstream",
+            "127.0.0.1:7878",
+            "serve-edge: the cloud address this tier forwards to (must be up at start)",
+        )
+    }
 }
 
 #[cfg(test)]
@@ -192,5 +377,53 @@ mod tests {
     #[test]
     fn flag_with_value_rejected() {
         assert!(base().parse(argv("--verbose=1")).is_err());
+    }
+
+    /// Every knob the shared table accepts shows up in `--help` — the
+    /// subcommands compose these groups verbatim, so this is the
+    /// "no undocumented flag" guarantee for the whole CLI surface.
+    #[test]
+    fn help_covers_every_declared_knob() {
+        let a = Args::new("jalad", "full knob table")
+            .with_common_knobs()
+            .with_serve_knobs()
+            .with_edge_knobs()
+            .with_tier_knobs();
+        let usage = a.usage();
+        let declared = a.declared();
+        assert!(!declared.is_empty());
+        for name in &declared {
+            assert!(
+                usage.contains(&format!("--{name}")),
+                "--{name} accepted but missing from --help"
+            );
+        }
+        // One name, one declaration: a knob reused by two subcommands
+        // must come from one group, never be declared twice.
+        let mut uniq = declared.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), declared.len(), "duplicate knob declaration");
+    }
+
+    /// The shared defaults parse to their typed values — a group
+    /// refactor cannot silently change a default out from under a
+    /// subcommand.
+    #[test]
+    fn shared_knob_defaults_hold() {
+        let a = Args::new("jalad", "t")
+            .with_common_knobs()
+            .with_serve_knobs()
+            .with_edge_knobs()
+            .with_tier_knobs()
+            .parse(argv(""))
+            .unwrap();
+        assert_eq!(a.get_f64("bw"), 125000.0);
+        assert_eq!(a.get_f64("delta-alpha"), 0.10);
+        assert_eq!(a.get_usize("shards"), 2);
+        assert_eq!(a.get_usize("max-conns"), 16384);
+        assert_eq!(a.get("upstream"), "127.0.0.1:7878");
+        assert_eq!(a.get("device-class"), "");
+        assert!(!a.get_flag("sim"));
     }
 }

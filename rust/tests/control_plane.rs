@@ -52,8 +52,8 @@ fn assert_matches_offline(ctrl: &ControlPlane) {
 #[test]
 fn trace_replay_load_spike_moves_cut_edgeward_and_back() {
     let mut ctrl = plane(50_000.0);
-    assert_eq!(ctrl.plan().decision, Decision::CloudOnly, "idle 50 KB/s uploads");
-    let base_depth = cut_depth(ctrl.plan().decision);
+    assert_eq!(ctrl.plan().decision(), Decision::CloudOnly, "idle 50 KB/s uploads");
+    let base_depth = cut_depth(ctrl.plan().decision());
 
     // --- steady phase: constant bandwidth, idle cloud → no churn ---
     let resolves_before = ctrl.resolves();
@@ -76,7 +76,7 @@ fn trace_replay_load_spike_moves_cut_edgeward_and_back() {
         }
     }
     assert!(resolves_seen >= 1, "load spike never re-solved");
-    let spike_depth = cut_depth(ctrl.plan().decision);
+    let spike_depth = cut_depth(ctrl.plan().decision());
     assert!(
         spike_depth > base_depth,
         "spike must move the cut strictly edge-ward (was {base_depth}, now {spike_depth})"
@@ -91,12 +91,12 @@ fn trace_replay_load_spike_moves_cut_edgeward_and_back() {
             assert_matches_offline(&ctrl);
         }
     }
-    let recovered_depth = cut_depth(ctrl.plan().decision);
+    let recovered_depth = cut_depth(ctrl.plan().decision());
     assert!(
         recovered_depth < spike_depth,
         "recovery never moved the cut back ({spike_depth} → {recovered_depth})"
     );
-    assert_eq!(ctrl.plan().decision, Decision::CloudOnly, "idle recovery returns to upload");
+    assert_eq!(ctrl.plan().decision(), Decision::CloudOnly, "idle recovery returns to upload");
     assert!(ctrl.plan_changes() >= 2, "spike + recovery are two decision changes");
 }
 
@@ -115,7 +115,7 @@ fn trace_replay_bandwidth_swing_matches_offline_at_every_resolve() {
         // One transfer per 100 ms of trace time at the current rate.
         let before = ctrl.resolves();
         if let Some(plan) = ctrl.observe_transfer((bw * 0.1) as usize, 0.1) {
-            flips.push(plan.decision);
+            flips.push(plan.decision());
         }
         if ctrl.resolves() > before {
             assert_matches_offline(&ctrl);
@@ -143,9 +143,9 @@ fn busy_sheds_walk_the_cut_edgeward_monotonically() {
         sheds: 1,
         ..CloudTelemetry::default()
     };
-    let mut depth = cut_depth(ctrl.plan().decision);
+    let mut depth = cut_depth(ctrl.plan().decision());
     for _ in 0..6 {
-        let next = cut_depth(ctrl.on_busy(&busy).decision);
+        let next = cut_depth(ctrl.on_busy(&busy).decision());
         assert!(next >= depth, "a shed must never move the cut cloud-ward");
         if next == depth {
             break; // parked at the deepest feasible cut
@@ -213,7 +213,7 @@ fn e2e_shed_retry_and_recovery_on_sim_backend() {
         Decision::Cut { i: 4, c: 2 },
         "the served plan must be the deep cut admission admits"
     );
-    assert_eq!(cut_depth(edge.controller.plan().decision), 4);
+    assert_eq!(cut_depth(edge.controller.plan().decision()), 4);
     assert!(edge.controller.sheds_observed() >= 1);
     // The plan the plane converged to matches the offline solve at its
     // fused signals — the acceptance bit-exactness, live.

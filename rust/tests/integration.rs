@@ -5,7 +5,7 @@
 //! them against the exported tree.
 
 use jalad::compression::{feature, quant};
-use jalad::coordinator::{AdaptationController, Baseline, DecisionEngine, LocalPipeline, Scale};
+use jalad::coordinator::{ControlPlane, Baseline, DecisionEngine, LocalPipeline, Scale};
 use jalad::ilp::Decision;
 use jalad::network::{BandwidthTrace, SimChannel};
 use jalad::predictor::Tables;
@@ -92,7 +92,7 @@ fn jalad_beats_baselines_at_low_bandwidth() {
     for id in 0..n {
         let s = jalad::data::gen::sample_image(20_000 + id, 32);
         let mut ch = SimChannel::constant(bw);
-        total_jalad += pipe.run(&s, plan.decision, &mut ch).unwrap().breakdown.total();
+        total_jalad += pipe.run(&s, plan.decision(), &mut ch).unwrap().breakdown.total();
         let mut ch = SimChannel::constant(bw);
         total_png += Baseline::Png2Cloud
             .run(&exe, model, &s, &mut ch)
@@ -136,7 +136,7 @@ fn accuracy_bound_holds_end_to_end() {
     for id in 0..n {
         // Fresh ids — not the calibration range.
         let s = jalad::data::gen::sample_image(30_000 + id, 32);
-        correct += pipe.run(&s, plan.decision, &mut ch).unwrap().correct as usize;
+        correct += pipe.run(&s, plan.decision(), &mut ch).unwrap().correct as usize;
     }
     let acc = correct as f64 / n as f64;
     // Allow sampling slack on 24 draws (±2σ ≈ 0.2) on top of Δα.
@@ -157,7 +157,7 @@ fn adaptation_tracks_bandwidth_trace() {
     let latency =
         LatencyTables::analytic(model, DeviceModel::TEGRA_X2, DeviceModel::CLOUD_12T).unwrap();
     let engine = DecisionEngine::new(model, tables, latency, Scale::Paper, 0.10).unwrap();
-    let mut ctrl = AdaptationController::new(engine, 1_500_000.0);
+    let mut ctrl = ControlPlane::new(engine, 1_500_000.0);
 
     let fast_plan = ctrl.resolve_at(50_000_000.0).clone();
     let slow_plan = ctrl.resolve_at(10_000.0).clone();
@@ -171,7 +171,7 @@ fn adaptation_tracks_bandwidth_trace() {
     let mut t = 0.0;
     while t < 40.0 {
         let p = ctrl.resolve_at(trace.at(t)).clone();
-        decisions.insert(format!("{:?}", p.decision));
+        decisions.insert(format!("{:?}", p.decision()));
         t += 2.5;
     }
     assert!(decisions.len() >= 2, "plan never changed across the trace: {decisions:?}");

@@ -6,7 +6,7 @@
 use std::sync::Arc;
 
 use jalad::coordinator::{
-    AdaptationController, DecisionEngine, Router, RouterConfig, Scale,
+    ControlPlane, DecisionEngine, Router, RouterConfig, Scale,
 };
 use jalad::network::throttle::RateHandle;
 use jalad::predictor::Tables;
@@ -20,12 +20,12 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
     dir.join("manifest.json").exists().then_some(dir)
 }
 
-fn make_controller(exe: &Executor, dir: &std::path::Path, bw: f64) -> AdaptationController {
+fn make_controller(exe: &Executor, dir: &std::path::Path, bw: f64) -> ControlPlane {
     let tables = Tables::load_or_build(exe, "tinyconv", dir).unwrap();
     let latency = LatencyTables::measured(exe, "tinyconv", 2, 4.0).unwrap();
     let engine =
         DecisionEngine::new("tinyconv", tables, latency, Scale::Measured, 0.10).unwrap();
-    AdaptationController::new(engine, bw)
+    ControlPlane::new(engine, bw)
 }
 
 /// Many concurrent connections against one cloud server: the

@@ -1,0 +1,385 @@
+//! Three-tier (device → edge → cloud) suite: the multi-cut plan ILP
+//! against its exhaustive oracle, and the real TCP tier chain on the
+//! sim backend with bit-identity oracles.
+//!
+//! 1. **Two-cut ILP exactness** — random multi-hop instances solve to
+//!    exactly the exhaustive 2-D scan over every (passthrough +
+//!    ordered-cut) sequence, and the lifted two-tier instance solves
+//!    bit-identically to the paper's single-cut instance.
+//! 2. **Chain bit-identity** — a device driving `EdgeClient` against a
+//!    middle tier (`CloudServer` + `EdgeTier` forwarder) that relays to
+//!    a real cloud: with every hop planning `CloudOnly` the frame
+//!    passes through verbatim, so each reply is bit-identical to a
+//!    single-process `run_full`.
+//! 3. **Tier span-run bit-identity** — after a `Busy` deepens the
+//!    tier's plan, the tier cuts device images itself (run span,
+//!    quantize, forward); replies match the same ops run in-process.
+//! 4. **Edge blackout** — the middle tier disappears; the device fails
+//!    over to its fallback (the cloud) with availability 1.0 and
+//!    bit-identical replies — the surviving two-tier pair.
+//! 5. **Stats nesting** — one scrape of the middle tier describes the
+//!    chain: tier role/counters plus the upstream hop's edge object,
+//!    all on the declared schemas.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use jalad::compression::quant;
+use jalad::coordinator::{ControlPlane, DecisionEngine};
+use jalad::ilp::{CloudLoad, Decision, JaladInstance, MultiHopInstance};
+use jalad::network::throttle::RateHandle;
+use jalad::runtime::sim::sim_manifest;
+use jalad::runtime::{Executor, ExecutorPool, Tensor};
+use jalad::server::proto::CloudTelemetry;
+use jalad::server::{CloudServer, EdgeClient, EdgeTier, ServeConfig, TierForwarder};
+use jalad::util::json::Json;
+use jalad::util::rng::XorShift64Star;
+
+const FANIN: usize = 8;
+
+fn plane(bw: f64) -> ControlPlane {
+    ControlPlane::new(DecisionEngine::sim_default(0.10).unwrap(), bw)
+}
+
+/// Pin a control plane's adaptation thresholds so drift (bandwidth
+/// estimates off fast loopback, idle-cloud telemetry) can never move
+/// the plan mid-test — the bit-identity oracles need a known cut per
+/// request. Explicit transitions (`on_busy`, `on_breaker_open`)
+/// re-solve regardless, which is exactly what the tests exercise.
+fn pin(c: &mut ControlPlane) {
+    c.rel_threshold = f64::INFINITY;
+    c.load_threshold = f64::INFINITY;
+}
+
+fn sample(id: usize, shape: &[usize]) -> jalad::data::gen::Sample {
+    jalad::data::gen::Sample {
+        image: jalad::data::gen::sample_image_shaped(id % 16, id, shape),
+        label: id % 16,
+    }
+}
+
+fn sim_server(cfg: ServeConfig) -> (Arc<CloudServer>, std::net::SocketAddr) {
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, FANIN);
+    let server = Arc::new(CloudServer::with_pool(pool, cfg));
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+    (server, addr)
+}
+
+/// Stand up a middle tier: a sim cloud server whose data frames are
+/// offered to an `EdgeTier` forwarding toward `upstream`. Returns the
+/// tier handle and the address devices connect to.
+fn tier_server(
+    upstream: std::net::SocketAddr,
+    bw_prior: f64,
+) -> (Arc<EdgeTier>, Arc<CloudServer>, std::net::SocketAddr) {
+    // The forwarder hook is 'static; tests leak one executor per tier,
+    // exactly like a serve-edge process does for its lifetime.
+    let exe: &'static Executor = Box::leak(Box::new(Executor::sim_with(sim_manifest(), FANIN)));
+    let client =
+        EdgeClient::connect(exe, "simnet", upstream, RateHandle::new(1_000_000), plane(bw_prior))
+            .unwrap();
+    let tier = Arc::new(EdgeTier::new(exe, client));
+    tier.with_client(|c| pin(&mut c.controller));
+    let pool = ExecutorPool::new_sim_with(sim_manifest(), 2, FANIN);
+    let mut srv = CloudServer::with_pool(pool, ServeConfig::default());
+    srv.set_forwarder(Arc::clone(&tier) as Arc<dyn TierForwarder>);
+    let server = Arc::new(srv);
+    tier.attach(&server);
+    let (addr, _h) = Arc::clone(&server).spawn("127.0.0.1:0").unwrap();
+    (tier, server, addr)
+}
+
+fn random_base(rng: &mut XorShift64Star, n: usize, c_max: u8) -> JaladInstance {
+    JaladInstance {
+        n,
+        c_max,
+        t_edge: (0..n).map(|i| (i + 1) as f64 * 0.002).collect(),
+        t_cloud: (0..n).map(|i| (n - i) as f64 * 0.001).collect(),
+        size: (0..n)
+            .map(|_| (1..=c_max).map(|_| 50.0 + rng.below(10_000) as f64).collect())
+            .collect(),
+        acc: (0..n).map(|_| (1..=c_max).map(|_| rng.next_f64() * 0.3).collect()).collect(),
+        image_bytes: 3000.0,
+        t_cloud_full: 0.008,
+        bandwidth: 10_000.0 + rng.below(2_000_000) as f64,
+        delta_alpha: rng.next_f64() * 0.2,
+        load: CloudLoad::new(rng.next_f64() * 0.05, rng.next_f64() * 0.95),
+    }
+}
+
+/// The two-cut ILP is exact: across random three-tier instances the
+/// branch-and-bound solve equals the exhaustive scan over every valid
+/// cut sequence, both in objective and in feasibility; and the lifted
+/// two-tier special case reproduces the paper's single-cut solve
+/// bit-for-bit (the acceptance criterion of the plan-API redesign).
+#[test]
+fn two_cut_solve_matches_exhaustive_scan() {
+    let mut rng = XorShift64Star::new(0x7EE2);
+    for trial in 0..30 {
+        let n = 2 + rng.below(7) as usize;
+        let c_max = 1 + rng.below(4) as u8;
+        let base = random_base(&mut rng, n, c_max);
+
+        // Bit-identical two-tier lift.
+        let old = base.solve();
+        let lifted = MultiHopInstance::two_tier(base.clone()).solve();
+        assert_eq!(lifted.cuts.len(), 1, "trial {trial}");
+        assert_eq!(lifted.decision(), old.decision(), "trial {trial}");
+        assert_eq!(lifted.latency.to_bits(), old.latency.to_bits(), "trial {trial}");
+        assert_eq!(lifted.acc_drop.to_bits(), old.acc_drop.to_bits(), "trial {trial}");
+        assert_eq!(lifted.tx_bytes.to_bits(), old.tx_bytes.to_bits(), "trial {trial}");
+
+        // Exact two-cut solve vs the 2-D exhaustive oracle.
+        let inst = MultiHopInstance::three_tier(
+            base,
+            5_000.0 + rng.below(400_000) as f64,
+            20_000.0 + rng.below(1_500_000) as f64,
+            1.0 + rng.next_f64() * 8.0,
+            0.5 + rng.next_f64() * 2.0,
+        );
+        let ilp = inst.solve();
+        let scan = inst.solve_scan();
+        assert_eq!(ilp.hops(), 2, "trial {trial}");
+        assert!(
+            (ilp.latency - scan.latency).abs() < 1e-9,
+            "trial {trial}: ilp {ilp:?} vs scan {scan:?}"
+        );
+        assert!(ilp.acc_drop <= inst.base.delta_alpha + 1e-12, "trial {trial}: {ilp:?}");
+        // Depth ordering is a structural invariant of every plan.
+        assert!(ilp.cut(0).i <= ilp.cut(1).i, "trial {trial}: {ilp:?}");
+    }
+}
+
+/// Device → edge tier → cloud over two real TCP hops: with every hop's
+/// plan at `CloudOnly` the PNG frame is relayed verbatim (tier
+/// passthrough), the cloud runs the full model, and the reply's logits
+/// come back through the tier bit-preserved — so every reply must be
+/// bit-identical to a single-process `run_full` on the same image.
+#[test]
+fn three_tier_chain_is_bit_identical_to_run_full() {
+    let manifest = sim_manifest();
+    let (_cloud, cloud_addr) = sim_server(ServeConfig::default());
+    let (tier, _edge_srv, edge_addr) = tier_server(cloud_addr, 50_000.0);
+
+    let exe = Executor::sim_with(manifest.clone(), FANIN);
+    let shape = manifest.model("simnet").unwrap().input_shape.clone();
+    let n = 40usize;
+    let reference: Vec<Vec<u32>> = (0..n)
+        .map(|id| {
+            exe.run_full("simnet", &sample(id, &shape).image)
+                .unwrap()
+                .tensor
+                .data()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        })
+        .collect();
+
+    let mut device =
+        EdgeClient::connect(&exe, "simnet", edge_addr, RateHandle::new(1_000_000), plane(50_000.0))
+            .unwrap();
+    pin(&mut device.controller);
+    device.set_request_timeout(Duration::from_secs(5)).unwrap();
+
+    for id in 0..n {
+        let r = device.infer(&sample(id, &shape)).unwrap();
+        assert!(!r.served_locally, "request {id} never reached the chain");
+        assert_eq!(r.decision, Decision::CloudOnly, "oracle needs the CloudOnly device plan");
+        let got: Vec<u32> = device.last_logits().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, reference[id], "request {id} is not bit-identical through the chain");
+    }
+
+    let (forwarded, passthrough, span_runs, local_fallbacks, _sheds) = tier.counters();
+    assert!(forwarded >= n as u64, "tier forwarded {forwarded}/{n}");
+    assert!(passthrough >= n as u64, "CloudOnly chain must relay verbatim: {passthrough}");
+    assert_eq!(span_runs, 0, "no hop planned a deeper cut");
+    assert_eq!(local_fallbacks, 0, "healthy upstream must never fall back");
+
+    CloudServer::request_shutdown(edge_addr);
+    CloudServer::request_shutdown(cloud_addr);
+}
+
+/// A `Busy`-deepened tier cuts device images itself: the relay decodes
+/// the PNG, runs its span, quantizes at the plan's bit-width and
+/// forwards the later cut. The oracle replays the identical ops
+/// in-process (run span → quantize → dequantize → cloud tail), so the
+/// reply must match bit-for-bit — the tier's re-encode is not allowed
+/// to perturb a single float.
+#[test]
+fn deepened_tier_span_runs_are_bit_identical() {
+    let manifest = sim_manifest();
+    let (_cloud, cloud_addr) = sim_server(ServeConfig::default());
+    let (tier, _edge_srv, edge_addr) = tier_server(cloud_addr, 50_000.0);
+
+    // Shed signal from upstream: the tier absorbs work (edge-ward
+    // deepening), exactly what a real Busy reply would do.
+    let busy = CloudTelemetry {
+        queue_wait_p95_ms: 40.0,
+        utilization: 0.97,
+        ..CloudTelemetry::default()
+    };
+    let plan = tier.with_client(|c| c.controller.on_busy(&busy).clone());
+    let Decision::Cut { i, c } = plan.decision() else {
+        panic!("a busy cloud must deepen the tier's plan, got {plan:?}");
+    };
+
+    let exe = Executor::sim_with(manifest.clone(), FANIN);
+    let m = manifest.model("simnet").unwrap();
+    let shape = m.input_shape.clone();
+    let n_stages = m.num_stages();
+
+    let mut device =
+        EdgeClient::connect(&exe, "simnet", edge_addr, RateHandle::new(1_000_000), plane(50_000.0))
+            .unwrap();
+    pin(&mut device.controller);
+    device.set_request_timeout(Duration::from_secs(5)).unwrap();
+
+    for id in 0..12 {
+        let s = sample(id, &shape);
+        // Oracle: the same span → quantize → dequantize → tail ops the
+        // tier + cloud pair performs, in one process.
+        let span = exe.run_stages("simnet", 1, i, &s.image).unwrap();
+        let mut vals = Vec::new();
+        let (lo, hi) = quant::quantize_into(span.tensor.data(), c, &mut vals);
+        let mut floats = Vec::new();
+        quant::dequantize_into(&vals, lo, hi, c, &mut floats);
+        let x = Tensor::new(m.stages[i - 1].out_shape.clone(), floats);
+        let expect = if i < n_stages {
+            exe.run_stages("simnet", i + 1, n_stages, &x).unwrap().tensor
+        } else {
+            x
+        };
+        let expect_bits: Vec<u32> = expect.data().iter().map(|v| v.to_bits()).collect();
+
+        let r = device.infer(&s).unwrap();
+        assert!(!r.served_locally, "request {id} never reached the chain");
+        let got: Vec<u32> = device.last_logits().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, expect_bits, "request {id}: tier span-run diverged from the oracle");
+    }
+
+    let (_fwd, _pass, span_runs, _local, _sheds) = tier.counters();
+    assert!(span_runs >= 12, "the deepened tier never ran its span: {span_runs}");
+
+    CloudServer::request_shutdown(edge_addr);
+    CloudServer::request_shutdown(cloud_addr);
+}
+
+/// The middle tier blacks out. A device with the cloud configured as
+/// its fallback endpoint keeps serving — availability 1.0 — and every
+/// reply stays bit-identical to `run_full`, because the fallback path
+/// ships the same CloudOnly frame to the same deterministic cloud:
+/// the surviving device↔cloud pair of the degraded topology.
+#[test]
+fn edge_blackout_degrades_to_device_cloud_pair() {
+    let manifest = sim_manifest();
+    let (_cloud, cloud_addr) = sim_server(ServeConfig::default());
+    let (_tier, _edge_srv, edge_addr) = tier_server(cloud_addr, 50_000.0);
+
+    let exe = Executor::sim_with(manifest.clone(), FANIN);
+    let shape = manifest.model("simnet").unwrap().input_shape.clone();
+    let n = 30usize;
+    let reference: Vec<Vec<u32>> = (0..n)
+        .map(|id| {
+            exe.run_full("simnet", &sample(id, &shape).image)
+                .unwrap()
+                .tensor
+                .data()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        })
+        .collect();
+
+    let mut device =
+        EdgeClient::connect(&exe, "simnet", edge_addr, RateHandle::new(1_000_000), plane(50_000.0))
+            .unwrap();
+    pin(&mut device.controller);
+    device.set_request_timeout(Duration::from_secs(5)).unwrap();
+    // Keep the breaker closed so the plan stays CloudOnly (the oracle
+    // needs it; `on_breaker_open` would park the cut at i = N) — the
+    // fallback endpoint, not the breaker, is what this test exercises.
+    device.set_breaker_config(jalad::server::BreakerConfig {
+        failure_threshold: 1_000,
+        ..jalad::server::BreakerConfig::default()
+    });
+    device.set_fallback_addr(Some(cloud_addr));
+
+    // Warm: a few requests through the full three-tier chain.
+    for id in 0..5 {
+        let r = device.infer(&sample(id, &shape)).unwrap();
+        assert!(!r.served_locally);
+        let got: Vec<u32> = device.last_logits().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, reference[id]);
+    }
+
+    // Blackout: the middle tier goes away entirely.
+    CloudServer::request_shutdown(edge_addr);
+    std::thread::sleep(Duration::from_millis(50));
+
+    // Availability 1.0 across the outage: every request is served (no
+    // Err), every reply still bit-identical — now via the fallback.
+    for id in 5..n {
+        let r = device.infer(&sample(id, &shape)).expect("availability must hold");
+        assert!(!r.served_locally, "fallback cloud should serve, not local compute");
+        let got: Vec<u32> = device.last_logits().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, reference[id], "request {id} diverged during the blackout");
+    }
+    assert!(
+        device.fallback_serves() >= (n - 5) as u64,
+        "fallback never engaged: {}",
+        device.fallback_serves()
+    );
+
+    CloudServer::request_shutdown(cloud_addr);
+}
+
+/// One stats scrape of the middle tier describes the whole chain below
+/// the cloud: the device's own edge object, the tier's role/counters,
+/// and the upstream hop's edge object nested inside — all pinned to
+/// the declared schemas.
+#[test]
+fn tier_stats_nest_the_upstream_hop() {
+    let (_cloud, cloud_addr) = sim_server(ServeConfig::default());
+    let (_tier, _edge_srv, edge_addr) = tier_server(cloud_addr, 50_000.0);
+
+    let manifest = sim_manifest();
+    let exe = Executor::sim_with(manifest.clone(), FANIN);
+    let shape = manifest.model("simnet").unwrap().input_shape.clone();
+    let mut device =
+        EdgeClient::connect(&exe, "simnet", edge_addr, RateHandle::new(1_000_000), plane(50_000.0))
+            .unwrap();
+    pin(&mut device.controller);
+    for id in 0..3 {
+        device.infer(&sample(id, &shape)).unwrap();
+    }
+
+    let doc = Json::parse(&device.stats().unwrap()).unwrap();
+    let sorted = |keys: &[&str]| {
+        let mut v: Vec<String> = keys.iter().map(|s| s.to_string()).collect();
+        v.sort();
+        v
+    };
+    let keys_of = |j: &Json| jalad::server::stats::keys_of(j);
+
+    // The device's own hop.
+    let edge = doc.get("edge").expect("edge object");
+    assert_eq!(keys_of(edge), sorted(jalad::server::stats::EDGE_SCHEMA));
+
+    // The scraped server is a middle tier: role, relay counters, and
+    // the upstream hop's edge object nested one level down.
+    let tier = doc.get("tier").expect("tier object");
+    assert_eq!(keys_of(tier), sorted(jalad::server::stats::TIER_SCHEMA));
+    assert_eq!(tier.get("role").and_then(|v| v.as_str()), Some("edge"));
+    assert!(tier.get("forwarded").and_then(|v| v.as_u64()).unwrap_or(0) >= 3);
+    let upstream = tier.get("upstream").expect("upstream object");
+    assert_eq!(keys_of(upstream), sorted(jalad::server::stats::EDGE_SCHEMA));
+
+    // Plan coherence: the tier advertises the cut its controller holds,
+    // and a CloudOnly chain reports depth 0 on both hops.
+    assert_eq!(tier.get("cut_i").and_then(|v| v.as_u64()), Some(0));
+    assert_eq!(upstream.get("cut_i").and_then(|v| v.as_u64()), Some(0));
+
+    CloudServer::request_shutdown(edge_addr);
+    CloudServer::request_shutdown(cloud_addr);
+}

@@ -6,7 +6,7 @@
 #   scripts/verify.sh --smoke SUITE…   # ONLY the named bench smoke(s)
 #                                      # (pipeline|adaptive|multiedge|
 #                                      # crossmodel|c10k|chaos|cache|
-#                                      # registry) — no
+#                                      # registry|threetier) — no
 #                                      # build/
 #                                      # test/
 #                                      # clippy pass; cargo bench builds
@@ -33,7 +33,7 @@ for arg in "$@"; do
   case "$arg" in
     --smoke) SMOKE=1 ;;
     --full) FULL=1 ;;
-    pipeline|adaptive|multiedge|crossmodel|c10k|chaos|cache|registry) SUITES+=("$arg") ;;
+    pipeline|adaptive|multiedge|crossmodel|c10k|chaos|cache|registry|threetier) SUITES+=("$arg") ;;
     *) echo "verify.sh: unknown argument $arg" >&2; exit 2 ;;
   esac
 done
@@ -120,6 +120,10 @@ run_suite() {
       smoke_bench registry registry BENCH_registry.json \
         '"warm_fetch_speedup"' '"cutover_gap_ms"' '"tamper_reject_rate"' \
         '"rollback_ok"' ;;
+    threetier)
+      smoke_bench threetier threetier BENCH_threetier.json \
+        '"availability"' '"recovery_ms"' '"predicted"' \
+        '"three_tier"' '"two_tier"' ;;
     *) echo "verify.sh: unknown suite $1" >&2; exit 2 ;;
   esac
 }
@@ -150,7 +154,7 @@ echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
 if [ "$SMOKE" = 1 ] || [ "$FULL" = 1 ]; then
-  for s in pipeline adaptive multiedge crossmodel c10k chaos cache registry; do
+  for s in pipeline adaptive multiedge crossmodel c10k chaos cache registry threetier; do
     run_suite "$s"
   done
 fi
